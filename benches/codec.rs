@@ -1,0 +1,35 @@
+//! Bench: software numeric-format codec throughput (the Rust half of the
+//! paper's Appendix K claim that static-scale quantization is cheap).
+
+use umup::formats::{TensorStats, BF16, E4M3, E5M2, FP16};
+use umup::util::bench::{black_box, Bencher};
+use umup::util::Rng;
+
+fn main() {
+    let mut b = Bencher::default();
+    b.budget = std::time::Duration::from_millis(1200);
+    let mut rng = Rng::new(1);
+    let n = 1 << 20;
+    let xs: Vec<f32> = (0..n).map(|_| (rng.normal() * 3.0) as f32).collect();
+    println!("codec throughput over {n} f32 elements\n");
+    for fmt in [E4M3, E5M2, FP16, BF16] {
+        let mut buf = xs.clone();
+        b.run_with_work(
+            &format!("quantize_slice {}", fmt.name),
+            Some(n as f64),
+            &mut || {
+                buf.copy_from_slice(&xs);
+                black_box(fmt.quantize_slice(&mut buf));
+            },
+        );
+    }
+    b.run_with_work("TensorStats::of (RMS)", Some(n as f64), &mut || {
+        black_box(TensorStats::of(&xs));
+    });
+    // scalar quantize latency (used in hot per-site paths)
+    b.run("quantize scalar e4m3 x1k", || {
+        for i in 0..1000 {
+            black_box(E4M3.quantize(xs[i]));
+        }
+    });
+}

@@ -1,0 +1,27 @@
+//! Bench: data substrate off the hot loop — corpus generation and batch
+//! sampling must be negligible next to a train step.
+
+use umup::data::{BatchSampler, Corpus, CorpusConfig};
+use umup::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::default();
+    b.budget = std::time::Duration::from_millis(1200);
+    b.run_with_work("corpus generate 200k tokens", Some(200_000.0), &mut || {
+        black_box(Corpus::generate(CorpusConfig {
+            n_tokens: 200_000,
+            ..Default::default()
+        }));
+    });
+    let corpus = Corpus::generate(CorpusConfig::default());
+    let mut sampler = BatchSampler::new(corpus.train_slice(), 16, 64, 1);
+    b.run_with_work("batch sample 16x65", Some((16 * 65) as f64), &mut || {
+        black_box(sampler.sample());
+    });
+    b.run_with_work("batch sequential 16x65", Some((16 * 65) as f64), &mut || {
+        black_box(sampler.next_sequential());
+    });
+    b.run("bigram entropy 2M tokens", || {
+        black_box(corpus.bigram_entropy());
+    });
+}

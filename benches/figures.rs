@@ -1,0 +1,22 @@
+//! Bench: quick-mode end-to-end timings of the per-figure experiment
+//! harnesses (one per paper table/figure — reduced sizes so `cargo
+//! bench` regenerates every figure's pipeline in minutes).
+
+use std::time::Instant;
+
+use umup::coordinator::{run_experiment, ExpContext};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/results/bench-quick");
+    let ctx = ExpContext::new(artifacts, out, true /* quick */, 4)?;
+    // every experiment in quick mode; timings show where the budget goes
+    // quick-mode subset (full harnesses: `repro exp all`); one entry per
+    // experiment family keeps `cargo bench` minutes-scale on 1 core
+    for id in ["tab12", "fig25", "fig6", "fig1c"] {
+        let t0 = Instant::now();
+        let md = run_experiment(&ctx, id)?;
+        println!("{id:6} {:8.2}s  ({} chars of report)", t0.elapsed().as_secs_f64(), md.len());
+    }
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Bench: L3 runtime hot path — per-step dispatch cost vs model size.
+//!
+//! Measures the full Session::step (token upload + execute_b chain +
+//! telemetry-tail fetch) and its non-compute floor (tail fetch alone), to
+//! verify the coordinator is not the bottleneck (DESIGN.md §9 L3 target:
+//! dispatch <5% of step compute at width 256).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use umup::parametrization::{HpSet, Parametrization, Precision, RuntimeVectors, Scheme};
+use umup::runtime::{Manifest, Session};
+use umup::train::AdamConfig;
+use umup::util::bench::Bencher;
+use umup::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut bench = Bencher::default();
+    bench.budget = std::time::Duration::from_millis(1200);
+    bench.min_samples = 5;
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let only = std::env::var("UMUP_BENCH_ONLY").ok();
+    // w256 is opt-in (UMUP_BENCH_ONLY=w256): ~2s/step on a 1-core testbed
+    for name in ["w32_d4_b16_t64_v256", "w64_d4_b16_t64_v256", "w128_d4_b16_t64_v256"] {
+        if let Some(o) = &only {
+            if !name.starts_with(o.as_str()) {
+                continue;
+            }
+        }
+        let man = Arc::new(Manifest::load(&root.join(name))?);
+        let session = Session::open(man.clone())?;
+        for precision in [Precision::Fp32, Precision::Fp8Naive] {
+            let vecs = RuntimeVectors::build(
+                &man,
+                &Parametrization::new(Scheme::Umup),
+                &HpSet::with_eta(0.5),
+                precision,
+            )?;
+            let mut ts =
+                session.init(0, &vecs.init_std, &vecs.scales, &vecs.lr_scale, &vecs.qmask)?;
+            let mut rng = Rng::new(3);
+            let tokens: Vec<i32> = (0..man.spec.batch * (man.spec.seq + 1))
+                .map(|_| rng.below(man.spec.vocab) as i32)
+                .collect();
+            let hyp = AdamConfig::default().hyp(0.25, 1);
+            let tokens_per_step = (man.spec.batch * man.spec.seq) as f64;
+            bench.run_with_work(
+                &format!("step+tail {} {}", name, precision.name()),
+                Some(tokens_per_step),
+                &mut || {
+                    session.step(&mut ts, &tokens, &hyp).unwrap();
+                },
+            );
+            bench.run_with_work(
+                &format!("step chain-only {} {}", name, precision.name()),
+                Some(tokens_per_step),
+                &mut || {
+                    session.step_chain(&mut ts, &tokens, &hyp).unwrap();
+                },
+            );
+        }
+        // eval pass for comparison (fwd only)
+        let vecs = RuntimeVectors::build(
+            &man,
+            &Parametrization::new(Scheme::Umup),
+            &HpSet::with_eta(0.5),
+            Precision::Fp32,
+        )?;
+        let ts = session.init(0, &vecs.init_std, &vecs.scales, &vecs.lr_scale, &vecs.qmask)?;
+        let mut rng = Rng::new(3);
+        let tokens: Vec<i32> = (0..man.spec.batch * (man.spec.seq + 1))
+            .map(|_| rng.below(man.spec.vocab) as i32)
+            .collect();
+        bench.run(&format!("eval {name}"), || {
+            session.eval(&ts, &tokens).unwrap();
+        });
+    }
+    Ok(())
+}

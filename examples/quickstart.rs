@@ -1,0 +1,56 @@
+//! Quickstart: train a u-μP proxy model for a few hundred steps and show
+//! LR-sweep-free training at unit-scale defaults.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use std::path::Path;
+use std::sync::Arc;
+
+use umup::data::{Corpus, CorpusConfig};
+use umup::parametrization::{HpSet, Parametrization, Scheme};
+use umup::runtime::Registry;
+use umup::train::{RunConfig, Runner, Schedule};
+
+fn main() -> anyhow::Result<()> {
+    // 1. open the AOT artifact registry (built by `make artifacts`)
+    let registry = Registry::open(Path::new("artifacts"))?;
+    let manifest = registry.find(64, 4, 16)?;
+    println!("model: {} ({} params)", manifest.name, manifest.n_params);
+
+    // 2. synthetic corpus (WikiText-103 stand-in, DESIGN.md §4)
+    let corpus = Corpus::generate(CorpusConfig {
+        vocab: manifest.spec.vocab,
+        ..Default::default()
+    });
+    println!(
+        "corpus: H1={:.2} nats, H2={:.2} nats, {} train tokens",
+        corpus.unigram_entropy(),
+        corpus.bigram_entropy(),
+        corpus.train_slice().len()
+    );
+
+    // 3. a u-μP run: every HP at its default of 1 except the LR —
+    //    the paper's point is that this is already near-optimal (§4.5)
+    let steps = 300;
+    let session = registry.session(&manifest.name)?;
+    let runner = Runner::new(Arc::clone(&session));
+    let mut cfg = RunConfig::quick(
+        "quickstart-umup",
+        Parametrization::new(Scheme::Umup),
+        HpSet::with_eta(0.5),
+        steps,
+    );
+    cfg.schedule = Schedule::standard(0.5, steps, 75);
+    let record = runner.run(&cfg, &corpus)?;
+
+    for &(step, loss) in &record.train_curve {
+        println!("step {step:5}  train loss {loss:.4}");
+    }
+    println!(
+        "\nfinal validation loss {:.4} (bigram entropy floor ≈ {:.4})",
+        record.final_valid_loss,
+        corpus.bigram_entropy()
+    );
+    println!("wall time {:.1}s", record.wall_seconds);
+    Ok(())
+}

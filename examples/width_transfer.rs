@@ -1,0 +1,75 @@
+//! μTransfer demo (paper Fig 1b, miniature): sweep the LR on a small
+//! proxy, transfer the optimum to a 4x wider target, and show it lands
+//! near the target's own optimum for u-μP.
+//!
+//!     cargo run --release --example width_transfer
+
+use std::path::Path;
+
+use umup::data::{Corpus, CorpusConfig};
+use umup::parametrization::{HpSet, Parametrization, Scheme};
+use umup::runtime::Registry;
+use umup::sweep::{run_all_parallel, SweepJob};
+use umup::train::{RunConfig, Schedule};
+use umup::util::stats;
+
+fn lr_sweep(
+    registry: &Registry,
+    width: usize,
+    scheme: Scheme,
+    grid: &[f64],
+    steps: u64,
+    corpus: &Corpus,
+) -> anyhow::Result<Vec<(f64, f64)>> {
+    let man = registry.find(width, 4, 16)?;
+    let jobs: Vec<SweepJob> = grid
+        .iter()
+        .map(|&eta| {
+            let mut p = Parametrization::new(scheme);
+            p.base_width = 64; // proxy shape
+            let mut cfg = RunConfig::quick(
+                &format!("{}-w{width}-lr{eta}", scheme.name()),
+                p,
+                HpSet::with_eta(eta),
+                steps,
+            );
+            cfg.schedule = Schedule::standard(eta, steps, (steps / 4).max(1));
+            SweepJob { config: cfg, tag: vec![("eta".into(), eta)] }
+        })
+        .collect();
+    let res = run_all_parallel(man, corpus, &jobs, 4)?;
+    Ok(res.iter().map(|r| (r.job.tag[0].1, r.record.objective())).collect())
+}
+
+fn main() -> anyhow::Result<()> {
+    let registry = Registry::open(Path::new("artifacts"))?;
+    let corpus = Corpus::generate(CorpusConfig::default());
+    let steps = 200;
+    for scheme in [Scheme::Mup, Scheme::Umup] {
+        let grid: Vec<f64> = match scheme {
+            Scheme::Umup => (-4..=2).map(|e| 2f64.powi(e)).collect(),
+            _ => (-11..=-5).map(|e| 2f64.powi(e)).collect(),
+        };
+        println!("\n=== {} ===", scheme.name());
+        let proxy = lr_sweep(&registry, 64, scheme, &grid, steps, &corpus)?;
+        let target = lr_sweep(&registry, 256, scheme, &grid, steps, &corpus)?;
+        let p_best = proxy[stats::argmin(&proxy.iter().map(|p| p.1).collect::<Vec<_>>())];
+        let t_best = target[stats::argmin(&target.iter().map(|p| p.1).collect::<Vec<_>>())];
+        // loss at the *transferred* LR on the target
+        let transferred = target
+            .iter()
+            .find(|(lr, _)| (lr / p_best.0 - 1.0).abs() < 1e-9)
+            .copied()
+            .unwrap_or(t_best);
+        println!("proxy  (w64)  optimum: lr=2^{:+.1} loss={:.4}", p_best.0.log2(), p_best.1);
+        println!("target (w256) optimum: lr=2^{:+.1} loss={:.4}", t_best.0.log2(), t_best.1);
+        println!(
+            "transferred proxy LR -> target loss {:.4} (excess {:+.4}, drift {:.1} octaves)",
+            transferred.1,
+            transferred.1 - t_best.1,
+            (p_best.0 / t_best.0).log2().abs()
+        );
+    }
+    println!("\nExpected shape: u-muP drift ≈ 0 octaves with ~no excess loss; muP drifts.");
+    Ok(())
+}

@@ -1,0 +1,194 @@
+"""AOT pipeline: lower the L2 graphs to XLA HLO *text* artifacts.
+
+Python runs only here (``make artifacts``); the Rust coordinator loads the
+text with ``HloModuleProto::from_text_file`` and never touches Python at
+runtime.  HLO text (NOT ``lowered.compile()``/``.serialize()``) is the
+interchange format because jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Per spec we emit into ``artifacts/<spec-name>/``:
+    init.hlo.txt      init(seed, init_std) -> state_ext
+    step.hlo.txt      step(state_ext, tokens, scales, lr_scale, hyp, qmask)
+                      -> state_ext'        (single-array root: the Rust
+                      runtime chains the output buffer straight back in
+                      with execute_b, reading only the telemetry tail)
+    eval.hlo.txt      evalf(state_ext, tokens, scales, qmask) -> f32[1+n_rms]
+    manifest.json     layout contract (specs.layout)
+
+Plus standalone L1 kernel artifacts under ``artifacts/kernels/`` used by
+the Rust cross-check tests (software codec vs Pallas quantizer).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import make_eval, make_init, make_step
+from .specs import Spec, layout
+
+# ---------------------------------------------------------------------------
+# spec matrix (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+WIDTH_SWEEP = [32, 64, 128, 256]
+DEPTH_SWEEP = [2, 8]
+BATCH_SWEEP = [8, 32]
+
+DEFAULT_SPECS = (
+    [Spec(width=w, depth=4, batch=16) for w in WIDTH_SWEEP]
+    + [Spec(width=64, depth=d, batch=16) for d in DEPTH_SWEEP]
+    + [Spec(width=64, depth=4, batch=b) for b in BATCH_SWEEP]
+    + [Spec(width=w, depth=4, batch=16, trainable_norms=True) for w in (32, 64, 128)]
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (single-array root)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text) / 1e6:.2f} MB)")
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def build_spec(spec: Spec, out_dir: str, force: bool = False):
+    man = layout(spec)
+    d = os.path.join(out_dir, spec.name)
+    man_path = os.path.join(d, "manifest.json")
+    stamp = source_stamp()
+    if not force and os.path.exists(man_path):
+        try:
+            with open(man_path) as f:
+                if json.load(f).get("source_stamp") == stamp:
+                    print(f"  {spec.name}: up to date")
+                    return
+        except (json.JSONDecodeError, OSError):
+            pass
+    print(f"building {spec.name} ...")
+    n_t = len(man["tensors"])
+    s_ext = man["state_ext_len"]
+
+    init = make_init(spec)
+    _write(
+        os.path.join(d, "init.hlo.txt"),
+        to_hlo_text(jax.jit(init).lower(i32(), f32(n_t))),
+    )
+
+    step = make_step(spec)
+    _write(
+        os.path.join(d, "step.hlo.txt"),
+        to_hlo_text(
+            jax.jit(step).lower(
+                f32(s_ext),
+                i32(spec.batch, spec.seq + 1),
+                f32(man["n_scale_sites"]),
+                f32(n_t),
+                f32(8),
+                f32(man["n_quant_sites"]),
+            )
+        ),
+    )
+
+    evalf = make_eval(spec)
+    _write(
+        os.path.join(d, "eval.hlo.txt"),
+        to_hlo_text(
+            jax.jit(evalf).lower(
+                f32(s_ext),
+                i32(spec.batch, spec.seq + 1),
+                f32(man["n_scale_sites"]),
+                f32(man["n_quant_sites"]),
+            )
+        ),
+    )
+
+    # telemetry-tail extractor: the 0.5.1 CPU PJRT plugin lacks
+    # CopyRawToHost, so the runtime reads [loss | rms] by running this
+    # trivial slice on the device-resident state instead.
+    lo = man["loss_offset"]
+
+    def tail(state_ext):
+        return jax.lax.slice(state_ext, (lo,), (s_ext,))
+
+    _write(os.path.join(d, "tail.hlo.txt"), to_hlo_text(jax.jit(tail).lower(f32(s_ext))))
+
+    man["source_stamp"] = stamp
+    with open(man_path, "w") as f:
+        json.dump(man, f, indent=1)
+
+
+def build_kernel_artifacts(out_dir: str):
+    """Standalone L1 kernels for the Rust cross-check integration tests."""
+    from .kernels.fp8 import quantize
+    from .kernels.matmul import u_matmul
+
+    d = os.path.join(out_dir, "kernels")
+    for fmt in ("e4m3", "e5m2", "bf16", "fp16"):
+        fn = lambda x: quantize(x, fmt, tiled=True)  # noqa: E731
+        _write(
+            os.path.join(d, f"quantize_{fmt}.hlo.txt"),
+            to_hlo_text(jax.jit(fn).lower(f32(128, 128))),
+        )
+    mm = lambda x, w: u_matmul(x, w, out_scale=0.0883883476, bm=64, bn=64, bk=64)  # noqa: E731  (1/sqrt(128))
+    _write(
+        os.path.join(d, "u_matmul_128.hlo.txt"),
+        to_hlo_text(jax.jit(mm).lower(f32(128, 128), f32(128, 128))),
+    )
+
+
+def source_stamp() -> str:
+    """Hash of the compile-path sources: artifacts rebuild when L1/L2 change."""
+    h = hashlib.sha256()
+    root = os.path.dirname(__file__)
+    for dirpath, _, files in sorted(os.walk(root)):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                with open(os.path.join(dirpath, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--only", default=None, help="build a single spec by name")
+    args = ap.parse_args()
+
+    specs = DEFAULT_SPECS
+    if args.only:
+        specs = [s for s in specs if s.name == args.only]
+        if not specs:
+            sys.exit(f"unknown spec {args.only}")
+    for spec in specs:
+        build_spec(spec, args.out, force=args.force)
+    build_kernel_artifacts(args.out)
+    print("artifacts complete")
+
+
+if __name__ == "__main__":
+    main()

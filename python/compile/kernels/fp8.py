@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: quantize-to-FP8-grid (the numeric-format hot-spot).
+
+The kernel rounds an f32 tensor onto the representable grid of a target
+low-precision format (E4M3FN / E5M2 / FP16 / BF16) with round-to-nearest-
+even, saturation-to-max, and exact subnormal handling, while keeping the
+carrier dtype f32 (FP8 arithmetic is *simulated* on this CPU testbed —
+see DESIGN.md §3 Hardware adaptation).
+
+TPU mapping: the kernel is written with row-major BlockSpec tiles whose
+trailing dimension is a multiple of 128 (lane width) and whose leading
+dimension is a multiple of 8 (sublane), so each block is one VMEM-resident
+VPU pass: bitcast → shift/mask (exponent extract) → mul/round/mul → clamp.
+``interpret=True`` is mandatory on CPU (Mosaic custom-calls cannot run on
+the CPU PJRT plugin); the same code lowers to Mosaic on a real TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import FORMATS, FloatFormat, pow2_exact
+
+# Block shape used when tiling is enabled. (8, 128) is the TPU float32
+# VREG shape; we use a few VREGs per block to amortize grid overhead.
+TILE_ROWS = 64
+TILE_COLS = 128
+
+
+def _quantize_block(x, fmt: FloatFormat):
+    """Elementwise grid rounding; shared by the kernel body and fallback."""
+    ax = jnp.abs(x)
+    bits = jax.lax.bitcast_convert_type(ax, jnp.int32)
+    exp = ((bits >> 23) & 0xFF) - 127
+    exp = jnp.maximum(exp, fmt.min_normal_exp)
+    ulp = pow2_exact(exp - fmt.mant_bits)
+    q = jnp.round(x / ulp) * ulp
+    q = jnp.clip(q, -fmt.max_value, fmt.max_value)
+    return jnp.where(ax == 0, x, q).astype(jnp.float32)
+
+
+def _kernel(x_ref, o_ref, *, fmt: FloatFormat):
+    o_ref[...] = _quantize_block(x_ref[...], fmt)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt_name", "tiled"))
+def quantize(x, fmt_name: str = "e4m3", tiled: bool = False):
+    """Quantize ``x`` onto the grid of ``fmt_name`` via the Pallas kernel.
+
+    ``tiled=False`` uses a single full-array block (the fast path inside
+    the AOT-compiled train step on CPU); ``tiled=True`` exercises the real
+    (TILE_ROWS, TILE_COLS) VMEM tiling used for the TPU estimate and for
+    kernel-level tests.
+    """
+    fmt = FORMATS[fmt_name]
+    orig_shape = x.shape
+    x2 = x.reshape((-1, orig_shape[-1])) if x.ndim != 2 else x
+    if not tiled:
+        out = pl.pallas_call(
+            functools.partial(_kernel, fmt=fmt),
+            out_shape=jax.ShapeDtypeStruct(x2.shape, jnp.float32),
+            interpret=True,
+        )(x2)
+        return out.reshape(orig_shape)
+
+    rows, cols = x2.shape
+    tr, tc = min(TILE_ROWS, rows), min(TILE_COLS, cols)
+    # pad so the grid divides evenly (pallas interpret requires it)
+    pr, pc = (-rows) % tr, (-cols) % tc
+    xp = jnp.pad(x2, ((0, pr), (0, pc)))
+    out = pl.pallas_call(
+        functools.partial(_kernel, fmt=fmt),
+        grid=(xp.shape[0] // tr, xp.shape[1] // tc),
+        in_specs=[pl.BlockSpec((tr, tc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((tr, tc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, jnp.float32),
+        interpret=True,
+    )(xp)
+    return out[:rows, :cols].reshape(orig_shape)
+
+
+def quantize_masked(x, qflag, fmt_name: str):
+    """Runtime-maskable quantization: q = qflag*Q(x) + (1-qflag)*x.
+
+    ``qflag`` is a traced f32 scalar in {0,1} from the ``qmask`` input, so
+    a single compiled artifact serves both full-precision and FP8-sim
+    training (DESIGN.md §2, runtime scale hooks).
+    """
+    return qflag * quantize(x, fmt_name) + (1.0 - qflag) * x
+
+
+def vmem_bytes(tile_rows: int = TILE_ROWS, tile_cols: int = TILE_COLS) -> int:
+    """VMEM footprint estimate for one grid step (input + output tile)."""
+    return 2 * tile_rows * tile_cols * 4

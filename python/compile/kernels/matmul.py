@@ -1,0 +1,96 @@
+"""L1 Pallas kernel: tiled unit-scaled matmul.
+
+Computes ``(x @ w) * out_scale`` with MXU-shaped tiles: the grid walks
+(M/bm, N/bn) output tiles and accumulates over K in bk-sized slabs held in
+VMEM, i.e. the BlockSpec expresses the HBM↔VMEM schedule that the paper's
+GPU kernels express with threadblocks (DESIGN.md §3).  The static
+``out_scale`` is Unit Scaling's 1/sqrt(fan-in) factor — applied once per
+output tile, which is why static scaling is (near) free (paper Fig 24 /
+Appendix K).
+
+On CPU everything runs under ``interpret=True``; the train-step artifacts
+use the single-block fast path (bm=M, bn=N, bk=K) which lowers to one XLA
+dot, while the tiled path is exercised by tests and the standalone kernel
+artifact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped default tiles (128x128 systolic array, f32 accumulation).
+BM, BN, BK = 128, 128, 128
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int, out_scale: float):
+    """One (i, j, k) grid step: acc += x_tile @ w_tile; flush at k end."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = (acc_ref[...] * out_scale).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("out_scale", "bm", "bn", "bk", "tiled")
+)
+def u_matmul(x, w, out_scale: float = 1.0, bm=BM, bn=BN, bk=BK, tiled=True):
+    """Unit-scaled matmul kernel. x: f32[M,K], w: f32[K,N] -> f32[M,N]."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    if not tiled:
+        bm, bn, bk = m, n, k
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    xp = jnp.pad(x, ((0, pm), (0, pk)))
+    wp = jnp.pad(w, ((0, pk), (0, pn)))
+    n_k = xp.shape[1] // bk
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, n_k=n_k, out_scale=out_scale),
+        grid=(xp.shape[0] // bm, wp.shape[1] // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]), jnp.float32),
+        scratch_shapes=[pltpu_scratch((bm, bn))],
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def pltpu_scratch(shape):
+    """VMEM f32 scratch accumulator (works in interpret mode on CPU)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)
+
+
+def mxu_stats(m: int, n: int, k: int, bm=BM, bn=BN, bk=BK) -> dict:
+    """Analytic TPU estimates for DESIGN.md §9 (interpret mode gives no
+    hardware timing): VMEM footprint per grid step and MXU utilization
+    (fraction of each 128x128x128 MXU pass doing useful work)."""
+    vmem = (bm * bk + bk * bn + 2 * bm * bn) * 4
+    util = (min(bm, m) / bm) * (min(bn, n) / bn) * (min(bk, k) / bk)
+    eff_m, eff_n, eff_k = min(bm, 128), min(bn, 128), min(bk, 128)
+    mxu = (eff_m / 128) * (eff_n / 128) * (eff_k / 128)
+    return {
+        "vmem_bytes": vmem,
+        "vmem_frac_of_16MiB": vmem / (16 * 2**20),
+        "tile_fill": util,
+        "mxu_pass_utilization": mxu,
+    }

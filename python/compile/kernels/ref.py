@@ -1,0 +1,120 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness reference).
+
+``quantize_ref`` implements round-to-nearest-even quantization onto the
+exact representable grid of a low-precision float format, with
+saturation-to-max (fn-style, matching torch._scaled_mm / E4M3FN semantics)
+and correct subnormal handling.  It is validated bit-exactly against
+``ml_dtypes`` in python/tests/test_fp8.py and against the Rust software
+codecs in rust/tests/ (via the standalone kernel artifacts).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatFormat:
+    """A binary floating-point format (sign + exponent + mantissa)."""
+
+    name: str
+    exp_bits: int
+    mant_bits: int
+    # fn ("finite-only") formats repurpose the inf encodings as extra
+    # finite range (E4M3FN): max = (2 - 2*2^-m) * 2^emax = 1.75 * 2^8 = 448
+    finite_only: bool = False
+
+    @property
+    def bias(self) -> int:
+        return (1 << (self.exp_bits - 1)) - 1
+
+    @property
+    def min_normal_exp(self) -> int:
+        return 1 - self.bias
+
+    @property
+    def max_exp(self) -> int:
+        # fn formats use the all-ones exponent for normal numbers too
+        return ((1 << self.exp_bits) - 1) - self.bias - (0 if self.finite_only else 1)
+
+    @property
+    def max_value(self) -> float:
+        m = self.mant_bits
+        frac = 2.0 - 2.0 ** (-m)
+        if self.finite_only:
+            # the top mantissa pattern is NaN, so max mantissa is one ulp lower
+            frac = 2.0 - 2.0 ** (-m) * 2.0
+        return frac * 2.0 ** self.max_exp
+
+    @property
+    def min_normal(self) -> float:
+        return 2.0 ** self.min_normal_exp
+
+    @property
+    def min_subnormal(self) -> float:
+        return 2.0 ** (self.min_normal_exp - self.mant_bits)
+
+
+E4M3 = FloatFormat("e4m3", exp_bits=4, mant_bits=3, finite_only=True)
+E5M2 = FloatFormat("e5m2", exp_bits=5, mant_bits=2)
+FP16 = FloatFormat("fp16", exp_bits=5, mant_bits=10)
+BF16 = FloatFormat("bf16", exp_bits=8, mant_bits=7)
+
+FORMATS = {f.name: f for f in (E4M3, E5M2, FP16, BF16)}
+
+
+def pow2_exact(e):
+    """Exact f32 power of two from an integer exponent tensor.
+
+    ``jnp.exp2`` on XLA CPU is only faithfully rounded (computed via exp),
+    which breaks bit-exactness of the quantization grid; constructing the
+    bit pattern directly is exact.  Exponents below -126 are handled by a
+    two-factor product whose result is an exactly-representable subnormal.
+    """
+    import jax
+
+    e = jnp.asarray(e, jnp.int32)
+    e1 = jnp.maximum(e, -126)
+    hi = jax.lax.bitcast_convert_type((e1 + 127) << 23, jnp.float32)
+    lo = jax.lax.bitcast_convert_type(((e - e1) + 127) << 23, jnp.float32)
+    return hi * lo
+
+
+def quantize_ref(x, fmt: FloatFormat):
+    """Round ``x`` (f32) to the representable grid of ``fmt`` (RTNE).
+
+    Saturating cast: values beyond max_value clamp to ±max_value (this is
+    the E4M3FN convention and what the paper's .to(float8) cast does under
+    torch._scaled_mm).  Zeros and signs are preserved; values that would
+    underflow below half the smallest subnormal round to zero through the
+    ordinary grid rounding.
+    """
+    import jax
+
+    x = jnp.asarray(x, jnp.float32)
+    ax = jnp.abs(x)
+    # Exact exponent extraction from the f32 bit pattern (no libm error):
+    # biased exponent bits, clamped into [min_normal_exp, inf) so that all
+    # subnormals share the min-normal exponent (=> fixed-point grid there).
+    bits = jax.lax.bitcast_convert_type(ax, jnp.int32)
+    exp = ((bits >> 23) & 0xFF) - 127
+    exp = jnp.maximum(exp, fmt.min_normal_exp)
+    # Grid spacing at this exponent; jnp.round is round-half-to-even.
+    ulp = pow2_exact(exp - fmt.mant_bits)
+    q = jnp.round(x / ulp) * ulp
+    q = jnp.clip(q, -fmt.max_value, fmt.max_value)
+    return jnp.where(ax == 0, x, q).astype(jnp.float32)
+
+
+def scaled_matmul_ref(x, w, out_scale):
+    """f32 oracle for the unit-scaled matmul kernel: (x @ w) * out_scale."""
+    return (
+        jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32)) * out_scale
+    ).astype(jnp.float32)
+
+
+def quant_matmul_ref(x, w, out_scale, fmt_in=E4M3):
+    """Oracle for the fp8-simulated matmul: quantize inputs, matmul in f32."""
+    return scaled_matmul_ref(quantize_ref(x, fmt_in), quantize_ref(w, fmt_in), out_scale)

@@ -1,0 +1,207 @@
+"""L2: the Llama-style scaled transformer (paper §5.1, Table 5).
+
+Architecture: PreNorm, RMSNorm (non-trainable by default), SwiGLU FFN
+(ratio 2.75), RoPE, untied embeddings, causal LM loss.  Every scale site
+reads from the runtime ``scales`` vector (see specs.scale_sites) and every
+matmul owns three quantization flags in ``qmask`` — the compiled graph is
+parametrization-agnostic (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from . import ops
+from .specs import Spec, TensorInfo, quant_sites, rms_sites, scale_sites, tensor_table
+
+
+def unpack_params(flat, tensors: List[TensorInfo]) -> Dict[str, jnp.ndarray]:
+    return {
+        t.name: jax.lax.slice(flat, (t.offset,), (t.offset + t.size,)).reshape(t.shape)
+        for t in tensors
+    }
+
+
+class Graph:
+    """Binds a Spec's site tables to traced scales/qmask vectors."""
+
+    def __init__(self, spec: Spec, scales, qmask):
+        self.spec = spec
+        self.scales = scales
+        self.qmask = qmask
+        self.sites = scale_sites(spec)
+        self.qsites = quant_sites(spec)
+
+    def s(self, name: str):
+        return self.scales[self.sites[name]]
+
+    def q(self, name: str):
+        return self.qmask[self.qsites[name]]
+
+    def mm(self, x, w, site: str):
+        """Scaled (and maybe-quantized) matmul at a named site."""
+        return ops.scaled_matmul(
+            x, w,
+            self.s(site + ".out"), self.s(site + ".gx"), self.s(site + ".gw"),
+            self.q(site + ".qx"), self.q(site + ".qw"), self.q(site + ".qg"),
+        )
+
+
+def forward(spec: Spec, params: Dict[str, jnp.ndarray], tokens, scales, qmask):
+    """Causal-LM forward. tokens: i32[B, T+1] (inputs || shifted targets).
+
+    Returns (loss, rms_acts) where rms_acts maps the activation entries of
+    specs.rms_sites to scalar RMS telemetry (Fig 6/19/25).
+    """
+    g = Graph(spec, scales, qmask)
+    B, H, Dh = spec.batch, spec.n_heads, spec.head_dim
+    T = spec.seq
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+
+    acts: Dict[str, jnp.ndarray] = {}
+    x = ops.scaled_embedding(params["emb"], inp, g.s("emb.scale"), g.s("emb.gw"))
+
+    for l in range(spec.depth):
+        p = f"l{l}."
+        gain = params.get(p + "attn_norm.g")
+        h = ops.rmsnorm(x, gain)
+        acts[f"act.{p}qkv_in"] = ops.rms(h)
+        q = g.mm(h, params[p + "attn.q"], p + "attn.q").reshape(B, T, H, Dh)
+        k = g.mm(h, params[p + "attn.k"], p + "attn.k").reshape(B, T, H, Dh)
+        v = g.mm(h, params[p + "attn.v"], p + "attn.v").reshape(B, T, H, Dh)
+        q, k = ops.rope(q), ops.rope(k)
+        a = ops.attention(
+            q, k, v, g.s(p + "attn.logit_mult"), g.s(p + "attn.out_scale")
+        ).reshape(B, T, H * Dh)
+        acts[f"act.{p}o_in"] = ops.rms(a)
+        a = g.mm(a, params[p + "attn.o"], p + "attn.o")
+        acts[f"attn_out.{p}raw"] = ops.rms(a)
+        x = ops.residual_add(a, x, g.s(p + "res.attn.a"), g.s(p + "res.attn.b"))
+
+        gain = params.get(p + "ffn_norm.g")
+        h = ops.rmsnorm(x, gain)
+        acts[f"act.{p}ffn_in"] = ops.rms(h)
+        x_gate = g.mm(h, params[p + "ffn.gate"], p + "ffn.gate")
+        x_up = g.mm(h, params[p + "ffn.up"], p + "ffn.up")
+        f = ops.gated_silu(
+            x_up, x_gate, g.s(p + "ffn.act_alpha"), g.s(p + "ffn.act_scale")
+        )
+        acts[f"act.{p}down_in"] = ops.rms(f)
+        f = g.mm(f, params[p + "ffn.down"], p + "ffn.down")
+        x = ops.residual_add(f, x, g.s(p + "res.ffn.a"), g.s(p + "res.ffn.b"))
+        acts[f"skip.{p}post"] = ops.rms(x)
+
+    h = ops.rmsnorm(x, params.get("final_norm.g"))
+    acts["act.head_in"] = ops.rms(h)
+    logits = g.mm(h, params["head"], "head")
+    loss = ops.softmax_xent(logits, tgt, g.s("loss.alpha"), g.s("loss.beta"))
+    return loss, acts
+
+
+def loss_fn(spec: Spec, flat_params, tokens, scales, qmask):
+    tensors = tensor_table(spec)
+    params = unpack_params(flat_params, tensors)
+    return forward(spec, params, tokens, scales, qmask)
+
+
+def rms_tail(spec: Spec, acts: Dict[str, jnp.ndarray], flat_params, flat_grads):
+    """Assemble the telemetry tail in specs.rms_sites order."""
+    tensors = {t.name: t for t in tensor_table(spec)}
+    vals = []
+    for name in rms_sites(spec):
+        if name.startswith("w.") or name.startswith("g."):
+            t = tensors[name[2:]]
+            src = flat_params if name.startswith("w.") else flat_grads
+            if src is None:
+                vals.append(jnp.float32(0.0))
+            else:
+                seg = jax.lax.slice(src, (t.offset,), (t.offset + t.size,))
+                vals.append(ops.rms(seg))
+        else:
+            vals.append(acts[name])
+    return jnp.stack(vals)
+
+
+def make_init(spec: Spec):
+    """init(seed: i32[], init_std: f32[n_tensors]) -> state_ext f32[S_ext].
+
+    Weights ~ N(0, init_std[i]^2); norm gains are *set to* init_std[i]
+    (the coordinator passes 1.0).  Adam moments and the telemetry tail
+    start at zero.
+    """
+    tensors = tensor_table(spec)
+    n_params = sum(t.size for t in tensors)
+    n_rms = len(rms_sites(spec))
+
+    def init(seed, init_std):
+        key = jax.random.PRNGKey(seed)
+        parts = []
+        for i, t in enumerate(tensors):
+            if t.kind == "norm":
+                parts.append(jnp.full((t.size,), 1.0, jnp.float32) * init_std[i])
+            else:
+                sub = jax.random.fold_in(key, i)
+                parts.append(
+                    jax.random.normal(sub, (t.size,), jnp.float32) * init_std[i]
+                )
+        flat = jnp.concatenate(parts)
+        return jnp.concatenate(
+            [flat, jnp.zeros((2 * n_params + 1 + n_rms,), jnp.float32)]
+        )
+
+    return init
+
+
+def make_step(spec: Spec):
+    """The fused train step (fwd + bwd + AdamW-independent + telemetry).
+
+    state_ext layout: [params | m | v | loss | rms] (specs.layout).
+    hyp: [lr, wd_coupled, wd_indep, beta1, beta2, eps, bc1, bc2] where
+    bc1/bc2 are the Adam bias-correction factors 1/(1-beta^t) computed by
+    the coordinator (which owns the step counter and LR schedule).
+    """
+    from .optim import adamw_update
+
+    tensors = tensor_table(spec)
+    n_params = sum(t.size for t in tensors)
+    sizes = [t.size for t in tensors]
+    # weight decay applies to weights, not to norm gains
+    wd_mask = jnp.concatenate(
+        [jnp.full((t.size,), 0.0 if t.kind == "norm" else 1.0, jnp.float32)
+         for t in tensors]
+    )
+
+    def step(state_ext, tokens, scales, lr_scale, hyp, qmask):
+        p = jax.lax.slice(state_ext, (0,), (n_params,))
+        m = jax.lax.slice(state_ext, (n_params,), (2 * n_params,))
+        v = jax.lax.slice(state_ext, (2 * n_params,), (3 * n_params,))
+        (loss, acts), grads = jax.value_and_grad(
+            lambda fp: loss_fn(spec, fp, tokens, scales, qmask), has_aux=True
+        )(p)
+        lr_elem = jnp.concatenate(
+            [jnp.full((sz,), 1.0, jnp.float32) * lr_scale[i]
+             for i, sz in enumerate(sizes)]
+        )
+        p2, m2, v2 = adamw_update(p, grads, m, v, lr_elem, wd_mask, hyp)
+        tail = rms_tail(spec, acts, p, grads)
+        return jnp.concatenate([p2, m2, v2, loss[None], tail])
+
+    return step
+
+
+def make_eval(spec: Spec):
+    """evalf(state_ext, tokens, scales, qmask) -> f32[1 + n_rms]
+    (validation loss + activation/weight RMS; grad slots zero)."""
+
+    n_params = sum(t.size for t in tensor_table(spec))
+
+    def evalf(state_ext, tokens, scales, qmask):
+        p = jax.lax.slice(state_ext, (0,), (n_params,))
+        loss, acts = loss_fn(spec, p, tokens, scales, qmask)
+        tail = rms_tail(spec, acts, p, None)
+        return jnp.concatenate([loss[None], tail])
+
+    return evalf

@@ -1,0 +1,170 @@
+"""L2: scaled ops — the Unit Scaling / abc-parametrization hook library.
+
+Every op here takes its scaling factors as *traced scalars* (read from the
+runtime ``scales`` vector), so a single compiled graph can realize SP, μP,
+u-μP, or any HP point: the Rust coordinator (rust/src/parametrization/)
+computes the numeric values per Table 1/2/8/11 and Appendix F/G of the
+paper and feeds them in at execution time.
+
+Scale-hook semantics (paper §2.3, Appendix B/H):
+* ``scale_fb(x, fwd, bwd)``   — multiply by ``fwd`` in the forward pass and
+  by ``bwd`` (instead of ``fwd``) in the backward pass.  Distinct fwd/bwd
+  factors are only valid on cut edges (Appendix H); constrained sites pass
+  ``fwd == bwd`` (u-μP uses the forward scale everywhere, Appendix B).
+* ``scaled_matmul`` — three independent factors (output, grad-input,
+  grad-weight; the weight-grad edge is always a cut edge), plus runtime
+  0/1 quantization masks implementing the FP8 scheme of §4.2 / Fig 1(c)
+  via the L1 Pallas quantizer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fp8 import quantize_masked
+
+# ---------------------------------------------------------------------------
+# scale hooks
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def scale_fb(x, fwd, bwd):
+    return x * fwd
+
+
+def _scale_fb_fwd(x, fwd, bwd):
+    return x * fwd, (fwd, bwd)
+
+
+def _scale_fb_bwd(res, g):
+    fwd, bwd = res
+    return g * bwd, jnp.zeros_like(fwd), jnp.zeros_like(bwd)
+
+
+scale_fb.defvjp(_scale_fb_fwd, _scale_fb_bwd)
+
+
+@jax.custom_vjp
+def scaled_matmul(x, w, s_out, s_gx, s_gw, qx, qw, qg):
+    """y = (Q?(x) @ Q?(w)) * s_out with independently scaled gradients.
+
+    Forward inputs optionally quantize to E4M3; the incoming output
+    gradient optionally quantizes to E5M2 (the paper's non-critical-matmul
+    recipe, §4.2).  The backward matmuls consume the *quantized* operands,
+    matching real FP8 tensor-core training.
+    """
+    xq = quantize_masked(x, qx, "e4m3")
+    wq = quantize_masked(w, qw, "e4m3")
+    return jnp.matmul(xq, wq) * s_out
+
+
+def _smm_fwd(x, w, s_out, s_gx, s_gw, qx, qw, qg):
+    xq = quantize_masked(x, qx, "e4m3")
+    wq = quantize_masked(w, qw, "e4m3")
+    y = jnp.matmul(xq, wq) * s_out
+    return y, (xq, wq, s_gx, s_gw, qg)
+
+
+def _smm_bwd(res, g):
+    xq, wq, s_gx, s_gw, qg = res
+    gq = quantize_masked(g, qg, "e5m2")
+    gx = jnp.matmul(gq, wq.T) * s_gx
+    # contract away all leading (batch/seq) axes of x against g
+    lead = tuple(range(xq.ndim - 1))
+    gw = jnp.tensordot(xq, gq, axes=(lead, lead)) * s_gw
+    z = jnp.zeros((), jnp.float32)
+    return gx, gw, z, z, z, z, z, z
+
+
+scaled_matmul.defvjp(_smm_fwd, _smm_bwd)
+
+
+def scaled_embedding(table, tokens, s_fwd, s_gw):
+    """Embedding lookup with fwd scale ``s_fwd`` and table-gradient scale
+    ``s_gw``.  Applying the scale hook to the table *before* the gather is
+    mathematically identical and keeps autodiff over the integer gather."""
+    return scale_fb(table, s_fwd, s_gw)[tokens]
+
+
+# ---------------------------------------------------------------------------
+# normalization & position
+# ---------------------------------------------------------------------------
+
+
+def rms(x):
+    """Paper's RMS = sqrt(sigma^2 + mu^2) = root-mean-square (Fig 6)."""
+    return jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-30)
+
+
+def rmsnorm(x, gain=None, eps: float = 1e-6):
+    """RMSNorm; non-trainable by default (Lingle's fix, §3.1).
+
+    0-homogeneous, so it propagates no scale and needs no multiplier
+    (Appendix G.1) and no Unit Scaling factor (Table 8).
+    """
+    y = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    if gain is not None:
+        y = y * gain
+    return y
+
+
+def rope(x, theta: float = 10000.0):
+    """Rotary position embeddings on [B, T, H, Dh]; no scale change
+    (pairwise rotations are isometries — Table 8: alpha = beta = 1)."""
+    b, t, h, d = x.shape
+    half = d // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = jnp.arange(t, dtype=jnp.float32)[:, None] * inv[None, :]  # [T, half]
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# fused blocks (Table 8)
+# ---------------------------------------------------------------------------
+
+
+def attention(q, k, v, logit_mult, out_scale):
+    """Causal scaled-dot-product attention.
+
+    ``logit_mult`` is alpha_attn_softmax x (1/d_head for μP & u-μP,
+    1/sqrt(d_head) for SP) — computed by the coordinator.  ``out_scale``
+    is the Unit Scaling log-interpolate factor (Table 8), applied with
+    fwd == bwd (constrained site).
+    """
+    b, t, h, d = q.shape
+    logits = jnp.einsum("bthd,bshd->bhts", q, k) * logit_mult
+    mask = jnp.tril(jnp.ones((t, t), jnp.bool_))
+    logits = jnp.where(mask[None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", probs, v)
+    return out * out_scale
+
+
+def gated_silu(x_in, x_gate, act_alpha, out_scale):
+    """SwiGLU gate: x_in ⊙ x_gate ⊙ sigmoid(alpha_ffn-act * x_gate),
+    divided by the empirical Unit Scaling factor (Table 8)."""
+    return x_in * x_gate * jax.nn.sigmoid(act_alpha * x_gate) * out_scale
+
+
+def residual_add(branch, skip, a, b):
+    """u-μP residual: a*f(x) + b*x with a^2+b^2=1 computed from the
+    τ-scheme (Appendix G.2.2) by rust/src/parametrization/residual.rs.
+    For μP/SP the coordinator instead sends the Table 2 'Residual' column
+    multipliers with b=1."""
+    return a * branch + b * skip
+
+
+def softmax_xent(logits, targets, loss_alpha, loss_beta):
+    """Unit-scaled cross-entropy (Table 8): pre-multiplier
+    alpha_loss_softmax on the logits; backward-only gradient scale beta
+    (= s/sqrt(s-1) under Unit Scaling, 1 otherwise). The *reported* loss
+    is the true mean CE of the scaled-logit model."""
+    z = scale_fb(logits * loss_alpha, jnp.float32(1.0), loss_beta)
+    logp = jax.nn.log_softmax(z, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)

@@ -1,0 +1,48 @@
+"""L2: AdamW with per-element LR and *independent* weight decay.
+
+The paper's stability fix (§3.1, following Wortsman et al.) uses the
+independent form of AdamW: the decay term is NOT multiplied by the
+learning rate.  Both forms are compiled in and runtime-selected via the
+``hyp`` vector, so Fig 2's ablation (standard AdamW vs independent) needs
+no recompilation:
+
+    p' = p - lr_elem * (m_hat / (sqrt(v_hat) + eps) + wd_coupled * p)
+           - wd_indep * wd_mask * p
+
+with lr_elem = lr * lr_scale[tensor] broadcast per element (the
+parametrization's C_W rule, Table 2) and bias-correction factors
+bc1 = 1/(1-beta1^t), bc2 = 1/(1-beta2^t) supplied by the coordinator.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# hyp vector layout (specs.layout()["hyp_layout"])
+LR, WD_COUPLED, WD_INDEP, BETA1, BETA2, EPS, BC1, BC2 = range(8)
+
+
+def adamw_update(p, g, m, v, lr_elem, wd_mask, hyp):
+    """One fused AdamW step over the flat parameter vector."""
+    lr = hyp[LR]
+    beta1, beta2 = hyp[BETA1], hyp[BETA2]
+    m2 = beta1 * m + (1.0 - beta1) * g
+    v2 = beta2 * v + (1.0 - beta2) * jnp.square(g)
+    m_hat = m2 * hyp[BC1]
+    v_hat = v2 * hyp[BC2]
+    update = m_hat / (jnp.sqrt(v_hat) + hyp[EPS])
+    p2 = (
+        p
+        - lr * lr_elem * (update + hyp[WD_COUPLED] * wd_mask * p)
+        - hyp[WD_INDEP] * wd_mask * p
+    )
+    return p2, m2, v2
+
+
+def hyp_vector(lr, wd_coupled, wd_indep, beta1, beta2, eps, t):
+    """Host-side helper mirrored by rust/src/train/schedule.rs."""
+    bc1 = 1.0 / (1.0 - beta1**t)
+    bc2 = 1.0 / (1.0 - beta2**t)
+    return jnp.asarray(
+        [lr, wd_coupled, wd_indep, beta1, beta2, eps, bc1, bc2], jnp.float32
+    )

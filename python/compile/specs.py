@@ -1,0 +1,259 @@
+"""Model specs, tensor tables, scale-site tables and RMS-site tables.
+
+This module is the single source of truth for the contract between the
+JAX compile layer (L2) and the Rust coordinator (L3).  Everything here is
+serialized into ``manifest.json`` next to each HLO artifact; the Rust side
+mirrors these layouts in ``rust/src/runtime/artifact.rs``.
+
+Layout conventions
+------------------
+* All parameters and Adam moments are packed into one flat ``f32[S_ext]``
+  "extended state" vector::
+
+      [ params (P) | m (P) | v (P) | loss (1) | rms (n_rms) ]
+
+  so a train step is state-in/state-out with a telemetry tail that the
+  Rust runtime reads with a partial device-to-host copy.
+* Every *scale site* in the graph reads a scalar from the runtime
+  ``scales: f32[n_sites]`` input.  Matmul sites own three consecutive
+  scalars (fwd-output, grad-input, grad-weight); unary/multiplier sites
+  own one.
+* Every quantization site owns one 0/1 flag in ``qmask: f32[n_qsites]``
+  (x-input, weight, output-gradient per matmul site).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Tuple
+
+HEAD_DIM = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    """A compiled model shape. One artifact directory per Spec."""
+
+    width: int
+    depth: int
+    batch: int
+    seq: int = 64
+    vocab: int = 256
+    head_dim: int = HEAD_DIM
+    ffn_ratio: float = 2.75  # Llama-style gated FFN ratio (Table 6)
+    trainable_norms: bool = False  # Fig 2(a) TP5-style ablation
+
+    @property
+    def n_heads(self) -> int:
+        assert self.width % self.head_dim == 0
+        return self.width // self.head_dim
+
+    @property
+    def d_ffn(self) -> int:
+        # round to a multiple of 8 for tidy tiling
+        return int(self.width * self.ffn_ratio) // 8 * 8
+
+    @property
+    def name(self) -> str:
+        tag = "_tn" if self.trainable_norms else ""
+        return (
+            f"w{self.width}_d{self.depth}_b{self.batch}"
+            f"_t{self.seq}_v{self.vocab}{tag}"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorInfo:
+    name: str
+    shape: Tuple[int, ...]
+    kind: str  # "emb" | "hidden" | "out" | "norm"
+    fan_in: int
+    fan_out: int
+    offset: int  # element offset into the params segment
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+
+def tensor_table(spec: Spec) -> List[TensorInfo]:
+    """Parameter tensors in packing order.
+
+    Weight-type classification follows Table 1: *input* weights have only
+    fan-out ∝ width (embedding), *hidden* both, *output* only fan-in ∝
+    width (decoder head).
+    """
+    w, d_ffn = spec.width, spec.d_ffn
+    infos: List[TensorInfo] = []
+    off = 0
+
+    def add(name: str, shape: Tuple[int, ...], kind: str, fan_in: int, fan_out: int):
+        nonlocal off
+        infos.append(TensorInfo(name, shape, kind, fan_in, fan_out, off))
+        n = 1
+        for s in shape:
+            n *= s
+        off += n
+
+    add("emb", (spec.vocab, w), "emb", spec.vocab, w)
+    for l in range(spec.depth):
+        p = f"l{l}."
+        if spec.trainable_norms:
+            add(p + "attn_norm.g", (w,), "norm", w, w)
+        add(p + "attn.q", (w, w), "hidden", w, w)
+        add(p + "attn.k", (w, w), "hidden", w, w)
+        add(p + "attn.v", (w, w), "hidden", w, w)
+        add(p + "attn.o", (w, w), "hidden", w, w)
+        if spec.trainable_norms:
+            add(p + "ffn_norm.g", (w,), "norm", w, w)
+        add(p + "ffn.gate", (w, d_ffn), "hidden", w, d_ffn)
+        add(p + "ffn.up", (w, d_ffn), "hidden", w, d_ffn)
+        add(p + "ffn.down", (d_ffn, w), "hidden", d_ffn, w)
+    if spec.trainable_norms:
+        add("final_norm.g", (w,), "norm", w, w)
+    add("head", (w, spec.vocab), "out", w, spec.vocab)
+    return infos
+
+
+# ---------------------------------------------------------------------------
+# Scale sites
+# ---------------------------------------------------------------------------
+
+MATMUL_SUFFIXES = (".out", ".gx", ".gw")
+
+
+def scale_sites(spec: Spec) -> Dict[str, int]:
+    """Ordered map from scale-site name to index in the scales vector.
+
+    Matmul sites contribute three entries ``<site>.out/.gx/.gw``; scalar
+    multiplier sites contribute one entry under their own name.
+    """
+    sites: Dict[str, int] = {}
+
+    def mm(site: str):
+        for sfx in MATMUL_SUFFIXES:
+            sites[site + sfx] = len(sites)
+
+    def one(site: str):
+        sites[site] = len(sites)
+
+    one("emb.scale")  # forward multiplier on embedding output
+    one("emb.gw")  # backward scale on the embedding-table gradient
+    for l in range(spec.depth):
+        p = f"l{l}."
+        for name in ("attn.q", "attn.k", "attn.v", "attn.o"):
+            mm(p + name)
+        one(p + "attn.logit_mult")  # alpha_attn_softmax * (1/d or 1/sqrt d)
+        one(p + "attn.out_scale")  # unit-scaling log-interpolate factor
+        for name in ("ffn.gate", "ffn.up", "ffn.down"):
+            mm(p + name)
+        one(p + "ffn.act_alpha")  # alpha_ffn-act inside the sigmoid
+        one(p + "ffn.act_scale")  # unit-scaling gated-silu factor
+        one(p + "res.attn.a")
+        one(p + "res.attn.b")
+        one(p + "res.ffn.a")
+        one(p + "res.ffn.b")
+    mm("head")
+    one("loss.alpha")  # alpha_loss_softmax pre-multiplier on logits
+    one("loss.beta")  # backward-only scale on the xent gradient
+    return sites
+
+
+def quant_sites(spec: Spec) -> Dict[str, int]:
+    """0/1 flags: quantize x-input / weight to E4M3, out-gradient to E5M2."""
+    sites: Dict[str, int] = {}
+    names = ["l%d.%s" % (l, n) for l in range(spec.depth)
+             for n in ("attn.q", "attn.k", "attn.v", "attn.o",
+                       "ffn.gate", "ffn.up", "ffn.down")]
+    names.append("head")
+    for site in names:
+        for sfx in (".qx", ".qw", ".qg"):
+            sites[site + sfx] = len(sites)
+    return sites
+
+
+def rms_sites(spec: Spec) -> List[str]:
+    """Instrumented RMS telemetry, in tail order.
+
+    act.*    — matmul input activations (Fig 6 / Fig 19)
+    attn_out.* — raw attention-block output (Fig 25)
+    skip.*   — residual stream after each block (Fig 25 / App. L)
+    w.*      — weight RMS per tensor (Fig 6 right)
+    g.*      — parameter-gradient RMS per tensor (Fig 19 proxy)
+    """
+    names: List[str] = []
+    for l in range(spec.depth):
+        p = f"l{l}."
+        names += [f"act.{p}qkv_in", f"act.{p}o_in", f"act.{p}ffn_in",
+                  f"act.{p}down_in", f"attn_out.{p}raw", f"skip.{p}post"]
+    names.append("act.head_in")
+    for t in tensor_table(spec):
+        names.append("w." + t.name)
+    for t in tensor_table(spec):
+        names.append("g." + t.name)
+    return names
+
+
+def layout(spec: Spec) -> dict:
+    """Full manifest dict (serialized to manifest.json by aot.py)."""
+    tensors = tensor_table(spec)
+    n_params = sum(t.size for t in tensors)
+    rms = rms_sites(spec)
+    sites = scale_sites(spec)
+    qs = quant_sites(spec)
+    return {
+        "spec": dataclasses.asdict(spec),
+        "name": spec.name,
+        "n_heads": spec.n_heads,
+        "d_ffn": spec.d_ffn,
+        "tensors": [
+            {
+                "name": t.name,
+                "shape": list(t.shape),
+                "kind": t.kind,
+                "fan_in": t.fan_in,
+                "fan_out": t.fan_out,
+                "offset": t.offset,
+                "size": t.size,
+            }
+            for t in tensors
+        ],
+        "n_params": n_params,
+        "state_ext_len": 3 * n_params + 1 + len(rms),
+        "loss_offset": 3 * n_params,
+        "rms_offset": 3 * n_params + 1,
+        "scale_sites": sites,
+        "n_scale_sites": len(sites),
+        "quant_sites": qs,
+        "n_quant_sites": len(qs),
+        "rms_sites": rms,
+        "hyp_layout": [
+            "lr", "wd_coupled", "wd_indep", "beta1", "beta2",
+            "eps", "bc1", "bc2",
+        ],
+        "io": {
+            "init": ["seed:i32[]", "init_std:f32[n_tensors]"],
+            "step": [
+                "state_ext:f32[state_ext_len]",
+                "tokens:i32[batch,seq+1]",
+                "scales:f32[n_scale_sites]",
+                "lr_scale:f32[n_tensors]",
+                "hyp:f32[8]",
+                "qmask:f32[n_quant_sites]",
+            ],
+            "evalf": [
+                "state_ext:f32[state_ext_len]",
+                "tokens:i32[batch,seq+1]",
+                "scales:f32[n_scale_sites]",
+                "qmask:f32[n_quant_sites]",
+            ],
+        },
+    }
+
+
+def dumps(spec: Spec) -> str:
+    return json.dumps(layout(spec), indent=1)

@@ -1,0 +1,116 @@
+"""L1 quantizer correctness: kernel vs oracle vs ml_dtypes.
+
+The oracle (`ref.quantize_ref`) is pinned bit-exactly to ml_dtypes' cast
+semantics on the in-range domain; the Pallas kernel must match the oracle
+bit-exactly everywhere (including saturation, which deliberately differs
+from ml_dtypes' overflow-to-NaN/inf — torch._scaled_mm saturates).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import ml_dtypes
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fp8, ref
+
+ML = {
+    "e4m3": ml_dtypes.float8_e4m3fn,
+    "e5m2": ml_dtypes.float8_e5m2,
+    "fp16": np.float16,
+    "bf16": ml_dtypes.bfloat16,
+}
+
+
+def wide_floats(n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n) * np.exp2(rng.uniform(-40, 40, size=n))
+    return x.astype(np.float32)
+
+
+@pytest.mark.parametrize("fmt_name", list(ML))
+def test_ref_matches_ml_dtypes_in_range(fmt_name):
+    fmt = ref.FORMATS[fmt_name]
+    x = wide_floats(200_000, 0)
+    q = np.asarray(ref.quantize_ref(x, fmt))
+    with np.errstate(over="ignore"):
+        md = x.astype(ML[fmt_name]).astype(np.float32)
+    mask = np.abs(x) <= fmt.max_value
+    assert np.array_equal(q[mask], md[mask])
+
+
+@pytest.mark.parametrize("fmt_name", list(ML))
+def test_kernel_matches_ref(fmt_name):
+    x = wide_floats(64 * 256, 1).reshape(64, 256)
+    q_ref = np.asarray(ref.quantize_ref(x, ref.FORMATS[fmt_name]))
+    q_k = np.asarray(fp8.quantize(jnp.asarray(x), fmt_name))
+    assert np.array_equal(q_k, q_ref)
+
+
+def test_tiled_kernel_matches_full_block():
+    x = wide_floats(100 * 300, 2).reshape(100, 300)  # non-divisible shape
+    a = np.asarray(fp8.quantize(jnp.asarray(x), "e4m3", tiled=False))
+    b = np.asarray(fp8.quantize(jnp.asarray(x), "e4m3", tiled=True))
+    assert np.array_equal(a, b)
+
+
+def test_saturation_and_specials():
+    fmt = ref.E4M3
+    x = np.array([1e9, -1e9, 448.0, 449.0, 0.0, -0.0, 2**-9, 2**-11], np.float32)
+    q = np.asarray(ref.quantize_ref(x, fmt))
+    assert q[0] == 448.0 and q[1] == -448.0
+    assert q[2] == 448.0
+    assert q[4] == 0.0 and np.signbit(q[5])
+    assert q[6] == 2**-9  # min subnormal preserved
+    assert q[7] == 0.0  # below half min-subnormal -> zero
+
+
+def test_idempotent():
+    x = wide_floats(10_000, 3)
+    for fmt in (ref.E4M3, ref.E5M2, ref.BF16):
+        q1 = np.asarray(ref.quantize_ref(x, fmt))
+        q2 = np.asarray(ref.quantize_ref(q1, fmt))
+        assert np.array_equal(q1, q2), fmt.name
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rows=st.integers(1, 40),
+    cols=st.integers(1, 200),
+    log_scale=st.floats(-20, 20),
+    seed=st.integers(0, 2**31 - 1),
+    fmt_name=st.sampled_from(["e4m3", "e5m2"]),
+)
+def test_kernel_shape_dtype_sweep(rows, cols, log_scale, seed, fmt_name):
+    """Hypothesis sweep over shapes/scales: kernel == oracle, always."""
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((rows, cols)) * 2.0**log_scale).astype(np.float32)
+    q_ref = np.asarray(ref.quantize_ref(x, ref.FORMATS[fmt_name]))
+    q_k = np.asarray(fp8.quantize(jnp.asarray(x), fmt_name))
+    assert np.array_equal(q_k, q_ref)
+    # quantization error bounded by half a ulp of the magnitude
+    fmtf = ref.FORMATS[fmt_name]
+    in_range = np.abs(x) <= fmtf.max_value
+    rel = np.abs(q_ref - x)[in_range]
+    bound = np.maximum(np.abs(x[in_range]) * 2.0 ** (-fmtf.mant_bits) / 1.99,
+                       fmtf.min_subnormal)
+    assert np.all(rel <= bound)
+
+
+def test_monotone():
+    """Quantization preserves (non-strict) order."""
+    x = np.sort(wide_floats(50_000, 4))
+    q = np.asarray(ref.quantize_ref(x, ref.E4M3))
+    assert np.all(np.diff(q) >= 0)
+
+
+def test_quantize_masked_blend():
+    x = wide_floats(1000, 5).reshape(10, 100)
+    on = np.asarray(fp8.quantize_masked(jnp.asarray(x), jnp.float32(1.0), "e4m3"))
+    off = np.asarray(fp8.quantize_masked(jnp.asarray(x), jnp.float32(0.0), "e4m3"))
+    assert np.array_equal(on, np.asarray(ref.quantize_ref(x, ref.E4M3)))
+    assert np.array_equal(off, x)
+
+
+def test_vmem_budget():
+    assert fp8.vmem_bytes() < 16 * 2**20  # fits VMEM comfortably

@@ -1,0 +1,57 @@
+"""L1 tiled matmul kernel vs oracle, with hypothesis shape sweeps."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, ref
+
+
+def test_full_block_matches_ref():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((48, 96)).astype(np.float32)
+    w = rng.standard_normal((96, 32)).astype(np.float32)
+    got = np.asarray(matmul.u_matmul(jnp.asarray(x), jnp.asarray(w), 0.125, tiled=False))
+    want = np.asarray(ref.scaled_matmul_ref(x, w, 0.125))
+    assert np.allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 150),
+    k=st.integers(1, 150),
+    n=st.integers(1, 150),
+    bm=st.sampled_from([16, 32, 64]),
+    bk=st.sampled_from([16, 32, 64]),
+    bn=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 1000),
+)
+def test_tiled_matches_ref_any_shape(m, k, n, bm, bk, bn, seed):
+    """Grid tiling with padding must be exact for non-divisible shapes."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    got = np.asarray(
+        matmul.u_matmul(jnp.asarray(x), jnp.asarray(w), 1.0, bm=bm, bn=bn, bk=bk)
+    )
+    want = np.asarray(ref.scaled_matmul_ref(x, w, 1.0))
+    assert got.shape == (m, n)
+    assert np.allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_unit_scaling_factor_normalizes_output():
+    """With the Table 8 factor 1/sqrt(fan-in), unit inputs give ~unit out."""
+    rng = np.random.default_rng(1)
+    k = 512
+    x = rng.standard_normal((256, k)).astype(np.float32)
+    w = rng.standard_normal((k, 256)).astype(np.float32)
+    y = np.asarray(matmul.u_matmul(jnp.asarray(x), jnp.asarray(w), 1.0 / np.sqrt(k)))
+    assert abs(y.std() - 1.0) < 0.05
+
+
+def test_mxu_stats_structural():
+    s = matmul.mxu_stats(256, 256, 256)
+    assert s["vmem_bytes"] < 16 * 2**20
+    assert s["mxu_pass_utilization"] == 1.0
+    s = matmul.mxu_stats(64, 64, 64, bm=64, bn=64, bk=64)
+    assert s["mxu_pass_utilization"] == 0.125  # (64/128)^3

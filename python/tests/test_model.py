@@ -1,0 +1,183 @@
+"""L2 model/step/manifest contract tests."""
+
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import specs
+from compile.model import make_eval, make_init, make_step
+from compile.optim import hyp_vector
+from compile.specs import Spec, layout, quant_sites, rms_sites, scale_sites, tensor_table
+
+SPEC = Spec(width=32, depth=2, batch=4, seq=16, vocab=64)
+MAN = layout(SPEC)
+
+
+def unit_scales(man):
+    """A hand-built u-μP-flavoured scales vector (mirrors the Rust engine
+    approximately; exact values are tested on the Rust side)."""
+    s = np.ones(man["n_scale_sites"], np.float32)
+    for name, i in man["scale_sites"].items():
+        if name.endswith((".out", ".gx", ".gw")) and not name.startswith("head"):
+            s[i] = 1 / math.sqrt(32)
+        if "logit_mult" in name:
+            s[i] = 1 / 16
+        if name.startswith("head."):
+            s[i] = 1 / 32
+        if name.endswith("res.attn.a") or name.endswith("res.ffn.a"):
+            s[i] = 1 / math.sqrt(3)
+        if name.endswith("res.attn.b") or name.endswith("res.ffn.b"):
+            s[i] = math.sqrt(2 / 3)
+    return s
+
+
+def make_all():
+    init = jax.jit(make_init(SPEC))
+    step = jax.jit(make_step(SPEC))
+    ev = jax.jit(make_eval(SPEC))
+    return init, step, ev
+
+
+def test_manifest_consistency():
+    tensors = tensor_table(SPEC)
+    off = 0
+    for t in tensors:
+        assert t.offset == off
+        off += t.size
+    assert MAN["n_params"] == off
+    assert MAN["state_ext_len"] == 3 * off + 1 + len(rms_sites(SPEC))
+    assert len(scale_sites(SPEC)) == MAN["n_scale_sites"]
+    assert len(quant_sites(SPEC)) == MAN["n_quant_sites"]
+    # sites are a permutation of 0..n
+    assert sorted(scale_sites(SPEC).values()) == list(range(MAN["n_scale_sites"]))
+    assert sorted(quant_sites(SPEC).values()) == list(range(MAN["n_quant_sites"]))
+
+
+def test_trainable_norms_adds_tensors():
+    tn = Spec(width=32, depth=2, batch=4, seq=16, vocab=64, trainable_norms=True)
+    base_names = {t.name for t in tensor_table(SPEC)}
+    tn_names = {t.name for t in tensor_table(tn)}
+    extra = tn_names - base_names
+    assert extra == {"l0.attn_norm.g", "l0.ffn_norm.g", "l1.attn_norm.g",
+                     "l1.ffn_norm.g", "final_norm.g"}
+
+
+def test_init_statistics():
+    init, _, _ = make_all()
+    n_t = len(MAN["tensors"])
+    std = np.full(n_t, 0.5, np.float32)
+    st = np.asarray(init(jnp.int32(7), jnp.asarray(std)))
+    emb = st[: 64 * 32]
+    assert abs(emb.std() - 0.5) < 0.02
+    # moments and tail start at zero
+    assert np.all(st[MAN["n_params"] : 3 * MAN["n_params"]] == 0)
+    assert np.all(st[MAN["loss_offset"] :] == 0)
+    # different seeds give different params
+    st2 = np.asarray(init(jnp.int32(8), jnp.asarray(std)))
+    assert not np.allclose(st[:100], st2[:100])
+
+
+def test_step_trains_and_tail_is_populated():
+    init, step, ev = make_all()
+    n_t = len(MAN["tensors"])
+    st = init(jnp.int32(0), jnp.asarray(np.ones(n_t, np.float32)))
+    scales = jnp.asarray(unit_scales(MAN))
+    lr_scale = jnp.asarray(np.full(n_t, 1.0, np.float32))
+    qm = jnp.asarray(np.zeros(MAN["n_quant_sites"], np.float32))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, 64, (4, 17)).astype(np.int32))
+    losses = []
+    for t in range(1, 40):
+        st = step(st, toks, scales, lr_scale, hyp_vector(0.05, 0, 2**-13, 0.9, 0.999, 1e-8, t), qm)
+        losses.append(float(st[MAN["loss_offset"]]))
+    assert losses[0] > 3.5  # ~ln(64) at init
+    assert losses[-1] < losses[0] - 1.0  # memorizes the fixed batch
+    # rms tail populated (weights ~1 under unit init)
+    rms = np.asarray(st[MAN["rms_offset"]:])
+    names = MAN["rms_sites"]
+    w_emb = rms[names.index("w.emb")]
+    assert 0.9 < w_emb < 1.2
+    g_rms = rms[names.index("g.l0.attn.q")]
+    assert g_rms > 0
+
+
+def test_lr_zero_freezes_params():
+    init, step, _ = make_all()
+    n_t = len(MAN["tensors"])
+    st = init(jnp.int32(0), jnp.asarray(np.ones(n_t, np.float32)))
+    scales = jnp.asarray(unit_scales(MAN))
+    lr_scale = jnp.asarray(np.ones(n_t, np.float32))
+    qm = jnp.asarray(np.zeros(MAN["n_quant_sites"], np.float32))
+    toks = jnp.asarray(np.zeros((4, 17), np.int32))
+    before = np.asarray(st[: MAN["n_params"]])
+    st2 = step(st, toks, scales, lr_scale, hyp_vector(0.0, 0, 0, 0.9, 0.999, 1e-8, 1), qm)
+    after = np.asarray(st2[: MAN["n_params"]])
+    assert np.array_equal(before, after)
+
+
+def test_independent_vs_coupled_wd_differ():
+    init, step, _ = make_all()
+    n_t = len(MAN["tensors"])
+    scales = jnp.asarray(unit_scales(MAN))
+    lr_scale = jnp.asarray(np.ones(n_t, np.float32))
+    qm = jnp.asarray(np.zeros(MAN["n_quant_sites"], np.float32))
+    toks = jnp.asarray(np.random.default_rng(1).integers(0, 64, (4, 17)).astype(np.int32))
+    st0 = init(jnp.int32(0), jnp.asarray(np.ones(n_t, np.float32)))
+    # same nominal decay coefficient 0.1: coupled is modulated by lr
+    # (effective 0.01·0.1 = 1e-3/step) whereas independent applies 0.1
+    # directly — a 100x difference in decay strength.
+    none = step(st0, toks, scales, lr_scale, hyp_vector(0.01, 0.0, 0.0, 0.9, 0.999, 1e-8, 1), qm)
+    coup = step(st0, toks, scales, lr_scale, hyp_vector(0.01, 0.1, 0.0, 0.9, 0.999, 1e-8, 1), qm)
+    indep = step(st0, toks, scales, lr_scale, hyp_vector(0.01, 0.0, 0.1, 0.9, 0.999, 1e-8, 1), qm)
+    p = MAN["n_params"]
+    p_none, p_coup, p_ind = (np.asarray(v[:p]) for v in (none, coup, indep))
+    # independent decay shrinks params ~10% in one step; coupled ~0.1%
+    r_ind = np.linalg.norm(p_ind) / np.linalg.norm(p_none)
+    r_coup = np.linalg.norm(p_coup) / np.linalg.norm(p_none)
+    assert r_ind < 0.92
+    assert 0.992 < r_coup < 1.0
+
+
+def test_fp8_qmask_changes_compute():
+    init, step, _ = make_all()
+    n_t = len(MAN["tensors"])
+    scales = jnp.asarray(unit_scales(MAN))
+    lr_scale = jnp.asarray(np.ones(n_t, np.float32))
+    toks = jnp.asarray(np.random.default_rng(2).integers(0, 64, (4, 17)).astype(np.int32))
+    st0 = init(jnp.int32(0), jnp.asarray(np.ones(n_t, np.float32)))
+    hyp = hyp_vector(0.05, 0, 0, 0.9, 0.999, 1e-8, 1)
+    off = step(st0, toks, scales, lr_scale, hyp, jnp.asarray(np.zeros(MAN["n_quant_sites"], np.float32)))
+    on = step(st0, toks, scales, lr_scale, hyp, jnp.asarray(np.ones(MAN["n_quant_sites"], np.float32)))
+    l_off, l_on = float(off[MAN["loss_offset"]]), float(on[MAN["loss_offset"]])
+    assert l_off != l_on  # quantization perturbs
+    assert abs(l_off - l_on) < 0.1  # ...but only slightly at unit scale
+
+
+def test_eval_matches_step_loss_at_lr0():
+    init, step, ev = make_all()
+    n_t = len(MAN["tensors"])
+    scales = jnp.asarray(unit_scales(MAN))
+    lr_scale = jnp.asarray(np.ones(n_t, np.float32))
+    qm = jnp.asarray(np.zeros(MAN["n_quant_sites"], np.float32))
+    toks = jnp.asarray(np.random.default_rng(3).integers(0, 64, (4, 17)).astype(np.int32))
+    st = init(jnp.int32(0), jnp.asarray(np.ones(n_t, np.float32)))
+    st2 = step(st, toks, scales, lr_scale, hyp_vector(0.0, 0, 0, 0.9, 0.999, 1e-8, 1), qm)
+    loss_step = float(st2[MAN["loss_offset"]])
+    e = ev(st, toks, scales, qm)
+    assert np.allclose(loss_step, float(e[0]), rtol=1e-5)
+
+
+def test_default_specs_cover_required_shapes():
+    from compile.aot import DEFAULT_SPECS
+
+    names = {s.name for s in DEFAULT_SPECS}
+    assert "w256_d4_b16_t64_v256" in names
+    assert "w64_d8_b16_t64_v256" in names
+    assert "w64_d4_b8_t64_v256" in names
+    assert any(s.trainable_norms for s in DEFAULT_SPECS)
+    # head_dim divides every width
+    for s in DEFAULT_SPECS:
+        assert s.width % s.head_dim == 0

@@ -1,0 +1,170 @@
+"""L2 scaled-op semantics: the scale hooks must put exactly the right
+factor on exactly the right pass (the whole parametrization engine rests
+on this contract)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import ops
+
+
+def test_scale_fb_forward_and_backward():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(32), jnp.float32)
+
+    def f(x):
+        return jnp.sum(ops.scale_fb(x, jnp.float32(3.0), jnp.float32(7.0)))
+
+    y, g = jax.value_and_grad(f)(x)
+    assert np.allclose(y, 3.0 * float(jnp.sum(x)), rtol=1e-6)
+    assert np.allclose(np.asarray(g), 7.0, rtol=1e-6)  # grad of sum is 1 * bwd
+
+
+def test_scaled_matmul_three_scales():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, 4)), jnp.float32)
+    zero = jnp.float32(0.0)
+
+    def f(x, w):
+        y = ops.scaled_matmul(x, w, jnp.float32(2.0), jnp.float32(5.0),
+                              jnp.float32(11.0), zero, zero, zero)
+        return jnp.sum(y)
+
+    y = f(x, w)
+    assert np.allclose(float(y), 2.0 * float(jnp.sum(x @ w)), rtol=1e-5)
+    gx = jax.grad(f, argnums=0)(x, w)
+    gw = jax.grad(f, argnums=1)(x, w)
+    ones = jnp.ones((8, 4), jnp.float32)
+    assert np.allclose(np.asarray(gx), np.asarray(ones @ w.T) * 5.0, rtol=1e-5)
+    assert np.allclose(np.asarray(gw), np.asarray(x.T @ ones) * 11.0, rtol=1e-5)
+
+
+def test_scaled_matmul_batched_x():
+    """3-D activations contract all leading axes in the weight grad."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((2, 5, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, 3)), jnp.float32)
+    one = jnp.float32(1.0)
+    zero = jnp.float32(0.0)
+
+    def f(w):
+        return jnp.sum(ops.scaled_matmul(x, w, one, one, one, zero, zero, zero))
+
+    gw = jax.grad(f)(w)
+    expect = np.tensordot(np.asarray(x), np.ones((2, 5, 3), np.float32),
+                          axes=((0, 1), (0, 1)))
+    assert np.allclose(np.asarray(gw), expect, rtol=1e-5)
+
+
+def test_quantized_matmul_uses_quantized_operands():
+    from compile.kernels import ref
+
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((4, 8)) * 3, jnp.float32)
+    w = jnp.asarray(rng.standard_normal((8, 4)) * 3, jnp.float32)
+    one = jnp.float32(1.0)
+    y = ops.scaled_matmul(x, w, one, one, one, one, one, one)
+    xq = ref.quantize_ref(x, ref.E4M3)
+    wq = ref.quantize_ref(w, ref.E4M3)
+    assert np.allclose(np.asarray(y), np.asarray(xq @ wq), rtol=1e-6)
+
+
+def test_embedding_scales():
+    table = jnp.asarray(np.random.default_rng(4).standard_normal((10, 6)), jnp.float32)
+    toks = jnp.asarray([[1, 2], [3, 1]], jnp.int32)
+
+    def f(table):
+        return jnp.sum(ops.scaled_embedding(table, toks, jnp.float32(2.0), jnp.float32(3.0)))
+
+    y = f(table)
+    assert np.allclose(float(y), 2.0 * float(jnp.sum(table[toks])), rtol=1e-6)
+    g = jax.grad(f)(table)
+    # token 1 appears twice: grad 2*3; tokens 2,3 once: grad 3; others 0
+    assert np.allclose(np.asarray(g)[1], 6.0)
+    assert np.allclose(np.asarray(g)[2], 3.0)
+    assert np.allclose(np.asarray(g)[0], 0.0)
+
+
+def test_rmsnorm_unit_output():
+    x = jnp.asarray(np.random.default_rng(5).standard_normal((64, 128)) * 37.0, jnp.float32)
+    y = ops.rmsnorm(x)
+    rms_rows = np.sqrt(np.mean(np.square(np.asarray(y)), axis=-1))
+    assert np.allclose(rms_rows, 1.0, atol=1e-3)
+    # 0-homogeneous: scaling the input leaves the output unchanged
+    y2 = ops.rmsnorm(x * 1000.0)
+    assert np.allclose(np.asarray(y), np.asarray(y2), atol=1e-4)
+
+
+def test_rope_is_isometry():
+    x = jnp.asarray(np.random.default_rng(6).standard_normal((2, 16, 4, 8)), jnp.float32)
+    y = ops.rope(x)
+    # pairwise rotations preserve per-position norms
+    n_in = np.linalg.norm(np.asarray(x), axis=-1)
+    n_out = np.linalg.norm(np.asarray(y), axis=-1)
+    assert np.allclose(n_in, n_out, rtol=1e-5)
+    # position 0 is unrotated
+    assert np.allclose(np.asarray(y)[:, 0], np.asarray(x)[:, 0], atol=1e-6)
+
+
+def test_attention_causal():
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.standard_normal((1, 8, 2, 4)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 8, 2, 4)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 8, 2, 4)), jnp.float32)
+    out = ops.attention(q, k, v, jnp.float32(0.25), jnp.float32(1.0))
+    # changing future keys/values must not change earlier outputs
+    k2 = k.at[:, 5:].set(0.0)
+    v2 = v.at[:, 5:].set(99.0)
+    out2 = ops.attention(q, k2, v2, jnp.float32(0.25), jnp.float32(1.0))
+    assert np.allclose(np.asarray(out)[:, :5], np.asarray(out2)[:, :5], rtol=1e-5)
+    assert not np.allclose(np.asarray(out)[:, 6:], np.asarray(out2)[:, 6:])
+
+
+def test_softmax_xent_matches_plain_ce():
+    rng = np.random.default_rng(8)
+    logits = jnp.asarray(rng.standard_normal((3, 5, 11)), jnp.float32)
+    tgt = jnp.asarray(rng.integers(0, 11, (3, 5)), jnp.int32)
+    loss = ops.softmax_xent(logits, tgt, jnp.float32(1.0), jnp.float32(1.0))
+    lp = jax.nn.log_softmax(np.asarray(logits), axis=-1)
+    expect = -np.mean([lp[i, j, tgt[i, j]] for i in range(3) for j in range(5)])
+    assert np.allclose(float(loss), expect, rtol=1e-5)
+
+
+def test_softmax_xent_beta_scales_grad_only():
+    rng = np.random.default_rng(9)
+    logits = jnp.asarray(rng.standard_normal((2, 3, 7)), jnp.float32)
+    tgt = jnp.asarray(rng.integers(0, 7, (2, 3)), jnp.int32)
+
+    def f(beta):
+        return jax.grad(
+            lambda z: ops.softmax_xent(z, tgt, jnp.float32(1.0), jnp.float32(beta))
+        )(logits)
+
+    g1, g4 = f(1.0), f(4.0)
+    assert np.allclose(np.asarray(g4), 4.0 * np.asarray(g1), rtol=1e-5)
+    # loss value itself unaffected by beta
+    l1 = ops.softmax_xent(logits, tgt, jnp.float32(1.0), jnp.float32(1.0))
+    l4 = ops.softmax_xent(logits, tgt, jnp.float32(1.0), jnp.float32(4.0))
+    assert np.allclose(float(l1), float(l4))
+
+
+def test_residual_add_is_linear_mix():
+    a, b = jnp.float32(0.6), jnp.float32(0.8)
+    x = jnp.asarray([1.0, 2.0], jnp.float32)
+    y = jnp.asarray([10.0, 20.0], jnp.float32)
+    out = ops.residual_add(x, y, a, b)
+    assert np.allclose(np.asarray(out), [0.6 * 1 + 0.8 * 10, 0.6 * 2 + 0.8 * 20])
+
+
+@pytest.mark.parametrize("alpha,lo,hi", [(1e-6, 1.9, 2.1), (1e6, 1.39, 1.45)])
+def test_gated_silu_empirical_scale_model(alpha, lo, hi):
+    """The Rust-side scale model (Table 8) must match the op's actual
+    output std under unit-Gaussian inputs at the extremes."""
+    rng = np.random.default_rng(10)
+    x_in = jnp.asarray(rng.standard_normal(200_000), jnp.float32)
+    x_gate = jnp.asarray(rng.standard_normal(200_000), jnp.float32)
+    y = ops.gated_silu(x_in, x_gate, jnp.float32(alpha), jnp.float32(1.0))
+    mult = 1.0 / float(jnp.std(y))
+    assert lo < mult < hi, mult

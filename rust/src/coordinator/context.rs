@@ -1,0 +1,83 @@
+//! Shared experiment context: artifact registry, corpus cache, output
+//! directory, and the quick/full switch.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::data::{Corpus, CorpusConfig};
+use crate::runtime::Registry;
+
+pub struct ExpContext {
+    pub registry: Registry,
+    pub out_dir: PathBuf,
+    /// Reduced steps/grids — used by integration tests and smoke runs.
+    pub quick: bool,
+    pub workers: usize,
+    pub seed: u64,
+    corpora: Mutex<HashMap<usize, &'static Corpus>>,
+}
+
+impl ExpContext {
+    pub fn new(artifacts: &str, out_dir: &str, quick: bool, workers: usize) -> Result<Self> {
+        Ok(ExpContext {
+            registry: Registry::open(std::path::Path::new(artifacts))?,
+            out_dir: PathBuf::from(out_dir),
+            quick,
+            workers,
+            seed: 1234,
+            corpora: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Corpus for a vocab size, generated once and leaked for 'static
+    /// borrows across scoped worker threads (a handful of corpora per
+    /// process; bounded).
+    pub fn corpus(&self, vocab: usize) -> &'static Corpus {
+        let mut map = self.corpora.lock().unwrap();
+        if let Some(c) = map.get(&vocab) {
+            return c;
+        }
+        let n_tokens = if self.quick { 200_000 } else { 2_000_000 };
+        let c = Box::leak(Box::new(Corpus::generate(CorpusConfig {
+            vocab,
+            n_tokens,
+            seed: self.seed,
+            ..Default::default()
+        })));
+        map.insert(vocab, c);
+        c
+    }
+
+    /// A *shrunken* corpus emulating the TP5 overfitting regime (Fig 2a).
+    pub fn tiny_corpus(&self, vocab: usize, fraction: f64) -> Corpus {
+        let n_tokens = ((if self.quick { 200_000.0 } else { 2_000_000.0 }) * fraction) as usize;
+        Corpus::generate(CorpusConfig {
+            vocab,
+            n_tokens: n_tokens.max(20_000),
+            seed: self.seed,
+            ..Default::default()
+        })
+    }
+
+    /// Steps for a standard run, honoring quick mode and the
+    /// UMUP_STEP_SCALE env knob (single-core testbeds set e.g. 0.5).
+    pub fn steps(&self, full: u64) -> u64 {
+        if self.quick {
+            return (full / 10).max(8);
+        }
+        let scale: f64 = std::env::var("UMUP_STEP_SCALE")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1.0);
+        ((full as f64 * scale) as u64).max(16)
+    }
+
+    pub fn exp_dir(&self, id: &str) -> PathBuf {
+        let d = self.out_dir.join(id);
+        let _ = std::fs::create_dir_all(&d);
+        d
+    }
+}

@@ -1,0 +1,104 @@
+//! Shared experiment plumbing: LR sweeps, grid helpers, proto configs.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::ExpContext;
+use crate::data::Corpus;
+use crate::parametrization::{HpSet, Parametrization, Precision, Scheme};
+use crate::runtime::Manifest;
+use crate::sweep::{run_all_parallel, SweepJob, SweepResult};
+use crate::train::{AdamConfig, RunConfig, Schedule};
+use crate::util::stats;
+
+/// Default proxy width used throughout (the paper's 256 scaled down).
+pub const PROXY_WIDTH: usize = 64;
+
+/// LR grids per scheme (log2, coarse 2^1 steps for transfer plots).
+pub fn lr_grid(scheme: Scheme, fine: bool) -> Vec<f64> {
+    let (lo, hi) = match scheme {
+        Scheme::Umup => (-4.0, 0.0),
+        _ => (-10.0, -6.0),
+    };
+    let step = if fine { 0.5 } else { 1.0 };
+    let mut v = Vec::new();
+    let mut x = lo;
+    while x <= hi + 1e-9 {
+        v.push(2f64.powf(x));
+        x += step;
+    }
+    v
+}
+
+/// A standard run prototype for a scheme at some artifact + step count.
+pub fn proto(ctx: &ExpContext, scheme: Scheme, steps: u64) -> RunConfig {
+    let steps = ctx.steps(steps);
+    let mut p = Parametrization::new(scheme);
+    p.base_width = PROXY_WIDTH;
+    RunConfig {
+        label: scheme.name().to_string(),
+        parametrization: p,
+        hp: HpSet::default(),
+        precision: Precision::Fp32,
+        schedule: Schedule::standard(1.0, steps, (steps / 4).max(1)),
+        adam: AdamConfig::default(),
+        seed: 7,
+        log_every: (steps / 16).max(1),
+        valid_batches: 4,
+        rms_sites: Vec::new(),
+        lr_tweaks: Vec::new(),
+    }
+}
+
+/// Run an LR line for `proto` on a manifest; returns (eta, loss) points.
+pub fn lr_line(
+    ctx: &ExpContext,
+    man: Arc<Manifest>,
+    corpus: &Corpus,
+    proto: &RunConfig,
+    grid: &[f64],
+) -> Result<Vec<(f64, f64)>> {
+    let jobs: Vec<SweepJob> = grid
+        .iter()
+        .enumerate()
+        .map(|(i, &eta)| {
+            let mut cfg = proto.clone();
+            cfg.hp.eta = eta;
+            cfg.schedule.peak_lr = eta;
+            cfg.label = format!("{}-lr{i:02}", proto.label);
+            SweepJob { config: cfg, tag: vec![("eta".into(), eta)] }
+        })
+        .collect();
+    let res = run_all_parallel(man, corpus, &jobs, ctx.workers)?;
+    Ok(res.iter().map(|r| (r.job.tag[0].1, r.record.objective())).collect())
+}
+
+/// Best (x, loss) of a line.
+pub fn best_point(line: &[(f64, f64)]) -> (f64, f64) {
+    let i = stats::argmin(&line.iter().map(|p| p.1).collect::<Vec<_>>());
+    line[i]
+}
+
+/// Render a line as a plot series.
+pub fn to_series(label: impl Into<String>, line: &[(f64, f64)]) -> crate::util::plot::Series {
+    let mut s = crate::util::plot::Series::new(label);
+    for &(x, y) in line {
+        if y.is_finite() {
+            s.push(x, y);
+        }
+    }
+    s
+}
+
+/// Run a single config and return the record.
+pub fn single(
+    ctx: &ExpContext,
+    man: Arc<Manifest>,
+    corpus: &Corpus,
+    cfg: RunConfig,
+) -> Result<SweepResult> {
+    let mut res = run_all_parallel(man, corpus, &[SweepJob { config: cfg, tag: vec![] }], 1)?;
+    let _ = ctx;
+    Ok(res.pop().unwrap())
+}

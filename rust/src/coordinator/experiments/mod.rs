@@ -1,0 +1,81 @@
+//! Experiment registry: one entry per reproduced figure/table
+//! (DESIGN.md §5 maps each to the paper).
+
+use anyhow::{bail, Result};
+
+use super::ExpContext;
+
+mod precision;
+mod search;
+mod stability;
+mod transfer;
+
+pub(crate) mod helpers;
+
+/// (id, paper artifact, description)
+pub const EXPERIMENTS: &[(&str, &str, &str)] = &[
+    ("fig1a", "Figure 1(a)", "random vs independent HP search efficiency"),
+    ("fig1b", "Figure 1(b)", "LR transfer across width, muP vs u-muP"),
+    ("fig1c", "Figure 1(c)", "out-of-the-box FP8 cast training"),
+    ("fig2", "Figure 2", "muTransfer across training setups + stability fixes"),
+    ("fig3", "Figure 3", "embedding LR rule: constant vs 1/sqrt(fan-out)"),
+    ("fig4", "Figure 4 (+14/15)", "HP interdependence: pair grids + transfer error"),
+    ("fig5", "Figure 5", "LR transfer over steps / batch size / depth"),
+    ("fig6", "Figure 6", "per-tensor RMS at init and end vs FP8 ranges"),
+    ("fig7", "Figure 7 + Table 4", "larger-scale: u-muP FP8 vs BF16 vs SP + probes"),
+    ("fig13", "Figure 13", "per-tensor LR multipliers around the global optimum"),
+    ("fig17", "Figure 17", "non-LR HP transfer across width"),
+    ("fig19", "Figure 19", "RMS during training for matmul inputs"),
+    ("fig20", "Figure 20", "end-RMS of critical tensors vs LR/width/depth/steps/batch"),
+    ("fig25", "Figure 25 / App. L", "attention-output RMS growth with depth at init"),
+    ("tab12", "Table 12", "number-format table from the Rust codecs"),
+];
+
+pub fn list_experiments() -> String {
+    let mut s = String::from("id       paper artifact        description\n");
+    for (id, art, desc) in EXPERIMENTS {
+        s.push_str(&format!("{id:8} {art:22} {desc}\n"));
+    }
+    s
+}
+
+pub fn run_experiment(ctx: &ExpContext, id: &str) -> Result<String> {
+    // comma-separated list: run in one process to share corpus caches
+    if id.contains(',') {
+        let mut out = String::new();
+        for part in id.split(',') {
+            println!("=== running {part} ===");
+            out.push_str(&run_experiment(ctx, part.trim())?);
+            out.push('\n');
+        }
+        return Ok(out);
+    }
+    let md = match id {
+        "fig1a" => search::fig1a(ctx)?,
+        "fig1b" => transfer::fig1b(ctx)?,
+        "fig1c" => precision::fig1c(ctx)?,
+        "fig2" => stability::fig2(ctx)?,
+        "fig3" => transfer::fig3(ctx)?,
+        "fig4" => search::fig4(ctx)?,
+        "fig5" => transfer::fig5(ctx)?,
+        "fig6" => precision::fig6(ctx)?,
+        "fig7" => precision::fig7(ctx)?,
+        "fig13" => search::fig13(ctx)?,
+        "fig17" => transfer::fig17(ctx)?,
+        "fig19" => precision::fig19(ctx)?,
+        "fig20" => precision::fig20(ctx)?,
+        "fig25" => stability::fig25(ctx)?,
+        "tab12" => precision::tab12(ctx)?,
+        "all" => {
+            let mut out = String::new();
+            for (id, _, _) in EXPERIMENTS {
+                println!("=== running {id} ===");
+                out.push_str(&run_experiment(ctx, id)?);
+                out.push('\n');
+            }
+            out
+        }
+        _ => bail!("unknown experiment {id:?}; `repro exp list` to enumerate"),
+    };
+    Ok(md)
+}

@@ -1,0 +1,310 @@
+//! Numerics experiments: Fig 1(c), Fig 6, Fig 7 + Table 4, Fig 19,
+//! Fig 20, Table 12.
+
+use anyhow::Result;
+
+use crate::coordinator::{ExpContext, Report};
+use crate::data::probe_suite;
+use crate::formats::{format_table_markdown, E4M3, E5M2};
+use crate::parametrization::{Precision, Scheme};
+use crate::util::plot::Series;
+
+use super::helpers::*;
+
+/// Fig 1(c): naive `.to(float8)` cast training. u-μP trains with minimal
+/// degradation; SP/μP under the same cast degrade or diverge.
+pub fn fig1c(ctx: &ExpContext) -> Result<String> {
+    let mut report = Report::new("fig1c", "out-of-the-box FP8 cast training");
+    let dir = ctx.exp_dir("fig1c");
+    let man = ctx.registry.find(PROXY_WIDTH, 4, 16)?;
+    let corpus = ctx.corpus(man.spec.vocab);
+    let mut series = Vec::new();
+    let mut rows = Vec::new();
+    for (scheme, eta) in [
+        (Scheme::Umup, 2f64.powf(-1.0)),
+        (Scheme::Mup, 2f64.powf(-8.0)),
+        (Scheme::Sp, 2f64.powf(-8.0)),
+    ] {
+        for precision in [Precision::Fp32, Precision::Fp8Naive] {
+            let mut cfg = proto(ctx, scheme, 384);
+            cfg.hp.eta = eta;
+            cfg.schedule.peak_lr = eta;
+            cfg.precision = precision;
+            cfg.label = format!("{}-{}", scheme.name(), precision.name());
+            let res = single(ctx, man.clone(), corpus, cfg)?;
+            let mut s = Series::new(format!("{} {}", scheme.name(), precision.name()));
+            for &(t, l) in &res.record.train_curve {
+                s.push(t as f64, l.min(12.0));
+            }
+            rows.push(vec![
+                scheme.name().into(),
+                precision.name().into(),
+                format!("{:.4}", res.record.final_valid_loss),
+                res.record.diverged.to_string(),
+            ]);
+            series.push(s);
+        }
+    }
+    report.figure(&dir, "train_curves", &series, false)?;
+    // degradation = fp8 loss - fp32 loss per scheme
+    report.table(&["scheme", "precision", "final valid loss", "diverged"], &rows);
+    report.para(
+        "Paper claim: u-μP FP8-vs-FP32 degradation is minimal; the same cast \
+         hurts (or destabilizes) SP and μP because their tensors sit far from \
+         unit scale.",
+    );
+    report.finish(&dir)
+}
+
+/// Fig 6: per-tensor RMS at init and after training vs the E4M3/E5M2
+/// ranges.
+pub fn fig6(ctx: &ExpContext) -> Result<String> {
+    let mut report = Report::new("fig6", "per-tensor RMS vs FP8 ranges");
+    let dir = ctx.exp_dir("fig6");
+    let man = ctx.registry.find(PROXY_WIDTH, 4, 16)?;
+    let corpus = ctx.corpus(man.spec.vocab);
+    let mut rows = Vec::new();
+    let mut summary = Vec::new();
+    for (scheme, eta) in [(Scheme::Umup, 2f64.powf(-1.0)), (Scheme::Mup, 2f64.powf(-8.0))] {
+        let session = std::sync::Arc::new(crate::runtime::Session::open(man.clone())?);
+        let runner = crate::train::Runner::new(session);
+        let mut cfg = proto(ctx, scheme, 384);
+        cfg.hp.eta = eta;
+        cfg.schedule.peak_lr = eta;
+        let (_, init_rms) = runner.eval_at_init(&cfg, corpus)?;
+        let rec = runner.run(&cfg, corpus)?;
+        let end: std::collections::BTreeMap<_, _> = rec.final_rms.iter().cloned().collect();
+        let mut n_in_range_init = 0usize;
+        let mut n_in_range_end = 0usize;
+        let mut n = 0usize;
+        for (name, rms0) in &init_rms {
+            if name.starts_with("g.") {
+                continue; // grads are zero in the init eval pass
+            }
+            let rms1 = end.get(name).copied().unwrap_or(f64::NAN);
+            let inr = |r: f64| r >= E4M3.min_normal() && r <= E4M3.max_value();
+            n += 1;
+            n_in_range_init += inr(*rms0) as usize;
+            n_in_range_end += inr(rms1) as usize;
+            rows.push(vec![
+                scheme.name().into(),
+                name.clone(),
+                format!("{rms0:.4e}"),
+                format!("{rms1:.4e}"),
+            ]);
+        }
+        summary.push(vec![
+            scheme.name().into(),
+            format!("{n_in_range_init}/{n}"),
+            format!("{n_in_range_end}/{n}"),
+        ]);
+    }
+    report.kv("E4M3 comfortable range", format!("[{:.3e}, {:.0}]", E4M3.min_normal(), E4M3.max_value()));
+    report.kv("E5M2 min normal", format!("{:.3e}", E5M2.min_normal()));
+    report.table(&["scheme", "tensors with RMS in E4M3 normal range (init)", "(end)"], &summary);
+    crate::util::plot::write_table(
+        &dir.join("rms_per_tensor.csv"),
+        &["scheme", "site", "rms_init", "rms_end"],
+        &rows,
+    )?;
+    report.para(
+        "Paper claim: u-μP tensors start at RMS ≈ 1 and stay within E4M3 range; \
+         μP weights/grads sit orders of magnitude lower (underflow risk).",
+    );
+    report.finish(&dir)
+}
+
+/// Fig 7 + Table 4: the scaled-down "large" run: u-μP FP8(paper scheme)
+/// vs u-μP high-precision vs SP, plus downstream probes.
+pub fn fig7(ctx: &ExpContext) -> Result<String> {
+    let mut report = Report::new("fig7", "target-scale runs + downstream probes (Table 4)");
+    let dir = ctx.exp_dir("fig7");
+    let width = if ctx.quick { 64 } else { 128 };
+    let man = ctx.registry.find(width, 4, 16)?;
+    let corpus = ctx.corpus(man.spec.vocab);
+    let steps = 384;
+    let cases = [
+        ("u-muP bf16", Scheme::Umup, Precision::Fp32, 2f64.powf(-1.0)),
+        ("u-muP fp8", Scheme::Umup, Precision::Fp8Paper, 2f64.powf(-1.0)),
+        ("SP bf16", Scheme::Sp, Precision::Fp32, 2f64.powf(-8.0) * 64.0 / width as f64),
+    ];
+    let mut series = Vec::new();
+    let mut rows = Vec::new();
+    for (label, scheme, precision, eta) in cases {
+        let session = std::sync::Arc::new(crate::runtime::Session::open(man.clone())?);
+        let runner = crate::train::Runner::new(session);
+        let mut cfg = proto(ctx, scheme, steps);
+        cfg.hp.eta = eta;
+        cfg.schedule.peak_lr = eta;
+        cfg.precision = precision;
+        cfg.label = label.into();
+        let (rec, ts) = runner.run_full(&cfg, corpus)?;
+        let mut s = Series::new(label);
+        for &(t, l) in &rec.train_curve {
+            s.push(t as f64, l);
+        }
+        series.push(s);
+        // Table 4 substitute: held-out perplexity probes on the trained
+        // model — in-domain, shifted-chain, high-entropy (DESIGN.md §4)
+        let probes = probe_suite(&corpus.config, 60_000);
+        let mut probe_cells = vec![label.to_string(), format!("{:.4}", rec.final_valid_loss)];
+        for (_, pc) in &probes {
+            let loss = runner.eval_on(&ts, pc, 4)?;
+            probe_cells.push(format!("{:.3}", loss.exp())); // perplexity
+        }
+        rows.push(probe_cells);
+    }
+    report.figure(&dir, "loss_curves", &series, false)?;
+    report.table(&["run", "valid loss", "in-domain", "shifted-chain", "high-entropy"], &rows);
+    report.para(
+        "Paper claim (Fig 7/Table 4): FP8 curves track BF16 with no significant \
+         degradation; u-μP is competitive with SP downstream.",
+    );
+    report.finish(&dir)
+}
+
+/// Fig 19: RMS during training for matmul inputs/weights/grads.
+pub fn fig19(ctx: &ExpContext) -> Result<String> {
+    let mut report = Report::new("fig19", "RMS during training (matmul inputs)");
+    let dir = ctx.exp_dir("fig19");
+    let man = ctx.registry.find(PROXY_WIDTH, 4, 16)?;
+    let corpus = ctx.corpus(man.spec.vocab);
+    let last = man.spec.depth - 1;
+    let sites = vec![
+        format!("act.l{last}.o_in"),
+        format!("act.l{last}.down_in"),
+        format!("act.l{last}.qkv_in"),
+        "act.head_in".to_string(),
+        "w.head".to_string(),
+        format!("g.l{last}.ffn.down"),
+        format!("w.l{last}.ffn.down"),
+    ];
+    let mut all_series = Vec::new();
+    let mut rows = Vec::new();
+    for (scheme, eta) in [(Scheme::Umup, 2f64.powf(-1.0)), (Scheme::Mup, 2f64.powf(-8.0))] {
+        let mut cfg = proto(ctx, scheme, 384);
+        cfg.hp.eta = eta;
+        cfg.schedule.peak_lr = eta;
+        cfg.rms_sites = sites.clone();
+        let res = single(ctx, man.clone(), corpus, cfg)?;
+        for (site, curve) in &res.record.rms_curves {
+            let mut s = Series::new(format!("{} {}", scheme.name(), site));
+            for &(t, r) in curve {
+                s.push(t as f64, r.max(1e-12).log2());
+            }
+            let growth = curve.last().unwrap().1 / curve.first().unwrap().1.max(1e-12);
+            rows.push(vec![
+                scheme.name().into(),
+                site.clone(),
+                format!("{:.3e}", curve.first().unwrap().1),
+                format!("{:.3e}", curve.last().unwrap().1),
+                format!("{growth:.2}x"),
+            ]);
+            all_series.push(s);
+        }
+    }
+    report.figure(&dir, "rms_curves_log2", &all_series, false)?;
+    report.table(&["scheme", "site", "rms start", "rms end", "growth"], &rows);
+    report.para(
+        "Paper claim: u-μP starts at RMS ≈ 1 everywhere; the critical tensors \
+         (attn out-proj input, FFN down input, decoder weight) grow during \
+         training while norm-guarded inputs stay flat.",
+    );
+    report.finish(&dir)
+}
+
+/// Fig 20: end-of-training RMS of critical tensors vs LR, width, depth,
+/// steps, batch size.
+pub fn fig20(ctx: &ExpContext) -> Result<String> {
+    let mut report = Report::new("fig20", "end-RMS of critical tensors vs HPs");
+    let dir = ctx.exp_dir("fig20");
+    let base_steps = 256;
+    let crit = |man: &crate::runtime::Manifest| {
+        let last = man.spec.depth - 1;
+        vec!["w.head".to_string(), format!("act.l{last}.down_in"), format!("g.l{last}.ffn.down")]
+    };
+    let mut series: Vec<Series> = Vec::new();
+    let mut rows = Vec::new();
+    let record = |axis: &str,
+                      x: f64,
+                      rec: &crate::train::RunRecord,
+                      names: &[String],
+                      series: &mut Vec<Series>,
+                      rows: &mut Vec<Vec<String>>| {
+        let final_rms: std::collections::BTreeMap<_, _> = rec.final_rms.iter().cloned().collect();
+        for name in names {
+            let v = final_rms.get(name).copied().unwrap_or(f64::NAN);
+            let label = format!("{axis}:{name}");
+            if let Some(s) = series.iter_mut().find(|s| s.label == label) {
+                s.push(x, v);
+            } else {
+                let mut s = Series::new(label);
+                s.push(x, v);
+                series.push(s);
+            }
+            rows.push(vec![axis.into(), x.to_string(), name.clone(), format!("{v:.4e}")]);
+        }
+    };
+
+    // LR axis
+    let man = ctx.registry.find(PROXY_WIDTH, 4, 16)?;
+    let corpus = ctx.corpus(man.spec.vocab);
+    for &lg in &[-3.0, -2.0, -1.0, 0.0, 1.0] {
+        let mut cfg = proto(ctx, Scheme::Umup, base_steps);
+        cfg.hp.eta = 2f64.powf(lg);
+        cfg.schedule.peak_lr = cfg.hp.eta;
+        let rec = single(ctx, man.clone(), corpus, cfg)?;
+        record("lr", 2f64.powf(lg), &rec.record, &crit(&man), &mut series, &mut rows);
+    }
+    // width axis
+    for &w in &[32usize, 64, 128] {
+        let man = ctx.registry.find(w, 4, 16)?;
+        let mut cfg = proto(ctx, Scheme::Umup, base_steps);
+        cfg.hp.eta = 0.5;
+        cfg.schedule.peak_lr = 0.5;
+        let rec = single(ctx, man.clone(), ctx.corpus(man.spec.vocab), cfg)?;
+        record("width", w as f64, &rec.record, &crit(&man), &mut series, &mut rows);
+    }
+    // depth axis
+    for &d in &[2usize, 4, 8] {
+        let man = ctx.registry.find(PROXY_WIDTH, d, 16)?;
+        let mut cfg = proto(ctx, Scheme::Umup, base_steps);
+        cfg.hp.eta = 0.5;
+        cfg.schedule.peak_lr = 0.5;
+        let rec = single(ctx, man.clone(), ctx.corpus(man.spec.vocab), cfg)?;
+        record("depth", d as f64, &rec.record, &crit(&man), &mut series, &mut rows);
+    }
+    // steps axis
+    for &st in &[128u64, 256, 512] {
+        let mut cfg = proto(ctx, Scheme::Umup, st);
+        cfg.hp.eta = 0.5;
+        cfg.schedule.peak_lr = 0.5;
+        let rec = single(ctx, man.clone(), corpus, cfg)?;
+        record("steps", st as f64, &rec.record, &crit(&man), &mut series, &mut rows);
+    }
+    // batch axis
+    for &b in &[8usize, 16, 32] {
+        let man = ctx.registry.find(PROXY_WIDTH, 4, b)?;
+        let mut cfg = proto(ctx, Scheme::Umup, base_steps);
+        cfg.hp.eta = 0.5;
+        cfg.schedule.peak_lr = 0.5;
+        let rec = single(ctx, man.clone(), ctx.corpus(man.spec.vocab), cfg)?;
+        record("batch", b as f64, &rec.record, &crit(&man), &mut series, &mut rows);
+    }
+    crate::util::plot::write_table(&dir.join("end_rms.csv"), &["axis", "x", "site", "rms"], &rows)?;
+    report.figure(&dir, "end_rms", &series, true)?;
+    report.para(
+        "Paper claim: only the learning rate substantially moves end-training \
+         RMS of the critical tensors; width/depth/steps/batch leave it stable.",
+    );
+    report.finish(&dir)
+}
+
+/// Table 12: generated from the Rust codecs.
+pub fn tab12(ctx: &ExpContext) -> Result<String> {
+    let mut report = Report::new("tab12", "deep-learning number formats (from the codecs)");
+    let dir = ctx.exp_dir("tab12");
+    report.para(&format_table_markdown());
+    report.para("Matches paper Table 12 (unit tests pin every cell).");
+    report.finish(&dir)
+}

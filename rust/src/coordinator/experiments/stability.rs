@@ -1,0 +1,104 @@
+//! Stability experiments: Fig 2 (setups + fixes) and Fig 25 (App. L).
+
+use anyhow::Result;
+
+use crate::coordinator::{ExpContext, Report};
+use crate::parametrization::{plain_prenorm_skip_rms, Scheme, SetupFlavor};
+use crate::train::RunConfig;
+use crate::util::plot::Series;
+
+use super::helpers::*;
+
+/// Fig 2: μTransfer holds in the TP5 setup, breaks in the standard Llama
+/// setup, and is restored by non-parametric norms + independent WD.
+pub fn fig2(ctx: &ExpContext) -> Result<String> {
+    let widths: &[usize] = if ctx.quick { &[32, 64] } else { &[32, 64, 128] };
+    let mut report = Report::new("fig2", "muTransfer across training setups");
+    let dir = ctx.exp_dir("fig2");
+    let mut rows = Vec::new();
+    for flavor in [
+        SetupFlavor::TensorPrograms5,
+        SetupFlavor::LlamaStandard,
+        SetupFlavor::LlamaFixed,
+    ] {
+        let mut series = Vec::new();
+        let mut opts = Vec::new();
+        for &w in widths {
+            let man =
+                ctx.registry.find_opt(w, 4, 16, flavor.trainable_norms())?;
+            let steps = ctx.steps(256);
+            let mut p: RunConfig = proto(ctx, Scheme::Mup, 256);
+            p.adam = flavor.adam();
+            p.schedule = flavor.schedule(1.0, steps, (steps / 4).max(1));
+            p.label = format!("fig2-{}-w{w}", flavor.name());
+            // TP5's overfitting regime: tiny repeated corpus
+            let vocab = man.spec.vocab;
+            let line = if flavor.corpus_fraction() < 1.0 {
+                let tiny = ctx.tiny_corpus(vocab, flavor.corpus_fraction());
+                lr_line(ctx, man, &tiny, &p, &lr_grid(Scheme::Mup, false))?
+            } else {
+                lr_line(ctx, man, ctx.corpus(vocab), &p, &lr_grid(Scheme::Mup, false))?
+            };
+            let (opt_lr, opt_loss) = best_point(&line);
+            opts.push((w, opt_lr));
+            series.push(to_series(format!("w{w}"), &line));
+            rows.push(vec![
+                flavor.name().into(),
+                w.to_string(),
+                format!("{:.2}", opt_lr.log2()),
+                format!("{opt_loss:.4}"),
+            ]);
+        }
+        report.figure(&dir, &format!("lr_sweep_{}", flavor.name()), &series, true)?;
+        let drift = (opts.last().unwrap().1 / opts[0].1).log2().abs();
+        report.kv(&format!("{} optimum drift |log2|", flavor.name()), format!("{drift:.2}"));
+    }
+    report.table(&["setup", "width", "log2 opt LR", "best loss"], &rows);
+    report.para(
+        "Paper claim: transfer looks good in the (a) TP5 setup, degrades in \
+         (b) the standard Llama setup, and is restored in (c) with \
+         non-parametric norms + independent weight decay.",
+    );
+    report.finish(&dir)
+}
+
+/// Fig 25 / Appendix L: attention-output RMS grows with depth at
+/// initialization (causal uniform attention ≈ running mean induces
+/// correlation), while norm-guarded inputs stay unit.
+pub fn fig25(ctx: &ExpContext) -> Result<String> {
+    let mut report = Report::new("fig25", "attention-output RMS growth with depth at init");
+    let dir = ctx.exp_dir("fig25");
+    let man = ctx.registry.find(PROXY_WIDTH, 8, 16)?;
+    let corpus = ctx.corpus(man.spec.vocab);
+    let session = std::sync::Arc::new(crate::runtime::Session::open(man.clone())?);
+    let runner = crate::train::Runner::new(session);
+    let cfg = proto(ctx, Scheme::Umup, 8);
+    let (_, rms) = runner.eval_at_init(&cfg, corpus)?;
+    let get = |name: &str| {
+        rms.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap_or(f64::NAN)
+    };
+    let mut s_attn = Series::new("attn raw output RMS");
+    let mut s_skip = Series::new("skip stream RMS");
+    let mut s_qkv = Series::new("qkv input RMS (post-norm)");
+    let mut rows = Vec::new();
+    for l in 0..man.spec.depth {
+        let a = get(&format!("attn_out.l{l}.raw"));
+        let k = get(&format!("skip.l{l}.post"));
+        let q = get(&format!("act.l{l}.qkv_in"));
+        s_attn.push(l as f64, a);
+        s_skip.push(l as f64, k);
+        s_qkv.push(l as f64, q);
+        rows.push(vec![l.to_string(), format!("{a:.3}"), format!("{k:.3}"), format!("{q:.3}")]);
+    }
+    report.figure(&dir, "rms_by_layer", &[s_attn, s_skip, s_qkv], false)?;
+    report.table(&["layer", "attn out RMS", "skip RMS", "qkv in RMS"], &rows);
+    // analytic reference from Appendix F (plain pre-norm growth)
+    let analytic = plain_prenorm_skip_rms(man.spec.depth, 1.0, 1.0 / (man.spec.depth as f64).sqrt());
+    report.kv("plain pre-norm skip RMS (Eq. 9 analytic, for contrast)", format!("{analytic:.3}"));
+    report.para(
+        "Paper claim (App. L): attention outputs after layer 0 exceed unit RMS \
+         (correlation from near-uniform causal attention) while the norm-guarded \
+         qkv inputs remain at 1; the u-μP residual keeps the skip stream near 1.",
+    );
+    report.finish(&dir)
+}

@@ -1,0 +1,11 @@
+//! S11 — experiment coordinator: one registered experiment per paper
+//! figure/table, a context carrying the registry/corpus/output dir, and
+//! report rendering into `results/` + EXPERIMENTS.md fragments.
+
+mod context;
+mod experiments;
+mod report;
+
+pub use context::ExpContext;
+pub use experiments::{list_experiments, run_experiment};
+pub use report::Report;

@@ -1,0 +1,71 @@
+//! Report rendering: each experiment emits a markdown fragment with its
+//! measured numbers, CSVs, and an ASCII rendering of the figure shape.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::plot::{ascii_plot, write_csv, Series};
+
+pub struct Report {
+    pub id: String,
+    md: String,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str) -> Report {
+        let mut md = String::new();
+        let _ = writeln!(md, "## {id} — {title}\n");
+        Report { id: id.to_string(), md }
+    }
+
+    pub fn para(&mut self, text: &str) {
+        let _ = writeln!(self.md, "{text}\n");
+    }
+
+    pub fn kv(&mut self, key: &str, value: impl std::fmt::Display) {
+        let _ = writeln!(self.md, "- **{key}**: {value}");
+    }
+
+    pub fn table(&mut self, header: &[&str], rows: &[Vec<String>]) {
+        let _ = writeln!(self.md, "\n| {} |", header.join(" | "));
+        let _ = writeln!(self.md, "|{}|", vec!["---"; header.len()].join("|"));
+        for r in rows {
+            let _ = writeln!(self.md, "| {} |", r.join(" | "));
+        }
+        let _ = writeln!(self.md);
+    }
+
+    /// Attach series: writes the CSV next to the report and inlines an
+    /// ASCII plot of the figure shape.
+    pub fn figure(&mut self, dir: &Path, name: &str, series: &[Series], log_x: bool) -> Result<()> {
+        write_csv(&dir.join(format!("{name}.csv")), series)?;
+        let _ = writeln!(self.md, "`{name}.csv`\n");
+        let _ = writeln!(self.md, "```\n{}```\n", ascii_plot(series, 68, 14, log_x));
+        Ok(())
+    }
+
+    pub fn finish(self, dir: &Path) -> Result<String> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join("summary.md"), &self.md)?;
+        Ok(self.md)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_markdown() {
+        let mut r = Report::new("figX", "test");
+        r.kv("metric", 1.25);
+        r.table(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        let dir = std::env::temp_dir().join("umup_report_test");
+        let md = r.finish(&dir).unwrap();
+        assert!(md.contains("## figX"));
+        assert!(md.contains("| a | b |"));
+        assert!(dir.join("summary.md").exists());
+    }
+}

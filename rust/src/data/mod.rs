@@ -1,0 +1,15 @@
+//! S8 — data substrate: synthetic corpus, batching, downstream probes.
+//!
+//! WikiText-103 / SlimPajama substitute (DESIGN.md §4): a deterministic
+//! Zipf–Markov language source whose unigram distribution is Zipfian and
+//! whose bigram structure is a sparse random Markov chain — low enough
+//! entropy to be learnable, high enough that loss curves are non-trivial,
+//! with exact train/valid splits and an under-fitting regime.
+
+mod batch;
+mod corpus;
+mod probes;
+
+pub use batch::BatchSampler;
+pub use corpus::{Corpus, CorpusConfig};
+pub use probes::{probe_suite, ProbeResult};

@@ -1,0 +1,61 @@
+//! Downstream probes — the Table 4 substitute (DESIGN.md §4).
+//!
+//! At this scale 0-shot MMLU/HellaSwag are meaningless, so the probe
+//! suite measures the same *claim* (trained u-μP FP8 ≈ BF16 ≈ SP quality
+//! parity) with held-out perplexity under distribution shift: each probe
+//! is a fresh Zipf–Markov source at increasing distance from the training
+//! distribution (same chain, new chain, higher entropy).
+
+use super::{Corpus, CorpusConfig};
+
+#[derive(Debug, Clone)]
+pub struct ProbeResult {
+    pub name: String,
+    pub loss: f64,
+    pub perplexity: f64,
+}
+
+/// Build the probe corpora: (name, corpus).
+pub fn probe_suite(train_cfg: &CorpusConfig, n_tokens: usize) -> Vec<(String, Corpus)> {
+    let mk = |name: &str, cfg: CorpusConfig| (name.to_string(), Corpus::generate(cfg));
+    vec![
+        // in-domain: same chain, fresh walk (the paper's val-loss analogue)
+        mk(
+            "in-domain",
+            CorpusConfig { n_tokens, seed: train_cfg.seed, ..train_cfg.clone() },
+        ),
+        // near shift: different chain, same statistics (≈ HellaSwag-ish
+        // "same skill, new content")
+        mk(
+            "shifted-chain",
+            CorpusConfig { n_tokens, seed: train_cfg.seed + 101, ..train_cfg.clone() },
+        ),
+        // far shift: flatter, higher-entropy source (tests calibration)
+        mk(
+            "high-entropy",
+            CorpusConfig {
+                n_tokens,
+                seed: train_cfg.seed + 202,
+                zipf_s: 1.05,
+                smoothing: 0.35,
+                ..train_cfg.clone()
+            },
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_ordering() {
+        let cfg = CorpusConfig { n_tokens: 50_000, ..Default::default() };
+        let suite = probe_suite(&cfg, 50_000);
+        assert_eq!(suite.len(), 3);
+        // the far-shift probe really is higher entropy
+        let h_near = suite[0].1.bigram_entropy();
+        let h_far = suite[2].1.bigram_entropy();
+        assert!(h_far > h_near, "{h_far} <= {h_near}");
+    }
+}

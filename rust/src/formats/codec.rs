@@ -1,0 +1,268 @@
+//! Software float codecs: round f32 values onto the representable grid of
+//! a narrower binary format (round-to-nearest-even, saturating).
+//!
+//! Semantics match `torch._scaled_mm` / the paper's `.to(float8)` cast:
+//! * E4M3 is the *FN* (finite-only) variant: no infinities, the all-ones
+//!   exponent carries normal values, max = 448, and overflow saturates.
+//! * E5M2 keeps the IEEE layout (max 57344) but the cast saturates rather
+//!   than producing inf (matching saturated-cast FP8 training).
+//! * Subnormals are exact: the grid below `min_normal` is the fixed-point
+//!   lattice with spacing `min_subnormal`.
+//!
+//! The implementation quantizes through the f32 bit pattern, so it is
+//! exact for every input (no libm), mirroring the L1 Pallas kernel.
+
+/// A binary floating-point format (1 sign bit + exponent + mantissa bits).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FloatFormat {
+    pub name: &'static str,
+    pub exp_bits: u32,
+    pub mant_bits: u32,
+    /// E4M3FN-style: all-ones exponent is used for normal numbers
+    /// (no inf; one mantissa pattern reserved for NaN).
+    pub finite_only: bool,
+    /// Relative FLOPS vs TF32 on recent accelerators (paper Table 12).
+    pub rel_flops: f64,
+}
+
+/// Rounding mode for [`FloatFormat::quantize`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rounding {
+    /// Round to nearest, ties to even (the hardware default).
+    NearestEven,
+    /// Truncate toward zero (used by ablation benches only).
+    TowardZero,
+}
+
+pub const E4M3: FloatFormat =
+    FloatFormat { name: "FP8 E4M3", exp_bits: 4, mant_bits: 3, finite_only: true, rel_flops: 4.0 };
+pub const E5M2: FloatFormat =
+    FloatFormat { name: "FP8 E5M2", exp_bits: 5, mant_bits: 2, finite_only: false, rel_flops: 4.0 };
+pub const FP16: FloatFormat =
+    FloatFormat { name: "FP16", exp_bits: 5, mant_bits: 10, finite_only: false, rel_flops: 2.0 };
+pub const BF16: FloatFormat =
+    FloatFormat { name: "BF16", exp_bits: 8, mant_bits: 7, finite_only: false, rel_flops: 2.0 };
+pub const TF32: FloatFormat =
+    FloatFormat { name: "TF32", exp_bits: 8, mant_bits: 10, finite_only: false, rel_flops: 1.0 };
+/// f32 itself, as the identity codec (useful as a baseline in benches).
+pub const FP32: FloatFormat =
+    FloatFormat { name: "FP32", exp_bits: 8, mant_bits: 23, finite_only: false, rel_flops: 0.5 };
+
+impl FloatFormat {
+    pub const ALL: [FloatFormat; 6] = [FP32, TF32, BF16, FP16, E5M2, E4M3];
+
+    pub fn bias(&self) -> i32 {
+        (1 << (self.exp_bits - 1)) - 1
+    }
+
+    /// Exponent of the smallest normal number.
+    pub fn min_normal_exp(&self) -> i32 {
+        1 - self.bias()
+    }
+
+    /// Exponent of the largest finite number.
+    pub fn max_exp(&self) -> i32 {
+        let all_ones = (1i32 << self.exp_bits) - 1;
+        all_ones - self.bias() - if self.finite_only { 0 } else { 1 }
+    }
+
+    /// Largest finite value (448 for E4M3FN, 57344 for E5M2, ...).
+    pub fn max_value(&self) -> f64 {
+        let m = self.mant_bits as f64;
+        let frac = if self.finite_only {
+            2.0 - 2.0 * 0.5f64.powf(m) // top mantissa pattern is NaN
+        } else {
+            2.0 - 0.5f64.powf(m)
+        };
+        frac * 2.0f64.powi(self.max_exp())
+    }
+
+    /// Smallest positive normal value.
+    pub fn min_normal(&self) -> f64 {
+        2.0f64.powi(self.min_normal_exp())
+    }
+
+    /// Smallest positive subnormal value.
+    pub fn min_subnormal(&self) -> f64 {
+        2.0f64.powi(self.min_normal_exp() - self.mant_bits as i32)
+    }
+
+    /// log2 of the dynamic range max/min_subnormal (format "width" used
+    /// in the Fig 6 range overlays).
+    pub fn log2_dynamic_range(&self) -> f64 {
+        (self.max_value() / self.min_subnormal()).log2()
+    }
+
+    /// Round one f32 onto this format's grid (saturating RTNE cast).
+    ///
+    /// NaN propagates; ±0 is preserved. Values below half the smallest
+    /// subnormal round to (signed) zero.
+    pub fn quantize(&self, x: f32) -> f32 {
+        self.quantize_mode(x, Rounding::NearestEven)
+    }
+
+    pub fn quantize_mode(&self, x: f32, mode: Rounding) -> f32 {
+        quantize_one(x, self.min_normal_exp(), self.mant_bits as i32, self.max_value(), self.identity(), mode)
+    }
+
+    #[inline]
+    fn identity(&self) -> bool {
+        self.mant_bits >= 23 && self.min_normal_exp() <= -126
+    }
+
+    /// Quantize a slice in place; returns clip statistics.
+    ///
+    /// §Perf: the format constants (max value, min-normal exponent, grid
+    /// width) are hoisted out of the per-element loop — the naive
+    /// per-element `quantize` recomputed `max_value()` (a powf) every
+    /// call, which dominated the codec bench (~25 M elem/s before,
+    /// see EXPERIMENTS.md §Perf for after).
+    pub fn quantize_slice(&self, xs: &mut [f32]) -> super::ClipStats {
+        let mut stats = super::ClipStats::default();
+        let max_v = self.max_value();
+        let max = max_v as f32;
+        let min_sub = self.min_subnormal() as f32;
+        let mne = self.min_normal_exp();
+        let mant = self.mant_bits as i32;
+        let ident = self.identity();
+        for x in xs.iter_mut() {
+            let v = *x;
+            if v.is_finite() && v != 0.0 {
+                if v.abs() > max {
+                    stats.overflow += 1;
+                } else if v.abs() < 0.5 * min_sub {
+                    stats.underflow += 1;
+                }
+                stats.total += 1;
+            }
+            *x = quantize_one(v, mne, mant, max_v, ident, Rounding::NearestEven);
+        }
+        stats
+    }
+
+    /// Number of finite non-negative grid points (used by property tests).
+    pub fn grid_points_per_octave(&self) -> u32 {
+        1 << self.mant_bits
+    }
+}
+
+/// Exact power of two from an integer exponent (valid for normal-f64
+/// exponents, i.e. -1022..=1023 — every grid we use is inside).
+#[inline]
+fn pow2_f64(e: i32) -> f64 {
+    debug_assert!((-1022..=1023).contains(&e));
+    f64::from_bits(((e + 1023) as u64) << 52)
+}
+
+/// One quantization with pre-hoisted format constants.
+#[inline]
+fn quantize_one(
+    x: f32,
+    min_normal_exp: i32,
+    mant_bits: i32,
+    max_value: f64,
+    identity: bool,
+    mode: Rounding,
+) -> f32 {
+    if x.is_nan() || x == 0.0 || identity {
+        return x;
+    }
+    let ax = x.abs();
+    // Exact exponent from the bit pattern (subnormal f32 inputs report
+    // -127 here and clamp up, which is correct: they are far below any
+    // target format's grid spacing).
+    let bits = ax.to_bits();
+    let exp = ((bits >> 23) & 0xff) as i32 - 127;
+    let exp = exp.max(min_normal_exp);
+    let ulp_exp = exp - mant_bits;
+    // q = round(x / 2^ulp_exp) * 2^ulp_exp, both steps exact in f64.
+    let scaled = x as f64 * pow2_f64(-ulp_exp);
+    let r = match mode {
+        Rounding::NearestEven => round_ties_even(scaled),
+        Rounding::TowardZero => scaled.trunc(),
+    };
+    let q = r * pow2_f64(ulp_exp);
+    q.clamp(-max_value, max_value) as f32
+}
+
+/// f64 round-half-to-even (stable Rust's `f64::round` rounds half away
+/// from zero, which is NOT what cast hardware does).
+fn round_ties_even(x: f64) -> f64 {
+    let r = x.round();
+    if (x - x.trunc()).abs() == 0.5 {
+        // tie: pick the even neighbour
+        let lo = x.trunc();
+        let hi = lo + x.signum();
+        if (lo as i64) % 2 == 0 {
+            lo
+        } else {
+            hi
+        }
+    } else {
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table12_closed_forms() {
+        // paper Table 12
+        assert_eq!(E4M3.max_value(), 448.0);
+        assert_eq!(E5M2.max_value(), 57344.0);
+        assert_eq!(FP16.max_value(), 65504.0);
+        assert!((E5M2.min_normal() - 6.1e-5).abs() / 6.1e-5 < 2e-3);
+        assert!((E4M3.min_normal() - 1.5625e-2).abs() < 1e-12);
+        assert_eq!(E4M3.min_subnormal(), 2.0f64.powi(-9));
+        assert_eq!(E5M2.min_subnormal(), 2.0f64.powi(-16));
+        assert_eq!(FP16.min_subnormal(), 2.0f64.powi(-24));
+    }
+
+    #[test]
+    fn e4m3_exact_values() {
+        assert_eq!(E4M3.quantize(448.0), 448.0);
+        assert_eq!(E4M3.quantize(1e9), 448.0); // saturates
+        assert_eq!(E4M3.quantize(-1e9), -448.0);
+        assert_eq!(E4M3.quantize(1.0), 1.0);
+        assert_eq!(E4M3.quantize(1.0625), 1.0); // RTNE tie -> even (8/8ths)
+        assert_eq!(E4M3.quantize(1.1), 1.125);
+        assert_eq!(E4M3.quantize(2f32.powi(-9)), 2f32.powi(-9)); // min subnormal
+        assert_eq!(E4M3.quantize(2f32.powi(-11)), 0.0); // below half min-sub
+        assert_eq!(E4M3.quantize(0.75 * 2f32.powi(-9)), 2f32.powi(-9));
+    }
+
+    #[test]
+    fn ties_to_even() {
+        // halfway between grid points 1.0 and 1.125 is 1.0625 -> 1.0 (even)
+        assert_eq!(E4M3.quantize(1.0625), 1.0);
+        // halfway between 1.125 and 1.25 is 1.1875 -> 1.25? mantissa of
+        // 1.125 is 0b001 (odd), of 1.25 is 0b010 (even) -> 1.25
+        assert_eq!(E4M3.quantize(1.1875), 1.25);
+    }
+
+    #[test]
+    fn zero_and_nan() {
+        assert_eq!(E5M2.quantize(0.0).to_bits(), 0.0f32.to_bits());
+        assert_eq!(E5M2.quantize(-0.0).to_bits(), (-0.0f32).to_bits());
+        assert!(E5M2.quantize(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn fp32_is_identity() {
+        for v in [1.0e-40f32, 3.14159, -1e30, 123.456] {
+            assert_eq!(FP32.quantize(v), v);
+        }
+    }
+
+    #[test]
+    fn clip_stats() {
+        let mut xs = vec![1.0f32, 1000.0, 1e-6, -0.5];
+        let st = E4M3.quantize_slice(&mut xs);
+        assert_eq!(st.overflow, 1);
+        assert_eq!(st.underflow, 1);
+        assert_eq!(xs[1], 448.0);
+        assert_eq!(xs[2], 0.0);
+    }
+}

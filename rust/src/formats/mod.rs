@@ -1,0 +1,20 @@
+//! S1 — Numeric-format substrate.
+//!
+//! Bit-exact software codecs for the low-precision floating-point formats
+//! in the paper's Table 12 (FP8 E4M3FN, FP8 E5M2, FP16, BF16, TF32), plus
+//! tensor-statistics tooling (RMS, underflow/overflow fractions) used by
+//! the Fig 6/19/20 experiments and format-range overlays.
+//!
+//! The codec is validated three ways: against IEEE-754 closed forms
+//! (unit tests), against itself under property tests (round-trip,
+//! monotonicity, idempotence — `tests/` + `util::prop`), and bit-exactly
+//! against the L1 Pallas quantizer through the standalone kernel
+//! artifacts (`tests/artifact_roundtrip.rs`).
+
+mod codec;
+mod stats;
+mod tables;
+
+pub use codec::{FloatFormat, Rounding, BF16, E4M3, E5M2, FP16, FP32, TF32};
+pub use stats::{ClipStats, TensorStats};
+pub use tables::{format_table, format_table_markdown};

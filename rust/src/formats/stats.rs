@@ -1,0 +1,111 @@
+//! Tensor statistics: the paper's RMS metric and format-clip accounting.
+//!
+//! RMS = sqrt(sigma^2 + mu^2) = root-mean-square (Fig 6 caption): it
+//! captures the larger of the mean and scale of a distribution and is the
+//! paper's test of whether a tensor risks FP8 over/underflow.
+
+use super::FloatFormat;
+
+/// Counts of values that would clip when cast to a format.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ClipStats {
+    pub overflow: usize,
+    pub underflow: usize,
+    pub total: usize,
+}
+
+impl ClipStats {
+    pub fn overflow_frac(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.overflow as f64 / self.total as f64 }
+    }
+    pub fn underflow_frac(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.underflow as f64 / self.total as f64 }
+    }
+}
+
+/// Summary statistics of a tensor, in the paper's terms.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TensorStats {
+    pub rms: f64,
+    pub mean: f64,
+    pub std: f64,
+    pub abs_max: f64,
+    pub abs_min_nonzero: f64,
+    pub n: usize,
+}
+
+impl TensorStats {
+    pub fn of(xs: &[f32]) -> Self {
+        if xs.is_empty() {
+            return Self::default();
+        }
+        let n = xs.len() as f64;
+        let mut sum = 0.0f64;
+        let mut sumsq = 0.0f64;
+        let mut abs_max = 0.0f64;
+        let mut abs_min = f64::INFINITY;
+        for &x in xs {
+            let x = x as f64;
+            sum += x;
+            sumsq += x * x;
+            let a = x.abs();
+            if a > abs_max {
+                abs_max = a;
+            }
+            if a > 0.0 && a < abs_min {
+                abs_min = a;
+            }
+        }
+        let mean = sum / n;
+        let var = (sumsq / n - mean * mean).max(0.0);
+        TensorStats {
+            rms: (sumsq / n).sqrt(),
+            mean,
+            std: var.sqrt(),
+            abs_max,
+            abs_min_nonzero: if abs_min.is_finite() { abs_min } else { 0.0 },
+            n: xs.len(),
+        }
+    }
+
+    /// Would this tensor's RMS sit inside `fmt`'s comfortable range?
+    /// (within [min_normal, max]; the Fig 6 dashed/solid red lines).
+    pub fn rms_in_range(&self, fmt: &FloatFormat) -> bool {
+        self.rms >= fmt.min_normal() && self.rms <= fmt.max_value()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::E4M3;
+
+    #[test]
+    fn rms_is_sqrt_mu2_sigma2() {
+        // constant tensor: std = 0, rms = |mu|
+        let xs = vec![3.0f32; 100];
+        let st = TensorStats::of(&xs);
+        assert!((st.rms - 3.0).abs() < 1e-9);
+        assert!(st.std < 1e-9);
+        // zero-mean: rms = std
+        let xs: Vec<f32> = (0..1000).map(|i| if i % 2 == 0 { 2.0 } else { -2.0 }).collect();
+        let st = TensorStats::of(&xs);
+        assert!((st.rms - 2.0).abs() < 1e-9);
+        assert!((st.std - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn range_check() {
+        let unit = TensorStats { rms: 1.0, ..Default::default() };
+        assert!(unit.rms_in_range(&E4M3));
+        let tiny = TensorStats { rms: 1e-4, ..Default::default() };
+        assert!(!tiny.rms_in_range(&E4M3)); // below E4M3 min normal 2^-6
+    }
+
+    #[test]
+    fn empty() {
+        let st = TensorStats::of(&[]);
+        assert_eq!(st.n, 0);
+        assert_eq!(st.rms, 0.0);
+    }
+}

@@ -1,0 +1,77 @@
+//! Table 12 generator: the deep-learning format comparison table,
+//! computed from the codecs (not hard-coded), so the unit tests that pin
+//! the paper's numbers genuinely exercise the substrate.
+
+use super::FloatFormat;
+
+/// One row of the paper's Table 12.
+#[derive(Debug, Clone)]
+pub struct FormatRow {
+    pub name: &'static str,
+    pub e: u32,
+    pub m: u32,
+    pub max: f64,
+    pub min_normal: f64,
+    pub min_subnormal: f64,
+    pub rel_flops: f64,
+}
+
+pub fn format_table() -> Vec<FormatRow> {
+    FloatFormat::ALL
+        .iter()
+        .map(|f| FormatRow {
+            name: f.name,
+            e: f.exp_bits,
+            m: f.mant_bits,
+            max: f.max_value(),
+            min_normal: f.min_normal(),
+            min_subnormal: f.min_subnormal(),
+            rel_flops: f.rel_flops,
+        })
+        .collect()
+}
+
+pub fn format_table_markdown() -> String {
+    let mut s = String::from(
+        "| Format | E | M | max | min normal | min subnormal | FLOPS (vs TF32) |\n|---|---|---|---|---|---|---|\n",
+    );
+    for r in format_table() {
+        s.push_str(&format!(
+            "| {} | {} | {} | {:.4e} | {:.4e} | {:.4e} | {}x |\n",
+            r.name, r.e, r.m, r.max, r.min_normal, r.min_subnormal, r.rel_flops
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pin the paper's Table 12 numbers.
+    #[test]
+    fn matches_paper_table12() {
+        let rows = format_table();
+        let get = |n: &str| rows.iter().find(|r| r.name == n).unwrap().clone();
+        let fp16 = get("FP16");
+        assert_eq!(fp16.max, 65504.0);
+        assert!((fp16.min_normal - 6.1e-5).abs() / 6.1e-5 < 2e-3);
+        assert!((fp16.min_subnormal - 6.0e-8).abs() / 6.0e-8 < 1e-2);
+        let e5 = get("FP8 E5M2");
+        assert_eq!(e5.max, 57344.0);
+        assert!((e5.min_subnormal - 1.5e-5).abs() / 1.5e-5 < 2e-2);
+        let e4 = get("FP8 E4M3");
+        assert_eq!(e4.max, 448.0);
+        assert!((e4.min_normal - 1.6e-2).abs() / 1.6e-2 < 3e-2);
+        assert!((e4.min_subnormal - 2.0e-3).abs() / 2.0e-3 < 3e-2);
+        let bf16 = get("BF16");
+        assert!((bf16.max - 3.4e38).abs() / 3.4e38 < 2e-2);
+    }
+
+    #[test]
+    fn markdown_renders() {
+        let md = format_table_markdown();
+        assert!(md.contains("FP8 E4M3"));
+        assert_eq!(md.lines().count(), 2 + FloatFormat::ALL.len());
+    }
+}

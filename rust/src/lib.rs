@@ -1,0 +1,26 @@
+//! # umup — u-μP: The Unit-Scaled Maximal Update Parametrization
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of *u-μP: The
+//! Unit-Scaled Maximal Update Parametrization* (Blake, Eichenberg et al.,
+//! 2024).
+//!
+//! Layering (see DESIGN.md):
+//! * **L1** (Pallas, `python/compile/kernels/`): FP8 grid-quantizer and
+//!   tiled unit-scaled matmul kernels.
+//! * **L2** (JAX, `python/compile/`): the scaled Llama-style transformer
+//!   with runtime *scale hooks*, AOT-lowered to HLO-text artifacts.
+//! * **L3** (this crate): everything at runtime — the numeric-format
+//!   substrate, the abc-parametrization engine (the paper's contribution),
+//!   the PJRT runtime, training/sweep/experiment coordination. Python is
+//!   never on the training path.
+
+pub mod coordinator;
+pub mod data;
+pub mod formats;
+pub mod parametrization;
+pub mod runtime;
+pub mod sweep;
+pub mod train;
+pub mod util;
+
+pub use anyhow::{anyhow, bail, Context, Result};

@@ -1,0 +1,238 @@
+//! `repro` — the u-μP coordinator CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   rules                       print the Table 1/2/11 rule evaluation
+//!   check                       validate every artifact + manifest
+//!   train [opts]                one training run
+//!   exp <id|all|list> [--quick] reproduce a paper figure/table
+//!   report                      collate results/ into EXPERIMENTS-style md
+//!
+//! Dependency-light by design (offline env): argument parsing is the
+//! in-tree `Args` helper below.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use umup::coordinator::{list_experiments, run_experiment, ExpContext};
+use umup::data::{Corpus, CorpusConfig};
+use umup::parametrization::{Abc, HpSet, Parametrization, Precision, Scheme};
+use umup::runtime::Registry;
+use umup::train::{RunConfig, Runner, Schedule};
+
+/// Minimal flag parser: positional args + `--key value` + `--flag`.
+struct Args {
+    positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Args {
+        let mut positional = Vec::new();
+        let mut flags = BTreeMap::new();
+        let mut it = std::env::args().skip(1).peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                flags.insert(key.to_string(), val);
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "rules" => rules(&args),
+        "check" => check(&args),
+        "train" => train(&args),
+        "exp" => exp(&args),
+        "report" => report(&args),
+        "corpus" => corpus_info(&args),
+        _ => {
+            println!(
+                "repro — u-muP reproduction coordinator\n\n\
+                 usage: repro <command> [--flags]\n\n\
+                 commands:\n\
+                 \x20 rules   [--scheme umup] [--width 256] [--depth 4]   print A/B/C per tensor\n\
+                 \x20 check   [--artifacts artifacts]                     validate artifacts\n\
+                 \x20 train   [--scheme umup] [--width 64] [--depth 4] [--batch 16]\n\
+                 \x20         [--lr 0.5] [--steps 256] [--precision fp32|fp8|fp8-paper] [--seed 7]\n\
+                 \x20 exp     <id|all|list> [--quick] [--workers N]       reproduce figures/tables\n\
+                 \x20 report  [--out results]                             collate summaries\n\
+                 \x20 corpus  [--vocab 256]                               corpus statistics\n"
+            );
+            Ok(())
+        }
+    }
+}
+
+/// Print the evaluated parametrization table (Tables 1/2/11 made concrete).
+fn rules(args: &Args) -> Result<()> {
+    let scheme = Scheme::parse(&args.get("scheme", "umup")).context("bad --scheme")?;
+    let width: usize = args.get("width", "256").parse()?;
+    let depth: usize = args.get("depth", "4").parse()?;
+    let reg = Registry::open(Path::new(&args.get("artifacts", "artifacts")))?;
+    // use the manifest at the requested shape if present, else any other
+    // as the tensor-name template
+    let man = reg
+        .find(width, depth, 16)
+        .or_else(|_| reg.manifest("w64_d4_b16_t64_v256"))?;
+    let p = Parametrization::new(scheme);
+    let hp = HpSet::default();
+    println!("{} rules at width {width}, depth {depth} (eta=1):", scheme.name());
+    println!(
+        "{:24} {:>12} {:>12} {:>12} {:>12}",
+        "tensor", "A (param)", "A bwd", "B (init)", "C (lr)"
+    );
+    for t in &man.tensors {
+        let abc = Abc::of(&p, &hp, t, width, depth);
+        println!(
+            "{:24} {:>12.5} {:>12.5} {:>12.5} {:>12.5}",
+            t.name, abc.a, abc.a_bwd, abc.b, abc.c
+        );
+    }
+    Ok(())
+}
+
+/// Validate all artifacts: manifests parse, HLO compiles, one step runs.
+fn check(args: &Args) -> Result<()> {
+    let reg = Registry::open(Path::new(&args.get("artifacts", "artifacts")))?;
+    for man in reg.manifests() {
+        print!("{:28}", man.name);
+        let session = reg.session(&man.name)?;
+        let vecs = umup::parametrization::RuntimeVectors::build(
+            man,
+            &Parametrization::new(Scheme::Umup),
+            &HpSet::with_eta(0.5),
+            Precision::Fp32,
+        )?;
+        let mut ts =
+            session.init(0, &vecs.init_std, &vecs.scales, &vecs.lr_scale, &vecs.qmask)?;
+        let tokens: Vec<i32> = (0..man.spec.batch * (man.spec.seq + 1))
+            .map(|i| (i % man.spec.vocab) as i32)
+            .collect();
+        let hyp = umup::train::AdamConfig::default().hyp(0.1, 1);
+        let loss = session.step(&mut ts, &tokens, &hyp)?;
+        if !loss.is_finite() {
+            bail!("{}: non-finite loss", man.name);
+        }
+        println!(" ok   n_params={:9}  step loss={loss:.4}", man.n_params);
+    }
+    println!("all artifacts OK");
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    let scheme = Scheme::parse(&args.get("scheme", "umup")).context("bad --scheme")?;
+    let width: usize = args.get("width", "64").parse()?;
+    let depth: usize = args.get("depth", "4").parse()?;
+    let batch: usize = args.get("batch", "16").parse()?;
+    let steps: u64 = args.get("steps", "256").parse()?;
+    let lr: f64 =
+        args.get("lr", if scheme == Scheme::Umup { "0.5" } else { "0.005" }).parse()?;
+    let precision =
+        Precision::parse(&args.get("precision", "fp32")).context("bad --precision")?;
+    let reg = Registry::open(Path::new(&args.get("artifacts", "artifacts")))?;
+    let man = reg.find(width, depth, batch)?;
+    let corpus = Corpus::generate(CorpusConfig {
+        vocab: man.spec.vocab,
+        n_tokens: 2_000_000,
+        ..Default::default()
+    });
+    let session = reg.session(&man.name)?;
+    let runner = Runner::new(Arc::clone(&session));
+    let mut cfg = RunConfig::quick(
+        &format!("{}-{}", scheme.name(), precision.name()),
+        Parametrization::new(scheme),
+        HpSet::with_eta(lr),
+        steps,
+    );
+    cfg.precision = precision;
+    cfg.seed = args.get("seed", "7").parse()?;
+    cfg.schedule = Schedule::standard(lr, steps, (steps / 4).max(1));
+    println!("training {} on {} for {steps} steps (lr {lr})", cfg.label, man.name);
+    let rec = runner.run(&cfg, &corpus)?;
+    for &(t, l) in &rec.train_curve {
+        println!("step {t:6}  train loss {l:.4}");
+    }
+    println!(
+        "final valid loss {:.4}  (diverged: {})  [{:.1}s]",
+        rec.final_valid_loss, rec.diverged, rec.wall_seconds
+    );
+    Ok(())
+}
+
+fn exp(args: &Args) -> Result<()> {
+    let id = args.positional.get(1).map(String::as_str).unwrap_or("list");
+    if id == "list" {
+        println!("{}", list_experiments());
+        return Ok(());
+    }
+    let workers: usize = args.get("workers", "4").parse()?;
+    let ctx = ExpContext::new(
+        &args.get("artifacts", "artifacts"),
+        &args.get("out", "results"),
+        args.has("quick"),
+        workers,
+    )?;
+    let md = run_experiment(&ctx, id)?;
+    println!("{md}");
+    Ok(())
+}
+
+fn report(args: &Args) -> Result<()> {
+    let out = args.get("out", "results");
+    let mut combined = String::from("# Collated experiment reports\n\n");
+    let mut found = 0;
+    if let Ok(entries) = std::fs::read_dir(&out) {
+        let mut dirs: Vec<_> = entries.flatten().map(|e| e.path()).collect();
+        dirs.sort();
+        for d in dirs {
+            let f = d.join("summary.md");
+            if f.exists() {
+                combined.push_str(&std::fs::read_to_string(&f)?);
+                combined.push('\n');
+                found += 1;
+            }
+        }
+    }
+    std::fs::write(Path::new(&out).join("REPORT.md"), &combined)?;
+    println!("collated {found} summaries into {out}/REPORT.md");
+    Ok(())
+}
+
+fn corpus_info(args: &Args) -> Result<()> {
+    let vocab: usize = args.get("vocab", "256").parse()?;
+    let c = Corpus::generate(CorpusConfig { vocab, ..Default::default() });
+    println!("vocab {vocab}: tokens={}", c.tokens.len());
+    println!(
+        "unigram entropy  H1 = {:.4} nats ({:.3} bits)",
+        c.unigram_entropy(),
+        c.unigram_entropy() / 2f64.ln()
+    );
+    println!(
+        "bigram  entropy  H2 = {:.4} nats ({:.3} bits)",
+        c.bigram_entropy(),
+        c.bigram_entropy() / 2f64.ln()
+    );
+    println!("train/valid = {}/{}", c.train_slice().len(), c.valid_slice().len());
+    Ok(())
+}

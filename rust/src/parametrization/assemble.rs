@@ -1,0 +1,208 @@
+//! Assemble the runtime vectors: evaluate the whole parametrization for a
+//! given artifact into `scales` / `init_std` / `lr_scale` / `qmask`.
+//!
+//! This is where the paper's Tables 1/2/8/11, the residual τ-scheme and
+//! the cut-edge constraints all land in one place (DESIGN.md §2).
+
+use anyhow::Result;
+
+use crate::runtime::Manifest;
+
+use super::{
+    attention_out_scale, gated_silu_scale, matmul_scales, mup_residual, umup_residual,
+    xent_grad_scale, Abc, HpSet, Parametrization, Scheme,
+};
+
+/// FP8 execution mode: which quantization flags are raised (paper §4.2,
+/// Fig 1c). The formats are baked into the graph (E4M3 fwd / E5M2 grad);
+/// the mask only selects sites.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// No quantization: the FP32 reference (stand-in for BF16 at this
+    /// scale — see DESIGN.md §4 substitutions).
+    Fp32,
+    /// Fig 1(c): naive `.to(float8)` on every matmul's inputs/weights
+    /// (E4M3) and output gradients (E5M2), including critical tensors.
+    Fp8Naive,
+    /// §4.2 mixed-precision scheme: non-critical matmuls (q, k, v, gate,
+    /// up) in FP8; critical ones (attn out-projection, FFN down, decoder
+    /// head) kept in high precision.
+    Fp8Paper,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "fp32" | "bf16" => Precision::Fp32,
+            "fp8" | "fp8-naive" => Precision::Fp8Naive,
+            "fp8-paper" | "fp8-mixed" => Precision::Fp8Paper,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::Fp32 => "fp32",
+            Precision::Fp8Naive => "fp8-naive",
+            Precision::Fp8Paper => "fp8-paper",
+        }
+    }
+}
+
+/// The evaluated parametrization, ready to feed to the runtime.
+#[derive(Debug, Clone)]
+pub struct RuntimeVectors {
+    pub scales: Vec<f32>,
+    pub init_std: Vec<f32>,
+    pub lr_scale: Vec<f32>,
+    pub qmask: Vec<f32>,
+}
+
+impl RuntimeVectors {
+    pub fn build(
+        man: &Manifest,
+        p: &Parametrization,
+        hp: &HpSet,
+        precision: Precision,
+    ) -> Result<RuntimeVectors> {
+        let width = man.spec.width;
+        let depth = man.spec.depth;
+        let seq = man.spec.seq;
+        let vocab = man.spec.vocab;
+        let d_head = man.spec.head_dim;
+        let tokens = man.spec.batch * seq;
+        let unit = p.scheme == Scheme::Umup;
+
+        // ---------------- per-tensor A/B/C ----------------
+        let mut init_std = Vec::with_capacity(man.tensors.len());
+        let mut lr_scale = Vec::with_capacity(man.tensors.len());
+        let mut abcs = Vec::with_capacity(man.tensors.len());
+        for t in &man.tensors {
+            let abc = Abc::of(p, hp, t, width, depth);
+            init_std.push(abc.b as f32);
+            // the global η is folded into C by Abc::of; the graph applies
+            // lr·lr_scale so we divide the η back out and pass it in hyp.
+            lr_scale.push((abc.c / hp.eta) as f32);
+            abcs.push((t.name.clone(), abc));
+        }
+        let abc_of = |name: &str| -> Abc {
+            abcs.iter().find(|(n, _)| n == name).map(|(_, a)| a.clone()).unwrap()
+        };
+
+        // ---------------- scale sites ----------------
+        let mut scales = vec![0.0f32; man.n_scale_sites];
+        let mut set = |name: String, v: f64| {
+            let idx = *man
+                .scale_sites
+                .get(&name)
+                .unwrap_or_else(|| panic!("missing scale site {name}"));
+            scales[idx] = v as f32;
+        };
+
+        // embedding: forward multiplier A_emb; table-grad scale is 1
+        // (Adam is scale-invariant; Unit Scaling leaves gathers alone)
+        let emb = abc_of("emb");
+        set("emb.scale".into(), emb.a);
+        set("emb.gw".into(), emb.a_bwd);
+
+        // matmul sites: fwd = A_W; backward scales depend on the scheme.
+        // μP/SP: honest gradients (gx = gw = A_W, since y = A·(x@W)).
+        // u-μP: Table 8 — gx constrained to the forward scale on
+        // non-cut edges, gw free at 1/sqrt(batch-rows) (cut edge).
+        let mm = |set: &mut dyn FnMut(String, f64), site: String, abc: &Abc, fan_out: usize| {
+            let (_, _us_gx, us_gw) = matmul_scales(1, fan_out, tokens);
+            if unit {
+                set(format!("{site}.out"), abc.a);
+                set(format!("{site}.gx"), abc.a_bwd);
+                set(format!("{site}.gw"), us_gw);
+            } else {
+                set(format!("{site}.out"), abc.a);
+                set(format!("{site}.gx"), abc.a_bwd);
+                set(format!("{site}.gw"), abc.a);
+            }
+        };
+
+        for l in 0..depth {
+            for name in ["attn.q", "attn.k", "attn.v", "attn.o", "ffn.gate", "ffn.up", "ffn.down"] {
+                let tname = format!("l{l}.{name}");
+                let t = man.tensor(&tname)?;
+                let abc = abc_of(&tname);
+                mm(&mut set, tname.clone(), &abc, t.fan_out);
+            }
+            // attention logit multiplier: α_attn · (1/d for μP & u-μP,
+            // 1/sqrt(d) for SP) — §B "Unit-scaled dot-product attention"
+            let logit = match p.scheme {
+                Scheme::Sp => hp.alpha_attn / (d_head as f64).sqrt(),
+                _ => hp.alpha_attn / d_head as f64,
+            };
+            set(format!("l{l}.attn.logit_mult"), logit);
+            // attention output scale: Unit Scaling empirical model, else 1
+            let out_scale =
+                if unit { attention_out_scale(hp.alpha_attn, d_head, seq) } else { 1.0 };
+            set(format!("l{l}.attn.out_scale"), out_scale);
+            // FFN activation multiplier + Unit Scaling factor
+            set(format!("l{l}.ffn.act_alpha"), hp.alpha_ffn_act);
+            let act_scale = if unit { gated_silu_scale(hp.alpha_ffn_act) } else { 1.0 };
+            set(format!("l{l}.ffn.act_scale"), act_scale);
+            // residual coefficients
+            let rc = if unit {
+                umup_residual(l, depth, hp.alpha_res, hp.alpha_res_attn_ratio)
+            } else {
+                mup_residual(depth, p.base_depth, p.depth_mup && p.scheme != Scheme::Sp)
+            };
+            set(format!("l{l}.res.attn.a"), rc.attn_a);
+            set(format!("l{l}.res.attn.b"), rc.attn_b);
+            set(format!("l{l}.res.ffn.a"), rc.ffn_a);
+            set(format!("l{l}.res.ffn.b"), rc.ffn_b);
+        }
+
+        // decoder head
+        let head = abc_of("head");
+        let t_head = man.tensor("head")?;
+        mm(&mut set, "head".into(), &head, t_head.fan_out);
+
+        // loss: α_loss-softmax pre-multiplier; u-μP backward grad boost
+        set("loss.alpha".into(), hp.alpha_loss);
+        set("loss.beta".into(), if unit { xent_grad_scale(vocab) } else { 1.0 });
+
+        // ---------------- quantization mask ----------------
+        let qmask = Self::qmask(man, precision);
+
+        Ok(RuntimeVectors { scales, init_std, lr_scale, qmask })
+    }
+
+    /// Raise the per-site quantization flags for a precision mode.
+    pub fn qmask(man: &Manifest, precision: Precision) -> Vec<f32> {
+        let mut qmask = vec![0.0f32; man.n_quant_sites];
+        if precision == Precision::Fp32 {
+            return qmask;
+        }
+        for (site, &idx) in &man.quant_sites {
+            let critical = site.contains("attn.o")
+                || site.contains("ffn.down")
+                || site.starts_with("head");
+            let on = match precision {
+                Precision::Fp32 => false,
+                Precision::Fp8Naive => true,
+                Precision::Fp8Paper => !critical,
+            };
+            qmask[idx] = if on { 1.0 } else { 0.0 };
+        }
+        qmask
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // RuntimeVectors requires a Manifest; integration coverage lives in
+    // tests/parametrization_vectors.rs against the real artifacts.
+    use super::*;
+
+    #[test]
+    fn precision_parse() {
+        assert_eq!(Precision::parse("fp8"), Some(Precision::Fp8Naive));
+        assert_eq!(Precision::parse("FP8-paper"), Some(Precision::Fp8Paper));
+        assert_eq!(Precision::parse("bf16"), Some(Precision::Fp32));
+        assert_eq!(Precision::parse("int4"), None);
+    }
+}

@@ -1,0 +1,58 @@
+//! The embedding LR rule (paper §4.4, Fig 3).
+//!
+//! μP's Table 1 gives the input (embedding) weight a *constant* Adam LR
+//! rule (c_emb = 1).  The paper shows this transfers poorly across width
+//! and replaces it with c_emb = 1/sqrt(fan-out) for u-μP; Fig 3 compares
+//! the two as sqrt(base-width/width) scaling of η̂_emb under μP.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EmbLrRule {
+    /// c_emb = 1 (Tensor Programs V / Table 1).
+    Constant,
+    /// c_emb = 1/sqrt(fan-out) (u-μP, §4.4). Under μP this is expressed
+    /// relative to the base shape: sqrt(base-width/width).
+    InvSqrtFanOut,
+}
+
+impl EmbLrRule {
+    /// LR factor for the embedding tensor.
+    ///
+    /// For u-μP the caller passes `base_ratio = 1/fan_out` so the factor
+    /// is the absolute 1/sqrt(fan-out); for μP it passes
+    /// base_width/width so the factor is sqrt(base-width/width) (the Fig
+    /// 3 form, equal to 1 at the base shape).
+    pub fn factor(&self, _fan_out: f64, base_ratio: f64) -> f64 {
+        match self {
+            EmbLrRule::Constant => 1.0,
+            EmbLrRule::InvSqrtFanOut => base_ratio.sqrt(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "constant" | "const" => EmbLrRule::Constant,
+            "sqrt" | "inv-sqrt-fan-out" => EmbLrRule::InvSqrtFanOut,
+            _ => return None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_one() {
+        assert_eq!(EmbLrRule::Constant.factor(4096.0, 0.5), 1.0);
+    }
+
+    #[test]
+    fn sqrt_rule_halves_per_4x_width() {
+        // fig 3: width 256 -> 1024 at base 256 gives sqrt(1/4) = 1/2
+        let f = EmbLrRule::InvSqrtFanOut.factor(1024.0, 256.0 / 1024.0);
+        assert!((f - 0.5).abs() < 1e-12);
+        // absolute u-μP form
+        let f = EmbLrRule::InvSqrtFanOut.factor(1024.0, 1.0 / 1024.0);
+        assert!((f - 1.0 / 32.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,147 @@
+//! μTransferable hyperparameters (paper Table 3 / Table 5).
+//!
+//! One struct carries the union of the SP, μP and u-μP HP sets; each
+//! scheme reads the fields it defines and ignores the rest.  All values
+//! are multipliers with default 1 (the u-μP "drop the HP" default), so an
+//! LR-only sweep leaves everything else at unit scale — the property that
+//! makes independent search work (§4.5).
+
+/// Union of the schemes' μTransferable HP sets.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HpSet {
+    /// Global learning rate η (always swept).
+    pub eta: f64,
+    /// μP/SP: global initialization multiplier σ_init.
+    pub sigma_init: f64,
+    /// μP: embedding forward multiplier α_emb.
+    pub alpha_emb: f64,
+    /// μP: embedding LR multiplier η̂_emb.
+    pub eta_emb_hat: f64,
+    /// μP & u-μP: attention-softmax multiplier α_attn(-softmax).
+    pub alpha_attn: f64,
+    /// μP & u-μP: output/head multiplier α_out(put).
+    pub alpha_out: f64,
+    /// u-μP: FFN activation multiplier α_ffn-act.
+    pub alpha_ffn_act: f64,
+    /// u-μP: residual contribution α_res.
+    pub alpha_res: f64,
+    /// u-μP: attention/FFN residual ratio α_res-attn-ratio.
+    pub alpha_res_attn_ratio: f64,
+    /// u-μP: loss softmax (inverse) temperature α_loss-softmax.
+    pub alpha_loss: f64,
+}
+
+impl Default for HpSet {
+    fn default() -> Self {
+        HpSet {
+            eta: 1.0,
+            sigma_init: 1.0,
+            alpha_emb: 1.0,
+            eta_emb_hat: 1.0,
+            alpha_attn: 1.0,
+            alpha_out: 1.0,
+            alpha_ffn_act: 1.0,
+            alpha_res: 1.0,
+            alpha_res_attn_ratio: 1.0,
+            alpha_loss: 1.0,
+        }
+    }
+}
+
+/// Stable field names (used by sweep spaces, CSV output, CLI flags).
+pub const HP_NAMES: [&str; 10] = [
+    "eta",
+    "sigma_init",
+    "alpha_emb",
+    "eta_emb_hat",
+    "alpha_attn",
+    "alpha_out",
+    "alpha_ffn_act",
+    "alpha_res",
+    "alpha_res_attn_ratio",
+    "alpha_loss",
+];
+
+impl HpSet {
+    pub fn with_eta(eta: f64) -> Self {
+        HpSet { eta, ..Default::default() }
+    }
+
+    pub fn get(&self, name: &str) -> Option<f64> {
+        Some(match name {
+            "eta" => self.eta,
+            "sigma_init" => self.sigma_init,
+            "alpha_emb" => self.alpha_emb,
+            "eta_emb_hat" => self.eta_emb_hat,
+            "alpha_attn" => self.alpha_attn,
+            "alpha_out" => self.alpha_out,
+            "alpha_ffn_act" => self.alpha_ffn_act,
+            "alpha_res" => self.alpha_res,
+            "alpha_res_attn_ratio" => self.alpha_res_attn_ratio,
+            "alpha_loss" => self.alpha_loss,
+            _ => return None,
+        })
+    }
+
+    pub fn set(&mut self, name: &str, v: f64) -> bool {
+        match name {
+            "eta" => self.eta = v,
+            "sigma_init" => self.sigma_init = v,
+            "alpha_emb" => self.alpha_emb = v,
+            "eta_emb_hat" => self.eta_emb_hat = v,
+            "alpha_attn" => self.alpha_attn = v,
+            "alpha_out" => self.alpha_out = v,
+            "alpha_ffn_act" => self.alpha_ffn_act = v,
+            "alpha_res" => self.alpha_res = v,
+            "alpha_res_attn_ratio" => self.alpha_res_attn_ratio = v,
+            "alpha_loss" => self.alpha_loss = v,
+            _ => return false,
+        }
+        true
+    }
+
+    /// The non-LR HP names swept per scheme (paper Table 3 *extended*).
+    pub fn sweepable(scheme: super::Scheme) -> &'static [&'static str] {
+        use super::Scheme::*;
+        match scheme {
+            Sp => &[],
+            Mup | Intermediate => {
+                &["sigma_init", "alpha_emb", "eta_emb_hat", "alpha_attn", "alpha_out"]
+            }
+            Umup => &[
+                "alpha_attn",
+                "alpha_out",
+                "alpha_ffn_act",
+                "alpha_res",
+                "alpha_res_attn_ratio",
+                "alpha_loss",
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_set_round_trip() {
+        let mut hp = HpSet::default();
+        for (i, name) in HP_NAMES.iter().enumerate() {
+            assert!(hp.set(name, 2.0 + i as f64));
+        }
+        for (i, name) in HP_NAMES.iter().enumerate() {
+            assert_eq!(hp.get(name), Some(2.0 + i as f64));
+        }
+        assert_eq!(hp.get("nope"), None);
+        assert!(!hp.set("nope", 1.0));
+    }
+
+    #[test]
+    fn defaults_are_unit() {
+        let hp = HpSet::default();
+        for name in HP_NAMES {
+            assert_eq!(hp.get(name), Some(1.0), "{name}");
+        }
+    }
+}

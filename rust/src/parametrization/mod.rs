@@ -1,0 +1,34 @@
+//! S2+S3 — The abc-parametrization engine: the paper's contribution as a
+//! first-class coordinator feature.
+//!
+//! Given an artifact manifest (tensor shapes, fan-in/out, scale-site
+//! table) plus a scheme (SP / μP / intermediate Table 11 / u-μP) and a set
+//! of μTransferable HPs, [`assemble::RuntimeVectors::build`] evaluates
+//! Tables 1, 2, 8 and 11 and Appendices F/G/H of the paper into the three
+//! runtime vectors the compiled graph consumes:
+//!
+//! * `scales[n_sites]` — every A_W forward multiplier, backward scale,
+//!   op multiplier and residual coefficient;
+//! * `init_std[n_tensors]` — every B_W;
+//! * `lr_scale[n_tensors]` — every C_W / η (the per-tensor Adam LR rule).
+//!
+//! Because these are runtime inputs, one compiled artifact realizes every
+//! parametrization and every HP point (DESIGN.md §2).
+
+mod abc;
+mod assemble;
+mod emb_lr;
+mod hp;
+mod presets;
+mod residual;
+mod unit_scaling;
+
+pub use abc::{Abc, Parametrization, Scheme};
+pub use assemble::{Precision, RuntimeVectors};
+pub use emb_lr::EmbLrRule;
+pub use hp::{HpSet, HP_NAMES};
+pub use presets::{Preset, SetupFlavor};
+pub use residual::{mup_residual, plain_prenorm_skip_rms, umup_residual, ResidualCoeffs};
+pub use unit_scaling::{
+    attention_out_scale, gated_silu_scale, log_interpolate, matmul_scales, xent_grad_scale,
+};

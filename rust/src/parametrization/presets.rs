@@ -1,0 +1,133 @@
+//! S12 — training-setup presets and baselines (paper §3.1, Fig 2, Table 6).
+//!
+//! Fig 2's three setups differ in *training configuration*, not in the
+//! μP rules: (a) the Tensor Programs V setup (constant LR, plain Adam,
+//! trainable norms, overfitting regime), (b) the standard Llama setup
+//! (cosine LR, coupled AdamW, trainable norms), (c) the fixed setup
+//! (non-parametric norms + independent weight decay) that restores
+//! μTransfer.  SP presets carry the Pythia init + Llama-3 LR heuristic
+//! used as the paper's large-scale baseline (§5.5 / Fig 18).
+
+use crate::train::{AdamConfig, Schedule, ScheduleKind};
+
+use super::{Parametrization, Scheme};
+
+/// Which Fig 2 training setup to emulate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SetupFlavor {
+    /// (a) Tensor Programs V: constant LR, plain Adam, trainable norms.
+    TensorPrograms5,
+    /// (b) standard Llama: cosine LR, *coupled* AdamW, trainable norms.
+    LlamaStandard,
+    /// (c) Llama + stability fixes: non-parametric norms, independent WD.
+    LlamaFixed,
+}
+
+impl SetupFlavor {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "tp5" | "tensorprograms5" => SetupFlavor::TensorPrograms5,
+            "llama" | "llama-standard" => SetupFlavor::LlamaStandard,
+            "fixed" | "llama-fixed" => SetupFlavor::LlamaFixed,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SetupFlavor::TensorPrograms5 => "tp5",
+            SetupFlavor::LlamaStandard => "llama-standard",
+            SetupFlavor::LlamaFixed => "llama-fixed",
+        }
+    }
+
+    /// Does this setup use trainable norm gains? (Selects the `_tn`
+    /// artifact variant.)
+    pub fn trainable_norms(&self) -> bool {
+        !matches!(self, SetupFlavor::LlamaFixed)
+    }
+
+    pub fn adam(&self) -> AdamConfig {
+        match self {
+            SetupFlavor::TensorPrograms5 => AdamConfig::plain_adam(),
+            SetupFlavor::LlamaStandard => AdamConfig::coupled(),
+            SetupFlavor::LlamaFixed => AdamConfig::default(), // independent
+        }
+    }
+
+    pub fn schedule(&self, peak_lr: f64, steps: u64, warmup: u64) -> Schedule {
+        match self {
+            SetupFlavor::TensorPrograms5 => Schedule {
+                kind: ScheduleKind::Constant,
+                peak_lr,
+                warmup_steps: 0,
+                total_steps: steps,
+            },
+            _ => Schedule::standard(peak_lr, steps, warmup),
+        }
+    }
+
+    /// TP5 trained many epochs on tiny data; emulated by shrinking the
+    /// effective corpus so the sampler revisits data (overfit regime).
+    pub fn corpus_fraction(&self) -> f64 {
+        match self {
+            SetupFlavor::TensorPrograms5 => 0.02,
+            _ => 1.0,
+        }
+    }
+}
+
+/// A named (scheme, setup) pair with the SP transfer heuristic.
+#[derive(Debug, Clone, Copy)]
+pub struct Preset {
+    pub parametrization: Parametrization,
+    pub setup: SetupFlavor,
+}
+
+impl Preset {
+    pub fn new(scheme: Scheme, setup: SetupFlavor) -> Preset {
+        Preset { parametrization: Parametrization::new(scheme), setup }
+    }
+
+    /// The η actually used at `width` when transferring a proxy LR found
+    /// at `base_width`.  μP/u-μP transfer η as-is (that is the point);
+    /// SP uses the Llama-3 heuristic η·base_width/width (§A.7).
+    pub fn transfer_lr(&self, proxy_eta: f64, base_width: usize, width: usize) -> f64 {
+        match self.parametrization.scheme {
+            Scheme::Sp => proxy_eta * base_width as f64 / width as f64,
+            _ => proxy_eta,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flavors_differ_as_in_table6() {
+        let tp5 = SetupFlavor::TensorPrograms5;
+        assert!(matches!(tp5.schedule(1.0, 10, 2).kind, ScheduleKind::Constant));
+        assert_eq!(tp5.adam().wd_indep, 0.0);
+        assert_eq!(tp5.adam().wd_coupled, 0.0);
+        assert!(tp5.trainable_norms());
+
+        let llama = SetupFlavor::LlamaStandard;
+        assert!(matches!(llama.schedule(1.0, 10, 2).kind, ScheduleKind::CosineTo(_)));
+        assert!(llama.adam().wd_coupled > 0.0);
+        assert!(llama.trainable_norms());
+
+        let fixed = SetupFlavor::LlamaFixed;
+        assert!(fixed.adam().wd_indep > 0.0);
+        assert_eq!(fixed.adam().wd_coupled, 0.0);
+        assert!(!fixed.trainable_norms());
+    }
+
+    #[test]
+    fn sp_lr_heuristic() {
+        let p = Preset::new(Scheme::Sp, SetupFlavor::LlamaFixed);
+        assert!((p.transfer_lr(0.01, 64, 256) - 0.0025).abs() < 1e-12);
+        let u = Preset::new(Scheme::Umup, SetupFlavor::LlamaFixed);
+        assert_eq!(u.transfer_lr(0.01, 64, 256), 0.01);
+    }
+}

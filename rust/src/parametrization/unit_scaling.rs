@@ -1,0 +1,99 @@
+//! S3 — the Unit Scaling rule compendium (paper Table 8, Appendix B).
+//!
+//! Closed-form and empirical scaling factors that make each op emit
+//! unit-RMS outputs given unit-RMS inputs.  The coordinator folds these
+//! into the runtime `scales` vector; the L2 graph just multiplies.
+
+/// log-space interpolation used by the empirical models (Appendix B):
+/// exp(a·ln(upper) + (1-a)·ln(lower)).
+pub fn log_interpolate(a: f64, upper: f64, lower: f64) -> f64 {
+    (a * upper.ln() + (1.0 - a) * lower.ln()).exp()
+}
+
+/// Unit-scaled matmul factors (§E.2 and Table 8):
+/// output 1/sqrt(fan-in), grad-input 1/sqrt(fan-out),
+/// grad-weight 1/sqrt(batch) where batch counts the contracted rows
+/// (tokens = batch·seq for our activations).
+pub fn matmul_scales(fan_in: usize, fan_out: usize, batch_rows: usize) -> (f64, f64, f64) {
+    (
+        1.0 / (fan_in as f64).sqrt(),
+        1.0 / (fan_out as f64).sqrt(),
+        1.0 / (batch_rows as f64).sqrt(),
+    )
+}
+
+/// Empirical scale model of causal dot-product attention (Table 8):
+/// sigma(attention) = log_interpolate(1/(1 + 4·d_head/α²), 1, sqrt(ln s / s));
+/// the op divides by this, so the returned value is the *multiplier* 1/σ.
+pub fn attention_out_scale(alpha_attn: f64, d_head: usize, seq: usize) -> f64 {
+    let a = 1.0 / (1.0 + 4.0 * d_head as f64 / (alpha_attn * alpha_attn));
+    let s = seq as f64;
+    let sigma = log_interpolate(a, 1.0, (s.ln() / s).sqrt());
+    1.0 / sigma
+}
+
+/// Empirical scale model of the gated SiLU (Table 8):
+/// sigma = log_interpolate(1/(1 + 1/α²), 1/sqrt(2), 1/2); returns 1/σ.
+pub fn gated_silu_scale(alpha_ffn_act: f64) -> f64 {
+    let a = 1.0 / (1.0 + 1.0 / (alpha_ffn_act * alpha_ffn_act));
+    let sigma = log_interpolate(a, 1.0 / 2f64.sqrt(), 0.5);
+    1.0 / sigma
+}
+
+/// Unit-scaled softmax cross-entropy backward factor β = s/sqrt(s-1)
+/// (Table 8), boosting the ~1/s-sized xent gradients to unit scale.
+pub fn xent_grad_scale(vocab: usize) -> f64 {
+    let s = vocab as f64;
+    s / (s - 1.0).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_interpolate_endpoints() {
+        assert!((log_interpolate(1.0, 3.0, 0.1) - 3.0).abs() < 1e-12);
+        assert!((log_interpolate(0.0, 3.0, 0.1) - 0.1).abs() < 1e-12);
+        // geometric midpoint at a = 0.5
+        let mid = log_interpolate(0.5, 4.0, 1.0);
+        assert!((mid - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matmul_rule_matches_e2() {
+        // §E.2: sqrt(d_fan_in)·σ_W·σ_X ⇒ factor 1/sqrt(fan-in)
+        let (out, gx, gw) = matmul_scales(256, 1024, 64 * 64);
+        assert!((out - 1.0 / 16.0).abs() < 1e-12);
+        assert!((gx - 1.0 / 32.0).abs() < 1e-12);
+        assert!((gw - 1.0 / 64.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn attention_scale_limits() {
+        // α → 0 (uniform attention / running mean): σ → sqrt(ln s / s) < 1,
+        // so the multiplier is > 1
+        let s = attention_out_scale(1e-6, 16, 64);
+        let expect = 1.0 / ((64f64.ln()) / 64.0).sqrt();
+        assert!((s - expect).abs() / expect < 1e-3);
+        // α → ∞ (one-hot attention): σ → 1
+        let s = attention_out_scale(1e6, 16, 64);
+        assert!((s - 1.0).abs() < 1e-3);
+        // monotone in α
+        assert!(attention_out_scale(0.5, 16, 64) > attention_out_scale(4.0, 16, 64));
+    }
+
+    #[test]
+    fn silu_scale_limits() {
+        // α → ∞: gate saturates to |x_gate| ⇒ σ → 1/sqrt(2), mult sqrt(2)
+        assert!((gated_silu_scale(1e8) - 2f64.sqrt()).abs() < 1e-3);
+        // α → 0: sigmoid → 1/2 ⇒ σ → 1/2, mult 2
+        assert!((gated_silu_scale(1e-8) - 2.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn xent_scale() {
+        let b = xent_grad_scale(256);
+        assert!((b - 256.0 / 255f64.sqrt()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,203 @@
+//! Manifest parsing: the L2↔L3 contract (see python/compile/specs.py).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// Weight-type classification, Table 1 of the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightKind {
+    /// fan-out ∝ width only (embedding table).
+    Input,
+    /// fan-in and fan-out ∝ width (all in-block matmuls).
+    Hidden,
+    /// fan-in ∝ width only (decoder head).
+    Output,
+    /// norm gains (only present under trainable_norms).
+    Norm,
+}
+
+impl WeightKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "emb" => WeightKind::Input,
+            "hidden" => WeightKind::Hidden,
+            "out" => WeightKind::Output,
+            "norm" => WeightKind::Norm,
+            _ => bail!("unknown weight kind {s:?}"),
+        })
+    }
+}
+
+/// One parameter tensor in packing order.
+#[derive(Debug, Clone)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: WeightKind,
+    pub fan_in: usize,
+    pub fan_out: usize,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// The compiled model shape.
+#[derive(Debug, Clone)]
+pub struct Spec {
+    pub width: usize,
+    pub depth: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    pub head_dim: usize,
+    pub trainable_norms: bool,
+}
+
+/// Parsed manifest.json for one artifact directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub dir: PathBuf,
+    pub spec: Spec,
+    pub tensors: Vec<TensorMeta>,
+    pub n_params: usize,
+    pub state_ext_len: usize,
+    pub loss_offset: usize,
+    pub rms_offset: usize,
+    pub scale_sites: BTreeMap<String, usize>,
+    pub n_scale_sites: usize,
+    pub quant_sites: BTreeMap<String, usize>,
+    pub n_quant_sites: usize,
+    pub rms_sites: Vec<String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}", dir.join("manifest.json").display()))?;
+        let j = Json::parse(&text)?;
+        let spec = j.get("spec")?;
+        let spec = Spec {
+            width: spec.get("width")?.as_usize()?,
+            depth: spec.get("depth")?.as_usize()?,
+            batch: spec.get("batch")?.as_usize()?,
+            seq: spec.get("seq")?.as_usize()?,
+            vocab: spec.get("vocab")?.as_usize()?,
+            head_dim: spec.get("head_dim")?.as_usize()?,
+            trainable_norms: spec.get("trainable_norms")?.as_bool()?,
+        };
+        let mut tensors = Vec::new();
+        for t in j.get("tensors")?.as_arr()? {
+            tensors.push(TensorMeta {
+                name: t.get("name")?.as_str()?.to_string(),
+                shape: t
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_>>()?,
+                kind: WeightKind::parse(t.get("kind")?.as_str()?)?,
+                fan_in: t.get("fan_in")?.as_usize()?,
+                fan_out: t.get("fan_out")?.as_usize()?,
+                offset: t.get("offset")?.as_usize()?,
+                size: t.get("size")?.as_usize()?,
+            });
+        }
+        let site_map = |key: &str| -> Result<BTreeMap<String, usize>> {
+            let mut m = BTreeMap::new();
+            for (k, v) in j.get(key)?.as_obj()? {
+                m.insert(k.clone(), v.as_usize()?);
+            }
+            Ok(m)
+        };
+        let man = Manifest {
+            name: j.get("name")?.as_str()?.to_string(),
+            dir: dir.to_path_buf(),
+            spec,
+            tensors,
+            n_params: j.get("n_params")?.as_usize()?,
+            state_ext_len: j.get("state_ext_len")?.as_usize()?,
+            loss_offset: j.get("loss_offset")?.as_usize()?,
+            rms_offset: j.get("rms_offset")?.as_usize()?,
+            scale_sites: site_map("scale_sites")?,
+            n_scale_sites: j.get("n_scale_sites")?.as_usize()?,
+            quant_sites: site_map("quant_sites")?,
+            n_quant_sites: j.get("n_quant_sites")?.as_usize()?,
+            rms_sites: j
+                .get("rms_sites")?
+                .as_arr()?
+                .iter()
+                .map(|s| Ok(s.as_str()?.to_string()))
+                .collect::<Result<_>>()?,
+        };
+        man.validate()?;
+        Ok(man)
+    }
+
+    /// Internal-consistency checks (run on load and in integration tests).
+    pub fn validate(&self) -> Result<()> {
+        let mut off = 0;
+        for t in &self.tensors {
+            if t.offset != off {
+                bail!("tensor {} offset {} != expected {}", t.name, t.offset, off);
+            }
+            let prod: usize = t.shape.iter().product();
+            if prod != t.size {
+                bail!("tensor {} size mismatch", t.name);
+            }
+            off += t.size;
+        }
+        if off != self.n_params {
+            bail!("n_params {} != packed {}", self.n_params, off);
+        }
+        if self.state_ext_len != 3 * self.n_params + 1 + self.rms_sites.len() {
+            bail!("state_ext_len inconsistent");
+        }
+        if self.loss_offset != 3 * self.n_params || self.rms_offset != self.loss_offset + 1 {
+            bail!("tail offsets inconsistent");
+        }
+        if self.scale_sites.len() != self.n_scale_sites
+            || self.quant_sites.len() != self.n_quant_sites
+        {
+            bail!("site counts inconsistent");
+        }
+        Ok(())
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<&TensorMeta> {
+        self.tensors
+            .iter()
+            .find(|t| t.name == name)
+            .with_context(|| format!("no tensor {name:?} in {}", self.name))
+    }
+
+    pub fn scale_site(&self, name: &str) -> Result<usize> {
+        self.scale_sites
+            .get(name)
+            .copied()
+            .with_context(|| format!("no scale site {name:?} in {}", self.name))
+    }
+
+    pub fn rms_index(&self, name: &str) -> Result<usize> {
+        self.rms_sites
+            .iter()
+            .position(|s| s == name)
+            .with_context(|| format!("no rms site {name:?}"))
+    }
+
+    pub fn init_path(&self) -> PathBuf {
+        self.dir.join("init.hlo.txt")
+    }
+    pub fn step_path(&self) -> PathBuf {
+        self.dir.join("step.hlo.txt")
+    }
+    pub fn eval_path(&self) -> PathBuf {
+        self.dir.join("eval.hlo.txt")
+    }
+    pub fn tail_path(&self) -> PathBuf {
+        self.dir.join("tail.hlo.txt")
+    }
+}

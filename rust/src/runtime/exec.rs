@@ -1,0 +1,232 @@
+//! PJRT execution: compile HLO-text artifacts once, then drive training
+//! with on-device state chaining.
+//!
+//! The train step is a single-array-root computation
+//! ``step(state_ext, tokens, scales, lr_scale, hyp, qmask) -> state_ext'``
+//! so the output `PjRtBuffer` feeds straight back in via `execute_b` with
+//! no host round-trip; per step only the telemetry tail ``[loss | rms]``
+//! is copied back (via the tiny `tail.hlo.txt` slice executable — the
+//! 0.5.1 CPU PJRT plugin does not implement partial raw reads).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::Manifest;
+
+/// A PJRT client + compiled executables for one artifact directory.
+pub struct Session {
+    pub client: PjRtClient,
+    pub manifest: Arc<Manifest>,
+    init: Executable,
+    step: Executable,
+    evalf: Executable,
+    /// Slices [loss | rms] out of the device state (the 0.5.1 CPU PJRT
+    /// plugin lacks CopyRawToHost, so partial reads go through XLA).
+    tail: Executable,
+}
+
+/// A compiled HLO module.
+pub struct Executable {
+    exe: PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    pub fn compile(client: &PjRtClient, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+
+    /// Execute with literal inputs; expect a single (array-root) output.
+    pub fn run_literals(&self, args: &[Literal]) -> Result<PjRtBuffer> {
+        let mut out = self.exe.execute::<Literal>(args)?;
+        take_single(&mut out, &self.name)
+    }
+
+    /// Execute with device buffers.
+    pub fn run_buffers(&self, args: &[&PjRtBuffer]) -> Result<PjRtBuffer> {
+        let mut out = self.exe.execute_b::<&PjRtBuffer>(args)?;
+        take_single(&mut out, &self.name)
+    }
+}
+
+fn take_single(out: &mut Vec<Vec<PjRtBuffer>>, name: &str) -> Result<PjRtBuffer> {
+    if out.len() != 1 {
+        bail!("{name}: expected 1 replica, got {}", out.len());
+    }
+    let mut inner = out.pop().unwrap();
+    if inner.len() != 1 {
+        bail!("{name}: expected single-array root, got {} outputs", inner.len());
+    }
+    Ok(inner.pop().unwrap())
+}
+
+/// The on-device training state plus its cached host-side inputs.
+pub struct TrainState {
+    pub state: PjRtBuffer,
+    /// Device-resident constant-per-run inputs (scales, lr_scale, qmask).
+    pub scales: PjRtBuffer,
+    pub lr_scale: PjRtBuffer,
+    pub qmask: PjRtBuffer,
+    pub step_count: u64,
+    /// Telemetry tail scratch: [loss | rms...].
+    tail: Vec<f32>,
+}
+
+impl Session {
+    pub fn open(manifest: Arc<Manifest>) -> Result<Session> {
+        let client = PjRtClient::cpu()?;
+        Self::open_with_client(client, manifest)
+    }
+
+    pub fn open_with_client(client: PjRtClient, manifest: Arc<Manifest>) -> Result<Session> {
+        let init = Executable::compile(&client, &manifest.init_path())?;
+        let step = Executable::compile(&client, &manifest.step_path())?;
+        let evalf = Executable::compile(&client, &manifest.eval_path())?;
+        let tail = Executable::compile(&client, &manifest.tail_path())?;
+        Ok(Session { client, manifest, init, step, evalf, tail })
+    }
+
+    fn upload(&self, xs: &[f32]) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<f32>(xs, &[xs.len()], None)?)
+    }
+
+    fn upload_tokens(&self, tokens: &[i32]) -> Result<PjRtBuffer> {
+        let m = &self.manifest;
+        Ok(self.client.buffer_from_host_buffer::<i32>(
+            tokens,
+            &[m.spec.batch, m.spec.seq + 1],
+            None,
+        )?)
+    }
+
+    /// Initialize a fresh training state on device.
+    ///
+    /// `init_std` and the runtime vectors come from the parametrization
+    /// engine ([`crate::parametrization::RuntimeVectors`]).
+    pub fn init(
+        &self,
+        seed: i32,
+        init_std: &[f32],
+        scales: &[f32],
+        lr_scale: &[f32],
+        qmask: &[f32],
+    ) -> Result<TrainState> {
+        let m = &self.manifest;
+        if init_std.len() != m.tensors.len() {
+            bail!("init_std len {} != {}", init_std.len(), m.tensors.len());
+        }
+        if scales.len() != m.n_scale_sites {
+            bail!("scales len {} != {}", scales.len(), m.n_scale_sites);
+        }
+        if lr_scale.len() != m.tensors.len() {
+            bail!("lr_scale len {} != {}", lr_scale.len(), m.tensors.len());
+        }
+        if qmask.len() != m.n_quant_sites {
+            bail!("qmask len {} != {}", qmask.len(), m.n_quant_sites);
+        }
+        let state = self
+            .init
+            .run_literals(&[Literal::scalar(seed), Literal::vec1(init_std)])?;
+        Ok(TrainState {
+            state,
+            scales: self.upload(scales)?,
+            lr_scale: self.upload(lr_scale)?,
+            qmask: self.upload(qmask)?,
+            step_count: 0,
+            tail: vec![0.0; 1 + m.rms_sites.len()],
+        })
+    }
+
+    /// Run one train step in place; returns the training loss.
+    ///
+    /// `hyp` is the 8-float hyper vector (see python/compile/optim.py);
+    /// tokens are `i32[batch, seq+1]` row-major.
+    pub fn step(&self, ts: &mut TrainState, tokens: &[i32], hyp: &[f32; 8]) -> Result<f32> {
+        self.step_chain(ts, tokens, hyp)?;
+        self.fetch_tail(ts)?;
+        Ok(ts.tail[0])
+    }
+
+    /// §Perf: the chain-only step — advances the on-device state without
+    /// fetching telemetry (no tail executable launch, no device→host
+    /// copy). The training driver uses this between logging points and
+    /// calls [`Session::fetch_tail`] at the cadence.
+    pub fn step_chain(&self, ts: &mut TrainState, tokens: &[i32], hyp: &[f32; 8]) -> Result<()> {
+        let m = &self.manifest;
+        debug_assert_eq!(tokens.len(), m.spec.batch * (m.spec.seq + 1));
+        let tok_buf = self.upload_tokens(tokens)?;
+        let hyp_buf = self.upload(&hyp[..])?;
+        let next = self.step.run_buffers(&[
+            &ts.state, &tok_buf, &ts.scales, &ts.lr_scale, &hyp_buf, &ts.qmask,
+        ])?;
+        ts.state = next;
+        ts.step_count += 1;
+        Ok(())
+    }
+
+    /// Fetch [loss | rms] from the device state into the host-side tail.
+    pub fn fetch_tail(&self, ts: &mut TrainState) -> Result<f32> {
+        let tail_buf = self.tail.run_buffers(&[&ts.state])?;
+        ts.tail = tail_buf.to_literal_sync()?.to_vec()?;
+        Ok(ts.tail[0])
+    }
+
+    /// Evaluate validation loss (+ telemetry) without touching the state.
+    pub fn eval(&self, ts: &TrainState, tokens: &[i32]) -> Result<EvalOut> {
+        let tok_buf = self.upload_tokens(tokens)?;
+        let out = self
+            .evalf
+            .run_buffers(&[&ts.state, &tok_buf, &ts.scales, &ts.qmask])?;
+        let lit = out.to_literal_sync()?;
+        let v: Vec<f32> = lit.to_vec()?;
+        Ok(EvalOut { loss: v[0], rms: v[1..].to_vec() })
+    }
+
+    /// Last-step telemetry (valid after `step`): (loss, rms tail).
+    pub fn telemetry<'a>(&self, ts: &'a TrainState) -> (f32, &'a [f32]) {
+        (ts.tail[0], &ts.tail[1..])
+    }
+
+    /// Download the full extended state (params + moments + tail).
+    pub fn download_state(&self, ts: &TrainState) -> Result<Vec<f32>> {
+        Ok(ts.state.to_literal_sync()?.to_vec()?)
+    }
+
+    /// Download just one named parameter tensor (via a full-state copy;
+    /// the CPU plugin has no partial reads).
+    pub fn download_tensor(&self, ts: &TrainState, name: &str) -> Result<Vec<f32>> {
+        let t = self.manifest.tensor(name)?;
+        let full = self.download_state(ts)?;
+        Ok(full[t.offset..t.offset + t.size].to_vec())
+    }
+
+    /// Replace the run-constant vectors (used by sweep re-use of state).
+    pub fn set_vectors(
+        &self,
+        ts: &mut TrainState,
+        scales: &[f32],
+        lr_scale: &[f32],
+        qmask: &[f32],
+    ) -> Result<()> {
+        ts.scales = self.upload(scales)?;
+        ts.lr_scale = self.upload(lr_scale)?;
+        ts.qmask = self.upload(qmask)?;
+        Ok(())
+    }
+}
+
+/// Output of an eval pass.
+#[derive(Debug, Clone)]
+pub struct EvalOut {
+    pub loss: f32,
+    pub rms: Vec<f32>,
+}

@@ -1,0 +1,16 @@
+//! S7 — PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! `artifact.rs` mirrors the manifest contract written by
+//! `python/compile/aot.py`; `exec.rs` wraps the `xla` crate
+//! (`PjRtClient::cpu()` → `HloModuleProto::from_text_file` → compile →
+//! `execute_b`) with on-device state chaining: the train step is
+//! state-in/state-out over a single flat buffer, and only the telemetry
+//! tail ([loss | rms]) is copied back per step.
+
+mod artifact;
+mod exec;
+mod registry;
+
+pub use artifact::{Manifest, Spec, TensorMeta, WeightKind};
+pub use exec::{Executable, Session, TrainState};
+pub use registry::Registry;

@@ -1,0 +1,101 @@
+//! Artifact registry: discovers artifact directories, caches compiled
+//! sessions, and picks the right shape for an experiment request.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use super::{Manifest, Session};
+
+/// Discovers and caches compiled [`Session`]s keyed by spec name.
+pub struct Registry {
+    root: PathBuf,
+    manifests: Vec<Arc<Manifest>>,
+    sessions: Mutex<HashMap<String, Arc<Session>>>,
+}
+
+impl Registry {
+    /// Scan `root` (usually `artifacts/`) for manifest directories.
+    pub fn open(root: &Path) -> Result<Registry> {
+        let mut manifests = Vec::new();
+        for entry in std::fs::read_dir(root)
+            .with_context(|| format!("reading artifact root {}", root.display()))?
+        {
+            let dir = entry?.path();
+            if dir.is_dir() && dir.join("manifest.json").exists() {
+                manifests.push(Arc::new(Manifest::load(&dir)?));
+            }
+        }
+        if manifests.is_empty() {
+            bail!(
+                "no artifacts under {} — run `make artifacts` first",
+                root.display()
+            );
+        }
+        manifests.sort_by_key(|m| m.name.clone());
+        Ok(Registry { root: root.to_path_buf(), manifests, sessions: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn manifests(&self) -> &[Arc<Manifest>] {
+        &self.manifests
+    }
+
+    pub fn manifest(&self, name: &str) -> Result<Arc<Manifest>> {
+        self.manifests
+            .iter()
+            .find(|m| m.name == name)
+            .cloned()
+            .with_context(|| format!("no artifact named {name:?} under {}", self.root.display()))
+    }
+
+    /// Find the artifact for a given shape (non-trainable norms).
+    pub fn find(&self, width: usize, depth: usize, batch: usize) -> Result<Arc<Manifest>> {
+        self.find_opt(width, depth, batch, false)
+    }
+
+    pub fn find_opt(
+        &self,
+        width: usize,
+        depth: usize,
+        batch: usize,
+        trainable_norms: bool,
+    ) -> Result<Arc<Manifest>> {
+        self.manifests
+            .iter()
+            .find(|m| {
+                m.spec.width == width
+                    && m.spec.depth == depth
+                    && m.spec.batch == batch
+                    && m.spec.trainable_norms == trainable_norms
+            })
+            .cloned()
+            .with_context(|| {
+                format!("no artifact for w{width} d{depth} b{batch} tn={trainable_norms}")
+            })
+    }
+
+    /// Compile (or fetch the cached) session for a manifest.
+    ///
+    /// XLA compilation is seconds per module, so sessions are shared;
+    /// `Session` itself is used from one thread at a time by the sweep
+    /// scheduler (each worker opens its own state, sharing the compiled
+    /// executable through PJRT which is thread-safe for execution).
+    pub fn session(&self, name: &str) -> Result<Arc<Session>> {
+        if let Some(s) = self.sessions.lock().unwrap().get(name) {
+            return Ok(s.clone());
+        }
+        let man = self.manifest(name)?;
+        let session = Arc::new(Session::open(man)?);
+        self.sessions
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), session.clone());
+        Ok(session)
+    }
+}

@@ -1,0 +1,72 @@
+//! 2-D HP-pair grids (the raw data behind Figs 14/15 and the transfer-
+//! error matrix of Fig 4).
+
+use anyhow::Result;
+
+use crate::data::Corpus;
+use crate::train::{RunConfig, Runner};
+
+use super::{run_all, Range, SweepJob};
+
+/// Losses over a (fixed HP x transfer HP) grid.
+#[derive(Debug, Clone)]
+pub struct PairGrid {
+    pub fixed_name: String,
+    pub transfer_name: String,
+    pub fixed_vals: Vec<f64>,
+    pub transfer_vals: Vec<f64>,
+    /// loss[i][j] for fixed_vals[i], transfer_vals[j].
+    pub loss: Vec<Vec<f64>>,
+}
+
+/// Train the full 2-D grid for one HP pair; all other HPs stay at
+/// `proto.hp` (the paper holds them at defaults, §A.5).
+pub fn pair_grid(
+    runner: &Runner,
+    corpus: &Corpus,
+    proto: &RunConfig,
+    fixed: (&str, Range),
+    transfer: (&str, Range),
+    workers: usize,
+) -> Result<PairGrid> {
+    let fixed_vals = fixed.1.grid();
+    let transfer_vals = transfer.1.grid();
+    let mut jobs = Vec::new();
+    for (i, &fv) in fixed_vals.iter().enumerate() {
+        for (j, &tv) in transfer_vals.iter().enumerate() {
+            let mut cfg = proto.clone();
+            cfg.hp.set(fixed.0, fv);
+            cfg.hp.set(transfer.0, tv);
+            cfg.schedule.peak_lr = cfg.hp.eta;
+            cfg.label = format!("{}-{}{}x{}{}", proto.label, fixed.0, i, transfer.0, j);
+            jobs.push(SweepJob { config: cfg, tag: vec![] });
+        }
+    }
+    let res = run_all(runner, corpus, &jobs, workers)?;
+    let mut loss = vec![vec![f64::INFINITY; transfer_vals.len()]; fixed_vals.len()];
+    for (k, r) in res.iter().enumerate() {
+        let i = k / transfer_vals.len();
+        let j = k % transfer_vals.len();
+        loss[i][j] = r.record.objective();
+    }
+    Ok(PairGrid {
+        fixed_name: fixed.0.to_string(),
+        transfer_name: transfer.0.to_string(),
+        fixed_vals,
+        transfer_vals,
+        loss,
+    })
+}
+
+impl PairGrid {
+    /// Render as CSV rows (fixed, transfer, loss).
+    pub fn csv_rows(&self) -> Vec<Vec<String>> {
+        let mut rows = Vec::new();
+        for (i, &f) in self.fixed_vals.iter().enumerate() {
+            for (j, &t) in self.transfer_vals.iter().enumerate() {
+                rows.push(vec![f.to_string(), t.to_string(), self.loss[i][j].to_string()]);
+            }
+        }
+        rows
+    }
+}

@@ -1,0 +1,128 @@
+//! Independent search (paper §4.5 / Appendix A.6) — the cheap sweep
+//! strategy that u-μP's decoupled HPs admit:
+//!
+//! 1. 1-D line search over the LR with every other HP at its default 1;
+//! 2. in parallel, a 1-D line search per non-LR HP (at the phase-1 LR);
+//! 3. combine the per-HP argmins and re-evaluate.
+//!
+//! For μP the combine phase *spikes* (Fig 1a) because its HPs are coupled
+//! — the experiment reproduces exactly that contrast.
+
+use anyhow::Result;
+
+use crate::data::Corpus;
+use crate::parametrization::HpSet;
+use crate::train::{RunConfig, Runner};
+use crate::util::stats;
+
+use super::{run_all, HpSpace, SweepJob, SweepResult};
+
+#[derive(Debug)]
+pub struct IndependentOutcome {
+    /// Phase 1: (eta, loss) line.
+    pub lr_line: Vec<(f64, f64)>,
+    pub best_eta: f64,
+    pub best_lr_loss: f64,
+    /// Phase 2: per-HP lines: (name, Vec<(value, loss)>).
+    pub hp_lines: Vec<(String, Vec<(f64, f64)>)>,
+    /// Phase 3: combined HP set and its loss.
+    pub combined_hp: HpSet,
+    pub combined_loss: f64,
+    /// Cumulative run count after each phase (Fig 1a x-axis).
+    pub runs_after_phase: [usize; 3],
+    pub all_results: Vec<SweepResult>,
+}
+
+pub fn independent_search(
+    runner: &Runner,
+    corpus: &Corpus,
+    space: &HpSpace,
+    proto: &RunConfig,
+    workers: usize,
+) -> Result<IndependentOutcome> {
+    let mut all_results = Vec::new();
+
+    // ---- phase 1: LR line search, everything else at default ----
+    let lr_grid = space.lr_range().grid();
+    let jobs: Vec<SweepJob> = lr_grid
+        .iter()
+        .enumerate()
+        .map(|(i, &eta)| {
+            let mut cfg = proto.clone();
+            cfg.hp = HpSet { eta, ..proto.hp };
+            cfg.schedule.peak_lr = eta;
+            cfg.label = format!("{}-lr{:02}", proto.label, i);
+            SweepJob { config: cfg, tag: vec![("eta".into(), eta)] }
+        })
+        .collect();
+    let res = run_all(runner, corpus, &jobs, workers)?;
+    let lr_line: Vec<(f64, f64)> =
+        res.iter().map(|r| (r.job.tag[0].1, r.record.objective())).collect();
+    let best = stats::argmin(&lr_line.iter().map(|p| p.1).collect::<Vec<_>>());
+    let best_eta = lr_line[best].0;
+    let best_lr_loss = lr_line[best].1;
+    let phase1_runs = res.len();
+    all_results.extend(res);
+
+    // ---- phase 2: per-HP 1-D lines at the phase-1 LR (parallelizable) ----
+    let mut jobs = Vec::new();
+    let mut line_specs: Vec<(String, Vec<f64>)> = Vec::new();
+    for (name, range) in space.mult_dims() {
+        let grid = range.grid();
+        for (i, &v) in grid.iter().enumerate() {
+            let mut cfg = proto.clone();
+            cfg.hp = HpSet { eta: best_eta, ..proto.hp };
+            cfg.hp.set(name, v);
+            cfg.schedule.peak_lr = best_eta;
+            cfg.label = format!("{}-{}{:02}", proto.label, name, i);
+            jobs.push(SweepJob {
+                config: cfg,
+                tag: vec![(name.to_string(), v)],
+            });
+        }
+        line_specs.push((name.to_string(), grid));
+    }
+    let res = run_all(runner, corpus, &jobs, workers)?;
+    let mut hp_lines = Vec::new();
+    let mut cursor = 0;
+    let mut combined_hp = HpSet { eta: best_eta, ..proto.hp };
+    for (name, grid) in &line_specs {
+        let line: Vec<(f64, f64)> = grid
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (v, res[cursor + i].record.objective()))
+            .collect();
+        let bi = stats::argmin(&line.iter().map(|p| p.1).collect::<Vec<_>>());
+        combined_hp.set(name, line[bi].0);
+        hp_lines.push((name.clone(), line));
+        cursor += grid.len();
+    }
+    let phase2_runs = phase1_runs + res.len();
+    all_results.extend(res);
+
+    // ---- phase 3: combine the argmins and re-evaluate ----
+    let mut cfg = proto.clone();
+    cfg.hp = combined_hp;
+    cfg.schedule.peak_lr = combined_hp.eta;
+    cfg.label = format!("{}-combined", proto.label);
+    let res = run_all(
+        runner,
+        corpus,
+        &[SweepJob { config: cfg, tag: vec![] }],
+        1,
+    )?;
+    let combined_loss = res[0].record.objective();
+    let phase3_runs = phase2_runs + 1;
+    all_results.extend(res);
+
+    Ok(IndependentOutcome {
+        lr_line,
+        best_eta,
+        best_lr_loss,
+        hp_lines,
+        combined_hp,
+        combined_loss,
+        runs_after_phase: [phase1_runs, phase2_runs, phase3_runs],
+        all_results,
+    })
+}

@@ -1,0 +1,23 @@
+//! S10 — the HP-search engine (paper §2.1, §4.5, §5.2-5.3, A.5/A.6).
+//!
+//! * [`space`] — per-HP log2 search grids (Table 5 ranges);
+//! * [`random`] — the standard μP random search;
+//! * [`independent`] — u-μP's independent search (LR line search, then
+//!   parallel 1-D sweeps, then combine);
+//! * [`grid`] — 2-D HP-pair grids (Figs 14/15);
+//! * [`transfer_error`] — Algorithm 1;
+//! * [`scheduler`] — thread-pool execution of run batches.
+
+mod grid;
+mod independent;
+mod random;
+mod scheduler;
+mod space;
+mod transfer_error;
+
+pub use grid::{pair_grid, PairGrid};
+pub use independent::{independent_search, IndependentOutcome};
+pub use random::{random_search, simulate_run_counts, RandomOutcome};
+pub use scheduler::{run_all, run_all_parallel, SweepJob, SweepResult};
+pub use space::{HpSpace, Range};
+pub use transfer_error::{transfer_error, TransferError};

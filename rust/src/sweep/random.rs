@@ -1,0 +1,131 @@
+//! Random search (the standard μP sweep protocol, §2.1 / A.6): sample HP
+//! combinations uniformly from the joint grid, train each, keep the best.
+//! `simulate_run_counts` reproduces Fig 1(a)'s best-loss-vs-#runs curve
+//! by resampling subsets of the completed runs (exactly as §A.6 does).
+
+use anyhow::Result;
+
+use crate::data::Corpus;
+use crate::parametrization::HpSet;
+use crate::train::{RunConfig, Runner};
+use crate::util::{stats, Rng};
+
+use super::{run_all, HpSpace, SweepJob, SweepResult};
+
+#[derive(Debug)]
+pub struct RandomOutcome {
+    pub results: Vec<SweepResult>,
+    pub best: usize,
+    pub best_hp: HpSet,
+    pub best_loss: f64,
+}
+
+/// Run an `n_runs` random search over `space`, using `proto` for
+/// everything except the swept HP values.
+pub fn random_search(
+    runner: &Runner,
+    corpus: &Corpus,
+    space: &HpSpace,
+    proto: &RunConfig,
+    n_runs: usize,
+    seed: u64,
+    workers: usize,
+) -> Result<RandomOutcome> {
+    let mut rng = Rng::new(seed).fork("random-search");
+    let mut jobs = Vec::with_capacity(n_runs);
+    for i in 0..n_runs {
+        let mut hp = proto.hp;
+        let mut tag = Vec::new();
+        for (name, range) in &space.dims {
+            let v = range.sample(&mut rng);
+            hp.set(name, v);
+            tag.push((name.to_string(), v));
+        }
+        let mut cfg = proto.clone();
+        cfg.hp = hp;
+        cfg.schedule.peak_lr = hp.eta;
+        cfg.label = format!("{}-rs{:03}", proto.label, i);
+        jobs.push(SweepJob { config: cfg, tag });
+    }
+    let results = run_all(runner, corpus, &jobs, workers)?;
+    let losses: Vec<f64> = results.iter().map(|r| r.record.objective()).collect();
+    let best = stats::argmin(&losses);
+    Ok(RandomOutcome {
+        best,
+        best_hp: results[best].job.config.hp,
+        best_loss: losses[best],
+        results,
+    })
+}
+
+/// Fig 1(a) curve: expected best loss after k runs, estimated by
+/// resampling `trials` random k-subsets of the finished results.
+pub fn simulate_run_counts(
+    results: &[SweepResult],
+    ks: &[usize],
+    trials: usize,
+    seed: u64,
+) -> Vec<(usize, f64)> {
+    let losses: Vec<f64> = results.iter().map(|r| r.record.objective()).collect();
+    let mut rng = Rng::new(seed).fork("subset-sim");
+    ks.iter()
+        .map(|&k| {
+            let k = k.min(losses.len());
+            let mut acc = 0.0;
+            for _ in 0..trials {
+                let idx = rng.sample_indices(losses.len(), k);
+                let best = idx.iter().map(|&i| losses[i]).fold(f64::INFINITY, f64::min);
+                acc += best;
+            }
+            (k, acc / trials as f64)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::RunRecord;
+    use std::collections::BTreeMap;
+
+    fn fake_result(loss: f64) -> SweepResult {
+        SweepResult {
+            job: SweepJob {
+                config: RunConfig::quick(
+                    "f",
+                    crate::parametrization::Parametrization::new(
+                        crate::parametrization::Scheme::Umup,
+                    ),
+                    HpSet::default(),
+                    1,
+                ),
+                tag: vec![],
+            },
+            record: RunRecord {
+                label: "f".into(),
+                train_curve: vec![],
+                valid_curve: vec![],
+                final_valid_loss: loss,
+                rms_curves: BTreeMap::new(),
+                final_rms: vec![],
+                diverged: false,
+                wall_seconds: 0.0,
+            },
+        }
+    }
+
+    #[test]
+    fn run_count_curve_is_monotone() {
+        let results: Vec<SweepResult> =
+            (0..50).map(|i| fake_result(3.0 + (i as f64 * 0.731).sin())).collect();
+        let curve = simulate_run_counts(&results, &[1, 4, 16, 50], 200, 7);
+        for w in curve.windows(2) {
+            assert!(w[1].1 <= w[0].1 + 1e-9, "{curve:?}");
+        }
+        // with all runs the sim equals the true min
+        let all = curve.last().unwrap().1;
+        let true_min =
+            results.iter().map(|r| r.record.objective()).fold(f64::INFINITY, f64::min);
+        assert!((all - true_min).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,139 @@
+//! Parallel run scheduler: executes batches of training runs across a
+//! thread pool.
+//!
+//! The `xla` crate's PJRT handles are `Rc`-based (!Send), so sessions
+//! cannot cross threads: each worker compiles its *own* [`Session`] from
+//! the (plain-data, `Send`) manifest and amortizes that compile over its
+//! share of the job queue.  XLA's own intra-op thread pool already uses
+//! the cores during each run, so `workers` trades batch-level against
+//! op-level parallelism — tiny proxy models profit from more workers.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::data::Corpus;
+use crate::runtime::{Manifest, Session};
+use crate::train::{RunConfig, RunRecord, Runner};
+
+/// One sweep job: a run config (the manifest/corpus come from the caller).
+#[derive(Debug, Clone)]
+pub struct SweepJob {
+    pub config: RunConfig,
+    /// Arbitrary tag carried through to the result (e.g. HP values).
+    pub tag: Vec<(String, f64)>,
+}
+
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub job: SweepJob,
+    pub record: RunRecord,
+}
+
+/// Run all jobs with `workers` threads; results keep job order.
+pub fn run_all_parallel(
+    manifest: Arc<Manifest>,
+    corpus: &Corpus,
+    jobs: &[SweepJob],
+    workers: usize,
+) -> Result<Vec<SweepResult>> {
+    let workers = workers.max(1).min(jobs.len().max(1));
+    if workers == 1 {
+        // fast path: reuse the caller's thread without a second compile
+        let session = Arc::new(Session::open(manifest)?);
+        let runner = Runner::new(session);
+        return run_all(&runner, corpus, jobs, 1);
+    }
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<SweepResult>>> = Mutex::new(vec![None; jobs.len()]);
+    let errors: Mutex<Vec<anyhow::Error>> = Mutex::new(Vec::new());
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let manifest = manifest.clone();
+            let next = &next;
+            let results = &results;
+            let errors = &errors;
+            scope.spawn(move || {
+                let runner = match Session::open(manifest) {
+                    Ok(s) => Runner::new(Arc::new(s)),
+                    Err(e) => {
+                        errors.lock().unwrap().push(e.context("worker session"));
+                        return;
+                    }
+                };
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= jobs.len() {
+                        break;
+                    }
+                    match runner.run(&jobs[i].config, corpus) {
+                        Ok(record) => {
+                            results.lock().unwrap()[i] =
+                                Some(SweepResult { job: jobs[i].clone(), record });
+                        }
+                        Err(e) => {
+                            errors.lock().unwrap().push(e.context(format!(
+                                "sweep job {} ({})",
+                                i, jobs[i].config.label
+                            )));
+                            break;
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    let errs = errors.into_inner().unwrap();
+    if let Some(e) = errs.into_iter().next() {
+        return Err(e);
+    }
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| r.with_context(|| format!("job {i} not completed")))
+        .collect()
+}
+
+/// Sequential runner-local execution (used by single-session callers and
+/// as the workers' inner loop).
+pub fn run_all(
+    runner: &Runner,
+    corpus: &Corpus,
+    jobs: &[SweepJob],
+    _workers: usize,
+) -> Result<Vec<SweepResult>> {
+    jobs.iter()
+        .map(|job| {
+            let record = runner
+                .run(&job.config, corpus)
+                .with_context(|| format!("sweep job {}", job.config.label))?;
+            Ok(SweepResult { job: job.clone(), record })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_construction() {
+        let j = SweepJob {
+            config: crate::train::RunConfig::quick(
+                "x",
+                crate::parametrization::Parametrization::new(
+                    crate::parametrization::Scheme::Umup,
+                ),
+                crate::parametrization::HpSet::default(),
+                1,
+            ),
+            tag: vec![("eta".into(), 0.5)],
+        };
+        assert_eq!(j.tag[0].1, 0.5);
+    }
+}

@@ -1,0 +1,121 @@
+//! HP search spaces: per-HP log2 grids (paper Table 5).
+
+use crate::parametrization::Scheme;
+
+/// A log2-uniform search range [2^lo, 2^hi] discretized at `step` in
+/// log2 (the paper sweeps LR on a 2^(1/2) grid, §A.7).
+#[derive(Debug, Clone, Copy)]
+pub struct Range {
+    pub log2_lo: f64,
+    pub log2_hi: f64,
+    pub log2_step: f64,
+}
+
+impl Range {
+    pub fn new(log2_lo: f64, log2_hi: f64, log2_step: f64) -> Range {
+        Range { log2_lo, log2_hi, log2_step }
+    }
+
+    pub fn grid(&self) -> Vec<f64> {
+        let mut v = Vec::new();
+        let mut x = self.log2_lo;
+        while x <= self.log2_hi + 1e-9 {
+            v.push(2f64.powf(x));
+            x += self.log2_step;
+        }
+        v
+    }
+
+    pub fn sample(&self, rng: &mut crate::util::Rng) -> f64 {
+        let g = self.grid();
+        g[rng.below(g.len())]
+    }
+}
+
+/// The HP space for one scheme (Table 5 ranges, rescaled to this
+/// testbed's proxy by centering the LR range on the observed optimum).
+#[derive(Debug, Clone)]
+pub struct HpSpace {
+    pub scheme: Scheme,
+    /// (hp name, range) — "eta" first by convention.
+    pub dims: Vec<(&'static str, Range)>,
+}
+
+impl HpSpace {
+    /// Table 5 search ranges (log2): μP η ∈ [2^-10, 2^-6], multipliers
+    /// [2^-2, 2^2]; u-μP η ∈ [2^-1, 2^3] shifted down for this testbed's
+    /// smaller batch/seq, multipliers [2^-3, 2^3].
+    pub fn table5(scheme: Scheme) -> HpSpace {
+        let mults_mup = Range::new(-2.0, 2.0, 1.0);
+        let mults_umup = Range::new(-3.0, 3.0, 1.0);
+        let dims: Vec<(&'static str, Range)> = match scheme {
+            Scheme::Sp => vec![
+                ("eta", Range::new(-12.0, -5.0, 0.5)),
+                ("sigma_init", Range::new(-2.0, 2.0, 1.0)),
+            ],
+            Scheme::Mup | Scheme::Intermediate => vec![
+                ("eta", Range::new(-11.0, -5.0, 0.5)),
+                ("eta_emb_hat", Range::new(0.0, 8.0, 1.0)),
+                ("sigma_init", mults_mup),
+                ("alpha_emb", mults_mup),
+                ("alpha_attn", mults_mup),
+                ("alpha_out", mults_mup),
+            ],
+            Scheme::Umup => vec![
+                ("eta", Range::new(-4.0, 2.0, 0.5)),
+                ("alpha_attn", Range::new(-2.0, 2.0, 1.0)),
+                ("alpha_res", mults_umup),
+                ("alpha_res_attn_ratio", mults_umup),
+                ("alpha_ffn_act", mults_umup),
+                ("alpha_out", mults_umup),
+            ],
+        };
+        HpSpace { scheme, dims }
+    }
+
+    pub fn range_of(&self, name: &str) -> Option<Range> {
+        self.dims.iter().find(|(n, _)| *n == name).map(|(_, r)| *r)
+    }
+
+    pub fn lr_range(&self) -> Range {
+        self.range_of("eta").expect("every space has eta")
+    }
+
+    /// Non-LR dimensions.
+    pub fn mult_dims(&self) -> impl Iterator<Item = &(&'static str, Range)> {
+        self.dims.iter().filter(|(n, _)| *n != "eta")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_is_log_spaced() {
+        let r = Range::new(-2.0, 2.0, 1.0);
+        assert_eq!(r.grid(), vec![0.25, 0.5, 1.0, 2.0, 4.0]);
+        let r = Range::new(-1.0, 0.0, 0.5);
+        assert_eq!(r.grid().len(), 3);
+    }
+
+    #[test]
+    fn spaces_have_eta_first() {
+        for s in [Scheme::Sp, Scheme::Mup, Scheme::Umup] {
+            let sp = HpSpace::table5(s);
+            assert_eq!(sp.dims[0].0, "eta");
+            assert!(sp.lr_range().grid().len() >= 8);
+        }
+    }
+
+    #[test]
+    fn sampling_stays_on_grid() {
+        let mut rng = crate::util::Rng::new(3);
+        let r = Range::new(-3.0, 3.0, 1.0);
+        let grid = r.grid();
+        for _ in 0..100 {
+            let v = r.sample(&mut rng);
+            assert!(grid.iter().any(|g| (g - v).abs() < 1e-12));
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! Transfer error — the paper's Algorithm 1 (§5.2): how much loss is lost
+//! by tuning the *transfer* HP at a non-optimal value of the *fixed* HP
+//! and carrying it over to the fixed HP's optimum.
+
+use crate::util::stats;
+
+use super::PairGrid;
+
+#[derive(Debug, Clone)]
+pub struct TransferError {
+    pub fixed_name: String,
+    pub transfer_name: String,
+    pub error: f64,
+}
+
+/// Algorithm 1 over a completed [`PairGrid`].
+///
+/// err = mean over f != f* of [ L(f*, argmin_t L(f, t)) - L(f*, t*) ].
+pub fn transfer_error(grid: &PairGrid) -> TransferError {
+    let nf = grid.fixed_vals.len();
+    let nt = grid.transfer_vals.len();
+    // global argmin (f*, t*)
+    let mut best = (0usize, 0usize);
+    let mut best_loss = f64::INFINITY;
+    for i in 0..nf {
+        for j in 0..nt {
+            if grid.loss[i][j] < best_loss {
+                best_loss = grid.loss[i][j];
+                best = (i, j);
+            }
+        }
+    }
+    let (fs, ts) = best;
+    let mut err = 0.0;
+    let mut n = 0usize;
+    for f in 0..nf {
+        if f == fs {
+            continue;
+        }
+        // best transfer value at this (non-optimal) fixed value
+        let t = stats::argmin(&grid.loss[f]);
+        let delta = grid.loss[fs][t] - grid.loss[fs][ts];
+        if delta.is_finite() {
+            err += delta;
+            n += 1;
+        } else {
+            // a diverged transfer pick is the worst possible outcome;
+            // penalize with the grid's worst finite excess
+            let worst = grid
+                .loss
+                .iter()
+                .flatten()
+                .filter(|l| l.is_finite())
+                .fold(f64::NEG_INFINITY, |a, &b| a.max(b));
+            err += worst - grid.loss[fs][ts];
+            n += 1;
+        }
+    }
+    TransferError {
+        fixed_name: grid.fixed_name.clone(),
+        transfer_name: grid.transfer_name.clone(),
+        error: if n > 0 { err / n as f64 } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid(loss: Vec<Vec<f64>>) -> PairGrid {
+        PairGrid {
+            fixed_name: "a".into(),
+            transfer_name: "b".into(),
+            fixed_vals: (0..loss.len()).map(|i| i as f64).collect(),
+            transfer_vals: (0..loss[0].len()).map(|i| i as f64).collect(),
+            loss,
+        }
+    }
+
+    #[test]
+    fn independent_hps_have_zero_error() {
+        // separable bowl: argmin_t is the same column for every row
+        let g = grid(vec![
+            vec![3.0, 1.0, 2.0],
+            vec![4.0, 2.0, 3.0],
+            vec![5.0, 3.0, 4.0],
+        ]);
+        let e = transfer_error(&g);
+        assert_eq!(e.error, 0.0);
+    }
+
+    #[test]
+    fn coupled_hps_have_positive_error() {
+        // diagonal valley: optimal t shifts with f (the Fig 14 pattern)
+        let g = grid(vec![
+            vec![0.0, 1.0, 4.0],
+            vec![1.0, 0.5, 1.0],
+            vec![4.0, 1.0, 0.4],
+        ]);
+        let e = transfer_error(&g);
+        assert!(e.error > 0.5, "{e:?}");
+    }
+
+    #[test]
+    fn handles_divergence() {
+        let g = grid(vec![vec![1.0, 0.0], vec![f64::INFINITY, 5.0]]);
+        let e = transfer_error(&g);
+        assert!(e.error.is_finite());
+    }
+}

@@ -1,0 +1,9 @@
+//! S9 — training driver: LR schedules, the run loop, run records.
+
+mod record;
+mod runner;
+mod schedule;
+
+pub use record::RunRecord;
+pub use runner::{RunConfig, Runner};
+pub use schedule::{AdamConfig, Schedule, ScheduleKind};

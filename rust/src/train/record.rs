@@ -1,0 +1,105 @@
+//! Run records: everything one training run produced, serializable to
+//! JSON for the experiment reports.
+
+use std::collections::BTreeMap;
+
+use crate::util::Json;
+
+/// The outcome of one training run.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    pub label: String,
+    /// (step, training loss) at the logging cadence.
+    pub train_curve: Vec<(u64, f64)>,
+    /// (step, validation loss).
+    pub valid_curve: Vec<(u64, f64)>,
+    /// Final smoothed validation loss (the sweep objective).
+    pub final_valid_loss: f64,
+    /// RMS telemetry snapshots: site name -> (step, rms) series.
+    pub rms_curves: BTreeMap<String, Vec<(u64, f64)>>,
+    /// Full end-of-training RMS telemetry (site name, rms) — Fig 6 right.
+    pub final_rms: Vec<(String, f64)>,
+    pub diverged: bool,
+    pub wall_seconds: f64,
+}
+
+impl RunRecord {
+    pub fn to_json(&self) -> Json {
+        let curve = |c: &Vec<(u64, f64)>| {
+            Json::Arr(
+                c.iter()
+                    .map(|&(s, l)| Json::Arr(vec![Json::Num(s as f64), Json::Num(l)]))
+                    .collect(),
+            )
+        };
+        let mut m = BTreeMap::new();
+        m.insert("label".into(), Json::Str(self.label.clone()));
+        m.insert("train_curve".into(), curve(&self.train_curve));
+        m.insert("valid_curve".into(), curve(&self.valid_curve));
+        m.insert("final_valid_loss".into(), Json::Num(self.final_valid_loss));
+        m.insert("diverged".into(), Json::Bool(self.diverged));
+        m.insert("wall_seconds".into(), Json::Num(self.wall_seconds));
+        let rms: BTreeMap<String, Json> =
+            self.rms_curves.iter().map(|(k, v)| (k.clone(), curve(v))).collect();
+        m.insert("rms_curves".into(), Json::Obj(rms));
+        m.insert(
+            "final_rms".into(),
+            Json::Arr(
+                self.final_rms
+                    .iter()
+                    .map(|(n, v)| Json::Arr(vec![Json::Str(n.clone()), Json::Num(*v)]))
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+
+    /// The sweep objective: final validation loss, with divergence mapped
+    /// to +inf so argmin never picks an exploded run.
+    pub fn objective(&self) -> f64 {
+        if self.diverged || !self.final_valid_loss.is_finite() {
+            f64::INFINITY
+        } else {
+            self.final_valid_loss
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_round_trips() {
+        let mut rms = BTreeMap::new();
+        rms.insert("w.emb".to_string(), vec![(0u64, 1.0f64), (10, 1.1)]);
+        let r = RunRecord {
+            label: "test".into(),
+            train_curve: vec![(1, 5.0), (2, 4.5)],
+            valid_curve: vec![(2, 4.8)],
+            final_valid_loss: 4.8,
+            rms_curves: rms,
+            final_rms: vec![("w.emb".into(), 1.0)],
+            diverged: false,
+            wall_seconds: 1.5,
+        };
+        let j = r.to_json().dump();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("final_valid_loss").unwrap().as_f64().unwrap(), 4.8);
+    }
+
+    #[test]
+    fn diverged_objective_is_inf() {
+        let r = RunRecord {
+            label: "x".into(),
+            train_curve: vec![],
+            valid_curve: vec![],
+            final_valid_loss: 2.0,
+            rms_curves: BTreeMap::new(),
+            final_rms: vec![],
+            diverged: true,
+            wall_seconds: 0.0,
+        };
+        assert_eq!(r.objective(), f64::INFINITY);
+    }
+}

@@ -1,0 +1,245 @@
+//! The training run loop: drive an AOT-compiled step executable over the
+//! corpus under a parametrization, schedule and precision mode.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::data::{BatchSampler, Corpus};
+use crate::parametrization::{HpSet, Parametrization, Precision, RuntimeVectors};
+use crate::runtime::Session;
+use crate::train::{AdamConfig, RunRecord, Schedule};
+
+/// Everything one run needs.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub label: String,
+    pub parametrization: Parametrization,
+    pub hp: HpSet,
+    pub precision: Precision,
+    pub schedule: Schedule,
+    pub adam: AdamConfig,
+    pub seed: i32,
+    /// Log train loss / RMS every `log_every` steps (0 = final only).
+    pub log_every: u64,
+    /// Validation batches averaged for the objective.
+    pub valid_batches: usize,
+    /// Track these RMS sites over training (Fig 19/20); empty = none.
+    pub rms_sites: Vec<String>,
+    /// Per-tensor LR multipliers on top of the parametrization rule
+    /// (Fig 13 / A.4): (tensor-name substring, multiplier).
+    pub lr_tweaks: Vec<(String, f64)>,
+}
+
+impl RunConfig {
+    pub fn quick(label: &str, p: Parametrization, hp: HpSet, steps: u64) -> Self {
+        RunConfig {
+            label: label.to_string(),
+            parametrization: p,
+            hp,
+            precision: Precision::Fp32,
+            schedule: Schedule::standard(hp.eta, steps, (steps / 4).max(1)),
+            adam: AdamConfig::default(),
+            seed: 0,
+            log_every: (steps / 16).max(1),
+            valid_batches: 4,
+            rms_sites: Vec::new(),
+            lr_tweaks: Vec::new(),
+        }
+    }
+}
+
+/// Apply Fig 13-style per-tensor LR multipliers on top of the rule.
+fn apply_lr_tweaks(
+    man: &crate::runtime::Manifest,
+    vecs: &mut RuntimeVectors,
+    tweaks: &[(String, f64)],
+) {
+    for (pat, mult) in tweaks {
+        for (i, t) in man.tensors.iter().enumerate() {
+            if t.name.ends_with(pat.as_str()) || t.name == *pat {
+                vecs.lr_scale[i] *= *mult as f32;
+            }
+        }
+    }
+}
+
+/// Runs [`RunConfig`]s against one compiled session.
+pub struct Runner {
+    pub session: Arc<Session>,
+}
+
+impl Runner {
+    pub fn new(session: Arc<Session>) -> Self {
+        Runner { session }
+    }
+
+    pub fn run(&self, cfg: &RunConfig, corpus: &Corpus) -> Result<RunRecord> {
+        Ok(self.run_full(cfg, corpus)?.0)
+    }
+
+    /// Like [`Runner::run`] but also returns the final on-device state
+    /// (for downstream probe evaluation, Fig 7 / Table 4).
+    pub fn run_full(
+        &self,
+        cfg: &RunConfig,
+        corpus: &Corpus,
+    ) -> Result<(RunRecord, crate::runtime::TrainState)> {
+        let t0 = Instant::now();
+        let man = self.session.manifest.clone();
+        let mut vecs =
+            RuntimeVectors::build(&man, &cfg.parametrization, &cfg.hp, cfg.precision)?;
+        apply_lr_tweaks(&man, &mut vecs, &cfg.lr_tweaks);
+        let mut ts = self.session.init(
+            cfg.seed,
+            &vecs.init_std,
+            &vecs.scales,
+            &vecs.lr_scale,
+            &vecs.qmask,
+        )?;
+
+        let mut train =
+            BatchSampler::new(corpus.train_slice(), man.spec.batch, man.spec.seq, cfg.seed as u64);
+        let mut valid = BatchSampler::new(
+            corpus.valid_slice(),
+            man.spec.batch,
+            man.spec.seq,
+            777,
+        );
+
+        let rms_idx: Vec<(String, usize)> = cfg
+            .rms_sites
+            .iter()
+            .filter_map(|s| man.rms_index(s).ok().map(|i| (s.clone(), i)))
+            .collect();
+
+        let mut train_curve = Vec::new();
+        let mut valid_curve = Vec::new();
+        let mut rms_curves: BTreeMap<String, Vec<(u64, f64)>> = BTreeMap::new();
+        let mut diverged = false;
+        let mut first_loss: Option<f64> = None;
+
+        // §Perf: the telemetry tail is only fetched at the logging
+        // cadence (divergence is checked there too) — between cadence
+        // points the state chains on-device with no host sync.
+        let cadence = cfg.log_every.max(1);
+        for t in 1..=cfg.schedule.total_steps {
+            let lr = cfg.schedule.lr_at(t);
+            let hyp = cfg.adam.hyp(lr, t);
+            let tokens = train.sample();
+            let at_cadence =
+                t % cadence == 0 || t == cfg.schedule.total_steps || t == 1;
+            let loss = if at_cadence {
+                self.session.step(&mut ts, &tokens, &hyp)? as f64
+            } else {
+                self.session.step_chain(&mut ts, &tokens, &hyp)?;
+                continue;
+            };
+            if first_loss.is_none() {
+                first_loss = Some(loss);
+            }
+            if !loss.is_finite() || loss > first_loss.unwrap() * 3.0 + 5.0 {
+                diverged = true;
+                train_curve.push((t, loss));
+                break;
+            }
+            if cfg.log_every > 0 {
+                train_curve.push((t, loss));
+                if !rms_idx.is_empty() {
+                    let (_, rms) = self.session.telemetry(&ts);
+                    for (name, i) in &rms_idx {
+                        rms_curves
+                            .entry(name.clone())
+                            .or_default()
+                            .push((t, rms[*i] as f64));
+                    }
+                }
+            }
+        }
+
+        // validation objective
+        let final_valid_loss = if diverged {
+            f64::INFINITY
+        } else {
+            valid.reset();
+            let mut acc = 0.0;
+            let n = cfg.valid_batches.max(1);
+            for _ in 0..n {
+                let tokens = valid.next_sequential();
+                acc += self.session.eval(&ts, &tokens)?.loss as f64;
+            }
+            let v = acc / n as f64;
+            valid_curve.push((cfg.schedule.total_steps, v));
+            v
+        };
+
+        let (_, rms_tail) = self.session.telemetry(&ts);
+        let final_rms: Vec<(String, f64)> = man
+            .rms_sites
+            .iter()
+            .cloned()
+            .zip(rms_tail.iter().map(|&x| x as f64))
+            .collect();
+
+        let record = RunRecord {
+            label: cfg.label.clone(),
+            train_curve,
+            valid_curve,
+            final_valid_loss,
+            rms_curves,
+            final_rms,
+            diverged,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+        };
+        Ok((record, ts))
+    }
+
+    /// Evaluate a trained state on another corpus (mean loss over
+    /// `n_batches` sequential validation windows).
+    pub fn eval_on(
+        &self,
+        ts: &crate::runtime::TrainState,
+        corpus: &Corpus,
+        n_batches: usize,
+    ) -> Result<f64> {
+        let man = &self.session.manifest;
+        let mut sampler =
+            BatchSampler::new(corpus.valid_slice(), man.spec.batch, man.spec.seq, 42);
+        let mut acc = 0.0;
+        for _ in 0..n_batches.max(1) {
+            acc += self.session.eval(ts, &sampler.next_sequential())?.loss as f64;
+        }
+        Ok(acc / n_batches.max(1) as f64)
+    }
+
+    /// Evaluate the *initial* model (step 0) telemetry — used by Fig 6
+    /// (init RMS) and Fig 25 (attention-out growth at init).
+    pub fn eval_at_init(
+        &self,
+        cfg: &RunConfig,
+        corpus: &Corpus,
+    ) -> Result<(f64, Vec<(String, f64)>)> {
+        let man = self.session.manifest.clone();
+        let vecs =
+            RuntimeVectors::build(&man, &cfg.parametrization, &cfg.hp, cfg.precision)?;
+        let ts = self.session.init(
+            cfg.seed,
+            &vecs.init_std,
+            &vecs.scales,
+            &vecs.lr_scale,
+            &vecs.qmask,
+        )?;
+        let mut valid =
+            BatchSampler::new(corpus.valid_slice(), man.spec.batch, man.spec.seq, 777);
+        let out = self.session.eval(&ts, &valid.next_sequential())?;
+        let named = man
+            .rms_sites
+            .iter()
+            .cloned()
+            .zip(out.rms.iter().map(|&x| x as f64))
+            .collect();
+        Ok((out.loss as f64, named))
+    }
+}

