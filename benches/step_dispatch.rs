@@ -8,8 +8,9 @@
 use std::path::Path;
 use std::sync::Arc;
 
+use umup::engine::{Engine, EngineConfig};
 use umup::parametrization::{HpSet, Parametrization, Precision, RuntimeVectors, Scheme};
-use umup::runtime::{Manifest, Session};
+use umup::runtime::Manifest;
 use umup::train::AdamConfig;
 use umup::util::bench::Bencher;
 use umup::util::Rng;
@@ -19,6 +20,7 @@ fn main() -> anyhow::Result<()> {
     bench.budget = std::time::Duration::from_millis(1200);
     bench.min_samples = 5;
     let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = Engine::new(EngineConfig { workers: 1, ..EngineConfig::default() })?;
     let only = std::env::var("UMUP_BENCH_ONLY").ok();
     // w256 is opt-in (UMUP_BENCH_ONLY=w256): ~2s/step on a 1-core testbed
     for name in ["w32_d4_b16_t64_v256", "w64_d4_b16_t64_v256", "w128_d4_b16_t64_v256"] {
@@ -28,7 +30,7 @@ fn main() -> anyhow::Result<()> {
             }
         }
         let man = Arc::new(Manifest::load(&root.join(name))?);
-        let session = Session::open(man.clone())?;
+        let session = engine.session(&man)?;
         for precision in [Precision::Fp32, Precision::Fp8Naive] {
             let vecs = RuntimeVectors::build(
                 &man,

@@ -1,5 +1,6 @@
-//! Bench — Fig 1(a) machinery: sweep scheduler scaling and the cost of
-//! the search bookkeeping itself (sampling, subset simulation, transfer
+//! Bench — Fig 1(a) machinery: engine scaling, the warm-vs-cold engine
+//! contrast (compile amortization + run-cache wins), and the cost of the
+//! search bookkeeping itself (sampling, subset simulation, transfer
 //! error) relative to the runs it schedules.
 
 use std::path::Path;
@@ -7,9 +8,10 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use umup::data::{Corpus, CorpusConfig};
+use umup::engine::{Engine, EngineConfig};
 use umup::parametrization::{HpSet, Parametrization, Scheme};
 use umup::runtime::Manifest;
-use umup::sweep::{run_all_parallel, transfer_error, PairGrid, SweepJob};
+use umup::sweep::{transfer_error, PairGrid, SweepJob};
 use umup::train::{RunConfig, Schedule};
 use umup::util::bench::{black_box, Bencher};
 
@@ -33,14 +35,14 @@ fn main() -> anyhow::Result<()> {
         black_box(umup::util::stats::percentile(&fake, 10.0));
     });
 
-    // scheduler scaling: real tiny runs, 1 vs 4 workers
+    // real tiny runs for the engine benchmarks
     let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let man = Arc::new(Manifest::load(&root.join("w32_d2_b4_t16_v64"))?);
-    let corpus = Corpus::generate(CorpusConfig {
+    let corpus = Arc::new(Corpus::generate(CorpusConfig {
         vocab: man.spec.vocab,
         n_tokens: 120_000,
         ..Default::default()
-    });
+    }));
     let jobs: Vec<SweepJob> = (0..8)
         .map(|i| {
             let eta = 2f64.powf(-2.0 + i as f64 * 0.5);
@@ -54,15 +56,59 @@ fn main() -> anyhow::Result<()> {
             SweepJob { config: cfg, tag: vec![] }
         })
         .collect();
+
+    // engine scaling: real tiny runs, 1 vs 4 workers (fresh engine each,
+    // so every data point pays its own compiles)
     for workers in [1usize, 2, 4] {
+        let engine = Engine::new(EngineConfig { workers, ..EngineConfig::default() })?;
         let t0 = Instant::now();
-        let res = run_all_parallel(man.clone(), &corpus, &jobs, workers)?;
+        let res = engine.run_sweep(&man, &corpus, &jobs)?;
         let dt = t0.elapsed().as_secs_f64();
         println!(
-            "scheduler: 8 runs x 16 steps, workers={workers}: {dt:.2}s ({} results)",
+            "engine: 8 runs x 16 steps, workers={workers}: {dt:.2}s ({} results)",
             res.len()
         );
     }
     println!("note: ideal scaling is sub-linear — XLA already multithreads each step");
+
+    // warm vs cold: the engine's two amortization layers.
+    //   cold   = fresh engine, empty cache: pays compiles + all runs
+    //   warm   = same engine, same jobs: pooled sessions + run-cache hits
+    //   resume = new engine reading the persisted cache (simulated
+    //            process restart): no runs, no compiles
+    let cache_dir = std::env::temp_dir().join(format!("umup-sweep-bench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&cache_dir);
+    let engine = Engine::new(EngineConfig {
+        workers: 2,
+        cache_dir: Some(cache_dir.clone()),
+        ..EngineConfig::default()
+    })?;
+    let t0 = Instant::now();
+    engine.run_sweep(&man, &corpus, &jobs)?;
+    let cold = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    engine.run_sweep(&man, &corpus, &jobs)?;
+    let warm = t0.elapsed().as_secs_f64();
+    let s = engine.stats();
+    assert_eq!(s.executed, jobs.len(), "warm pass must not re-run jobs");
+    assert_eq!(s.cache_hits, jobs.len());
+    drop(engine);
+    let engine = Engine::new(EngineConfig {
+        workers: 2,
+        cache_dir: Some(cache_dir.clone()),
+        resume: true,
+        ..EngineConfig::default()
+    })?;
+    let t0 = Instant::now();
+    engine.run_sweep(&man, &corpus, &jobs)?;
+    let resume = t0.elapsed().as_secs_f64();
+    assert_eq!(engine.stats().executed, 0, "resume pass must come entirely from disk");
+    println!(
+        "engine warm-vs-cold (8 jobs): cold {cold:.2}s  warm {:.0}x faster ({warm:.4}s)  \
+         resume-from-disk {:.0}x faster ({resume:.4}s)",
+        cold / warm.max(1e-9),
+        cold / resume.max(1e-9),
+    );
+    let _ = std::fs::remove_dir_all(&cache_dir);
     Ok(())
 }

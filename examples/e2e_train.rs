@@ -6,15 +6,20 @@
 //! both precisions and logging the loss curves, RMS telemetry, probe
 //! perplexities and runtime throughput.
 //!
+//! The trained state feeds downstream probe evals, so this uses the
+//! engine's caller-thread session pool (`Engine::runner`) rather than
+//! the job queue.
+//!
 //!     cargo run --release --example e2e_train [-- steps]
 
 use std::path::Path;
 use std::sync::Arc;
 
 use umup::data::{probe_suite, Corpus, CorpusConfig};
+use umup::engine::{Engine, EngineConfig};
 use umup::parametrization::{HpSet, Parametrization, Precision, Scheme};
 use umup::runtime::Registry;
-use umup::train::{RunConfig, Runner, Schedule};
+use umup::train::{RunConfig, Schedule};
 
 fn main() -> anyhow::Result<()> {
     let steps: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(400);
@@ -28,18 +33,19 @@ fn main() -> anyhow::Result<()> {
         manifest.spec.seq,
         manifest.spec.batch * manifest.spec.seq
     );
-    let corpus = Corpus::generate(CorpusConfig {
+    let corpus = Arc::new(Corpus::generate(CorpusConfig {
         vocab: manifest.spec.vocab,
         ..Default::default()
-    });
+    }));
     println!(
         "corpus: {} tokens, H1={:.3} H2={:.3} nats",
         corpus.tokens.len(),
         corpus.unigram_entropy(),
         corpus.bigram_entropy()
     );
-    let session = registry.session(&manifest.name)?;
-    let runner = Runner::new(Arc::clone(&session));
+    let engine = Engine::new(EngineConfig { workers: 1, ..EngineConfig::default() })?;
+    // one compile, shared across both precision runs via the engine pool
+    let runner = engine.runner(&manifest)?;
 
     for precision in [Precision::Fp32, Precision::Fp8Paper] {
         println!("\n--- u-muP {} ---", precision.name());

@@ -4,25 +4,28 @@
 //! (critical tensors kept high) — plus an SP model under the naive cast
 //! to show why unit scale matters.
 //!
+//! All five runs are queued as one engine batch, so the example also
+//! demonstrates the engine's per-job outcome reporting.
+//!
 //!     cargo run --release --example fp8_training
 
 use std::path::Path;
 use std::sync::Arc;
 
 use umup::data::{Corpus, CorpusConfig};
+use umup::engine::{Engine, EngineConfig, EngineJob};
 use umup::parametrization::{HpSet, Parametrization, Precision, Scheme};
 use umup::runtime::Registry;
-use umup::train::{RunConfig, Runner, Schedule};
+use umup::train::{RunConfig, Schedule};
 
 fn main() -> anyhow::Result<()> {
     let registry = Registry::open(Path::new("artifacts"))?;
     let manifest = registry.find(64, 4, 16)?;
-    let corpus = Corpus::generate(CorpusConfig {
+    let corpus = Arc::new(Corpus::generate(CorpusConfig {
         vocab: manifest.spec.vocab,
         ..Default::default()
-    });
-    let session = registry.session(&manifest.name)?;
-    let runner = Runner::new(Arc::clone(&session));
+    }));
+    let engine = Engine::new(EngineConfig { workers: 2, ..EngineConfig::default() })?;
     let steps = 300;
 
     let cases = [
@@ -32,22 +35,43 @@ fn main() -> anyhow::Result<()> {
         ("SP    fp32", Scheme::Sp, Precision::Fp32, 2f64.powi(-8)),
         ("SP    fp8 naive-cast", Scheme::Sp, Precision::Fp8Naive, 2f64.powi(-8)),
     ];
+    let jobs: Vec<EngineJob> = cases
+        .iter()
+        .map(|&(label, scheme, precision, eta)| {
+            let mut cfg =
+                RunConfig::quick(label, Parametrization::new(scheme), HpSet::with_eta(eta), steps);
+            cfg.precision = precision;
+            cfg.schedule = Schedule::standard(eta, steps, 75);
+            EngineJob {
+                manifest: Arc::clone(&manifest),
+                corpus: Arc::clone(&corpus),
+                config: cfg,
+                tag: vec![],
+            }
+        })
+        .collect();
+
+    let report = engine.run(jobs);
+    println!("engine: {}", report.summary());
     let mut results = Vec::new();
-    for (label, scheme, precision, eta) in cases {
-        let mut cfg = RunConfig::quick(label, Parametrization::new(scheme), HpSet::with_eta(eta), steps);
-        cfg.precision = precision;
-        cfg.schedule = Schedule::standard(eta, steps, 75);
-        let rec = runner.run(&cfg, &corpus)?;
-        println!(
-            "{label:24} final valid loss {:.4}  diverged={}  [{:.1}s]",
-            rec.final_valid_loss, rec.diverged, rec.wall_seconds
-        );
-        results.push((label, rec.final_valid_loss));
+    for ((label, ..), out) in cases.iter().zip(&report.outcomes) {
+        match &out.outcome {
+            Ok(rec) => {
+                println!(
+                    "{label:24} final valid loss {:.4}  diverged={}  [{:.1}s]",
+                    rec.final_valid_loss, rec.diverged, rec.wall_seconds
+                );
+                results.push((*label, rec.final_valid_loss));
+            }
+            Err(e) => println!("{label:24} FAILED: {e}"),
+        }
     }
-    let umup_degradation = results[1].1 - results[0].1;
-    let sp_degradation = results[4].1 - results[3].1;
-    println!("\nFP8 degradation: u-muP {umup_degradation:+.4} vs SP {sp_degradation:+.4}");
-    println!("Paper claim: the u-muP gap is minimal; the SP gap is larger (its tensors");
-    println!("sit far from unit RMS, so the naive cast clips/underflows them).");
+    if results.len() == cases.len() {
+        let umup_degradation = results[1].1 - results[0].1;
+        let sp_degradation = results[4].1 - results[3].1;
+        println!("\nFP8 degradation: u-muP {umup_degradation:+.4} vs SP {sp_degradation:+.4}");
+        println!("Paper claim: the u-muP gap is minimal; the SP gap is larger (its tensors");
+        println!("sit far from unit RMS, so the naive cast clips/underflows them).");
+    }
     Ok(())
 }

@@ -7,9 +7,10 @@ use std::path::Path;
 use std::sync::Arc;
 
 use umup::data::{Corpus, CorpusConfig};
+use umup::engine::{Engine, EngineConfig};
 use umup::parametrization::{HpSet, Parametrization, Scheme};
 use umup::runtime::Registry;
-use umup::train::{RunConfig, Runner, Schedule};
+use umup::train::{RunConfig, Schedule};
 
 fn main() -> anyhow::Result<()> {
     // 1. open the AOT artifact registry (built by `make artifacts`)
@@ -18,10 +19,10 @@ fn main() -> anyhow::Result<()> {
     println!("model: {} ({} params)", manifest.name, manifest.n_params);
 
     // 2. synthetic corpus (WikiText-103 stand-in, DESIGN.md §4)
-    let corpus = Corpus::generate(CorpusConfig {
+    let corpus = Arc::new(Corpus::generate(CorpusConfig {
         vocab: manifest.spec.vocab,
         ..Default::default()
-    });
+    }));
     println!(
         "corpus: H1={:.2} nats, H2={:.2} nats, {} train tokens",
         corpus.unigram_entropy(),
@@ -29,11 +30,11 @@ fn main() -> anyhow::Result<()> {
         corpus.train_slice().len()
     );
 
-    // 3. a u-μP run: every HP at its default of 1 except the LR —
-    //    the paper's point is that this is already near-optimal (§4.5)
+    // 3. a u-μP run through the engine: every HP at its default of 1
+    //    except the LR — the paper's point is that this is already
+    //    near-optimal (§4.5)
     let steps = 300;
-    let session = registry.session(&manifest.name)?;
-    let runner = Runner::new(Arc::clone(&session));
+    let engine = Engine::new(EngineConfig { workers: 1, ..EngineConfig::default() })?;
     let mut cfg = RunConfig::quick(
         "quickstart-umup",
         Parametrization::new(Scheme::Umup),
@@ -41,7 +42,7 @@ fn main() -> anyhow::Result<()> {
         steps,
     );
     cfg.schedule = Schedule::standard(0.5, steps, 75);
-    let record = runner.run(&cfg, &corpus)?;
+    let record = engine.run_single(&manifest, &corpus, cfg)?.record;
 
     for &(step, loss) in &record.train_curve {
         println!("step {step:5}  train loss {loss:.4}");

@@ -2,24 +2,31 @@
 //! proxy, transfer the optimum to a 4x wider target, and show it lands
 //! near the target's own optimum for u-μP.
 //!
+//! One engine serves all four sweeps: its per-worker session pools keep
+//! the w64 and w256 compiles alive across schemes, and its run cache
+//! deduplicates any repeated (manifest, config) pair.
+//!
 //!     cargo run --release --example width_transfer
 
 use std::path::Path;
+use std::sync::Arc;
 
 use umup::data::{Corpus, CorpusConfig};
+use umup::engine::{Engine, EngineConfig};
 use umup::parametrization::{HpSet, Parametrization, Scheme};
 use umup::runtime::Registry;
-use umup::sweep::{run_all_parallel, SweepJob};
+use umup::sweep::SweepJob;
 use umup::train::{RunConfig, Schedule};
 use umup::util::stats;
 
 fn lr_sweep(
+    engine: &Engine,
     registry: &Registry,
     width: usize,
     scheme: Scheme,
     grid: &[f64],
     steps: u64,
-    corpus: &Corpus,
+    corpus: &Arc<Corpus>,
 ) -> anyhow::Result<Vec<(f64, f64)>> {
     let man = registry.find(width, 4, 16)?;
     let jobs: Vec<SweepJob> = grid
@@ -37,13 +44,14 @@ fn lr_sweep(
             SweepJob { config: cfg, tag: vec![("eta".into(), eta)] }
         })
         .collect();
-    let res = run_all_parallel(man, corpus, &jobs, 4)?;
+    let res = engine.run_sweep(&man, corpus, &jobs)?;
     Ok(res.iter().map(|r| (r.job.tag[0].1, r.record.objective())).collect())
 }
 
 fn main() -> anyhow::Result<()> {
     let registry = Registry::open(Path::new("artifacts"))?;
-    let corpus = Corpus::generate(CorpusConfig::default());
+    let corpus = Arc::new(Corpus::generate(CorpusConfig::default()));
+    let engine = Engine::new(EngineConfig { workers: 4, ..EngineConfig::default() })?;
     let steps = 200;
     for scheme in [Scheme::Mup, Scheme::Umup] {
         let grid: Vec<f64> = match scheme {
@@ -51,8 +59,8 @@ fn main() -> anyhow::Result<()> {
             _ => (-11..=-5).map(|e| 2f64.powi(e)).collect(),
         };
         println!("\n=== {} ===", scheme.name());
-        let proxy = lr_sweep(&registry, 64, scheme, &grid, steps, &corpus)?;
-        let target = lr_sweep(&registry, 256, scheme, &grid, steps, &corpus)?;
+        let proxy = lr_sweep(&engine, &registry, 64, scheme, &grid, steps, &corpus)?;
+        let target = lr_sweep(&engine, &registry, 256, scheme, &grid, steps, &corpus)?;
         let p_best = proxy[stats::argmin(&proxy.iter().map(|p| p.1).collect::<Vec<_>>())];
         let t_best = target[stats::argmin(&target.iter().map(|p| p.1).collect::<Vec<_>>())];
         // loss at the *transferred* LR on the target
@@ -70,6 +78,11 @@ fn main() -> anyhow::Result<()> {
             (p_best.0 / t_best.0).log2().abs()
         );
     }
-    println!("\nExpected shape: u-muP drift ≈ 0 octaves with ~no excess loss; muP drifts.");
+    let s = engine.stats();
+    println!(
+        "\nengine: {} runs executed, {} cache hits, {} deduped",
+        s.executed, s.cache_hits, s.deduped
+    );
+    println!("Expected shape: u-muP drift ≈ 0 octaves with ~no excess loss; muP drifts.");
     Ok(())
 }

@@ -1,65 +1,91 @@
-//! Shared experiment context: artifact registry, corpus cache, output
-//! directory, and the quick/full switch.
+//! Shared experiment context: artifact registry, the unified run engine,
+//! corpus cache, output directory, and the quick/full switch.
 
 use std::collections::HashMap;
-use std::path::PathBuf;
-use std::sync::Mutex;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::data::{Corpus, CorpusConfig};
+use crate::engine::{Engine, EngineConfig};
 use crate::runtime::Registry;
 
 pub struct ExpContext {
-    pub registry: Registry,
+    pub registry: Arc<Registry>,
+    /// The unified run engine: multi-manifest job queue, per-worker
+    /// session pools, content-addressed run cache.  All experiment
+    /// execution routes through it.
+    pub engine: Engine,
     pub out_dir: PathBuf,
     /// Reduced steps/grids — used by integration tests and smoke runs.
     pub quick: bool,
-    pub workers: usize,
     pub seed: u64,
-    corpora: Mutex<HashMap<usize, &'static Corpus>>,
+    corpora: Mutex<HashMap<usize, Arc<Corpus>>>,
 }
 
 impl ExpContext {
     pub fn new(artifacts: &str, out_dir: &str, quick: bool, workers: usize) -> Result<Self> {
+        Self::with_cache(artifacts, out_dir, quick, workers, None, false)
+    }
+
+    /// Like [`ExpContext::new`] with run-cache persistence: `cache_dir`
+    /// records completed runs to `runs.jsonl`; `resume` additionally
+    /// loads what a previous (possibly interrupted) sweep completed, so
+    /// re-running an experiment skips those jobs.
+    pub fn with_cache(
+        artifacts: &str,
+        out_dir: &str,
+        quick: bool,
+        workers: usize,
+        cache_dir: Option<PathBuf>,
+        resume: bool,
+    ) -> Result<Self> {
+        let registry = Arc::new(Registry::open(Path::new(artifacts))?);
+        let engine = Engine::new(EngineConfig {
+            workers,
+            cache_dir,
+            resume,
+            ..EngineConfig::default()
+        })?;
         Ok(ExpContext {
-            registry: Registry::open(std::path::Path::new(artifacts))?,
+            registry,
+            engine,
             out_dir: PathBuf::from(out_dir),
             quick,
-            workers,
             seed: 1234,
             corpora: Mutex::new(HashMap::new()),
         })
     }
 
-    /// Corpus for a vocab size, generated once and leaked for 'static
-    /// borrows across scoped worker threads (a handful of corpora per
+    /// Corpus for a vocab size, generated once per process and shared
+    /// with the engine's worker threads (a handful of corpora per
     /// process; bounded).
-    pub fn corpus(&self, vocab: usize) -> &'static Corpus {
+    pub fn corpus(&self, vocab: usize) -> Arc<Corpus> {
         let mut map = self.corpora.lock().unwrap();
         if let Some(c) = map.get(&vocab) {
-            return c;
+            return Arc::clone(c);
         }
         let n_tokens = if self.quick { 200_000 } else { 2_000_000 };
-        let c = Box::leak(Box::new(Corpus::generate(CorpusConfig {
+        let c = Arc::new(Corpus::generate(CorpusConfig {
             vocab,
             n_tokens,
             seed: self.seed,
             ..Default::default()
-        })));
-        map.insert(vocab, c);
+        }));
+        map.insert(vocab, Arc::clone(&c));
         c
     }
 
     /// A *shrunken* corpus emulating the TP5 overfitting regime (Fig 2a).
-    pub fn tiny_corpus(&self, vocab: usize, fraction: f64) -> Corpus {
+    pub fn tiny_corpus(&self, vocab: usize, fraction: f64) -> Arc<Corpus> {
         let n_tokens = ((if self.quick { 200_000.0 } else { 2_000_000.0 }) * fraction) as usize;
-        Corpus::generate(CorpusConfig {
+        Arc::new(Corpus::generate(CorpusConfig {
             vocab,
             n_tokens: n_tokens.max(20_000),
             seed: self.seed,
             ..Default::default()
-        })
+        }))
     }
 
     /// Steps for a standard run, honoring quick mode and the

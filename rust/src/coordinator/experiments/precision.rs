@@ -31,7 +31,7 @@ pub fn fig1c(ctx: &ExpContext) -> Result<String> {
             cfg.schedule.peak_lr = eta;
             cfg.precision = precision;
             cfg.label = format!("{}-{}", scheme.name(), precision.name());
-            let res = single(ctx, man.clone(), corpus, cfg)?;
+            let res = single(ctx, &man, &corpus, cfg)?;
             let mut s = Series::new(format!("{} {}", scheme.name(), precision.name()));
             for &(t, l) in &res.record.train_curve {
                 s.push(t as f64, l.min(12.0));
@@ -66,13 +66,13 @@ pub fn fig6(ctx: &ExpContext) -> Result<String> {
     let mut rows = Vec::new();
     let mut summary = Vec::new();
     for (scheme, eta) in [(Scheme::Umup, 2f64.powf(-1.0)), (Scheme::Mup, 2f64.powf(-8.0))] {
-        let session = std::sync::Arc::new(crate::runtime::Session::open(man.clone())?);
-        let runner = crate::train::Runner::new(session);
+        // init telemetry is stateful work -> caller-thread pooled session
+        let runner = ctx.engine.runner(&man)?;
         let mut cfg = proto(ctx, scheme, 384);
         cfg.hp.eta = eta;
         cfg.schedule.peak_lr = eta;
-        let (_, init_rms) = runner.eval_at_init(&cfg, corpus)?;
-        let rec = runner.run(&cfg, corpus)?;
+        let (_, init_rms) = runner.eval_at_init(&cfg, &corpus)?;
+        let rec = single(ctx, &man, &corpus, cfg)?.record;
         let end: std::collections::BTreeMap<_, _> = rec.final_rms.iter().cloned().collect();
         let mut n_in_range_init = 0usize;
         let mut n_in_range_end = 0usize;
@@ -99,7 +99,10 @@ pub fn fig6(ctx: &ExpContext) -> Result<String> {
             format!("{n_in_range_end}/{n}"),
         ]);
     }
-    report.kv("E4M3 comfortable range", format!("[{:.3e}, {:.0}]", E4M3.min_normal(), E4M3.max_value()));
+    report.kv(
+        "E4M3 comfortable range",
+        format!("[{:.3e}, {:.0}]", E4M3.min_normal(), E4M3.max_value()),
+    );
     report.kv("E5M2 min normal", format!("{:.3e}", E5M2.min_normal()));
     report.table(&["scheme", "tensors with RMS in E4M3 normal range (init)", "(end)"], &summary);
     crate::util::plot::write_table(
@@ -131,14 +134,15 @@ pub fn fig7(ctx: &ExpContext) -> Result<String> {
     let mut series = Vec::new();
     let mut rows = Vec::new();
     for (label, scheme, precision, eta) in cases {
-        let session = std::sync::Arc::new(crate::runtime::Session::open(man.clone())?);
-        let runner = crate::train::Runner::new(session);
+        // run_full returns the on-device state for the probe evals, so
+        // this goes through the engine's caller-thread session pool
+        let runner = ctx.engine.runner(&man)?;
         let mut cfg = proto(ctx, scheme, steps);
         cfg.hp.eta = eta;
         cfg.schedule.peak_lr = eta;
         cfg.precision = precision;
         cfg.label = label.into();
-        let (rec, ts) = runner.run_full(&cfg, corpus)?;
+        let (rec, ts) = runner.run_full(&cfg, &corpus)?;
         let mut s = Series::new(label);
         for &(t, l) in &rec.train_curve {
             s.push(t as f64, l);
@@ -186,7 +190,7 @@ pub fn fig19(ctx: &ExpContext) -> Result<String> {
         cfg.hp.eta = eta;
         cfg.schedule.peak_lr = eta;
         cfg.rms_sites = sites.clone();
-        let res = single(ctx, man.clone(), corpus, cfg)?;
+        let res = single(ctx, &man, &corpus, cfg)?;
         for (site, curve) in &res.record.rms_curves {
             let mut s = Series::new(format!("{} {}", scheme.name(), site));
             for &(t, r) in curve {
@@ -253,7 +257,7 @@ pub fn fig20(ctx: &ExpContext) -> Result<String> {
         let mut cfg = proto(ctx, Scheme::Umup, base_steps);
         cfg.hp.eta = 2f64.powf(lg);
         cfg.schedule.peak_lr = cfg.hp.eta;
-        let rec = single(ctx, man.clone(), corpus, cfg)?;
+        let rec = single(ctx, &man, &corpus, cfg)?;
         record("lr", 2f64.powf(lg), &rec.record, &crit(&man), &mut series, &mut rows);
     }
     // width axis
@@ -262,7 +266,7 @@ pub fn fig20(ctx: &ExpContext) -> Result<String> {
         let mut cfg = proto(ctx, Scheme::Umup, base_steps);
         cfg.hp.eta = 0.5;
         cfg.schedule.peak_lr = 0.5;
-        let rec = single(ctx, man.clone(), ctx.corpus(man.spec.vocab), cfg)?;
+        let rec = single(ctx, &man, &ctx.corpus(man.spec.vocab), cfg)?;
         record("width", w as f64, &rec.record, &crit(&man), &mut series, &mut rows);
     }
     // depth axis
@@ -271,7 +275,7 @@ pub fn fig20(ctx: &ExpContext) -> Result<String> {
         let mut cfg = proto(ctx, Scheme::Umup, base_steps);
         cfg.hp.eta = 0.5;
         cfg.schedule.peak_lr = 0.5;
-        let rec = single(ctx, man.clone(), ctx.corpus(man.spec.vocab), cfg)?;
+        let rec = single(ctx, &man, &ctx.corpus(man.spec.vocab), cfg)?;
         record("depth", d as f64, &rec.record, &crit(&man), &mut series, &mut rows);
     }
     // steps axis
@@ -279,7 +283,7 @@ pub fn fig20(ctx: &ExpContext) -> Result<String> {
         let mut cfg = proto(ctx, Scheme::Umup, st);
         cfg.hp.eta = 0.5;
         cfg.schedule.peak_lr = 0.5;
-        let rec = single(ctx, man.clone(), corpus, cfg)?;
+        let rec = single(ctx, &man, &corpus, cfg)?;
         record("steps", st as f64, &rec.record, &crit(&man), &mut series, &mut rows);
     }
     // batch axis
@@ -288,7 +292,7 @@ pub fn fig20(ctx: &ExpContext) -> Result<String> {
         let mut cfg = proto(ctx, Scheme::Umup, base_steps);
         cfg.hp.eta = 0.5;
         cfg.schedule.peak_lr = 0.5;
-        let rec = single(ctx, man.clone(), ctx.corpus(man.spec.vocab), cfg)?;
+        let rec = single(ctx, &man, &ctx.corpus(man.spec.vocab), cfg)?;
         record("batch", b as f64, &rec.record, &crit(&man), &mut series, &mut rows);
     }
     crate::util::plot::write_table(&dir.join("end_rms.csv"), &["axis", "x", "site", "rms"], &rows)?;

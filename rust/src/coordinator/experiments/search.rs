@@ -8,7 +8,6 @@ use crate::sweep::{
     independent_search, pair_grid, random_search, simulate_run_counts, transfer_error, HpSpace,
     Range,
 };
-use crate::train::Runner;
 use crate::util::plot::Series;
 
 use super::helpers::*;
@@ -26,18 +25,14 @@ pub fn fig1a(ctx: &ExpContext) -> Result<String> {
     for scheme in [Scheme::Mup, Scheme::Umup] {
         let space = HpSpace::table5(scheme);
         let p = proto(ctx, scheme, 192);
-        // workers>1 needs per-thread sessions; reuse one runner here via
-        // the parallel scheduler inside random_search/independent_search.
-        let session = std::sync::Arc::new(crate::runtime::Session::open(man.clone())?);
-        let runner = Runner::new(session);
-        let rand = random_search(&runner, corpus, &space, &p, n_random, ctx.seed, 1)?;
+        let rand = random_search(&ctx.engine, &man, &corpus, &space, &p, n_random, ctx.seed)?;
         let curve = simulate_run_counts(
             &rand.results,
             &[1, 2, 4, 8, 16, n_random],
             200,
             ctx.seed,
         );
-        let ind = independent_search(&runner, corpus, &space, &p, 1)?;
+        let ind = independent_search(&ctx.engine, &man, &corpus, &space, &p)?;
         let mut s_rand = Series::new(format!("{} random", scheme.name()));
         for (k, l) in &curve {
             s_rand.push(*k as f64, *l);
@@ -84,8 +79,6 @@ pub fn fig4(ctx: &ExpContext) -> Result<String> {
     let mut rows = Vec::new();
     let mut mean_by_scheme = Vec::new();
     for (scheme, hps, eta) in cases {
-        let session = std::sync::Arc::new(crate::runtime::Session::open(man.clone())?);
-        let runner = Runner::new(session);
         let mut p = proto(ctx, scheme, 128);
         p.hp.eta = eta;
         p.schedule.peak_lr = eta;
@@ -107,7 +100,7 @@ pub fn fig4(ctx: &ExpContext) -> Result<String> {
         pairs.truncate(if ctx.quick { 2 } else { 4 });
         let mut errs = Vec::new();
         for (fa, ra, fb, rb) in pairs {
-            let grid = pair_grid(&runner, corpus, &p, (fa, ra), (fb, rb), 1)?;
+            let grid = pair_grid(&ctx.engine, &man, &corpus, &p, (fa, ra), (fb, rb))?;
             crate::util::plot::write_table(
                 &dir.join(format!("grid_{}_{}_{}.csv", scheme.name(), fa, fb)),
                 &[fa, fb, "loss"],
@@ -162,7 +155,7 @@ pub fn fig13(ctx: &ExpContext) -> Result<String> {
             cfg.label = format!("lrmult-{gname}-{m}");
             jobs.push(crate::sweep::SweepJob { config: cfg, tag: vec![((*gname).into(), m)] });
         }
-        let res = crate::sweep::run_all_parallel(man.clone(), corpus, &jobs, ctx.workers)?;
+        let res = ctx.engine.run_sweep(&man, &corpus, &jobs)?;
         let line: Vec<(f64, f64)> =
             res.iter().map(|r| (r.job.tag[0].1, r.record.objective())).collect();
         let (opt, loss) = best_point(&line);

@@ -35,9 +35,9 @@ pub fn fig2(ctx: &ExpContext) -> Result<String> {
             let vocab = man.spec.vocab;
             let line = if flavor.corpus_fraction() < 1.0 {
                 let tiny = ctx.tiny_corpus(vocab, flavor.corpus_fraction());
-                lr_line(ctx, man, &tiny, &p, &lr_grid(Scheme::Mup, false))?
+                lr_line(ctx, &man, &tiny, &p, &lr_grid(Scheme::Mup, false))?
             } else {
-                lr_line(ctx, man, ctx.corpus(vocab), &p, &lr_grid(Scheme::Mup, false))?
+                lr_line(ctx, &man, &ctx.corpus(vocab), &p, &lr_grid(Scheme::Mup, false))?
             };
             let (opt_lr, opt_loss) = best_point(&line);
             opts.push((w, opt_lr));
@@ -70,10 +70,9 @@ pub fn fig25(ctx: &ExpContext) -> Result<String> {
     let dir = ctx.exp_dir("fig25");
     let man = ctx.registry.find(PROXY_WIDTH, 8, 16)?;
     let corpus = ctx.corpus(man.spec.vocab);
-    let session = std::sync::Arc::new(crate::runtime::Session::open(man.clone())?);
-    let runner = crate::train::Runner::new(session);
+    let runner = ctx.engine.runner(&man)?;
     let cfg = proto(ctx, Scheme::Umup, 8);
-    let (_, rms) = runner.eval_at_init(&cfg, corpus)?;
+    let (_, rms) = runner.eval_at_init(&cfg, &corpus)?;
     let get = |name: &str| {
         rms.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap_or(f64::NAN)
     };
@@ -93,7 +92,8 @@ pub fn fig25(ctx: &ExpContext) -> Result<String> {
     report.figure(&dir, "rms_by_layer", &[s_attn, s_skip, s_qkv], false)?;
     report.table(&["layer", "attn out RMS", "skip RMS", "qkv in RMS"], &rows);
     // analytic reference from Appendix F (plain pre-norm growth)
-    let analytic = plain_prenorm_skip_rms(man.spec.depth, 1.0, 1.0 / (man.spec.depth as f64).sqrt());
+    let analytic =
+        plain_prenorm_skip_rms(man.spec.depth, 1.0, 1.0 / (man.spec.depth as f64).sqrt());
     report.kv("plain pre-norm skip RMS (Eq. 9 analytic, for contrast)", format!("{analytic:.3}"));
     report.para(
         "Paper claim (App. L): attention outputs after layer 0 exceed unit RMS \

@@ -4,7 +4,7 @@ use anyhow::Result;
 
 use crate::coordinator::{ExpContext, Report};
 use crate::parametrization::{EmbLrRule, Scheme};
-use crate::sweep::{run_all_parallel, SweepJob};
+use crate::sweep::SweepJob;
 use crate::util::plot::Series;
 
 use super::helpers::*;
@@ -25,7 +25,7 @@ pub fn fig1b(ctx: &ExpContext) -> Result<String> {
             let man = ctx.registry.find(w, 4, 16)?;
             let corpus = ctx.corpus(man.spec.vocab);
             let p = proto(ctx, scheme, 256);
-            let line = lr_line(ctx, man, corpus, &p, &lr_grid(scheme, false))?;
+            let line = lr_line(ctx, &man, &corpus, &p, &lr_grid(scheme, false))?;
             let (opt_lr, opt_loss) = best_point(&line);
             opt_by_width.push((w, opt_lr, opt_loss));
             series.push(to_series(format!("{} w{}", scheme.name(), w), &line));
@@ -40,7 +40,12 @@ pub fn fig1b(ctx: &ExpContext) -> Result<String> {
         // transfer quality: log2 drift of the optimum from proxy to target
         let drift = (opt_by_width.last().unwrap().1 / opt_by_width[0].1).log2().abs();
         report.kv(
-            &format!("{} optimum drift (|log2|, w{}→w{})", scheme.name(), widths[0], widths[widths.len() - 1]),
+            &format!(
+                "{} optimum drift (|log2|, w{}→w{})",
+                scheme.name(),
+                widths[0],
+                widths[widths.len() - 1]
+            ),
             format!("{drift:.2}"),
         );
     }
@@ -71,7 +76,7 @@ pub fn fig3(ctx: &ExpContext) -> Result<String> {
             let corpus = ctx.corpus(man.spec.vocab);
             let mut p = proto(ctx, Scheme::Umup, 256);
             p.parametrization.emb_lr_rule = rule;
-            let line = lr_line(ctx, man, corpus, &p, &lr_grid(Scheme::Umup, false))?;
+            let line = lr_line(ctx, &man, &corpus, &p, &lr_grid(Scheme::Umup, false))?;
             let (opt_lr, opt_loss) = best_point(&line);
             s.push(w as f64, opt_loss);
             rows.push(vec![
@@ -105,7 +110,7 @@ pub fn fig5(ctx: &ExpContext) -> Result<String> {
             let corpus = ctx.corpus(man.spec.vocab);
             let mut p = proto(ctx, scheme, steps);
             p.schedule.warmup_steps = (ctx.steps(steps) / 4).max(1); // fixed fraction
-            let line = lr_line(ctx, man, corpus, &p, &lr_grid(scheme, false))?;
+            let line = lr_line(ctx, &man, &corpus, &p, &lr_grid(scheme, false))?;
             series.push(to_series(format!("steps {steps}"), &line));
         }
         report.figure(&dir, &format!("steps_{}", scheme.name()), &series, true)?;
@@ -116,7 +121,7 @@ pub fn fig5(ctx: &ExpContext) -> Result<String> {
             let man = ctx.registry.find(PROXY_WIDTH, 4, b)?;
             let corpus = ctx.corpus(man.spec.vocab);
             let p = proto(ctx, scheme, 256);
-            let line = lr_line(ctx, man, corpus, &p, &lr_grid(scheme, false))?;
+            let line = lr_line(ctx, &man, &corpus, &p, &lr_grid(scheme, false))?;
             series.push(to_series(format!("batch {b}"), &line));
         }
         report.figure(&dir, &format!("batch_{}", scheme.name()), &series, true)?;
@@ -127,7 +132,7 @@ pub fn fig5(ctx: &ExpContext) -> Result<String> {
             let man = ctx.registry.find(PROXY_WIDTH, d, 16)?;
             let corpus = ctx.corpus(man.spec.vocab);
             let p = proto(ctx, scheme, 256);
-            let line = lr_line(ctx, man, corpus, &p, &lr_grid(scheme, false))?;
+            let line = lr_line(ctx, &man, &corpus, &p, &lr_grid(scheme, false))?;
             series.push(to_series(format!("depth {d}"), &line));
         }
         report.figure(&dir, &format!("depth_{}", scheme.name()), &series, true)?;
@@ -169,7 +174,7 @@ pub fn fig17(ctx: &ExpContext) -> Result<String> {
                         SweepJob { config: cfg, tag: vec![(hp_name.into(), v)] }
                     })
                     .collect();
-                let res = run_all_parallel(man, corpus, &jobs, ctx.workers)?;
+                let res = ctx.engine.run_sweep(&man, &corpus, &jobs)?;
                 let line: Vec<(f64, f64)> =
                     res.iter().map(|r| (r.job.tag[0].1, r.record.objective())).collect();
                 series.push(to_series(format!("w{w}"), &line));

@@ -1,0 +1,176 @@
+//! Content-addressed run cache.
+//!
+//! A run is addressed by a stable 64-bit FNV-1a hash of
+//! `(manifest name, corpus config, canonical RunConfig)` — see
+//! [`crate::train::RunConfig::canonical_json`] for what is (and is not)
+//! part of the address; notably the presentation-only `label` is
+//! excluded, so the same baseline config reached from different figures
+//! deduplicates.  The corpus participates through its generator config
+//! ([`CorpusConfig`]): corpora are deterministic functions of it, and
+//! without it a quick-mode (200k-token) record would silently satisfy a
+//! full-corpus run of the same config.  The canonical form serializes
+//! through the in-tree JSON writer with sorted keys and
+//! shortest-round-trip floats, and FNV-1a is a fixed function, so keys
+//! are stable across field-construction order *and* across process runs
+//! — which is what makes the on-disk cache a resume mechanism.
+//!
+//! Persistence is line-oriented JSONL (`runs.jsonl`): one
+//! `{"key":…,"manifest":…,"record":…}` object per completed run,
+//! appended and flushed as results arrive so a killed sweep loses at
+//! most the in-flight runs.
+
+use std::collections::{BTreeMap, HashMap};
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::data::{Corpus, CorpusConfig};
+use crate::train::{RunConfig, RunRecord};
+use crate::util::hash::fnv1a64;
+use crate::util::Json;
+
+/// Canonical form of the corpus generator config (sorted keys).
+fn corpus_json(c: &CorpusConfig) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("vocab".to_string(), Json::Num(c.vocab as f64));
+    m.insert("n_tokens".to_string(), Json::Num(c.n_tokens as f64));
+    m.insert("seed".to_string(), Json::Num(c.seed as f64));
+    m.insert("zipf_s".to_string(), Json::Num(c.zipf_s));
+    m.insert("k_succ".to_string(), Json::Num(c.k_succ as f64));
+    m.insert("smoothing".to_string(), Json::Num(c.smoothing));
+    m.insert("valid_frac".to_string(), Json::Num(c.valid_frac));
+    Json::Obj(m)
+}
+
+/// The content address of one run, as a 16-hex-digit string.
+pub fn run_key(manifest: &str, corpus: &Corpus, cfg: &RunConfig) -> String {
+    let payload = format!(
+        "{manifest}\n{}\n{}",
+        corpus_json(&corpus.config).dump(),
+        cfg.canonical_json().dump()
+    );
+    format!("{:016x}", fnv1a64(payload.as_bytes()))
+}
+
+/// key -> [`RunRecord`] map with optional JSONL persistence.
+pub struct RunCache {
+    entries: HashMap<String, RunRecord>,
+    file: Option<File>,
+    path: Option<PathBuf>,
+}
+
+impl RunCache {
+    /// A process-local cache (still deduplicates within a sweep and
+    /// across an engine's lifetime; nothing is written to disk).
+    pub fn in_memory() -> RunCache {
+        RunCache { entries: HashMap::new(), file: None, path: None }
+    }
+
+    /// Open the persistent cache at `dir/runs.jsonl`.
+    ///
+    /// With `resume`, pre-existing entries are loaded (corrupt lines are
+    /// skipped with a warning — a truncated tail from a killed process
+    /// must not poison the sweep).  Without `resume` the file is
+    /// truncated: a fresh recording.
+    pub fn open(dir: &Path, resume: bool) -> Result<RunCache> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating cache dir {}", dir.display()))?;
+        let path = dir.join("runs.jsonl");
+        let mut entries = HashMap::new();
+        if resume && path.exists() {
+            let f = File::open(&path)
+                .with_context(|| format!("opening run cache {}", path.display()))?;
+            for (lineno, line) in BufReader::new(f).lines().enumerate() {
+                let line = line?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match parse_entry(&line) {
+                    Ok((key, record)) => {
+                        entries.insert(key, record);
+                    }
+                    Err(e) => eprintln!(
+                        "run-cache: skipping corrupt line {} of {}: {e:#}",
+                        lineno + 1,
+                        path.display()
+                    ),
+                }
+            }
+        }
+        let file = if resume {
+            OpenOptions::new().create(true).append(true).open(&path)
+        } else {
+            File::create(&path)
+        }
+        .with_context(|| format!("opening run cache {} for append", path.display()))?;
+        Ok(RunCache { entries, file: Some(file), path: Some(path) })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    pub fn get(&self, key: &str) -> Option<&RunRecord> {
+        self.entries.get(key)
+    }
+
+    /// Record a completed run (idempotent per key) and, if persistent,
+    /// append + flush its JSONL line.
+    pub fn put(&mut self, key: &str, manifest: &str, record: &RunRecord) -> Result<()> {
+        if self.entries.contains_key(key) {
+            return Ok(());
+        }
+        self.entries.insert(key.to_string(), record.clone());
+        if let Some(f) = &mut self.file {
+            let mut obj = BTreeMap::new();
+            obj.insert("key".to_string(), Json::Str(key.to_string()));
+            obj.insert("manifest".to_string(), Json::Str(manifest.to_string()));
+            obj.insert("record".to_string(), record.to_json());
+            writeln!(f, "{}", Json::Obj(obj).dump()).context("appending run-cache line")?;
+            f.flush().context("flushing run cache")?;
+        }
+        Ok(())
+    }
+}
+
+fn parse_entry(line: &str) -> Result<(String, RunRecord)> {
+    let j = Json::parse(line)?;
+    let key = j.get("key")?.as_str()?.to_string();
+    let record = RunRecord::from_json(j.get("record")?)?;
+    Ok((key, record))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_depends_on_manifest_and_corpus() {
+        let cfg = RunConfig::quick(
+            "x",
+            crate::parametrization::Parametrization::new(crate::parametrization::Scheme::Umup),
+            crate::parametrization::HpSet::default(),
+            8,
+        );
+        let corpus = |n_tokens: usize| Corpus {
+            config: CorpusConfig { vocab: 64, n_tokens, ..Default::default() },
+            tokens: vec![],
+            n_train: 0,
+        };
+        let (small, big) = (corpus(1000), corpus(2000));
+        assert_eq!(run_key("m1", &small, &cfg), run_key("m1", &small, &cfg));
+        assert_ne!(run_key("m1", &small, &cfg), run_key("m2", &small, &cfg));
+        // a quick-mode corpus must never satisfy a full-corpus run
+        assert_ne!(run_key("m1", &small, &cfg), run_key("m1", &big, &cfg));
+    }
+}

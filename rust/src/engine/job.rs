@@ -1,0 +1,98 @@
+//! Job and outcome types for the engine.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::Corpus;
+use crate::runtime::Manifest;
+use crate::train::{RunConfig, RunRecord};
+
+/// One queued run: a config plus the artifact and data it runs against.
+///
+/// Jobs in one `Engine::run` batch may span different manifests (shapes)
+/// — the queue is multi-manifest by construction, so cross-width
+/// transfer sweeps are drained by one worker pool instead of being
+/// serialized per shape.
+#[derive(Clone)]
+pub struct EngineJob {
+    pub manifest: Arc<Manifest>,
+    pub corpus: Arc<Corpus>,
+    pub config: RunConfig,
+    /// Arbitrary tag carried through to the result (e.g. HP values).
+    pub tag: Vec<(String, f64)>,
+}
+
+/// A manifest-agnostic sweep job: the caller supplies the manifest and
+/// corpus once for the whole batch (`Engine::run_sweep`).
+#[derive(Debug, Clone)]
+pub struct SweepJob {
+    pub config: RunConfig,
+    /// Arbitrary tag carried through to the result (e.g. HP values).
+    pub tag: Vec<(String, f64)>,
+}
+
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub job: SweepJob,
+    pub record: RunRecord,
+}
+
+/// How one job concluded.
+#[derive(Clone)]
+pub struct JobOutcome {
+    pub job: EngineJob,
+    /// Per-job result; errors are stringified so one bad job never
+    /// poisons the rest of the batch.
+    pub outcome: Result<RunRecord, String>,
+    /// True when the record came from the run cache or a deduplicated
+    /// sibling job rather than a fresh run.
+    pub cached: bool,
+}
+
+/// Everything one `Engine::run` produced: per-job outcomes in submission
+/// order plus progress counters.
+pub struct EngineReport {
+    pub outcomes: Vec<JobOutcome>,
+    /// Jobs that ended with a record (fresh, cached or deduplicated).
+    pub completed: usize,
+    pub failed: usize,
+    pub cache_hits: usize,
+    /// Jobs resolved by an identical job earlier in the same batch.
+    pub deduped: usize,
+    /// Jobs that actually ran on a worker.
+    pub executed: usize,
+}
+
+impl EngineReport {
+    /// One-line progress summary for CLI output.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} jobs: {} run, {} cached, {} deduped, {} failed",
+            self.outcomes.len(),
+            self.executed,
+            self.cache_hits,
+            self.deduped,
+            self.failed
+        )
+    }
+
+    /// Strict view: job-ordered results, or the first per-job error.
+    /// Every job was still attempted — an error here never means work
+    /// was silently abandoned.
+    pub fn into_sweep_results(self) -> Result<Vec<SweepResult>> {
+        let mut out = Vec::with_capacity(self.outcomes.len());
+        for (i, o) in self.outcomes.into_iter().enumerate() {
+            match o.outcome {
+                Ok(record) => out.push(SweepResult {
+                    job: SweepJob { config: o.job.config, tag: o.job.tag },
+                    record,
+                }),
+                Err(e) => {
+                    return Err(anyhow!("sweep job {i} ({}): {e}", o.job.config.label));
+                }
+            }
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,332 @@
+//! S12 — the unified run engine: one subsystem owns run execution end to
+//! end.
+//!
+//! Everything that trains (experiments, the CLI, examples, benches)
+//! routes through [`Engine`] instead of hand-rolling
+//! `Session::open`/`Runner::new` plumbing.  The engine provides:
+//!
+//! * **A multi-manifest job queue.**  One worker pool drains
+//!   [`EngineJob`]s spanning different artifact shapes, so cross-width
+//!   transfer sweeps (fig1b/fig5) are no longer serialized per shape.
+//! * **Per-worker session pools.**  PJRT sessions are `!Send`, so each
+//!   persistent worker keeps its own `manifest name → Session` map.
+//!   Workers outlive individual [`Engine::run`] calls, which amortizes
+//!   XLA compiles (seconds per module) across experiments.
+//! * **A content-addressed run cache.**  A canonical, label-independent
+//!   hash of (manifest name, corpus config, [`RunConfig`]) maps to
+//!   [`RunRecord`] (see [`run_key`]), deduplicating repeated configs
+//!   within a batch and — with [`EngineConfig::cache_dir`] — persisting
+//!   results as JSONL so interrupted sweeps resume across process
+//!   restarts.
+//! * **Per-job outcome reporting.**  [`EngineReport`] carries an
+//!   `Ok`/`Err` per job plus progress counters; a failing job no longer
+//!   kills the batch (the old scheduler's first-error-kills-all
+//!   behavior, and its worker-abandons-queue bug, are both gone).
+//!
+//! The caller-facing surface is [`Engine::run`] (full per-job report),
+//! [`Engine::run_sweep`] / [`Engine::run_single`] (strict, job-ordered)
+//! and [`Engine::session`] / [`Engine::runner`] for caller-thread
+//! stateful work (probe evaluation, init telemetry, `run_full`).
+
+mod cache;
+mod job;
+mod pool;
+
+pub use cache::{run_key, RunCache};
+pub use crate::util::hash::fnv1a64;
+pub use job::{EngineJob, EngineReport, JobOutcome, SweepJob, SweepResult};
+pub use pool::JobExec;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::data::Corpus;
+use crate::runtime::{Manifest, Session};
+use crate::train::{RunConfig, RunRecord, Runner};
+
+use pool::{Task, WorkerPool};
+
+/// Engine construction options.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Worker threads; each owns a session pool.  XLA already
+    /// multithreads each step, so small counts suffice — more workers
+    /// trade batch-level against op-level parallelism.
+    pub workers: usize,
+    /// Persist the run cache under this directory (as `runs.jsonl`).
+    /// `None` keeps an in-memory cache (dedup only, no resume).
+    pub cache_dir: Option<PathBuf>,
+    /// Load pre-existing cache entries (resume an interrupted sweep).
+    /// Without this an existing cache file is truncated.
+    pub resume: bool,
+    /// Per-worker compiled-session cap; a worker's pool is cleared
+    /// wholesale when exceeded (compiles are seconds, so the crude
+    /// eviction is fine — the cap only bounds memory).
+    pub max_sessions_per_worker: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            workers: 4,
+            cache_dir: None,
+            resume: false,
+            max_sessions_per_worker: 8,
+        }
+    }
+}
+
+/// Aggregate counters over an engine's lifetime (see
+/// [`EngineReport`] for the per-batch view).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineStats {
+    pub executed: usize,
+    pub cache_hits: usize,
+    pub deduped: usize,
+    pub failed: usize,
+}
+
+/// The unified run engine.  See the module docs for the architecture.
+pub struct Engine {
+    pool: WorkerPool,
+    cache: Mutex<RunCache>,
+    stats: Mutex<EngineStats>,
+    /// Caller-thread sessions for the stateful APIs ([`Engine::session`]
+    /// / [`Engine::runner`]); separate from the worker pools because
+    /// sessions cannot cross threads.
+    local: RefCell<HashMap<String, Arc<Session>>>,
+}
+
+impl Engine {
+    /// An engine whose workers run jobs on real XLA sessions, compiled
+    /// on first use per (worker, manifest) and pooled thereafter.
+    pub fn new(cfg: EngineConfig) -> Result<Engine> {
+        let cap = cfg.max_sessions_per_worker.max(1);
+        Self::with_factory(cfg, move |_worker| {
+            let mut sessions: HashMap<String, Runner> = HashMap::new();
+            Box::new(move |job: &EngineJob| -> Result<RunRecord> {
+                if !sessions.contains_key(&job.manifest.name) {
+                    if sessions.len() >= cap {
+                        sessions.clear();
+                    }
+                    let session = Session::open(Arc::clone(&job.manifest)).with_context(
+                        || format!("opening worker session for {}", job.manifest.name),
+                    )?;
+                    sessions
+                        .insert(job.manifest.name.clone(), Runner::new(Arc::new(session)));
+                }
+                sessions[&job.manifest.name].run(&job.config, &job.corpus)
+            })
+        })
+    }
+
+    /// Build an engine with a custom per-worker executor factory.
+    ///
+    /// This is the seam the engine tests and benches use to exercise
+    /// queueing, deduplication, caching and failure handling without
+    /// XLA artifacts; embedders can use it to plug in remote execution.
+    pub fn with_factory<F>(cfg: EngineConfig, factory: F) -> Result<Engine>
+    where
+        F: Fn(usize) -> JobExec + Send + Sync + 'static,
+    {
+        let cache = match &cfg.cache_dir {
+            Some(dir) => RunCache::open(dir, cfg.resume)?,
+            None => RunCache::in_memory(),
+        };
+        Ok(Engine {
+            pool: WorkerPool::new(cfg.workers, factory),
+            cache: Mutex::new(cache),
+            stats: Mutex::new(EngineStats::default()),
+            local: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Run a batch of (possibly multi-manifest) jobs.  Never fails
+    /// wholesale: each job gets its own `Ok`/`Err` in the report.
+    ///
+    /// Within the batch, jobs with the same content address are executed
+    /// once; cache hits (including those loaded from a `--resume`d
+    /// cache file) skip execution entirely.
+    pub fn run(&self, jobs: Vec<EngineJob>) -> EngineReport {
+        let n = jobs.len();
+        let keys: Vec<String> =
+            jobs.iter().map(|j| run_key(&j.manifest.name, &j.corpus, &j.config)).collect();
+        let mut outcomes: Vec<Option<JobOutcome>> = Vec::with_capacity(n);
+        outcomes.resize_with(n, || None);
+
+        // Partition: cache hit / duplicate-of-earlier / must run.
+        let mut primary_of: HashMap<&str, usize> = HashMap::new();
+        let mut followers: Vec<(usize, usize)> = Vec::new(); // (dup, primary)
+        let mut to_run: Vec<usize> = Vec::new();
+        let mut cache_hits = 0usize;
+        {
+            let cache = self.cache.lock().unwrap();
+            for (i, job) in jobs.iter().enumerate() {
+                if let Some(rec) = cache.get(&keys[i]) {
+                    let mut rec = rec.clone();
+                    rec.label = job.config.label.clone();
+                    outcomes[i] = Some(JobOutcome {
+                        job: job.clone(),
+                        outcome: Ok(rec),
+                        cached: true,
+                    });
+                    cache_hits += 1;
+                } else if let Some(&p) = primary_of.get(keys[i].as_str()) {
+                    followers.push((i, p));
+                } else {
+                    primary_of.insert(keys[i].as_str(), i);
+                    to_run.push(i);
+                }
+            }
+        }
+
+        // Dispatch the misses to the worker pool.
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let mut submitted = 0usize;
+        let mut failed = 0usize;
+        for &i in &to_run {
+            let task = Task { idx: i, job: jobs[i].clone(), reply: reply_tx.clone() };
+            if self.pool.submit(task) {
+                submitted += 1;
+            } else {
+                failed += 1;
+                outcomes[i] = Some(JobOutcome {
+                    job: jobs[i].clone(),
+                    outcome: Err("engine worker pool is gone".to_string()),
+                    cached: false,
+                });
+            }
+        }
+        drop(reply_tx);
+
+        let mut executed = 0usize;
+        for _ in 0..submitted {
+            let Ok((i, res)) = reply_rx.recv() else {
+                break; // a worker died mid-job; stragglers handled below
+            };
+            executed += 1; // the job ran on a worker, whatever its outcome
+            let outcome = match res {
+                Ok(record) => {
+                    let mut cache = self.cache.lock().unwrap();
+                    if let Err(e) = cache.put(&keys[i], &jobs[i].manifest.name, &record) {
+                        eprintln!(
+                            "run-cache: failed to persist {}: {e:#}",
+                            jobs[i].config.label
+                        );
+                    }
+                    Ok(record)
+                }
+                Err(msg) => {
+                    failed += 1;
+                    Err(msg)
+                }
+            };
+            outcomes[i] = Some(JobOutcome { job: jobs[i].clone(), outcome, cached: false });
+        }
+        for &i in &to_run {
+            if outcomes[i].is_none() {
+                failed += 1;
+                outcomes[i] = Some(JobOutcome {
+                    job: jobs[i].clone(),
+                    outcome: Err("engine worker died before finishing this job".to_string()),
+                    cached: false,
+                });
+            }
+        }
+
+        // Resolve in-batch duplicates from their primary's outcome.
+        let mut deduped = 0usize;
+        for &(d, p) in &followers {
+            let outcome = match &outcomes[p].as_ref().expect("primary resolved").outcome {
+                Ok(rec) => {
+                    deduped += 1;
+                    let mut rec = rec.clone();
+                    rec.label = jobs[d].config.label.clone();
+                    Ok(rec)
+                }
+                Err(e) => {
+                    failed += 1;
+                    Err(e.clone())
+                }
+            };
+            outcomes[d] = Some(JobOutcome { job: jobs[d].clone(), outcome, cached: true });
+        }
+
+        let outcomes: Vec<JobOutcome> =
+            outcomes.into_iter().map(|o| o.expect("all jobs resolved")).collect();
+        let completed = outcomes.iter().filter(|o| o.outcome.is_ok()).count();
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.executed += executed;
+            s.cache_hits += cache_hits;
+            s.deduped += deduped;
+            s.failed += failed;
+        }
+        EngineReport { outcomes, completed, failed, cache_hits, deduped, executed }
+    }
+
+    /// Run a single-manifest batch strictly: job-ordered results or the
+    /// first per-job error (all jobs are still attempted either way).
+    pub fn run_sweep(
+        &self,
+        manifest: &Arc<Manifest>,
+        corpus: &Arc<Corpus>,
+        jobs: &[SweepJob],
+    ) -> Result<Vec<SweepResult>> {
+        let engine_jobs = jobs
+            .iter()
+            .map(|j| EngineJob {
+                manifest: Arc::clone(manifest),
+                corpus: Arc::clone(corpus),
+                config: j.config.clone(),
+                tag: j.tag.clone(),
+            })
+            .collect();
+        self.run(engine_jobs).into_sweep_results()
+    }
+
+    /// Run one config (cache-aware like any other job).
+    pub fn run_single(
+        &self,
+        manifest: &Arc<Manifest>,
+        corpus: &Arc<Corpus>,
+        config: RunConfig,
+    ) -> Result<SweepResult> {
+        let mut v = self.run_sweep(manifest, corpus, &[SweepJob { config, tag: vec![] }])?;
+        Ok(v.pop().expect("one job in, one result out"))
+    }
+
+    /// A caller-thread session for `manifest`, compiled once and pooled
+    /// for the engine's lifetime (this is where the old
+    /// `Registry::session` cache moved).
+    pub fn session(&self, manifest: &Arc<Manifest>) -> Result<Arc<Session>> {
+        if let Some(s) = self.local.borrow().get(&manifest.name) {
+            return Ok(Arc::clone(s));
+        }
+        let s = Arc::new(Session::open(Arc::clone(manifest))?);
+        self.local.borrow_mut().insert(manifest.name.clone(), Arc::clone(&s));
+        Ok(s)
+    }
+
+    /// A [`Runner`] over the pooled caller-thread session — for stateful
+    /// work the job queue cannot express (`run_full`, `eval_at_init`,
+    /// probe evaluation).
+    pub fn runner(&self, manifest: &Arc<Manifest>) -> Result<Runner> {
+        Ok(Runner::new(self.session(manifest)?))
+    }
+
+    /// Lifetime counters (executed / cache hits / deduped / failed).
+    pub fn stats(&self) -> EngineStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Number of records currently addressable in the run cache.
+    pub fn cache_len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

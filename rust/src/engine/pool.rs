@@ -1,0 +1,117 @@
+//! Persistent worker threads for the engine.
+//!
+//! The `xla` crate's PJRT handles are `Rc`-based (`!Send`), so compiled
+//! sessions can never migrate between threads.  The pool therefore keeps
+//! N long-lived workers, each of which builds its *own* executor state
+//! (in production: a `manifest name -> Session` map, see
+//! `Engine::new`) via the factory closure and drains a shared task
+//! queue.  Because the workers outlive individual `Engine::run` calls,
+//! XLA compiles are amortized across experiments, not just within one
+//! sweep.
+//!
+//! Error handling: a failing job is reported back per task (stringified)
+//! and the worker keeps draining the queue — the pre-engine scheduler's
+//! `break`-on-error bug (which silently abandoned a worker's remaining
+//! share of the queue) is structurally impossible here.  Executor
+//! *panics* are caught the same way (per job, message preserved), so a
+//! single poisoned run cannot kill a worker and strand the rest of a
+//! long sweep.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::train::RunRecord;
+
+use super::job::EngineJob;
+
+/// A per-worker job executor.  It is created *inside* the worker thread,
+/// so it may own `!Send` state (XLA sessions).
+pub type JobExec = Box<dyn FnMut(&EngineJob) -> Result<RunRecord>>;
+
+/// One dispatched job plus its reply channel.
+pub(crate) struct Task {
+    pub idx: usize,
+    pub job: EngineJob,
+    pub reply: Sender<(usize, Result<RunRecord, String>)>,
+}
+
+pub(crate) struct WorkerPool {
+    tx: Option<Sender<Task>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn new<F>(workers: usize, factory: F) -> WorkerPool
+    where
+        F: Fn(usize) -> JobExec + Send + Sync + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        let factory = Arc::new(factory);
+        let handles = (0..workers.max(1))
+            .map(|w| {
+                let rx = Arc::clone(&rx);
+                let factory = Arc::clone(&factory);
+                std::thread::spawn(move || worker_loop(w, &rx, &*factory))
+            })
+            .collect();
+        WorkerPool { tx: Some(tx), handles }
+    }
+
+    /// Queue a task; returns false if every worker is gone.
+    pub fn submit(&self, task: Task) -> bool {
+        match &self.tx {
+            Some(tx) => tx.send(task).is_ok(),
+            None => false,
+        }
+    }
+}
+
+fn worker_loop<F>(w: usize, rx: &Mutex<Receiver<Task>>, factory: &F)
+where
+    F: Fn(usize) -> JobExec,
+{
+    let mut exec = factory(w);
+    loop {
+        // The lock is held only around `recv` (tasks are handed out one
+        // at a time); execution happens with the queue unlocked.
+        let task = match rx.lock() {
+            Ok(guard) => guard.recv(),
+            Err(_) => return, // a sibling panicked holding the lock
+        };
+        let Ok(task) = task else {
+            return; // channel closed: pool is shutting down
+        };
+        // AssertUnwindSafe: worst case a panic leaves the executor's
+        // session pool with a half-inserted entry, which is rebuilt on
+        // the next miss — strictly better than losing the worker.
+        let out = match catch_unwind(AssertUnwindSafe(|| exec(&task.job))) {
+            Ok(res) => res.map_err(|e| format!("{e:#}")),
+            Err(payload) => Err(format!("job panicked: {}", panic_msg(payload.as_ref()))),
+        };
+        let _ = task.reply.send((task.idx, out));
+    }
+}
+
+fn panic_msg(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.tx.take(); // hang up: workers drain the queue and exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

@@ -16,6 +16,7 @@
 
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod formats;
 pub mod parametrization;
 pub mod runtime;

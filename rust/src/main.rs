@@ -11,16 +11,17 @@
 //! in-tree `Args` helper below.
 
 use std::collections::BTreeMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use umup::coordinator::{list_experiments, run_experiment, ExpContext};
 use umup::data::{Corpus, CorpusConfig};
+use umup::engine::{Engine, EngineConfig};
 use umup::parametrization::{Abc, HpSet, Parametrization, Precision, Scheme};
 use umup::runtime::Registry;
-use umup::train::{RunConfig, Runner, Schedule};
+use umup::train::{RunConfig, Schedule};
 
 /// Minimal flag parser: positional args + `--key value` + `--flag`.
 struct Args {
@@ -54,6 +55,11 @@ impl Args {
     fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
+
+    /// The engine's run-cache flags, shared by `train` and `exp`.
+    fn cache_opts(&self) -> (Option<PathBuf>, bool) {
+        (self.flags.get("cache-dir").map(PathBuf::from), self.has("resume"))
+    }
 }
 
 fn main() -> Result<()> {
@@ -76,6 +82,11 @@ fn main() -> Result<()> {
                  \x20 train   [--scheme umup] [--width 64] [--depth 4] [--batch 16]\n\
                  \x20         [--lr 0.5] [--steps 256] [--precision fp32|fp8|fp8-paper] [--seed 7]\n\
                  \x20 exp     <id|all|list> [--quick] [--workers N]       reproduce figures/tables\n\
+                 \x20\n\
+                 \x20 train/exp also take [--cache-dir DIR] [--resume]:  --cache-dir records\n\
+                 \x20 completed runs to DIR/runs.jsonl (content-addressed; identical configs\n\
+                 \x20 dedupe); --resume reloads them so a restarted sweep skips finished jobs\n\
+                 \x20 (without --resume an existing cache file is truncated)\n\
                  \x20 report  [--out results]                             collate summaries\n\
                  \x20 corpus  [--vocab 256]                               corpus statistics\n"
             );
@@ -115,9 +126,10 @@ fn rules(args: &Args) -> Result<()> {
 /// Validate all artifacts: manifests parse, HLO compiles, one step runs.
 fn check(args: &Args) -> Result<()> {
     let reg = Registry::open(Path::new(&args.get("artifacts", "artifacts")))?;
+    let engine = Engine::new(EngineConfig { workers: 1, ..EngineConfig::default() })?;
     for man in reg.manifests() {
         print!("{:28}", man.name);
-        let session = reg.session(&man.name)?;
+        let session = engine.session(man)?;
         let vecs = umup::parametrization::RuntimeVectors::build(
             man,
             &Parametrization::new(Scheme::Umup),
@@ -152,13 +164,18 @@ fn train(args: &Args) -> Result<()> {
         Precision::parse(&args.get("precision", "fp32")).context("bad --precision")?;
     let reg = Registry::open(Path::new(&args.get("artifacts", "artifacts")))?;
     let man = reg.find(width, depth, batch)?;
-    let corpus = Corpus::generate(CorpusConfig {
+    let corpus = Arc::new(Corpus::generate(CorpusConfig {
         vocab: man.spec.vocab,
         n_tokens: 2_000_000,
         ..Default::default()
-    });
-    let session = reg.session(&man.name)?;
-    let runner = Runner::new(Arc::clone(&session));
+    }));
+    let (cache_dir, resume) = args.cache_opts();
+    let engine = Engine::new(EngineConfig {
+        workers: 1,
+        cache_dir,
+        resume,
+        ..EngineConfig::default()
+    })?;
     let mut cfg = RunConfig::quick(
         &format!("{}-{}", scheme.name(), precision.name()),
         Parametrization::new(scheme),
@@ -169,12 +186,13 @@ fn train(args: &Args) -> Result<()> {
     cfg.seed = args.get("seed", "7").parse()?;
     cfg.schedule = Schedule::standard(lr, steps, (steps / 4).max(1));
     println!("training {} on {} for {steps} steps (lr {lr})", cfg.label, man.name);
-    let rec = runner.run(&cfg, &corpus)?;
+    let rec = engine.run_single(&man, &corpus, cfg)?.record;
     for &(t, l) in &rec.train_curve {
         println!("step {t:6}  train loss {l:.4}");
     }
+    let cached = if engine.stats().cache_hits > 0 { "  (from run cache)" } else { "" };
     println!(
-        "final valid loss {:.4}  (diverged: {})  [{:.1}s]",
+        "final valid loss {:.4}  (diverged: {})  [{:.1}s]{cached}",
         rec.final_valid_loss, rec.diverged, rec.wall_seconds
     );
     Ok(())
@@ -187,14 +205,26 @@ fn exp(args: &Args) -> Result<()> {
         return Ok(());
     }
     let workers: usize = args.get("workers", "4").parse()?;
-    let ctx = ExpContext::new(
+    let (cache_dir, resume) = args.cache_opts();
+    let ctx = ExpContext::with_cache(
         &args.get("artifacts", "artifacts"),
         &args.get("out", "results"),
         args.has("quick"),
         workers,
+        cache_dir,
+        resume,
     )?;
     let md = run_experiment(&ctx, id)?;
     println!("{md}");
+    let s = ctx.engine.stats();
+    println!(
+        "engine: {} runs executed, {} cache hits, {} deduped, {} failed ({} records cached)",
+        s.executed,
+        s.cache_hits,
+        s.deduped,
+        s.failed,
+        ctx.engine.cache_len()
+    );
     Ok(())
 }
 

@@ -1,19 +1,21 @@
-//! Artifact registry: discovers artifact directories, caches compiled
-//! sessions, and picks the right shape for an experiment request.
+//! Artifact registry: discovers artifact directories and picks the right
+//! shape for an experiment request.
+//!
+//! Pure discovery: session compilation and caching live behind
+//! `crate::engine::Engine` (per-worker pools plus a caller-thread pool),
+//! so the registry never touches XLA.
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use super::{Manifest, Session};
+use super::Manifest;
 
-/// Discovers and caches compiled [`Session`]s keyed by spec name.
+/// Discovers [`Manifest`]s keyed by spec name.
 pub struct Registry {
     root: PathBuf,
     manifests: Vec<Arc<Manifest>>,
-    sessions: Mutex<HashMap<String, Arc<Session>>>,
 }
 
 impl Registry {
@@ -35,7 +37,7 @@ impl Registry {
             );
         }
         manifests.sort_by_key(|m| m.name.clone());
-        Ok(Registry { root: root.to_path_buf(), manifests, sessions: Mutex::new(HashMap::new()) })
+        Ok(Registry { root: root.to_path_buf(), manifests })
     }
 
     pub fn root(&self) -> &Path {
@@ -78,24 +80,5 @@ impl Registry {
             .with_context(|| {
                 format!("no artifact for w{width} d{depth} b{batch} tn={trainable_norms}")
             })
-    }
-
-    /// Compile (or fetch the cached) session for a manifest.
-    ///
-    /// XLA compilation is seconds per module, so sessions are shared;
-    /// `Session` itself is used from one thread at a time by the sweep
-    /// scheduler (each worker opens its own state, sharing the compiled
-    /// executable through PJRT which is thread-safe for execution).
-    pub fn session(&self, name: &str) -> Result<Arc<Session>> {
-        if let Some(s) = self.sessions.lock().unwrap().get(name) {
-            return Ok(s.clone());
-        }
-        let man = self.manifest(name)?;
-        let session = Arc::new(Session::open(man)?);
-        self.sessions
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), session.clone());
-        Ok(session)
     }
 }

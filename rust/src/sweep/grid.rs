@@ -1,12 +1,16 @@
 //! 2-D HP-pair grids (the raw data behind Figs 14/15 and the transfer-
 //! error matrix of Fig 4).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::data::Corpus;
-use crate::train::{RunConfig, Runner};
+use crate::engine::Engine;
+use crate::runtime::Manifest;
+use crate::train::RunConfig;
 
-use super::{run_all, Range, SweepJob};
+use super::{Range, SweepJob};
 
 /// Losses over a (fixed HP x transfer HP) grid.
 #[derive(Debug, Clone)]
@@ -22,12 +26,12 @@ pub struct PairGrid {
 /// Train the full 2-D grid for one HP pair; all other HPs stay at
 /// `proto.hp` (the paper holds them at defaults, §A.5).
 pub fn pair_grid(
-    runner: &Runner,
-    corpus: &Corpus,
+    engine: &Engine,
+    manifest: &Arc<Manifest>,
+    corpus: &Arc<Corpus>,
     proto: &RunConfig,
     fixed: (&str, Range),
     transfer: (&str, Range),
-    workers: usize,
 ) -> Result<PairGrid> {
     let fixed_vals = fixed.1.grid();
     let transfer_vals = transfer.1.grid();
@@ -42,7 +46,7 @@ pub fn pair_grid(
             jobs.push(SweepJob { config: cfg, tag: vec![] });
         }
     }
-    let res = run_all(runner, corpus, &jobs, workers)?;
+    let res = engine.run_sweep(manifest, corpus, &jobs)?;
     let mut loss = vec![vec![f64::INFINITY; transfer_vals.len()]; fixed_vals.len()];
     for (k, r) in res.iter().enumerate() {
         let i = k / transfer_vals.len();

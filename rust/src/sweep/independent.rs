@@ -8,14 +8,18 @@
 //! For μP the combine phase *spikes* (Fig 1a) because its HPs are coupled
 //! — the experiment reproduces exactly that contrast.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::data::Corpus;
+use crate::engine::Engine;
 use crate::parametrization::HpSet;
-use crate::train::{RunConfig, Runner};
+use crate::runtime::Manifest;
+use crate::train::RunConfig;
 use crate::util::stats;
 
-use super::{run_all, HpSpace, SweepJob, SweepResult};
+use super::{HpSpace, SweepJob, SweepResult};
 
 #[derive(Debug)]
 pub struct IndependentOutcome {
@@ -34,11 +38,11 @@ pub struct IndependentOutcome {
 }
 
 pub fn independent_search(
-    runner: &Runner,
-    corpus: &Corpus,
+    engine: &Engine,
+    manifest: &Arc<Manifest>,
+    corpus: &Arc<Corpus>,
     space: &HpSpace,
     proto: &RunConfig,
-    workers: usize,
 ) -> Result<IndependentOutcome> {
     let mut all_results = Vec::new();
 
@@ -55,7 +59,7 @@ pub fn independent_search(
             SweepJob { config: cfg, tag: vec![("eta".into(), eta)] }
         })
         .collect();
-    let res = run_all(runner, corpus, &jobs, workers)?;
+    let res = engine.run_sweep(manifest, corpus, &jobs)?;
     let lr_line: Vec<(f64, f64)> =
         res.iter().map(|r| (r.job.tag[0].1, r.record.objective())).collect();
     let best = stats::argmin(&lr_line.iter().map(|p| p.1).collect::<Vec<_>>());
@@ -82,7 +86,7 @@ pub fn independent_search(
         }
         line_specs.push((name.to_string(), grid));
     }
-    let res = run_all(runner, corpus, &jobs, workers)?;
+    let res = engine.run_sweep(manifest, corpus, &jobs)?;
     let mut hp_lines = Vec::new();
     let mut cursor = 0;
     let mut combined_hp = HpSet { eta: best_eta, ..proto.hp };
@@ -105,12 +109,7 @@ pub fn independent_search(
     cfg.hp = combined_hp;
     cfg.schedule.peak_lr = combined_hp.eta;
     cfg.label = format!("{}-combined", proto.label);
-    let res = run_all(
-        runner,
-        corpus,
-        &[SweepJob { config: cfg, tag: vec![] }],
-        1,
-    )?;
+    let res = engine.run_sweep(manifest, corpus, &[SweepJob { config: cfg, tag: vec![] }])?;
     let combined_loss = res[0].record.objective();
     let phase3_runs = phase2_runs + 1;
     all_results.extend(res);

@@ -1,23 +1,27 @@
-//! S10 — the HP-search engine (paper §2.1, §4.5, §5.2-5.3, A.5/A.6).
+//! S10 — the HP-search algorithms (paper §2.1, §4.5, §5.2-5.3, A.5/A.6).
 //!
 //! * [`space`] — per-HP log2 search grids (Table 5 ranges);
 //! * [`random`] — the standard μP random search;
 //! * [`independent`] — u-μP's independent search (LR line search, then
 //!   parallel 1-D sweeps, then combine);
 //! * [`grid`] — 2-D HP-pair grids (Figs 14/15);
-//! * [`transfer_error`] — Algorithm 1;
-//! * [`scheduler`] — thread-pool execution of run batches.
+//! * [`transfer_error`] — Algorithm 1.
+//!
+//! Execution lives in [`crate::engine`] (the unified run engine): the
+//! search strategies here only *plan* job batches and interpret the
+//! results.  The old per-manifest thread-pool scheduler was absorbed by
+//! the engine's multi-manifest worker pool; [`SweepJob`]/[`SweepResult`]
+//! are re-exported from there for the callers' convenience.
 
 mod grid;
 mod independent;
 mod random;
-mod scheduler;
 mod space;
 mod transfer_error;
 
+pub use crate::engine::{SweepJob, SweepResult};
 pub use grid::{pair_grid, PairGrid};
 pub use independent::{independent_search, IndependentOutcome};
 pub use random::{random_search, simulate_run_counts, RandomOutcome};
-pub use scheduler::{run_all, run_all_parallel, SweepJob, SweepResult};
 pub use space::{HpSpace, Range};
 pub use transfer_error::{transfer_error, TransferError};

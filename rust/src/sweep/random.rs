@@ -3,14 +3,18 @@
 //! `simulate_run_counts` reproduces Fig 1(a)'s best-loss-vs-#runs curve
 //! by resampling subsets of the completed runs (exactly as §A.6 does).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::data::Corpus;
+use crate::engine::Engine;
 use crate::parametrization::HpSet;
-use crate::train::{RunConfig, Runner};
+use crate::runtime::Manifest;
+use crate::train::RunConfig;
 use crate::util::{stats, Rng};
 
-use super::{run_all, HpSpace, SweepJob, SweepResult};
+use super::{HpSpace, SweepJob, SweepResult};
 
 #[derive(Debug)]
 pub struct RandomOutcome {
@@ -23,13 +27,13 @@ pub struct RandomOutcome {
 /// Run an `n_runs` random search over `space`, using `proto` for
 /// everything except the swept HP values.
 pub fn random_search(
-    runner: &Runner,
-    corpus: &Corpus,
+    engine: &Engine,
+    manifest: &Arc<Manifest>,
+    corpus: &Arc<Corpus>,
     space: &HpSpace,
     proto: &RunConfig,
     n_runs: usize,
     seed: u64,
-    workers: usize,
 ) -> Result<RandomOutcome> {
     let mut rng = Rng::new(seed).fork("random-search");
     let mut jobs = Vec::with_capacity(n_runs);
@@ -47,7 +51,7 @@ pub fn random_search(
         cfg.label = format!("{}-rs{:03}", proto.label, i);
         jobs.push(SweepJob { config: cfg, tag });
     }
-    let results = run_all(runner, corpus, &jobs, workers)?;
+    let results = engine.run_sweep(manifest, corpus, &jobs)?;
     let losses: Vec<f64> = results.iter().map(|r| r.record.objective()).collect();
     let best = stats::argmin(&losses);
     Ok(RandomOutcome {

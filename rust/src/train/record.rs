@@ -3,6 +3,8 @@
 
 use std::collections::BTreeMap;
 
+use anyhow::{ensure, Result};
+
 use crate::util::Json;
 
 /// The outcome of one training run.
@@ -54,6 +56,52 @@ impl RunRecord {
         Json::Obj(m)
     }
 
+    /// Parse a record serialized by [`RunRecord::to_json`] (the run
+    /// cache's JSONL payload).  Non-finite losses are dumped as JSON
+    /// `null` and read back as +inf — the divergence sentinel.
+    pub fn from_json(j: &Json) -> Result<RunRecord> {
+        fn num(j: &Json) -> Result<f64> {
+            match j {
+                Json::Null => Ok(f64::INFINITY),
+                _ => j.as_f64(),
+            }
+        }
+        fn curve(j: &Json) -> Result<Vec<(u64, f64)>> {
+            j.as_arr()?
+                .iter()
+                .map(|p| -> Result<(u64, f64)> {
+                    let p = p.as_arr()?;
+                    ensure!(p.len() == 2, "curve point must be a [step, value] pair");
+                    Ok((p[0].as_f64()? as u64, num(&p[1])?))
+                })
+                .collect()
+        }
+        let mut rms_curves = BTreeMap::new();
+        for (k, v) in j.get("rms_curves")?.as_obj()? {
+            rms_curves.insert(k.clone(), curve(v)?);
+        }
+        let final_rms = j
+            .get("final_rms")?
+            .as_arr()?
+            .iter()
+            .map(|p| -> Result<(String, f64)> {
+                let p = p.as_arr()?;
+                ensure!(p.len() == 2, "final_rms entry must be a [site, value] pair");
+                Ok((p[0].as_str()?.to_string(), num(&p[1])?))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(RunRecord {
+            label: j.get("label")?.as_str()?.to_string(),
+            train_curve: curve(j.get("train_curve")?)?,
+            valid_curve: curve(j.get("valid_curve")?)?,
+            final_valid_loss: num(j.get("final_valid_loss")?)?,
+            rms_curves,
+            final_rms,
+            diverged: j.get("diverged")?.as_bool()?,
+            wall_seconds: j.get("wall_seconds")?.as_f64()?,
+        })
+    }
+
     /// The sweep objective: final validation loss, with divergence mapped
     /// to +inf so argmin never picks an exploded run.
     pub fn objective(&self) -> f64 {
@@ -86,6 +134,35 @@ mod tests {
         let j = r.to_json().dump();
         let parsed = Json::parse(&j).unwrap();
         assert_eq!(parsed.get("final_valid_loss").unwrap().as_f64().unwrap(), 4.8);
+    }
+
+    #[test]
+    fn from_json_round_trips_including_divergence() {
+        let mut rms = BTreeMap::new();
+        rms.insert("w.head".to_string(), vec![(1u64, 0.9f64), (8, 1.4)]);
+        let r = RunRecord {
+            label: "boom".into(),
+            train_curve: vec![(1, 5.0), (2, f64::NAN)],
+            valid_curve: vec![],
+            final_valid_loss: f64::INFINITY,
+            rms_curves: rms,
+            final_rms: vec![("w.head".into(), 1.4)],
+            diverged: true,
+            wall_seconds: 0.25,
+        };
+        let parsed = Json::parse(&r.to_json().dump()).unwrap();
+        let back = RunRecord::from_json(&parsed).unwrap();
+        assert_eq!(back.label, "boom");
+        assert!(back.diverged);
+        assert_eq!(back.final_valid_loss, f64::INFINITY);
+        assert_eq!(back.objective(), f64::INFINITY);
+        assert_eq!(back.train_curve[0], (1, 5.0));
+        // NaN in a curve is stored as null and read back as +inf
+        assert_eq!(back.train_curve[1].0, 2);
+        assert!(back.train_curve[1].1.is_infinite());
+        assert_eq!(back.rms_curves["w.head"], vec![(1, 0.9), (8, 1.4)]);
+        assert_eq!(back.final_rms, vec![("w.head".to_string(), 1.4)]);
+        assert_eq!(back.wall_seconds, 0.25);
     }
 
     #[test]

@@ -1,0 +1,28 @@
+//! Stable, dependency-free hashing.
+//!
+//! `std`'s default hasher is randomly keyed per process, so anything
+//! that must agree across runs (RNG stream forking, the engine's
+//! content-addressed run cache) goes through FNV-1a instead.
+
+/// 64-bit FNV-1a over a byte string.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_is_deterministic() {
+        // the published FNV-1a 64 offset basis: hash of the empty input
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"umup"), fnv1a64(b"umup"));
+        assert_ne!(fnv1a64(b"umup"), fnv1a64(b"umup "));
+    }
+}

@@ -3,6 +3,7 @@
 //! so these are in-tree rather than crates — see Cargo.toml.)
 
 pub mod bench;
+pub mod hash;
 pub mod json;
 pub mod plot;
 pub mod prop;

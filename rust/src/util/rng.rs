@@ -23,12 +23,7 @@ impl Rng {
 
     /// Derive an independent stream (stable hashing of a label).
     pub fn fork(&self, label: &str) -> Rng {
-        let mut h = 0xcbf29ce484222325u64; // FNV-1a
-        for b in label.bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100000001b3);
-        }
-        Rng::new(self.s[0] ^ h)
+        Rng::new(self.s[0] ^ crate::util::hash::fnv1a64(label.as_bytes()))
     }
 
     pub fn next_u64(&mut self) -> u64 {

@@ -5,17 +5,31 @@
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
+use umup::engine::{Engine, EngineConfig};
 use umup::formats::{BF16, E4M3, E5M2, FP16};
 use umup::parametrization::{HpSet, Parametrization, Precision, RuntimeVectors, Scheme};
-use umup::runtime::{Manifest, Registry, Session};
+use umup::runtime::{Manifest, Registry};
 use umup::util::Rng;
 
 fn artifacts() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// Compiled artifacts come from the Python AOT pipeline (`make
+/// artifacts`) and are not checked in; on runners without them these
+/// tests skip rather than fail.
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts().is_dir() {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
 #[test]
 fn manifests_validate() {
+    require_artifacts!();
     let reg = Registry::open(&artifacts()).unwrap();
     assert!(reg.manifests().len() >= 10, "expected the full spec matrix");
     for man in reg.manifests() {
@@ -33,7 +47,9 @@ fn manifests_validate() {
 
 #[test]
 fn every_artifact_steps() {
+    require_artifacts!();
     let reg = Registry::open(&artifacts()).unwrap();
+    let engine = Engine::new(EngineConfig { workers: 1, ..EngineConfig::default() }).unwrap();
     for man in reg.manifests() {
         // compile+run a representative subset to keep CI fast (tiny,
         // standard proxy, deep, trainable-norms); the rest are covered
@@ -43,7 +59,7 @@ fn every_artifact_steps() {
         if !keep.contains(&man.name.as_str()) {
             continue;
         }
-        let session = reg.session(&man.name).unwrap();
+        let session = engine.session(man).unwrap();
         let vecs = RuntimeVectors::build(
             man,
             &Parametrization::new(Scheme::Umup),
@@ -71,6 +87,7 @@ fn every_artifact_steps() {
 /// bit-exact agreement across 128x128 wide-range inputs, all 4 formats.
 #[test]
 fn pallas_quantizer_matches_rust_codec() {
+    require_artifacts!();
     let dir = artifacts().join("kernels");
     let client = xla::PjRtClient::cpu().unwrap();
     for (name, fmt) in [
@@ -108,6 +125,7 @@ fn pallas_quantizer_matches_rust_codec() {
 /// The tiled u_matmul kernel artifact computes (x @ w)/sqrt(128).
 #[test]
 fn pallas_matmul_artifact() {
+    require_artifacts!();
     let path = artifacts().join("kernels/u_matmul_128.hlo.txt");
     let client = xla::PjRtClient::cpu().unwrap();
     let proto = xla::HloModuleProto::from_text_file(&path).unwrap();
@@ -136,16 +154,19 @@ fn pallas_matmul_artifact() {
     }
     assert!(max_err < 1e-3, "max err {max_err}");
     // unit scaling: unit inputs -> ~unit output RMS
-    let rms = (got.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>() / got.len() as f64).sqrt();
+    let rms =
+        (got.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>() / got.len() as f64).sqrt();
     assert!((rms - 1.0).abs() < 0.1, "rms {rms}");
 }
 
 /// Deterministic init: same seed → identical state, different seed → not.
 #[test]
 fn init_determinism() {
+    require_artifacts!();
     let dir = artifacts().join("w32_d2_b4_t16_v64");
     let man = Arc::new(Manifest::load(&dir).unwrap());
-    let session = Session::open(man.clone()).unwrap();
+    let engine = Engine::new(EngineConfig { workers: 1, ..EngineConfig::default() }).unwrap();
+    let session = engine.session(&man).unwrap();
     let vecs = RuntimeVectors::build(
         &man,
         &Parametrization::new(Scheme::Umup),

@@ -1,0 +1,341 @@
+//! Engine unit-integration tests: cache-key stability, cache hit/miss +
+//! resume-from-disk roundtrips, in-batch deduplication, and failure
+//! isolation under concurrency.
+//!
+//! These run without XLA artifacts: `Engine::with_factory` swaps the
+//! session-backed executor for a mock, so the queueing/caching/outcome
+//! machinery is exercised on any machine (including CI runners with no
+//! compiled artifact tree).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use umup::data::{Corpus, CorpusConfig};
+use umup::engine::{run_key, Engine, EngineConfig, EngineJob, RunCache, SweepJob};
+use umup::parametrization::{HpSet, Parametrization, Scheme};
+use umup::runtime::{Manifest, Spec};
+use umup::train::{RunConfig, RunRecord};
+
+fn dummy_manifest(name: &str) -> Arc<Manifest> {
+    Arc::new(Manifest {
+        name: name.to_string(),
+        dir: PathBuf::from("."),
+        spec: Spec {
+            width: 32,
+            depth: 2,
+            batch: 4,
+            seq: 16,
+            vocab: 64,
+            head_dim: 16,
+            trainable_norms: false,
+        },
+        tensors: vec![],
+        n_params: 0,
+        state_ext_len: 1,
+        loss_offset: 0,
+        rms_offset: 1,
+        scale_sites: BTreeMap::new(),
+        n_scale_sites: 0,
+        quant_sites: BTreeMap::new(),
+        n_quant_sites: 0,
+        rms_sites: vec![],
+    })
+}
+
+fn dummy_corpus() -> Arc<Corpus> {
+    Arc::new(Corpus {
+        config: CorpusConfig { vocab: 64, n_tokens: 0, ..Default::default() },
+        tokens: vec![],
+        n_train: 0,
+    })
+}
+
+fn cfg(label: &str, eta: f64, steps: u64) -> RunConfig {
+    RunConfig::quick(label, Parametrization::new(Scheme::Umup), HpSet::with_eta(eta), steps)
+}
+
+fn fake_record(label: &str, loss: f64) -> RunRecord {
+    RunRecord {
+        label: label.to_string(),
+        train_curve: vec![(1, loss + 1.0), (2, loss)],
+        valid_curve: vec![(2, loss)],
+        final_valid_loss: loss,
+        rms_curves: BTreeMap::new(),
+        final_rms: vec![("w.head".to_string(), 1.0)],
+        diverged: false,
+        wall_seconds: 0.01,
+    }
+}
+
+/// A mock engine: each "run" sleeps briefly and returns a loss derived
+/// from the config's eta; labels starting with "fail" error out.
+/// `counter` counts actual executions (not cache/dedup resolutions).
+fn mock_engine(engine_cfg: EngineConfig, counter: Arc<AtomicUsize>) -> Engine {
+    Engine::with_factory(engine_cfg, move |_worker| {
+        let counter = Arc::clone(&counter);
+        Box::new(move |job: &EngineJob| -> anyhow::Result<RunRecord> {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            counter.fetch_add(1, Ordering::SeqCst);
+            if job.config.label.starts_with("fail") {
+                anyhow::bail!("injected failure for {}", job.config.label);
+            }
+            if job.config.label.starts_with("panic") {
+                panic!("injected panic for {}", job.config.label);
+            }
+            Ok(fake_record(&job.config.label, 2.0 + job.config.hp.eta))
+        })
+    })
+    .unwrap()
+}
+
+// ---------------------------------------------------------------- keys
+
+#[test]
+fn cache_key_is_stable_across_field_set_order_and_ignores_label() {
+    let co = dummy_corpus();
+    let mut a = cfg("figure-one-lr00", 0.5, 64);
+    a.hp.set("alpha_attn", 2.0);
+    a.hp.set("alpha_res", 0.25);
+    a.rms_sites = vec!["w.head".into()];
+    let mut b = cfg("figure-five-baseline", 0.5, 64);
+    b.rms_sites = vec!["w.head".into()];
+    b.hp.set("alpha_res", 0.25); // same fields, different set order
+    b.hp.set("alpha_attn", 2.0);
+    // labels differ, content is identical -> same address
+    assert_eq!(run_key("w64_d4_b16", &co, &a), run_key("w64_d4_b16", &co, &b));
+    // the canonical dump itself is deterministic
+    assert_eq!(a.canonical_json().dump(), b.canonical_json().dump());
+    // every content field perturbs the key
+    let mut c = b.clone();
+    c.seed += 1;
+    assert_ne!(run_key("w64_d4_b16", &co, &b), run_key("w64_d4_b16", &co, &c));
+    let mut d = b.clone();
+    d.hp.eta = 0.25;
+    assert_ne!(run_key("w64_d4_b16", &co, &b), run_key("w64_d4_b16", &co, &d));
+    let mut e = b.clone();
+    e.lr_tweaks = vec![("emb".into(), 4.0)];
+    assert_ne!(run_key("w64_d4_b16", &co, &b), run_key("w64_d4_b16", &co, &e));
+    // the manifest is part of the address
+    assert_ne!(run_key("w64_d4_b16", &co, &b), run_key("w128_d4_b16", &co, &b));
+    // and so is the corpus: a quick-mode corpus must never satisfy a
+    // full-corpus run of the same config
+    let big = Arc::new(Corpus {
+        config: CorpusConfig { vocab: 64, n_tokens: 2_000_000, ..Default::default() },
+        tokens: vec![],
+        n_train: 0,
+    });
+    assert_ne!(run_key("w64_d4_b16", &co, &b), run_key("w64_d4_b16", &big, &b));
+}
+
+// --------------------------------------------------------------- cache
+
+#[test]
+fn run_cache_roundtrips_and_resumes_from_disk() {
+    let dir = std::env::temp_dir().join(format!("umup-cache-test-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let key = run_key("m", &dummy_corpus(), &cfg("x", 0.5, 8));
+    {
+        let mut cache = RunCache::open(&dir, false).unwrap();
+        assert!(cache.is_empty());
+        cache.put(&key, "m", &fake_record("x", 2.5)).unwrap();
+        assert_eq!(cache.len(), 1);
+    }
+    // resume loads the persisted record faithfully
+    let cache = RunCache::open(&dir, true).unwrap();
+    let rec = cache.get(&key).expect("resumed entry");
+    assert_eq!(rec.final_valid_loss, 2.5);
+    assert_eq!(rec.train_curve, vec![(1, 3.5), (2, 2.5)]);
+    assert_eq!(rec.final_rms, vec![("w.head".to_string(), 1.0)]);
+    assert!(cache.get("0000000000000000").is_none());
+    drop(cache);
+    // without resume, the file is a fresh recording
+    let cache = RunCache::open(&dir, false).unwrap();
+    assert!(cache.is_empty());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn engine_dedupes_within_a_batch_and_hits_cache_across_batches() {
+    let counter = Arc::new(AtomicUsize::new(0));
+    let engine = mock_engine(EngineConfig { workers: 2, ..EngineConfig::default() },
+        Arc::clone(&counter));
+    let man = dummy_manifest("m");
+    let corpus = dummy_corpus();
+    // 4 jobs, but only 2 distinct contents (labels differ on purpose)
+    let jobs = vec![
+        SweepJob { config: cfg("a0", 0.5, 8), tag: vec![] },
+        SweepJob { config: cfg("a1-same-as-a0", 0.5, 8), tag: vec![] },
+        SweepJob { config: cfg("b0", 1.0, 8), tag: vec![] },
+        SweepJob { config: cfg("b1-same-as-b0", 1.0, 8), tag: vec![] },
+    ];
+    let res = engine.run_sweep(&man, &corpus, &jobs).unwrap();
+    assert_eq!(res.len(), 4);
+    assert_eq!(counter.load(Ordering::SeqCst), 2, "duplicates must not execute");
+    // results keep job order and job labels
+    assert_eq!(res[1].record.final_valid_loss, res[0].record.final_valid_loss);
+    assert_eq!(res[1].record.label, "a1-same-as-a0");
+    assert!(res[2].record.final_valid_loss > res[0].record.final_valid_loss);
+    // second batch: all four resolve from the in-memory cache
+    engine.run_sweep(&man, &corpus, &jobs).unwrap();
+    assert_eq!(counter.load(Ordering::SeqCst), 2);
+    let s = engine.stats();
+    assert_eq!(s.executed, 2);
+    assert_eq!(s.deduped, 2);
+    assert_eq!(s.cache_hits, 4);
+}
+
+#[test]
+fn engine_resumes_a_sweep_from_a_populated_cache_dir() {
+    let dir = std::env::temp_dir().join(format!("umup-engine-resume-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let man = dummy_manifest("m");
+    let corpus = dummy_corpus();
+    let jobs = vec![
+        SweepJob { config: cfg("a", 0.5, 8), tag: vec![] },
+        SweepJob { config: cfg("b", 1.0, 8), tag: vec![] },
+    ];
+    let c1 = Arc::new(AtomicUsize::new(0));
+    let engine = mock_engine(
+        EngineConfig { workers: 2, cache_dir: Some(dir.clone()), ..EngineConfig::default() },
+        Arc::clone(&c1),
+    );
+    let first = engine.run_sweep(&man, &corpus, &jobs).unwrap();
+    assert_eq!(c1.load(Ordering::SeqCst), 2);
+    drop(engine);
+    // "process restart": a fresh engine with --resume skips everything
+    let c2 = Arc::new(AtomicUsize::new(0));
+    let engine = mock_engine(
+        EngineConfig {
+            workers: 2,
+            cache_dir: Some(dir.clone()),
+            resume: true,
+            ..EngineConfig::default()
+        },
+        Arc::clone(&c2),
+    );
+    let second = engine.run_sweep(&man, &corpus, &jobs).unwrap();
+    assert_eq!(c2.load(Ordering::SeqCst), 0, "resumed sweep must skip completed jobs");
+    for (x, y) in first.iter().zip(&second) {
+        assert_eq!(x.record.final_valid_loss, y.record.final_valid_loss);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------------------ failures
+
+#[test]
+fn failing_job_is_isolated_and_the_rest_complete_concurrently() {
+    let counter = Arc::new(AtomicUsize::new(0));
+    let engine = mock_engine(EngineConfig { workers: 3, ..EngineConfig::default() },
+        Arc::clone(&counter));
+    let man = dummy_manifest("m");
+    let corpus = dummy_corpus();
+    let mut jobs: Vec<EngineJob> = (0..7)
+        .map(|i| EngineJob {
+            manifest: Arc::clone(&man),
+            corpus: dummy_corpus(),
+            config: cfg(&format!("ok-{i}"), 0.25 * (i + 1) as f64, 8),
+            tag: vec![],
+        })
+        .collect();
+    jobs.insert(
+        3,
+        EngineJob {
+            manifest: Arc::clone(&man),
+            corpus: Arc::clone(&corpus),
+            config: cfg("fail-me", 9.0, 8),
+            tag: vec![],
+        },
+    );
+    let report = engine.run(jobs);
+    assert_eq!(report.outcomes.len(), 8);
+    assert_eq!(report.failed, 1);
+    assert_eq!(report.completed, 7);
+    assert_eq!(report.executed, 8, "every job ran despite the failure");
+    assert_eq!(counter.load(Ordering::SeqCst), 8);
+    for (i, o) in report.outcomes.iter().enumerate() {
+        if i == 3 {
+            let err = o.outcome.as_ref().unwrap_err();
+            assert!(err.contains("injected failure"), "{err}");
+        } else {
+            assert!(o.outcome.is_ok(), "job {i} should have completed");
+        }
+    }
+    // the strict view surfaces the error without hiding the attempt
+    // (fresh etas: these must not alias earlier runs in the cache)
+    let jobs2 = vec![
+        SweepJob { config: cfg("fine", 0.3, 8), tag: vec![] },
+        SweepJob { config: cfg("fail-again", 0.9, 8), tag: vec![] },
+    ];
+    let err = engine.run_sweep(&man, &corpus, &jobs2).unwrap_err().to_string();
+    assert!(err.contains("fail-again"), "{err}");
+}
+
+#[test]
+fn panicking_job_does_not_kill_the_worker() {
+    let counter = Arc::new(AtomicUsize::new(0));
+    // workers: 1 — if the panic killed the worker, every later job
+    // (and the next batch) would fail instead of running
+    let engine = mock_engine(EngineConfig { workers: 1, ..EngineConfig::default() },
+        Arc::clone(&counter));
+    let man = dummy_manifest("m");
+    let corpus = dummy_corpus();
+    let jobs = vec![
+        SweepJob { config: cfg("ok-first", 0.25, 8), tag: vec![] },
+        SweepJob { config: cfg("panic-now", 0.5, 8), tag: vec![] },
+        SweepJob { config: cfg("ok-after", 0.75, 8), tag: vec![] },
+    ];
+    let report = engine.run(
+        jobs.iter()
+            .map(|j| EngineJob {
+                manifest: Arc::clone(&man),
+                corpus: Arc::clone(&corpus),
+                config: j.config.clone(),
+                tag: j.tag.clone(),
+            })
+            .collect(),
+    );
+    assert_eq!(report.completed, 2);
+    assert_eq!(report.failed, 1);
+    let err = report.outcomes[1].outcome.as_ref().unwrap_err();
+    assert!(err.contains("panicked") && err.contains("injected panic"), "{err}");
+    assert!(report.outcomes[2].outcome.is_ok(), "worker must survive the panic");
+    // and the same engine still serves the next batch
+    let again = engine
+        .run_sweep(&man, &corpus, &[SweepJob { config: cfg("ok-later", 1.25, 8), tag: vec![] }])
+        .unwrap();
+    assert_eq!(again.len(), 1);
+}
+
+#[test]
+fn multi_manifest_batches_drain_through_one_queue() {
+    let counter = Arc::new(AtomicUsize::new(0));
+    let engine = mock_engine(EngineConfig { workers: 2, ..EngineConfig::default() },
+        Arc::clone(&counter));
+    let corpus = dummy_corpus();
+    let jobs: Vec<EngineJob> = ["w32", "w64", "w128"]
+        .iter()
+        .flat_map(|name| {
+            let man = dummy_manifest(name);
+            let corpus = Arc::clone(&corpus);
+            // distinct etas per manifest so nothing dedupes within one
+            // shape; across shapes eta repeats to prove the manifest
+            // name keeps the addresses apart
+            (0..2).map(move |i| EngineJob {
+                manifest: Arc::clone(&man),
+                corpus: Arc::clone(&corpus),
+                config: cfg(&format!("{name}-{i}"), 0.5 * (i + 1) as f64, 8),
+                tag: vec![],
+            })
+        })
+        .collect();
+    let report = engine.run(jobs);
+    assert_eq!(report.completed, 6);
+    assert_eq!(report.failed, 0);
+    // same config under different manifests must NOT collide in the
+    // cache: the manifest name is part of the content address
+    assert_eq!(report.executed, 6);
+    assert_eq!(counter.load(Ordering::SeqCst), 6);
+}
