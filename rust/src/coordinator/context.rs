@@ -8,7 +8,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use crate::data::{Corpus, CorpusConfig};
-use crate::engine::{Engine, EngineConfig};
+use crate::engine::{Engine, EngineConfig, Shard};
 use crate::runtime::Registry;
 
 pub struct ExpContext {
@@ -26,13 +26,17 @@ pub struct ExpContext {
 
 impl ExpContext {
     pub fn new(artifacts: &str, out_dir: &str, quick: bool, workers: usize) -> Result<Self> {
-        Self::with_cache(artifacts, out_dir, quick, workers, None, false)
+        Self::with_cache(artifacts, out_dir, quick, workers, None, false, None)
     }
 
     /// Like [`ExpContext::new`] with run-cache persistence: `cache_dir`
-    /// records completed runs to `runs.jsonl`; `resume` additionally
-    /// loads what a previous (possibly interrupted) sweep completed, so
-    /// re-running an experiment skips those jobs.
+    /// records completed runs as lock-safe JSONL segments; `resume`
+    /// additionally merges in what previous (possibly interrupted or
+    /// sharded) sweeps completed, so re-running an experiment skips
+    /// those jobs.  With `shard` set (`--shard i/n`), this process
+    /// executes only its deterministic slice of each sweep and records
+    /// it to its own `runs.<i>.jsonl` segment — N such processes over
+    /// one shared `cache_dir` drain one experiment concurrently.
     pub fn with_cache(
         artifacts: &str,
         out_dir: &str,
@@ -40,12 +44,14 @@ impl ExpContext {
         workers: usize,
         cache_dir: Option<PathBuf>,
         resume: bool,
+        shard: Option<Shard>,
     ) -> Result<Self> {
         let registry = Arc::new(Registry::open(Path::new(artifacts))?);
         let engine = Engine::new(EngineConfig {
             workers,
             cache_dir,
             resume,
+            shard,
             ..EngineConfig::default()
         })?;
         Ok(ExpContext {

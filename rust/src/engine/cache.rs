@@ -1,4 +1,7 @@
-//! Content-addressed run cache.
+//! Content-addressed run cache with sharded, lock-safe segments and a
+//! lifecycle (GC / compaction / stats).
+//!
+//! # Addressing
 //!
 //! A run is addressed by a stable 64-bit FNV-1a hash of
 //! `(manifest name, corpus config, canonical RunConfig)` — see
@@ -14,17 +17,56 @@
 //! are stable across field-construction order *and* across process runs
 //! — which is what makes the on-disk cache a resume mechanism.
 //!
-//! Persistence is line-oriented JSONL (`runs.jsonl`): one
-//! `{"key":…,"manifest":…,"record":…}` object per completed run,
-//! appended and flushed as results arrive so a killed sweep loses at
-//! most the in-flight runs.
+//! # Cache layout & lifecycle
+//!
+//! A cache directory holds one or more JSONL *segments*:
+//!
+//! * `runs.jsonl` — the unsharded (single-process) segment, also the
+//!   output of compaction;
+//! * `runs.<k>.jsonl` — the segment written by shard `k` of a sharded
+//!   sweep (`--shard k/n`).
+//!
+//! Each line is one completed run:
+//! `{"key":…,"manifest":…,"record":…,"ts":…}` — appended and flushed as
+//! results arrive, so a killed sweep loses at most the in-flight runs.
+//! `ts` is the unix-seconds completion time (overridable via the
+//! `UMUP_CACHE_TS` env var, which the deterministic concurrency harness
+//! uses to make whole segments byte-for-byte reproducible).
+//!
+//! *Reads* merge: opening a cache with `resume` loads **every** segment
+//! in the directory (sorted by file name, last write per key wins), so N
+//! shard processes draining disjoint slices of one sweep into one shared
+//! directory produce a cache any later process can consume wholesale.
+//!
+//! *Writes* are single-writer per segment: each opener appends only to
+//! its own segment, guarded by an advisory lock file
+//! (`<segment>.lock`, containing the holder pid).  A stale lock — its
+//! pid no longer alive — is reclaimed with a warning; a live holder is a
+//! hard error, so two processes can never interleave writes within one
+//! segment.  Distinct shards write distinct segments, which is what
+//! makes a sharded sweep safe without any cross-process byte-level
+//! locking.
+//!
+//! *Lifecycle*: [`stats`] summarizes a cache directory (per-segment
+//! entry/corruption/byte counts, duplicate keys across segments,
+//! per-manifest totals); [`gc`] prunes by age (`ts`) and/or manifest and
+//! compacts all segments into a single key-sorted `runs.jsonl`,
+//! taking every segment lock first so it never races a live writer.
+//!
+//! # Crash safety
+//!
+//! A process killed mid-append leaves a truncated (possibly non-UTF-8)
+//! final line.  The segment reader is byte-oriented and lossy: corrupt
+//! or torn lines are *skipped with a warning*, never propagated, so a
+//! `--resume` after a crash re-runs at most the torn job.
 
 use std::collections::{BTreeMap, HashMap};
 use std::fs::{File, OpenOptions};
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::data::{Corpus, CorpusConfig};
 use crate::train::{RunConfig, RunRecord};
@@ -54,58 +96,388 @@ pub fn run_key(manifest: &str, corpus: &Corpus, cfg: &RunConfig) -> String {
     format!("{:016x}", fnv1a64(payload.as_bytes()))
 }
 
-/// key -> [`RunRecord`] map with optional JSONL persistence.
+// ------------------------------------------------------------- sharding
+
+/// One slice of a sharded sweep: this process owns every run key whose
+/// hash lands in residue class `index` mod `count`.
+///
+/// Ownership is a pure function of the content address, so N processes
+/// given the same job list and the same `count` partition it into
+/// disjoint, deterministic slices without any coordination — the slices
+/// are hash-balanced, not contiguous.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    pub index: usize,
+    pub count: usize,
+}
+
+impl Shard {
+    /// Parse the CLI form `i/n` (0-based, `i < n`).
+    pub fn parse(s: &str) -> Result<Shard> {
+        let (i, n) = s
+            .split_once('/')
+            .with_context(|| format!("bad shard spec {s:?} (expected i/n, e.g. 0/4)"))?;
+        let index: usize = i.trim().parse().with_context(|| format!("bad shard index {i:?}"))?;
+        let count: usize = n.trim().parse().with_context(|| format!("bad shard count {n:?}"))?;
+        if count == 0 {
+            bail!("shard count must be >= 1");
+        }
+        if index >= count {
+            bail!("shard index {index} out of range for count {count} (0-based)");
+        }
+        Ok(Shard { index, count })
+    }
+
+    /// Does this shard own the run with content address `key`?
+    pub fn owns(&self, key: &str) -> bool {
+        self.index_of(key) == self.index
+    }
+
+    /// Which shard (0..count) owns `key`.
+    pub fn index_of(&self, key: &str) -> usize {
+        // run keys are 16-hex FNV digests; fall back to re-hashing for
+        // anything else so arbitrary strings still partition stably
+        let h = u64::from_str_radix(key, 16).unwrap_or_else(|_| fnv1a64(key.as_bytes()));
+        (mix64(h) % self.count as u64) as usize
+    }
+}
+
+/// splitmix64 finalizer.  FNV-1a's multiply only carries differences
+/// *upward*, so related payloads cluster in the digest's low bits —
+/// taking `h % count` directly can park an entire sweep in one shard
+/// (observed: 8/8 same-parity keys for an eta-only grid).  Mixing
+/// high bits back down first makes the partition track the whole
+/// digest.  Partition assignment only — never part of the on-disk key.
+fn mix64(mut h: u64) -> u64 {
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94d0_49bb_1331_11eb);
+    h ^= h >> 31;
+    h
+}
+
+impl std::fmt::Display for Shard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.index, self.count)
+    }
+}
+
+// ------------------------------------------------------------- segments
+
+/// The segment file this opener appends to.
+fn segment_name(shard: Option<Shard>) -> String {
+    match shard {
+        Some(s) => format!("runs.{}.jsonl", s.index),
+        None => "runs.jsonl".to_string(),
+    }
+}
+
+/// Is `name` a cache segment file (`runs.jsonl` or `runs.<k>.jsonl`)?
+fn is_segment_name(name: &str) -> bool {
+    if name == "runs.jsonl" {
+        return true;
+    }
+    name.strip_prefix("runs.")
+        .and_then(|rest| rest.strip_suffix(".jsonl"))
+        .is_some_and(|mid| !mid.is_empty() && mid.bytes().all(|b| b.is_ascii_digit()))
+}
+
+/// Every segment in `dir`, sorted by file name (a missing directory is
+/// an empty cache).
+pub fn list_segments(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == ErrorKind::NotFound => return Ok(out),
+        Err(e) => {
+            return Err(e).with_context(|| format!("reading cache dir {}", dir.display()))
+        }
+    };
+    for entry in entries {
+        let path = entry?.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        if path.is_file() && is_segment_name(name) {
+            out.push(path);
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+// ---------------------------------------------------------- lock files
+
+fn lock_path(segment: &Path) -> PathBuf {
+    let mut name = segment.file_name().unwrap_or_default().to_os_string();
+    name.push(".lock");
+    segment.with_file_name(name)
+}
+
+fn pid_is_alive(pid: u32) -> bool {
+    if pid == std::process::id() {
+        return true;
+    }
+    if cfg!(target_os = "linux") {
+        Path::new(&format!("/proc/{pid}")).exists()
+    } else {
+        // no portable liveness probe without libc: assume alive and make
+        // the operator remove the lock file by hand
+        true
+    }
+}
+
+/// An advisory per-segment writer lock: a `<segment>.lock` file created
+/// atomically (`create_new`) and holding the owner pid.  Stale locks
+/// (dead pid) are reclaimed with a warning; live holders are an error.
+struct SegmentLock {
+    path: PathBuf,
+}
+
+impl SegmentLock {
+    fn acquire(segment: &Path) -> Result<SegmentLock> {
+        let path = lock_path(segment);
+        for _ in 0..4 {
+            match OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    let _ = writeln!(f, "{}", std::process::id());
+                    return Ok(SegmentLock { path });
+                }
+                Err(e) if e.kind() == ErrorKind::AlreadyExists => {
+                    let holder = std::fs::read_to_string(&path)
+                        .ok()
+                        .and_then(|s| s.trim().parse::<u32>().ok());
+                    match holder {
+                        Some(pid) if pid_is_alive(pid) => bail!(
+                            "cache segment {} is locked by live process {pid} \
+                             (another writer is draining this shard; pick a \
+                             different --shard index or wait, then retry)",
+                            segment.display()
+                        ),
+                        Some(pid) => {
+                            // positively dead: reclaim and retry; if a
+                            // racing process re-creates the lock first,
+                            // the next round sees its live pid and errors
+                            eprintln!(
+                                "run-cache: reclaiming stale lock {} (holder {pid} is gone)",
+                                path.display()
+                            );
+                            let _ = std::fs::remove_file(&path);
+                        }
+                        None => {
+                            // a racing writer may have created the file
+                            // but not flushed its pid line yet — never
+                            // steal on an unreadable holder, just give
+                            // it a beat and look again
+                            std::thread::sleep(std::time::Duration::from_millis(20));
+                        }
+                    }
+                }
+                Err(e) => {
+                    return Err(e)
+                        .with_context(|| format!("creating lock file {}", path.display()));
+                }
+            }
+        }
+        bail!(
+            "could not acquire lock for segment {} after retries (if its writer is \
+             gone, delete {} by hand)",
+            segment.display(),
+            lock_path(segment).display()
+        )
+    }
+}
+
+impl Drop for SegmentLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+// ------------------------------------------------------------- entries
+
+/// Completion timestamp for new cache lines: unix seconds, overridable
+/// via `UMUP_CACHE_TS` (the deterministic test harness pins it so whole
+/// segments become byte-for-byte reproducible).
+fn now_ts() -> u64 {
+    if let Ok(v) = std::env::var("UMUP_CACHE_TS") {
+        if let Ok(ts) = v.trim().parse::<u64>() {
+            return ts;
+        }
+    }
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// Serialize one cache line (the canonical, sorted-key form; also the
+/// compaction output, so merged caches round-trip byte-identically).
+fn entry_line(key: &str, manifest: &str, ts: u64, record: &RunRecord) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("key".to_string(), Json::Str(key.to_string()));
+    obj.insert("manifest".to_string(), Json::Str(manifest.to_string()));
+    obj.insert("record".to_string(), record.to_json());
+    obj.insert("ts".to_string(), Json::Num(ts as f64));
+    Json::Obj(obj).dump()
+}
+
+/// One parsed cache line.  `ts` is 0 for pre-lifecycle lines (treated as
+/// arbitrarily old by age-based GC).
+struct Entry {
+    key: String,
+    manifest: String,
+    ts: u64,
+    record: RunRecord,
+}
+
+fn parse_full_entry(line: &str) -> Result<Entry> {
+    let j = Json::parse(line)?;
+    let key = j.get("key")?.as_str()?.to_string();
+    let manifest = j.get("manifest")?.as_str()?.to_string();
+    let ts = match j.get("ts") {
+        Ok(v) => v.as_f64()? as u64,
+        Err(_) => 0,
+    };
+    let record = RunRecord::from_json(j.get("record")?)?;
+    Ok(Entry { key, manifest, ts, record })
+}
+
+fn parse_entry(line: &str) -> Result<(String, RunRecord)> {
+    let e = parse_full_entry(line)?;
+    Ok((e.key, e.record))
+}
+
+/// Does `path` end mid-line (non-empty, no trailing newline)?  The
+/// signature a writer was killed mid-append.
+fn tail_is_torn(path: &Path) -> bool {
+    let Ok(mut f) = File::open(path) else { return false };
+    let Ok(len) = f.metadata().map(|m| m.len()) else { return false };
+    if len == 0 || f.seek(SeekFrom::End(-1)).is_err() {
+        return false;
+    }
+    let mut last = [0u8; 1];
+    f.read_exact(&mut last).is_ok() && last[0] != b'\n'
+}
+
+/// Byte-oriented, lossy line iteration: a torn final line from a killed
+/// writer (possibly invalid UTF-8) must never abort a resume.  I/O
+/// errors mid-file stop the scan with a warning instead of propagating.
+fn for_each_line(path: &Path, mut f: impl FnMut(&str)) -> Result<()> {
+    let file = match File::open(path) {
+        Ok(file) => file,
+        Err(e) if e.kind() == ErrorKind::NotFound => return Ok(()),
+        Err(e) => return Err(e).with_context(|| format!("opening {}", path.display())),
+    };
+    let mut reader = BufReader::new(file);
+    let mut buf = Vec::new();
+    loop {
+        buf.clear();
+        match reader.read_until(b'\n', &mut buf) {
+            Ok(0) => return Ok(()),
+            Ok(_) => {
+                let line = String::from_utf8_lossy(&buf);
+                f(line.trim_end_matches(['\n', '\r']));
+            }
+            Err(e) => {
+                eprintln!("run-cache: stopping scan of {}: {e}", path.display());
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// Load one segment into `entries` (later lines win), returning
+/// (loaded, corrupt-skipped) counts.
+fn load_segment(path: &Path, entries: &mut HashMap<String, RunRecord>) -> (usize, usize) {
+    let (mut loaded, mut corrupt) = (0usize, 0usize);
+    let mut lineno = 0usize;
+    let res = for_each_line(path, |line| {
+        lineno += 1;
+        if line.trim().is_empty() {
+            return;
+        }
+        match parse_entry(line) {
+            Ok((key, record)) => {
+                entries.insert(key, record);
+                loaded += 1;
+            }
+            Err(e) => {
+                corrupt += 1;
+                eprintln!(
+                    "run-cache: skipping corrupt line {} of {}: {e:#}",
+                    lineno,
+                    path.display()
+                );
+            }
+        }
+    });
+    if let Err(e) = res {
+        eprintln!("run-cache: could not read segment {}: {e:#}", path.display());
+    }
+    (loaded, corrupt)
+}
+
+// ----------------------------------------------------------- RunCache
+
+/// key -> [`RunRecord`] map with optional segmented JSONL persistence.
 pub struct RunCache {
     entries: HashMap<String, RunRecord>,
     file: Option<File>,
     path: Option<PathBuf>,
+    /// Held for the cache's lifetime; releases (deletes) on drop.
+    _lock: Option<SegmentLock>,
 }
 
 impl RunCache {
     /// A process-local cache (still deduplicates within a sweep and
     /// across an engine's lifetime; nothing is written to disk).
     pub fn in_memory() -> RunCache {
-        RunCache { entries: HashMap::new(), file: None, path: None }
+        RunCache { entries: HashMap::new(), file: None, path: None, _lock: None }
     }
 
-    /// Open the persistent cache at `dir/runs.jsonl`.
-    ///
-    /// With `resume`, pre-existing entries are loaded (corrupt lines are
-    /// skipped with a warning — a truncated tail from a killed process
-    /// must not poison the sweep).  Without `resume` the file is
-    /// truncated: a fresh recording.
+    /// Open the persistent, unsharded cache at `dir/runs.jsonl`
+    /// (equivalent to [`RunCache::open_sharded`] with no shard).
     pub fn open(dir: &Path, resume: bool) -> Result<RunCache> {
+        Self::open_sharded(dir, None, resume)
+    }
+
+    /// Open the persistent cache in `dir`, appending to this opener's
+    /// segment (`runs.jsonl`, or `runs.<k>.jsonl` for shard `k`).
+    ///
+    /// The segment is locked against concurrent writers for the cache's
+    /// lifetime.  With `resume`, pre-existing entries from **all**
+    /// segments are merged in (corrupt lines are skipped with a warning
+    /// — a truncated tail from a killed process must not poison the
+    /// sweep).  Without `resume`, this opener's own segment is truncated
+    /// (a fresh recording); other shards' segments are left alone, since
+    /// their writers may be live — use `repro cache gc` to clear a
+    /// directory wholesale.
+    pub fn open_sharded(dir: &Path, shard: Option<Shard>, resume: bool) -> Result<RunCache> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating cache dir {}", dir.display()))?;
-        let path = dir.join("runs.jsonl");
+        let path = dir.join(segment_name(shard));
+        let lock = SegmentLock::acquire(&path)?;
         let mut entries = HashMap::new();
-        if resume && path.exists() {
-            let f = File::open(&path)
-                .with_context(|| format!("opening run cache {}", path.display()))?;
-            for (lineno, line) in BufReader::new(f).lines().enumerate() {
-                let line = line?;
-                if line.trim().is_empty() {
-                    continue;
-                }
-                match parse_entry(&line) {
-                    Ok((key, record)) => {
-                        entries.insert(key, record);
-                    }
-                    Err(e) => eprintln!(
-                        "run-cache: skipping corrupt line {} of {}: {e:#}",
-                        lineno + 1,
-                        path.display()
-                    ),
-                }
+        if resume {
+            for seg in list_segments(dir)? {
+                load_segment(&seg, &mut entries);
             }
         }
-        let file = if resume {
+        let mut file = if resume {
             OpenOptions::new().create(true).append(true).open(&path)
         } else {
             File::create(&path)
         }
         .with_context(|| format!("opening run cache {} for append", path.display()))?;
-        Ok(RunCache { entries, file: Some(file), path: Some(path) })
+        if resume && tail_is_torn(&path) {
+            // a killed writer left a line without its newline: start the
+            // next append on a fresh line so the new record isn't
+            // concatenated onto (and lost with) the torn one
+            file.write_all(b"\n").context("healing torn run-cache tail")?;
+        }
+        Ok(RunCache { entries, file: Some(file), path: Some(path), _lock: Some(lock) })
     }
 
     pub fn len(&self) -> usize {
@@ -124,35 +496,305 @@ impl RunCache {
         self.entries.get(key)
     }
 
+    /// Merge in any entries *other* writers appended to this cache
+    /// directory since open — a sharded drain polls this between rounds
+    /// to pick up sibling shards' results.  Returns the number of newly
+    /// visible records.  No-op (0) for in-memory caches.
+    pub fn refresh_from_disk(&mut self) -> usize {
+        let Some(own) = self.path.clone() else {
+            return 0;
+        };
+        let Some(dir) = own.parent() else {
+            return 0;
+        };
+        let before = self.entries.len();
+        match list_segments(dir) {
+            Ok(segments) => {
+                for seg in segments {
+                    // own segment is already in memory in full
+                    if seg == own {
+                        continue;
+                    }
+                    load_segment(&seg, &mut self.entries);
+                }
+            }
+            Err(e) => eprintln!("run-cache: refresh failed: {e:#}"),
+        }
+        self.entries.len() - before
+    }
+
     /// Record a completed run (idempotent per key) and, if persistent,
-    /// append + flush its JSONL line.
+    /// append + flush its JSONL line to this opener's segment.
     pub fn put(&mut self, key: &str, manifest: &str, record: &RunRecord) -> Result<()> {
         if self.entries.contains_key(key) {
             return Ok(());
         }
         self.entries.insert(key.to_string(), record.clone());
         if let Some(f) = &mut self.file {
-            let mut obj = BTreeMap::new();
-            obj.insert("key".to_string(), Json::Str(key.to_string()));
-            obj.insert("manifest".to_string(), Json::Str(manifest.to_string()));
-            obj.insert("record".to_string(), record.to_json());
-            writeln!(f, "{}", Json::Obj(obj).dump()).context("appending run-cache line")?;
+            writeln!(f, "{}", entry_line(key, manifest, now_ts(), record))
+                .context("appending run-cache line")?;
             f.flush().context("flushing run cache")?;
         }
         Ok(())
     }
 }
 
-fn parse_entry(line: &str) -> Result<(String, RunRecord)> {
-    let j = Json::parse(line)?;
-    let key = j.get("key")?.as_str()?.to_string();
-    let record = RunRecord::from_json(j.get("record")?)?;
-    Ok((key, record))
+// ------------------------------------------------------------ lifecycle
+
+/// Per-segment summary from [`stats`].
+#[derive(Debug, Clone)]
+pub struct SegmentStats {
+    pub name: String,
+    pub entries: usize,
+    pub corrupt: usize,
+    pub bytes: u64,
+}
+
+/// Whole-directory summary from [`stats`].
+#[derive(Debug, Clone, Default)]
+pub struct CacheStats {
+    pub segments: Vec<SegmentStats>,
+    /// Total lines parsed across segments (including cross-segment
+    /// duplicates of one key).
+    pub total_entries: usize,
+    pub unique_keys: usize,
+    /// `total_entries - unique_keys`: same key recorded in several
+    /// segments (compaction removes these).
+    pub duplicate_keys: usize,
+    pub corrupt_lines: usize,
+    pub total_bytes: u64,
+    /// Unique keys per manifest name.
+    pub per_manifest: BTreeMap<String, usize>,
+    pub oldest_ts: Option<u64>,
+    pub newest_ts: Option<u64>,
+}
+
+/// Summarize a cache directory without taking any locks (read-only; a
+/// line being appended concurrently may be counted as corrupt).
+pub fn stats(dir: &Path) -> Result<CacheStats> {
+    let mut st = CacheStats::default();
+    let mut manifest_of: HashMap<String, String> = HashMap::new();
+    for seg in list_segments(dir)? {
+        let bytes = std::fs::metadata(&seg).map(|m| m.len()).unwrap_or(0);
+        let (mut loaded, mut corrupt) = (0usize, 0usize);
+        for_each_line(&seg, |line| {
+            if line.trim().is_empty() {
+                return;
+            }
+            match parse_full_entry(line) {
+                Ok(e) => {
+                    loaded += 1;
+                    if e.ts > 0 {
+                        st.oldest_ts = Some(st.oldest_ts.map_or(e.ts, |t| t.min(e.ts)));
+                        st.newest_ts = Some(st.newest_ts.map_or(e.ts, |t| t.max(e.ts)));
+                    }
+                    manifest_of.insert(e.key, e.manifest);
+                }
+                Err(_) => corrupt += 1,
+            }
+        })?;
+        st.total_entries += loaded;
+        st.corrupt_lines += corrupt;
+        st.total_bytes += bytes;
+        st.segments.push(SegmentStats {
+            name: seg.file_name().and_then(|n| n.to_str()).unwrap_or("?").to_string(),
+            entries: loaded,
+            corrupt,
+            bytes,
+        });
+    }
+    st.unique_keys = manifest_of.len();
+    st.duplicate_keys = st.total_entries - st.unique_keys;
+    for manifest in manifest_of.into_values() {
+        *st.per_manifest.entry(manifest).or_insert(0) += 1;
+    }
+    Ok(st)
+}
+
+/// What [`gc`] should prune.  With no filters set, GC is a pure
+/// compaction: segments merge into one key-sorted `runs.jsonl`, dropping
+/// cross-segment duplicates and corrupt lines.
+#[derive(Debug, Clone, Default)]
+pub struct GcOptions {
+    /// Prune entries whose `ts` is at least this old (entries without a
+    /// `ts` — pre-lifecycle lines — count as arbitrarily old).
+    pub older_than: Option<Duration>,
+    /// Prune entries recorded under this manifest name.
+    pub manifest: Option<String>,
+    /// Report what would happen without touching any file.
+    pub dry_run: bool,
+}
+
+/// What [`gc`] did (or, under `dry_run`, would do).
+#[derive(Debug, Clone, Default)]
+pub struct GcReport {
+    /// Parseable lines seen across all segments.
+    pub scanned: usize,
+    pub kept: usize,
+    /// Entries dropped by the age / manifest filters.
+    pub pruned: usize,
+    /// Cross-segment duplicate lines collapsed by compaction.
+    pub deduped: usize,
+    pub corrupt_dropped: usize,
+    pub segments_before: usize,
+    pub bytes_before: u64,
+    pub bytes_after: u64,
+}
+
+/// Prune and compact a cache directory.
+///
+/// Takes every segment's writer lock first (erroring if any segment has
+/// a live writer), merges all segments (last write per key wins),
+/// applies the [`GcOptions`] filters, and — unless `dry_run` — rewrites
+/// the survivors as a single key-sorted `runs.jsonl` (via a temp file +
+/// rename) and deletes the shard segments.  An emptied cache ends up
+/// with no segment files at all.
+pub fn gc(dir: &Path, opts: &GcOptions) -> Result<GcReport> {
+    let segments = list_segments(dir)?;
+    let mut report = GcReport { segments_before: segments.len(), ..GcReport::default() };
+    if segments.is_empty() {
+        return Ok(report);
+    }
+    let compacted = dir.join("runs.jsonl");
+    // lock every segment plus the compaction target so no live writer
+    // (or competing gc) can race the rewrite
+    let mut locks = Vec::new();
+    for seg in segments.iter().chain(
+        (!segments.contains(&compacted)).then_some(&compacted),
+    ) {
+        locks.push(
+            SegmentLock::acquire(seg)
+                .with_context(|| format!("gc: locking segment {}", seg.display()))?,
+        );
+    }
+
+    // merge: insertion order = sorted segment order, so later segments
+    // win for duplicated keys (mirrors the resume reader)
+    let mut merged: BTreeMap<String, Entry> = BTreeMap::new();
+    for seg in &segments {
+        report.bytes_before += std::fs::metadata(seg).map(|m| m.len()).unwrap_or(0);
+        let res = for_each_line(seg, |line| {
+            if line.trim().is_empty() {
+                return;
+            }
+            match parse_full_entry(line) {
+                Ok(e) => {
+                    report.scanned += 1;
+                    if merged.insert(e.key.clone(), e).is_some() {
+                        report.deduped += 1;
+                    }
+                }
+                Err(_) => report.corrupt_dropped += 1,
+            }
+        });
+        if let Err(e) = res {
+            eprintln!("run-cache: gc could not read {}: {e:#}", seg.display());
+        }
+    }
+
+    // filter
+    let cutoff = opts.older_than.map(|d| now_ts().saturating_sub(d.as_secs()));
+    let kept: Vec<&Entry> = merged
+        .values()
+        .filter(|e| {
+            if let Some(m) = &opts.manifest {
+                if &e.manifest == m {
+                    return false;
+                }
+            }
+            if let Some(cut) = cutoff {
+                if e.ts <= cut {
+                    return false;
+                }
+            }
+            true
+        })
+        .collect();
+    report.kept = kept.len();
+    report.pruned = merged.len() - kept.len();
+
+    if opts.dry_run {
+        report.bytes_after = report.bytes_before;
+        return Ok(report);
+    }
+
+    // rewrite: survivors into runs.jsonl (atomically), then drop the
+    // shard segments
+    if kept.is_empty() {
+        for seg in &segments {
+            std::fs::remove_file(seg)
+                .with_context(|| format!("gc: removing segment {}", seg.display()))?;
+        }
+    } else {
+        let tmp = dir.join("runs.jsonl.tmp");
+        {
+            let mut f = File::create(&tmp)
+                .with_context(|| format!("gc: creating {}", tmp.display()))?;
+            for e in &kept {
+                writeln!(f, "{}", entry_line(&e.key, &e.manifest, e.ts, &e.record))
+                    .context("gc: writing compacted entry")?;
+            }
+            f.flush().context("gc: flushing compacted cache")?;
+        }
+        std::fs::rename(&tmp, &compacted)
+            .with_context(|| format!("gc: installing {}", compacted.display()))?;
+        for seg in segments.iter().filter(|s| **s != compacted) {
+            std::fs::remove_file(seg)
+                .with_context(|| format!("gc: removing segment {}", seg.display()))?;
+        }
+        report.bytes_after = std::fs::metadata(&compacted).map(|m| m.len()).unwrap_or(0);
+    }
+    drop(locks);
+    Ok(report)
+}
+
+/// Parse a human duration: bare seconds or `<number><s|m|h|d|w>`
+/// (e.g. `0s`, `90`, `5m`, `12h`, `30d`).
+pub fn parse_duration(s: &str) -> Result<Duration> {
+    let s = s.trim();
+    let split = s
+        .find(|c: char| !c.is_ascii_digit() && c != '.')
+        .unwrap_or(s.len());
+    let (num, unit) = s.split_at(split);
+    let n: f64 = num
+        .parse()
+        .with_context(|| format!("bad duration {s:?} (expected e.g. 30d, 12h, 0s)"))?;
+    let mult = match unit.trim() {
+        "" | "s" => 1.0,
+        "m" => 60.0,
+        "h" => 3600.0,
+        "d" => 86400.0,
+        "w" => 604800.0,
+        u => bail!("bad duration unit {u:?} in {s:?} (use s/m/h/d/w)"),
+    };
+    // try_from: an absurd `--older-than` must be an error, not a panic
+    Duration::try_from_secs_f64(n * mult)
+        .map_err(|e| anyhow::anyhow!("duration {s:?} out of range: {e}"))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn rec(label: &str, loss: f64) -> RunRecord {
+        RunRecord {
+            label: label.to_string(),
+            train_curve: vec![(1, loss)],
+            valid_curve: vec![],
+            final_valid_loss: loss,
+            rms_curves: BTreeMap::new(),
+            final_rms: vec![],
+            diverged: false,
+            wall_seconds: 0.0,
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("umup-cache-unit-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
 
     #[test]
     fn key_depends_on_manifest_and_corpus() {
@@ -172,5 +814,193 @@ mod tests {
         assert_ne!(run_key("m1", &small, &cfg), run_key("m2", &small, &cfg));
         // a quick-mode corpus must never satisfy a full-corpus run
         assert_ne!(run_key("m1", &small, &cfg), run_key("m1", &big, &cfg));
+    }
+
+    #[test]
+    fn shard_parse_and_ownership_partition() {
+        let s = Shard::parse("1/4").unwrap();
+        assert_eq!((s.index, s.count), (1, 4));
+        assert!(Shard::parse("4/4").is_err());
+        assert!(Shard::parse("0/0").is_err());
+        assert!(Shard::parse("x/4").is_err());
+        assert!(Shard::parse("3").is_err());
+        // every key is owned by exactly one shard, deterministically
+        for key in ["00000000000000ff", "cbf29ce484222325", "not-hex-at-all"] {
+            let owners: Vec<usize> = (0..4)
+                .filter(|&i| Shard { index: i, count: 4 }.owns(key))
+                .collect();
+            assert_eq!(owners.len(), 1, "{key}: {owners:?}");
+            assert_eq!(owners[0], Shard { index: 0, count: 4 }.index_of(key));
+        }
+        // count=1 owns everything
+        assert!(Shard { index: 0, count: 1 }.owns("cbf29ce484222325"));
+    }
+
+    #[test]
+    fn segment_names_are_recognized() {
+        assert!(is_segment_name("runs.jsonl"));
+        assert!(is_segment_name("runs.0.jsonl"));
+        assert!(is_segment_name("runs.12.jsonl"));
+        assert!(!is_segment_name("runs.jsonl.lock"));
+        assert!(!is_segment_name("runs.0.jsonl.lock"));
+        assert!(!is_segment_name("runs.x.jsonl"));
+        assert!(!is_segment_name("runs..jsonl"));
+        assert!(!is_segment_name("other.jsonl"));
+        assert!(!is_segment_name("runs.jsonl.tmp"));
+    }
+
+    #[test]
+    fn sharded_segments_merge_on_resume() {
+        let dir = tmp_dir("merge");
+        {
+            let mut c0 =
+                RunCache::open_sharded(&dir, Some(Shard { index: 0, count: 2 }), true).unwrap();
+            c0.put("aaaa", "m1", &rec("a", 1.0)).unwrap();
+        }
+        {
+            let mut c1 =
+                RunCache::open_sharded(&dir, Some(Shard { index: 1, count: 2 }), true).unwrap();
+            c1.put("bbbb", "m2", &rec("b", 2.0)).unwrap();
+        }
+        let merged = RunCache::open(&dir, true).unwrap();
+        assert_eq!(merged.len(), 2);
+        assert_eq!(merged.get("aaaa").unwrap().final_valid_loss, 1.0);
+        assert_eq!(merged.get("bbbb").unwrap().final_valid_loss, 2.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn live_lock_blocks_second_writer_and_stale_lock_is_reclaimed() {
+        let dir = tmp_dir("lock");
+        let cache = RunCache::open(&dir, true).unwrap();
+        let err = RunCache::open(&dir, true).unwrap_err().to_string();
+        assert!(err.contains("locked by live process"), "{err}");
+        // a different segment is fine while the first is held
+        let other =
+            RunCache::open_sharded(&dir, Some(Shard { index: 0, count: 2 }), true).unwrap();
+        drop(other);
+        drop(cache);
+        // stale lock: dead pid -> reclaimed silently (warning only)
+        std::fs::write(dir.join("runs.jsonl.lock"), "4294967294\n").unwrap();
+        let cache = RunCache::open(&dir, true).unwrap();
+        drop(cache);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_and_non_utf8_tails_are_skipped_on_resume() {
+        let dir = tmp_dir("torn");
+        {
+            let mut c = RunCache::open(&dir, false).unwrap();
+            c.put("aaaa", "m", &rec("a", 1.5)).unwrap();
+        }
+        // simulate a crash mid-append: truncated JSON then raw bytes
+        {
+            let mut f = OpenOptions::new()
+                .append(true)
+                .open(dir.join("runs.jsonl"))
+                .unwrap();
+            f.write_all(b"{\"key\":\"bbbb\",\"manifest\":\"m\",\"rec").unwrap();
+            f.write_all(&[0xff, 0xfe, 0x80]).unwrap();
+        }
+        let mut c = RunCache::open(&dir, true).unwrap();
+        assert_eq!(c.len(), 1, "torn tail must be skipped, not fatal");
+        assert!(c.get("aaaa").is_some());
+        // the torn tail is healed: a post-resume append must not be
+        // concatenated onto (and lost with) the garbage line
+        c.put("cccc", "m", &rec("c", 2.5)).unwrap();
+        drop(c);
+        let c = RunCache::open(&dir, true).unwrap();
+        assert_eq!(c.len(), 2);
+        assert!(c.get("cccc").is_some(), "append after torn tail must survive");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_prunes_by_manifest_and_age_and_compacts() {
+        let dir = tmp_dir("gc");
+        // (timestamps are the real clock here: mutating the process-wide
+        // UMUP_CACHE_TS env would race sibling unit tests' appends.  The
+        // deterministic-ts path is covered per-child-process by
+        // tests/engine_concurrency.rs.)
+        {
+            let mut c0 =
+                RunCache::open_sharded(&dir, Some(Shard { index: 0, count: 2 }), true).unwrap();
+            c0.put("aaaa", "m1", &rec("a", 1.0)).unwrap();
+            let mut c1 =
+                RunCache::open_sharded(&dir, Some(Shard { index: 1, count: 2 }), true).unwrap();
+            c1.put("bbbb", "m2", &rec("b", 2.0)).unwrap();
+            c1.put("cccc", "m2", &rec("c", 3.0)).unwrap();
+        }
+
+        let st = stats(&dir).unwrap();
+        assert_eq!(st.segments.len(), 2);
+        assert_eq!(st.unique_keys, 3);
+        assert_eq!(st.duplicate_keys, 0);
+        assert_eq!(st.per_manifest["m1"], 1);
+        assert_eq!(st.per_manifest["m2"], 2);
+        assert!(st.oldest_ts.is_some() && st.newest_ts >= st.oldest_ts);
+
+        // dry-run changes nothing
+        let dry = gc(
+            &dir,
+            &GcOptions { manifest: Some("m2".into()), dry_run: true, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!((dry.kept, dry.pruned), (1, 2));
+        assert_eq!(stats(&dir).unwrap().unique_keys, 3);
+
+        // prune one manifest; survivors land compacted in runs.jsonl
+        let rep =
+            gc(&dir, &GcOptions { manifest: Some("m2".into()), ..Default::default() }).unwrap();
+        assert_eq!((rep.kept, rep.pruned), (1, 2));
+        let st = stats(&dir).unwrap();
+        assert_eq!(st.unique_keys, 1);
+        assert_eq!(st.segments.len(), 1);
+        assert_eq!(st.segments[0].name, "runs.jsonl");
+        let merged = RunCache::open(&dir, true).unwrap();
+        assert_eq!(merged.len(), 1);
+        assert!(merged.get("aaaa").is_some());
+        drop(merged);
+
+        // age-based: every entry's ts <= now, so --older-than 0s prunes all
+        let rep = gc(
+            &dir,
+            &GcOptions { older_than: Some(Duration::from_secs(0)), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(rep.kept, 0);
+        assert_eq!(rep.pruned, 1);
+        let st = stats(&dir).unwrap();
+        assert_eq!(st.unique_keys, 0);
+        assert!(st.segments.is_empty(), "emptied cache has no segment files");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_refuses_while_a_writer_is_live() {
+        let dir = tmp_dir("gc-live");
+        let mut c = RunCache::open(&dir, true).unwrap();
+        c.put("aaaa", "m", &rec("a", 1.0)).unwrap();
+        let err = gc(&dir, &GcOptions::default()).unwrap_err().to_string();
+        assert!(err.contains("locked by live process"), "{err}");
+        drop(c);
+        assert_eq!(gc(&dir, &GcOptions::default()).unwrap().kept, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn duration_parsing() {
+        assert_eq!(parse_duration("0s").unwrap(), Duration::from_secs(0));
+        assert_eq!(parse_duration("90").unwrap(), Duration::from_secs(90));
+        assert_eq!(parse_duration("5m").unwrap(), Duration::from_secs(300));
+        assert_eq!(parse_duration("2h").unwrap(), Duration::from_secs(7200));
+        assert_eq!(parse_duration("30d").unwrap(), Duration::from_secs(2_592_000));
+        assert_eq!(parse_duration("1w").unwrap(), Duration::from_secs(604_800));
+        assert_eq!(parse_duration("1.5h").unwrap(), Duration::from_secs(5400));
+        assert!(parse_duration("abc").is_err());
+        assert!(parse_duration("5 fortnights").is_err());
+        // u64-overflow seconds must be an error, not a panic
+        assert!(parse_duration("10000000000000000d").is_err());
     }
 }

@@ -48,6 +48,12 @@ pub struct JobOutcome {
     /// True when the record came from the run cache or a deduplicated
     /// sibling job rather than a fresh run.
     pub cached: bool,
+    /// True when a sharded engine declined the job because its content
+    /// address belongs to another shard (the `outcome` is then an `Err`
+    /// naming the owning shard).  Skips are not failures: the owning
+    /// shard process runs the job, and a later `--resume` pass over the
+    /// shared cache dir resolves it as a cache hit.
+    pub skipped: bool,
 }
 
 /// Everything one `Engine::run` produced: per-job outcomes in submission
@@ -56,10 +62,13 @@ pub struct EngineReport {
     pub outcomes: Vec<JobOutcome>,
     /// Jobs that ended with a record (fresh, cached or deduplicated).
     pub completed: usize,
+    /// Jobs that genuinely errored (excludes shard skips).
     pub failed: usize,
     pub cache_hits: usize,
     /// Jobs resolved by an identical job earlier in the same batch.
     pub deduped: usize,
+    /// Jobs declined because their key belongs to another shard.
+    pub skipped: usize,
     /// Jobs that actually ran on a worker.
     pub executed: usize,
 }
@@ -68,11 +77,12 @@ impl EngineReport {
     /// One-line progress summary for CLI output.
     pub fn summary(&self) -> String {
         format!(
-            "{} jobs: {} run, {} cached, {} deduped, {} failed",
+            "{} jobs: {} run, {} cached, {} deduped, {} skipped, {} failed",
             self.outcomes.len(),
             self.executed,
             self.cache_hits,
             self.deduped,
+            self.skipped,
             self.failed
         )
     }

@@ -1,0 +1,180 @@
+//! Least-recently-used pooling for per-worker compiled sessions.
+//!
+//! The engine's workers each keep a `manifest name -> Session` pool so
+//! XLA compiles (seconds per module) amortize across jobs.  The pool
+//! used to be cleared *wholesale* when it hit its cap, which threw away
+//! every warm session the moment a multi-shape sweep touched one shape
+//! too many.  [`LruPool`] replaces that with per-entry LRU eviction:
+//! only the coldest session is dropped, so manifest-affine job streams
+//! (the common case — sweeps batch by shape) keep their hit rate.
+//!
+//! The pool is deliberately generic over the payload: the engine
+//! instantiates it with real `Runner`s, while the tests (which must run
+//! without XLA artifacts) instantiate it with mock values through the
+//! same code path.
+
+use anyhow::Result;
+
+/// A capacity-bounded `name -> V` pool with least-recently-used
+/// eviction and hit/miss/eviction counters.
+///
+/// Backed by a `Vec` ordered cold-to-warm: caps are single digits (a
+/// worker holds a handful of compiled sessions), so linear scans beat
+/// any pointer-chasing structure.
+pub struct LruPool<V> {
+    cap: usize,
+    /// Cold (front) to warm (back); the back entry is the most recent.
+    entries: Vec<(String, V)>,
+    hits: usize,
+    misses: usize,
+    evictions: usize,
+}
+
+impl<V> LruPool<V> {
+    pub fn new(cap: usize) -> LruPool<V> {
+        LruPool { cap: cap.max(1), entries: Vec::new(), hits: 0, misses: 0, evictions: 0 }
+    }
+
+    /// Fetch `name`, building it with `make` on a miss; evicts the
+    /// least-recently-used entry first when the pool is full.  Either
+    /// way the entry becomes the most-recently-used.  A failing `make`
+    /// leaves the pool unchanged (the slot is not reserved).
+    pub fn get_or_create<F>(&mut self, name: &str, make: F) -> Result<&mut V>
+    where
+        F: FnOnce() -> Result<V>,
+    {
+        if let Some(pos) = self.entries.iter().position(|(n, _)| n == name) {
+            self.hits += 1;
+            let entry = self.entries.remove(pos);
+            self.entries.push(entry);
+        } else {
+            let v = make()?;
+            self.misses += 1;
+            if self.entries.len() >= self.cap {
+                self.entries.remove(0);
+                self.evictions += 1;
+            }
+            self.entries.push((name.to_string(), v));
+        }
+        Ok(&mut self.entries.last_mut().expect("just pushed or promoted").1)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.iter().any(|(n, _)| n == name)
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses
+    }
+
+    pub fn evictions(&self) -> usize {
+        self.evictions
+    }
+
+    /// Resident names, most-recently-used first (test observability).
+    pub fn names_mru(&self) -> Vec<&str> {
+        self.entries.iter().rev().map(|(n, _)| n.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::bail;
+
+    /// Mock session factory: counts how many times each "compile" runs.
+    fn counting_make(log: &mut Vec<String>, name: &str) -> Result<String> {
+        log.push(name.to_string());
+        Ok(format!("session:{name}"))
+    }
+
+    #[test]
+    fn capacity_one_thrashes_and_capacity_three_holds() {
+        for cap in 1..=3usize {
+            let mut pool: LruPool<String> = LruPool::new(cap);
+            let mut compiles = Vec::new();
+            // touch three distinct manifests twice, round-robin
+            for _ in 0..2 {
+                for name in ["w32", "w64", "w128"] {
+                    let v = pool.get_or_create(name, || counting_make(&mut compiles, name))
+                        .unwrap();
+                    assert_eq!(v, &format!("session:{name}"));
+                }
+            }
+            assert!(pool.len() <= cap, "cap {cap} violated: {}", pool.len());
+            match cap {
+                // round-robin over 3 names with 1 or 2 slots always
+                // misses (the classic LRU-thrash pattern)
+                1 | 2 => assert_eq!(compiles.len(), 6, "cap {cap}"),
+                // 3 slots hold the whole working set: 3 compiles total
+                _ => assert_eq!(compiles.len(), 3, "cap {cap}"),
+            }
+            assert_eq!(pool.misses(), compiles.len());
+            assert_eq!(pool.hits() + pool.misses(), 6);
+        }
+    }
+
+    #[test]
+    fn reuse_order_evicts_the_coldest_not_the_oldest_inserted() {
+        let mut pool: LruPool<String> = LruPool::new(2);
+        let mut compiles = Vec::new();
+        pool.get_or_create("a", || counting_make(&mut compiles, "a")).unwrap();
+        pool.get_or_create("b", || counting_make(&mut compiles, "b")).unwrap();
+        // touch "a" again: "b" becomes the LRU victim despite being newer
+        pool.get_or_create("a", || counting_make(&mut compiles, "a")).unwrap();
+        assert_eq!(pool.names_mru(), vec!["a", "b"]);
+        pool.get_or_create("c", || counting_make(&mut compiles, "c")).unwrap();
+        assert!(pool.contains("a"), "recently-used entry must survive");
+        assert!(!pool.contains("b"), "coldest entry must be evicted");
+        assert_eq!(pool.names_mru(), vec!["c", "a"]);
+        assert_eq!(pool.evictions(), 1);
+        assert_eq!(compiles, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn manifest_affine_stream_hits_after_warmup() {
+        // a sweep batched by shape: long runs of one manifest with an
+        // occasional baseline shape interleaved — the engine's common
+        // access pattern, which wholesale clearing used to destroy
+        let mut pool: LruPool<String> = LruPool::new(2);
+        let mut compiles = Vec::new();
+        let stream: Vec<&str> =
+            (0..50).map(|i| if i % 10 < 9 { "w256" } else { "w64" }).collect();
+        for name in &stream {
+            pool.get_or_create(name, || counting_make(&mut compiles, name)).unwrap();
+        }
+        // both shapes fit: exactly one compile each, everything else hits
+        assert_eq!(compiles.len(), 2);
+        assert_eq!(pool.hits(), 48);
+        assert_eq!(pool.evictions(), 0);
+        let hit_rate = pool.hits() as f64 / (pool.hits() + pool.misses()) as f64;
+        assert!(hit_rate > 0.9, "affine stream should be >90% hits, got {hit_rate}");
+    }
+
+    #[test]
+    fn failed_make_leaves_pool_unchanged_and_is_retryable() {
+        let mut pool: LruPool<String> = LruPool::new(2);
+        let err = pool
+            .get_or_create("boom", || -> Result<String> { bail!("compile failed") })
+            .unwrap_err();
+        assert!(err.to_string().contains("compile failed"));
+        assert!(pool.is_empty());
+        assert_eq!(pool.misses(), 0, "failed make is not a miss");
+        // the same name can be retried successfully afterwards
+        let mut compiles = Vec::new();
+        pool.get_or_create("boom", || counting_make(&mut compiles, "boom")).unwrap();
+        assert!(pool.contains("boom"));
+    }
+}

@@ -8,16 +8,25 @@
 //! * **A multi-manifest job queue.**  One worker pool drains
 //!   [`EngineJob`]s spanning different artifact shapes, so cross-width
 //!   transfer sweeps (fig1b/fig5) are no longer serialized per shape.
-//! * **Per-worker session pools.**  PJRT sessions are `!Send`, so each
-//!   persistent worker keeps its own `manifest name → Session` map.
-//!   Workers outlive individual [`Engine::run`] calls, which amortizes
-//!   XLA compiles (seconds per module) across experiments.
-//! * **A content-addressed run cache.**  A canonical, label-independent
-//!   hash of (manifest name, corpus config, [`RunConfig`]) maps to
-//!   [`RunRecord`] (see [`run_key`]), deduplicating repeated configs
-//!   within a batch and — with [`EngineConfig::cache_dir`] — persisting
-//!   results as JSONL so interrupted sweeps resume across process
-//!   restarts.
+//! * **Per-worker session pools with LRU eviction.**  PJRT sessions are
+//!   `!Send`, so each persistent worker keeps its own
+//!   `manifest name → Session` pool ([`LruPool`]).  Workers outlive
+//!   individual [`Engine::run`] calls, which amortizes XLA compiles
+//!   (seconds per module) across experiments, and eviction is
+//!   per-entry LRU — a multi-shape sweep drops only its coldest
+//!   session, never the whole pool.
+//! * **A sharded, multi-process-safe run cache.**  A canonical,
+//!   label-independent hash of (manifest name, corpus config,
+//!   [`RunConfig`]) maps to [`RunRecord`] (see [`run_key`]),
+//!   deduplicating repeated configs within a batch and — with
+//!   [`EngineConfig::cache_dir`] — persisting results as lock-safe
+//!   JSONL segments so interrupted sweeps resume across process
+//!   restarts.  With [`EngineConfig::shard`] set to `i/n`, the engine
+//!   executes only the jobs whose content address lands in its slice
+//!   and writes them to its own `runs.<i>.jsonl` segment, so N
+//!   processes drain one sweep into one shared directory with no
+//!   write contention (see [`crate::engine::cache`] module docs for the
+//!   on-disk layout and `repro cache gc`/`stats` for the lifecycle).
 //! * **Per-job outcome reporting.**  [`EngineReport`] carries an
 //!   `Ok`/`Err` per job plus progress counters; a failing job no longer
 //!   kills the batch (the old scheduler's first-error-kills-all
@@ -28,28 +37,47 @@
 //! and [`Engine::session`] / [`Engine::runner`] for caller-thread
 //! stateful work (probe evaluation, init telemetry, `run_full`).
 
-mod cache;
+pub mod cache;
 mod job;
+mod lru;
 mod pool;
 
-pub use cache::{run_key, RunCache};
 pub use crate::util::hash::fnv1a64;
+pub use cache::{
+    gc, list_segments, parse_duration, run_key, stats, CacheStats, GcOptions, GcReport,
+    RunCache, SegmentStats, Shard,
+};
 pub use job::{EngineJob, EngineReport, JobOutcome, SweepJob, SweepResult};
+pub use lru::LruPool;
 pub use pool::JobExec;
 
+#[cfg(feature = "xla")]
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
-use anyhow::{Context, Result};
+#[cfg(feature = "xla")]
+use anyhow::Context;
+use anyhow::Result;
 
 use crate::data::Corpus;
-use crate::runtime::{Manifest, Session};
-use crate::train::{RunConfig, RunRecord, Runner};
+use crate::runtime::Manifest;
+#[cfg(feature = "xla")]
+use crate::runtime::Session;
+use crate::train::RunConfig;
+#[cfg(feature = "xla")]
+use crate::train::{RunRecord, Runner};
 
 use pool::{Task, WorkerPool};
+
+/// Marker embedded in every shard-skip outcome (and therefore in the
+/// strict `run_sweep` error for a skipped job).  Callers running a
+/// sharded drain match on this to distinguish "another shard owns this
+/// run — retry once its result lands" from a real failure; see the
+/// retry loop in `repro exp --shard`.
+pub const SHARD_SKIP_MARKER: &str = "belongs to shard";
 
 /// Engine construction options.
 #[derive(Debug, Clone)]
@@ -58,15 +86,21 @@ pub struct EngineConfig {
     /// multithreads each step, so small counts suffice — more workers
     /// trade batch-level against op-level parallelism.
     pub workers: usize,
-    /// Persist the run cache under this directory (as `runs.jsonl`).
-    /// `None` keeps an in-memory cache (dedup only, no resume).
+    /// Persist the run cache under this directory as lock-safe JSONL
+    /// segments (see [`cache`] for the layout).  `None` keeps an
+    /// in-memory cache (dedup only, no resume).
     pub cache_dir: Option<PathBuf>,
-    /// Load pre-existing cache entries (resume an interrupted sweep).
-    /// Without this an existing cache file is truncated.
+    /// Load pre-existing cache entries from **all** segments in
+    /// `cache_dir` (resume an interrupted or sharded sweep).  Without
+    /// this, this engine's own segment is truncated.
     pub resume: bool,
-    /// Per-worker compiled-session cap; a worker's pool is cleared
-    /// wholesale when exceeded (compiles are seconds, so the crude
-    /// eviction is fine — the cap only bounds memory).
+    /// Execute only jobs whose content address falls in this slice
+    /// (`i/n`), recording them to the `runs.<i>.jsonl` segment;
+    /// everything else is reported as skipped.  `None` owns every job.
+    pub shard: Option<Shard>,
+    /// Per-worker compiled-session cap; the least-recently-used session
+    /// is evicted when a worker's pool exceeds it (compiles are seconds,
+    /// so eviction only bounds memory — see [`LruPool`]).
     pub max_sessions_per_worker: usize,
 }
 
@@ -76,6 +110,7 @@ impl Default for EngineConfig {
             workers: 4,
             cache_dir: None,
             resume: false,
+            shard: None,
             max_sessions_per_worker: 8,
         }
     }
@@ -88,6 +123,7 @@ pub struct EngineStats {
     pub executed: usize,
     pub cache_hits: usize,
     pub deduped: usize,
+    pub skipped: usize,
     pub failed: usize,
 }
 
@@ -96,31 +132,30 @@ pub struct Engine {
     pool: WorkerPool,
     cache: Mutex<RunCache>,
     stats: Mutex<EngineStats>,
+    shard: Option<Shard>,
     /// Caller-thread sessions for the stateful APIs ([`Engine::session`]
     /// / [`Engine::runner`]); separate from the worker pools because
     /// sessions cannot cross threads.
+    #[cfg(feature = "xla")]
     local: RefCell<HashMap<String, Arc<Session>>>,
 }
 
 impl Engine {
     /// An engine whose workers run jobs on real XLA sessions, compiled
-    /// on first use per (worker, manifest) and pooled thereafter.
+    /// on first use per (worker, manifest) and LRU-pooled thereafter.
+    #[cfg(feature = "xla")]
     pub fn new(cfg: EngineConfig) -> Result<Engine> {
         let cap = cfg.max_sessions_per_worker.max(1);
         Self::with_factory(cfg, move |_worker| {
-            let mut sessions: HashMap<String, Runner> = HashMap::new();
+            let mut sessions: LruPool<Runner> = LruPool::new(cap);
             Box::new(move |job: &EngineJob| -> Result<RunRecord> {
-                if !sessions.contains_key(&job.manifest.name) {
-                    if sessions.len() >= cap {
-                        sessions.clear();
-                    }
+                let runner = sessions.get_or_create(&job.manifest.name, || {
                     let session = Session::open(Arc::clone(&job.manifest)).with_context(
                         || format!("opening worker session for {}", job.manifest.name),
                     )?;
-                    sessions
-                        .insert(job.manifest.name.clone(), Runner::new(Arc::new(session)));
-                }
-                sessions[&job.manifest.name].run(&job.config, &job.corpus)
+                    Ok(Runner::new(Arc::new(session)))
+                })?;
+                runner.run(&job.config, &job.corpus)
             })
         })
     }
@@ -128,22 +163,34 @@ impl Engine {
     /// Build an engine with a custom per-worker executor factory.
     ///
     /// This is the seam the engine tests and benches use to exercise
-    /// queueing, deduplication, caching and failure handling without
-    /// XLA artifacts; embedders can use it to plug in remote execution.
+    /// queueing, deduplication, caching, sharding and failure handling
+    /// without XLA artifacts; embedders can use it to plug in remote
+    /// execution.
     pub fn with_factory<F>(cfg: EngineConfig, factory: F) -> Result<Engine>
     where
         F: Fn(usize) -> JobExec + Send + Sync + 'static,
     {
         let cache = match &cfg.cache_dir {
-            Some(dir) => RunCache::open(dir, cfg.resume)?,
+            Some(dir) => RunCache::open_sharded(dir, cfg.shard, cfg.resume)?,
             None => RunCache::in_memory(),
         };
         Ok(Engine {
             pool: WorkerPool::new(cfg.workers, factory),
             cache: Mutex::new(cache),
             stats: Mutex::new(EngineStats::default()),
+            shard: cfg.shard,
+            #[cfg(feature = "xla")]
             local: RefCell::new(HashMap::new()),
         })
+    }
+
+    /// Does this engine's shard own the run with content address `key`?
+    /// (Unsharded engines own everything.)
+    fn owns(&self, key: &str) -> bool {
+        match self.shard {
+            Some(s) => s.owns(key),
+            None => true,
+        }
     }
 
     /// Run a batch of (possibly multi-manifest) jobs.  Never fails
@@ -151,7 +198,9 @@ impl Engine {
     ///
     /// Within the batch, jobs with the same content address are executed
     /// once; cache hits (including those loaded from a `--resume`d
-    /// cache file) skip execution entirely.
+    /// cache file) skip execution entirely.  On a sharded engine, jobs
+    /// owned by other shards are reported as skipped (unless already in
+    /// the cache — a merged cache satisfies any shard).
     pub fn run(&self, jobs: Vec<EngineJob>) -> EngineReport {
         let n = jobs.len();
         let keys: Vec<String> =
@@ -159,11 +208,13 @@ impl Engine {
         let mut outcomes: Vec<Option<JobOutcome>> = Vec::with_capacity(n);
         outcomes.resize_with(n, || None);
 
-        // Partition: cache hit / duplicate-of-earlier / must run.
+        // Partition: cache hit / other shard's / duplicate-of-earlier /
+        // must run.
         let mut primary_of: HashMap<&str, usize> = HashMap::new();
         let mut followers: Vec<(usize, usize)> = Vec::new(); // (dup, primary)
         let mut to_run: Vec<usize> = Vec::new();
         let mut cache_hits = 0usize;
+        let mut skipped = 0usize;
         {
             let cache = self.cache.lock().unwrap();
             for (i, job) in jobs.iter().enumerate() {
@@ -174,8 +225,25 @@ impl Engine {
                         job: job.clone(),
                         outcome: Ok(rec),
                         cached: true,
+                        skipped: false,
                     });
                     cache_hits += 1;
+                } else if !self.owns(&keys[i]) {
+                    let shard = self.shard.expect("owns() is false only when sharded");
+                    outcomes[i] = Some(JobOutcome {
+                        job: job.clone(),
+                        outcome: Err(format!(
+                            "skipped: run {} {SHARD_SKIP_MARKER} {}/{} (this engine is \
+                             shard {shard}; drain that shard into the same cache dir, \
+                             then merge with --resume)",
+                            keys[i],
+                            shard.index_of(&keys[i]),
+                            shard.count,
+                        )),
+                        cached: false,
+                        skipped: true,
+                    });
+                    skipped += 1;
                 } else if let Some(&p) = primary_of.get(keys[i].as_str()) {
                     followers.push((i, p));
                 } else {
@@ -199,6 +267,7 @@ impl Engine {
                     job: jobs[i].clone(),
                     outcome: Err("engine worker pool is gone".to_string()),
                     cached: false,
+                    skipped: false,
                 });
             }
         }
@@ -226,7 +295,8 @@ impl Engine {
                     Err(msg)
                 }
             };
-            outcomes[i] = Some(JobOutcome { job: jobs[i].clone(), outcome, cached: false });
+            outcomes[i] =
+                Some(JobOutcome { job: jobs[i].clone(), outcome, cached: false, skipped: false });
         }
         for &i in &to_run {
             if outcomes[i].is_none() {
@@ -235,6 +305,7 @@ impl Engine {
                     job: jobs[i].clone(),
                     outcome: Err("engine worker died before finishing this job".to_string()),
                     cached: false,
+                    skipped: false,
                 });
             }
         }
@@ -254,7 +325,8 @@ impl Engine {
                     Err(e.clone())
                 }
             };
-            outcomes[d] = Some(JobOutcome { job: jobs[d].clone(), outcome, cached: true });
+            outcomes[d] =
+                Some(JobOutcome { job: jobs[d].clone(), outcome, cached: true, skipped: false });
         }
 
         let outcomes: Vec<JobOutcome> =
@@ -265,9 +337,10 @@ impl Engine {
             s.executed += executed;
             s.cache_hits += cache_hits;
             s.deduped += deduped;
+            s.skipped += skipped;
             s.failed += failed;
         }
-        EngineReport { outcomes, completed, failed, cache_hits, deduped, executed }
+        EngineReport { outcomes, completed, failed, cache_hits, deduped, skipped, executed }
     }
 
     /// Run a single-manifest batch strictly: job-ordered results or the
@@ -304,6 +377,7 @@ impl Engine {
     /// A caller-thread session for `manifest`, compiled once and pooled
     /// for the engine's lifetime (this is where the old
     /// `Registry::session` cache moved).
+    #[cfg(feature = "xla")]
     pub fn session(&self, manifest: &Arc<Manifest>) -> Result<Arc<Session>> {
         if let Some(s) = self.local.borrow().get(&manifest.name) {
             return Ok(Arc::clone(s));
@@ -316,11 +390,13 @@ impl Engine {
     /// A [`Runner`] over the pooled caller-thread session — for stateful
     /// work the job queue cannot express (`run_full`, `eval_at_init`,
     /// probe evaluation).
+    #[cfg(feature = "xla")]
     pub fn runner(&self, manifest: &Arc<Manifest>) -> Result<Runner> {
         Ok(Runner::new(self.session(manifest)?))
     }
 
-    /// Lifetime counters (executed / cache hits / deduped / failed).
+    /// Lifetime counters (executed / cache hits / deduped / skipped /
+    /// failed).
     pub fn stats(&self) -> EngineStats {
         *self.stats.lock().unwrap()
     }
@@ -328,5 +404,13 @@ impl Engine {
     /// Number of records currently addressable in the run cache.
     pub fn cache_len(&self) -> usize {
         self.cache.lock().unwrap().len()
+    }
+
+    /// Merge in records that sibling shard processes have appended to
+    /// the shared cache directory since this engine opened it (no-op
+    /// for in-memory caches).  Returns the number of newly visible
+    /// records — the sharded drain's progress signal.
+    pub fn refresh_cache(&self) -> usize {
+        self.cache.lock().unwrap().refresh_from_disk()
     }
 }

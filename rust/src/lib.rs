@@ -13,7 +13,14 @@
 //!   substrate, the abc-parametrization engine (the paper's contribution),
 //!   the PJRT runtime, training/sweep/experiment coordination. Python is
 //!   never on the training path.
+//!
+//! The PJRT runtime is behind the `xla` cargo feature (on by default).
+//! With `--no-default-features` everything pure still builds — the
+//! parametrization rules, sweep planning, the engine's sharded run
+//! cache and its `repro cache gc`/`stats` lifecycle, and the
+//! mock-executor test suites — which is what the no-XLA CI job checks.
 
+#[cfg(feature = "xla")]
 pub mod coordinator;
 pub mod data;
 pub mod engine;

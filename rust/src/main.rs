@@ -5,23 +5,25 @@
 //!   check                       validate every artifact + manifest
 //!   train [opts]                one training run
 //!   exp <id|all|list> [--quick] reproduce a paper figure/table
+//!   cache <stats|gc> [opts]     run-cache lifecycle (segments, GC)
 //!   report                      collate results/ into EXPERIMENTS-style md
 //!
 //! Dependency-light by design (offline env): argument parsing is the
 //! in-tree `Args` helper below.
+//!
+//! Built with `--no-default-features`, the XLA runtime is absent and the
+//! execution subcommands (`check`/`train`/`exp`) explain that; the pure
+//! subcommands (`rules`, `cache`, `report`, `corpus`) still work.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use umup::coordinator::{list_experiments, run_experiment, ExpContext};
 use umup::data::{Corpus, CorpusConfig};
-use umup::engine::{Engine, EngineConfig};
-use umup::parametrization::{Abc, HpSet, Parametrization, Precision, Scheme};
+use umup::engine::{gc, parse_duration, stats, GcOptions, Shard};
+use umup::parametrization::{Abc, HpSet, Parametrization, Scheme};
 use umup::runtime::Registry;
-use umup::train::{RunConfig, Schedule};
 
 /// Minimal flag parser: positional args + `--key value` + `--flag`.
 struct Args {
@@ -57,8 +59,18 @@ impl Args {
     }
 
     /// The engine's run-cache flags, shared by `train` and `exp`.
+    #[cfg_attr(not(feature = "xla"), allow(dead_code))]
     fn cache_opts(&self) -> (Option<PathBuf>, bool) {
         (self.flags.get("cache-dir").map(PathBuf::from), self.has("resume"))
+    }
+
+    /// The sweep-sharding flag (`--shard i/n`).
+    #[cfg_attr(not(feature = "xla"), allow(dead_code))]
+    fn shard(&self) -> Result<Option<Shard>> {
+        match self.flags.get("shard") {
+            Some(s) => Ok(Some(Shard::parse(s).context("bad --shard")?)),
+            None => Ok(None),
+        }
     }
 }
 
@@ -70,6 +82,7 @@ fn main() -> Result<()> {
         "check" => check(&args),
         "train" => train(&args),
         "exp" => exp(&args),
+        "cache" => cache_cmd(&args),
         "report" => report(&args),
         "corpus" => corpus_info(&args),
         _ => {
@@ -81,14 +94,31 @@ fn main() -> Result<()> {
                  \x20 check   [--artifacts artifacts]                     validate artifacts\n\
                  \x20 train   [--scheme umup] [--width 64] [--depth 4] [--batch 16]\n\
                  \x20         [--lr 0.5] [--steps 256] [--precision fp32|fp8|fp8-paper] [--seed 7]\n\
-                 \x20 exp     <id|all|list> [--quick] [--workers N]       reproduce figures/tables\n\
-                 \x20\n\
-                 \x20 train/exp also take [--cache-dir DIR] [--resume]:  --cache-dir records\n\
-                 \x20 completed runs to DIR/runs.jsonl (content-addressed; identical configs\n\
-                 \x20 dedupe); --resume reloads them so a restarted sweep skips finished jobs\n\
-                 \x20 (without --resume an existing cache file is truncated)\n\
+                 \x20 exp     <id|all|list> [--quick] [--workers N] [--shard i/n]\n\
+                 \x20                                                     reproduce figures/tables\n\
+                 \x20 cache   stats [--cache-dir DIR]                     segment/key statistics\n\
+                 \x20 cache   gc    [--cache-dir DIR] [--older-than 30d] [--manifest NAME]\n\
+                 \x20               [--dry-run]                           prune + compact segments\n\
                  \x20 report  [--out results]                             collate summaries\n\
-                 \x20 corpus  [--vocab 256]                               corpus statistics\n"
+                 \x20 corpus  [--vocab 256]                               corpus statistics\n\n\
+                 cache layout & lifecycle:\n\
+                 \x20 train/exp take [--cache-dir DIR] [--resume].  --cache-dir records each\n\
+                 \x20 completed run as one JSONL line, content-addressed by (manifest, corpus,\n\
+                 \x20 config) — identical configs dedupe; --resume merges every segment already\n\
+                 \x20 in DIR so a restarted sweep skips finished jobs (without --resume this\n\
+                 \x20 process's own segment is truncated).  `repro exp all` defaults to\n\
+                 \x20 --cache-dir <out>/run-cache --resume so figures share baselines.\n\
+                 \x20 Segments: an unsharded run appends to runs.jsonl; `--shard i/n` makes\n\
+                 \x20 this process execute only the runs whose content hash lands in slice i\n\
+                 \x20 of n, appending to its own runs.<i>.jsonl — so n processes given the\n\
+                 \x20 same command drain one sweep into one shared DIR concurrently, then any\n\
+                 \x20 later --resume (or `cache gc`) merges the segments.  Each segment is\n\
+                 \x20 guarded by a <segment>.lock file (holder pid; stale locks from dead\n\
+                 \x20 processes are reclaimed automatically).\n\
+                 \x20 Lifecycle: `cache stats` summarizes segments/keys/manifests;\n\
+                 \x20 `cache gc` prunes by age (--older-than, via each line's ts field) and/or\n\
+                 \x20 --manifest, drops corrupt lines and cross-segment duplicates, and\n\
+                 \x20 compacts everything into a single key-sorted runs.jsonl.\n"
             );
             Ok(())
         }
@@ -124,7 +154,10 @@ fn rules(args: &Args) -> Result<()> {
 }
 
 /// Validate all artifacts: manifests parse, HLO compiles, one step runs.
+#[cfg(feature = "xla")]
 fn check(args: &Args) -> Result<()> {
+    use umup::engine::{Engine, EngineConfig};
+
     let reg = Registry::open(Path::new(&args.get("artifacts", "artifacts")))?;
     let engine = Engine::new(EngineConfig { workers: 1, ..EngineConfig::default() })?;
     for man in reg.manifests() {
@@ -134,7 +167,7 @@ fn check(args: &Args) -> Result<()> {
             man,
             &Parametrization::new(Scheme::Umup),
             &HpSet::with_eta(0.5),
-            Precision::Fp32,
+            umup::parametrization::Precision::Fp32,
         )?;
         let mut ts =
             session.init(0, &vecs.init_std, &vecs.scales, &vecs.lr_scale, &vecs.qmask)?;
@@ -152,7 +185,14 @@ fn check(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn train(args: &Args) -> Result<()> {
+    use std::sync::Arc;
+
+    use umup::engine::{Engine, EngineConfig};
+    use umup::parametrization::Precision;
+    use umup::train::{RunConfig, Schedule};
+
     let scheme = Scheme::parse(&args.get("scheme", "umup")).context("bad --scheme")?;
     let width: usize = args.get("width", "64").parse()?;
     let depth: usize = args.get("depth", "4").parse()?;
@@ -198,34 +238,175 @@ fn train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn exp(args: &Args) -> Result<()> {
+    use umup::coordinator::{list_experiments, run_experiment, ExpContext};
+
     let id = args.positional.get(1).map(String::as_str).unwrap_or("list");
     if id == "list" {
         println!("{}", list_experiments());
         return Ok(());
     }
     let workers: usize = args.get("workers", "4").parse()?;
-    let (cache_dir, resume) = args.cache_opts();
+    let out = args.get("out", "results");
+    let shard = args.shard()?;
+    let (mut cache_dir, mut resume) = args.cache_opts();
+    // figures share baselines (fig1a's u-muP curve is fig5's w=64 point,
+    // ...), so the full reproduction defaults to a persistent cache;
+    // sharded drains need one shared dir + resume to be useful at all
+    if cache_dir.is_none() && (id == "all" || shard.is_some()) {
+        cache_dir = Some(Path::new(&out).join("run-cache"));
+        resume = true;
+        println!(
+            "(defaulting to --cache-dir {} --resume; override with --cache-dir)",
+            Path::new(&out).join("run-cache").display()
+        );
+    }
+    if let Some(s) = shard {
+        println!(
+            "shard {s}: executing only this slice of each sweep; runs owned by other \
+             shards are awaited from the shared cache dir (start the sibling shards \
+             with the same command — progress merges automatically)"
+        );
+    }
     let ctx = ExpContext::with_cache(
         &args.get("artifacts", "artifacts"),
-        &args.get("out", "results"),
+        &out,
         args.has("quick"),
         workers,
         cache_dir,
         resume,
+        shard,
     )?;
-    let md = run_experiment(&ctx, id)?;
+    // A sharded drain executes only this process's slice; when the
+    // experiment next needs a foreign run, retry after merging in what
+    // sibling shards have published.  Every shard follows the same
+    // deterministic plan over the same merged results, so the batch
+    // frontier advances each round and the final retry is a pure
+    // cache-hit replay that yields the full report.
+    let md = if shard.is_some() {
+        let mut idle_rounds = 0usize;
+        loop {
+            match run_experiment(&ctx, id) {
+                Ok(md) => break md,
+                Err(e) if format!("{e:#}").contains(umup::engine::SHARD_SKIP_MARKER) => {
+                    if ctx.engine.refresh_cache() > 0 {
+                        idle_rounds = 0;
+                        continue;
+                    }
+                    idle_rounds += 1;
+                    if idle_rounds >= 60 {
+                        eprintln!(
+                            "shard {}: no sibling progress in ~2 minutes; this slice is \
+                             drained as far as it can go.  Run the remaining shards into \
+                             the same --cache-dir, then finish with an unsharded \
+                             --resume pass.",
+                            shard.expect("sharded branch")
+                        );
+                        return Err(e);
+                    }
+                    std::thread::sleep(std::time::Duration::from_secs(2));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    } else {
+        run_experiment(&ctx, id)?
+    };
     println!("{md}");
     let s = ctx.engine.stats();
     println!(
-        "engine: {} runs executed, {} cache hits, {} deduped, {} failed ({} records cached)",
+        "engine: {} runs executed, {} cache hits, {} deduped, {} skipped, {} failed \
+         ({} records cached)",
         s.executed,
         s.cache_hits,
         s.deduped,
+        s.skipped,
         s.failed,
         ctx.engine.cache_len()
     );
     Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn check(_args: &Args) -> Result<()> {
+    bail!("`repro check` needs the XLA runtime; rebuild without --no-default-features")
+}
+
+#[cfg(not(feature = "xla"))]
+fn train(_args: &Args) -> Result<()> {
+    bail!("`repro train` needs the XLA runtime; rebuild without --no-default-features")
+}
+
+#[cfg(not(feature = "xla"))]
+fn exp(_args: &Args) -> Result<()> {
+    bail!("`repro exp` needs the XLA runtime; rebuild without --no-default-features")
+}
+
+/// Run-cache lifecycle: `repro cache <stats|gc>` (works without XLA —
+/// cache segments are plain JSONL).
+fn cache_cmd(args: &Args) -> Result<()> {
+    let sub = args.positional.get(1).map(String::as_str).unwrap_or("stats");
+    let dir = PathBuf::from(args.get("cache-dir", "results/run-cache"));
+    match sub {
+        "stats" => {
+            let st = stats(&dir)?;
+            println!("run cache at {}:", dir.display());
+            if st.segments.is_empty() {
+                println!("  (no segments)");
+                return Ok(());
+            }
+            for seg in &st.segments {
+                println!(
+                    "  {:24} {:6} entries  {:3} corrupt  {:9} bytes",
+                    seg.name, seg.entries, seg.corrupt, seg.bytes
+                );
+            }
+            println!(
+                "  total: {} entries, {} unique keys, {} cross-segment duplicates, \
+                 {} corrupt lines, {} bytes",
+                st.total_entries,
+                st.unique_keys,
+                st.duplicate_keys,
+                st.corrupt_lines,
+                st.total_bytes
+            );
+            for (manifest, n) in &st.per_manifest {
+                println!("  manifest {manifest:24} {n} runs");
+            }
+            if let (Some(lo), Some(hi)) = (st.oldest_ts, st.newest_ts) {
+                println!("  recorded between unix ts {lo} and {hi}");
+            }
+            Ok(())
+        }
+        "gc" => {
+            let opts = GcOptions {
+                older_than: match args.flags.get("older-than") {
+                    Some(s) => Some(parse_duration(s).context("bad --older-than")?),
+                    None => None,
+                },
+                manifest: args.flags.get("manifest").cloned(),
+                dry_run: args.has("dry-run"),
+            };
+            let rep = gc(&dir, &opts)?;
+            let verb = if opts.dry_run { "would keep" } else { "kept" };
+            println!(
+                "gc {}: scanned {} entries in {} segments; {verb} {}, pruned {}, \
+                 dropped {} duplicates + {} corrupt lines ({} -> {} bytes)",
+                dir.display(),
+                rep.scanned,
+                rep.segments_before,
+                rep.kept,
+                rep.pruned,
+                rep.deduped,
+                rep.corrupt_dropped,
+                rep.bytes_before,
+                rep.bytes_after
+            );
+            Ok(())
+        }
+        other => bail!("unknown cache subcommand {other:?} (expected stats or gc)"),
+    }
 }
 
 fn report(args: &Args) -> Result<()> {

@@ -8,9 +8,11 @@
 //! tail ([loss | rms]) is copied back per step.
 
 mod artifact;
+#[cfg(feature = "xla")]
 mod exec;
 mod registry;
 
 pub use artifact::{Manifest, Spec, TensorMeta, WeightKind};
+#[cfg(feature = "xla")]
 pub use exec::{Executable, Session, TrainState};
 pub use registry::Registry;

@@ -1,0 +1,131 @@
+//! Run configuration: what one training run is, independent of how it
+//! executes.
+//!
+//! Split from the [`super::runner`] module (which drives real XLA
+//! sessions and is gated behind the `xla` feature) so the engine's
+//! content-addressed cache — whose keys hash
+//! [`RunConfig::canonical_json`] — works in no-XLA builds too
+//! (`repro cache gc`/`stats`, CI check builds, the mock-executor test
+//! harness).
+
+use crate::parametrization::{EmbLrRule, HpSet, Parametrization, Precision, HP_NAMES};
+use crate::train::{AdamConfig, Schedule, ScheduleKind};
+use crate::util::Json;
+
+/// Everything one run needs.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub label: String,
+    pub parametrization: Parametrization,
+    pub hp: HpSet,
+    pub precision: Precision,
+    pub schedule: Schedule,
+    pub adam: AdamConfig,
+    pub seed: i32,
+    /// Log train loss / RMS every `log_every` steps (0 = final only).
+    pub log_every: u64,
+    /// Validation batches averaged for the objective.
+    pub valid_batches: usize,
+    /// Track these RMS sites over training (Fig 19/20); empty = none.
+    pub rms_sites: Vec<String>,
+    /// Per-tensor LR multipliers on top of the parametrization rule
+    /// (Fig 13 / A.4): (tensor-name substring, multiplier).
+    pub lr_tweaks: Vec<(String, f64)>,
+}
+
+impl RunConfig {
+    pub fn quick(label: &str, p: Parametrization, hp: HpSet, steps: u64) -> Self {
+        RunConfig {
+            label: label.to_string(),
+            parametrization: p,
+            hp,
+            precision: Precision::Fp32,
+            schedule: Schedule::standard(hp.eta, steps, (steps / 4).max(1)),
+            adam: AdamConfig::default(),
+            seed: 0,
+            log_every: (steps / 16).max(1),
+            valid_batches: 4,
+            rms_sites: Vec::new(),
+            lr_tweaks: Vec::new(),
+        }
+    }
+
+    /// Canonical, content-addressable form of this config — the engine's
+    /// cache-key input (see `crate::engine::run_key`).
+    ///
+    /// Deliberately excludes `label` (presentation only), so the same
+    /// baseline config reached from different figures shares one cache
+    /// entry.  Includes everything that changes what a run computes *or
+    /// records* (`log_every` changes the telemetry cadence captured in
+    /// the [`crate::train::RunRecord`]).  Keys are sorted maps all the
+    /// way down, so the serialized form is independent of construction
+    /// order and stable across processes.
+    pub fn canonical_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let num = Json::Num;
+
+        let mut p = BTreeMap::new();
+        p.insert("scheme".to_string(), Json::Str(self.parametrization.scheme.name().to_string()));
+        p.insert("base_width".to_string(), num(self.parametrization.base_width as f64));
+        p.insert("base_depth".to_string(), num(self.parametrization.base_depth as f64));
+        p.insert(
+            "emb_lr_rule".to_string(),
+            Json::Str(
+                match self.parametrization.emb_lr_rule {
+                    EmbLrRule::Constant => "constant",
+                    EmbLrRule::InvSqrtFanOut => "inv-sqrt-fan-out",
+                }
+                .to_string(),
+            ),
+        );
+        p.insert("depth_mup".to_string(), Json::Bool(self.parametrization.depth_mup));
+
+        let mut hp = BTreeMap::new();
+        for name in HP_NAMES {
+            hp.insert(name.to_string(), num(self.hp.get(name).unwrap_or(f64::NAN)));
+        }
+
+        let (kind, kind_arg) = match self.schedule.kind {
+            ScheduleKind::Constant => ("constant", 0.0),
+            ScheduleKind::CosineTo(f) => ("cosine-to", f),
+            ScheduleKind::LinearToZero => ("linear-to-zero", 0.0),
+        };
+        let mut sch = BTreeMap::new();
+        sch.insert("kind".to_string(), Json::Str(kind.to_string()));
+        sch.insert("kind_arg".to_string(), num(kind_arg));
+        sch.insert("peak_lr".to_string(), num(self.schedule.peak_lr));
+        sch.insert("warmup_steps".to_string(), num(self.schedule.warmup_steps as f64));
+        sch.insert("total_steps".to_string(), num(self.schedule.total_steps as f64));
+
+        let mut adam = BTreeMap::new();
+        adam.insert("beta1".to_string(), num(self.adam.beta1));
+        adam.insert("beta2".to_string(), num(self.adam.beta2));
+        adam.insert("eps".to_string(), num(self.adam.eps));
+        adam.insert("wd_coupled".to_string(), num(self.adam.wd_coupled));
+        adam.insert("wd_indep".to_string(), num(self.adam.wd_indep));
+
+        let mut m = BTreeMap::new();
+        m.insert("parametrization".to_string(), Json::Obj(p));
+        m.insert("hp".to_string(), Json::Obj(hp));
+        m.insert("precision".to_string(), Json::Str(self.precision.name().to_string()));
+        m.insert("schedule".to_string(), Json::Obj(sch));
+        m.insert("adam".to_string(), Json::Obj(adam));
+        m.insert("seed".to_string(), num(self.seed as f64));
+        m.insert("log_every".to_string(), num(self.log_every as f64));
+        m.insert("valid_batches".to_string(), num(self.valid_batches as f64));
+        m.insert(
+            "rms_sites".to_string(),
+            Json::Arr(self.rms_sites.iter().map(|s| Json::Str(s.clone())).collect()),
+        );
+        m.insert(
+            "lr_tweaks".to_string(),
+            Json::Arr(
+                self.lr_tweaks
+                    .iter()
+                    .map(|(pat, mult)| Json::Arr(vec![Json::Str(pat.clone()), num(*mult)]))
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+}

@@ -1,9 +1,13 @@
 //! S9 — training driver: LR schedules, the run loop, run records.
 
+mod config;
 mod record;
+#[cfg(feature = "xla")]
 mod runner;
 mod schedule;
 
+pub use config::RunConfig;
 pub use record::RunRecord;
-pub use runner::{RunConfig, Runner};
+#[cfg(feature = "xla")]
+pub use runner::Runner;
 pub use schedule::{AdamConfig, Schedule, ScheduleKind};

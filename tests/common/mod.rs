@@ -1,0 +1,54 @@
+//! Shared mock fixtures for the engine test suites.
+//!
+//! Everything here runs without XLA artifacts: a manifest is just its
+//! parsed metadata and a corpus is its generator config, which is all
+//! the engine's addressing/queueing layers touch.
+
+#![allow(dead_code)] // each test target uses its own subset
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use umup::data::{Corpus, CorpusConfig};
+use umup::parametrization::{HpSet, Parametrization, Scheme};
+use umup::runtime::{Manifest, Spec};
+use umup::train::RunConfig;
+
+pub fn dummy_manifest(name: &str) -> Arc<Manifest> {
+    Arc::new(Manifest {
+        name: name.to_string(),
+        dir: PathBuf::from("."),
+        spec: Spec {
+            width: 32,
+            depth: 2,
+            batch: 4,
+            seq: 16,
+            vocab: 64,
+            head_dim: 16,
+            trainable_norms: false,
+        },
+        tensors: vec![],
+        n_params: 0,
+        state_ext_len: 1,
+        loss_offset: 0,
+        rms_offset: 1,
+        scale_sites: BTreeMap::new(),
+        n_scale_sites: 0,
+        quant_sites: BTreeMap::new(),
+        n_quant_sites: 0,
+        rms_sites: vec![],
+    })
+}
+
+pub fn dummy_corpus() -> Arc<Corpus> {
+    Arc::new(Corpus {
+        config: CorpusConfig { vocab: 64, n_tokens: 0, ..Default::default() },
+        tokens: vec![],
+        n_train: 0,
+    })
+}
+
+pub fn cfg(label: &str, eta: f64, steps: u64) -> RunConfig {
+    RunConfig::quick(label, Parametrization::new(Scheme::Umup), HpSet::with_eta(eta), steps)
+}

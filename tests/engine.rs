@@ -7,54 +7,16 @@
 //! machinery is exercised on any machine (including CI runners with no
 //! compiled artifact tree).
 
+mod common;
+
 use std::collections::BTreeMap;
-use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
+use common::{cfg, dummy_corpus, dummy_manifest};
 use umup::data::{Corpus, CorpusConfig};
 use umup::engine::{run_key, Engine, EngineConfig, EngineJob, RunCache, SweepJob};
-use umup::parametrization::{HpSet, Parametrization, Scheme};
-use umup::runtime::{Manifest, Spec};
-use umup::train::{RunConfig, RunRecord};
-
-fn dummy_manifest(name: &str) -> Arc<Manifest> {
-    Arc::new(Manifest {
-        name: name.to_string(),
-        dir: PathBuf::from("."),
-        spec: Spec {
-            width: 32,
-            depth: 2,
-            batch: 4,
-            seq: 16,
-            vocab: 64,
-            head_dim: 16,
-            trainable_norms: false,
-        },
-        tensors: vec![],
-        n_params: 0,
-        state_ext_len: 1,
-        loss_offset: 0,
-        rms_offset: 1,
-        scale_sites: BTreeMap::new(),
-        n_scale_sites: 0,
-        quant_sites: BTreeMap::new(),
-        n_quant_sites: 0,
-        rms_sites: vec![],
-    })
-}
-
-fn dummy_corpus() -> Arc<Corpus> {
-    Arc::new(Corpus {
-        config: CorpusConfig { vocab: 64, n_tokens: 0, ..Default::default() },
-        tokens: vec![],
-        n_train: 0,
-    })
-}
-
-fn cfg(label: &str, eta: f64, steps: u64) -> RunConfig {
-    RunConfig::quick(label, Parametrization::new(Scheme::Umup), HpSet::with_eta(eta), steps)
-}
+use umup::train::RunRecord;
 
 fn fake_record(label: &str, loss: f64) -> RunRecord {
     RunRecord {

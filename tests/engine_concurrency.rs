@@ -1,0 +1,526 @@
+//! Deterministic concurrency harness for the sharded run cache.
+//!
+//! The contract under test (ROADMAP "sharded sweeps"): N processes given
+//! the *same* sweep and the same shared `--cache-dir`, each with
+//! `--shard i/N`, drain disjoint deterministic slices into per-shard
+//! segments, and the merged cache is **identical in content** to what a
+//! single unsharded process produces — zero duplicate run keys — after
+//! which `repro cache gc --older-than 0s` empties it.
+//!
+//! Everything runs on the mock executor (`Engine::with_factory`), so no
+//! XLA artifacts are needed; pinning `UMUP_CACHE_TS` makes cache lines
+//! byte-for-byte reproducible, so the multi-process test compares raw
+//! segment bytes (modulo line order — shard segments interleave freely).
+//!
+//! Two concurrency levels are covered:
+//! * threads: four sharded [`Engine`]s in one process against one dir;
+//! * processes: this test binary re-executes itself (the
+//!   [`shard_child_entry`] test is the child main, selected via
+//!   `UMUP_SHARD_ROLE`) four times concurrently, exactly like four
+//!   `repro exp --shard i/4 --cache-dir D` invocations.
+
+mod common;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use common::{cfg, dummy_corpus, dummy_manifest};
+use umup::engine::{
+    gc, run_key, stats, Engine, EngineConfig, EngineJob, GcOptions, RunCache, Shard,
+};
+use umup::train::RunRecord;
+
+// ------------------------------------------------------------ fixtures
+
+/// The shared sweep every writer (thread, child process, reference
+/// process) drains: 24 distinct jobs across 3 manifests.  Purely
+/// deterministic — both the job set and each job's mock record.
+fn job_list() -> Vec<EngineJob> {
+    let corpus = dummy_corpus();
+    ["w32", "w64", "w128"]
+        .iter()
+        .flat_map(|name| {
+            let man = dummy_manifest(name);
+            let corpus = Arc::clone(&corpus);
+            (0..8).map(move |i| EngineJob {
+                manifest: Arc::clone(&man),
+                corpus: Arc::clone(&corpus),
+                config: cfg(&format!("{name}-lr{i}"), 0.125 * (i + 1) as f64, 8),
+                tag: vec![],
+            })
+        })
+        .collect()
+}
+
+fn job_keys(jobs: &[EngineJob]) -> Vec<String> {
+    jobs.iter().map(|j| run_key(&j.manifest.name, &j.corpus, &j.config)).collect()
+}
+
+/// Deterministic mock record: derived only from the job, so every
+/// process that executes a given key writes the identical cache line.
+fn mock_engine(engine_cfg: EngineConfig, counter: Arc<AtomicUsize>) -> Engine {
+    Engine::with_factory(engine_cfg, move |_worker| {
+        let counter = Arc::clone(&counter);
+        Box::new(move |job: &EngineJob| -> anyhow::Result<RunRecord> {
+            std::thread::sleep(Duration::from_millis(2));
+            counter.fetch_add(1, Ordering::SeqCst);
+            Ok(RunRecord {
+                label: job.config.label.clone(),
+                train_curve: vec![(1, 3.0 + job.config.hp.eta), (8, 2.0 + job.config.hp.eta)],
+                valid_curve: vec![(8, 2.0 + job.config.hp.eta)],
+                final_valid_loss: 2.0 + job.config.hp.eta,
+                rms_curves: BTreeMap::new(),
+                final_rms: vec![("w.head".to_string(), 1.0)],
+                diverged: false,
+                wall_seconds: 0.01,
+            })
+        })
+    })
+    .unwrap()
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("umup-conc-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// All non-empty lines of every `runs*.jsonl` segment in `dir`, sorted
+/// (the comparison is byte-exact per line; only ordering is forgiven).
+fn sorted_segment_lines(dir: &Path) -> Vec<String> {
+    let mut lines = Vec::new();
+    for seg in umup::engine::list_segments(dir).unwrap() {
+        let text = std::fs::read_to_string(&seg).unwrap();
+        lines.extend(text.lines().filter(|l| !l.trim().is_empty()).map(str::to_string));
+    }
+    lines.sort();
+    lines
+}
+
+fn key_of_line(line: &str) -> String {
+    umup::util::Json::parse(line).unwrap().get("key").unwrap().as_str().unwrap().to_string()
+}
+
+// --------------------------------------------------- child process main
+
+/// Child-process entrypoint for the multi-process test.  When run as a
+/// normal test (no `UMUP_SHARD_ROLE` in the environment) it does
+/// nothing; when this binary is re-executed by
+/// [`four_shard_processes_equal_one_process_then_gc_empties`] it drains
+/// the shared sweep as one sharded writer and records a marker file the
+/// parent asserts on (so a silently-skipped child can't fake a pass).
+#[test]
+fn shard_child_entry() {
+    if std::env::var("UMUP_SHARD_ROLE").as_deref() != Ok("drain") {
+        return;
+    }
+    let dir = PathBuf::from(std::env::var("UMUP_SHARD_CACHE").expect("child cache dir"));
+    let shard = match std::env::var("UMUP_SHARD_SPEC") {
+        Ok(s) => Some(Shard::parse(&s).expect("child shard spec")),
+        Err(_) => None,
+    };
+    let counter = Arc::new(AtomicUsize::new(0));
+    let engine = mock_engine(
+        EngineConfig {
+            workers: 2,
+            cache_dir: Some(dir.clone()),
+            resume: true,
+            shard,
+            ..EngineConfig::default()
+        },
+        Arc::clone(&counter),
+    );
+    let jobs = job_list();
+    let n_jobs = jobs.len();
+    let report = engine.run(jobs);
+    assert_eq!(report.outcomes.len(), n_jobs);
+    assert_eq!(report.failed, 0, "mock jobs never fail");
+    for o in &report.outcomes {
+        assert!(
+            o.outcome.is_ok() || o.skipped,
+            "child outcome must be ok or an explicit shard skip: {:?}",
+            o.outcome.as_ref().err()
+        );
+    }
+    drop(engine); // release the segment lock before the parent inspects
+    let tag = shard.map_or("single".to_string(), |s| format!("{}-{}", s.index, s.count));
+    std::fs::write(
+        dir.join(format!("child-{tag}.ok")),
+        format!("{} {}\n", report.executed, report.skipped),
+    )
+    .expect("writing child marker");
+}
+
+fn spawn_child(exe: &Path, dir: &Path, shard: Option<&str>) -> std::process::Child {
+    let mut cmd = Command::new(exe);
+    cmd.args(["shard_child_entry", "--exact", "--nocapture", "--test-threads", "1"])
+        .env("UMUP_SHARD_ROLE", "drain")
+        .env("UMUP_SHARD_CACHE", dir)
+        .env("UMUP_CACHE_TS", "1700000000")
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit());
+    if let Some(s) = shard {
+        cmd.env("UMUP_SHARD_SPEC", s);
+    }
+    cmd.spawn().expect("spawning shard child")
+}
+
+// ---------------------------------------------------------------- tests
+
+/// The acceptance test: 4 concurrent shard *processes* over one shared
+/// cache dir produce a merged cache identical in content (byte-for-byte
+/// per line, order-free) to the single-process sweep, with zero
+/// duplicate run keys; `gc --older-than 0s` then empties the dir.
+#[test]
+fn four_shard_processes_equal_one_process_then_gc_empties() {
+    let exe = std::env::current_exe().unwrap();
+    let single = tmp_dir("proc-single");
+    let sharded = tmp_dir("proc-sharded");
+
+    // reference: one unsharded process
+    let status = spawn_child(&exe, &single, None).wait().unwrap();
+    assert!(status.success(), "single-process reference child failed");
+    assert!(single.join("child-single.ok").exists(), "reference child never ran");
+
+    // 4 shard processes, all live at once
+    let children: Vec<_> =
+        (0..4).map(|i| spawn_child(&exe, &sharded, Some(&format!("{i}/4")))).collect();
+    for mut child in children {
+        let status = child.wait().unwrap();
+        assert!(status.success(), "shard child failed");
+    }
+    let mut executed_total = 0usize;
+    for i in 0..4 {
+        let marker = sharded.join(format!("child-{i}-4.ok"));
+        assert!(marker.exists(), "shard {i} child never ran");
+        let body = std::fs::read_to_string(&marker).unwrap();
+        executed_total +=
+            body.split_whitespace().next().unwrap().parse::<usize>().unwrap();
+    }
+    let jobs = job_list();
+    assert_eq!(executed_total, jobs.len(), "shards must execute disjoint slices");
+
+    // merged shard segments == the single-process segment, byte-for-byte
+    // modulo ordering (UMUP_CACHE_TS pins the timestamp field)
+    let single_lines = sorted_segment_lines(&single);
+    let sharded_lines = sorted_segment_lines(&sharded);
+    assert_eq!(single_lines.len(), jobs.len());
+    assert_eq!(sharded_lines, single_lines, "merged cache must equal the unsharded run");
+
+    // zero duplicate keys, and every key in the right segment
+    let keys: BTreeSet<String> = sharded_lines.iter().map(|l| key_of_line(l)).collect();
+    assert_eq!(keys.len(), jobs.len(), "duplicate run keys across segments");
+    for seg in umup::engine::list_segments(&sharded).unwrap() {
+        let name = seg.file_name().unwrap().to_str().unwrap().to_string();
+        let idx: usize = name
+            .strip_prefix("runs.")
+            .and_then(|r| r.strip_suffix(".jsonl"))
+            .expect("sharded dir holds only runs.<k>.jsonl segments")
+            .parse()
+            .unwrap();
+        let shard = Shard { index: idx, count: 4 };
+        for line in std::fs::read_to_string(&seg).unwrap().lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            assert!(shard.owns(&key_of_line(line)), "foreign key in segment {name}");
+        }
+    }
+
+    // a resumed unsharded cache sees the whole merged sweep
+    let merged = RunCache::open(&sharded, true).unwrap();
+    assert_eq!(merged.len(), jobs.len());
+    drop(merged);
+
+    // lifecycle: everything is older than "now - 0s", so gc empties it
+    let report = gc(
+        &sharded,
+        &GcOptions { older_than: Some(Duration::from_secs(0)), ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(report.pruned, jobs.len());
+    assert_eq!(report.kept, 0);
+    let st = stats(&sharded).unwrap();
+    assert_eq!(st.unique_keys, 0);
+    assert!(st.segments.is_empty(), "gc must remove emptied segments");
+    assert!(RunCache::open(&sharded, true).unwrap().is_empty());
+
+    let _ = std::fs::remove_dir_all(&single);
+    let _ = std::fs::remove_dir_all(&sharded);
+}
+
+/// Same contract at thread granularity: four sharded engines in one
+/// process, one shared dir, no duplicated execution, merged cache
+/// content equal to the single-process run.
+#[test]
+fn four_shard_threads_partition_without_duplicate_execution() {
+    let dir = tmp_dir("threads");
+    let jobs = job_list();
+    let n_jobs = jobs.len();
+    let keys = job_keys(&jobs);
+    let counter = Arc::new(AtomicUsize::new(0));
+
+    std::thread::scope(|scope| {
+        for i in 0..4 {
+            let dir = dir.clone();
+            let counter = Arc::clone(&counter);
+            scope.spawn(move || {
+                let engine = mock_engine(
+                    EngineConfig {
+                        workers: 2,
+                        cache_dir: Some(dir),
+                        resume: true,
+                        shard: Some(Shard { index: i, count: 4 }),
+                        ..EngineConfig::default()
+                    },
+                    counter,
+                );
+                let report = engine.run(job_list());
+                assert_eq!(report.failed, 0);
+                // each thread executes exactly its deterministic slice
+                // (nothing was cached when all four start together —
+                // late starters may instead see siblings' results as
+                // cache hits, so only an upper bound holds per thread)
+                assert!(report.executed + report.cache_hits + report.skipped == n_jobs);
+            });
+        }
+    });
+
+    // disjointness: 24 unique jobs -> exactly 24 executions total
+    assert_eq!(counter.load(Ordering::SeqCst), n_jobs, "a job ran in two shards");
+    let merged = RunCache::open(&dir, true).unwrap();
+    assert_eq!(merged.len(), n_jobs);
+    for key in &keys {
+        assert!(merged.get(key).is_some(), "missing run {key}");
+    }
+    drop(merged);
+
+    // a follow-up unsharded engine resolves the whole sweep from cache
+    let c2 = Arc::new(AtomicUsize::new(0));
+    let engine = mock_engine(
+        EngineConfig {
+            workers: 2,
+            cache_dir: Some(dir.clone()),
+            resume: true,
+            ..EngineConfig::default()
+        },
+        Arc::clone(&c2),
+    );
+    let report = engine.run(job_list());
+    assert_eq!(report.cache_hits, n_jobs);
+    assert_eq!(report.skipped, 0);
+    assert_eq!(c2.load(Ordering::SeqCst), 0, "merged cache must satisfy every job");
+    drop(engine);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A sharded engine executes exactly the keys it owns and reports the
+/// rest as explicit skips (not failures), and the strict sweep view
+/// names the owning shard in its error.
+#[test]
+fn sharded_engine_skips_foreign_jobs_with_owning_shard_named() {
+    let jobs = job_list();
+    let keys = job_keys(&jobs);
+    let shard = Shard { index: 1, count: 3 };
+    let owned = keys.iter().filter(|k| shard.owns(k)).count();
+    assert!(owned < jobs.len(), "test needs a proper subset (got {owned})");
+
+    let counter = Arc::new(AtomicUsize::new(0));
+    let engine = mock_engine(
+        EngineConfig { workers: 2, shard: Some(shard), ..EngineConfig::default() },
+        Arc::clone(&counter),
+    );
+    let report = engine.run(jobs);
+    assert_eq!(report.executed, owned);
+    assert_eq!(counter.load(Ordering::SeqCst), owned);
+    assert_eq!(report.skipped, keys.len() - owned);
+    assert_eq!(report.failed, 0, "skips are not failures");
+    assert_eq!(report.completed, owned);
+    for (i, o) in report.outcomes.iter().enumerate() {
+        if shard.owns(&keys[i]) {
+            assert!(o.outcome.is_ok() && !o.skipped, "owned job {i} must run");
+        } else {
+            assert!(o.skipped, "foreign job {i} must be skipped");
+            let err = o.outcome.as_ref().unwrap_err();
+            let owner = Shard { index: 0, count: 3 }.index_of(&keys[i]);
+            assert!(
+                err.contains(&format!("belongs to shard {owner}/3")),
+                "skip must name the owning shard: {err}"
+            );
+        }
+    }
+    let s = engine.stats();
+    assert_eq!(s.skipped, keys.len() - owned);
+    assert_eq!(s.failed, 0);
+
+    // the strict view surfaces the skip as an error naming the owner
+    let man = dummy_manifest("w32");
+    let corpus = dummy_corpus();
+    let foreign = (0..16)
+        .map(|i| cfg(&format!("probe-{i}"), 10.0 + i as f64, 8))
+        .find(|c| !shard.owns(&run_key("w32", &corpus, c)))
+        .expect("some probe config lands outside the shard");
+    let err = engine
+        .run_sweep(&man, &corpus, &[umup::engine::SweepJob { config: foreign, tag: vec![] }])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("belongs to shard"), "{err}");
+}
+
+/// The sharded-drain convergence protocol `repro exp --shard` runs:
+/// strict sweeps fail with [`umup::engine::SHARD_SKIP_MARKER`] while
+/// foreign runs are outstanding, `refresh_cache` merges in what the
+/// sibling published, and the retry completes as a pure cache-hit
+/// replay — the production (`run_sweep`-based) experiment path, not
+/// just the skip-tolerant `Engine::run` report.
+#[test]
+fn strict_sweeps_converge_via_cache_refresh_between_sharded_engines() {
+    use umup::engine::{SweepJob, SHARD_SKIP_MARKER};
+
+    let dir = tmp_dir("converge");
+    let man = dummy_manifest("w32");
+    let corpus = dummy_corpus();
+    let sweep: Vec<SweepJob> = (0..8)
+        .map(|i| SweepJob {
+            config: cfg(&format!("s{i}"), 0.125 * (i + 1) as f64, 8),
+            tag: vec![],
+        })
+        .collect();
+    // precondition for a meaningful test: both shards own part of the
+    // sweep (the mixed partition makes eta-only grids split; see
+    // Shard::index_of)
+    let split = sweep
+        .iter()
+        .filter(|j| {
+            Shard { index: 0, count: 2 }.owns(&run_key("w32", &corpus, &j.config))
+        })
+        .count();
+    assert!(split > 0 && split < sweep.len(), "degenerate partition: {split}/8");
+
+    let counter = Arc::new(AtomicUsize::new(0));
+    let engines: Vec<Engine> = (0..2)
+        .map(|i| {
+            mock_engine(
+                EngineConfig {
+                    workers: 2,
+                    cache_dir: Some(dir.clone()),
+                    resume: true,
+                    shard: Some(Shard { index: i, count: 2 }),
+                    ..EngineConfig::default()
+                },
+                Arc::clone(&counter),
+            )
+        })
+        .collect();
+
+    // round 1: each drains its slice; the strict view names the marker
+    for engine in &engines {
+        let err = engine.run_sweep(&man, &corpus, &sweep).unwrap_err().to_string();
+        assert!(err.contains(SHARD_SKIP_MARKER), "{err}");
+    }
+    assert_eq!(counter.load(Ordering::SeqCst), sweep.len(), "slices must be disjoint");
+
+    // round 2: refresh pulls the sibling's records; retry is pure hits
+    for engine in &engines {
+        assert!(engine.refresh_cache() > 0, "sibling results must become visible");
+        let results = engine.run_sweep(&man, &corpus, &sweep).expect("converged replay");
+        assert_eq!(results.len(), sweep.len());
+        for (r, j) in results.iter().zip(&sweep) {
+            assert_eq!(r.record.label, j.config.label);
+        }
+    }
+    assert_eq!(counter.load(Ordering::SeqCst), sweep.len(), "retry must not re-execute");
+    drop(engines);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Crash-safety at the engine level (satellite): a segment with a torn,
+/// non-UTF-8 trailing line — a simulated mid-write kill — must resume
+/// with a warning, re-running only the lost job, never aborting.
+#[test]
+fn resume_over_torn_segment_reruns_only_the_lost_job() {
+    use std::io::Write as _;
+
+    let dir = tmp_dir("torn-engine");
+    let jobs = job_list();
+    let n_jobs = jobs.len();
+    let c1 = Arc::new(AtomicUsize::new(0));
+    let engine = mock_engine(
+        EngineConfig {
+            workers: 2,
+            cache_dir: Some(dir.clone()),
+            resume: true,
+            ..EngineConfig::default()
+        },
+        Arc::clone(&c1),
+    );
+    engine.run(job_list());
+    assert_eq!(c1.load(Ordering::SeqCst), n_jobs);
+    drop(engine);
+
+    // tear the last line: drop its tail, then append garbage bytes
+    let seg = dir.join("runs.jsonl");
+    let text = std::fs::read_to_string(&seg).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    let torn_key = key_of_line(lines[n_jobs - 1]);
+    let keep = &lines[..n_jobs - 1];
+    let mut f = std::fs::File::create(&seg).unwrap();
+    for l in keep {
+        writeln!(f, "{l}").unwrap();
+    }
+    let torn = &lines[n_jobs - 1][..lines[n_jobs - 1].len() / 2];
+    f.write_all(torn.as_bytes()).unwrap();
+    f.write_all(&[0xff, 0xfe, 0x80]).unwrap();
+    drop(f);
+
+    // resume: must not error, must re-run exactly the torn job
+    let c2 = Arc::new(AtomicUsize::new(0));
+    let engine = mock_engine(
+        EngineConfig {
+            workers: 2,
+            cache_dir: Some(dir.clone()),
+            resume: true,
+            ..EngineConfig::default()
+        },
+        Arc::clone(&c2),
+    );
+    let report = engine.run(job_list());
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.cache_hits, n_jobs - 1);
+    assert_eq!(c2.load(Ordering::SeqCst), 1, "only the torn job re-runs");
+    assert_eq!(engine.cache_len(), n_jobs);
+    drop(engine);
+
+    // and the re-run record landed back in the cache on disk
+    let merged = RunCache::open(&dir, true).unwrap();
+    assert!(merged.get(&torn_key).is_some(), "torn job must be re-recorded");
+    assert_eq!(merged.len(), n_jobs);
+    drop(merged);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Two writers cannot share a segment: the same shard index (or the
+/// unsharded segment) is locked against a live second opener, while
+/// distinct shard indices coexist.
+#[test]
+fn segment_locks_exclude_same_shard_writers_only() {
+    let dir = tmp_dir("locks");
+    let a = RunCache::open_sharded(&dir, Some(Shard { index: 0, count: 2 }), true).unwrap();
+    // same segment -> refused while the first writer is alive
+    let err = RunCache::open_sharded(&dir, Some(Shard { index: 0, count: 2 }), true)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("locked by live process"), "{err}");
+    // different segment -> fine concurrently
+    let b = RunCache::open_sharded(&dir, Some(Shard { index: 1, count: 2 }), true).unwrap();
+    drop(a);
+    drop(b);
+    // both released: reopening either now succeeds
+    RunCache::open_sharded(&dir, Some(Shard { index: 0, count: 2 }), true).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -2,13 +2,15 @@
 //! invariants across codecs, abc rules, residual scheme, schedules, JSON
 //! and the sweep machinery.
 
+use umup::data::{Corpus, CorpusConfig};
+use umup::engine::run_key;
 use umup::formats::{FloatFormat, TensorStats, BF16, E4M3, E5M2, FP16};
 use umup::parametrization::{
     gated_silu_scale, log_interpolate, umup_residual, Abc, EmbLrRule, HpSet, Parametrization,
-    Scheme,
+    Precision, Scheme, HP_NAMES,
 };
 use umup::runtime::{TensorMeta, WeightKind};
-use umup::train::Schedule;
+use umup::train::{RunConfig, Schedule};
 use umup::util::prop::{check, Config};
 use umup::util::Json;
 
@@ -204,4 +206,161 @@ fn tensor_stats_scale_equivariant() {
             assert!((st2.rms / st.rms / k as f64 - 1.0).abs() < 1e-4);
         }
     });
+}
+
+// ----------------------------------------------------------------------
+// run_key properties (engine cache addressing): field-order
+// independence, golden-key stability across default changes, and
+// collision-freedom over a config/manifest/corpus grid.
+
+fn key_corpus(vocab: usize, n_tokens: usize) -> Corpus {
+    Corpus {
+        config: CorpusConfig { vocab, n_tokens, ..Default::default() },
+        tokens: vec![],
+        n_train: 0,
+    }
+}
+
+#[test]
+fn run_key_is_independent_of_hp_set_order_and_label() {
+    check("run_key order independence", Config { cases: 64, ..Default::default() }, |g| {
+        let corpus = key_corpus(64, 1000);
+        // random HP values, assigned in two g-derived orders
+        let values: Vec<(usize, f64)> = (0..HP_NAMES.len())
+            .map(|i| (i, 2f64.powf(g.rng.range(-3.0, 3.0))))
+            .collect();
+        let mut forward = RunConfig::quick(
+            &format!("label-a-{}", g.case),
+            Parametrization::new(Scheme::Umup),
+            HpSet::default(),
+            32,
+        );
+        let mut backward = RunConfig::quick(
+            &format!("label-b-{}", g.case),
+            Parametrization::new(Scheme::Umup),
+            HpSet::default(),
+            32,
+        );
+        for &(i, v) in &values {
+            assert!(forward.hp.set(HP_NAMES[i], v));
+        }
+        for &(i, v) in values.iter().rev() {
+            assert!(backward.hp.set(HP_NAMES[i], v));
+        }
+        // same content, different labels and set order -> same canonical
+        // form, same address
+        assert_eq!(forward.canonical_json().dump(), backward.canonical_json().dump());
+        assert_eq!(
+            run_key("w64", &corpus, &forward),
+            run_key("w64", &corpus, &backward)
+        );
+        // ...and any single HP perturbation moves the address
+        let j = g.rng.below(HP_NAMES.len());
+        let old = backward.hp.get(HP_NAMES[j]).unwrap();
+        backward.hp.set(HP_NAMES[j], old * 2.0);
+        assert_ne!(
+            run_key("w64", &corpus, &forward),
+            run_key("w64", &corpus, &backward),
+            "perturbing {} must change the key",
+            HP_NAMES[j]
+        );
+    });
+}
+
+/// Golden content addresses: these keys are what on-disk caches are
+/// addressed by, so they must be stable across refactors.  A failure
+/// here means persisted caches stop resuming — if the change is
+/// deliberate (cache format break), update tests/data/run_key_golden.json
+/// with the printed key; otherwise fix the regression.
+#[test]
+fn run_key_matches_golden_keys() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/data/run_key_golden.json");
+    let text = std::fs::read_to_string(path).expect("golden key file");
+    let goldens = Json::parse(&text).unwrap();
+    let mut checked = 0;
+    for g in goldens.get("goldens").unwrap().as_arr().unwrap() {
+        let name = g.get("name").unwrap().as_str().unwrap();
+        let manifest = g.get("manifest").unwrap().as_str().unwrap();
+        let vocab = g.get("vocab").unwrap().as_usize().unwrap();
+        let n_tokens = g.get("n_tokens").unwrap().as_usize().unwrap();
+        let expected = g.get("key").unwrap().as_str().unwrap();
+        let cfg = match name {
+            "umup-quick-defaults" => RunConfig::quick(
+                "any-label",
+                Parametrization::new(Scheme::Umup),
+                HpSet::default(),
+                64,
+            ),
+            "mup-fp8-tweaked" => {
+                let mut c = RunConfig::quick(
+                    "x",
+                    Parametrization::new(Scheme::Mup),
+                    HpSet::with_eta(0.25),
+                    32,
+                );
+                c.seed = 7;
+                c.precision = Precision::Fp8Paper;
+                c.rms_sites = vec!["w.head".to_string()];
+                c.lr_tweaks = vec![("emb".to_string(), 4.0)];
+                c
+            }
+            "sp-quick-16" => RunConfig::quick(
+                "y",
+                Parametrization::new(Scheme::Sp),
+                HpSet::default(),
+                16,
+            ),
+            other => panic!("unknown golden case {other:?}"),
+        };
+        let corpus = key_corpus(vocab, n_tokens);
+        let key = run_key(manifest, &corpus, &cfg);
+        assert_eq!(
+            key,
+            expected,
+            "golden key {name:?} drifted — persisted run caches will stop \
+             resuming.  If this is a deliberate cache-format/default change, \
+             update tests/data/run_key_golden.json; canonical json was:\n{}",
+            cfg.canonical_json().dump()
+        );
+        checked += 1;
+    }
+    assert_eq!(checked, 3, "golden file must cover all pinned cases");
+}
+
+#[test]
+fn run_key_collision_free_over_config_grid() {
+    // a deterministic grid across every address dimension: any collision
+    // is a real aliasing bug (two different runs sharing a cache slot)
+    let mut seen = std::collections::BTreeMap::new();
+    let mut n = 0usize;
+    for manifest in ["w32_d2", "w64_d4", "w128_d4", "w256_d8"] {
+        for (vocab, n_tokens) in [(64usize, 1000usize), (256, 200_000)] {
+            let corpus = key_corpus(vocab, n_tokens);
+            for scheme in [Scheme::Sp, Scheme::Mup, Scheme::Umup] {
+                for eta_i in 1..=3u32 {
+                    for steps in [8u64, 16] {
+                        for seed in 0..2i32 {
+                            let mut cfg = RunConfig::quick(
+                                "grid",
+                                Parametrization::new(scheme),
+                                HpSet::with_eta(0.25 * eta_i as f64),
+                                steps,
+                            );
+                            cfg.seed = seed;
+                            let key = run_key(manifest, &corpus, &cfg);
+                            let desc = format!(
+                                "{manifest}/{vocab}/{n_tokens}/{scheme:?}/{eta_i}/{steps}/{seed}"
+                            );
+                            if let Some(prev) = seen.insert(key.clone(), desc.clone()) {
+                                panic!("key {key} collides: {prev} vs {desc}");
+                            }
+                            n += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    assert_eq!(seen.len(), n);
+    assert_eq!(n, 4 * 2 * 3 * 3 * 2 * 2);
 }
