@@ -8,7 +8,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use umup::data::{Corpus, CorpusConfig};
-use umup::engine::{Engine, EngineConfig};
+use umup::engine::{Engine, EngineConfig, EngineJob};
 use umup::parametrization::{HpSet, Parametrization, Scheme};
 use umup::runtime::Manifest;
 use umup::sweep::{transfer_error, PairGrid, SweepJob};
@@ -58,15 +58,35 @@ fn main() -> anyhow::Result<()> {
         .collect();
 
     // engine scaling: real tiny runs, 1 vs 4 workers (fresh engine each,
-    // so every data point pays its own compiles)
+    // so every data point pays its own compiles).  Submission is
+    // non-blocking, so the handle also measures streaming latency: how
+    // long until the *first* outcome lands vs the whole batch.
     for workers in [1usize, 2, 4] {
         let engine = Engine::new(EngineConfig { workers, ..EngineConfig::default() })?;
+        let engine_jobs: Vec<EngineJob> = jobs
+            .iter()
+            .map(|j| EngineJob {
+                manifest: Arc::clone(&man),
+                corpus: Arc::clone(&corpus),
+                config: j.config.clone(),
+                tag: j.tag.clone(),
+            })
+            .collect();
         let t0 = Instant::now();
-        let res = engine.run_sweep(&man, &corpus, &jobs)?;
+        let mut handle = engine.submit(engine_jobs);
+        let mut first = f64::NAN;
+        let mut n = 0usize;
+        while let Some(o) = handle.recv() {
+            assert!(o.outcome.is_ok(), "bench job failed: {:?}", o.outcome.err());
+            if n == 0 {
+                first = t0.elapsed().as_secs_f64();
+            }
+            n += 1;
+        }
         let dt = t0.elapsed().as_secs_f64();
         println!(
-            "engine: 8 runs x 16 steps, workers={workers}: {dt:.2}s ({} results)",
-            res.len()
+            "engine: 8 runs x 16 steps, workers={workers}: {dt:.2}s total, \
+             first outcome after {first:.2}s ({n} results)"
         );
     }
     println!("note: ideal scaling is sub-linear — XLA already multithreads each step");
@@ -78,16 +98,26 @@ fn main() -> anyhow::Result<()> {
     //            process restart): no runs, no compiles
     let cache_dir = std::env::temp_dir().join(format!("umup-sweep-bench-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&cache_dir);
+    let engine_jobs = |man: &Arc<Manifest>, corpus: &Arc<Corpus>| -> Vec<EngineJob> {
+        jobs.iter()
+            .map(|j| EngineJob {
+                manifest: Arc::clone(man),
+                corpus: Arc::clone(corpus),
+                config: j.config.clone(),
+                tag: j.tag.clone(),
+            })
+            .collect()
+    };
     let engine = Engine::new(EngineConfig {
         workers: 2,
         cache_dir: Some(cache_dir.clone()),
         ..EngineConfig::default()
     })?;
     let t0 = Instant::now();
-    engine.run_sweep(&man, &corpus, &jobs)?;
+    engine.submit(engine_jobs(&man, &corpus)).wait().into_sweep_results()?;
     let cold = t0.elapsed().as_secs_f64();
     let t0 = Instant::now();
-    engine.run_sweep(&man, &corpus, &jobs)?;
+    engine.submit(engine_jobs(&man, &corpus)).wait().into_sweep_results()?;
     let warm = t0.elapsed().as_secs_f64();
     let s = engine.stats();
     assert_eq!(s.executed, jobs.len(), "warm pass must not re-run jobs");
@@ -100,7 +130,7 @@ fn main() -> anyhow::Result<()> {
         ..EngineConfig::default()
     })?;
     let t0 = Instant::now();
-    engine.run_sweep(&man, &corpus, &jobs)?;
+    engine.submit(engine_jobs(&man, &corpus)).wait().into_sweep_results()?;
     let resume = t0.elapsed().as_secs_f64();
     assert_eq!(engine.stats().executed, 0, "resume pass must come entirely from disk");
     println!(

@@ -51,24 +51,37 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
 
-    let report = engine.run(jobs);
-    println!("engine: {}", report.summary());
-    let mut results = Vec::new();
-    for ((label, ..), out) in cases.iter().zip(&report.outcomes) {
+    // non-blocking submission: outcomes stream back in *completion*
+    // order, so each run prints the moment it finishes instead of
+    // waiting for the slowest of the five
+    let mut handle = engine.submit(jobs);
+    let mut results: Vec<Option<f64>> = vec![None; cases.len()];
+    while let Some(out) = handle.recv() {
+        let label = cases[out.idx].0;
         match &out.outcome {
             Ok(rec) => {
                 println!(
-                    "{label:24} final valid loss {:.4}  diverged={}  [{:.1}s]",
-                    rec.final_valid_loss, rec.diverged, rec.wall_seconds
+                    "[{}/{}] {label:24} final valid loss {:.4}  diverged={}  [{:.1}s]",
+                    handle.emitted(),
+                    cases.len(),
+                    rec.final_valid_loss,
+                    rec.diverged,
+                    rec.wall_seconds
                 );
-                results.push((*label, rec.final_valid_loss));
+                results[out.idx] = Some(rec.final_valid_loss);
             }
             Err(e) => println!("{label:24} FAILED: {e}"),
         }
     }
+    let s = engine.stats();
+    println!(
+        "engine: {} run, {} cached, {} deduped, {} failed",
+        s.executed, s.cache_hits, s.deduped, s.failed
+    );
+    let results: Vec<f64> = results.into_iter().flatten().collect();
     if results.len() == cases.len() {
-        let umup_degradation = results[1].1 - results[0].1;
-        let sp_degradation = results[4].1 - results[3].1;
+        let umup_degradation = results[1] - results[0];
+        let sp_degradation = results[4] - results[3];
         println!("\nFP8 degradation: u-muP {umup_degradation:+.4} vs SP {sp_degradation:+.4}");
         println!("Paper claim: the u-muP gap is minimal; the SP gap is larger (its tensors");
         println!("sit far from unit RMS, so the naive cast clips/underflows them).");

@@ -7,7 +7,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use umup::data::{Corpus, CorpusConfig};
-use umup::engine::{Engine, EngineConfig};
+use umup::engine::{Engine, EngineConfig, EngineJob};
 use umup::parametrization::{HpSet, Parametrization, Scheme};
 use umup::runtime::Registry;
 use umup::train::{RunConfig, Schedule};
@@ -42,7 +42,15 @@ fn main() -> anyhow::Result<()> {
         steps,
     );
     cfg.schedule = Schedule::standard(0.5, steps, 75);
-    let record = engine.run_single(&manifest, &corpus, cfg)?.record;
+    // submit_one returns a handle immediately; result() blocks for the
+    // strict outcome (a sweep would instead stream per-job outcomes)
+    let handle = engine.submit_one(EngineJob {
+        manifest: Arc::clone(&manifest),
+        corpus: Arc::clone(&corpus),
+        config: cfg,
+        tag: vec![],
+    });
+    let record = handle.result()?.record;
 
     for &(step, loss) in &record.train_curve {
         println!("step {step:5}  train loss {loss:.4}");

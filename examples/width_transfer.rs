@@ -2,9 +2,12 @@
 //! proxy, transfer the optimum to a 4x wider target, and show it lands
 //! near the target's own optimum for u-μP.
 //!
-//! One engine serves all four sweeps: its per-worker session pools keep
-//! the w64 and w256 compiles alive across schemes, and its run cache
-//! deduplicates any repeated (manifest, config) pair.
+//! One engine serves all four sweeps: both the proxy and target sweeps
+//! are *submitted* up front (non-blocking handles) so the affinity
+//! scheduler interleaves them across workers without thrashing session
+//! pools, its per-worker pools keep the w64 and w256 compiles alive
+//! across schemes, and its run cache deduplicates any repeated
+//! (manifest, config) pair.
 //!
 //!     cargo run --release --example width_transfer
 
@@ -12,14 +15,15 @@ use std::path::Path;
 use std::sync::Arc;
 
 use umup::data::{Corpus, CorpusConfig};
-use umup::engine::{Engine, EngineConfig};
+use umup::engine::{Engine, EngineConfig, EngineJob, SweepHandle};
 use umup::parametrization::{HpSet, Parametrization, Scheme};
 use umup::runtime::Registry;
-use umup::sweep::SweepJob;
 use umup::train::{RunConfig, Schedule};
 use umup::util::stats;
 
-fn lr_sweep(
+/// Queue one width's LR sweep without blocking; the returned handle
+/// streams outcomes while the sibling sweeps share the same workers.
+fn submit_lr_sweep(
     engine: &Engine,
     registry: &Registry,
     width: usize,
@@ -27,9 +31,9 @@ fn lr_sweep(
     grid: &[f64],
     steps: u64,
     corpus: &Arc<Corpus>,
-) -> anyhow::Result<Vec<(f64, f64)>> {
+) -> anyhow::Result<SweepHandle> {
     let man = registry.find(width, 4, 16)?;
-    let jobs: Vec<SweepJob> = grid
+    let jobs: Vec<EngineJob> = grid
         .iter()
         .map(|&eta| {
             let mut p = Parametrization::new(scheme);
@@ -41,10 +45,25 @@ fn lr_sweep(
                 steps,
             );
             cfg.schedule = Schedule::standard(eta, steps, (steps / 4).max(1));
-            SweepJob { config: cfg, tag: vec![("eta".into(), eta)] }
+            EngineJob {
+                manifest: Arc::clone(&man),
+                corpus: Arc::clone(corpus),
+                config: cfg,
+                tag: vec![("eta".into(), eta)],
+            }
         })
         .collect();
-    let res = engine.run_sweep(&man, corpus, &jobs)?;
+    Ok(engine.submit(jobs))
+}
+
+/// Drain a sweep handle into an (eta, loss) line, printing fresh runs
+/// as they complete.
+fn drain_line(handle: SweepHandle) -> anyhow::Result<Vec<(f64, f64)>> {
+    let res = handle.drain_strict(|o, done, total| {
+        if let (Ok(rec), false) = (&o.outcome, o.cached) {
+            println!("    [{done}/{total}] {}: loss {:.4}", o.job.config.label, rec.objective());
+        }
+    })?;
     Ok(res.iter().map(|r| (r.job.tag[0].1, r.record.objective())).collect())
 }
 
@@ -59,8 +78,13 @@ fn main() -> anyhow::Result<()> {
             _ => (-11..=-5).map(|e| 2f64.powi(e)).collect(),
         };
         println!("\n=== {} ===", scheme.name());
-        let proxy = lr_sweep(&engine, &registry, 64, scheme, &grid, steps, &corpus)?;
-        let target = lr_sweep(&engine, &registry, 256, scheme, &grid, steps, &corpus)?;
+        // both widths queued before either is drained: one shared pool,
+        // manifest affinity keeps each worker on one shape's sessions
+        let proxy_handle = submit_lr_sweep(&engine, &registry, 64, scheme, &grid, steps, &corpus)?;
+        let target_handle =
+            submit_lr_sweep(&engine, &registry, 256, scheme, &grid, steps, &corpus)?;
+        let proxy = drain_line(proxy_handle)?;
+        let target = drain_line(target_handle)?;
         let p_best = proxy[stats::argmin(&proxy.iter().map(|p| p.1).collect::<Vec<_>>())];
         let t_best = target[stats::argmin(&target.iter().map(|p| p.1).collect::<Vec<_>>())];
         // loss at the *transferred* LR on the target
@@ -80,8 +104,9 @@ fn main() -> anyhow::Result<()> {
     }
     let s = engine.stats();
     println!(
-        "\nengine: {} runs executed, {} cache hits, {} deduped",
-        s.executed, s.cache_hits, s.deduped
+        "\nengine: {} runs executed, {} cache hits, {} deduped \
+         (session affinity: {} hits / {} steals)",
+        s.executed, s.cache_hits, s.deduped, s.pool_hits, s.pool_steals
     );
     println!("Expected shape: u-muP drift ≈ 0 octaves with ~no excess loss; muP drifts.");
     Ok(())

@@ -155,9 +155,8 @@ pub fn fig13(ctx: &ExpContext) -> Result<String> {
             cfg.label = format!("lrmult-{gname}-{m}");
             jobs.push(crate::sweep::SweepJob { config: cfg, tag: vec![((*gname).into(), m)] });
         }
-        let res = ctx.engine.run_sweep(&man, &corpus, &jobs)?;
-        let line: Vec<(f64, f64)> =
-            res.iter().map(|r| (r.job.tag[0].1, r.record.objective())).collect();
+        // stream the multiplier line; outcomes fill in as they finish
+        let line = hp_line(ctx, &man, &corpus, jobs)?;
         let (opt, loss) = best_point(&line);
         rows.push(vec![gname.to_string(), format!("{opt}"), format!("{loss:.4}")]);
         series.push(to_series(gname.to_string(), &line));

@@ -174,9 +174,9 @@ pub fn fig17(ctx: &ExpContext) -> Result<String> {
                         SweepJob { config: cfg, tag: vec![(hp_name.into(), v)] }
                     })
                     .collect();
-                let res = ctx.engine.run_sweep(&man, &corpus, &jobs)?;
-                let line: Vec<(f64, f64)> =
-                    res.iter().map(|r| (r.job.tag[0].1, r.record.objective())).collect();
+                // stream: points land as workers finish, and a diverged
+                // multiplier tail is cancelled instead of trained
+                let line = hp_line(ctx, &man, &corpus, jobs)?;
                 series.push(to_series(format!("w{w}"), &line));
             }
             report.figure(&dir, &format!("{}_{hp_name}", scheme.name()), &series, true)?;

@@ -49,9 +49,15 @@
 //!
 //! *Lifecycle*: [`stats`] summarizes a cache directory (per-segment
 //! entry/corruption/byte counts, duplicate keys across segments,
-//! per-manifest totals); [`gc`] prunes by age (`ts`) and/or manifest and
+//! per-manifest totals); [`gc`] prunes by age (`ts`) and/or manifest,
+//! evicts oldest-first down to a byte budget (`--max-bytes`), and
 //! compacts all segments into a single key-sorted `runs.jsonl`,
 //! taking every segment lock first so it never races a live writer.
+//! An *unsharded* open with `resume` auto-compacts (best-effort) once a
+//! directory accretes more than [`AUTO_COMPACT_SEGMENT_THRESHOLD`]
+//! segments, so long-lived sharded caches don't degrade every open
+//! into an N-file merge (shard children never compact — they open one
+//! directory concurrently and must not steal each other's locks).
 //!
 //! # Crash safety
 //!
@@ -450,13 +456,42 @@ impl RunCache {
     /// lifetime.  With `resume`, pre-existing entries from **all**
     /// segments are merged in (corrupt lines are skipped with a warning
     /// — a truncated tail from a killed process must not poison the
-    /// sweep).  Without `resume`, this opener's own segment is truncated
-    /// (a fresh recording); other shards' segments are left alone, since
-    /// their writers may be live — use `repro cache gc` to clear a
-    /// directory wholesale.
+    /// sweep), and — for *unsharded* openers only, since shard children
+    /// open one directory concurrently — a directory that has accreted
+    /// more than [`AUTO_COMPACT_SEGMENT_THRESHOLD`] segments is first
+    /// compacted into one (best-effort: skipped with a note if any
+    /// segment has a live writer).  Without `resume`, this opener's own
+    /// segment is
+    /// truncated (a fresh recording); other shards' segments are left
+    /// alone, since their writers may be live — use `repro cache gc` to
+    /// clear a directory wholesale.
     pub fn open_sharded(dir: &Path, shard: Option<Shard>, resume: bool) -> Result<RunCache> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating cache dir {}", dir.display()))?;
+        if resume && shard.is_none() {
+            // auto-compaction: a long-lived sharded cache dir otherwise
+            // turns every open into an N-file merge.  Runs before this
+            // opener takes its own segment lock (gc wants them all).
+            // Unsharded opens only: N shard children resume-open one dir
+            // *concurrently*, and a child's gc would grab every sibling's
+            // segment lock and fail their opens mid-drive — the final
+            // unsharded --resume pass (or the next single-process open)
+            // is the natural compaction point instead.
+            let n_segments = list_segments(dir)?.len();
+            if n_segments > AUTO_COMPACT_SEGMENT_THRESHOLD {
+                match gc(dir, &GcOptions::default()) {
+                    Ok(rep) => eprintln!(
+                        "run-cache: auto-compacted {} segments into runs.jsonl \
+                         ({} entries, {} duplicate lines dropped)",
+                        rep.segments_before, rep.kept, rep.deduped
+                    ),
+                    Err(e) => eprintln!(
+                        "run-cache: auto-compaction of {n_segments} segments skipped \
+                         (live writer?): {e:#}"
+                    ),
+                }
+            }
+        }
         let path = dir.join(segment_name(shard));
         let lock = SegmentLock::acquire(&path)?;
         let mut entries = HashMap::new();
@@ -611,6 +646,10 @@ pub fn stats(dir: &Path) -> Result<CacheStats> {
     Ok(st)
 }
 
+/// Opening a cache dir with `resume` auto-compacts it first when it
+/// holds more than this many segments (see [`RunCache::open_sharded`]).
+pub const AUTO_COMPACT_SEGMENT_THRESHOLD: usize = 8;
+
 /// What [`gc`] should prune.  With no filters set, GC is a pure
 /// compaction: segments merge into one key-sorted `runs.jsonl`, dropping
 /// cross-segment duplicates and corrupt lines.
@@ -621,6 +660,10 @@ pub struct GcOptions {
     pub older_than: Option<Duration>,
     /// Prune entries recorded under this manifest name.
     pub manifest: Option<String>,
+    /// Size budget for the compacted cache: after the filters above,
+    /// evict oldest-`ts` entries (ties broken by key, for determinism)
+    /// until the surviving lines fit in this many bytes.
+    pub max_bytes: Option<u64>,
     /// Report what would happen without touching any file.
     pub dry_run: bool,
 }
@@ -633,6 +676,8 @@ pub struct GcReport {
     pub kept: usize,
     /// Entries dropped by the age / manifest filters.
     pub pruned: usize,
+    /// Entries evicted (oldest first) to meet the `max_bytes` budget.
+    pub evicted: usize,
     /// Cross-segment duplicate lines collapsed by compaction.
     pub deduped: usize,
     pub corrupt_dropped: usize,
@@ -694,7 +739,7 @@ pub fn gc(dir: &Path, opts: &GcOptions) -> Result<GcReport> {
 
     // filter
     let cutoff = opts.older_than.map(|d| now_ts().saturating_sub(d.as_secs()));
-    let kept: Vec<&Entry> = merged
+    let mut kept: Vec<&Entry> = merged
         .values()
         .filter(|e| {
             if let Some(m) = &opts.manifest {
@@ -710,11 +755,35 @@ pub fn gc(dir: &Path, opts: &GcOptions) -> Result<GcReport> {
             true
         })
         .collect();
-    report.kept = kept.len();
     report.pruned = merged.len() - kept.len();
 
+    // size budget: evict oldest-ts entries (key tiebreak, so repeated
+    // gc over the same data is deterministic) until the projected
+    // compacted file fits
+    let mut projected: u64 = kept
+        .iter()
+        .map(|e| entry_line(&e.key, &e.manifest, e.ts, &e.record).len() as u64 + 1)
+        .sum();
+    if let Some(budget) = opts.max_bytes {
+        if projected > budget {
+            let mut by_age: Vec<&Entry> = kept.clone();
+            by_age.sort_by(|a, b| a.ts.cmp(&b.ts).then_with(|| a.key.cmp(&b.key)));
+            let mut evict: std::collections::HashSet<&str> = std::collections::HashSet::new();
+            for e in by_age {
+                if projected <= budget {
+                    break;
+                }
+                projected -= entry_line(&e.key, &e.manifest, e.ts, &e.record).len() as u64 + 1;
+                evict.insert(e.key.as_str());
+            }
+            report.evicted = evict.len();
+            kept.retain(|e| !evict.contains(e.key.as_str()));
+        }
+    }
+    report.kept = kept.len();
+
     if opts.dry_run {
-        report.bytes_after = report.bytes_before;
+        report.bytes_after = projected;
         return Ok(report);
     }
 
@@ -770,6 +839,31 @@ pub fn parse_duration(s: &str) -> Result<Duration> {
     // try_from: an absurd `--older-than` must be an error, not a panic
     Duration::try_from_secs_f64(n * mult)
         .map_err(|e| anyhow::anyhow!("duration {s:?} out of range: {e}"))
+}
+
+/// Parse a human byte count: bare bytes or `<number><k|m|g>` (binary
+/// multiples, case-insensitive — e.g. `65536`, `512k`, `10m`, `1g`).
+pub fn parse_bytes(s: &str) -> Result<u64> {
+    let s = s.trim();
+    let split = s
+        .find(|c: char| !c.is_ascii_digit() && c != '.')
+        .unwrap_or(s.len());
+    let (num, unit) = s.split_at(split);
+    let n: f64 = num
+        .parse()
+        .with_context(|| format!("bad byte count {s:?} (expected e.g. 65536, 512k, 10m)"))?;
+    let mult = match unit.trim().to_ascii_lowercase().as_str() {
+        "" | "b" => 1.0,
+        "k" | "kb" | "kib" => 1024.0,
+        "m" | "mb" | "mib" => 1024.0 * 1024.0,
+        "g" | "gb" | "gib" => 1024.0 * 1024.0 * 1024.0,
+        u => bail!("bad byte unit {u:?} in {s:?} (use k/m/g)"),
+    };
+    let v = n * mult;
+    if !v.is_finite() || v < 0.0 || v > u64::MAX as f64 {
+        bail!("byte count {s:?} out of range");
+    }
+    Ok(v as u64)
 }
 
 #[cfg(test)]
@@ -987,6 +1081,90 @@ mod tests {
         drop(c);
         assert_eq!(gc(&dir, &GcOptions::default()).unwrap().kept, 1);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_max_bytes_evicts_oldest_first() {
+        let dir = tmp_dir("gc-bytes");
+        // three entries with strictly increasing ts (distinct keys);
+        // UMUP_CACHE_TS can't be used here (process-wide env races
+        // sibling tests), so write the lines directly
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut lines = String::new();
+        for (i, key) in ["aaaa", "bbbb", "cccc"].iter().enumerate() {
+            lines.push_str(&entry_line(key, "m", 100 + i as u64, &rec(key, i as f64)));
+            lines.push('\n');
+        }
+        std::fs::write(dir.join("runs.jsonl"), &lines).unwrap();
+
+        // budget that fits exactly the two newest lines
+        let line_len = |key: &str, i: u64| {
+            entry_line(key, "m", 100 + i, &rec(key, i as f64)).len() as u64 + 1
+        };
+        let budget = line_len("bbbb", 1) + line_len("cccc", 2);
+        // dry run reports the projection without touching the file
+        let dry = gc(
+            &dir,
+            &GcOptions { max_bytes: Some(budget), dry_run: true, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!((dry.kept, dry.evicted, dry.pruned), (2, 1, 0));
+        assert!(dry.bytes_after <= budget);
+        assert_eq!(stats(&dir).unwrap().unique_keys, 3);
+
+        let rep =
+            gc(&dir, &GcOptions { max_bytes: Some(budget), ..Default::default() }).unwrap();
+        assert_eq!((rep.kept, rep.evicted, rep.pruned), (2, 1, 0));
+        assert!(rep.bytes_after <= budget, "{} > {budget}", rep.bytes_after);
+        let merged = RunCache::open(&dir, true).unwrap();
+        assert!(merged.get("aaaa").is_none(), "oldest entry must be evicted");
+        assert!(merged.get("bbbb").is_some() && merged.get("cccc").is_some());
+        drop(merged);
+
+        // a generous budget evicts nothing
+        let rep = gc(
+            &dir,
+            &GcOptions { max_bytes: Some(u64::MAX), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!((rep.kept, rep.evicted), (2, 0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_open_auto_compacts_past_the_segment_threshold() {
+        let dir = tmp_dir("auto-compact");
+        let n = AUTO_COMPACT_SEGMENT_THRESHOLD + 2;
+        for i in 0..n {
+            // resume: false — auto-compaction is a resume-open behavior,
+            // so seeding the segments here must not trigger it early
+            let mut c =
+                RunCache::open_sharded(&dir, Some(Shard { index: i, count: n }), false).unwrap();
+            c.put(&format!("{i:016x}"), "m", &rec("r", i as f64)).unwrap();
+        }
+        assert_eq!(list_segments(&dir).unwrap().len(), n);
+        // resume-open triggers compaction: all entries survive, but the
+        // shard segments collapse into runs.jsonl (+ the opener's own)
+        let c = RunCache::open(&dir, true).unwrap();
+        assert_eq!(c.len(), n, "auto-compaction must not lose entries");
+        drop(c);
+        let segs = list_segments(&dir).unwrap();
+        assert_eq!(segs.len(), 1, "segments must be compacted: {segs:?}");
+        assert!(segs[0].ends_with("runs.jsonl"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn byte_count_parsing() {
+        assert_eq!(parse_bytes("0").unwrap(), 0);
+        assert_eq!(parse_bytes("65536").unwrap(), 65536);
+        assert_eq!(parse_bytes("512k").unwrap(), 512 * 1024);
+        assert_eq!(parse_bytes("10m").unwrap(), 10 * 1024 * 1024);
+        assert_eq!(parse_bytes("1g").unwrap(), 1024 * 1024 * 1024);
+        assert_eq!(parse_bytes("2KiB").unwrap(), 2048);
+        assert_eq!(parse_bytes("1.5k").unwrap(), 1536);
+        assert!(parse_bytes("abc").is_err());
+        assert!(parse_bytes("5 parsecs").is_err());
     }
 
     #[test]

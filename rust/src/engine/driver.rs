@@ -1,0 +1,244 @@
+//! The shard driver: spawn, monitor, and restart the N shard processes
+//! of a sharded sweep against one shared cache directory.
+//!
+//! PR 2 made N *manually started* processes (`repro exp --shard i/n
+//! --cache-dir D --resume`) drain disjoint slices of one sweep into one
+//! directory.  This module closes the remaining gap from the ROADMAP:
+//! one parent process owns the topology.  [`drive`] launches one child
+//! per shard from a caller-supplied command factory, polls them,
+//! restarts crashed children (bounded per shard — a crashed child's
+//! stale segment lock is reclaimed automatically on restart, and its
+//! already-persisted runs are picked up via `--resume`), and streams
+//! merged progress by watching the shared cache directory's segments
+//! grow.  The CLI front end is `repro drive --shards n`.
+//!
+//! The driver is deliberately execution-agnostic: it never talks to the
+//! engine, only to child processes and the cache dir, so it builds (and
+//! is integration-tested) without the XLA runtime — the test harness
+//! drives mock-executor children through exactly this code path.
+
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::cache::{stats, Shard};
+
+/// Driver options.
+#[derive(Debug, Clone)]
+pub struct DriveConfig {
+    /// Number of shard processes (each runs shard `i/shards`).
+    pub shards: usize,
+    /// The shared cache directory the children drain into; merged
+    /// progress is read from its segments (no locks taken).
+    pub cache_dir: PathBuf,
+    /// Restart budget *per shard*: a child may crash and be relaunched
+    /// this many times before the drive is declared failed.
+    pub max_restarts_per_shard: usize,
+    /// How often to poll children and cache progress.
+    pub poll_interval: Duration,
+    /// Print merged progress lines to stderr as results accumulate.
+    pub progress: bool,
+}
+
+impl Default for DriveConfig {
+    fn default() -> Self {
+        DriveConfig {
+            shards: 2,
+            cache_dir: PathBuf::from("results/run-cache"),
+            max_restarts_per_shard: 2,
+            poll_interval: Duration::from_millis(500),
+            progress: true,
+        }
+    }
+}
+
+/// Terminal state of one shard's slot.
+#[derive(Debug, Clone)]
+pub struct ShardOutcome {
+    pub shard: usize,
+    /// Launches performed (1 = no restarts).
+    pub attempts: usize,
+    pub success: bool,
+}
+
+/// What one [`drive`] call did.
+#[derive(Debug, Clone)]
+pub struct DriveReport {
+    pub shard_outcomes: Vec<ShardOutcome>,
+    /// Total restarts across all shards.
+    pub restarts: usize,
+    /// Unique run keys visible in the cache dir when the drive ended.
+    pub cache_entries: usize,
+    pub elapsed: Duration,
+}
+
+/// One child slot in the drive loop.
+struct Slot {
+    shard: Shard,
+    child: Option<Child>,
+    attempts: usize,
+    done: bool,
+}
+
+/// Spawn `cfg.shards` children via `make_cmd(shard)` and babysit them to
+/// completion.  Children's stdout is silenced (the parent owns the
+/// terminal; progress is merged from the cache dir), stderr is
+/// inherited so failures stay visible.  Returns an error — after
+/// killing the surviving children — if any shard exhausts its restart
+/// budget.
+pub fn drive<F>(cfg: &DriveConfig, mut make_cmd: F) -> Result<DriveReport>
+where
+    F: FnMut(Shard) -> Command,
+{
+    if cfg.shards == 0 {
+        bail!("drive needs at least one shard");
+    }
+    let t0 = Instant::now();
+    let mut slots: Vec<Slot> = (0..cfg.shards)
+        .map(|i| Slot {
+            shard: Shard { index: i, count: cfg.shards },
+            child: None,
+            attempts: 0,
+            done: false,
+        })
+        .collect();
+    // every error path — budget exhaustion, a failed (re)launch, a
+    // poll error — tears the surviving children down before returning,
+    // so a failed drive never leaves orphans holding segment locks
+    match run_to_completion(cfg, &mut slots, &mut make_cmd) {
+        Ok(restarts) => {
+            let cache_entries = stats(&cfg.cache_dir).map(|s| s.unique_keys).unwrap_or(0);
+            Ok(DriveReport {
+                shard_outcomes: slots
+                    .iter()
+                    .map(|s| ShardOutcome {
+                        shard: s.shard.index,
+                        attempts: s.attempts,
+                        success: s.done,
+                    })
+                    .collect(),
+                restarts,
+                cache_entries,
+                elapsed: t0.elapsed(),
+            })
+        }
+        Err(e) => {
+            kill_all(&mut slots);
+            Err(e)
+        }
+    }
+}
+
+/// Launch and babysit every slot; returns the total restart count once
+/// all children have exited successfully.  Errors leave `slots` as-is —
+/// the caller owns teardown.
+fn run_to_completion<F>(cfg: &DriveConfig, slots: &mut [Slot], make_cmd: &mut F) -> Result<usize>
+where
+    F: FnMut(Shard) -> Command,
+{
+    for slot in slots.iter_mut() {
+        launch(slot, make_cmd)?;
+    }
+    if cfg.progress {
+        eprintln!(
+            "drive: launched {} shard processes against {}",
+            cfg.shards,
+            cfg.cache_dir.display()
+        );
+    }
+
+    let mut restarts = 0usize;
+    let mut last_entries = usize::MAX;
+    loop {
+        let mut all_done = true;
+        for slot in slots.iter_mut() {
+            if slot.done {
+                continue;
+            }
+            all_done = false;
+            let Some(child) = slot.child.as_mut() else { continue };
+            let status = child
+                .try_wait()
+                .with_context(|| format!("polling shard {} child", slot.shard))?;
+            match status {
+                None => {} // still running
+                Some(st) if st.success() => {
+                    slot.done = true;
+                    slot.child = None;
+                    if cfg.progress {
+                        eprintln!("drive: shard {} finished", slot.shard);
+                    }
+                }
+                Some(st) => {
+                    slot.child = None;
+                    if slot.attempts > cfg.max_restarts_per_shard {
+                        bail!(
+                            "drive: shard {} failed ({st}) after {} attempts \
+                             (restart budget {}); partial results remain resumable in {}",
+                            slot.shard,
+                            slot.attempts,
+                            cfg.max_restarts_per_shard,
+                            cfg.cache_dir.display()
+                        );
+                    }
+                    restarts += 1;
+                    eprintln!(
+                        "drive: shard {} exited with {st}; restarting \
+                         (attempt {} of {})",
+                        slot.shard,
+                        slot.attempts + 1,
+                        cfg.max_restarts_per_shard + 1
+                    );
+                    launch(slot, make_cmd)?;
+                }
+            }
+        }
+        if all_done {
+            return Ok(restarts);
+        }
+
+        // merged progress: count unique keys across all segments
+        // (read-only, lock-free; concurrent appends at worst show up a
+        // poll late)
+        if cfg.progress {
+            if let Ok(st) = stats(&cfg.cache_dir) {
+                if st.unique_keys != last_entries {
+                    last_entries = st.unique_keys;
+                    let live = slots.iter().filter(|s| !s.done).count();
+                    eprintln!(
+                        "drive: {} runs cached across {} segments ({live} shard{} live)",
+                        st.unique_keys,
+                        st.segments.len(),
+                        if live == 1 { "" } else { "s" }
+                    );
+                }
+            }
+        }
+        std::thread::sleep(cfg.poll_interval);
+    }
+}
+
+fn launch<F>(slot: &mut Slot, make_cmd: &mut F) -> Result<()>
+where
+    F: FnMut(Shard) -> Command,
+{
+    let mut cmd = make_cmd(slot.shard);
+    cmd.stdout(Stdio::null()).stderr(Stdio::inherit());
+    let child = cmd
+        .spawn()
+        .with_context(|| format!("spawning shard {} child", slot.shard))?;
+    slot.attempts += 1;
+    slot.child = Some(child);
+    Ok(())
+}
+
+fn kill_all(slots: &mut [Slot]) {
+    for slot in slots {
+        if let Some(mut child) = slot.child.take() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}

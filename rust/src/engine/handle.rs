@@ -1,0 +1,326 @@
+//! Submission handles: the streaming, non-blocking face of the engine.
+//!
+//! [`crate::engine::Engine::submit`] resolves what it can immediately
+//! (cache hits, foreign-shard skips, in-batch duplicates) and queues the
+//! rest on the shared worker pool, returning a [`SweepHandle`] at once.
+//! The handle is a receiver: outcomes stream through it in *completion*
+//! order as workers finish, so callers can plot, early-stop or schedule
+//! follow-up work while the tail of a sweep is still training.
+//!
+//! Lifecycle notes:
+//!
+//! * Results are persisted to the run cache by the *worker*, before the
+//!   outcome is delivered — dropping a handle abandons the stream, not
+//!   the work, and everything executed is still resumable from disk.
+//! * [`SweepHandle::cancel`] unqueues the submission's pending jobs
+//!   (they come back as cancelled outcomes and never execute); jobs
+//!   already on a worker run to completion and are cached normally.
+//! * Handles are independent: any number may be live at once, feeding
+//!   one engine from multiple threads, each with its own priority.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::job::{EngineReport, JobOutcome, SweepResult};
+use super::sched::{Reply, Scheduler, SubmissionCtl};
+use super::{lock, EngineJob, Shared};
+
+/// Per-submission options for [`crate::engine::Engine::submit_with`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SubmitOptions {
+    /// Dispatch priority relative to other live submissions: all queued
+    /// jobs of a higher-priority submission are dispatched before any
+    /// lower-priority job, regardless of age or affinity.  Default 0;
+    /// negative values yield to everything.
+    pub priority: i32,
+}
+
+/// A live submission: streams [`JobOutcome`]s as workers finish them.
+///
+/// Also an [`Iterator`] over outcomes, so `for outcome in handle { … }`
+/// consumes the stream in completion order.
+pub struct SweepHandle {
+    pub(crate) shared: Arc<Shared>,
+    pub(crate) sched: Arc<Scheduler>,
+    pub(crate) ctl: Arc<SubmissionCtl>,
+    pub(crate) rx: Receiver<Reply>,
+    /// All jobs, in submission order.
+    pub(crate) jobs: Vec<EngineJob>,
+    /// Resolved outcomes by submission index (filled as replies arrive).
+    pub(crate) outcomes: Vec<Option<JobOutcome>>,
+    /// Resolved-but-not-yet-emitted indices, in resolution order.
+    pub(crate) ready: VecDeque<usize>,
+    /// follower indices per primary index (in-batch duplicates).
+    pub(crate) followers_of: Vec<Vec<usize>>,
+    /// Indices dispatched to the worker pool (one reply owed for each).
+    pub(crate) dispatched: Vec<usize>,
+    /// Replies still owed by the pool.
+    pub(crate) outstanding: usize,
+    pub(crate) emitted: usize,
+    // per-submission counters for the final report
+    pub(crate) cache_hits: usize,
+    pub(crate) deduped: usize,
+    pub(crate) skipped: usize,
+    pub(crate) executed: usize,
+    pub(crate) failed: usize,
+    pub(crate) cancelled: usize,
+}
+
+impl SweepHandle {
+    /// Total jobs in this submission.
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Outcomes already handed out by `recv`/`try_recv`.
+    pub fn emitted(&self) -> usize {
+        self.emitted
+    }
+
+    /// Outcomes not yet handed out.
+    pub fn remaining(&self) -> usize {
+        self.jobs.len() - self.emitted
+    }
+
+    /// True once every outcome has been emitted.
+    pub fn is_done(&self) -> bool {
+        self.emitted == self.jobs.len()
+    }
+
+    /// Next outcome in completion order, blocking until one is
+    /// available; `None` once all outcomes have been emitted.
+    pub fn recv(&mut self) -> Option<JobOutcome> {
+        loop {
+            if let Some(i) = self.ready.pop_front() {
+                self.emitted += 1;
+                return self.outcomes[i].clone();
+            }
+            if self.outstanding == 0 {
+                return None;
+            }
+            match self.rx.recv() {
+                Ok(reply) => self.integrate(reply),
+                Err(_) => self.fail_outstanding(),
+            }
+        }
+    }
+
+    /// Non-blocking variant of [`SweepHandle::recv`]: `None` either when
+    /// nothing has completed *yet* or when the stream is exhausted —
+    /// disambiguate with [`SweepHandle::is_done`].
+    pub fn try_recv(&mut self) -> Option<JobOutcome> {
+        loop {
+            if let Some(i) = self.ready.pop_front() {
+                self.emitted += 1;
+                return self.outcomes[i].clone();
+            }
+            if self.outstanding == 0 {
+                return None;
+            }
+            match self.rx.try_recv() {
+                Ok(reply) => self.integrate(reply),
+                Err(TryRecvError::Empty) => return None,
+                Err(TryRecvError::Disconnected) => self.fail_outstanding(),
+            }
+        }
+    }
+
+    /// Cancel this submission's still-queued jobs.  They resolve as
+    /// cancelled outcomes (streamed like any other) and never execute;
+    /// in-flight jobs complete and are cached.  The handle remains
+    /// drainable — `wait()` after `cancel()` yields the full report.
+    pub fn cancel(&self) {
+        self.sched.cancel(&self.ctl);
+    }
+
+    /// Block until every outcome is in and assemble the batch report
+    /// (outcomes in submission order), the moral equivalent of the old
+    /// blocking `Engine::run`.
+    pub fn wait(mut self) -> EngineReport {
+        while self.recv().is_some() {}
+        self.into_report()
+    }
+
+    /// Drain the stream, calling `each(outcome, emitted_so_far, total)`
+    /// per outcome as it completes, then return the strict
+    /// submission-ordered results — or the first per-job error, after
+    /// every job has still been attempted (nothing is silently
+    /// abandoned on failure).
+    pub fn drain_strict<F>(mut self, mut each: F) -> Result<Vec<SweepResult>>
+    where
+        F: FnMut(&JobOutcome, usize, usize),
+    {
+        let total = self.len();
+        while let Some(o) = self.recv() {
+            each(&o, self.emitted, total);
+        }
+        self.into_report().into_sweep_results()
+    }
+
+    fn into_report(self) -> EngineReport {
+        let outcomes: Vec<JobOutcome> =
+            self.outcomes.into_iter().map(|o| o.expect("all jobs resolved")).collect();
+        let completed = outcomes.iter().filter(|o| o.outcome.is_ok()).count();
+        EngineReport {
+            outcomes,
+            completed,
+            failed: self.failed,
+            cache_hits: self.cache_hits,
+            deduped: self.deduped,
+            skipped: self.skipped,
+            executed: self.executed,
+            cancelled: self.cancelled,
+        }
+    }
+
+    /// Fold one worker reply into the outcome table (and resolve any
+    /// in-batch duplicates of that job from the same result).
+    fn integrate(&mut self, reply: Reply) {
+        self.outstanding -= 1;
+        match reply {
+            Reply::Done { idx, result } => {
+                self.executed += 1;
+                let outcome = match result {
+                    Ok(record) => Ok(record),
+                    Err(e) => {
+                        self.failed += 1;
+                        Err(e)
+                    }
+                };
+                self.resolve(idx, outcome, false, false);
+            }
+            Reply::Cancelled { idx } => {
+                self.cancelled += 1;
+                self.resolve(idx, Err("cancelled before execution".to_string()), false, true);
+            }
+        }
+    }
+
+    /// Record `idx`'s outcome, then derive its followers' outcomes.
+    fn resolve(
+        &mut self,
+        idx: usize,
+        outcome: Result<crate::train::RunRecord, String>,
+        cached: bool,
+        cancelled: bool,
+    ) {
+        self.outcomes[idx] = Some(JobOutcome {
+            idx,
+            job: self.jobs[idx].clone(),
+            outcome: outcome.clone(),
+            cached,
+            skipped: false,
+            cancelled,
+        });
+        self.ready.push_back(idx);
+        for f in std::mem::take(&mut self.followers_of[idx]) {
+            let fo = match &outcome {
+                Ok(rec) => {
+                    self.deduped += 1;
+                    lock(&self.shared.stats).deduped += 1;
+                    let mut rec = rec.clone();
+                    rec.label = self.jobs[f].config.label.clone();
+                    Ok(rec)
+                }
+                Err(e) => {
+                    if cancelled {
+                        self.cancelled += 1;
+                        // queued primaries are counted by the scheduler;
+                        // their followers only resolve here
+                        lock(&self.shared.stats).cancelled += 1;
+                    } else {
+                        self.failed += 1;
+                        lock(&self.shared.stats).failed += 1;
+                    }
+                    Err(e.clone())
+                }
+            };
+            self.outcomes[f] = Some(JobOutcome {
+                idx: f,
+                job: self.jobs[f].clone(),
+                outcome: fo,
+                cached: !cancelled,
+                skipped: false,
+                cancelled,
+            });
+            self.ready.push_back(f);
+        }
+    }
+
+    /// The worker pool vanished mid-submission (every worker thread
+    /// gone): resolve whatever is still owed as explicit errors so the
+    /// stream always terminates.
+    fn fail_outstanding(&mut self) {
+        for idx in self.dispatched.clone() {
+            if self.outcomes[idx].is_none() {
+                self.failed += 1;
+                self.resolve(
+                    idx,
+                    Err("engine worker died before finishing this job".to_string()),
+                    false,
+                    false,
+                );
+            }
+        }
+        self.outstanding = 0;
+    }
+}
+
+impl Iterator for SweepHandle {
+    type Item = JobOutcome;
+
+    fn next(&mut self) -> Option<JobOutcome> {
+        self.recv()
+    }
+}
+
+/// Handle for a single submitted job ([`crate::engine::Engine::submit_one`]).
+pub struct JobHandle(pub(crate) SweepHandle);
+
+impl JobHandle {
+    /// Has the job finished (outcome ready to collect)?
+    pub fn is_ready(&mut self) -> bool {
+        // peek by integrating without emitting: try_recv would consume,
+        // so probe the ready queue after a non-blocking pump
+        if !self.0.ready.is_empty() {
+            return true;
+        }
+        if self.0.outstanding == 0 {
+            return true;
+        }
+        while let Ok(reply) = self.0.rx.try_recv() {
+            self.0.integrate(reply);
+        }
+        !self.0.ready.is_empty() || self.0.outstanding == 0
+    }
+
+    /// Cancel the job if it has not started executing yet.
+    pub fn cancel(&self) {
+        self.0.cancel();
+    }
+
+    /// Block until the job concludes and return its outcome.
+    pub fn wait(self) -> JobOutcome {
+        let mut report = self.0.wait();
+        report.outcomes.pop().expect("one job in, one outcome out")
+    }
+
+    /// Strict view: the result record, or the job's error.
+    pub fn result(self) -> Result<SweepResult> {
+        let o = self.wait();
+        match o.outcome {
+            Ok(record) => Ok(SweepResult {
+                job: super::job::SweepJob { config: o.job.config, tag: o.job.tag },
+                record,
+            }),
+            Err(e) => Err(anyhow::anyhow!("job {}: {e}", o.job.config.label)),
+        }
+    }
+}

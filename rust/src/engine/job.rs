@@ -38,9 +38,13 @@ pub struct SweepResult {
     pub record: RunRecord,
 }
 
-/// How one job concluded.
+/// How one job concluded.  Streams out of a
+/// [`crate::engine::SweepHandle`] in completion order.
 #[derive(Clone)]
 pub struct JobOutcome {
+    /// This job's index within its submission (stable addressing for
+    /// streaming consumers; `EngineReport.outcomes[idx]` is this job).
+    pub idx: usize,
     pub job: EngineJob,
     /// Per-job result; errors are stringified so one bad job never
     /// poisons the rest of the batch.
@@ -54,15 +58,21 @@ pub struct JobOutcome {
     /// shard process runs the job, and a later `--resume` pass over the
     /// shared cache dir resolves it as a cache hit.
     pub skipped: bool,
+    /// True when the submission was cancelled while this job was still
+    /// queued: it never executed (the `outcome` is a cancellation
+    /// `Err`).  In-flight jobs are *not* cancelled — they complete and
+    /// report normally.
+    pub cancelled: bool,
 }
 
-/// Everything one `Engine::run` produced: per-job outcomes in submission
-/// order plus progress counters.
+/// Everything one submission produced: per-job outcomes in submission
+/// order plus progress counters ([`crate::engine::SweepHandle::wait`]).
 pub struct EngineReport {
     pub outcomes: Vec<JobOutcome>,
     /// Jobs that ended with a record (fresh, cached or deduplicated).
     pub completed: usize,
-    /// Jobs that genuinely errored (excludes shard skips).
+    /// Jobs that genuinely errored (excludes shard skips and
+    /// cancellations).
     pub failed: usize,
     pub cache_hits: usize,
     /// Jobs resolved by an identical job earlier in the same batch.
@@ -71,18 +81,21 @@ pub struct EngineReport {
     pub skipped: usize,
     /// Jobs that actually ran on a worker.
     pub executed: usize,
+    /// Jobs cancelled while still queued (never executed).
+    pub cancelled: usize,
 }
 
 impl EngineReport {
     /// One-line progress summary for CLI output.
     pub fn summary(&self) -> String {
         format!(
-            "{} jobs: {} run, {} cached, {} deduped, {} skipped, {} failed",
+            "{} jobs: {} run, {} cached, {} deduped, {} skipped, {} cancelled, {} failed",
             self.outcomes.len(),
             self.executed,
             self.cache_hits,
             self.deduped,
             self.skipped,
+            self.cancelled,
             self.failed
         )
     }

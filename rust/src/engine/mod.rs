@@ -1,52 +1,88 @@
 //! S12 — the unified run engine: one subsystem owns run execution end to
-//! end.
+//! end, behind a **handle-based, non-blocking submission API**.
 //!
 //! Everything that trains (experiments, the CLI, examples, benches)
 //! routes through [`Engine`] instead of hand-rolling
-//! `Session::open`/`Runner::new` plumbing.  The engine provides:
+//! `Session::open`/`Runner::new` plumbing.
 //!
-//! * **A multi-manifest job queue.**  One worker pool drains
-//!   [`EngineJob`]s spanning different artifact shapes, so cross-width
-//!   transfer sweeps (fig1b/fig5) are no longer serialized per shape.
-//! * **Per-worker session pools with LRU eviction.**  PJRT sessions are
-//!   `!Send`, so each persistent worker keeps its own
-//!   `manifest name → Session` pool ([`LruPool`]).  Workers outlive
-//!   individual [`Engine::run`] calls, which amortizes XLA compiles
-//!   (seconds per module) across experiments, and eviction is
-//!   per-entry LRU — a multi-shape sweep drops only its coldest
-//!   session, never the whole pool.
-//! * **A sharded, multi-process-safe run cache.**  A canonical,
-//!   label-independent hash of (manifest name, corpus config,
-//!   [`RunConfig`]) maps to [`RunRecord`] (see [`run_key`]),
-//!   deduplicating repeated configs within a batch and — with
-//!   [`EngineConfig::cache_dir`] — persisting results as lock-safe
-//!   JSONL segments so interrupted sweeps resume across process
-//!   restarts.  With [`EngineConfig::shard`] set to `i/n`, the engine
-//!   executes only the jobs whose content address lands in its slice
-//!   and writes them to its own `runs.<i>.jsonl` segment, so N
-//!   processes drain one sweep into one shared directory with no
-//!   write contention (see [`crate::engine::cache`] module docs for the
-//!   on-disk layout and `repro cache gc`/`stats` for the lifecycle).
-//! * **Per-job outcome reporting.**  [`EngineReport`] carries an
-//!   `Ok`/`Err` per job plus progress counters; a failing job no longer
-//!   kills the batch (the old scheduler's first-error-kills-all
-//!   behavior, and its worker-abandons-queue bug, are both gone).
+//! # Submission lifecycle
 //!
-//! The caller-facing surface is [`Engine::run`] (full per-job report),
-//! [`Engine::run_sweep`] / [`Engine::run_single`] (strict, job-ordered)
-//! and [`Engine::session`] / [`Engine::runner`] for caller-thread
-//! stateful work (probe evaluation, init telemetry, `run_full`).
+//! [`Engine::submit`] (and [`Engine::submit_one`]) is the entry point:
+//! it resolves immediately what needs no worker — run-cache hits,
+//! foreign-shard skips, in-batch duplicates — queues the rest on the
+//! shared worker pool, and returns a [`SweepHandle`] without blocking.
+//! The handle streams [`JobOutcome`]s in *completion* order
+//! ([`SweepHandle::recv`] / [`try_recv`](SweepHandle::try_recv) /
+//! iteration), so callers plot, early-stop, or schedule follow-up work
+//! while the tail of a sweep is still training; [`SweepHandle::wait`]
+//! collapses the stream into the classic submission-ordered
+//! [`EngineReport`], and [`SweepHandle::cancel`] unqueues the
+//! submission's pending jobs (in-flight jobs finish and are cached — a
+//! cancelled sweep never leaves the cache inconsistent).  Handles are
+//! independent: many callers may hold live handles against one engine
+//! concurrently, each submission carrying its own
+//! [`SubmitOptions::priority`].  [`Engine::run`] survives only as
+//! `submit(jobs).wait()` for call sites that genuinely want the
+//! blocking batch; [`Engine::run_sweep`] / [`Engine::run_single`] are
+//! strict conveniences over it.
+//!
+//! # Priority / affinity scheduling
+//!
+//! Workers pull from a scheduler rather than a FIFO.  Dispatch order is
+//! priority first (higher [`SubmitOptions::priority`] always wins),
+//! then **manifest affinity**: within a priority level a worker prefers
+//! jobs whose manifest is warm in its session pool ([`LruPool`]), and
+//! crosses manifests — a *steal* — only when its warm shapes have no
+//! pending work.  That keeps each worker's compiled sessions hot across
+//! interleaved multi-shape batches (an XLA compile costs seconds; a
+//! pool hit costs nothing) while still guaranteeing no worker idles
+//! while any job is queued.  [`EngineStats::pool_hits`] /
+//! [`EngineStats::pool_steals`] expose the split; healthy sweeps are
+//! hit-dominated with `steals ≤ workers × distinct manifests`.
+//!
+//! # Sharding and the drive topology
+//!
+//! With [`EngineConfig::shard`] set to `i/n`, an engine executes only
+//! jobs whose content address lands in its slice and records them to
+//! its own `runs.<i>.jsonl` segment, so N *processes* drain one sweep
+//! into one shared [`EngineConfig::cache_dir`] with no write contention
+//! (foreign jobs resolve as explicit [`SHARD_SKIP_MARKER`] skips; a
+//! merged cache satisfies any shard — see [`crate::engine::cache`] for
+//! the on-disk layout).  The [`driver`] module closes the loop:
+//! [`driver::drive`] (CLI: `repro drive --shards n`) spawns the N shard
+//! processes itself, monitors them, restarts crashed ones against the
+//! same cache dir (stale segment locks are reclaimed on restart), and
+//! streams merged progress — one command instead of N terminals.
+//!
+//! # Everything underneath (unchanged contracts)
+//!
+//! * **Per-worker session pools with LRU eviction** ([`LruPool`]):
+//!   PJRT sessions are `!Send`, so each persistent worker owns its
+//!   sessions; workers outlive submissions, amortizing compiles across
+//!   experiments.
+//! * **A sharded, multi-process-safe run cache** keyed by [`run_key`]
+//!   (a canonical, label-independent hash of manifest/corpus/config),
+//!   persisted as lock-safe JSONL segments with GC/compaction
+//!   (`repro cache gc`, now also size-targeted via `--max-bytes`, plus
+//!   automatic compaction when a directory accretes too many segments).
+//! * **Per-job outcome reporting**: a failing job never kills a batch;
+//!   workers persist results before reporting them, so dropping a
+//!   handle abandons notifications, never completed work.
 
 pub mod cache;
+pub mod driver;
+mod handle;
 mod job;
 mod lru;
 mod pool;
+mod sched;
 
 pub use crate::util::hash::fnv1a64;
 pub use cache::{
-    gc, list_segments, parse_duration, run_key, stats, CacheStats, GcOptions, GcReport,
-    RunCache, SegmentStats, Shard,
+    gc, list_segments, parse_bytes, parse_duration, run_key, stats, CacheStats, GcOptions,
+    GcReport, RunCache, SegmentStats, Shard,
 };
+pub use handle::{JobHandle, SubmitOptions, SweepHandle};
 pub use job::{EngineJob, EngineReport, JobOutcome, SweepJob, SweepResult};
 pub use lru::LruPool;
 pub use pool::JobExec;
@@ -54,9 +90,10 @@ pub use pool::JobExec;
 #[cfg(feature = "xla")]
 use std::cell::RefCell;
 use std::collections::HashMap;
+use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 #[cfg(feature = "xla")]
 use anyhow::Context;
@@ -70,7 +107,8 @@ use crate::train::RunConfig;
 #[cfg(feature = "xla")]
 use crate::train::{RunRecord, Runner};
 
-use pool::{Task, WorkerPool};
+use pool::WorkerPool;
+use sched::Scheduler;
 
 /// Marker embedded in every shard-skip outcome (and therefore in the
 /// strict `run_sweep` error for a skipped job).  Callers running a
@@ -78,6 +116,13 @@ use pool::{Task, WorkerPool};
 /// run — retry once its result lands" from a real failure; see the
 /// retry loop in `repro exp --shard`.
 pub const SHARD_SKIP_MARKER: &str = "belongs to shard";
+
+/// Poison-tolerant lock: engine-internal mutexes guard state that stays
+/// consistent between operations (cache map, counters), so a panicking
+/// thread elsewhere must not wedge the rest of the engine.
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
 
 /// Engine construction options.
 #[derive(Debug, Clone)]
@@ -100,7 +145,9 @@ pub struct EngineConfig {
     pub shard: Option<Shard>,
     /// Per-worker compiled-session cap; the least-recently-used session
     /// is evicted when a worker's pool exceeds it (compiles are seconds,
-    /// so eviction only bounds memory — see [`LruPool`]).
+    /// so eviction only bounds memory — see [`LruPool`]).  The affinity
+    /// scheduler mirrors the same capacity when deciding which
+    /// manifests are warm for a worker.
     pub max_sessions_per_worker: usize,
 }
 
@@ -117,22 +164,43 @@ impl Default for EngineConfig {
 }
 
 /// Aggregate counters over an engine's lifetime (see
-/// [`EngineReport`] for the per-batch view).
+/// [`EngineReport`] for the per-submission view).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct EngineStats {
+    /// Jobs that actually ran on a worker (including failures).
     pub executed: usize,
+    /// Jobs satisfied by the run cache at submit time.
     pub cache_hits: usize,
+    /// Jobs resolved from an identical job earlier in their submission.
     pub deduped: usize,
+    /// Jobs declined because their key belongs to another shard.
     pub skipped: usize,
+    /// Jobs that errored on a worker (plus duplicates of those).
     pub failed: usize,
+    /// Jobs cancelled while still queued (never executed).
+    pub cancelled: usize,
+    /// Scheduler dispatches whose manifest was warm for the worker.
+    pub pool_hits: usize,
+    /// Scheduler dispatches that crossed manifests (cold session).
+    pub pool_steals: usize,
+}
+
+/// State shared between the engine facade, its workers, and any live
+/// submission handles (which may outlive a dropped [`Engine`]).
+pub(crate) struct Shared {
+    pub(crate) cache: Mutex<RunCache>,
+    pub(crate) stats: Mutex<EngineStats>,
+    pub(crate) shard: Option<Shard>,
 }
 
 /// The unified run engine.  See the module docs for the architecture.
 pub struct Engine {
-    pool: WorkerPool,
-    cache: Mutex<RunCache>,
-    stats: Mutex<EngineStats>,
-    shard: Option<Shard>,
+    shared: Arc<Shared>,
+    sched: Arc<Scheduler>,
+    /// Held only for its Drop, which shuts the scheduler down and joins
+    /// the workers (they drain the queue first, so every live handle
+    /// still gets its replies).
+    _pool: WorkerPool,
     /// Caller-thread sessions for the stateful APIs ([`Engine::session`]
     /// / [`Engine::runner`]); separate from the worker pools because
     /// sessions cannot cross threads.
@@ -174,11 +242,18 @@ impl Engine {
             Some(dir) => RunCache::open_sharded(dir, cfg.shard, cfg.resume)?,
             None => RunCache::in_memory(),
         };
-        Ok(Engine {
-            pool: WorkerPool::new(cfg.workers, factory),
+        let shared = Arc::new(Shared {
             cache: Mutex::new(cache),
             stats: Mutex::new(EngineStats::default()),
             shard: cfg.shard,
+        });
+        let sched = Arc::new(Scheduler::new(cfg.workers, cfg.max_sessions_per_worker.max(1)));
+        let pool =
+            WorkerPool::new(cfg.workers, factory, Arc::clone(&sched), Arc::clone(&shared));
+        Ok(Engine {
+            shared,
+            sched,
+            _pool: pool,
             #[cfg(feature = "xla")]
             local: RefCell::new(HashMap::new()),
         })
@@ -187,50 +262,67 @@ impl Engine {
     /// Does this engine's shard own the run with content address `key`?
     /// (Unsharded engines own everything.)
     fn owns(&self, key: &str) -> bool {
-        match self.shard {
+        match self.shared.shard {
             Some(s) => s.owns(key),
             None => true,
         }
     }
 
-    /// Run a batch of (possibly multi-manifest) jobs.  Never fails
-    /// wholesale: each job gets its own `Ok`/`Err` in the report.
+    /// Is this engine draining only one shard of its sweeps?
+    pub fn is_sharded(&self) -> bool {
+        self.shared.shard.is_some()
+    }
+
+    /// Submit a batch non-blockingly at default priority; outcomes
+    /// stream through the returned handle as they complete.
+    pub fn submit(&self, jobs: Vec<EngineJob>) -> SweepHandle {
+        self.submit_with(jobs, SubmitOptions::default())
+    }
+
+    /// [`Engine::submit`] with explicit [`SubmitOptions`] (priority).
     ///
-    /// Within the batch, jobs with the same content address are executed
-    /// once; cache hits (including those loaded from a `--resume`d
-    /// cache file) skip execution entirely.  On a sharded engine, jobs
-    /// owned by other shards are reported as skipped (unless already in
-    /// the cache — a merged cache satisfies any shard).
-    pub fn run(&self, jobs: Vec<EngineJob>) -> EngineReport {
+    /// Cache hits, foreign-shard skips and in-batch duplicates are
+    /// resolved immediately (they stream out first); the rest is queued
+    /// on the shared worker pool.  Jobs with identical content
+    /// addresses execute once per submission — concurrent *handles*
+    /// racing the same address may both execute it (the cache `put` is
+    /// idempotent, so correctness is unaffected; only the duplicate
+    /// work is paid).
+    pub fn submit_with(&self, jobs: Vec<EngineJob>, opts: SubmitOptions) -> SweepHandle {
         let n = jobs.len();
         let keys: Vec<String> =
             jobs.iter().map(|j| run_key(&j.manifest.name, &j.corpus, &j.config)).collect();
+        let (tx, rx) = mpsc::channel();
+        let ctl = self.sched.new_submission();
+
         let mut outcomes: Vec<Option<JobOutcome>> = Vec::with_capacity(n);
         outcomes.resize_with(n, || None);
-
-        // Partition: cache hit / other shard's / duplicate-of-earlier /
-        // must run.
-        let mut primary_of: HashMap<&str, usize> = HashMap::new();
-        let mut followers: Vec<(usize, usize)> = Vec::new(); // (dup, primary)
+        let mut followers_of: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut ready = VecDeque::new();
         let mut to_run: Vec<usize> = Vec::new();
         let mut cache_hits = 0usize;
         let mut skipped = 0usize;
         {
-            let cache = self.cache.lock().unwrap();
+            let cache = lock(&self.shared.cache);
+            let mut primary_of: HashMap<&str, usize> = HashMap::new();
             for (i, job) in jobs.iter().enumerate() {
                 if let Some(rec) = cache.get(&keys[i]) {
                     let mut rec = rec.clone();
                     rec.label = job.config.label.clone();
                     outcomes[i] = Some(JobOutcome {
+                        idx: i,
                         job: job.clone(),
                         outcome: Ok(rec),
                         cached: true,
                         skipped: false,
+                        cancelled: false,
                     });
+                    ready.push_back(i);
                     cache_hits += 1;
                 } else if !self.owns(&keys[i]) {
-                    let shard = self.shard.expect("owns() is false only when sharded");
+                    let shard = self.shared.shard.expect("owns() is false only when sharded");
                     outcomes[i] = Some(JobOutcome {
+                        idx: i,
                         job: job.clone(),
                         outcome: Err(format!(
                             "skipped: run {} {SHARD_SKIP_MARKER} {}/{} (this engine is \
@@ -242,105 +334,71 @@ impl Engine {
                         )),
                         cached: false,
                         skipped: true,
+                        cancelled: false,
                     });
+                    ready.push_back(i);
                     skipped += 1;
                 } else if let Some(&p) = primary_of.get(keys[i].as_str()) {
-                    followers.push((i, p));
+                    followers_of[p].push(i);
                 } else {
                     primary_of.insert(keys[i].as_str(), i);
                     to_run.push(i);
                 }
             }
         }
-
-        // Dispatch the misses to the worker pool.
-        let (reply_tx, reply_rx) = mpsc::channel();
-        let mut submitted = 0usize;
-        let mut failed = 0usize;
-        for &i in &to_run {
-            let task = Task { idx: i, job: jobs[i].clone(), reply: reply_tx.clone() };
-            if self.pool.submit(task) {
-                submitted += 1;
-            } else {
-                failed += 1;
-                outcomes[i] = Some(JobOutcome {
-                    job: jobs[i].clone(),
-                    outcome: Err("engine worker pool is gone".to_string()),
-                    cached: false,
-                    skipped: false,
-                });
-            }
-        }
-        drop(reply_tx);
-
-        let mut executed = 0usize;
-        for _ in 0..submitted {
-            let Ok((i, res)) = reply_rx.recv() else {
-                break; // a worker died mid-job; stragglers handled below
-            };
-            executed += 1; // the job ran on a worker, whatever its outcome
-            let outcome = match res {
-                Ok(record) => {
-                    let mut cache = self.cache.lock().unwrap();
-                    if let Err(e) = cache.put(&keys[i], &jobs[i].manifest.name, &record) {
-                        eprintln!(
-                            "run-cache: failed to persist {}: {e:#}",
-                            jobs[i].config.label
-                        );
-                    }
-                    Ok(record)
-                }
-                Err(msg) => {
-                    failed += 1;
-                    Err(msg)
-                }
-            };
-            outcomes[i] =
-                Some(JobOutcome { job: jobs[i].clone(), outcome, cached: false, skipped: false });
-        }
-        for &i in &to_run {
-            if outcomes[i].is_none() {
-                failed += 1;
-                outcomes[i] = Some(JobOutcome {
-                    job: jobs[i].clone(),
-                    outcome: Err("engine worker died before finishing this job".to_string()),
-                    cached: false,
-                    skipped: false,
-                });
-            }
-        }
-
-        // Resolve in-batch duplicates from their primary's outcome.
-        let mut deduped = 0usize;
-        for &(d, p) in &followers {
-            let outcome = match &outcomes[p].as_ref().expect("primary resolved").outcome {
-                Ok(rec) => {
-                    deduped += 1;
-                    let mut rec = rec.clone();
-                    rec.label = jobs[d].config.label.clone();
-                    Ok(rec)
-                }
-                Err(e) => {
-                    failed += 1;
-                    Err(e.clone())
-                }
-            };
-            outcomes[d] =
-                Some(JobOutcome { job: jobs[d].clone(), outcome, cached: true, skipped: false });
-        }
-
-        let outcomes: Vec<JobOutcome> =
-            outcomes.into_iter().map(|o| o.expect("all jobs resolved")).collect();
-        let completed = outcomes.iter().filter(|o| o.outcome.is_ok()).count();
         {
-            let mut s = self.stats.lock().unwrap();
-            s.executed += executed;
+            let mut s = lock(&self.shared.stats);
             s.cache_hits += cache_hits;
-            s.deduped += deduped;
             s.skipped += skipped;
-            s.failed += failed;
         }
-        EngineReport { outcomes, completed, failed, cache_hits, deduped, skipped, executed }
+
+        let tasks: Vec<sched::Task> = to_run
+            .iter()
+            .map(|&i| {
+                sched::Task::new(
+                    opts.priority,
+                    i,
+                    keys[i].clone(),
+                    jobs[i].clone(),
+                    tx.clone(),
+                    Arc::clone(&ctl),
+                )
+            })
+            .collect();
+        let outstanding = tasks.len();
+        self.sched.enqueue(tasks);
+
+        SweepHandle {
+            shared: Arc::clone(&self.shared),
+            sched: Arc::clone(&self.sched),
+            ctl,
+            rx,
+            jobs,
+            outcomes,
+            ready,
+            followers_of,
+            dispatched: to_run,
+            outstanding,
+            emitted: 0,
+            cache_hits,
+            deduped: 0,
+            skipped,
+            executed: 0,
+            failed: 0,
+            cancelled: 0,
+        }
+    }
+
+    /// Submit one job non-blockingly (cache-aware like any other).
+    pub fn submit_one(&self, job: EngineJob) -> JobHandle {
+        JobHandle(self.submit(vec![job]))
+    }
+
+    /// Run a batch of (possibly multi-manifest) jobs and block for the
+    /// full report — a thin `submit(jobs).wait()`.  Never fails
+    /// wholesale: each job gets its own `Ok`/`Err` in the report.
+    pub fn run(&self, jobs: Vec<EngineJob>) -> EngineReport {
+        self.submit(jobs).wait()
     }
 
     /// Run a single-manifest batch strictly: job-ordered results or the
@@ -363,15 +421,20 @@ impl Engine {
         self.run(engine_jobs).into_sweep_results()
     }
 
-    /// Run one config (cache-aware like any other job).
+    /// Run one config (cache-aware like any other job), blocking.
     pub fn run_single(
         &self,
         manifest: &Arc<Manifest>,
         corpus: &Arc<Corpus>,
         config: RunConfig,
     ) -> Result<SweepResult> {
-        let mut v = self.run_sweep(manifest, corpus, &[SweepJob { config, tag: vec![] }])?;
-        Ok(v.pop().expect("one job in, one result out"))
+        self.submit_one(EngineJob {
+            manifest: Arc::clone(manifest),
+            corpus: Arc::clone(corpus),
+            config,
+            tag: vec![],
+        })
+        .result()
     }
 
     /// A caller-thread session for `manifest`, compiled once and pooled
@@ -396,14 +459,26 @@ impl Engine {
     }
 
     /// Lifetime counters (executed / cache hits / deduped / skipped /
-    /// failed).
+    /// failed / cancelled, plus scheduler affinity hits and steals).
+    ///
+    /// Dedup and follower-failure counters are recorded as handles
+    /// *drain*; a handle dropped without draining undercounts them (the
+    /// work itself — execution and caching — is unaffected).
     pub fn stats(&self) -> EngineStats {
-        *self.stats.lock().unwrap()
+        let mut s = *lock(&self.shared.stats);
+        let (hits, steals, cancelled) = self.sched.counters();
+        s.pool_hits = hits as usize;
+        s.pool_steals = steals as usize;
+        // queued-task cancels live in the scheduler; cancelled
+        // *followers* (duplicates of a cancelled primary) are recorded
+        // by their handle into the shared counter — sum both
+        s.cancelled += cancelled as usize;
+        s
     }
 
     /// Number of records currently addressable in the run cache.
     pub fn cache_len(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        lock(&self.shared.cache).len()
     }
 
     /// Merge in records that sibling shard processes have appended to
@@ -411,6 +486,6 @@ impl Engine {
     /// for in-memory caches).  Returns the number of newly visible
     /// records — the sharded drain's progress signal.
     pub fn refresh_cache(&self) -> usize {
-        self.cache.lock().unwrap().refresh_from_disk()
+        lock(&self.shared.cache).refresh_from_disk()
     }
 }

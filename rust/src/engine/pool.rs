@@ -4,13 +4,20 @@
 //! sessions can never migrate between threads.  The pool therefore keeps
 //! N long-lived workers, each of which builds its *own* executor state
 //! (in production: a `manifest name -> Session` map, see
-//! `Engine::new`) via the factory closure and drains a shared task
-//! queue.  Because the workers outlive individual `Engine::run` calls,
-//! XLA compiles are amortized across experiments, not just within one
-//! sweep.
+//! `Engine::new`) via the factory closure and pulls work from the
+//! shared [`Scheduler`] — which hands each worker manifest-affine job
+//! streams (see the scheduler docs), so cross-shape sweeps stop
+//! thrashing the per-worker session pools.  Because the workers outlive
+//! individual submissions, XLA compiles are amortized across
+//! experiments, not just within one sweep.
+//!
+//! Results are persisted to the shared run cache *by the worker*, before
+//! the outcome is reported to the submitting handle: a caller that drops
+//! its [`crate::engine::SweepHandle`] mid-stream abandons only the
+//! notifications, never the completed work.
 //!
 //! Error handling: a failing job is reported back per task (stringified)
-//! and the worker keeps draining the queue — the pre-engine scheduler's
+//! and the worker keeps pulling — the pre-engine scheduler's
 //! `break`-on-error bug (which silently abandoned a worker's remaining
 //! share of the queue) is structurally impossible here.  Executor
 //! *panics* are caught the same way (per job, message preserved), so a
@@ -18,8 +25,7 @@
 //! long sweep.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::Result;
@@ -27,73 +33,75 @@ use anyhow::Result;
 use crate::train::RunRecord;
 
 use super::job::EngineJob;
+use super::sched::{Reply, Scheduler};
+use super::{lock, Shared};
 
 /// A per-worker job executor.  It is created *inside* the worker thread,
 /// so it may own `!Send` state (XLA sessions).
 pub type JobExec = Box<dyn FnMut(&EngineJob) -> Result<RunRecord>>;
 
-/// One dispatched job plus its reply channel.
-pub(crate) struct Task {
-    pub idx: usize,
-    pub job: EngineJob,
-    pub reply: Sender<(usize, Result<RunRecord, String>)>,
-}
-
 pub(crate) struct WorkerPool {
-    tx: Option<Sender<Task>>,
+    sched: Arc<Scheduler>,
     handles: Vec<JoinHandle<()>>,
 }
 
 impl WorkerPool {
-    pub fn new<F>(workers: usize, factory: F) -> WorkerPool
+    pub fn new<F>(
+        workers: usize,
+        factory: F,
+        sched: Arc<Scheduler>,
+        shared: Arc<Shared>,
+    ) -> WorkerPool
     where
         F: Fn(usize) -> JobExec + Send + Sync + 'static,
     {
-        let (tx, rx) = mpsc::channel::<Task>();
-        let rx = Arc::new(Mutex::new(rx));
         let factory = Arc::new(factory);
         let handles = (0..workers.max(1))
             .map(|w| {
-                let rx = Arc::clone(&rx);
+                let sched = Arc::clone(&sched);
+                let shared = Arc::clone(&shared);
                 let factory = Arc::clone(&factory);
-                std::thread::spawn(move || worker_loop(w, &rx, &*factory))
+                std::thread::spawn(move || worker_loop(w, &sched, &shared, &*factory))
             })
             .collect();
-        WorkerPool { tx: Some(tx), handles }
-    }
-
-    /// Queue a task; returns false if every worker is gone.
-    pub fn submit(&self, task: Task) -> bool {
-        match &self.tx {
-            Some(tx) => tx.send(task).is_ok(),
-            None => false,
-        }
+        WorkerPool { sched, handles }
     }
 }
 
-fn worker_loop<F>(w: usize, rx: &Mutex<Receiver<Task>>, factory: &F)
+fn worker_loop<F>(w: usize, sched: &Scheduler, shared: &Shared, factory: &F)
 where
     F: Fn(usize) -> JobExec,
 {
     let mut exec = factory(w);
-    loop {
-        // The lock is held only around `recv` (tasks are handed out one
-        // at a time); execution happens with the queue unlocked.
-        let task = match rx.lock() {
-            Ok(guard) => guard.recv(),
-            Err(_) => return, // a sibling panicked holding the lock
-        };
-        let Ok(task) = task else {
-            return; // channel closed: pool is shutting down
-        };
+    while let Some(task) = sched.next_for(w) {
         // AssertUnwindSafe: worst case a panic leaves the executor's
         // session pool with a half-inserted entry, which is rebuilt on
         // the next miss — strictly better than losing the worker.
-        let out = match catch_unwind(AssertUnwindSafe(|| exec(&task.job))) {
-            Ok(res) => res.map_err(|e| format!("{e:#}")),
+        let result = match catch_unwind(AssertUnwindSafe(|| exec(&task.job))) {
+            Ok(Ok(record)) => {
+                // persist before reporting, so a consumer that sees the
+                // outcome may rely on the cache already holding it
+                if let Err(e) =
+                    lock(&shared.cache).put(&task.key, &task.job.manifest.name, &record)
+                {
+                    eprintln!(
+                        "run-cache: failed to persist {}: {e:#}",
+                        task.job.config.label
+                    );
+                }
+                Ok(record)
+            }
+            Ok(Err(e)) => Err(format!("{e:#}")),
             Err(payload) => Err(format!("job panicked: {}", panic_msg(payload.as_ref()))),
         };
-        let _ = task.reply.send((task.idx, out));
+        {
+            let mut stats = lock(&shared.stats);
+            stats.executed += 1;
+            if result.is_err() {
+                stats.failed += 1;
+            }
+        }
+        let _ = task.reply.send(Reply::Done { idx: task.idx, result });
     }
 }
 
@@ -109,7 +117,8 @@ fn panic_msg(payload: &(dyn std::any::Any + Send)) -> &str {
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        self.tx.take(); // hang up: workers drain the queue and exit
+        // hang up: workers drain the remaining queue, then exit
+        self.sched.shutdown();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }

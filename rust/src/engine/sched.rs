@@ -1,0 +1,240 @@
+//! The engine's job scheduler: priorities, manifest affinity, and
+//! submission-level cancellation.
+//!
+//! The pre-handle engine fed its workers from a single mpsc FIFO, which
+//! had two costs on multi-shape batches: (1) interleaved manifests made
+//! every worker thrash its session pool (each cross-manifest hop risks
+//! an XLA recompile measured in seconds), and (2) a second caller's jobs
+//! could only queue strictly behind the first batch.  This module
+//! replaces the FIFO with a small in-memory scheduler:
+//!
+//! * **Priority first.**  Every submission carries a priority
+//!   ([`crate::engine::SubmitOptions::priority`]); a higher-priority
+//!   task is always dispatched before a lower-priority one, regardless
+//!   of affinity or age.
+//! * **Affinity second.**  Within a priority level, a worker prefers
+//!   tasks whose manifest it has dispatched recently — the scheduler
+//!   mirrors each worker's [`crate::engine::LruPool`] contents (same
+//!   capacity, same MRU discipline), so "recently dispatched" is
+//!   exactly "session still warm".  A worker only crosses manifests
+//!   (a *steal*) when none of its warm manifests have pending work,
+//!   which is the moment it would otherwise go idle.
+//! * **FIFO last.**  Ties break by submission order, so equal-priority
+//!   same-warmness work drains in the order callers queued it.
+//!
+//! Hit/steal totals are surfaced through
+//! [`crate::engine::EngineStats::pool_hits`] /
+//! [`EngineStats::pool_steals`](crate::engine::EngineStats::pool_steals):
+//! on a healthy multi-shape sweep hits should dominate, and `steals ≤
+//! workers × distinct manifests` (each worker pays at most one cold
+//! dispatch per shape it ever touches).
+//!
+//! Cancellation is per submission: [`Scheduler::cancel`] atomically
+//! removes every still-queued task of one submission and replies
+//! [`Reply::Cancelled`] for each, so the owning handle can account for
+//! them.  Tasks already handed to a worker are *in flight* and run to
+//! completion (their results are still cached — a cancelled sweep never
+//! leaves the cache inconsistent).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::train::RunRecord;
+
+use super::job::EngineJob;
+use super::lock;
+
+/// One worker→handle message: a finished (or cancelled-before-start)
+/// task, identified by its index within the owning submission.
+pub(crate) enum Reply {
+    /// The task ran on a worker (successfully or not).
+    Done { idx: usize, result: Result<RunRecord, String> },
+    /// The task was cancelled while still queued; it never executed.
+    Cancelled { idx: usize },
+}
+
+/// Shared state of one submission, held by its handle and by every one
+/// of its queued tasks.
+pub(crate) struct SubmissionCtl {
+    pub(crate) id: u64,
+    pub(crate) cancelled: AtomicBool,
+}
+
+/// One queued unit of work.
+pub(crate) struct Task {
+    /// Global dispatch order tiebreaker (FIFO within equal priority and
+    /// warmness), assigned at enqueue time.
+    seq: u64,
+    pub(crate) priority: i32,
+    /// Index of this job within its submission (outcome addressing).
+    pub(crate) idx: usize,
+    /// Content address, precomputed at submit time (the worker persists
+    /// the result under it).
+    pub(crate) key: String,
+    pub(crate) job: EngineJob,
+    pub(crate) reply: Sender<Reply>,
+    pub(crate) ctl: Arc<SubmissionCtl>,
+}
+
+impl Task {
+    pub(crate) fn new(
+        priority: i32,
+        idx: usize,
+        key: String,
+        job: EngineJob,
+        reply: Sender<Reply>,
+        ctl: Arc<SubmissionCtl>,
+    ) -> Task {
+        // seq is assigned under the scheduler lock at enqueue time
+        Task { seq: 0, priority, idx, key, job, reply, ctl }
+    }
+}
+
+struct SchedState {
+    queue: Vec<Task>,
+    /// Per-worker MRU manifest list (front = warmest), mirroring that
+    /// worker's session pool at `warm_cap` entries.
+    warm: Vec<Vec<String>>,
+    warm_cap: usize,
+    hits: u64,
+    steals: u64,
+    cancelled: u64,
+    next_seq: u64,
+    next_submission: u64,
+    shutdown: bool,
+}
+
+pub(crate) struct Scheduler {
+    state: Mutex<SchedState>,
+    available: Condvar,
+}
+
+impl Scheduler {
+    pub(crate) fn new(workers: usize, warm_cap: usize) -> Scheduler {
+        Scheduler {
+            state: Mutex::new(SchedState {
+                queue: Vec::new(),
+                warm: vec![Vec::new(); workers.max(1)],
+                warm_cap: warm_cap.max(1),
+                hits: 0,
+                steals: 0,
+                cancelled: 0,
+                next_seq: 0,
+                next_submission: 0,
+                shutdown: false,
+            }),
+            available: Condvar::new(),
+        }
+    }
+
+    /// Allocate the control block for a new submission.
+    pub(crate) fn new_submission(&self) -> Arc<SubmissionCtl> {
+        let mut state = lock(&self.state);
+        let id = state.next_submission;
+        state.next_submission += 1;
+        Arc::new(SubmissionCtl { id, cancelled: AtomicBool::new(false) })
+    }
+
+    /// Queue a submission's runnable tasks and wake the workers.
+    pub(crate) fn enqueue(&self, tasks: Vec<Task>) {
+        if tasks.is_empty() {
+            return;
+        }
+        let mut state = lock(&self.state);
+        for mut t in tasks {
+            t.seq = state.next_seq;
+            state.next_seq += 1;
+            state.queue.push(t);
+        }
+        drop(state);
+        self.available.notify_all();
+    }
+
+    /// Blocking pop for worker `w`: the highest-priority task, warm
+    /// manifests preferred within a priority level, FIFO otherwise.
+    /// Returns `None` only when the scheduler is shut down *and* the
+    /// queue is drained — queued work always completes, mirroring the
+    /// old pool's hang-up semantics.
+    pub(crate) fn next_for(&self, w: usize) -> Option<Task> {
+        let mut state = lock(&self.state);
+        loop {
+            if let Some(i) = pick(&state, w) {
+                let task = state.queue.remove(i);
+                let was_warm = touch_warm(&mut state, w, &task.job.manifest.name);
+                if was_warm {
+                    state.hits += 1;
+                } else {
+                    state.steals += 1;
+                }
+                return Some(task);
+            }
+            if state.shutdown {
+                return None;
+            }
+            state = self.available.wait(state).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Cancel a submission: remove its queued tasks (replying
+    /// [`Reply::Cancelled`] for each) and mark the control block so the
+    /// owner can observe the state.  In-flight tasks are unaffected.
+    pub(crate) fn cancel(&self, ctl: &SubmissionCtl) {
+        ctl.cancelled.store(true, Ordering::SeqCst);
+        let mut state = lock(&self.state);
+        let mut i = 0;
+        while i < state.queue.len() {
+            if state.queue[i].ctl.id == ctl.id {
+                let task = state.queue.remove(i);
+                state.cancelled += 1;
+                let _ = task.reply.send(Reply::Cancelled { idx: task.idx });
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// (affinity hits, cross-manifest steals, tasks cancelled while
+    /// queued) over the scheduler's lifetime.
+    pub(crate) fn counters(&self) -> (u64, u64, u64) {
+        let state = lock(&self.state);
+        (state.hits, state.steals, state.cancelled)
+    }
+
+    /// Wake everyone for shutdown; workers drain the remaining queue
+    /// first (see [`Scheduler::next_for`]).
+    pub(crate) fn shutdown(&self) {
+        lock(&self.state).shutdown = true;
+        self.available.notify_all();
+    }
+}
+
+/// Index of the best task for worker `w`: max by (priority, warmness,
+/// earliest submission order).
+fn pick(state: &SchedState, w: usize) -> Option<usize> {
+    let mut best: Option<(usize, (i32, bool, std::cmp::Reverse<u64>))> = None;
+    for (i, t) in state.queue.iter().enumerate() {
+        let warm = state.warm[w].iter().any(|n| n == &t.job.manifest.name);
+        let score = (t.priority, warm, std::cmp::Reverse(t.seq));
+        if best.as_ref().is_none_or(|(_, s)| score > *s) {
+            best = Some((i, score));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// Record a dispatch of `name` to worker `w` in the scheduler's mirror
+/// of that worker's session pool; returns whether it was already warm.
+fn touch_warm(state: &mut SchedState, w: usize, name: &str) -> bool {
+    let cap = state.warm_cap;
+    let warm = &mut state.warm[w];
+    if let Some(pos) = warm.iter().position(|n| n == name) {
+        let n = warm.remove(pos);
+        warm.insert(0, n);
+        true
+    } else {
+        warm.insert(0, name.to_string());
+        warm.truncate(cap);
+        false
+    }
+}

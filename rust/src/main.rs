@@ -5,6 +5,7 @@
 //!   check                       validate every artifact + manifest
 //!   train [opts]                one training run
 //!   exp <id|all|list> [--quick] reproduce a paper figure/table
+//!   drive --shards n [exp opts] spawn/monitor/restart n shard processes
 //!   cache <stats|gc> [opts]     run-cache lifecycle (segments, GC)
 //!   report                      collate results/ into EXPERIMENTS-style md
 //!
@@ -12,8 +13,9 @@
 //! in-tree `Args` helper below.
 //!
 //! Built with `--no-default-features`, the XLA runtime is absent and the
-//! execution subcommands (`check`/`train`/`exp`) explain that; the pure
-//! subcommands (`rules`, `cache`, `report`, `corpus`) still work.
+//! execution subcommands (`check`/`train`/`exp`/`drive`) explain that;
+//! the pure subcommands (`rules`, `cache`, `report`, `corpus`) still
+//! work.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -21,7 +23,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use umup::data::{Corpus, CorpusConfig};
-use umup::engine::{gc, parse_duration, stats, GcOptions, Shard};
+use umup::engine::{gc, parse_bytes, parse_duration, stats, GcOptions, Shard};
 use umup::parametrization::{Abc, HpSet, Parametrization, Scheme};
 use umup::runtime::Registry;
 
@@ -82,6 +84,7 @@ fn main() -> Result<()> {
         "check" => check(&args),
         "train" => train(&args),
         "exp" => exp(&args),
+        "drive" => drive_cmd(&args),
         "cache" => cache_cmd(&args),
         "report" => report(&args),
         "corpus" => corpus_info(&args),
@@ -96,9 +99,12 @@ fn main() -> Result<()> {
                  \x20         [--lr 0.5] [--steps 256] [--precision fp32|fp8|fp8-paper] [--seed 7]\n\
                  \x20 exp     <id|all|list> [--quick] [--workers N] [--shard i/n]\n\
                  \x20                                                     reproduce figures/tables\n\
+                 \x20 drive   <id|all> --shards N [--quick] [--workers N] [--out DIR]\n\
+                 \x20                             spawn, monitor and restart the N shard\n\
+                 \x20                             processes of `exp --shard` (one shared cache)\n\
                  \x20 cache   stats [--cache-dir DIR]                     segment/key statistics\n\
                  \x20 cache   gc    [--cache-dir DIR] [--older-than 30d] [--manifest NAME]\n\
-                 \x20               [--dry-run]                           prune + compact segments\n\
+                 \x20               [--max-bytes 512m] [--dry-run]        prune + compact segments\n\
                  \x20 report  [--out results]                             collate summaries\n\
                  \x20 corpus  [--vocab 256]                               corpus statistics\n\n\
                  cache layout & lifecycle:\n\
@@ -189,7 +195,7 @@ fn check(args: &Args) -> Result<()> {
 fn train(args: &Args) -> Result<()> {
     use std::sync::Arc;
 
-    use umup::engine::{Engine, EngineConfig};
+    use umup::engine::{Engine, EngineConfig, EngineJob};
     use umup::parametrization::Precision;
     use umup::train::{RunConfig, Schedule};
 
@@ -226,7 +232,15 @@ fn train(args: &Args) -> Result<()> {
     cfg.seed = args.get("seed", "7").parse()?;
     cfg.schedule = Schedule::standard(lr, steps, (steps / 4).max(1));
     println!("training {} on {} for {steps} steps (lr {lr})", cfg.label, man.name);
-    let rec = engine.run_single(&man, &corpus, cfg)?.record;
+    // non-blocking submission: the handle resolves a cache hit
+    // instantly and otherwise streams the outcome when the run ends
+    let handle = engine.submit_one(EngineJob {
+        manifest: Arc::clone(&man),
+        corpus: Arc::clone(&corpus),
+        config: cfg,
+        tag: vec![],
+    });
+    let rec = handle.result()?.record;
     for &(t, l) in &rec.train_curve {
         println!("step {t:6}  train loss {l:.4}");
     }
@@ -284,28 +298,46 @@ fn exp(args: &Args) -> Result<()> {
     // deterministic plan over the same merged results, so the batch
     // frontier advances each round and the final retry is a pure
     // cache-hit replay that yields the full report.
+    //
+    // Waiting is exponential backoff with full jitter (reset whenever
+    // the refresh makes progress): N sibling shards started by one
+    // driver would otherwise poll the segment reader in lockstep, all
+    // re-scanning every segment at the same instant.
     let md = if shard.is_some() {
-        let mut idle_rounds = 0usize;
+        use std::time::Duration;
+        let mut rng = umup::util::Rng::new(
+            (std::process::id() as u64) ^ shard.map_or(0, |s| (s.index as u64) << 32),
+        )
+        .fork("shard-idle-backoff");
+        const IDLE_TIMEOUT: Duration = Duration::from_secs(120);
+        const MAX_BACKOFF: Duration = Duration::from_secs(8);
+        let mut backoff = Duration::from_millis(250);
+        let mut idled = Duration::ZERO;
         loop {
             match run_experiment(&ctx, id) {
                 Ok(md) => break md,
                 Err(e) if format!("{e:#}").contains(umup::engine::SHARD_SKIP_MARKER) => {
                     if ctx.engine.refresh_cache() > 0 {
-                        idle_rounds = 0;
+                        backoff = Duration::from_millis(250);
+                        idled = Duration::ZERO;
                         continue;
                     }
-                    idle_rounds += 1;
-                    if idle_rounds >= 60 {
+                    if idled >= IDLE_TIMEOUT {
                         eprintln!(
-                            "shard {}: no sibling progress in ~2 minutes; this slice is \
+                            "shard {}: no sibling progress in ~{}s; this slice is \
                              drained as far as it can go.  Run the remaining shards into \
-                             the same --cache-dir, then finish with an unsharded \
-                             --resume pass.",
-                            shard.expect("sharded branch")
+                             the same --cache-dir (or use `repro drive`), then finish \
+                             with an unsharded --resume pass.",
+                            shard.expect("sharded branch"),
+                            IDLE_TIMEOUT.as_secs()
                         );
                         return Err(e);
                     }
-                    std::thread::sleep(std::time::Duration::from_secs(2));
+                    // full jitter in [backoff/2, backoff)
+                    let wait = backoff.mul_f64(0.5 + 0.5 * rng.f64());
+                    std::thread::sleep(wait);
+                    idled += wait;
+                    backoff = (backoff * 2).min(MAX_BACKOFF);
                 }
                 Err(e) => return Err(e),
             }
@@ -316,14 +348,82 @@ fn exp(args: &Args) -> Result<()> {
     println!("{md}");
     let s = ctx.engine.stats();
     println!(
-        "engine: {} runs executed, {} cache hits, {} deduped, {} skipped, {} failed \
-         ({} records cached)",
+        "engine: {} runs executed, {} cache hits, {} deduped, {} skipped, {} cancelled, \
+         {} failed ({} records cached; session affinity {} hits / {} steals)",
         s.executed,
         s.cache_hits,
         s.deduped,
         s.skipped,
+        s.cancelled,
         s.failed,
-        ctx.engine.cache_len()
+        ctx.engine.cache_len(),
+        s.pool_hits,
+        s.pool_steals
+    );
+    Ok(())
+}
+
+/// `repro drive <id> --shards n`: run a sharded `repro exp` end to end
+/// from one terminal — the driver spawns the n shard processes against
+/// one shared cache dir, restarts any that crash, and streams merged
+/// progress while they drain disjoint slices of the sweep.
+#[cfg(feature = "xla")]
+fn drive_cmd(args: &Args) -> Result<()> {
+    use umup::engine::driver::{drive, DriveConfig};
+
+    let id = args.positional.get(1).map(String::as_str).unwrap_or("all");
+    let shards: usize = args.get("shards", "2").parse().context("bad --shards")?;
+    if shards == 0 {
+        bail!("--shards must be >= 1");
+    }
+    let out = args.get("out", "results");
+    let cache_dir = args
+        .flags
+        .get("cache-dir")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| Path::new(&out).join("run-cache"));
+    let exe = std::env::current_exe().context("resolving repro binary path")?;
+    let workers = args.get("workers", "2");
+    let artifacts = args.get("artifacts", "artifacts");
+    let quick = args.has("quick");
+
+    let cfg = DriveConfig {
+        shards,
+        cache_dir: cache_dir.clone(),
+        max_restarts_per_shard: args.get("max-restarts", "2").parse()?,
+        ..DriveConfig::default()
+    };
+    println!(
+        "drive: {id} across {shards} shard processes (cache {}, {} restarts/shard max)",
+        cache_dir.display(),
+        cfg.max_restarts_per_shard
+    );
+    let report = drive(&cfg, |shard| {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("exp")
+            .arg(id)
+            .arg("--shard")
+            .arg(shard.to_string())
+            .arg("--cache-dir")
+            .arg(&cache_dir)
+            .arg("--resume")
+            .arg("--workers")
+            .arg(&workers)
+            .arg("--out")
+            .arg(&out)
+            .arg("--artifacts")
+            .arg(&artifacts);
+        if quick {
+            cmd.arg("--quick");
+        }
+        cmd
+    })?;
+    println!(
+        "drive: all {shards} shards done in {:.1}s ({} restarts, {} runs cached); \
+         reports are in {out}/",
+        report.elapsed.as_secs_f64(),
+        report.restarts,
+        report.cache_entries
     );
     Ok(())
 }
@@ -341,6 +441,14 @@ fn train(_args: &Args) -> Result<()> {
 #[cfg(not(feature = "xla"))]
 fn exp(_args: &Args) -> Result<()> {
     bail!("`repro exp` needs the XLA runtime; rebuild without --no-default-features")
+}
+
+#[cfg(not(feature = "xla"))]
+fn drive_cmd(_args: &Args) -> Result<()> {
+    bail!(
+        "`repro drive` spawns `repro exp` shard processes, which need the XLA \
+         runtime; rebuild without --no-default-features"
+    )
 }
 
 /// Run-cache lifecycle: `repro cache <stats|gc>` (works without XLA —
@@ -386,18 +494,24 @@ fn cache_cmd(args: &Args) -> Result<()> {
                     None => None,
                 },
                 manifest: args.flags.get("manifest").cloned(),
+                max_bytes: match args.flags.get("max-bytes") {
+                    Some(s) => Some(parse_bytes(s).context("bad --max-bytes")?),
+                    None => None,
+                },
                 dry_run: args.has("dry-run"),
             };
             let rep = gc(&dir, &opts)?;
             let verb = if opts.dry_run { "would keep" } else { "kept" };
             println!(
                 "gc {}: scanned {} entries in {} segments; {verb} {}, pruned {}, \
-                 dropped {} duplicates + {} corrupt lines ({} -> {} bytes)",
+                 evicted {} over budget, dropped {} duplicates + {} corrupt lines \
+                 ({} -> {} bytes)",
                 dir.display(),
                 rep.scanned,
                 rep.segments_before,
                 rep.kept,
                 rep.pruned,
+                rep.evicted,
                 rep.deduped,
                 rep.corrupt_dropped,
                 rep.bytes_before,

@@ -6,11 +6,11 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::data::Corpus;
-use crate::engine::Engine;
+use crate::engine::{Engine, EngineJob};
 use crate::runtime::Manifest;
 use crate::train::RunConfig;
 
-use super::{Range, SweepJob};
+use super::Range;
 
 /// Losses over a (fixed HP x transfer HP) grid.
 #[derive(Debug, Clone)]
@@ -43,16 +43,23 @@ pub fn pair_grid(
             cfg.hp.set(transfer.0, tv);
             cfg.schedule.peak_lr = cfg.hp.eta;
             cfg.label = format!("{}-{}{}x{}{}", proto.label, fixed.0, i, transfer.0, j);
-            jobs.push(SweepJob { config: cfg, tag: vec![] });
+            jobs.push(EngineJob {
+                manifest: Arc::clone(manifest),
+                corpus: Arc::clone(corpus),
+                config: cfg,
+                tag: vec![],
+            });
         }
     }
-    let res = engine.run_sweep(manifest, corpus, &jobs)?;
+    // the grid fills cell by cell as outcomes stream in (each job's
+    // submission index encodes its (i, j) position row-major)
     let mut loss = vec![vec![f64::INFINITY; transfer_vals.len()]; fixed_vals.len()];
-    for (k, r) in res.iter().enumerate() {
-        let i = k / transfer_vals.len();
-        let j = k % transfer_vals.len();
-        loss[i][j] = r.record.objective();
-    }
+    let width = transfer_vals.len();
+    engine.submit(jobs).drain_strict(|o, _, _| {
+        if let Ok(rec) = &o.outcome {
+            loss[o.idx / width][o.idx % width] = rec.objective();
+        }
+    })?;
     Ok(PairGrid {
         fixed_name: fixed.0.to_string(),
         transfer_name: transfer.0.to_string(),

@@ -13,13 +13,42 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::data::Corpus;
-use crate::engine::Engine;
+use crate::engine::{Engine, EngineJob};
 use crate::parametrization::HpSet;
 use crate::runtime::Manifest;
 use crate::train::RunConfig;
 use crate::util::stats;
 
 use super::{HpSpace, SweepJob, SweepResult};
+
+/// Submit `jobs` for `manifest`/`corpus` and drain the stream strictly,
+/// logging fresh-run completions under a phase label.
+fn phase_sweep(
+    engine: &Engine,
+    manifest: &Arc<Manifest>,
+    corpus: &Arc<Corpus>,
+    phase: &str,
+    jobs: Vec<SweepJob>,
+) -> Result<Vec<SweepResult>> {
+    let engine_jobs: Vec<EngineJob> = jobs
+        .into_iter()
+        .map(|j| EngineJob {
+            manifest: Arc::clone(manifest),
+            corpus: Arc::clone(corpus),
+            config: j.config,
+            tag: j.tag,
+        })
+        .collect();
+    engine.submit(engine_jobs).drain_strict(|o, done, total| {
+        if let (Ok(rec), false) = (&o.outcome, o.cached) {
+            println!(
+                "    {phase} [{done}/{total}] {}: loss {:.4}",
+                o.job.config.label,
+                rec.objective()
+            );
+        }
+    })
+}
 
 #[derive(Debug)]
 pub struct IndependentOutcome {
@@ -59,7 +88,7 @@ pub fn independent_search(
             SweepJob { config: cfg, tag: vec![("eta".into(), eta)] }
         })
         .collect();
-    let res = engine.run_sweep(manifest, corpus, &jobs)?;
+    let res = phase_sweep(engine, manifest, corpus, "phase 1 (LR line)", jobs)?;
     let lr_line: Vec<(f64, f64)> =
         res.iter().map(|r| (r.job.tag[0].1, r.record.objective())).collect();
     let best = stats::argmin(&lr_line.iter().map(|p| p.1).collect::<Vec<_>>());
@@ -86,7 +115,7 @@ pub fn independent_search(
         }
         line_specs.push((name.to_string(), grid));
     }
-    let res = engine.run_sweep(manifest, corpus, &jobs)?;
+    let res = phase_sweep(engine, manifest, corpus, "phase 2 (per-HP lines)", jobs)?;
     let mut hp_lines = Vec::new();
     let mut cursor = 0;
     let mut combined_hp = HpSet { eta: best_eta, ..proto.hp };
@@ -109,7 +138,13 @@ pub fn independent_search(
     cfg.hp = combined_hp;
     cfg.schedule.peak_lr = combined_hp.eta;
     cfg.label = format!("{}-combined", proto.label);
-    let res = engine.run_sweep(manifest, corpus, &[SweepJob { config: cfg, tag: vec![] }])?;
+    let res = phase_sweep(
+        engine,
+        manifest,
+        corpus,
+        "phase 3 (combine)",
+        vec![SweepJob { config: cfg, tag: vec![] }],
+    )?;
     let combined_loss = res[0].record.objective();
     let phase3_runs = phase2_runs + 1;
     all_results.extend(res);

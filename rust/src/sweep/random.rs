@@ -1,5 +1,7 @@
 //! Random search (the standard μP sweep protocol, §2.1 / A.6): sample HP
 //! combinations uniformly from the joint grid, train each, keep the best.
+//! Runs are submitted non-blockingly and consumed as they finish, so
+//! the incumbent best is visible while the sweep is still draining.
 //! `simulate_run_counts` reproduces Fig 1(a)'s best-loss-vs-#runs curve
 //! by resampling subsets of the completed runs (exactly as §A.6 does).
 
@@ -8,13 +10,13 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::data::Corpus;
-use crate::engine::Engine;
+use crate::engine::{Engine, EngineJob};
 use crate::parametrization::HpSet;
 use crate::runtime::Manifest;
 use crate::train::RunConfig;
 use crate::util::{stats, Rng};
 
-use super::{HpSpace, SweepJob, SweepResult};
+use super::{HpSpace, SweepResult};
 
 #[derive(Debug)]
 pub struct RandomOutcome {
@@ -49,9 +51,27 @@ pub fn random_search(
         cfg.hp = hp;
         cfg.schedule.peak_lr = hp.eta;
         cfg.label = format!("{}-rs{:03}", proto.label, i);
-        jobs.push(SweepJob { config: cfg, tag });
+        jobs.push(EngineJob {
+            manifest: Arc::clone(manifest),
+            corpus: Arc::clone(corpus),
+            config: cfg,
+            tag,
+        });
     }
-    let results = engine.run_sweep(manifest, corpus, &jobs)?;
+    // stream: the incumbent best is reported the moment a run beats it,
+    // not after the whole sweep lands
+    let mut incumbent = f64::INFINITY;
+    let results = engine.submit(jobs).drain_strict(|o, done, total| {
+        if let Ok(rec) = &o.outcome {
+            if !o.cached && rec.objective() < incumbent {
+                incumbent = rec.objective();
+                println!(
+                    "    random search [{done}/{total}] new best {:.4} ({})",
+                    incumbent, o.job.config.label
+                );
+            }
+        }
+    })?;
     let losses: Vec<f64> = results.iter().map(|r| r.record.objective()).collect();
     let best = stats::argmin(&losses);
     Ok(RandomOutcome {
@@ -89,6 +109,7 @@ pub fn simulate_run_counts(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sweep::SweepJob;
     use crate::train::RunRecord;
     use std::collections::BTreeMap;
 

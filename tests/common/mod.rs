@@ -7,13 +7,16 @@
 #![allow(dead_code)] // each test target uses its own subset
 
 use std::collections::BTreeMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use umup::data::{Corpus, CorpusConfig};
+use umup::engine::{Engine, EngineConfig, EngineJob};
 use umup::parametrization::{HpSet, Parametrization, Scheme};
 use umup::runtime::{Manifest, Spec};
-use umup::train::RunConfig;
+use umup::train::{RunConfig, RunRecord};
 
 pub fn dummy_manifest(name: &str) -> Arc<Manifest> {
     Arc::new(Manifest {
@@ -51,4 +54,71 @@ pub fn dummy_corpus() -> Arc<Corpus> {
 
 pub fn cfg(label: &str, eta: f64, steps: u64) -> RunConfig {
     RunConfig::quick(label, Parametrization::new(Scheme::Umup), HpSet::with_eta(eta), steps)
+}
+
+// ------------------------------------------------ deterministic fixtures
+//
+// Shared by the concurrency and driver harnesses: the same sweep and the
+// same mock executor, so every process (thread, shard child, reference
+// run) that executes a given key writes the byte-identical cache line
+// (with `UMUP_CACHE_TS` pinned).
+
+/// The shared sweep every writer drains: 24 distinct jobs across 3
+/// manifests.  Purely deterministic — both the job set and each job's
+/// mock record.
+pub fn shared_job_list() -> Vec<EngineJob> {
+    let corpus = dummy_corpus();
+    ["w32", "w64", "w128"]
+        .iter()
+        .flat_map(|name| {
+            let man = dummy_manifest(name);
+            let corpus = Arc::clone(&corpus);
+            (0..8).map(move |i| EngineJob {
+                manifest: Arc::clone(&man),
+                corpus: Arc::clone(&corpus),
+                config: cfg(&format!("{name}-lr{i}"), 0.125 * (i + 1) as f64, 8),
+                tag: vec![],
+            })
+        })
+        .collect()
+}
+
+/// Deterministic mock engine: each "run" sleeps briefly and returns a
+/// record derived only from the job; `counter` counts actual executions
+/// (not cache/dedup resolutions).
+pub fn det_mock_engine(engine_cfg: EngineConfig, counter: Arc<AtomicUsize>) -> Engine {
+    Engine::with_factory(engine_cfg, move |_worker| {
+        let counter = Arc::clone(&counter);
+        Box::new(move |job: &EngineJob| -> anyhow::Result<RunRecord> {
+            std::thread::sleep(Duration::from_millis(2));
+            counter.fetch_add(1, Ordering::SeqCst);
+            Ok(RunRecord {
+                label: job.config.label.clone(),
+                train_curve: vec![(1, 3.0 + job.config.hp.eta), (8, 2.0 + job.config.hp.eta)],
+                valid_curve: vec![(8, 2.0 + job.config.hp.eta)],
+                final_valid_loss: 2.0 + job.config.hp.eta,
+                rms_curves: BTreeMap::new(),
+                final_rms: vec![("w.head".to_string(), 1.0)],
+                diverged: false,
+                wall_seconds: 0.01,
+            })
+        })
+    })
+    .unwrap()
+}
+
+/// All non-empty lines of every `runs*.jsonl` segment in `dir`, sorted
+/// (the comparison is byte-exact per line; only ordering is forgiven).
+pub fn sorted_segment_lines(dir: &Path) -> Vec<String> {
+    let mut lines = Vec::new();
+    for seg in umup::engine::list_segments(dir).unwrap() {
+        let text = std::fs::read_to_string(&seg).unwrap();
+        lines.extend(text.lines().filter(|l| !l.trim().is_empty()).map(str::to_string));
+    }
+    lines.sort();
+    lines
+}
+
+pub fn key_of_line(line: &str) -> String {
+    umup::util::Json::parse(line).unwrap().get("key").unwrap().as_str().unwrap().to_string()
 }

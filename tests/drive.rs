@@ -1,0 +1,219 @@
+//! Integration harness for the shard driver (`engine::driver::drive`,
+//! the library behind `repro drive --shards n`), reusing the PR 2
+//! self-re-exec pattern: this test binary is its own shard child.
+//!
+//! The acceptance contract: a driven 4-shard drain over a small grid
+//! completes with merged cache content **byte-identical** to the
+//! single-process run — including when one shard crashes mid-drive and
+//! is restarted by the driver (its stale segment lock is reclaimed, its
+//! persisted runs are resumed).  A shard that keeps crashing exhausts
+//! its restart budget and fails the drive with the surviving children
+//! torn down.
+//!
+//! Everything runs on the mock executor (`Engine::with_factory`) with
+//! `UMUP_CACHE_TS` pinned, so no XLA artifacts are needed and cache
+//! lines are byte-for-byte reproducible.
+
+mod common;
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::sync::atomic::AtomicUsize;
+use std::sync::Arc;
+use std::time::Duration;
+
+use common::{det_mock_engine, key_of_line, shared_job_list, sorted_segment_lines};
+use umup::engine::driver::{drive, DriveConfig};
+use umup::engine::{EngineConfig, Shard};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("umup-drive-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+// --------------------------------------------------- child process main
+
+/// Child-process entrypoint.  Inert as a normal test; when re-executed
+/// by the driver tests (selected via `UMUP_DRIVE_ROLE`) it acts as one
+/// shard process:
+///
+/// * `drain` — drain the shared sweep into `UMUP_DRIVE_CACHE` as shard
+///   `UMUP_DRIVE_SPEC` (unsharded without it), writing a marker file the
+///   parent asserts on.  With `UMUP_DRIVE_CRASH_ONCE=<path>` set and
+///   that path absent, it exits(3) *after* draining but before
+///   releasing its segment lock — simulating a crash whose restart must
+///   reclaim the stale lock and resume.
+/// * `crash` — exit(3) immediately (restart-budget exhaustion test).
+#[test]
+fn drive_child_entry() {
+    match std::env::var("UMUP_DRIVE_ROLE").as_deref() {
+        Ok("drain") => {}
+        Ok("crash") => std::process::exit(3),
+        _ => return,
+    }
+    let dir = PathBuf::from(std::env::var("UMUP_DRIVE_CACHE").expect("child cache dir"));
+    let shard = match std::env::var("UMUP_DRIVE_SPEC") {
+        Ok(s) => Some(Shard::parse(&s).expect("child shard spec")),
+        Err(_) => None,
+    };
+    let counter = Arc::new(AtomicUsize::new(0));
+    let engine = det_mock_engine(
+        EngineConfig {
+            workers: 2,
+            cache_dir: Some(dir.clone()),
+            resume: true,
+            shard,
+            ..EngineConfig::default()
+        },
+        Arc::clone(&counter),
+    );
+    let jobs = shared_job_list();
+    let n_jobs = jobs.len();
+    let report = engine.run(jobs);
+    assert_eq!(report.outcomes.len(), n_jobs);
+    assert_eq!(report.failed, 0, "mock jobs never fail");
+    for o in &report.outcomes {
+        assert!(
+            o.outcome.is_ok() || o.skipped,
+            "child outcome must be ok or an explicit shard skip: {:?}",
+            o.outcome.as_ref().err()
+        );
+    }
+    // simulated crash: results are already persisted (workers flush
+    // before reporting), but the process dies without dropping the
+    // engine — leaving a stale segment lock for the restart to reclaim
+    if let Ok(marker) = std::env::var("UMUP_DRIVE_CRASH_ONCE") {
+        if !Path::new(&marker).exists() {
+            std::fs::write(&marker, "crashed once\n").expect("writing crash marker");
+            std::process::exit(3);
+        }
+    }
+    drop(engine); // release the segment lock before the parent inspects
+    let tag = shard.map_or("single".to_string(), |s| format!("{}-{}", s.index, s.count));
+    std::fs::write(
+        dir.join(format!("child-{tag}.ok")),
+        format!("{} {}\n", report.executed, report.skipped),
+    )
+    .expect("writing child marker");
+}
+
+fn child_cmd(exe: &Path, dir: &Path, shard: Option<Shard>) -> Command {
+    let mut cmd = Command::new(exe);
+    cmd.args(["drive_child_entry", "--exact", "--nocapture", "--test-threads", "1"])
+        .env("UMUP_DRIVE_ROLE", "drain")
+        .env("UMUP_DRIVE_CACHE", dir)
+        .env("UMUP_CACHE_TS", "1700000000");
+    if let Some(s) = shard {
+        cmd.env("UMUP_DRIVE_SPEC", s.to_string());
+    }
+    cmd
+}
+
+// ---------------------------------------------------------------- tests
+
+/// The acceptance test: `drive` over 4 shard processes — one of which
+/// crashes once and is restarted — produces merged cache content
+/// byte-identical to the single-process run, with zero duplicate keys.
+#[test]
+fn driven_four_shards_with_one_crash_match_single_process() {
+    let exe = std::env::current_exe().unwrap();
+    let single = tmp_dir("single");
+    let sharded = tmp_dir("sharded");
+
+    // reference: one unsharded child process
+    let status = child_cmd(&exe, &single, None)
+        .stdout(std::process::Stdio::null())
+        .spawn()
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert!(status.success(), "single-process reference child failed");
+    assert!(single.join("child-single.ok").exists(), "reference child never ran");
+
+    // driven topology: 4 shards, shard 1 crashes on its first attempt
+    std::fs::create_dir_all(&sharded).unwrap();
+    let crash_marker = sharded.join("crash-once.flag");
+    let cfg = DriveConfig {
+        shards: 4,
+        cache_dir: sharded.clone(),
+        max_restarts_per_shard: 2,
+        poll_interval: Duration::from_millis(25),
+        progress: false,
+    };
+    let report = drive(&cfg, |shard| {
+        let mut cmd = child_cmd(&exe, &sharded, Some(shard));
+        if shard.index == 1 {
+            cmd.env("UMUP_DRIVE_CRASH_ONCE", &crash_marker);
+        }
+        cmd
+    })
+    .expect("drive must succeed");
+
+    assert_eq!(report.restarts, 1, "exactly the crashed shard restarts");
+    assert_eq!(report.shard_outcomes.len(), 4);
+    for so in &report.shard_outcomes {
+        assert!(so.success, "shard {} did not finish", so.shard);
+        let expected_attempts = if so.shard == 1 { 2 } else { 1 };
+        assert_eq!(so.attempts, expected_attempts, "shard {}", so.shard);
+    }
+    for i in 0..4 {
+        assert!(
+            sharded.join(format!("child-{i}-4.ok")).exists(),
+            "shard {i} child never completed a full drain"
+        );
+    }
+
+    // merged shard segments == the single-process segment, byte-for-byte
+    // modulo ordering (UMUP_CACHE_TS pins the timestamp field)
+    let jobs = shared_job_list();
+    let single_lines = sorted_segment_lines(&single);
+    let sharded_lines = sorted_segment_lines(&sharded);
+    assert_eq!(single_lines.len(), jobs.len());
+    assert_eq!(
+        sharded_lines, single_lines,
+        "driven merged cache must equal the unsharded run"
+    );
+    let keys: BTreeSet<String> = sharded_lines.iter().map(|l| key_of_line(l)).collect();
+    assert_eq!(keys.len(), jobs.len(), "duplicate run keys across segments");
+    assert_eq!(report.cache_entries, jobs.len());
+
+    let _ = std::fs::remove_dir_all(&single);
+    let _ = std::fs::remove_dir_all(&sharded);
+}
+
+/// A shard that crashes on every attempt exhausts its restart budget:
+/// the drive fails, naming the shard, and tears the topology down.
+#[test]
+fn drive_fails_once_restart_budget_is_exhausted() {
+    let exe = std::env::current_exe().unwrap();
+    let dir = tmp_dir("budget");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = DriveConfig {
+        shards: 2,
+        cache_dir: dir.clone(),
+        max_restarts_per_shard: 1,
+        poll_interval: Duration::from_millis(10),
+        progress: false,
+    };
+    let err = drive(&cfg, |shard| {
+        let mut cmd = Command::new(&exe);
+        cmd.args(["drive_child_entry", "--exact", "--nocapture", "--test-threads", "1"])
+            .env("UMUP_DRIVE_CACHE", &dir)
+            .env("UMUP_CACHE_TS", "1700000000");
+        if shard.index == 0 {
+            // shard 0 drains normally (it may finish or be torn down)
+            cmd.env("UMUP_DRIVE_ROLE", "drain")
+                .env("UMUP_DRIVE_SPEC", shard.to_string());
+        } else {
+            cmd.env("UMUP_DRIVE_ROLE", "crash");
+        }
+        cmd
+    })
+    .expect_err("a permanently-crashing shard must fail the drive");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("shard 1/2"), "error must name the failing shard: {msg}");
+    assert!(msg.contains("restart budget"), "{msg}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

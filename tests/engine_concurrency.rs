@@ -21,66 +21,35 @@
 
 mod common;
 
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
 use std::process::{Command, Stdio};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use common::{cfg, dummy_corpus, dummy_manifest};
+use common::{
+    cfg, det_mock_engine, dummy_corpus, dummy_manifest, key_of_line, shared_job_list,
+    sorted_segment_lines,
+};
 use umup::engine::{
     gc, run_key, stats, Engine, EngineConfig, EngineJob, GcOptions, RunCache, Shard,
 };
-use umup::train::RunRecord;
 
-// ------------------------------------------------------------ fixtures
+// ---------------------------------------------------------- fixtures
+// (the deterministic sweep + mock engine live in tests/common, shared
+// with the driver harness in tests/drive.rs)
 
-/// The shared sweep every writer (thread, child process, reference
-/// process) drains: 24 distinct jobs across 3 manifests.  Purely
-/// deterministic — both the job set and each job's mock record.
 fn job_list() -> Vec<EngineJob> {
-    let corpus = dummy_corpus();
-    ["w32", "w64", "w128"]
-        .iter()
-        .flat_map(|name| {
-            let man = dummy_manifest(name);
-            let corpus = Arc::clone(&corpus);
-            (0..8).map(move |i| EngineJob {
-                manifest: Arc::clone(&man),
-                corpus: Arc::clone(&corpus),
-                config: cfg(&format!("{name}-lr{i}"), 0.125 * (i + 1) as f64, 8),
-                tag: vec![],
-            })
-        })
-        .collect()
+    shared_job_list()
 }
 
 fn job_keys(jobs: &[EngineJob]) -> Vec<String> {
     jobs.iter().map(|j| run_key(&j.manifest.name, &j.corpus, &j.config)).collect()
 }
 
-/// Deterministic mock record: derived only from the job, so every
-/// process that executes a given key writes the identical cache line.
 fn mock_engine(engine_cfg: EngineConfig, counter: Arc<AtomicUsize>) -> Engine {
-    Engine::with_factory(engine_cfg, move |_worker| {
-        let counter = Arc::clone(&counter);
-        Box::new(move |job: &EngineJob| -> anyhow::Result<RunRecord> {
-            std::thread::sleep(Duration::from_millis(2));
-            counter.fetch_add(1, Ordering::SeqCst);
-            Ok(RunRecord {
-                label: job.config.label.clone(),
-                train_curve: vec![(1, 3.0 + job.config.hp.eta), (8, 2.0 + job.config.hp.eta)],
-                valid_curve: vec![(8, 2.0 + job.config.hp.eta)],
-                final_valid_loss: 2.0 + job.config.hp.eta,
-                rms_curves: BTreeMap::new(),
-                final_rms: vec![("w.head".to_string(), 1.0)],
-                diverged: false,
-                wall_seconds: 0.01,
-            })
-        })
-    })
-    .unwrap()
+    det_mock_engine(engine_cfg, counter)
 }
 
 fn tmp_dir(tag: &str) -> PathBuf {
@@ -88,22 +57,6 @@ fn tmp_dir(tag: &str) -> PathBuf {
         .join(format!("umup-conc-{tag}-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&d);
     d
-}
-
-/// All non-empty lines of every `runs*.jsonl` segment in `dir`, sorted
-/// (the comparison is byte-exact per line; only ordering is forgiven).
-fn sorted_segment_lines(dir: &Path) -> Vec<String> {
-    let mut lines = Vec::new();
-    for seg in umup::engine::list_segments(dir).unwrap() {
-        let text = std::fs::read_to_string(&seg).unwrap();
-        lines.extend(text.lines().filter(|l| !l.trim().is_empty()).map(str::to_string));
-    }
-    lines.sort();
-    lines
-}
-
-fn key_of_line(line: &str) -> String {
-    umup::util::Json::parse(line).unwrap().get("key").unwrap().as_str().unwrap().to_string()
 }
 
 // --------------------------------------------------- child process main
