@@ -4,11 +4,12 @@
 //! error) relative to the runs it schedules.
 
 use std::path::Path;
+use std::process::Command;
 use std::sync::Arc;
 use std::time::Instant;
 
 use umup::data::{Corpus, CorpusConfig};
-use umup::engine::{Engine, EngineConfig, EngineJob};
+use umup::engine::{Backend, Engine, EngineConfig, EngineJob, MockBackend, ProcessBackend};
 use umup::parametrization::{HpSet, Parametrization, Scheme};
 use umup::runtime::Manifest;
 use umup::sweep::{transfer_error, PairGrid, SweepJob};
@@ -140,5 +141,66 @@ fn main() -> anyhow::Result<()> {
         cold / resume.max(1e-9),
     );
     let _ = std::fs::remove_dir_all(&cache_dir);
+
+    // IPC overhead of the process backend, isolated from training cost:
+    // the same no-op sweep on the in-process deterministic mock vs 4
+    // `repro worker --mock` children.  The per-job delta is pure
+    // spawn + wire/framing + codec cost, tracked so the backend layer
+    // shows up in the perf trajectory.
+    let n_ipc_jobs = 64usize;
+    let ipc_jobs = || -> Vec<EngineJob> {
+        (0..n_ipc_jobs)
+            .map(|i| {
+                let eta = 0.015625 * (i + 1) as f64;
+                EngineJob {
+                    manifest: Arc::clone(&man),
+                    corpus: Arc::clone(&corpus),
+                    config: RunConfig::quick(
+                        &format!("ipc-{i}"),
+                        Parametrization::new(Scheme::Umup),
+                        HpSet::with_eta(eta),
+                        8,
+                    ),
+                    tag: vec![],
+                }
+            })
+            .collect()
+    };
+    let worker_exe = env!("CARGO_BIN_EXE_repro").to_string();
+    let backends: Vec<(&str, Arc<dyn Backend>)> = vec![
+        ("in-process mock", Arc::new(MockBackend::deterministic())),
+        (
+            "process mock (4 children)",
+            Arc::new(ProcessBackend::new(move |_worker| {
+                let mut cmd = Command::new(&worker_exe);
+                cmd.arg("worker").arg("--mock");
+                cmd
+            })),
+        ),
+    ];
+    for (name, backend) in backends {
+        let engine =
+            Engine::with_backend(EngineConfig { workers: 4, ..EngineConfig::default() }, backend)?;
+        let t0 = Instant::now();
+        let mut handle = engine.submit(ipc_jobs());
+        let mut first = f64::NAN;
+        let mut n = 0usize;
+        while let Some(o) = handle.recv() {
+            assert!(o.outcome.is_ok(), "ipc bench job failed: {:?}", o.outcome.err());
+            if n == 0 {
+                first = t0.elapsed().as_secs_f64();
+            }
+            n += 1;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "backend {name}: {n_ipc_jobs} no-op jobs in {:.1}ms total \
+             ({:.2}ms/job), first outcome after {:.1}ms",
+            dt * 1e3,
+            dt * 1e3 / n_ipc_jobs as f64,
+            first * 1e3
+        );
+        assert_eq!(n, n_ipc_jobs);
+    }
     Ok(())
 }

@@ -8,7 +8,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use crate::data::{Corpus, CorpusConfig};
-use crate::engine::{Engine, EngineConfig, Shard};
+use crate::engine::{Backend, Engine, EngineConfig, Shard};
 use crate::runtime::Registry;
 
 pub struct ExpContext {
@@ -46,14 +46,35 @@ impl ExpContext {
         resume: bool,
         shard: Option<Shard>,
     ) -> Result<Self> {
+        Self::with_backend(artifacts, out_dir, quick, workers, cache_dir, resume, shard, None)
+    }
+
+    /// Like [`ExpContext::with_cache`] over an explicit execution
+    /// backend (`--backend process|mock`); `None` uses the default
+    /// in-process XLA backend.
+    #[allow(clippy::too_many_arguments)] // mirrors the CLI surface 1:1
+    pub fn with_backend(
+        artifacts: &str,
+        out_dir: &str,
+        quick: bool,
+        workers: usize,
+        cache_dir: Option<PathBuf>,
+        resume: bool,
+        shard: Option<Shard>,
+        backend: Option<Arc<dyn Backend>>,
+    ) -> Result<Self> {
         let registry = Arc::new(Registry::open(Path::new(artifacts))?);
-        let engine = Engine::new(EngineConfig {
+        let engine_cfg = EngineConfig {
             workers,
             cache_dir,
             resume,
             shard,
             ..EngineConfig::default()
-        })?;
+        };
+        let engine = match backend {
+            Some(b) => Engine::with_backend(engine_cfg, b)?,
+            None => Engine::new(engine_cfg)?,
+        };
         Ok(ExpContext {
             registry,
             engine,

@@ -1,0 +1,82 @@
+//! The mock backend: closure-driven executors for tests and benches.
+//!
+//! This is the no-XLA execution path — the engine's queueing, caching,
+//! sharding, scheduling and failure machinery is exercised against
+//! plain closures, on any machine.  [`det_record`] is the *canonical*
+//! deterministic mock result: the integration harnesses
+//! (`tests/common`), `repro worker --mock`, and the backend benches all
+//! derive their records from it, which is what makes "process-backend
+//! drain == in-process drain, byte-for-byte in the cache" a testable
+//! contract.
+
+use std::collections::BTreeMap;
+
+use crate::train::{RunConfig, RunRecord};
+
+use super::super::job::EngineJob;
+use super::super::pool::JobExec;
+use super::{Backend, Capabilities, Executor, FnExecutor};
+
+/// The canonical deterministic mock record: a pure function of the run
+/// config (loss = 2 + η over an 8-step curve).  Every mock peer that
+/// must agree byte-for-byte with another derives its records here.
+pub fn det_record(cfg: &RunConfig) -> RunRecord {
+    RunRecord {
+        label: cfg.label.clone(),
+        train_curve: vec![(1, 3.0 + cfg.hp.eta), (8, 2.0 + cfg.hp.eta)],
+        valid_curve: vec![(8, 2.0 + cfg.hp.eta)],
+        final_valid_loss: 2.0 + cfg.hp.eta,
+        rms_curves: BTreeMap::new(),
+        final_rms: vec![("w.head".to_string(), 1.0)],
+        diverged: false,
+        wall_seconds: 0.01,
+    }
+}
+
+/// A backend whose executors are built by a per-worker closure factory
+/// — the engine's test seam (and the implementation behind the
+/// deprecated `Engine::with_factory` shim).
+pub struct MockBackend {
+    factory: Box<dyn Fn(usize) -> JobExec + Send + Sync>,
+    affinity: bool,
+}
+
+impl MockBackend {
+    /// A backend that builds each worker's executor with `factory`
+    /// (called on the worker's own thread, so the executor may own
+    /// mutable per-worker state).
+    pub fn new<F>(factory: F) -> MockBackend
+    where
+        F: Fn(usize) -> JobExec + Send + Sync + 'static,
+    {
+        MockBackend { factory: Box::new(factory), affinity: true }
+    }
+
+    /// The canonical deterministic mock: every job resolves instantly
+    /// to [`det_record`].
+    pub fn deterministic() -> MockBackend {
+        Self::new(|_worker| Box::new(|job: &EngineJob| Ok(det_record(&job.config))))
+    }
+
+    /// Advertise no per-manifest warm state
+    /// ([`Capabilities::session_affinity`] = false): the scheduler
+    /// dispatches plain priority+FIFO and keeps no warm mirror.
+    pub fn without_affinity(mut self) -> MockBackend {
+        self.affinity = false;
+        self
+    }
+}
+
+impl Backend for MockBackend {
+    fn name(&self) -> &str {
+        "mock"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities { session_affinity: self.affinity, ..Capabilities::default() }
+    }
+
+    fn spawn_executor(&self, worker_id: usize) -> Box<dyn Executor> {
+        Box::new(FnExecutor((self.factory)(worker_id)))
+    }
+}

@@ -1,0 +1,134 @@
+//! Pluggable execution backends: *where* the engine's jobs run.
+//!
+//! The engine's scheduling/caching/handle machinery is execution-
+//! agnostic; everything that actually trains lives behind the
+//! [`Backend`] trait.  A backend is shared by every worker thread
+//! (`Send + Sync`, held as an `Arc<dyn Backend>`) and hands each worker
+//! its own [`Executor`] via [`Backend::spawn_executor`] — the executor
+//! is created *inside* the worker thread, so it may own `!Send` state
+//! (XLA sessions, child-process pipes) for that worker's lifetime.
+//!
+//! # Trait contract
+//!
+//! * [`Backend::spawn_executor`] is called once per worker, on the
+//!   worker's own thread, and must not block on other workers.
+//! * [`Executor::run`] executes one job to completion and returns its
+//!   [`RunRecord`] or an error.  Errors (and panics, which the worker
+//!   loop catches) are per-job: they are reported as that job's
+//!   outcome and the worker keeps pulling.  An executor that loses its
+//!   underlying resource (e.g. a crashed child process) is expected to
+//!   recover *internally* if it can — see the restart semantics on
+//!   [`ProcessBackend`] — and to return an `Err` only when the job is
+//!   genuinely lost.
+//! * The engine persists a successful record to the run cache *before*
+//!   the outcome is reported (see [`crate::engine`] docs); executors
+//!   never touch the cache themselves.
+//! * [`Backend::health`] runs once, at engine construction, before any
+//!   worker starts: fail fast here (missing worker binary, bad
+//!   protocol) instead of erroring every job.  [`Backend::shutdown`]
+//!   runs once after every worker (and its executor) has been torn
+//!   down — a place for fleet-level cleanup; per-worker resources
+//!   belong to the executor's `Drop`.
+//! * [`Backend::capabilities`] is queried once at construction; the
+//!   scheduler reads [`Capabilities::session_affinity`] to decide
+//!   whether manifest-affine dispatch is worth tracking (see
+//!   [`crate::engine`] module docs).
+//!
+//! # Implementations
+//!
+//! * `XlaBackend` (behind the `xla` feature) — the in-process path:
+//!   each worker owns an [`LruPool`](crate::engine::LruPool) of
+//!   compiled XLA sessions.
+//! * [`MockBackend`] — the test/bench path: executors are plain
+//!   closures ([`JobExec`]); [`MockBackend::deterministic`] is the
+//!   canonical mock used by the integration harnesses and
+//!   `repro worker --mock`.
+//! * [`ProcessBackend`] — the out-of-process path: each worker slot
+//!   owns a spawned `repro worker` child speaking the [`wire`]
+//!   protocol over stdin/stdout, with bounded restart-on-crash.
+//!
+//! A future network/cluster backend is one more impl of this trait —
+//! nothing in the engine core changes.
+
+pub mod wire;
+
+mod mock;
+mod process;
+#[cfg(feature = "xla")]
+mod xla;
+
+pub use mock::{det_record, MockBackend};
+pub use process::ProcessBackend;
+#[cfg(feature = "xla")]
+pub use xla::XlaBackend;
+
+use anyhow::Result;
+
+use crate::train::RunRecord;
+
+use super::job::EngineJob;
+use super::pool::JobExec;
+
+/// What a backend can (or cannot) do, queried once by
+/// [`crate::engine::Engine::with_backend`] at construction.
+#[derive(Debug, Clone, Copy)]
+pub struct Capabilities {
+    /// Executors keep per-manifest warm state (compiled sessions) worth
+    /// scheduling around: the scheduler mirrors each worker's session
+    /// pool and prefers warm-manifest dispatch.  Backends without
+    /// per-manifest state disable this to get plain priority+FIFO
+    /// dispatch (and no hit/steal accounting).
+    pub session_affinity: bool,
+    /// Jobs execute outside this process: an executor crash cannot take
+    /// the engine down, and host memory is bounded per child.
+    pub out_of_process: bool,
+}
+
+impl Default for Capabilities {
+    fn default() -> Self {
+        Capabilities { session_affinity: true, out_of_process: false }
+    }
+}
+
+/// A source of per-worker [`Executor`]s — the engine's execution seam.
+/// See the module docs for the full contract.
+pub trait Backend: Send + Sync {
+    /// Short human name for logs and error contexts (`"in-process"`,
+    /// `"process"`, `"mock"`).
+    fn name(&self) -> &str;
+
+    /// Capability flags; queried once at engine construction.
+    fn capabilities(&self) -> Capabilities {
+        Capabilities::default()
+    }
+
+    /// Fail-fast probe run once before any worker starts (default: ok).
+    fn health(&self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Build worker `worker_id`'s executor.  Called on the worker's own
+    /// thread, so the returned executor may own `!Send` state.
+    fn spawn_executor(&self, worker_id: usize) -> Box<dyn Executor>;
+
+    /// Fleet-level teardown hook, run once after all workers have
+    /// exited and dropped their executors (default: no-op).
+    fn shutdown(&self) {}
+}
+
+/// One worker's job runner.  Owned by a single worker thread; never
+/// crosses threads.
+pub trait Executor {
+    /// Execute `job` (whose content address is `key`) to completion.
+    fn run(&mut self, job: &EngineJob, key: &str) -> Result<RunRecord>;
+}
+
+/// [`Executor`] over a plain closure — the adapter behind
+/// [`MockBackend`] and the deprecated `Engine::with_factory` shim.
+pub(crate) struct FnExecutor(pub(crate) JobExec);
+
+impl Executor for FnExecutor {
+    fn run(&mut self, job: &EngineJob, _key: &str) -> Result<RunRecord> {
+        (self.0)(job)
+    }
+}

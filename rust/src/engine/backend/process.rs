@@ -1,0 +1,413 @@
+//! The out-of-process backend: each engine worker slot owns a spawned
+//! worker child (`repro worker`) speaking the [`super::wire`] protocol
+//! over stdin/stdout.
+//!
+//! # Why
+//!
+//! One process's XLA sessions bound how far a sweep can fan out; child
+//! processes bound memory per worker, isolate native crashes (a
+//! segfaulting run kills one child, not the sweep), and are the
+//! stepping stone to a network/cluster backend — the engine core never
+//! learns the difference.
+//!
+//! # Supervision / restart semantics
+//!
+//! Each [`Executor`] owns exactly one child at a time (spawned lazily
+//! on first use, after [`Backend::health`] has already validated the
+//! worker command once at engine construction).  A *transport* failure
+//! — the child died, wrote garbage, or tore a frame — is handled
+//! per-worker, mirroring the shard driver's supervision pattern
+//! (`engine::driver`):
+//!
+//! 1. the dead child is torn down (killed if needed, always reaped);
+//! 2. if the worker's bounded restart budget
+//!    ([`ProcessBackend::with_max_restarts`]) allows, a fresh child is
+//!    spawned and the in-flight job is **re-dispatched once**;
+//! 3. a second transport failure on the same job — or an exhausted
+//!    budget — reports the job as a normal `Err` outcome (the engine's
+//!    per-job failure isolation takes it from there; the worker slot
+//!    itself keeps serving later jobs while budget remains).
+//!
+//! A *job* failure (the child replies with an error frame) is not a
+//! crash: it costs no restart and the same child keeps serving.
+//!
+//! Child stderr is never lost: a drain thread tees every line to the
+//! parent's stderr with a `[worker k]` prefix and keeps a bounded tail,
+//! which is appended to transport-failure outcomes so "the child died"
+//! errors carry the child's last words.
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader};
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::train::RunRecord;
+
+use super::super::job::EngineJob;
+use super::super::lock;
+use super::wire;
+use super::{Backend, Capabilities, Executor};
+
+/// Stderr lines retained per worker for failure context.
+const STDERR_TAIL_LINES: usize = 12;
+
+/// How long to wait for a child to exit on its own (after stdin EOF)
+/// before killing it.
+const SHUTDOWN_GRACE: Duration = Duration::from_millis(500);
+
+struct Inner {
+    make_cmd: Box<dyn Fn(usize) -> Command + Send + Sync>,
+    max_restarts_per_worker: usize,
+    restarts: AtomicUsize,
+}
+
+/// A [`Backend`] that runs every job in a pool of spawned worker
+/// processes.  Construct with [`ProcessBackend::new`] (an arbitrary
+/// worker command) or [`ProcessBackend::repro_worker`] (this binary's
+/// `repro worker` subcommand).
+pub struct ProcessBackend {
+    inner: Arc<Inner>,
+}
+
+impl ProcessBackend {
+    /// A backend whose worker `k` is the child process built by
+    /// `make_cmd(k)`.  The command must speak the [`wire`] protocol on
+    /// stdin/stdout (stdio is overridden to piped on spawn).
+    pub fn new<F>(make_cmd: F) -> ProcessBackend
+    where
+        F: Fn(usize) -> Command + Send + Sync + 'static,
+    {
+        ProcessBackend {
+            inner: Arc::new(Inner {
+                make_cmd: Box::new(make_cmd),
+                max_restarts_per_worker: 2,
+                restarts: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    /// A backend that spawns this very binary's `repro worker`
+    /// subcommand — the standard production shape.  `mock` selects the
+    /// deterministic mock executor (no XLA, no artifacts needed).
+    /// `sessions` is forwarded as the child's `--sessions` cap and must
+    /// match the engine's `max_sessions_per_worker`, so the scheduler's
+    /// warm-manifest mirror models the pool the child actually keeps.
+    pub fn repro_worker(artifacts: &str, mock: bool, sessions: usize) -> Result<ProcessBackend> {
+        let exe = std::env::current_exe().context("resolving the repro binary path")?;
+        let artifacts = artifacts.to_string();
+        Ok(ProcessBackend::new(move |_worker| {
+            let mut cmd = Command::new(&exe);
+            cmd.arg("worker")
+                .arg("--artifacts")
+                .arg(&artifacts)
+                .arg("--sessions")
+                .arg(sessions.to_string());
+            if mock {
+                cmd.arg("--mock");
+            }
+            cmd
+        }))
+    }
+
+    /// Set the per-worker restart budget (default 2): how many times
+    /// one worker slot may respawn its child after a transport failure
+    /// before jobs on that slot report errors instead.  Builder-style;
+    /// must be called before the backend is handed to an engine.
+    pub fn with_max_restarts(mut self, max_restarts_per_worker: usize) -> ProcessBackend {
+        Arc::get_mut(&mut self.inner)
+            .expect("with_max_restarts must be called before the backend is shared")
+            .max_restarts_per_worker = max_restarts_per_worker;
+        self
+    }
+
+    /// Total child restarts across all worker slots so far.
+    pub fn restarts(&self) -> usize {
+        self.inner.restarts.load(Ordering::SeqCst)
+    }
+}
+
+impl Backend for ProcessBackend {
+    fn name(&self) -> &str {
+        "process"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        // children keep their own per-manifest session pools, so
+        // manifest-affine dispatch still pays; crashes stay isolated
+        Capabilities { session_affinity: true, out_of_process: true }
+    }
+
+    /// Fail fast on a broken worker command: spawn one probe child,
+    /// demand a valid hello frame, and reap it.  Runs once, at engine
+    /// construction, so a missing binary or wrong `--artifacts` path
+    /// errors there instead of on every job.
+    fn health(&self) -> Result<()> {
+        let mut cmd = (self.inner.make_cmd)(0);
+        cmd.stdin(Stdio::piped()).stdout(Stdio::piped()).stderr(Stdio::piped());
+        let mut child = cmd.spawn().context("spawning worker health probe")?;
+        // close stdin immediately: a well-behaved worker writes its
+        // hello then exits on EOF, so the probe never hangs on a child
+        // that is merely waiting for jobs
+        drop(child.stdin.take());
+        let stdout = child.stdout.take().expect("probe stdout is piped");
+        let mut reader = BufReader::new(stdout);
+        let hello = wire::read_frame(&mut reader)
+            .and_then(|f| f.ok_or_else(|| anyhow!("worker exited before its hello frame")))
+            .and_then(|line| wire::check_hello(&line));
+        // on failure, collect the (now-dead) child's stderr so the
+        // probe error names the real cause — e.g. a bad --artifacts
+        // path failing the registry open before the hello frame
+        let mut stderr_tail = String::new();
+        if hello.is_err() {
+            let _ = child.kill();
+            if let Some(se) = child.stderr.take() {
+                use std::io::Read as _;
+                let _ = se.take(16 * 1024).read_to_string(&mut stderr_tail);
+            }
+        }
+        let _ = child.wait();
+        hello
+            .map_err(|e| match stderr_tail.trim() {
+                "" => e,
+                tail => e.context(format!("probe child stderr:\n{tail}")),
+            })
+            .context("worker health probe failed (wrong binary or broken worker command?)")
+    }
+
+    fn spawn_executor(&self, worker_id: usize) -> Box<dyn Executor> {
+        Box::new(ProcessExecutor {
+            inner: Arc::clone(&self.inner),
+            worker: worker_id,
+            conn: None,
+            spawned_once: false,
+            restarts_left: self.inner.max_restarts_per_worker,
+            stderr_tail: Arc::new(Mutex::new(VecDeque::new())),
+        })
+    }
+}
+
+// ------------------------------------------------------------ executor
+
+/// A live child: the pipes plus the stderr drain thread.
+struct ChildConn {
+    child: Child,
+    stdin: Option<ChildStdin>,
+    stdout: BufReader<ChildStdout>,
+    stderr_thread: Option<JoinHandle<()>>,
+}
+
+struct ProcessExecutor {
+    inner: Arc<Inner>,
+    worker: usize,
+    conn: Option<ChildConn>,
+    /// The first spawn is free; every later one consumes restart budget.
+    spawned_once: bool,
+    restarts_left: usize,
+    /// Last [`STDERR_TAIL_LINES`] stderr lines across this slot's
+    /// children (appended to transport-failure outcomes).
+    stderr_tail: Arc<Mutex<VecDeque<String>>>,
+}
+
+/// How one send/receive exchange with the child ended.
+enum Exchange {
+    /// A completed record.
+    Record(RunRecord),
+    /// The child reported the job failed (child itself is healthy).
+    JobErr(String),
+    /// The child (or its stream) is gone; restart territory.
+    Transport(anyhow::Error),
+}
+
+impl ProcessExecutor {
+    fn spawn_child(&mut self) -> Result<ChildConn> {
+        let mut cmd = (self.inner.make_cmd)(self.worker);
+        cmd.stdin(Stdio::piped()).stdout(Stdio::piped()).stderr(Stdio::piped());
+        let mut child = cmd
+            .spawn()
+            .with_context(|| format!("spawning worker {} child process", self.worker))?;
+        let stdin = child.stdin.take().expect("worker stdin is piped");
+        let stdout = child.stdout.take().expect("worker stdout is piped");
+        let stderr = child.stderr.take().expect("worker stderr is piped");
+        let worker = self.worker;
+        let tail = Arc::clone(&self.stderr_tail);
+        // tee the child's stderr: every line to the parent's stderr
+        // with a worker prefix, and a bounded tail for error outcomes
+        let stderr_thread = std::thread::spawn(move || {
+            for line in BufReader::new(stderr).lines() {
+                let Ok(line) = line else { break };
+                eprintln!("[worker {worker}] {line}");
+                let mut tail = lock(&tail);
+                if tail.len() >= STDERR_TAIL_LINES {
+                    tail.pop_front();
+                }
+                tail.push_back(line);
+            }
+        });
+        let mut conn = ChildConn {
+            child,
+            stdin: Some(stdin),
+            stdout: BufReader::new(stdout),
+            stderr_thread: Some(stderr_thread),
+        };
+        let hello = wire::read_frame(&mut conn.stdout)
+            .and_then(|f| f.ok_or_else(|| anyhow!("worker exited before its hello frame")))
+            .and_then(|line| wire::check_hello(&line));
+        match hello {
+            Ok(()) => Ok(conn),
+            Err(e) => {
+                teardown(&mut conn);
+                Err(e.context(format!("worker {} child failed its handshake", self.worker)))
+            }
+        }
+    }
+
+    /// The child for this slot, spawning (budget-gated) if necessary.
+    fn ensure_conn(&mut self) -> Result<&mut ChildConn> {
+        if self.conn.is_none() {
+            if self.spawned_once {
+                if self.restarts_left == 0 {
+                    bail!(
+                        "worker {}: restart budget exhausted ({} restarts used){}",
+                        self.worker,
+                        self.inner.max_restarts_per_worker,
+                        self.stderr_context()
+                    );
+                }
+                self.restarts_left -= 1;
+                self.inner.restarts.fetch_add(1, Ordering::SeqCst);
+                eprintln!(
+                    "engine: restarting worker {} child ({} restarts left)",
+                    self.worker, self.restarts_left
+                );
+            }
+            let conn = self.spawn_child()?;
+            self.spawned_once = true;
+            self.conn = Some(conn);
+        }
+        Ok(self.conn.as_mut().expect("just ensured"))
+    }
+
+    /// One full job exchange: send the job frame, read the reply frame.
+    fn exchange(&mut self, job: &EngineJob, key: &str) -> Exchange {
+        let frame = wire::encode_job(key, job);
+        let conn = match self.ensure_conn() {
+            Ok(c) => c,
+            Err(e) => return Exchange::Transport(e),
+        };
+        let send = conn
+            .stdin
+            .as_mut()
+            .ok_or_else(|| anyhow!("worker stdin already closed"))
+            .and_then(|stdin| wire::write_frame(stdin, &frame));
+        if let Err(e) = send {
+            return Exchange::Transport(e.context("sending job to worker child"));
+        }
+        let reply = wire::read_frame(&mut conn.stdout)
+            .and_then(|f| f.ok_or_else(|| anyhow!("worker child hung up mid-job")));
+        let line = match reply {
+            Ok(line) => line,
+            Err(e) => return Exchange::Transport(e.context("reading worker reply")),
+        };
+        match wire::decode_reply(&line) {
+            Ok(wire::WireReply::Record { key: reply_key, record }) => {
+                if reply_key != key {
+                    return Exchange::Transport(anyhow!(
+                        "worker replied for key {reply_key} while {key} was in flight \
+                         (protocol desync)"
+                    ));
+                }
+                Exchange::Record(record)
+            }
+            Ok(wire::WireReply::Error { error, .. }) => Exchange::JobErr(error),
+            Err(e) => Exchange::Transport(e),
+        }
+    }
+
+    /// Render the retained stderr tail for an error message.
+    fn stderr_context(&self) -> String {
+        let tail = lock(&self.stderr_tail);
+        if tail.is_empty() {
+            return String::new();
+        }
+        let mut out = String::from("; recent child stderr:");
+        for line in tail.iter() {
+            out.push_str("\n  | ");
+            out.push_str(line);
+        }
+        out
+    }
+
+    fn teardown_conn(&mut self) {
+        if let Some(mut conn) = self.conn.take() {
+            teardown(&mut conn);
+        }
+    }
+}
+
+impl Executor for ProcessExecutor {
+    fn run(&mut self, job: &EngineJob, key: &str) -> Result<RunRecord> {
+        match self.exchange(job, key) {
+            Exchange::Record(r) => Ok(r),
+            Exchange::JobErr(e) => Err(anyhow!("{e}")),
+            Exchange::Transport(first) => {
+                // the child is unusable: tear it down, then re-dispatch
+                // the in-flight job exactly once on a fresh child
+                self.teardown_conn();
+                eprintln!(
+                    "engine: worker {} child lost mid-job ({first:#}); re-dispatching once",
+                    self.worker
+                );
+                match self.exchange(job, key) {
+                    Exchange::Record(r) => Ok(r),
+                    Exchange::JobErr(e) => Err(anyhow!("{e}")),
+                    Exchange::Transport(second) => {
+                        self.teardown_conn();
+                        Err(anyhow!(
+                            "worker {} child failed twice on job {} (first: {first:#}; \
+                             after re-dispatch: {second:#}){}",
+                            self.worker,
+                            job.config.label,
+                            self.stderr_context()
+                        ))
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Drop for ProcessExecutor {
+    fn drop(&mut self) {
+        self.teardown_conn();
+    }
+}
+
+/// Stop a child: close stdin (a well-behaved worker exits on EOF), give
+/// it a grace period, kill it otherwise, and always reap — a torn-down
+/// drain never leaves zombies.
+fn teardown(conn: &mut ChildConn) {
+    drop(conn.stdin.take());
+    let deadline = Instant::now() + SHUTDOWN_GRACE;
+    loop {
+        match conn.child.try_wait() {
+            Ok(Some(_)) => break,
+            Ok(None) if Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            _ => {
+                let _ = conn.child.kill();
+                let _ = conn.child.wait();
+                break;
+            }
+        }
+    }
+    if let Some(t) = conn.stderr_thread.take() {
+        // the child is dead, so its stderr is at (or about to hit) EOF
+        let _ = t.join();
+    }
+}

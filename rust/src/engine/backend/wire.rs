@@ -1,0 +1,372 @@
+//! The worker wire protocol: length-prefixed JSON frames over
+//! stdin/stdout.
+//!
+//! A frame is the payload's byte length in ASCII decimal, a newline,
+//! the payload (UTF-8 JSON, one line), and a trailing newline:
+//!
+//! ```text
+//! 33\n{"hello":"umup-worker","proto":1}\n
+//! ```
+//!
+//! The conversation is strictly half-duplex, parent-driven:
+//!
+//! 1. child → parent: one **hello** frame on startup
+//!    (`{"hello":"umup-worker","proto":1}`) — the parent's handshake
+//!    and health probe;
+//! 2. parent → child: one **job** frame per run — the manifest *name*,
+//!    the corpus generator config, and the
+//!    [`RunConfig::canonical_json`] body plus the presentation label
+//!    (which the canonical form deliberately excludes), keyed by the
+//!    job's content address;
+//! 3. child → parent: one **reply** frame per job — on success the
+//!    exact run-cache line codec from [`crate::engine::cache`]
+//!    (`{"key":…,"manifest":…,"record":…,"ts":…}`), so the wire format
+//!    *is* the cache format and no separate serialization layer
+//!    exists; on a job-level failure `{"error":…,"key":…}`.
+//!
+//! Anything else on the stream — garbage bytes, a torn frame, EOF
+//! mid-payload — is a *transport* error: the parent treats the child
+//! as dead (see [`super::ProcessBackend`]'s restart semantics), and a
+//! child that cannot parse a frame exits nonzero rather than guess.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::CorpusConfig;
+use crate::engine::cache::{corpus_json, entry_line, now_ts, parse_full_entry};
+use crate::engine::job::EngineJob;
+use crate::train::{RunConfig, RunRecord};
+use crate::util::Json;
+
+/// Protocol revision; bumped on any frame-shape change.  The hello
+/// frame carries it so a parent never feeds jobs to a worker from a
+/// different build of the wire format.
+pub const PROTO_VERSION: u64 = 1;
+
+/// Upper bound on one frame's payload (a run record with full RMS
+/// telemetry is ~100 KiB; anything near this cap is corruption).
+const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Write one frame: `<len>\n<payload>\n`, flushed (the peer blocks on
+/// it).
+pub fn write_frame(w: &mut impl Write, payload: &str) -> Result<()> {
+    write!(w, "{}\n{payload}\n", payload.len()).context("writing wire frame")?;
+    w.flush().context("flushing wire frame")
+}
+
+/// Read one frame; `Ok(None)` on clean EOF at a frame boundary.  Any
+/// malformed prefix, short payload, or missing terminator is an error —
+/// the caller treats the stream as dead.
+pub fn read_frame(r: &mut impl BufRead) -> Result<Option<String>> {
+    let mut prefix = String::new();
+    // bound the prefix read: a valid length line is ≤ 22 bytes, and a
+    // peer streaming newline-free garbage must fail here, not buffer
+    // the whole stream into memory first
+    let n = r
+        .by_ref()
+        .take(64)
+        .read_line(&mut prefix)
+        .context("reading frame length prefix")?;
+    if n == 0 {
+        return Ok(None);
+    }
+    let trimmed = prefix.trim();
+    let len: usize = trimmed
+        .parse()
+        .with_context(|| format!("bad frame length prefix {trimmed:?} (garbage on the stream?)"))?;
+    if len > MAX_FRAME_BYTES {
+        bail!("frame length {len} exceeds the {MAX_FRAME_BYTES}-byte cap");
+    }
+    // payload + its trailing newline
+    let mut buf = vec![0u8; len + 1];
+    r.read_exact(&mut buf)
+        .with_context(|| format!("reading {len}-byte frame payload (torn frame?)"))?;
+    if buf.pop() != Some(b'\n') {
+        bail!("frame payload is not newline-terminated (framing lost)");
+    }
+    let payload = String::from_utf8(buf).context("frame payload is not UTF-8")?;
+    Ok(Some(payload))
+}
+
+// -------------------------------------------------------------- hello
+
+/// The child's startup frame.
+pub fn hello_line() -> String {
+    let mut m = BTreeMap::new();
+    m.insert("hello".to_string(), Json::Str("umup-worker".to_string()));
+    m.insert("proto".to_string(), Json::Num(PROTO_VERSION as f64));
+    Json::Obj(m).dump()
+}
+
+/// Validate a hello frame (wrong binary / wrong protocol fail fast).
+pub fn check_hello(line: &str) -> Result<()> {
+    let j = Json::parse(line).context("parsing worker hello frame")?;
+    let who = j.get("hello")?.as_str()?;
+    if who != "umup-worker" {
+        bail!("peer identifies as {who:?}, not an umup worker");
+    }
+    let proto = j.get("proto")?.as_f64()? as u64;
+    if proto != PROTO_VERSION {
+        bail!("worker speaks wire protocol {proto}, this engine speaks {PROTO_VERSION}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- jobs
+
+/// One decoded job frame — everything a worker process needs to
+/// reconstruct the run: the manifest by *name* (resolved against the
+/// worker's own artifact registry), the corpus by generator config
+/// (corpora are deterministic functions of it), and the full
+/// [`RunConfig`].
+pub struct WireJob {
+    /// The run's content address; replies must echo it.
+    pub key: String,
+    pub manifest: String,
+    pub corpus: CorpusConfig,
+    pub config: RunConfig,
+}
+
+/// Encode a job frame payload for `job` (content address `key`).
+pub fn encode_job(key: &str, job: &EngineJob) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("config".to_string(), job.config.canonical_json());
+    m.insert("corpus".to_string(), corpus_json(&job.corpus.config));
+    m.insert("key".to_string(), Json::Str(key.to_string()));
+    m.insert("label".to_string(), Json::Str(job.config.label.clone()));
+    m.insert("manifest".to_string(), Json::Str(job.manifest.name.clone()));
+    Json::Obj(m).dump()
+}
+
+/// Decode a job frame payload.
+pub fn decode_job(line: &str) -> Result<WireJob> {
+    let j = Json::parse(line).context("parsing wire job frame")?;
+    let key = j.get("key")?.as_str()?.to_string();
+    let manifest = j.get("manifest")?.as_str()?.to_string();
+    let label = j.get("label")?.as_str()?;
+    let c = j.get("corpus")?;
+    let corpus = CorpusConfig {
+        vocab: c.get("vocab")?.as_usize()?,
+        n_tokens: c.get("n_tokens")?.as_usize()?,
+        seed: c.get("seed")?.as_f64()? as u64,
+        zipf_s: c.get("zipf_s")?.as_f64()?,
+        k_succ: c.get("k_succ")?.as_usize()?,
+        smoothing: c.get("smoothing")?.as_f64()?,
+        valid_frac: c.get("valid_frac")?.as_f64()?,
+    };
+    let config = RunConfig::from_canonical_json(j.get("config")?, label)?;
+    Ok(WireJob { key, manifest, corpus, config })
+}
+
+// -------------------------------------------------------------- replies
+
+/// One decoded reply frame.
+pub enum WireReply {
+    /// The job completed; `record` is what the parent persists.
+    Record { key: String, record: RunRecord },
+    /// The job failed *in the child* (the child itself is healthy).
+    Error { key: String, error: String },
+}
+
+/// Encode a success reply — byte-identical to the run-cache line codec.
+pub fn ok_reply_line(key: &str, manifest: &str, record: &RunRecord) -> String {
+    entry_line(key, manifest, now_ts(), record)
+}
+
+/// Encode a job-failure reply.
+pub fn err_reply_line(key: &str, error: &str) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("error".to_string(), Json::Str(error.to_string()));
+    m.insert("key".to_string(), Json::Str(key.to_string()));
+    Json::Obj(m).dump()
+}
+
+/// Decode a reply frame payload.
+pub fn decode_reply(line: &str) -> Result<WireReply> {
+    let j = Json::parse(line).context("parsing worker reply frame")?;
+    if let Ok(e) = j.get("error") {
+        let key = match j.get("key") {
+            Ok(k) => k.as_str().unwrap_or("?").to_string(),
+            Err(_) => "?".to_string(),
+        };
+        return Ok(WireReply::Error { key, error: e.as_str()?.to_string() });
+    }
+    let entry = parse_full_entry(line).context("parsing worker reply as a cache line")?;
+    Ok(WireReply::Record { key: entry.key, record: entry.record })
+}
+
+// --------------------------------------------------------------- serve
+
+/// A worker process's main loop: write the hello frame, then answer job
+/// frames with reply frames until the parent hangs up (EOF).  `exec`
+/// failures become error replies (the loop continues); protocol
+/// failures — unparseable frames — return `Err`, and the process
+/// should exit nonzero so the parent's supervisor restarts it.
+///
+/// The XLA `repro worker` serves through this function.  The `--mock`
+/// worker hand-rolls the same frame sequence in `main.rs` instead
+/// (its env-armed failure injection needs raw access to the output
+/// stream between decode and reply) — any change to the frame shapes
+/// here must be mirrored there, and the byte-identity suite in
+/// `tests/backend.rs` will catch a divergence.
+pub fn serve<R, W, F>(mut input: R, mut output: W, mut exec: F) -> Result<()>
+where
+    R: BufRead,
+    W: Write,
+    F: FnMut(&WireJob) -> Result<RunRecord>,
+{
+    write_frame(&mut output, &hello_line())?;
+    while let Some(line) = read_frame(&mut input)? {
+        let job = decode_job(&line)?;
+        let reply = match exec(&job) {
+            Ok(record) => ok_reply_line(&job.key, &job.manifest, &record),
+            Err(e) => err_reply_line(&job.key, &format!("{e:#}")),
+        };
+        write_frame(&mut output, &reply)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use std::io::Cursor;
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::data::Corpus;
+    use crate::parametrization::{HpSet, Parametrization, Scheme};
+    use crate::runtime::{Manifest, Spec};
+
+    fn frame_roundtrip(payload: &str) -> String {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, payload).unwrap();
+        let mut r = Cursor::new(buf);
+        read_frame(&mut r).unwrap().expect("one frame in, one frame out")
+    }
+
+    #[test]
+    fn frames_round_trip_including_embedded_newlines_length() {
+        for payload in ["", "x", "{\"a\":1}", "päylöad"] {
+            assert_eq!(frame_roundtrip(payload), payload);
+        }
+        // two frames back to back, then clean EOF
+        let mut buf = Vec::new();
+        write_frame(&mut buf, "one").unwrap();
+        write_frame(&mut buf, "two").unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap().as_deref(), Some("one"));
+        assert_eq!(read_frame(&mut r).unwrap().as_deref(), Some("two"));
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn garbage_and_torn_frames_are_errors_not_hangs() {
+        // garbage prefix
+        let mut r = Cursor::new(b"this is not a frame\n".to_vec());
+        assert!(read_frame(&mut r).is_err());
+        // truncated payload (prefix promises more bytes than exist)
+        let mut r = Cursor::new(b"100\n{\"half\":".to_vec());
+        assert!(read_frame(&mut r).is_err());
+        // missing terminator (payload followed by the wrong byte)
+        let mut r = Cursor::new(b"2\nabX".to_vec());
+        assert!(read_frame(&mut r).is_err());
+        // absurd length
+        let mut r = Cursor::new(format!("{}\n", usize::MAX).into_bytes());
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn hello_line_validates_and_rejects_imposters() {
+        check_hello(&hello_line()).unwrap();
+        assert!(check_hello("{\"hello\":\"someone-else\",\"proto\":1}").is_err());
+        assert!(check_hello("{\"hello\":\"umup-worker\",\"proto\":999}").is_err());
+        assert!(check_hello("usage: repro <command>").is_err());
+    }
+
+    #[test]
+    fn job_frames_round_trip_config_corpus_and_label() {
+        let man = Arc::new(Manifest {
+            name: "w32_test".to_string(),
+            dir: std::path::PathBuf::from("."),
+            spec: Spec {
+                width: 32,
+                depth: 2,
+                batch: 4,
+                seq: 16,
+                vocab: 64,
+                head_dim: 16,
+                trainable_norms: false,
+            },
+            tensors: vec![],
+            n_params: 0,
+            state_ext_len: 1,
+            loss_offset: 0,
+            rms_offset: 1,
+            scale_sites: std::collections::BTreeMap::new(),
+            n_scale_sites: 0,
+            quant_sites: std::collections::BTreeMap::new(),
+            n_quant_sites: 0,
+            rms_sites: vec![],
+        });
+        let corpus = Arc::new(Corpus {
+            config: CorpusConfig { vocab: 64, n_tokens: 12345, seed: 9, ..Default::default() },
+            tokens: vec![],
+            n_train: 0,
+        });
+        let mut config = RunConfig::quick(
+            "wire-label",
+            Parametrization::new(Scheme::Umup),
+            HpSet::with_eta(0.375),
+            16,
+        );
+        config.seed = 42;
+        config.lr_tweaks = vec![("emb".to_string(), 4.0)];
+        let job = EngineJob {
+            manifest: Arc::clone(&man),
+            corpus: Arc::clone(&corpus),
+            config,
+            tag: vec![],
+        };
+        let line = encode_job("00aabbccddeeff11", &job);
+        let back = decode_job(&line).unwrap();
+        assert_eq!(back.key, "00aabbccddeeff11");
+        assert_eq!(back.manifest, "w32_test");
+        assert_eq!(back.corpus.n_tokens, 12345);
+        assert_eq!(back.corpus.seed, 9);
+        assert_eq!(back.config.label, "wire-label");
+        // the decoded config is content-identical: same canonical form
+        assert_eq!(back.config.canonical_json().dump(), job.config.canonical_json().dump());
+    }
+
+    #[test]
+    fn replies_round_trip_through_the_cache_codec() {
+        let record = RunRecord {
+            label: "r".to_string(),
+            train_curve: vec![(1, 3.5), (8, 2.5)],
+            valid_curve: vec![(8, 2.5)],
+            final_valid_loss: 2.5,
+            rms_curves: std::collections::BTreeMap::new(),
+            final_rms: vec![("w.head".to_string(), 1.0)],
+            diverged: false,
+            wall_seconds: 0.01,
+        };
+        let line = ok_reply_line("deadbeefdeadbeef", "w32", &record);
+        match decode_reply(&line).unwrap() {
+            WireReply::Record { key, record: back } => {
+                assert_eq!(key, "deadbeefdeadbeef");
+                assert_eq!(back, record);
+            }
+            WireReply::Error { .. } => panic!("ok reply decoded as error"),
+        }
+        match decode_reply(&err_reply_line("deadbeefdeadbeef", "boom")).unwrap() {
+            WireReply::Error { key, error } => {
+                assert_eq!(key, "deadbeefdeadbeef");
+                assert_eq!(error, "boom");
+            }
+            WireReply::Record { .. } => panic!("error reply decoded as record"),
+        }
+        assert!(decode_reply("not json at all").is_err());
+    }
+}

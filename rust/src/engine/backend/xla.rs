@@ -1,0 +1,62 @@
+//! The in-process XLA backend: each worker owns an LRU pool of
+//! compiled PJRT sessions.
+//!
+//! This is the default production path (`Engine::new`).  Sessions are
+//! `!Send`, so they live inside the executor — created on the worker's
+//! thread, compiled on first use per (worker, manifest), LRU-evicted
+//! past the configured cap, and amortized across every submission the
+//! engine ever sees.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::Session;
+use crate::train::{RunRecord, Runner};
+
+use super::super::job::EngineJob;
+use super::super::lru::LruPool;
+use super::{Backend, Capabilities, Executor};
+
+/// The in-process execution backend: jobs run on this process's XLA
+/// sessions, pooled per worker.
+pub struct XlaBackend {
+    max_sessions_per_worker: usize,
+}
+
+impl XlaBackend {
+    /// A backend whose workers each hold up to `max_sessions_per_worker`
+    /// compiled sessions (LRU-evicted beyond that).
+    pub fn new(max_sessions_per_worker: usize) -> XlaBackend {
+        XlaBackend { max_sessions_per_worker: max_sessions_per_worker.max(1) }
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &str {
+        "in-process"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities { session_affinity: true, out_of_process: false }
+    }
+
+    fn spawn_executor(&self, _worker_id: usize) -> Box<dyn Executor> {
+        Box::new(XlaExecutor { sessions: LruPool::new(self.max_sessions_per_worker) })
+    }
+}
+
+struct XlaExecutor {
+    sessions: LruPool<Runner>,
+}
+
+impl Executor for XlaExecutor {
+    fn run(&mut self, job: &EngineJob, _key: &str) -> Result<RunRecord> {
+        let runner = self.sessions.get_or_create(&job.manifest.name, || {
+            let session = Session::open(Arc::clone(&job.manifest))
+                .with_context(|| format!("opening worker session for {}", job.manifest.name))?;
+            Ok(Runner::new(Arc::new(session)))
+        })?;
+        runner.run(&job.config, &job.corpus)
+    }
+}

@@ -79,8 +79,11 @@ use crate::train::{RunConfig, RunRecord};
 use crate::util::hash::fnv1a64;
 use crate::util::Json;
 
-/// Canonical form of the corpus generator config (sorted keys).
-fn corpus_json(c: &CorpusConfig) -> Json {
+/// Canonical form of the corpus generator config (sorted keys).  Also
+/// the `corpus` field of a worker wire-protocol job frame (see
+/// `crate::engine::backend::wire`), so key hashing and the wire agree
+/// on what a corpus *is*.
+pub(crate) fn corpus_json(c: &CorpusConfig) -> Json {
     let mut m = BTreeMap::new();
     m.insert("vocab".to_string(), Json::Num(c.vocab as f64));
     m.insert("n_tokens".to_string(), Json::Num(c.n_tokens as f64));
@@ -306,7 +309,7 @@ impl Drop for SegmentLock {
 /// Completion timestamp for new cache lines: unix seconds, overridable
 /// via `UMUP_CACHE_TS` (the deterministic test harness pins it so whole
 /// segments become byte-for-byte reproducible).
-fn now_ts() -> u64 {
+pub(crate) fn now_ts() -> u64 {
     if let Ok(v) = std::env::var("UMUP_CACHE_TS") {
         if let Ok(ts) = v.trim().parse::<u64>() {
             return ts;
@@ -319,8 +322,10 @@ fn now_ts() -> u64 {
 }
 
 /// Serialize one cache line (the canonical, sorted-key form; also the
-/// compaction output, so merged caches round-trip byte-identically).
-fn entry_line(key: &str, manifest: &str, ts: u64, record: &RunRecord) -> String {
+/// compaction output, so merged caches round-trip byte-identically —
+/// and the worker wire protocol's success-reply codec, so the wire
+/// format is the cache format).
+pub(crate) fn entry_line(key: &str, manifest: &str, ts: u64, record: &RunRecord) -> String {
     let mut obj = BTreeMap::new();
     obj.insert("key".to_string(), Json::Str(key.to_string()));
     obj.insert("manifest".to_string(), Json::Str(manifest.to_string()));
@@ -331,14 +336,14 @@ fn entry_line(key: &str, manifest: &str, ts: u64, record: &RunRecord) -> String 
 
 /// One parsed cache line.  `ts` is 0 for pre-lifecycle lines (treated as
 /// arbitrarily old by age-based GC).
-struct Entry {
-    key: String,
-    manifest: String,
-    ts: u64,
-    record: RunRecord,
+pub(crate) struct Entry {
+    pub(crate) key: String,
+    pub(crate) manifest: String,
+    pub(crate) ts: u64,
+    pub(crate) record: RunRecord,
 }
 
-fn parse_full_entry(line: &str) -> Result<Entry> {
+pub(crate) fn parse_full_entry(line: &str) -> Result<Entry> {
     let j = Json::parse(line)?;
     let key = j.get("key")?.as_str()?.to_string();
     let manifest = j.get("manifest")?.as_str()?.to_string();

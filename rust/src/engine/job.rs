@@ -23,6 +23,14 @@ pub struct EngineJob {
     pub tag: Vec<(String, f64)>,
 }
 
+impl EngineJob {
+    /// This job's content address — the run-cache key and the identity
+    /// carried on the worker wire protocol.
+    pub fn key(&self) -> String {
+        crate::engine::run_key(&self.manifest.name, &self.corpus, &self.config)
+    }
+}
+
 /// A manifest-agnostic sweep job: the caller supplies the manifest and
 /// corpus once for the whole batch (`Engine::run_sweep`).
 #[derive(Debug, Clone)]

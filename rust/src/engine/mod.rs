@@ -54,6 +54,41 @@
 //! same cache dir (stale segment locks are reclaimed on restart), and
 //! streams merged progress — one command instead of N terminals.
 //!
+//! # Execution backends
+//!
+//! *Where* jobs run is a first-class seam: the [`backend`] module's
+//! [`Backend`] trait.  An engine is constructed over a backend
+//! ([`Engine::with_backend`]); each worker thread asks it for a
+//! private [`Executor`] (created on the worker's own thread, so it may
+//! own `!Send` state), and everything above — submission, dedup,
+//! sharding, priorities, the run cache — is backend-agnostic.  Three
+//! implementations ship:
+//!
+//! * `XlaBackend` (the default behind `Engine::new`; needs the `xla`
+//!   feature): in-process execution on per-worker [`LruPool`]s of
+//!   compiled XLA sessions.
+//! * [`MockBackend`]: closure-driven executors for tests and benches
+//!   (CLI: `--backend mock`, which uses the canonical deterministic
+//!   mock).
+//! * [`ProcessBackend`] (CLI: `--backend process`): each worker slot
+//!   owns a spawned `repro worker` child speaking a length-prefixed
+//!   JSONL protocol over stdin/stdout, where the success reply *is*
+//!   the run-cache line codec — wire format == cache format.  Child
+//!   crashes are supervised per worker slot: bounded restart budget,
+//!   the in-flight job re-dispatched once, then reported as a normal
+//!   per-job `Err` outcome.  Child stderr is teed into the parent's
+//!   log with a `[worker k]` prefix.
+//!
+//! Contract points that hold for *every* backend: outcomes are
+//! persisted to the run cache by the engine worker **before** they are
+//! reported (so a dropped handle never loses completed work, and a
+//! consumer that sees an outcome may rely on the cache); executor
+//! errors and panics are per-job, never fatal to the engine; and the
+//! scheduler queries [`Backend::capabilities`] once — a backend
+//! without per-manifest warm state opts out of affinity tracking and
+//! gets plain priority+FIFO dispatch.  A future network/cluster
+//! backend is one more trait impl; no engine core changes.
+//!
 //! # Everything underneath (unchanged contracts)
 //!
 //! * **Per-worker session pools with LRU eviction** ([`LruPool`]):
@@ -69,6 +104,7 @@
 //!   workers persist results before reporting them, so dropping a
 //!   handle abandons notifications, never completed work.
 
+pub mod backend;
 pub mod cache;
 pub mod driver;
 mod handle;
@@ -78,6 +114,9 @@ mod pool;
 mod sched;
 
 pub use crate::util::hash::fnv1a64;
+#[cfg(feature = "xla")]
+pub use backend::XlaBackend;
+pub use backend::{det_record, Backend, Capabilities, Executor, MockBackend, ProcessBackend};
 pub use cache::{
     gc, list_segments, parse_bytes, parse_duration, run_key, stats, CacheStats, GcOptions,
     GcReport, RunCache, SegmentStats, Shard,
@@ -95,9 +134,7 @@ use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex, MutexGuard};
 
-#[cfg(feature = "xla")]
-use anyhow::Context;
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::data::Corpus;
 use crate::runtime::Manifest;
@@ -105,7 +142,7 @@ use crate::runtime::Manifest;
 use crate::runtime::Session;
 use crate::train::RunConfig;
 #[cfg(feature = "xla")]
-use crate::train::{RunRecord, Runner};
+use crate::train::Runner;
 
 use pool::WorkerPool;
 use sched::Scheduler;
@@ -209,35 +246,31 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// An engine whose workers run jobs on real XLA sessions, compiled
-    /// on first use per (worker, manifest) and LRU-pooled thereafter.
+    /// An engine over the default in-process [`XlaBackend`]: jobs run
+    /// on real XLA sessions, compiled on first use per (worker,
+    /// manifest) and LRU-pooled thereafter.
     #[cfg(feature = "xla")]
     pub fn new(cfg: EngineConfig) -> Result<Engine> {
-        let cap = cfg.max_sessions_per_worker.max(1);
-        Self::with_factory(cfg, move |_worker| {
-            let mut sessions: LruPool<Runner> = LruPool::new(cap);
-            Box::new(move |job: &EngineJob| -> Result<RunRecord> {
-                let runner = sessions.get_or_create(&job.manifest.name, || {
-                    let session = Session::open(Arc::clone(&job.manifest)).with_context(
-                        || format!("opening worker session for {}", job.manifest.name),
-                    )?;
-                    Ok(Runner::new(Arc::new(session)))
-                })?;
-                runner.run(&job.config, &job.corpus)
-            })
-        })
+        let backend = Arc::new(XlaBackend::new(cfg.max_sessions_per_worker));
+        Self::with_backend(cfg, backend)
     }
 
-    /// Build an engine with a custom per-worker executor factory.
+    /// Build an engine over an explicit execution [`Backend`] — the
+    /// seam behind `Engine::new` (`XlaBackend`), the test/bench
+    /// harnesses ([`MockBackend`]), and out-of-process fleets
+    /// ([`ProcessBackend`]); embedders implement the trait to plug in
+    /// remote execution.
     ///
-    /// This is the seam the engine tests and benches use to exercise
-    /// queueing, deduplication, caching, sharding and failure handling
-    /// without XLA artifacts; embedders can use it to plug in remote
-    /// execution.
-    pub fn with_factory<F>(cfg: EngineConfig, factory: F) -> Result<Engine>
-    where
-        F: Fn(usize) -> JobExec + Send + Sync + 'static,
-    {
+    /// The backend's [`Backend::health`] probe runs here, once, so a
+    /// broken backend (missing worker binary, bad artifact path) fails
+    /// construction instead of every job; its
+    /// [`Backend::capabilities`] are queried once to configure the
+    /// scheduler.
+    pub fn with_backend(cfg: EngineConfig, backend: Arc<dyn Backend>) -> Result<Engine> {
+        backend
+            .health()
+            .with_context(|| format!("{} backend failed its health probe", backend.name()))?;
+        let caps = backend.capabilities();
         let cache = match &cfg.cache_dir {
             Some(dir) => RunCache::open_sharded(dir, cfg.shard, cfg.resume)?,
             None => RunCache::in_memory(),
@@ -247,9 +280,13 @@ impl Engine {
             stats: Mutex::new(EngineStats::default()),
             shard: cfg.shard,
         });
-        let sched = Arc::new(Scheduler::new(cfg.workers, cfg.max_sessions_per_worker.max(1)));
+        let sched = Arc::new(Scheduler::new(
+            cfg.workers,
+            cfg.max_sessions_per_worker.max(1),
+            caps.session_affinity,
+        ));
         let pool =
-            WorkerPool::new(cfg.workers, factory, Arc::clone(&sched), Arc::clone(&shared));
+            WorkerPool::new(cfg.workers, backend, Arc::clone(&sched), Arc::clone(&shared));
         Ok(Engine {
             shared,
             sched,
@@ -257,6 +294,19 @@ impl Engine {
             #[cfg(feature = "xla")]
             local: RefCell::new(HashMap::new()),
         })
+    }
+
+    /// Build an engine with a bare per-worker executor-closure factory.
+    #[deprecated(
+        since = "0.2.0",
+        note = "wrap the factory in `MockBackend::new` (or implement `Backend`) and use \
+                `Engine::with_backend`"
+    )]
+    pub fn with_factory<F>(cfg: EngineConfig, factory: F) -> Result<Engine>
+    where
+        F: Fn(usize) -> JobExec + Send + Sync + 'static,
+    {
+        Self::with_backend(cfg, Arc::new(MockBackend::new(factory)))
     }
 
     /// Does this engine's shard own the run with content address `key`?
@@ -290,8 +340,7 @@ impl Engine {
     /// work is paid).
     pub fn submit_with(&self, jobs: Vec<EngineJob>, opts: SubmitOptions) -> SweepHandle {
         let n = jobs.len();
-        let keys: Vec<String> =
-            jobs.iter().map(|j| run_key(&j.manifest.name, &j.corpus, &j.config)).collect();
+        let keys: Vec<String> = jobs.iter().map(|j| j.key()).collect();
         let (tx, rx) = mpsc::channel();
         let ctl = self.sched.new_submission();
 

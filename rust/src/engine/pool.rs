@@ -1,15 +1,15 @@
 //! Persistent worker threads for the engine.
 //!
-//! The `xla` crate's PJRT handles are `Rc`-based (`!Send`), so compiled
-//! sessions can never migrate between threads.  The pool therefore keeps
-//! N long-lived workers, each of which builds its *own* executor state
-//! (in production: a `manifest name -> Session` map, see
-//! `Engine::new`) via the factory closure and pulls work from the
-//! shared [`Scheduler`] — which hands each worker manifest-affine job
-//! streams (see the scheduler docs), so cross-shape sweeps stop
-//! thrashing the per-worker session pools.  Because the workers outlive
-//! individual submissions, XLA compiles are amortized across
-//! experiments, not just within one sweep.
+//! Each of the N long-lived workers asks the engine's [`Backend`] for
+//! its own [`Executor`] (created *inside* the worker thread, so it may
+//! own `!Send` state — XLA PJRT handles are `Rc`-based, and a child
+//! process's pipes are single-owner) and pulls work from the shared
+//! [`Scheduler`] — which hands each worker manifest-affine job streams
+//! when the backend advertises per-manifest warm state (see the
+//! scheduler docs), so cross-shape sweeps stop thrashing the per-worker
+//! session pools.  Because the workers outlive individual submissions,
+//! executor state (compiled sessions, worker children) is amortized
+//! across experiments, not just within one sweep.
 //!
 //! Results are persisted to the shared run cache *by the worker*, before
 //! the outcome is reported to the submitting handle: a caller that drops
@@ -32,52 +32,49 @@ use anyhow::Result;
 
 use crate::train::RunRecord;
 
+use super::backend::{Backend, Executor as _};
 use super::job::EngineJob;
 use super::sched::{Reply, Scheduler};
 use super::{lock, Shared};
 
-/// A per-worker job executor.  It is created *inside* the worker thread,
-/// so it may own `!Send` state (XLA sessions).
+/// A per-worker job executor closure — the payload of
+/// [`crate::engine::MockBackend`] and the deprecated
+/// `Engine::with_factory` shim.  It is created *inside* the worker
+/// thread, so it may own `!Send` state.
 pub type JobExec = Box<dyn FnMut(&EngineJob) -> Result<RunRecord>>;
 
 pub(crate) struct WorkerPool {
     sched: Arc<Scheduler>,
+    backend: Arc<dyn Backend>,
     handles: Vec<JoinHandle<()>>,
 }
 
 impl WorkerPool {
-    pub fn new<F>(
+    pub fn new(
         workers: usize,
-        factory: F,
+        backend: Arc<dyn Backend>,
         sched: Arc<Scheduler>,
         shared: Arc<Shared>,
-    ) -> WorkerPool
-    where
-        F: Fn(usize) -> JobExec + Send + Sync + 'static,
-    {
-        let factory = Arc::new(factory);
+    ) -> WorkerPool {
         let handles = (0..workers.max(1))
             .map(|w| {
                 let sched = Arc::clone(&sched);
                 let shared = Arc::clone(&shared);
-                let factory = Arc::clone(&factory);
-                std::thread::spawn(move || worker_loop(w, &sched, &shared, &*factory))
+                let backend = Arc::clone(&backend);
+                std::thread::spawn(move || worker_loop(w, &sched, &shared, &*backend))
             })
             .collect();
-        WorkerPool { sched, handles }
+        WorkerPool { sched, backend, handles }
     }
 }
 
-fn worker_loop<F>(w: usize, sched: &Scheduler, shared: &Shared, factory: &F)
-where
-    F: Fn(usize) -> JobExec,
-{
-    let mut exec = factory(w);
+fn worker_loop(w: usize, sched: &Scheduler, shared: &Shared, backend: &dyn Backend) {
+    let mut exec = backend.spawn_executor(w);
     while let Some(task) = sched.next_for(w) {
         // AssertUnwindSafe: worst case a panic leaves the executor's
         // session pool with a half-inserted entry, which is rebuilt on
         // the next miss — strictly better than losing the worker.
-        let result = match catch_unwind(AssertUnwindSafe(|| exec(&task.job))) {
+        let result = match catch_unwind(AssertUnwindSafe(|| exec.run(&task.job, &task.key))) {
             Ok(Ok(record)) => {
                 // persist before reporting, so a consumer that sees the
                 // outcome may rely on the cache already holding it
@@ -117,10 +114,13 @@ fn panic_msg(payload: &(dyn std::any::Any + Send)) -> &str {
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        // hang up: workers drain the remaining queue, then exit
+        // hang up: workers drain the remaining queue, then exit (each
+        // dropping its executor), then the backend's fleet-level
+        // teardown hook runs
         self.sched.shutdown();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+        self.backend.shutdown();
     }
 }

@@ -22,6 +22,12 @@
 //! * **FIFO last.**  Ties break by submission order, so equal-priority
 //!   same-warmness work drains in the order callers queued it.
 //!
+//! Affinity tracking is capability-gated: a backend that advertises no
+//! per-manifest warm state (`Capabilities::session_affinity == false`)
+//! gets plain priority+FIFO dispatch with no warm mirror and no
+//! hit/steal accounting — the scheduler asks the backend, not the
+//! other way around.
+//!
 //! Hit/steal totals are surfaced through
 //! [`crate::engine::EngineStats::pool_hits`] /
 //! [`EngineStats::pool_steals`](crate::engine::EngineStats::pool_steals):
@@ -97,6 +103,11 @@ struct SchedState {
     /// worker's session pool at `warm_cap` entries.
     warm: Vec<Vec<String>>,
     warm_cap: usize,
+    /// Whether the engine's backend keeps per-manifest warm state worth
+    /// scheduling around (`Capabilities::session_affinity`).  When
+    /// false the scheduler dispatches plain priority+FIFO: no warm
+    /// mirror is maintained and no hits/steals are counted.
+    affinity: bool,
     hits: u64,
     steals: u64,
     cancelled: u64,
@@ -111,12 +122,13 @@ pub(crate) struct Scheduler {
 }
 
 impl Scheduler {
-    pub(crate) fn new(workers: usize, warm_cap: usize) -> Scheduler {
+    pub(crate) fn new(workers: usize, warm_cap: usize, affinity: bool) -> Scheduler {
         Scheduler {
             state: Mutex::new(SchedState {
                 queue: Vec::new(),
                 warm: vec![Vec::new(); workers.max(1)],
                 warm_cap: warm_cap.max(1),
+                affinity,
                 hits: 0,
                 steals: 0,
                 cancelled: 0,
@@ -161,11 +173,13 @@ impl Scheduler {
         loop {
             if let Some(i) = pick(&state, w) {
                 let task = state.queue.remove(i);
-                let was_warm = touch_warm(&mut state, w, &task.job.manifest.name);
-                if was_warm {
-                    state.hits += 1;
-                } else {
-                    state.steals += 1;
+                if state.affinity {
+                    let was_warm = touch_warm(&mut state, w, &task.job.manifest.name);
+                    if was_warm {
+                        state.hits += 1;
+                    } else {
+                        state.steals += 1;
+                    }
                 }
                 return Some(task);
             }
@@ -214,7 +228,7 @@ impl Scheduler {
 fn pick(state: &SchedState, w: usize) -> Option<usize> {
     let mut best: Option<(usize, (i32, bool, std::cmp::Reverse<u64>))> = None;
     for (i, t) in state.queue.iter().enumerate() {
-        let warm = state.warm[w].iter().any(|n| n == &t.job.manifest.name);
+        let warm = state.affinity && state.warm[w].iter().any(|n| n == &t.job.manifest.name);
         let score = (t.priority, warm, std::cmp::Reverse(t.seq));
         if best.as_ref().is_none_or(|(_, s)| score > *s) {
             best = Some((i, score));

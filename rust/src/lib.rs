@@ -17,8 +17,10 @@
 //! The PJRT runtime is behind the `xla` cargo feature (on by default).
 //! With `--no-default-features` everything pure still builds — the
 //! parametrization rules, sweep planning, the engine's sharded run
-//! cache and its `repro cache gc`/`stats` lifecycle, and the
-//! mock-executor test suites — which is what the no-XLA CI job checks.
+//! cache and its `repro cache gc`/`stats` lifecycle, the execution
+//! backend layer (`engine::backend`, including the `ProcessBackend`
+//! wire protocol and the `repro worker --mock` child), and the
+//! mock-backend test suites — which is what the no-XLA CI job checks.
 
 #[cfg(feature = "xla")]
 pub mod coordinator;

@@ -6,16 +6,26 @@
 //!   train [opts]                one training run
 //!   exp <id|all|list> [--quick] reproduce a paper figure/table
 //!   drive --shards n [exp opts] spawn/monitor/restart n shard processes
+//!   worker [--mock]             serve engine jobs over stdin/stdout
+//!                               (the child side of --backend process)
 //!   cache <stats|gc> [opts]     run-cache lifecycle (segments, GC)
 //!   report                      collate results/ into EXPERIMENTS-style md
+//!
+//! Execution backends: `train`/`exp`/`drive` take
+//! `--backend in-process|process|mock`.  `in-process` (default) runs
+//! jobs on this process's pooled XLA sessions; `process` spawns one
+//! `repro worker` child per engine worker slot and ships jobs over a
+//! length-prefixed JSONL pipe protocol (crash-supervised, bounded
+//! restarts); `mock` is the deterministic no-op executor used by tests
+//! and benches.
 //!
 //! Dependency-light by design (offline env): argument parsing is the
 //! in-tree `Args` helper below.
 //!
 //! Built with `--no-default-features`, the XLA runtime is absent and the
 //! execution subcommands (`check`/`train`/`exp`/`drive`) explain that;
-//! the pure subcommands (`rules`, `cache`, `report`, `corpus`) still
-//! work.
+//! the pure subcommands (`rules`, `cache`, `report`, `corpus`) and the
+//! mock worker (`worker --mock`) still work.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -85,6 +95,7 @@ fn main() -> Result<()> {
         "train" => train(&args),
         "exp" => exp(&args),
         "drive" => drive_cmd(&args),
+        "worker" => worker_cmd(&args),
         "cache" => cache_cmd(&args),
         "report" => report(&args),
         "corpus" => corpus_info(&args),
@@ -97,16 +108,27 @@ fn main() -> Result<()> {
                  \x20 check   [--artifacts artifacts]                     validate artifacts\n\
                  \x20 train   [--scheme umup] [--width 64] [--depth 4] [--batch 16]\n\
                  \x20         [--lr 0.5] [--steps 256] [--precision fp32|fp8|fp8-paper] [--seed 7]\n\
-                 \x20 exp     <id|all|list> [--quick] [--workers N] [--shard i/n]\n\
+                 \x20 exp     <id|all|list> [--quick] [--workers N] [--shard i/n] [--quiet]\n\
                  \x20                                                     reproduce figures/tables\n\
                  \x20 drive   <id|all> --shards N [--quick] [--workers N] [--out DIR]\n\
                  \x20                             spawn, monitor and restart the N shard\n\
                  \x20                             processes of `exp --shard` (one shared cache)\n\
+                 \x20 worker  [--mock] [--artifacts DIR] [--sessions N]   serve engine jobs on\n\
+                 \x20                             stdin/stdout (spawned by --backend process)\n\
                  \x20 cache   stats [--cache-dir DIR]                     segment/key statistics\n\
                  \x20 cache   gc    [--cache-dir DIR] [--older-than 30d] [--manifest NAME]\n\
                  \x20               [--max-bytes 512m] [--dry-run]        prune + compact segments\n\
                  \x20 report  [--out results]                             collate summaries\n\
                  \x20 corpus  [--vocab 256]                               corpus statistics\n\n\
+                 execution backends:\n\
+                 \x20 train/exp/drive take [--backend in-process|process|mock].  in-process\n\
+                 \x20 (default) runs jobs on this process's pooled XLA sessions.  process\n\
+                 \x20 spawns one `repro worker` child per engine worker slot and ships each\n\
+                 \x20 job over a length-prefixed JSONL stdin/stdout protocol (the reply is\n\
+                 \x20 the run-cache line itself); crashed children are restarted with a\n\
+                 \x20 bounded per-worker budget (--max-restarts, default 2), the in-flight\n\
+                 \x20 job is re-dispatched once, and child stderr is teed here with a\n\
+                 \x20 [worker k] prefix.  mock is the deterministic test executor.\n\n\
                  cache layout & lifecycle:\n\
                  \x20 train/exp take [--cache-dir DIR] [--resume].  --cache-dir records each\n\
                  \x20 completed run as one JSONL line, content-addressed by (manifest, corpus,\n\
@@ -216,12 +238,11 @@ fn train(args: &Args) -> Result<()> {
         ..Default::default()
     }));
     let (cache_dir, resume) = args.cache_opts();
-    let engine = Engine::new(EngineConfig {
-        workers: 1,
-        cache_dir,
-        resume,
-        ..EngineConfig::default()
-    })?;
+    let engine_cfg = EngineConfig { workers: 1, cache_dir, resume, ..EngineConfig::default() };
+    let engine = match make_backend(args, &args.get("artifacts", "artifacts"))? {
+        Some(backend) => Engine::with_backend(engine_cfg, backend)?,
+        None => Engine::new(engine_cfg)?,
+    };
     let mut cfg = RunConfig::quick(
         &format!("{}-{}", scheme.name(), precision.name()),
         Parametrization::new(scheme),
@@ -249,6 +270,9 @@ fn train(args: &Args) -> Result<()> {
         "final valid loss {:.4}  (diverged: {})  [{:.1}s]{cached}",
         rec.final_valid_loss, rec.diverged, rec.wall_seconds
     );
+    if !args.has("quiet") {
+        print_engine_stats(&engine);
+    }
     Ok(())
 }
 
@@ -283,14 +307,22 @@ fn exp(args: &Args) -> Result<()> {
              with the same command — progress merges automatically)"
         );
     }
-    let ctx = ExpContext::with_cache(
-        &args.get("artifacts", "artifacts"),
+    let artifacts = args.get("artifacts", "artifacts");
+    let backend = make_backend(args, &artifacts)?;
+    if let Some(b) = &backend {
+        if !args.has("quiet") {
+            println!("backend: {} ({} engine workers)", b.name(), workers);
+        }
+    }
+    let ctx = ExpContext::with_backend(
+        &artifacts,
         &out,
         args.has("quick"),
         workers,
         cache_dir,
         resume,
         shard,
+        backend,
     )?;
     // A sharded drain executes only this process's slice; when the
     // experiment next needs a foreign run, retry after merging in what
@@ -331,6 +363,11 @@ fn exp(args: &Args) -> Result<()> {
                             shard.expect("sharded branch"),
                             IDLE_TIMEOUT.as_secs()
                         );
+                        // the engine line stays observable even when a
+                        // sharded drain gives up waiting for siblings
+                        if !args.has("quiet") {
+                            print_engine_stats(&ctx.engine);
+                        }
                         return Err(e);
                     }
                     // full jitter in [backoff/2, backoff)
@@ -346,20 +383,9 @@ fn exp(args: &Args) -> Result<()> {
         run_experiment(&ctx, id)?
     };
     println!("{md}");
-    let s = ctx.engine.stats();
-    println!(
-        "engine: {} runs executed, {} cache hits, {} deduped, {} skipped, {} cancelled, \
-         {} failed ({} records cached; session affinity {} hits / {} steals)",
-        s.executed,
-        s.cache_hits,
-        s.deduped,
-        s.skipped,
-        s.cancelled,
-        s.failed,
-        ctx.engine.cache_len(),
-        s.pool_hits,
-        s.pool_steals
-    );
+    if !args.has("quiet") {
+        print_engine_stats(&ctx.engine);
+    }
     Ok(())
 }
 
@@ -416,6 +442,12 @@ fn drive_cmd(args: &Args) -> Result<()> {
         if quick {
             cmd.arg("--quick");
         }
+        // shard children inherit the execution backend: with
+        // `--backend process` each shard process runs its own worker
+        // fleet (shards x workers children in total)
+        if let Some(b) = args.flags.get("backend") {
+            cmd.arg("--backend").arg(b);
+        }
         cmd
     })?;
     println!(
@@ -426,6 +458,192 @@ fn drive_cmd(args: &Args) -> Result<()> {
         report.cache_entries
     );
     Ok(())
+}
+
+/// Build the execution backend selected by `--backend` (`None` = the
+/// default in-process XLA path), shared by `train` and `exp`.
+#[cfg(feature = "xla")]
+fn make_backend(
+    args: &Args,
+    artifacts: &str,
+) -> Result<Option<std::sync::Arc<dyn umup::engine::Backend>>> {
+    use std::sync::Arc;
+
+    use umup::engine::{MockBackend, ProcessBackend};
+
+    Ok(match args.get("backend", "in-process").as_str() {
+        "in-process" => None,
+        "process" => {
+            let max_restarts: usize =
+                args.get("max-restarts", "2").parse().context("bad --max-restarts")?;
+            // forward the engine's session cap so each child's LruPool
+            // matches the scheduler's warm-manifest mirror
+            let sessions = umup::engine::EngineConfig::default().max_sessions_per_worker;
+            Some(Arc::new(
+                ProcessBackend::repro_worker(artifacts, false, sessions)?
+                    .with_max_restarts(max_restarts),
+            ))
+        }
+        "mock" => Some(Arc::new(MockBackend::deterministic())),
+        other => bail!("unknown --backend {other:?} (expected in-process, process or mock)"),
+    })
+}
+
+/// One-line engine counters (runs/cache/dedup/affinity), printed after
+/// every non-quiet `train`/`exp` so backend comparisons are observable
+/// without `drive`.
+#[cfg(feature = "xla")]
+fn print_engine_stats(engine: &umup::engine::Engine) {
+    let s = engine.stats();
+    println!(
+        "engine: {} runs executed, {} cache hits, {} deduped, {} skipped, {} cancelled, \
+         {} failed ({} records cached; session affinity {} hits / {} steals)",
+        s.executed,
+        s.cache_hits,
+        s.deduped,
+        s.skipped,
+        s.cancelled,
+        s.failed,
+        engine.cache_len(),
+        s.pool_hits,
+        s.pool_steals
+    );
+}
+
+/// `repro worker`: serve the engine's wire protocol on stdin/stdout —
+/// the child side of `--backend process`.  The parent speaks
+/// length-prefixed JSON frames (see `umup::engine::backend::wire`); a
+/// success reply is the run-cache line codec itself.  `--mock` swaps
+/// the XLA executor for the canonical deterministic mock (works in
+/// no-XLA builds; used by the backend test suite and benches).
+fn worker_cmd(args: &Args) -> Result<()> {
+    if args.has("mock") {
+        return worker_mock_serve();
+    }
+    worker_xla_serve(args)
+}
+
+/// The deterministic mock worker loop, with env-armed failure injection
+/// for the robustness tests: `UMUP_MOCK_FAIL` picks a failure mode
+/// (`crash-before-reply`, `crash-after-reply`, `garbage`, `truncate`)
+/// and `UMUP_MOCK_FAIL_ONCE=<path>` arms it exactly once across a whole
+/// worker fleet (first child to atomically create the marker file
+/// fails; everyone else — including this child's own restart — serves
+/// normally).  Without `UMUP_MOCK_FAIL_ONCE` the mode fires on every
+/// job, which is how restart-budget exhaustion is exercised.
+fn worker_mock_serve() -> Result<()> {
+    use std::io::Write as _;
+
+    use umup::engine::backend::wire;
+    use umup::engine::det_record;
+
+    let fail_mode = std::env::var("UMUP_MOCK_FAIL").ok();
+    let claim_failure = || -> bool {
+        match std::env::var("UMUP_MOCK_FAIL_ONCE") {
+            Ok(path) => std::fs::OpenOptions::new()
+                .write(true)
+                .create_new(true)
+                .open(path)
+                .is_ok(),
+            Err(_) => true,
+        }
+    };
+
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut input = stdin.lock();
+    let mut output = stdout.lock();
+    wire::write_frame(&mut output, &wire::hello_line())?;
+    while let Some(line) = wire::read_frame(&mut input)? {
+        let job = wire::decode_job(&line)?;
+        // claim_failure's marker-file side effect only runs while a
+        // mode is armed (the && short-circuits on None)
+        if let Some(mode) = fail_mode.as_deref() {
+            if claim_failure() {
+                match mode {
+                    "crash-before-reply" => {
+                        eprintln!(
+                            "worker-mock: injected crash before replying to {}",
+                            job.config.label
+                        );
+                        std::process::exit(17);
+                    }
+                    "crash-after-reply" => {
+                        let rec = det_record(&job.config);
+                        let reply = wire::ok_reply_line(&job.key, &job.manifest, &rec);
+                        wire::write_frame(&mut output, &reply)?;
+                        eprintln!("worker-mock: injected exit between jobs");
+                        std::process::exit(0);
+                    }
+                    "garbage" => {
+                        eprintln!("worker-mock: injected garbage on stdout");
+                        output.write_all(b"** this is not a frame **\n")?;
+                        output.flush()?;
+                        // never reply; the parent declares us dead
+                        continue;
+                    }
+                    "truncate" => {
+                        eprintln!("worker-mock: injected truncated frame");
+                        output.write_all(b"4096\n{\"to")?;
+                        output.flush()?;
+                        std::process::exit(0);
+                    }
+                    other => bail!("unknown UMUP_MOCK_FAIL mode {other:?}"),
+                }
+            }
+        }
+        let rec = det_record(&job.config);
+        wire::write_frame(&mut output, &wire::ok_reply_line(&job.key, &job.manifest, &rec))?;
+    }
+    Ok(())
+}
+
+/// The real worker loop: resolve each wire job against this process's
+/// own artifact registry / corpus cache / LRU session pool and train.
+#[cfg(feature = "xla")]
+fn worker_xla_serve(args: &Args) -> Result<()> {
+    use std::collections::HashMap;
+    use std::sync::Arc;
+
+    use umup::engine::backend::wire;
+    use umup::engine::LruPool;
+    use umup::runtime::Session;
+    use umup::train::Runner;
+
+    // open the registry *before* the hello frame: a bad --artifacts
+    // path kills the handshake (and therefore the parent's health
+    // probe) instead of the first job
+    let reg = Registry::open(Path::new(&args.get("artifacts", "artifacts")))?;
+    let cap: usize = args.get("sessions", "8").parse().context("bad --sessions")?;
+    let mut sessions: LruPool<Runner> = LruPool::new(cap);
+    // corpora are deterministic functions of their generator config;
+    // cache them per config like the parent's ExpContext does
+    let mut corpora: HashMap<String, Arc<Corpus>> = HashMap::new();
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    wire::serve(stdin.lock(), stdout.lock(), |job| {
+        let man = reg.manifest(&job.manifest)?;
+        let corpus = Arc::clone(
+            corpora
+                .entry(format!("{:?}", job.corpus))
+                .or_insert_with(|| Arc::new(Corpus::generate(job.corpus.clone()))),
+        );
+        let runner = sessions.get_or_create(&job.manifest, || {
+            let session = Session::open(Arc::clone(&man)).with_context(|| {
+                format!("opening worker session for {}", job.manifest)
+            })?;
+            Ok(Runner::new(Arc::new(session)))
+        })?;
+        runner.run(&job.config, &corpus)
+    })
+}
+
+#[cfg(not(feature = "xla"))]
+fn worker_xla_serve(_args: &Args) -> Result<()> {
+    bail!(
+        "`repro worker` without --mock needs the XLA runtime; rebuild without \
+         --no-default-features (or pass --mock for the deterministic test executor)"
+    )
 }
 
 #[cfg(not(feature = "xla"))]

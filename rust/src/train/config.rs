@@ -1,14 +1,16 @@
 //! Run configuration: what one training run is, independent of how it
 //! executes.
 //!
-//! Split from the [`super::runner`] module (which drives real XLA
+//! Split from the `super::runner` module (which drives real XLA
 //! sessions and is gated behind the `xla` feature) so the engine's
 //! content-addressed cache — whose keys hash
 //! [`RunConfig::canonical_json`] — works in no-XLA builds too
 //! (`repro cache gc`/`stats`, CI check builds, the mock-executor test
 //! harness).
 
-use crate::parametrization::{EmbLrRule, HpSet, Parametrization, Precision, HP_NAMES};
+use anyhow::{bail, Context, Result};
+
+use crate::parametrization::{EmbLrRule, HpSet, Parametrization, Precision, Scheme, HP_NAMES};
 use crate::train::{AdamConfig, Schedule, ScheduleKind};
 use crate::util::Json;
 
@@ -127,5 +129,170 @@ impl RunConfig {
             ),
         );
         Json::Obj(m)
+    }
+
+    /// Decode a config serialized by [`RunConfig::canonical_json`] —
+    /// the worker wire protocol's job payload.  The canonical form
+    /// deliberately excludes the presentation-only `label`, so it is
+    /// supplied separately (the wire carries it alongside).
+    ///
+    /// Round-trip invariant:
+    /// `from_canonical_json(cfg.canonical_json(), label)` yields a
+    /// config whose own `canonical_json` dump is byte-identical — which
+    /// is what keeps a process-backend drain's cache byte-identical to
+    /// an in-process one.
+    pub fn from_canonical_json(j: &Json, label: &str) -> Result<RunConfig> {
+        let p = j.get("parametrization").context("config missing parametrization")?;
+        let scheme_name = p.get("scheme")?.as_str()?;
+        let scheme = Scheme::parse(scheme_name)
+            .with_context(|| format!("unknown scheme {scheme_name:?}"))?;
+        let mut parametrization = Parametrization::new(scheme);
+        parametrization.base_width = p.get("base_width")?.as_usize()?;
+        parametrization.base_depth = p.get("base_depth")?.as_usize()?;
+        parametrization.emb_lr_rule = match p.get("emb_lr_rule")?.as_str()? {
+            "constant" => EmbLrRule::Constant,
+            "inv-sqrt-fan-out" => EmbLrRule::InvSqrtFanOut,
+            other => bail!("unknown emb_lr_rule {other:?}"),
+        };
+        parametrization.depth_mup = p.get("depth_mup")?.as_bool()?;
+
+        let mut hp = HpSet::default();
+        let h = j.get("hp")?;
+        for name in HP_NAMES {
+            hp.set(name, h.get(name)?.as_f64()?);
+        }
+
+        let sch = j.get("schedule")?;
+        let kind = match sch.get("kind")?.as_str()? {
+            "constant" => ScheduleKind::Constant,
+            "cosine-to" => ScheduleKind::CosineTo(sch.get("kind_arg")?.as_f64()?),
+            "linear-to-zero" => ScheduleKind::LinearToZero,
+            other => bail!("unknown schedule kind {other:?}"),
+        };
+        let schedule = Schedule {
+            kind,
+            peak_lr: sch.get("peak_lr")?.as_f64()?,
+            warmup_steps: sch.get("warmup_steps")?.as_f64()? as u64,
+            total_steps: sch.get("total_steps")?.as_f64()? as u64,
+        };
+
+        let a = j.get("adam")?;
+        let adam = AdamConfig {
+            beta1: a.get("beta1")?.as_f64()?,
+            beta2: a.get("beta2")?.as_f64()?,
+            eps: a.get("eps")?.as_f64()?,
+            wd_coupled: a.get("wd_coupled")?.as_f64()?,
+            wd_indep: a.get("wd_indep")?.as_f64()?,
+        };
+
+        let precision_name = j.get("precision")?.as_str()?;
+        let precision = Precision::parse(precision_name)
+            .with_context(|| format!("unknown precision {precision_name:?}"))?;
+
+        let rms_sites = j
+            .get("rms_sites")?
+            .as_arr()?
+            .iter()
+            .map(|s| Ok(s.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+        let lr_tweaks = j
+            .get("lr_tweaks")?
+            .as_arr()?
+            .iter()
+            .map(|t| -> Result<(String, f64)> {
+                let t = t.as_arr()?;
+                if t.len() != 2 {
+                    bail!("lr_tweaks entry must be a [pattern, multiplier] pair");
+                }
+                Ok((t[0].as_str()?.to_string(), t[1].as_f64()?))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(RunConfig {
+            label: label.to_string(),
+            parametrization,
+            hp,
+            precision,
+            schedule,
+            adam,
+            seed: j.get("seed")?.as_f64()? as i32,
+            log_every: j.get("log_every")?.as_f64()? as u64,
+            valid_batches: j.get("valid_batches")?.as_usize()?,
+            rms_sites,
+            lr_tweaks,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_json_round_trips_through_from_canonical_json() {
+        let mut cfg = RunConfig::quick(
+            "round-trip",
+            Parametrization::new(Scheme::Mup),
+            HpSet::with_eta(0.375),
+            48,
+        );
+        cfg.hp.set("alpha_attn", 2.0);
+        cfg.hp.set("sigma_init", 0.5);
+        cfg.precision = Precision::Fp8Paper;
+        cfg.schedule = Schedule {
+            kind: ScheduleKind::LinearToZero,
+            peak_lr: 0.375,
+            warmup_steps: 12,
+            total_steps: 48,
+        };
+        cfg.adam = AdamConfig::coupled();
+        cfg.seed = -3;
+        cfg.log_every = 7;
+        cfg.valid_batches = 9;
+        cfg.rms_sites = vec!["w.head".to_string(), "w.emb".to_string()];
+        cfg.lr_tweaks = vec![("emb".to_string(), 4.0), ("head".to_string(), 0.25)];
+
+        let canonical = cfg.canonical_json();
+        let back = RunConfig::from_canonical_json(&canonical, "round-trip").unwrap();
+        assert_eq!(back.label, "round-trip");
+        assert_eq!(
+            back.canonical_json().dump(),
+            canonical.dump(),
+            "decode must be the exact inverse of the canonical encoding"
+        );
+        // spot-check non-defaults actually survived (not just defaulted)
+        assert_eq!(back.hp.alpha_attn, 2.0);
+        assert_eq!(back.seed, -3);
+        assert_eq!(back.valid_batches, 9);
+        assert_eq!(back.lr_tweaks[1], ("head".to_string(), 0.25));
+
+        // a u-muP default config round-trips too (different scheme arm)
+        let base = RunConfig::quick(
+            "base",
+            Parametrization::new(Scheme::Umup),
+            HpSet::default(),
+            16,
+        );
+        let back = RunConfig::from_canonical_json(&base.canonical_json(), "base").unwrap();
+        assert_eq!(back.canonical_json().dump(), base.canonical_json().dump());
+    }
+
+    #[test]
+    fn from_canonical_json_rejects_malformed_bodies() {
+        let good = RunConfig::quick(
+            "g",
+            Parametrization::new(Scheme::Umup),
+            HpSet::default(),
+            8,
+        )
+        .canonical_json();
+        // a non-object and a missing section both error cleanly
+        assert!(RunConfig::from_canonical_json(&Json::Num(3.0), "g").is_err());
+        let mut m = match good {
+            Json::Obj(m) => m,
+            _ => unreachable!("canonical form is an object"),
+        };
+        m.remove("schedule");
+        assert!(RunConfig::from_canonical_json(&Json::Obj(m), "g").is_err());
     }
 }

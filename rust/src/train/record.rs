@@ -8,7 +8,11 @@ use anyhow::{ensure, Result};
 use crate::util::Json;
 
 /// The outcome of one training run.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` is derived for the wire/cache round-trip tests (NaN
+/// losses compare unequal, as IEEE semantics dictate — the codec maps
+/// them to `+inf` anyway, see [`RunRecord::from_json`]).
+#[derive(Debug, Clone, PartialEq)]
 pub struct RunRecord {
     pub label: String,
     /// (step, training loss) at the logging cadence.

@@ -1,0 +1,318 @@
+//! Integration suite for the execution-backend layer: the
+//! `ProcessBackend` + `repro worker` wire protocol, its crash
+//! supervision, and the contract that an out-of-process drain is
+//! **byte-identical in the run cache** to the in-process one.
+//!
+//! No XLA needed: the children are `repro worker --mock` (the repro
+//! binary itself, located via `CARGO_BIN_EXE_repro`), whose executor is
+//! the same canonical deterministic mock (`umup::engine::det_record`)
+//! the in-process `MockBackend` uses — so byte equality is a real
+//! assertion about the wire/cache codec, not luck.  `UMUP_CACHE_TS` is
+//! pinned in this process (the *parent* writes all cache lines), and
+//! failure injection in the children is armed through the
+//! `UMUP_MOCK_FAIL` / `UMUP_MOCK_FAIL_ONCE` env knobs documented in
+//! `main.rs`.
+
+mod common;
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::sync::atomic::AtomicUsize;
+use std::sync::Arc;
+
+use common::{det_mock_engine, key_of_line, shared_job_list, sorted_segment_lines};
+use umup::engine::{Engine, EngineConfig, ProcessBackend, Shard};
+
+fn repro_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_repro"))
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("umup-backend-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// A fresh (guaranteed-absent) one-shot failure marker path.
+fn fresh_marker(tag: &str) -> PathBuf {
+    let m = tmp_dir(tag).with_extension("once");
+    let _ = std::fs::remove_file(&m);
+    m
+}
+
+/// Pin the cache timestamp so segment lines are byte-reproducible.
+/// Process-wide, but every test in this binary pins the same value, so
+/// parallel test threads cannot disagree.
+fn pin_cache_ts() {
+    std::env::set_var("UMUP_CACHE_TS", "1700000000");
+}
+
+/// A mock-worker process backend, optionally with one-shot failure
+/// injection: `fail` is the `UMUP_MOCK_FAIL` mode, `once` the marker
+/// path that arms it exactly once across the whole fleet (`None` =
+/// fail on every job).
+fn mock_worker_backend(fail: Option<&str>, once: Option<&Path>) -> ProcessBackend {
+    let exe = repro_exe();
+    let fail = fail.map(str::to_string);
+    let once = once.map(Path::to_path_buf);
+    ProcessBackend::new(move |_worker| {
+        let mut cmd = Command::new(&exe);
+        cmd.arg("worker").arg("--mock");
+        if let Some(mode) = &fail {
+            cmd.env("UMUP_MOCK_FAIL", mode);
+        }
+        if let Some(marker) = &once {
+            cmd.env("UMUP_MOCK_FAIL_ONCE", marker);
+        }
+        cmd
+    })
+}
+
+/// The acceptance test: a 4-worker `ProcessBackend` drain of the shared
+/// sweep — with one child crash injected mid-job — produces a run cache
+/// byte-identical to the single-process in-process run, with the
+/// crashed job re-dispatched (not failed) and the restart accounted.
+#[test]
+fn process_backend_drain_with_crash_is_byte_identical_to_in_process() {
+    pin_cache_ts();
+    let in_dir = tmp_dir("inproc");
+    let proc_dir = tmp_dir("proc");
+    let marker = fresh_marker("crash-marker");
+    let jobs = shared_job_list();
+    let n_jobs = jobs.len();
+
+    // reference: in-process deterministic mock
+    let counter = Arc::new(AtomicUsize::new(0));
+    let engine = det_mock_engine(
+        EngineConfig {
+            workers: 2,
+            cache_dir: Some(in_dir.clone()),
+            resume: true,
+            ..EngineConfig::default()
+        },
+        Arc::clone(&counter),
+    );
+    let report = engine.run(shared_job_list());
+    assert_eq!(report.completed, n_jobs);
+    drop(engine);
+
+    // out-of-process: 4 worker children, one armed to crash before its
+    // first reply (exactly once across the fleet, restarts included)
+    let backend = Arc::new(
+        mock_worker_backend(Some("crash-before-reply"), Some(&marker)).with_max_restarts(2),
+    );
+    let engine = Engine::with_backend(
+        EngineConfig {
+            workers: 4,
+            cache_dir: Some(proc_dir.clone()),
+            resume: true,
+            ..EngineConfig::default()
+        },
+        Arc::clone(&backend) as Arc<dyn umup::engine::Backend>,
+    )
+    .unwrap();
+    let report = engine.run(shared_job_list());
+    assert_eq!(report.completed, n_jobs, "crashed job must be re-dispatched, not lost");
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.executed, n_jobs);
+    drop(engine);
+
+    assert!(marker.exists(), "the crash injection never fired");
+    assert!(backend.restarts() >= 1, "the crashed child must have been restarted");
+
+    let reference = sorted_segment_lines(&in_dir);
+    let processed = sorted_segment_lines(&proc_dir);
+    assert_eq!(reference.len(), n_jobs);
+    assert_eq!(
+        processed, reference,
+        "process-backend cache must be byte-identical to the in-process one"
+    );
+
+    let _ = std::fs::remove_file(&marker);
+    let _ = std::fs::remove_dir_all(&in_dir);
+    let _ = std::fs::remove_dir_all(&proc_dir);
+}
+
+/// Sharding composes with the process backend: two sharded engines
+/// (each with its own worker children, one crash injected in the first)
+/// drain disjoint slices into one cache dir whose merged content equals
+/// the unsharded in-process run, with zero duplicate keys.
+#[test]
+fn sharded_process_backend_drain_merges_byte_identically() {
+    pin_cache_ts();
+    let in_dir = tmp_dir("shard-inproc");
+    let proc_dir = tmp_dir("shard-proc");
+    let marker = fresh_marker("shard-crash-marker");
+    let jobs = shared_job_list();
+    let n_jobs = jobs.len();
+
+    let counter = Arc::new(AtomicUsize::new(0));
+    let engine = det_mock_engine(
+        EngineConfig {
+            workers: 2,
+            cache_dir: Some(in_dir.clone()),
+            resume: true,
+            ..EngineConfig::default()
+        },
+        Arc::clone(&counter),
+    );
+    engine.run(shared_job_list());
+    drop(engine);
+
+    for index in 0..2usize {
+        // only the first shard's fleet is armed; the marker also keeps
+        // the injection single-shot if both were
+        let fail = if index == 0 { Some("crash-before-reply") } else { None };
+        let backend = Arc::new(mock_worker_backend(fail, Some(&marker)));
+        let engine = Engine::with_backend(
+            EngineConfig {
+                workers: 2,
+                cache_dir: Some(proc_dir.clone()),
+                resume: true,
+                shard: Some(Shard { index, count: 2 }),
+                ..EngineConfig::default()
+            },
+            backend,
+        )
+        .unwrap();
+        let report = engine.run(shared_job_list());
+        assert_eq!(report.failed, 0, "shard {index} must not fail jobs");
+        assert_eq!(
+            report.executed + report.cache_hits + report.skipped,
+            n_jobs,
+            "shard {index} must account for every job"
+        );
+        drop(engine);
+    }
+    assert!(marker.exists(), "the crash injection never fired");
+
+    let reference = sorted_segment_lines(&in_dir);
+    let merged = sorted_segment_lines(&proc_dir);
+    assert_eq!(merged, reference, "merged sharded drain must equal the unsharded run");
+    let keys: std::collections::BTreeSet<String> =
+        merged.iter().map(|l| key_of_line(l)).collect();
+    assert_eq!(keys.len(), n_jobs, "duplicate run keys across shard segments");
+
+    let _ = std::fs::remove_file(&marker);
+    let _ = std::fs::remove_dir_all(&in_dir);
+    let _ = std::fs::remove_dir_all(&proc_dir);
+}
+
+/// Garbage on a child's stdout is a transport failure: the child is
+/// replaced and the in-flight job re-dispatched — never a wedged engine
+/// or a lost job.
+#[test]
+fn garbage_on_stdout_restarts_the_child_and_recovers_the_job() {
+    pin_cache_ts();
+    let marker = fresh_marker("garbage-marker");
+    let backend = Arc::new(mock_worker_backend(Some("garbage"), Some(&marker)));
+    let engine = Engine::with_backend(
+        EngineConfig { workers: 1, ..EngineConfig::default() },
+        Arc::clone(&backend) as Arc<dyn umup::engine::Backend>,
+    )
+    .unwrap();
+    let report = engine.run(shared_job_list().into_iter().take(4).collect());
+    assert_eq!(report.completed, 4);
+    assert_eq!(report.failed, 0);
+    assert!(marker.exists());
+    assert_eq!(backend.restarts(), 1, "garbage must cost exactly one restart");
+    let _ = std::fs::remove_file(&marker);
+}
+
+/// A torn frame (length prefix promising more bytes than arrive before
+/// the child dies) is survived the same way.
+#[test]
+fn truncated_frame_restarts_the_child_and_recovers_the_job() {
+    pin_cache_ts();
+    let marker = fresh_marker("truncate-marker");
+    let backend = Arc::new(mock_worker_backend(Some("truncate"), Some(&marker)));
+    let engine = Engine::with_backend(
+        EngineConfig { workers: 1, ..EngineConfig::default() },
+        Arc::clone(&backend) as Arc<dyn umup::engine::Backend>,
+    )
+    .unwrap();
+    let report = engine.run(shared_job_list().into_iter().take(4).collect());
+    assert_eq!(report.completed, 4);
+    assert_eq!(report.failed, 0);
+    assert!(marker.exists());
+    assert_eq!(backend.restarts(), 1);
+    let _ = std::fs::remove_file(&marker);
+}
+
+/// A child that exits cleanly *between* jobs (reply delivered, then
+/// gone) is respawned for the next job; nothing is re-run or lost.
+#[test]
+fn child_exiting_between_jobs_is_respawned() {
+    pin_cache_ts();
+    let marker = fresh_marker("between-marker");
+    let backend = Arc::new(mock_worker_backend(Some("crash-after-reply"), Some(&marker)));
+    let engine = Engine::with_backend(
+        EngineConfig { workers: 1, ..EngineConfig::default() },
+        Arc::clone(&backend) as Arc<dyn umup::engine::Backend>,
+    )
+    .unwrap();
+    let report = engine.run(shared_job_list().into_iter().take(4).collect());
+    assert_eq!(report.completed, 4, "every job completes despite the exit");
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.executed, 4, "the replied-then-exit job must not re-run");
+    assert!(marker.exists());
+    assert_eq!(backend.restarts(), 1);
+    let _ = std::fs::remove_file(&marker);
+}
+
+/// A child that *always* crashes exhausts the worker's bounded restart
+/// budget: its jobs come back as normal per-job `Err` outcomes carrying
+/// the child's stderr, and the engine itself stays alive and drainable.
+#[test]
+fn restart_budget_exhaustion_reports_normal_err_outcomes() {
+    pin_cache_ts();
+    // no once-marker: every armed child crashes on its first job
+    let backend = Arc::new(
+        mock_worker_backend(Some("crash-before-reply"), None).with_max_restarts(1),
+    );
+    let engine = Engine::with_backend(
+        EngineConfig { workers: 1, ..EngineConfig::default() },
+        Arc::clone(&backend) as Arc<dyn umup::engine::Backend>,
+    )
+    .unwrap();
+    let report = engine.run(shared_job_list().into_iter().take(3).collect());
+    assert_eq!(report.failed, 3, "all jobs on the crashing worker must fail");
+    assert_eq!(report.completed, 0);
+    let errs: Vec<&String> = report
+        .outcomes
+        .iter()
+        .map(|o| o.outcome.as_ref().unwrap_err())
+        .collect();
+    assert!(
+        errs.iter().any(|e| e.contains("injected crash")),
+        "a failure outcome must carry the child's stderr tail: {errs:?}"
+    );
+    assert!(
+        errs.iter().any(|e| e.contains("restart budget exhausted")),
+        "post-budget jobs must name the exhausted budget: {errs:?}"
+    );
+    assert_eq!(backend.restarts(), 1, "budget 1 allows exactly one restart");
+}
+
+/// The health probe runs at engine construction and rejects a worker
+/// command that does not speak the protocol — no jobs are ever sent to
+/// a wrong binary.
+#[test]
+fn health_probe_rejects_a_non_worker_command() {
+    let exe = repro_exe();
+    let backend = Arc::new(ProcessBackend::new(move |_worker| {
+        // `repro definitely-not-a-command` prints usage text — not a
+        // hello frame
+        let mut cmd = Command::new(&exe);
+        cmd.arg("definitely-not-a-command");
+        cmd
+    }));
+    let err = Engine::with_backend(
+        EngineConfig { workers: 1, ..EngineConfig::default() },
+        backend as Arc<dyn umup::engine::Backend>,
+    )
+    .err()
+    .expect("a non-worker command must fail the health probe");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("health"), "{msg}");
+}

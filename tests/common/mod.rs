@@ -13,7 +13,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use umup::data::{Corpus, CorpusConfig};
-use umup::engine::{Engine, EngineConfig, EngineJob};
+use umup::engine::{det_record, Engine, EngineConfig, EngineJob, MockBackend};
 use umup::parametrization::{HpSet, Parametrization, Scheme};
 use umup::runtime::{Manifest, Spec};
 use umup::train::{RunConfig, RunRecord};
@@ -83,28 +83,20 @@ pub fn shared_job_list() -> Vec<EngineJob> {
         .collect()
 }
 
-/// Deterministic mock engine: each "run" sleeps briefly and returns a
-/// record derived only from the job; `counter` counts actual executions
-/// (not cache/dedup resolutions).
+/// Deterministic mock engine: each "run" sleeps briefly and returns the
+/// canonical [`det_record`] (shared with `repro worker --mock`, so the
+/// process-backend suites can demand byte-identical caches); `counter`
+/// counts actual executions (not cache/dedup resolutions).
 pub fn det_mock_engine(engine_cfg: EngineConfig, counter: Arc<AtomicUsize>) -> Engine {
-    Engine::with_factory(engine_cfg, move |_worker| {
+    let backend = MockBackend::new(move |_worker| {
         let counter = Arc::clone(&counter);
         Box::new(move |job: &EngineJob| -> anyhow::Result<RunRecord> {
             std::thread::sleep(Duration::from_millis(2));
             counter.fetch_add(1, Ordering::SeqCst);
-            Ok(RunRecord {
-                label: job.config.label.clone(),
-                train_curve: vec![(1, 3.0 + job.config.hp.eta), (8, 2.0 + job.config.hp.eta)],
-                valid_curve: vec![(8, 2.0 + job.config.hp.eta)],
-                final_valid_loss: 2.0 + job.config.hp.eta,
-                rms_curves: BTreeMap::new(),
-                final_rms: vec![("w.head".to_string(), 1.0)],
-                diverged: false,
-                wall_seconds: 0.01,
-            })
+            Ok(det_record(&job.config))
         })
-    })
-    .unwrap()
+    });
+    Engine::with_backend(engine_cfg, Arc::new(backend)).unwrap()
 }
 
 /// All non-empty lines of every `runs*.jsonl` segment in `dir`, sorted

@@ -10,9 +10,9 @@
 //! its restart budget and fails the drive with the surviving children
 //! torn down.
 //!
-//! Everything runs on the mock executor (`Engine::with_factory`) with
-//! `UMUP_CACHE_TS` pinned, so no XLA artifacts are needed and cache
-//! lines are byte-for-byte reproducible.
+//! Everything runs on the mock backend (`Engine::with_backend` +
+//! `MockBackend`) with `UMUP_CACHE_TS` pinned, so no XLA artifacts are
+//! needed and cache lines are byte-for-byte reproducible.
 
 mod common;
 

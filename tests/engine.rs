@@ -3,10 +3,10 @@
 //! isolation under concurrency, and the handle-based submission API
 //! (streaming outcomes, cancellation, priorities, affinity scheduling).
 //!
-//! These run without XLA artifacts: `Engine::with_factory` swaps the
-//! session-backed executor for a mock, so the queueing/caching/outcome
-//! machinery is exercised on any machine (including CI runners with no
-//! compiled artifact tree).
+//! These run without XLA artifacts: a [`MockBackend`] swaps the
+//! session-backed executor for a closure, so the queueing/caching/
+//! outcome machinery is exercised on any machine (including CI runners
+//! with no compiled artifact tree).
 
 mod common;
 
@@ -17,7 +17,8 @@ use std::sync::{Arc, Mutex};
 use common::{cfg, dummy_corpus, dummy_manifest};
 use umup::data::{Corpus, CorpusConfig};
 use umup::engine::{
-    run_key, Engine, EngineConfig, EngineJob, LruPool, RunCache, SubmitOptions, SweepJob,
+    run_key, Engine, EngineConfig, EngineJob, LruPool, MockBackend, RunCache, SubmitOptions,
+    SweepJob,
 };
 use umup::train::RunRecord;
 
@@ -38,7 +39,7 @@ fn fake_record(label: &str, loss: f64) -> RunRecord {
 /// from the config's eta; labels starting with "fail" error out.
 /// `counter` counts actual executions (not cache/dedup resolutions).
 fn mock_engine(engine_cfg: EngineConfig, counter: Arc<AtomicUsize>) -> Engine {
-    Engine::with_factory(engine_cfg, move |_worker| {
+    let backend = MockBackend::new(move |_worker| {
         let counter = Arc::clone(&counter);
         Box::new(move |job: &EngineJob| -> anyhow::Result<RunRecord> {
             std::thread::sleep(std::time::Duration::from_millis(5));
@@ -51,8 +52,8 @@ fn mock_engine(engine_cfg: EngineConfig, counter: Arc<AtomicUsize>) -> Engine {
             }
             Ok(fake_record(&job.config.label, 2.0 + job.config.hp.eta))
         })
-    })
-    .unwrap()
+    });
+    Engine::with_backend(engine_cfg, Arc::new(backend)).unwrap()
 }
 
 // ---------------------------------------------------------------- keys
@@ -324,9 +325,9 @@ fn affinity_scheduler_beats_fifo_for_interleaved_manifests() {
     let compiles = Arc::new(AtomicUsize::new(0));
     let compiles_in_factory = Arc::clone(&compiles);
     // mirror the production executor: a real LruPool per worker, cap 1
-    let engine = Engine::with_factory(
+    let engine = Engine::with_backend(
         EngineConfig { workers: 2, max_sessions_per_worker: 1, ..EngineConfig::default() },
-        move |_worker| {
+        Arc::new(MockBackend::new(move |_worker| {
             let compiles = Arc::clone(&compiles_in_factory);
             let mut pool: LruPool<String> = LruPool::new(1);
             Box::new(move |job: &EngineJob| -> anyhow::Result<RunRecord> {
@@ -337,7 +338,7 @@ fn affinity_scheduler_beats_fifo_for_interleaved_manifests() {
                 std::thread::sleep(std::time::Duration::from_millis(3));
                 Ok(fake_record(&job.config.label, 2.0 + job.config.hp.eta))
             })
-        },
+        })),
     )
     .unwrap();
 
@@ -375,6 +376,51 @@ fn affinity_scheduler_beats_fifo_for_interleaved_manifests() {
     );
 }
 
+/// Capability flags are load-bearing: a backend that advertises no
+/// per-manifest warm state (`Capabilities::session_affinity == false`)
+/// gets plain priority+FIFO dispatch — the scheduler keeps no warm
+/// mirror and records no hits or steals, while the drain itself is
+/// unaffected.
+#[test]
+fn no_affinity_capability_disables_warm_tracking() {
+    let counter = Arc::new(AtomicUsize::new(0));
+    let backend = MockBackend::new({
+        let counter = Arc::clone(&counter);
+        move |_worker| {
+            let counter = Arc::clone(&counter);
+            Box::new(move |job: &EngineJob| -> anyhow::Result<RunRecord> {
+                counter.fetch_add(1, Ordering::SeqCst);
+                Ok(fake_record(&job.config.label, 2.0 + job.config.hp.eta))
+            })
+        }
+    })
+    .without_affinity();
+    let engine = Engine::with_backend(
+        EngineConfig { workers: 2, max_sessions_per_worker: 1, ..EngineConfig::default() },
+        Arc::new(backend),
+    )
+    .unwrap();
+    let corpus = dummy_corpus();
+    let (m1, m2) = (dummy_manifest("m1"), dummy_manifest("m2"));
+    let jobs: Vec<EngineJob> = (0..16)
+        .map(|i| EngineJob {
+            manifest: Arc::clone(if i % 2 == 0 { &m1 } else { &m2 }),
+            corpus: Arc::clone(&corpus),
+            config: cfg(&format!("na{i}"), 0.0625 * (i + 1) as f64, 8),
+            tag: vec![],
+        })
+        .collect();
+    let report = engine.run(jobs);
+    assert_eq!(report.completed, 16);
+    assert_eq!(counter.load(Ordering::SeqCst), 16);
+    let s = engine.stats();
+    assert_eq!(
+        (s.pool_hits, s.pool_steals),
+        (0, 0),
+        "a no-affinity backend must not be charged for warmness"
+    );
+}
+
 /// Cancellation satellite: a cancelled handle's pending jobs never
 /// execute, the in-flight job completes, and the cache stays consistent
 /// — a resumed engine re-runs exactly the cancelled jobs.
@@ -398,9 +444,9 @@ fn cancelled_handle_skips_pending_jobs_and_cache_stays_consistent() {
     let c1 = Arc::new(AtomicUsize::new(0));
     // one slow worker: jobs take ~25ms, so cancellation lands while
     // most of the batch is still queued
-    let engine = Engine::with_factory(
+    let engine = Engine::with_backend(
         EngineConfig { workers: 1, cache_dir: Some(dir.clone()), ..EngineConfig::default() },
-        {
+        Arc::new(MockBackend::new({
             let c1 = Arc::clone(&c1);
             move |_worker| {
                 let c1 = Arc::clone(&c1);
@@ -410,7 +456,7 @@ fn cancelled_handle_skips_pending_jobs_and_cache_stays_consistent() {
                     Ok(fake_record(&job.config.label, 2.0 + job.config.hp.eta))
                 })
             }
-        },
+        })),
     )
     .unwrap();
 
@@ -465,9 +511,9 @@ fn cancelled_handle_skips_pending_jobs_and_cache_stays_consistent() {
 fn higher_priority_submission_overtakes_queued_jobs() {
     let gate = Arc::new(AtomicBool::new(false));
     let order: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
-    let engine = Engine::with_factory(
+    let engine = Engine::with_backend(
         EngineConfig { workers: 1, ..EngineConfig::default() },
-        {
+        Arc::new(MockBackend::new({
             let gate = Arc::clone(&gate);
             let order = Arc::clone(&order);
             move |_worker| {
@@ -483,7 +529,7 @@ fn higher_priority_submission_overtakes_queued_jobs() {
                     Ok(fake_record(&job.config.label, 2.0 + job.config.hp.eta))
                 })
             }
-        },
+        })),
     )
     .unwrap();
     let man = dummy_manifest("m");

@@ -7,8 +7,9 @@
 //! single unsharded process produces — zero duplicate run keys — after
 //! which `repro cache gc --older-than 0s` empties it.
 //!
-//! Everything runs on the mock executor (`Engine::with_factory`), so no
-//! XLA artifacts are needed; pinning `UMUP_CACHE_TS` makes cache lines
+//! Everything runs on the mock backend (`Engine::with_backend` +
+//! `MockBackend`), so no XLA artifacts are needed; pinning
+//! `UMUP_CACHE_TS` makes cache lines
 //! byte-for-byte reproducible, so the multi-process test compares raw
 //! segment bytes (modulo line order — shard segments interleave freely).
 //!
