@@ -1,0 +1,128 @@
+//! Bench: run-cache open / refresh / hit costs at sweep scale.
+//!
+//! The lazy index's contract (see `engine::cache`): cold open scans
+//! keys only (no record materialization), a warm no-op
+//! `refresh_from_disk` costs a few metadata reads regardless of cache
+//! size (the acceptance bar is ≥ 50× faster than a cold open at 100k
+//! entries), an incremental refresh costs the bytes actually appended,
+//! and hits parse once then serve from the memo.  Runs entirely on the
+//! public `RunCache` API, so `--no-default-features` builds it (the
+//! `check-no-xla` CI job compiles it via `cargo bench --no-run`).
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use umup::engine::{RunCache, Shard};
+use umup::train::RunRecord;
+use umup::util::bench::{black_box, Bencher};
+
+fn rec(i: u64) -> RunRecord {
+    let loss = 3.0 - (i % 64) as f64 * 0.015625;
+    RunRecord {
+        label: format!("bench-{i}"),
+        // realistic telemetry weight: ~16 curve points per run
+        train_curve: (1..=16u64).map(|t| (t * 8, loss + 1.0 / t as f64)).collect(),
+        valid_curve: vec![(128, loss)],
+        final_valid_loss: loss,
+        rms_curves: std::collections::BTreeMap::new(),
+        final_rms: vec![("w.head".to_string(), 1.0)],
+        diverged: false,
+        wall_seconds: 0.5,
+    }
+}
+
+fn key(i: u64) -> String {
+    format!("{i:016x}")
+}
+
+/// Build a cache of `n` entries in `dir` (one unsharded segment).
+fn build(dir: &Path, n: u64) {
+    let mut c = RunCache::open(dir, false).unwrap();
+    for i in 0..n {
+        c.put(&key(i), "w64_bench", &rec(i)).unwrap();
+    }
+}
+
+fn bench_at(n: u64) {
+    let dir: PathBuf =
+        std::env::temp_dir().join(format!("umup-cache-bench-{n}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    build(&dir, n);
+
+    let b = Bencher {
+        warmup: Duration::from_millis(50),
+        budget: Duration::from_millis(500),
+        min_samples: 10,
+    };
+
+    // cold open: full key scan of every segment (no record parses)
+    let cold = b.run_with_work(&format!("cold open ({n} entries)"), Some(n as f64), &mut || {
+        let c = RunCache::open(&dir, true).unwrap();
+        black_box(c.len());
+    });
+
+    // warm no-op refresh: nothing new on disk — O(segments), not O(n)
+    let mut reader = RunCache::open(&dir, true).unwrap();
+    let warm =
+        b.run_with_work(&format!("warm no-op refresh ({n} entries)"), None, &mut || {
+            black_box(reader.refresh_from_disk());
+        });
+    let speedup = cold.mean_ns / warm.mean_ns.max(1.0);
+    println!(
+        "  -> warm no-op refresh is {speedup:.0}x faster than cold open \
+         (acceptance bar at 100k: >= 50x)"
+    );
+
+    // incremental refresh: a sibling shard appends K runs per poll; the
+    // reader pays for those K lines, not the n-entry history
+    const K: u64 = 16;
+    let mut writer =
+        RunCache::open_sharded(&dir, Some(Shard { index: 0, count: 2 }), true).unwrap();
+    let mut next = n + 1_000_000;
+    let inc = Bencher {
+        warmup: Duration::from_millis(20),
+        budget: Duration::from_millis(200),
+        min_samples: 10,
+    };
+    inc.run_with_work(
+        &format!("incremental refresh, {K} appended ({n} resident)"),
+        Some(K as f64),
+        &mut || {
+            for _ in 0..K {
+                writer.put(&key(next), "w64_bench", &rec(next)).unwrap();
+                next += 1;
+            }
+            assert_eq!(reader.refresh_from_disk(), K as usize);
+        },
+    );
+    drop(writer);
+    drop(reader);
+
+    // hit lookups: first touch parses one line from its byte span and
+    // memoizes; later touches are map reads
+    let mut c = RunCache::open(&dir, true).unwrap();
+    let t0 = Instant::now();
+    for i in 0..n {
+        assert!(c.get(&key(i)).is_some());
+    }
+    let first = t0.elapsed();
+    println!(
+        "{:44} {n} keys in {first:?} ({:.2} µs/key)",
+        format!("hit lookup first-touch ({n} entries)"),
+        first.as_secs_f64() * 1e6 / n as f64
+    );
+    let mut i = 0u64;
+    b.run_with_work(&format!("hit lookup memoized ({n} entries)"), None, &mut || {
+        black_box(c.get(&key(i % n)).is_some());
+        i += 1;
+    });
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn main() {
+    for n in [10_000u64, 100_000] {
+        bench_at(n);
+        println!();
+    }
+}

@@ -21,6 +21,20 @@ fn main() {
     b.run_with_work("batch sequential 16x65", Some((16 * 65) as f64), &mut || {
         black_box(sampler.next_sequential());
     });
+    // the zero-alloc path the train loop actually runs
+    let mut buf: Vec<i32> = Vec::new();
+    b.run_with_work("batch sample_into 16x65 (reused buf)", Some((16 * 65) as f64), &mut || {
+        sampler.sample_into(&mut buf);
+        black_box(buf.len());
+    });
+    b.run_with_work(
+        "batch sequential_into 16x65 (reused buf)",
+        Some((16 * 65) as f64),
+        &mut || {
+            sampler.next_sequential_into(&mut buf);
+            black_box(buf.len());
+        },
+    );
     b.run("bigram entropy 2M tokens", || {
         black_box(corpus.bigram_entropy());
     });

@@ -66,11 +66,13 @@ fn main() -> anyhow::Result<()> {
         let engine = Engine::new(EngineConfig { workers, ..EngineConfig::default() })?;
         let engine_jobs: Vec<EngineJob> = jobs
             .iter()
-            .map(|j| EngineJob {
-                manifest: Arc::clone(&man),
-                corpus: Arc::clone(&corpus),
-                config: j.config.clone(),
-                tag: j.tag.clone(),
+            .map(|j| {
+                EngineJob::new(
+                    Arc::clone(&man),
+                    Arc::clone(&corpus),
+                    j.config.clone(),
+                    j.tag.clone(),
+                )
             })
             .collect();
         let t0 = Instant::now();
@@ -101,11 +103,8 @@ fn main() -> anyhow::Result<()> {
     let _ = std::fs::remove_dir_all(&cache_dir);
     let engine_jobs = |man: &Arc<Manifest>, corpus: &Arc<Corpus>| -> Vec<EngineJob> {
         jobs.iter()
-            .map(|j| EngineJob {
-                manifest: Arc::clone(man),
-                corpus: Arc::clone(corpus),
-                config: j.config.clone(),
-                tag: j.tag.clone(),
+            .map(|j| {
+                EngineJob::new(Arc::clone(man), Arc::clone(corpus), j.config.clone(), j.tag.clone())
             })
             .collect()
     };
@@ -152,17 +151,17 @@ fn main() -> anyhow::Result<()> {
         (0..n_ipc_jobs)
             .map(|i| {
                 let eta = 0.015625 * (i + 1) as f64;
-                EngineJob {
-                    manifest: Arc::clone(&man),
-                    corpus: Arc::clone(&corpus),
-                    config: RunConfig::quick(
+                EngineJob::new(
+                    Arc::clone(&man),
+                    Arc::clone(&corpus),
+                    RunConfig::quick(
                         &format!("ipc-{i}"),
                         Parametrization::new(Scheme::Umup),
                         HpSet::with_eta(eta),
                         8,
                     ),
-                    tag: vec![],
-                }
+                    vec![],
+                )
             })
             .collect()
     };

@@ -42,12 +42,7 @@ fn main() -> anyhow::Result<()> {
                 RunConfig::quick(label, Parametrization::new(scheme), HpSet::with_eta(eta), steps);
             cfg.precision = precision;
             cfg.schedule = Schedule::standard(eta, steps, 75);
-            EngineJob {
-                manifest: Arc::clone(&manifest),
-                corpus: Arc::clone(&corpus),
-                config: cfg,
-                tag: vec![],
-            }
+            EngineJob::new(Arc::clone(&manifest), Arc::clone(&corpus), cfg, vec![])
         })
         .collect();
 

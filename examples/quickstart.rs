@@ -44,12 +44,12 @@ fn main() -> anyhow::Result<()> {
     cfg.schedule = Schedule::standard(0.5, steps, 75);
     // submit_one returns a handle immediately; result() blocks for the
     // strict outcome (a sweep would instead stream per-job outcomes)
-    let handle = engine.submit_one(EngineJob {
-        manifest: Arc::clone(&manifest),
-        corpus: Arc::clone(&corpus),
-        config: cfg,
-        tag: vec![],
-    });
+    let handle = engine.submit_one(EngineJob::new(
+        Arc::clone(&manifest),
+        Arc::clone(&corpus),
+        cfg,
+        vec![],
+    ));
     let record = handle.result()?.record;
 
     for &(step, loss) in &record.train_curve {

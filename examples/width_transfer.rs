@@ -45,12 +45,7 @@ fn submit_lr_sweep(
                 steps,
             );
             cfg.schedule = Schedule::standard(eta, steps, (steps / 4).max(1));
-            EngineJob {
-                manifest: Arc::clone(&man),
-                corpus: Arc::clone(corpus),
-                config: cfg,
-                tag: vec![("eta".into(), eta)],
-            }
+            EngineJob::new(Arc::clone(&man), Arc::clone(corpus), cfg, vec![("eta".into(), eta)])
         })
         .collect();
     Ok(engine.submit(jobs))

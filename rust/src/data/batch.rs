@@ -1,5 +1,10 @@
 //! Batch sampling: random (seq+1)-token windows packed row-major for the
 //! `tokens: i32[batch, seq+1]` step input.
+//!
+//! Both samplers have `_into` variants that fill a caller-owned buffer:
+//! the training loop issues one sample per step, and at production step
+//! counts a fresh `batch * (seq+1)` allocation per step is pure churn —
+//! `train::Runner` reuses a single token buffer for the whole run.
 
 use crate::util::Rng;
 
@@ -9,48 +14,88 @@ pub struct BatchSampler<'a> {
     batch: usize,
     seq: usize,
     rng: Rng,
-    /// Sequential cursor for deterministic eval batches.
-    cursor: usize,
+    /// Next sequential window index, in `0..n_windows` (see
+    /// [`BatchSampler::next_sequential_into`] for the wrap contract).
+    next_window: usize,
 }
 
 impl<'a> BatchSampler<'a> {
     pub fn new(data: &'a [i32], batch: usize, seq: usize, seed: u64) -> Self {
         assert!(data.len() > seq + 1, "corpus shorter than one window");
-        BatchSampler { data, batch, seq, rng: Rng::new(seed).fork("batch"), cursor: 0 }
+        BatchSampler { data, batch, seq, rng: Rng::new(seed).fork("batch"), next_window: 0 }
     }
 
     /// Random training batch: `batch` windows of seq+1 tokens.
     pub fn sample(&mut self) -> Vec<i32> {
-        let mut out = Vec::with_capacity(self.batch * (self.seq + 1));
+        let mut out = Vec::new();
+        self.sample_into(&mut out);
+        out
+    }
+
+    /// [`BatchSampler::sample`] into a reused buffer (cleared first);
+    /// allocation-free once the buffer has reached batch size.
+    pub fn sample_into(&mut self, out: &mut Vec<i32>) {
+        out.clear();
+        out.reserve(self.batch * (self.seq + 1));
         let span = self.data.len() - (self.seq + 1);
         for _ in 0..self.batch {
             let start = self.rng.below(span);
             out.extend_from_slice(&self.data[start..start + self.seq + 1]);
         }
-        out
     }
 
     /// Deterministic sequential batch (validation); wraps around.
     pub fn next_sequential(&mut self) -> Vec<i32> {
-        let mut out = Vec::with_capacity(self.batch * (self.seq + 1));
-        let window = self.seq + 1;
-        for _ in 0..self.batch {
-            if self.cursor + window > self.data.len() {
-                self.cursor = 0;
-            }
-            out.extend_from_slice(&self.data[self.cursor..self.cursor + window]);
-            self.cursor += window;
-        }
+        let mut out = Vec::new();
+        self.next_sequential_into(&mut out);
         out
     }
 
-    pub fn reset(&mut self) {
-        self.cursor = 0;
+    /// [`BatchSampler::next_sequential`] into a reused buffer (cleared
+    /// first); allocation-free once the buffer has reached batch size.
+    ///
+    /// # Wrap contract (exact)
+    ///
+    /// The stream is tiled into [`BatchSampler::n_windows`] disjoint
+    /// full windows `[i*(seq+1), (i+1)*(seq+1))`; rows are emitted in
+    /// strict round-robin window order `0, 1, …, n_windows-1, 0, 1, …`
+    /// regardless of batch boundaries, so no full window is ever
+    /// skipped at the wrap — a batch may *straddle* it (its last rows
+    /// continuing from window 0).  The trailing `len % (seq+1)` tokens
+    /// do not form a full window and are never sequentially sampled.
+    /// When `batch > n_windows`, a single batch revisits windows.
+    pub fn next_sequential_into(&mut self, out: &mut Vec<i32>) {
+        out.clear();
+        let window = self.seq + 1;
+        out.reserve(self.batch * window);
+        let n_windows = self.n_windows();
+        for _ in 0..self.batch {
+            if self.next_window >= n_windows {
+                self.next_window = 0;
+            }
+            let start = self.next_window * window;
+            out.extend_from_slice(&self.data[start..start + window]);
+            self.next_window += 1;
+        }
     }
 
-    /// Number of disjoint sequential batches available.
+    /// Rewind the sequential cursor to window 0.
+    pub fn reset(&mut self) {
+        self.next_window = 0;
+    }
+
+    /// Disjoint full windows available to the sequential sampler.
+    pub fn n_windows(&self) -> usize {
+        self.data.len() / (self.seq + 1)
+    }
+
+    /// Number of *fully disjoint* sequential batches: the batches a
+    /// caller can draw after [`BatchSampler::reset`] before any window
+    /// repeats.  The `n_windows % batch` windows beyond them (the
+    /// corpus tail) are not lost — the following batch emits them
+    /// before wrapping (see [`BatchSampler::next_sequential_into`]).
     pub fn n_sequential_batches(&self) -> usize {
-        self.data.len() / ((self.seq + 1) * self.batch)
+        self.n_windows() / self.batch
     }
 }
 
@@ -76,6 +121,28 @@ mod tests {
     }
 
     #[test]
+    fn sample_into_reuses_one_buffer_and_matches_sample() {
+        let data: Vec<i32> = (0..10_000).collect();
+        let mut a = BatchSampler::new(&data, 4, 16, 9);
+        let mut b = BatchSampler::new(&data, 4, 16, 9);
+        let mut buf = Vec::new();
+        for _ in 0..5 {
+            a.sample_into(&mut buf);
+            assert_eq!(buf, b.sample());
+        }
+        let cap = buf.capacity();
+        a.sample_into(&mut buf);
+        assert_eq!(buf.capacity(), cap, "steady state must not reallocate");
+        // sequential variant agrees with its allocating twin too
+        let mut c = BatchSampler::new(&data, 4, 16, 0);
+        let mut d = BatchSampler::new(&data, 4, 16, 0);
+        for _ in 0..5 {
+            c.next_sequential_into(&mut buf);
+            assert_eq!(buf, d.next_sequential());
+        }
+    }
+
+    #[test]
     fn sequential_covers_disjoint_windows() {
         let data: Vec<i32> = (0..1000).collect();
         let mut s = BatchSampler::new(&data, 2, 9, 0);
@@ -85,5 +152,65 @@ mod tests {
         assert_eq!(b1[10], 10); // second row starts at 10
         assert_eq!(b2[0], 20);
         assert_eq!(s.n_sequential_batches(), 1000 / 20);
+    }
+
+    /// The wrap is exact: every full window (including the corpus tail
+    /// beyond the last disjoint batch) is emitted before any repeats.
+    #[test]
+    fn sequential_wrap_is_exact_round_robin() {
+        // 5 full windows of 10 tokens + a 3-token partial tail
+        let data: Vec<i32> = (0..53).collect();
+        let mut s = BatchSampler::new(&data, 2, 9, 0);
+        assert_eq!(s.n_windows(), 5);
+        assert_eq!(s.n_sequential_batches(), 2);
+        let starts = |batch: &[i32]| [batch[0], batch[10]];
+        // batches tile windows 0,1 | 2,3 | 4,WRAP->0 | 1,2 ...
+        assert_eq!(starts(&s.next_sequential()), [0, 10]);
+        assert_eq!(starts(&s.next_sequential()), [20, 30]);
+        let straddle = s.next_sequential();
+        assert_eq!(
+            starts(&straddle),
+            [40, 0],
+            "the tail window must be emitted, then the wrap continues at 0"
+        );
+        // the tail window's content is the real corpus tail, not a copy
+        // of an earlier window
+        assert_eq!(&straddle[..10], &data[40..50]);
+        assert_eq!(starts(&s.next_sequential()), [10, 20]);
+        // the first n_sequential_batches after reset are pairwise
+        // disjoint and cover the leading windows exactly once
+        s.reset();
+        let mut seen = Vec::new();
+        for _ in 0..s.n_sequential_batches() {
+            seen.extend(starts(&s.next_sequential()));
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 10, 20, 30]);
+    }
+
+    /// Boundary shapes: exact multiples, batch larger than the window
+    /// count, and reset behavior.
+    #[test]
+    fn sequential_wrap_boundaries() {
+        // exactly 4 windows, batch 2: clean tiling, wrap at batch edge
+        let data: Vec<i32> = (0..40).collect();
+        let mut s = BatchSampler::new(&data, 2, 9, 0);
+        assert_eq!((s.n_windows(), s.n_sequential_batches()), (4, 2));
+        assert_eq!(s.next_sequential()[0], 0);
+        assert_eq!(s.next_sequential()[0], 20);
+        assert_eq!(s.next_sequential()[0], 0, "wrap lands back on window 0");
+
+        // batch exceeds the window count: one batch revisits windows
+        let tiny: Vec<i32> = (0..21).collect(); // 2 full windows + tail
+        let mut t = BatchSampler::new(&tiny, 3, 9, 0);
+        assert_eq!((t.n_windows(), t.n_sequential_batches()), (2, 0));
+        let b = t.next_sequential();
+        assert_eq!([b[0], b[10], b[20]], [0, 10, 0]);
+
+        // reset rewinds mid-cycle
+        let mut r = BatchSampler::new(&data, 2, 9, 0);
+        r.next_sequential();
+        r.reset();
+        assert_eq!(r.next_sequential()[0], 0);
     }
 }

@@ -132,7 +132,12 @@ pub struct WireJob {
 /// Encode a job frame payload for `job` (content address `key`).
 pub fn encode_job(key: &str, job: &EngineJob) -> String {
     let mut m = BTreeMap::new();
-    m.insert("config".to_string(), job.config.canonical_json());
+    // the canonical config was already serialized once for this job's
+    // run key — splice those bytes instead of rebuilding the tree
+    m.insert(
+        "config".to_string(),
+        Json::Raw(job.canonical_config_json().to_string()),
+    );
     m.insert("corpus".to_string(), corpus_json(&job.corpus.config));
     m.insert("key".to_string(), Json::Str(key.to_string()));
     m.insert("label".to_string(), Json::Str(job.config.label.clone()));
@@ -323,12 +328,7 @@ mod tests {
         );
         config.seed = 42;
         config.lr_tweaks = vec![("emb".to_string(), 4.0)];
-        let job = EngineJob {
-            manifest: Arc::clone(&man),
-            corpus: Arc::clone(&corpus),
-            config,
-            tag: vec![],
-        };
+        let job = EngineJob::new(Arc::clone(&man), Arc::clone(&corpus), config, vec![]);
         let line = encode_job("00aabbccddeeff11", &job);
         let back = decode_job(&line).unwrap();
         assert_eq!(back.key, "00aabbccddeeff11");

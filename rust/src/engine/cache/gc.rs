@@ -1,0 +1,251 @@
+//! Run-cache lifecycle: pruning, size-targeted eviction, and
+//! compaction — the only code that *rewrites* segments.
+//!
+//! GC is deliberately the eager, O(total-bytes) path: it must
+//! re-serialize every surviving line anyway, so it materializes records
+//! through the reference codec.  What it owes the lazy readers
+//! ([`super::index`]) is the **generation contract**: any non-dry-run
+//! rewrite bumps the directory's generation marker (under every
+//! segment's writer lock), so incremental readers discover that their
+//! remembered byte offsets died with the old files and fall back to one
+//! full rescan.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::Write;
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::segment::{
+    bump_generation, entry_line, for_each_line, list_segments, now_ts, parse_full_entry, Entry,
+    SegmentLock,
+};
+
+/// Opening a cache dir with `resume` auto-compacts it first when it
+/// holds more than this many segments (see [`super::RunCache::open_sharded`]).
+pub const AUTO_COMPACT_SEGMENT_THRESHOLD: usize = 8;
+
+/// What [`gc`] should prune.  With no filters set, GC is a pure
+/// compaction: segments merge into one key-sorted `runs.jsonl`, dropping
+/// cross-segment duplicates and corrupt lines.
+#[derive(Debug, Clone, Default)]
+pub struct GcOptions {
+    /// Prune entries whose `ts` is at least this old (entries without a
+    /// `ts` — pre-lifecycle lines — count as arbitrarily old).
+    pub older_than: Option<Duration>,
+    /// Prune entries recorded under this manifest name.
+    pub manifest: Option<String>,
+    /// Size budget for the compacted cache: after the filters above,
+    /// evict oldest-`ts` entries (ties broken by key, for determinism)
+    /// until the surviving lines fit in this many bytes.
+    pub max_bytes: Option<u64>,
+    /// Report what would happen without touching any file.
+    pub dry_run: bool,
+}
+
+/// What [`gc`] did (or, under `dry_run`, would do).
+#[derive(Debug, Clone, Default)]
+pub struct GcReport {
+    /// Parseable lines seen across all segments.
+    pub scanned: usize,
+    pub kept: usize,
+    /// Entries dropped by the age / manifest filters.
+    pub pruned: usize,
+    /// Entries evicted (oldest first) to meet the `max_bytes` budget.
+    pub evicted: usize,
+    /// Cross-segment duplicate lines collapsed by compaction.
+    pub deduped: usize,
+    pub corrupt_dropped: usize,
+    pub segments_before: usize,
+    pub bytes_before: u64,
+    pub bytes_after: u64,
+}
+
+/// Prune and compact a cache directory.
+///
+/// Takes every segment's writer lock first (erroring if any segment has
+/// a live writer), merges all segments (last write per key wins),
+/// applies the [`GcOptions`] filters, and — unless `dry_run` — rewrites
+/// the survivors as a single key-sorted `runs.jsonl` (via a temp file +
+/// rename), deletes the shard segments, and bumps the directory's
+/// compaction generation so incremental readers rescan.  An emptied
+/// cache ends up with no segment files at all.
+pub fn gc(dir: &Path, opts: &GcOptions) -> Result<GcReport> {
+    let segments = list_segments(dir)?;
+    let mut report = GcReport { segments_before: segments.len(), ..GcReport::default() };
+    if segments.is_empty() {
+        return Ok(report);
+    }
+    let compacted = dir.join("runs.jsonl");
+    // lock every segment plus the compaction target so no live writer
+    // (or competing gc) can race the rewrite
+    let mut locks = Vec::new();
+    for seg in segments.iter().chain(
+        (!segments.contains(&compacted)).then_some(&compacted),
+    ) {
+        locks.push(
+            SegmentLock::acquire(seg)
+                .with_context(|| format!("gc: locking segment {}", seg.display()))?,
+        );
+    }
+
+    // merge: insertion order = sorted segment order, so later segments
+    // win for duplicated keys (mirrors the resume reader)
+    let mut merged: BTreeMap<String, Entry> = BTreeMap::new();
+    for seg in &segments {
+        report.bytes_before += std::fs::metadata(seg).map(|m| m.len()).unwrap_or(0);
+        let res = for_each_line(seg, |line| {
+            if line.trim().is_empty() {
+                return;
+            }
+            match parse_full_entry(line) {
+                Ok(e) => {
+                    report.scanned += 1;
+                    if merged.insert(e.key.clone(), e).is_some() {
+                        report.deduped += 1;
+                    }
+                }
+                Err(_) => report.corrupt_dropped += 1,
+            }
+        });
+        if let Err(e) = res {
+            eprintln!("run-cache: gc could not read {}: {e:#}", seg.display());
+        }
+    }
+
+    // filter
+    let cutoff = opts.older_than.map(|d| now_ts().saturating_sub(d.as_secs()));
+    let mut kept: Vec<&Entry> = merged
+        .values()
+        .filter(|e| {
+            if let Some(m) = &opts.manifest {
+                if &e.manifest == m {
+                    return false;
+                }
+            }
+            if let Some(cut) = cutoff {
+                if e.ts <= cut {
+                    return false;
+                }
+            }
+            true
+        })
+        .collect();
+    report.pruned = merged.len() - kept.len();
+
+    // size budget: evict oldest-ts entries (key tiebreak, so repeated
+    // gc over the same data is deterministic) until the projected
+    // compacted file fits
+    let mut projected: u64 = kept
+        .iter()
+        .map(|e| entry_line(&e.key, &e.manifest, e.ts, &e.record).len() as u64 + 1)
+        .sum();
+    if let Some(budget) = opts.max_bytes {
+        if projected > budget {
+            let mut by_age: Vec<&Entry> = kept.clone();
+            by_age.sort_by(|a, b| a.ts.cmp(&b.ts).then_with(|| a.key.cmp(&b.key)));
+            let mut evict: std::collections::HashSet<&str> = std::collections::HashSet::new();
+            for e in by_age {
+                if projected <= budget {
+                    break;
+                }
+                projected -= entry_line(&e.key, &e.manifest, e.ts, &e.record).len() as u64 + 1;
+                evict.insert(e.key.as_str());
+            }
+            report.evicted = evict.len();
+            kept.retain(|e| !evict.contains(e.key.as_str()));
+        }
+    }
+    report.kept = kept.len();
+
+    if opts.dry_run {
+        report.bytes_after = projected;
+        return Ok(report);
+    }
+
+    // rewrite: survivors into runs.jsonl (atomically), then drop the
+    // shard segments
+    if kept.is_empty() {
+        for seg in &segments {
+            std::fs::remove_file(seg)
+                .with_context(|| format!("gc: removing segment {}", seg.display()))?;
+        }
+    } else {
+        let tmp = dir.join("runs.jsonl.tmp");
+        {
+            let mut f = File::create(&tmp)
+                .with_context(|| format!("gc: creating {}", tmp.display()))?;
+            for e in &kept {
+                writeln!(f, "{}", entry_line(&e.key, &e.manifest, e.ts, &e.record))
+                    .context("gc: writing compacted entry")?;
+            }
+            f.flush().context("gc: flushing compacted cache")?;
+        }
+        std::fs::rename(&tmp, &compacted)
+            .with_context(|| format!("gc: installing {}", compacted.display()))?;
+        for seg in segments.iter().filter(|s| **s != compacted) {
+            std::fs::remove_file(seg)
+                .with_context(|| format!("gc: removing segment {}", seg.display()))?;
+        }
+        report.bytes_after = std::fs::metadata(&compacted).map(|m| m.len()).unwrap_or(0);
+    }
+    // the old byte offsets died with the old files: tell incremental
+    // readers before the locks drop (best-effort — a reader that misses
+    // the bump still catches the shrunken/vanished segments)
+    if let Err(e) = bump_generation(dir) {
+        eprintln!("run-cache: gc could not bump the generation marker: {e:#}");
+    }
+    drop(locks);
+    Ok(report)
+}
+
+/// Parse a human duration: bare seconds or `<number><s|m|h|d|w>`
+/// (e.g. `0s`, `90`, `5m`, `12h`, `30d`).
+pub fn parse_duration(s: &str) -> Result<Duration> {
+    let s = s.trim();
+    let split = s
+        .find(|c: char| !c.is_ascii_digit() && c != '.')
+        .unwrap_or(s.len());
+    let (num, unit) = s.split_at(split);
+    let n: f64 = num
+        .parse()
+        .with_context(|| format!("bad duration {s:?} (expected e.g. 30d, 12h, 0s)"))?;
+    let mult = match unit.trim() {
+        "" | "s" => 1.0,
+        "m" => 60.0,
+        "h" => 3600.0,
+        "d" => 86400.0,
+        "w" => 604800.0,
+        u => bail!("bad duration unit {u:?} in {s:?} (use s/m/h/d/w)"),
+    };
+    // try_from: an absurd `--older-than` must be an error, not a panic
+    Duration::try_from_secs_f64(n * mult)
+        .map_err(|e| anyhow::anyhow!("duration {s:?} out of range: {e}"))
+}
+
+/// Parse a human byte count: bare bytes or `<number><k|m|g>` (binary
+/// multiples, case-insensitive — e.g. `65536`, `512k`, `10m`, `1g`).
+pub fn parse_bytes(s: &str) -> Result<u64> {
+    let s = s.trim();
+    let split = s
+        .find(|c: char| !c.is_ascii_digit() && c != '.')
+        .unwrap_or(s.len());
+    let (num, unit) = s.split_at(split);
+    let n: f64 = num
+        .parse()
+        .with_context(|| format!("bad byte count {s:?} (expected e.g. 65536, 512k, 10m)"))?;
+    let mult = match unit.trim().to_ascii_lowercase().as_str() {
+        "" | "b" => 1.0,
+        "k" | "kb" | "kib" => 1024.0,
+        "m" | "mb" | "mib" => 1024.0 * 1024.0,
+        "g" | "gb" | "gib" => 1024.0 * 1024.0 * 1024.0,
+        u => bail!("bad byte unit {u:?} in {s:?} (use k/m/g)"),
+    };
+    let v = n * mult;
+    if !v.is_finite() || v < 0.0 || v > u64::MAX as f64 {
+        bail!("byte count {s:?} out of range");
+    }
+    Ok(v as u64)
+}

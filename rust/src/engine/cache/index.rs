@@ -1,0 +1,754 @@
+//! The lazy byte-offset index: O(keys) resident memory, O(new bytes)
+//! refresh.
+//!
+//! # Why an index
+//!
+//! A u-µP-scale HP sweep accretes 10⁵–10⁶ cached runs.  The eager
+//! reader materialized every [`RunRecord`] (full train/valid/RMS
+//! curves) into a `HashMap` on open, and re-read **every** segment byte
+//! on every `refresh_from_disk` poll of the sharded converge loop.
+//! [`CacheIndex`] instead scans segments only for *keys*, building
+//! `key → (segment, byte offset, line length, ts, manifest)` without
+//! building a single record tree; records are parsed on demand at hit
+//! time ([`CacheIndex::load`]) and memoized by the owning
+//! [`super::RunCache`], so resident memory is proportional to the key
+//! set plus the records actually touched.
+//!
+//! # Incremental refresh
+//!
+//! The index remembers, per segment, how many bytes it has consumed
+//! (`read_to`, always a line boundary).  [`CacheIndex::refresh`] seeks
+//! each segment to its remembered offset and tails only the appended
+//! bytes, so the sharded idle-retry loop and the drive monitor poll at
+//! a cost proportional to *new* work, not total history.  Newly
+//! appearing segments (a sibling shard starting up) are tailed from
+//! offset 0.
+//!
+//! A partially-appended final line (no terminating newline — a sibling
+//! writer mid-`write`, or a killed writer's torn tail) is never
+//! consumed: `read_to` stops at the last newline, and the line is
+//! indexed by a later refresh once its newline lands.
+//!
+//! # The compaction-generation contract
+//!
+//! Remembered offsets are only valid while segments are append-only.
+//! Any rewrite — [`super::gc`] compaction, pruning, segment removal —
+//! bumps the directory's generation marker
+//! ([`super::segment::bump_generation`]) *after* taking every segment's
+//! writer lock.  `refresh` re-reads the marker (one tiny file) each
+//! poll; a changed generation, a vanished segment, or a segment shorter
+//! than its remembered offset all trigger one full rescan, after which
+//! tailing resumes incrementally.  Live `RunCache` writers hold their
+//! segment lock for their whole lifetime, so gc can never rewrite under
+//! an open cache — the rescan path exists for lock-free readers
+//! ([`CacheWatcher`]) and for caches observing a directory another
+//! process compacted between their polls.
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::{BufRead, Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use crate::train::RunRecord;
+
+use super::segment::{for_each_line, list_segments, parse_full_entry, read_generation};
+
+// ------------------------------------------------------------- scanner
+
+/// Metadata extracted from one cache line without materializing the
+/// record: the index's unit of work.
+pub(crate) struct LineMeta {
+    pub(crate) key: String,
+    pub(crate) manifest: String,
+    pub(crate) ts: u64,
+}
+
+/// Structurally validate one cache line and extract `key` / `manifest` /
+/// `ts`, *skipping* (not building) the `record` value.
+///
+/// Accepts exactly the lines [`parse_full_entry`] accepts at the JSON
+/// level: full-grammar validation, no trailing garbage, `key` and
+/// `manifest` must be strings, `ts` (optional, default 0) a number, and
+/// a `record` member must be present.  A line whose `record` is valid
+/// JSON of the wrong *shape* is indexed here and rejected at hit time
+/// instead — the graceful-degradation path, not the common one.
+pub(crate) fn scan_line(line: &str) -> Result<LineMeta> {
+    let mut s = Scan { b: line.as_bytes(), i: 0 };
+    s.ws();
+    s.expect(b'{')?;
+    let mut key: Option<String> = None;
+    let mut manifest: Option<String> = None;
+    let mut ts: Option<f64> = None;
+    let mut have_record = false;
+    s.ws();
+    if s.peek()? == b'}' {
+        s.i += 1;
+    } else {
+        loop {
+            s.ws();
+            let name = s.string()?;
+            s.ws();
+            s.expect(b':')?;
+            s.ws();
+            match name.as_str() {
+                "key" => key = Some(s.string()?),
+                "manifest" => manifest = Some(s.string()?),
+                "ts" => ts = Some(s.number()?),
+                "record" => {
+                    s.skip_value()?;
+                    have_record = true;
+                }
+                _ => s.skip_value()?,
+            }
+            s.ws();
+            match s.peek()? {
+                b',' => s.i += 1,
+                b'}' => {
+                    s.i += 1;
+                    break;
+                }
+                c => bail!("expected , or }} got {:?} at byte {}", c as char, s.i),
+            }
+        }
+    }
+    s.ws();
+    if s.i != s.b.len() {
+        bail!("trailing characters at byte {}", s.i);
+    }
+    let key = key.ok_or_else(|| anyhow::anyhow!("missing key \"key\""))?;
+    let manifest = manifest.ok_or_else(|| anyhow::anyhow!("missing key \"manifest\""))?;
+    if !have_record {
+        bail!("missing key \"record\"");
+    }
+    Ok(LineMeta { key, manifest, ts: ts.unwrap_or(0.0) as u64 })
+}
+
+/// A validating JSON *skipper*: same grammar as `util::Json::parse`,
+/// but allocates only for the strings the caller asks for.
+struct Scan<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Scan<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unexpected end of input"))
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            bail!("expected {:?} at byte {}", c as char, self.i);
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    /// Parse (and allocate) a string value.
+    fn string(&mut self) -> Result<String> {
+        let start = self.i;
+        self.skip_string()?;
+        // the span is known valid; decode via the reference parser so
+        // escape semantics can never drift from util::Json
+        let span = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|e| anyhow::anyhow!("non-UTF-8 string at byte {start}: {e}"))?;
+        match crate::util::Json::parse(span)? {
+            crate::util::Json::Str(s) => Ok(s),
+            _ => bail!("not a string at byte {start}"),
+        }
+    }
+
+    fn skip_string(&mut self) -> Result<()> {
+        self.expect(b'"')?;
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(()),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' | b'\\' | b'/' | b'n' | b't' | b'r' | b'b' | b'f' => {}
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                bail!("truncated \\u escape at byte {}", self.i);
+                            }
+                            let hex = &self.b[self.i..self.i + 4];
+                            if !hex.iter().all(|b| b.is_ascii_hexdigit()) {
+                                bail!("bad \\u escape at byte {}", self.i);
+                            }
+                            self.i += 4;
+                        }
+                        _ => bail!("bad escape at byte {}", self.i),
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<f64> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])?;
+        s.parse::<f64>()
+            .map_err(|e| anyhow::anyhow!("bad number {s:?}: {e}"))
+    }
+
+    fn skip_number(&mut self) -> Result<()> {
+        self.number().map(|_| ())
+    }
+
+    fn lit(&mut self, word: &str) -> Result<()> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(())
+        } else {
+            bail!("invalid literal at byte {}", self.i)
+        }
+    }
+
+    fn skip_value(&mut self) -> Result<()> {
+        match self.peek()? {
+            b'{' => self.skip_object(),
+            b'[' => self.skip_array(),
+            b'"' => self.skip_string(),
+            b't' => self.lit("true"),
+            b'f' => self.lit("false"),
+            b'n' => self.lit("null"),
+            _ => self.skip_number(),
+        }
+    }
+
+    fn skip_array(&mut self) -> Result<()> {
+        self.expect(b'[')?;
+        self.ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(());
+        }
+        loop {
+            self.ws();
+            self.skip_value()?;
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                c => bail!("expected , or ] got {:?} at byte {}", c as char, self.i),
+            }
+        }
+    }
+
+    fn skip_object(&mut self) -> Result<()> {
+        self.expect(b'{')?;
+        self.ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(());
+        }
+        loop {
+            self.ws();
+            self.skip_string()?;
+            self.ws();
+            self.expect(b':')?;
+            self.ws();
+            self.skip_value()?;
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                c => bail!("expected , or }} got {:?} at byte {}", c as char, self.i),
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------- index
+
+/// Where one key's record lives on disk.  `manifest` is an id into the
+/// index's intern table — at 10⁵⁺ keys over a handful of manifests,
+/// per-entry `String`s would dominate the index's memory.
+#[derive(Clone, Copy)]
+pub(crate) struct Loc {
+    seg: u32,
+    offset: u64,
+    /// Line length in bytes, newline excluded (one cache line is far
+    /// below 4 GiB; the wire protocol caps frames at 64 MiB already).
+    len: u32,
+    ts: u64,
+    manifest: u32,
+}
+
+/// Per-segment tail state.
+struct SegTail {
+    path: PathBuf,
+    /// Bytes consumed so far; always a line boundary.
+    read_to: u64,
+    /// Complete lines consumed (for warning line numbers).
+    lines: usize,
+}
+
+/// The lazy key index over one cache directory.  See the module docs
+/// for the refresh / rescan contract.
+pub(crate) struct CacheIndex {
+    dir: PathBuf,
+    segs: Vec<SegTail>,
+    by_path: HashMap<PathBuf, u32>,
+    keys: HashMap<String, Loc>,
+    manifests: Vec<String>,
+    manifest_ids: HashMap<String, u32>,
+    generation: u64,
+}
+
+impl CacheIndex {
+    /// An empty index over `dir`; nothing is scanned until
+    /// [`CacheIndex::refresh`] (or [`CacheIndex::track_segment`] for a
+    /// writer registering its own fresh segment).
+    pub(crate) fn new(dir: &Path) -> CacheIndex {
+        CacheIndex {
+            dir: dir.to_path_buf(),
+            segs: Vec::new(),
+            by_path: HashMap::new(),
+            keys: HashMap::new(),
+            manifests: Vec::new(),
+            manifest_ids: HashMap::new(),
+            generation: read_generation(dir),
+        }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub(crate) fn contains(&self, key: &str) -> bool {
+        self.keys.contains_key(key)
+    }
+
+    pub(crate) fn n_segments(&self) -> usize {
+        self.segs.len()
+    }
+
+    fn intern(&mut self, manifest: &str) -> u32 {
+        if let Some(&id) = self.manifest_ids.get(manifest) {
+            return id;
+        }
+        let id = self.manifests.len() as u32;
+        self.manifests.push(manifest.to_string());
+        self.manifest_ids.insert(manifest.to_string(), id);
+        id
+    }
+
+    /// The manifest a key was recorded under — an index read, no
+    /// record parse.
+    pub(crate) fn manifest_of(&self, key: &str) -> Option<&str> {
+        self.keys
+            .get(key)
+            .map(|l| self.manifests[l.manifest as usize].as_str())
+    }
+
+    /// The `ts` a key was recorded with (0 for pre-lifecycle lines).
+    pub(crate) fn recorded_ts(&self, key: &str) -> Option<u64> {
+        self.keys.get(key).map(|l| l.ts)
+    }
+
+    /// Segment id for `path`, registering it (tail at 0) if new.
+    fn seg_id(&mut self, path: &Path) -> u32 {
+        if let Some(&id) = self.by_path.get(path) {
+            return id;
+        }
+        let id = self.segs.len() as u32;
+        self.segs.push(SegTail { path: path.to_path_buf(), read_to: 0, lines: 0 });
+        self.by_path.insert(path.to_path_buf(), id);
+        id
+    }
+
+    /// Register `path` without scanning it — a writer's own segment,
+    /// just created or truncated, whose appends will be indexed via
+    /// [`CacheIndex::note_local_append`].
+    pub(crate) fn track_segment(&mut self, path: &Path) {
+        self.seg_id(path);
+    }
+
+    /// Merge in whatever changed on disk since the last call, tailing
+    /// only appended bytes (one full rescan instead when the compaction
+    /// generation moved, a segment vanished, or a segment shrank).
+    /// Returns the number of newly visible keys.
+    pub(crate) fn refresh(&mut self) -> usize {
+        let before = self.keys.len();
+        let listed = match list_segments(&self.dir) {
+            Ok(l) => l,
+            Err(e) => {
+                eprintln!("run-cache: refresh failed: {e:#}");
+                return 0;
+            }
+        };
+        let disk_generation = read_generation(&self.dir);
+        let mut rescan = disk_generation != self.generation;
+        self.generation = disk_generation;
+        if !rescan {
+            // a tracked segment that disappeared or shrank means a
+            // rewrite happened under us (gc from a process that didn't
+            // bump the marker is impossible; this is belt-and-braces
+            // for hand-edited directories)
+            for seg in &self.segs {
+                let len = std::fs::metadata(&seg.path).map(|m| m.len()).unwrap_or(0);
+                if (!listed.contains(&seg.path) && seg.read_to > 0) || len < seg.read_to {
+                    rescan = true;
+                    break;
+                }
+            }
+        }
+        if rescan {
+            self.keys.clear();
+            self.segs.clear();
+            self.by_path.clear();
+        }
+        for path in &listed {
+            let id = self.seg_id(path);
+            self.tail_segment(id as usize);
+        }
+        // saturating: a rescan after a *pruning* gc legitimately shrinks
+        // the key set, and "newly visible" is then zero, not underflow
+        self.keys.len().saturating_sub(before)
+    }
+
+    /// Read and index `[read_to, len)` of one segment, consuming only
+    /// complete (newline-terminated) lines.  Streams line by line — a
+    /// cold scan of a multi-GB compacted segment must cost O(one line)
+    /// of buffer, not a whole-file slurp (the index's memory contract
+    /// is O(keys), including transiently).
+    fn tail_segment(&mut self, id: usize) {
+        let path = self.segs[id].path.clone();
+        let start = self.segs[id].read_to;
+        let Ok(mut f) = File::open(&path) else {
+            // vanished mid-poll; the next refresh's liveness check
+            // turns this into a rescan
+            return;
+        };
+        let len = match f.metadata() {
+            Ok(m) => m.len(),
+            Err(_) => return,
+        };
+        if len <= start || f.seek(SeekFrom::Start(start)).is_err() {
+            return;
+        }
+        // take() bounds the scan: bytes appended *while* we read are
+        // picked up by the next refresh at a clean line boundary
+        let mut reader = std::io::BufReader::new(f.take(len - start));
+        let mut consumed = 0u64;
+        let mut buf = Vec::new();
+        loop {
+            buf.clear();
+            let n = match reader.read_until(b'\n', &mut buf) {
+                Ok(0) => break,
+                Ok(n) => n,
+                Err(e) => {
+                    eprintln!("run-cache: stopping scan of {}: {e}", path.display());
+                    break;
+                }
+            };
+            if buf.last() != Some(&b'\n') {
+                // unterminated tail (a sibling mid-append, or a killed
+                // writer): defer — never consume a torn line
+                break;
+            }
+            let offset = start + consumed;
+            consumed += n as u64;
+            self.segs[id].lines += 1;
+            let raw = &buf[..buf.len() - 1];
+            let text = String::from_utf8_lossy(raw);
+            let line = text.trim_end_matches('\r');
+            if line.trim().is_empty() {
+                continue;
+            }
+            match scan_line(line) {
+                Ok(meta) => {
+                    let manifest = self.intern(&meta.manifest);
+                    let loc = Loc {
+                        seg: id as u32,
+                        offset,
+                        len: raw.len() as u32,
+                        ts: meta.ts,
+                        manifest,
+                    };
+                    self.keys.insert(meta.key, loc);
+                }
+                Err(e) => {
+                    eprintln!(
+                        "run-cache: skipping corrupt line {} of {}: {e:#}",
+                        self.segs[id].lines,
+                        path.display()
+                    );
+                }
+            }
+        }
+        self.segs[id].read_to = start + consumed;
+    }
+
+    /// Index a line this process just appended to its own segment (at
+    /// the segment's current tail), without re-reading it from disk.
+    /// `line_len` excludes the trailing newline.
+    pub(crate) fn note_local_append(
+        &mut self,
+        path: &Path,
+        key: &str,
+        manifest: &str,
+        ts: u64,
+        line_len: usize,
+    ) {
+        let id = self.seg_id(path);
+        let offset = self.segs[id as usize].read_to;
+        let manifest = self.intern(manifest);
+        self.keys.insert(
+            key.to_string(),
+            Loc { seg: id, offset, len: line_len as u32, ts, manifest },
+        );
+        self.segs[id as usize].read_to = offset + line_len as u64 + 1;
+        self.segs[id as usize].lines += 1;
+    }
+
+    /// A local append failed partway: re-align the segment's tail with
+    /// the bytes actually on disk so later offsets stay truthful.
+    pub(crate) fn resync_local(&mut self, path: &Path) {
+        let id = self.seg_id(path) as usize;
+        if let Ok(m) = std::fs::metadata(path) {
+            self.segs[id].read_to = m.len();
+        }
+    }
+
+    /// Parse the record for `key` from disk (the hit path; the caller
+    /// memoizes).  A record that no longer parses — hand-edited file,
+    /// offset drift — is dropped from the index with a warning and
+    /// reported as a miss, mirroring the eager reader's corrupt-line
+    /// tolerance.
+    pub(crate) fn load(&mut self, key: &str) -> Option<RunRecord> {
+        let loc = *self.keys.get(key)?;
+        let path = &self.segs[loc.seg as usize].path;
+        let parsed = read_span(path, loc.offset, loc.len as usize).and_then(|raw| {
+            let text = String::from_utf8_lossy(&raw);
+            parse_full_entry(text.trim_end_matches(['\n', '\r']))
+        });
+        match parsed {
+            Ok(e) if e.key == key => Some(e.record),
+            Ok(e) => {
+                eprintln!(
+                    "run-cache: index entry for {key} resolved to {} in {} (stale \
+                     offset?); dropping it",
+                    e.key,
+                    path.display()
+                );
+                self.keys.remove(key);
+                None
+            }
+            Err(err) => {
+                eprintln!(
+                    "run-cache: could not load {key} from {}: {err:#}; dropping it",
+                    path.display()
+                );
+                self.keys.remove(key);
+                None
+            }
+        }
+    }
+}
+
+fn read_span(path: &Path, offset: u64, len: usize) -> Result<Vec<u8>> {
+    let mut f = File::open(path)?;
+    f.seek(SeekFrom::Start(offset))?;
+    let mut buf = vec![0u8; len];
+    f.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+// ------------------------------------------------------------- watcher
+
+/// A read-only, lock-free incremental observer of a cache directory —
+/// the shard driver's progress monitor.  Each [`CacheWatcher::poll`]
+/// costs O(bytes appended since the last poll) instead of a full
+/// re-read of every segment; compaction under the watcher is handled
+/// by the generation contract (one full rescan, then incremental
+/// again).  Takes no locks, so a line being appended concurrently is
+/// simply picked up one poll later.
+pub struct CacheWatcher {
+    idx: CacheIndex,
+}
+
+impl CacheWatcher {
+    pub fn new(dir: &Path) -> CacheWatcher {
+        CacheWatcher { idx: CacheIndex::new(dir) }
+    }
+
+    /// Tail whatever was appended since the last poll; returns the
+    /// number of newly visible keys.
+    pub fn poll(&mut self) -> usize {
+        self.idx.refresh()
+    }
+
+    /// Unique run keys seen across all segments (after the last poll).
+    pub fn unique_keys(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Segments currently tracked (after the last poll).
+    pub fn segments(&self) -> usize {
+        self.idx.n_segments()
+    }
+}
+
+// -------------------------------------------------------------- stats
+
+/// Per-segment summary from [`stats`].
+#[derive(Debug, Clone)]
+pub struct SegmentStats {
+    pub name: String,
+    pub entries: usize,
+    pub corrupt: usize,
+    pub bytes: u64,
+}
+
+/// Whole-directory summary from [`stats`].
+#[derive(Debug, Clone, Default)]
+pub struct CacheStats {
+    pub segments: Vec<SegmentStats>,
+    /// Total lines parsed across segments (including cross-segment
+    /// duplicates of one key).
+    pub total_entries: usize,
+    pub unique_keys: usize,
+    /// `total_entries - unique_keys`: same key recorded in several
+    /// segments (compaction removes these).
+    pub duplicate_keys: usize,
+    pub corrupt_lines: usize,
+    pub total_bytes: u64,
+    /// Unique keys per manifest name.
+    pub per_manifest: std::collections::BTreeMap<String, usize>,
+    pub oldest_ts: Option<u64>,
+    pub newest_ts: Option<u64>,
+}
+
+/// Summarize a cache directory without taking any locks (read-only; a
+/// line being appended concurrently may be counted as corrupt).
+///
+/// Streams every line through the key scanner (`scan_line`) — no
+/// record is ever materialized, so `repro cache stats` on a 10⁵-entry
+/// directory allocates per *key*, not per curve point.
+pub fn stats(dir: &Path) -> Result<CacheStats> {
+    let mut st = CacheStats::default();
+    let mut manifest_of: HashMap<String, String> = HashMap::new();
+    for seg in list_segments(dir)? {
+        let bytes = std::fs::metadata(&seg).map(|m| m.len()).unwrap_or(0);
+        let (mut loaded, mut corrupt) = (0usize, 0usize);
+        for_each_line(&seg, |line| {
+            if line.trim().is_empty() {
+                return;
+            }
+            match scan_line(line) {
+                Ok(meta) => {
+                    loaded += 1;
+                    if meta.ts > 0 {
+                        st.oldest_ts = Some(st.oldest_ts.map_or(meta.ts, |t| t.min(meta.ts)));
+                        st.newest_ts = Some(st.newest_ts.map_or(meta.ts, |t| t.max(meta.ts)));
+                    }
+                    manifest_of.insert(meta.key, meta.manifest);
+                }
+                Err(_) => corrupt += 1,
+            }
+        })?;
+        st.total_entries += loaded;
+        st.corrupt_lines += corrupt;
+        st.total_bytes += bytes;
+        st.segments.push(SegmentStats {
+            name: seg.file_name().and_then(|n| n.to_str()).unwrap_or("?").to_string(),
+            entries: loaded,
+            corrupt,
+            bytes,
+        });
+    }
+    st.unique_keys = manifest_of.len();
+    st.duplicate_keys = st.total_entries - st.unique_keys;
+    for manifest in manifest_of.into_values() {
+        *st.per_manifest.entry(manifest).or_insert(0) += 1;
+    }
+    Ok(st)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scan_line_matches_the_eager_parser_on_well_formed_lines() {
+        let rec = RunRecord {
+            label: "l\"esc\\ape\nü".to_string(),
+            train_curve: vec![(1, 2.5), (2, f64::NAN)],
+            valid_curve: vec![(2, 2.25)],
+            final_valid_loss: 2.25,
+            rms_curves: std::collections::BTreeMap::from([(
+                "w.emb".to_string(),
+                vec![(1u64, 0.5f64)],
+            )]),
+            final_rms: vec![("w.emb".to_string(), 0.5)],
+            diverged: false,
+            wall_seconds: 0.125,
+        };
+        let line = super::super::segment::entry_line("00ff00ff00ff00ff", "man-ü", 1234, &rec);
+        let meta = scan_line(&line).unwrap();
+        let full = parse_full_entry(&line).unwrap();
+        assert_eq!(meta.key, full.key);
+        assert_eq!(meta.manifest, full.manifest);
+        assert_eq!(meta.ts, full.ts);
+    }
+
+    #[test]
+    fn scan_line_defaults_missing_ts_to_zero() {
+        let meta = scan_line(r#"{"key":"aa","manifest":"m","record":{}}"#).unwrap();
+        assert_eq!(meta.ts, 0);
+    }
+
+    #[test]
+    fn scan_line_rejects_what_the_eager_parser_rejects() {
+        for bad in [
+            "",
+            "not json",
+            r#"{"key":"aa","manifest":"m","record":{}"#, // unterminated
+            r#"{"key":"aa","manifest":"m","record":{}} trailing"#,
+            r#"{"key":12,"manifest":"m","record":{}}"#, // key not a string
+            r#"{"key":"aa","manifest":5,"record":{}}"#,
+            r#"{"key":"aa","manifest":"m","record":{},"ts":"soon"}"#, // ts not a number
+            r#"{"key":"aa","manifest":"m"}"#,           // no record
+            r#"{"manifest":"m","record":{}}"#,          // no key
+            r#"{"key":"aa","manifest":"m","record":{"x":}}"#, // bad nested value
+            r#"[1,2,3]"#,
+        ] {
+            assert!(scan_line(bad).is_err(), "scanner accepted {bad:?}");
+            assert!(parse_full_entry(bad).is_err(), "eager parser accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn scan_line_skips_arbitrary_nested_values() {
+        let line = r#"{"extra":[{"deep":[null,true,false,-1e-3,"séq"]},[]],"key":"kk","manifest":"mm","record":{"a":[1,[2,[3]]],"b":"x"},"ts":7}"#;
+        let meta = scan_line(line).unwrap();
+        assert_eq!((meta.key.as_str(), meta.manifest.as_str(), meta.ts), ("kk", "mm", 7));
+    }
+}

@@ -1,0 +1,997 @@
+//! Content-addressed run cache with sharded, lock-safe segments, a lazy
+//! byte-offset index, and a lifecycle (GC / compaction / stats).
+//!
+//! # Addressing
+//!
+//! A run is addressed by a stable 64-bit FNV-1a hash of
+//! `(manifest name, corpus config, canonical RunConfig)` — see
+//! [`crate::train::RunConfig::canonical_json`] for what is (and is not)
+//! part of the address; notably the presentation-only `label` is
+//! excluded, so the same baseline config reached from different figures
+//! deduplicates.  The corpus participates through its generator config
+//! ([`CorpusConfig`]): corpora are deterministic functions of it, and
+//! without it a quick-mode (200k-token) record would silently satisfy a
+//! full-corpus run of the same config.  The canonical form serializes
+//! through the in-tree JSON writer with sorted keys and
+//! shortest-round-trip floats, and FNV-1a is a fixed function, so keys
+//! are stable across field-construction order *and* across process runs
+//! — which is what makes the on-disk cache a resume mechanism.
+//!
+//! # Cache layout & lifecycle
+//!
+//! A cache directory holds one or more JSONL *segments*:
+//!
+//! * `runs.jsonl` — the unsharded (single-process) segment, also the
+//!   output of compaction;
+//! * `runs.<k>.jsonl` — the segment written by shard `k` of a sharded
+//!   sweep (`--shard k/n`).
+//!
+//! Each line is one completed run:
+//! `{"key":…,"manifest":…,"record":…,"ts":…}` — appended and flushed as
+//! results arrive, so a killed sweep loses at most the in-flight runs.
+//! `ts` is the unix-seconds completion time (overridable via the
+//! `UMUP_CACHE_TS` env var, which the deterministic concurrency harness
+//! uses to make whole segments byte-for-byte reproducible).
+//!
+//! *Reads* are **lazy**: opening a cache with `resume` scans every
+//! segment for *keys only* (sorted by file name, last write per key
+//! wins), building a `key → (segment, byte offset, length, ts,
+//! manifest)` index without materializing a single [`RunRecord`];
+//! records are parsed on demand at hit time and memoized per key, so
+//! resident memory is O(keys + records touched), not O(total curve
+//! points).  [`RunCache::refresh_from_disk`] is **incremental**: it
+//! tails only the bytes siblings appended since the last call (the
+//! `index` submodule holds the offset/tailing/generation machinery;
+//! [`CacheWatcher`] is its lock-free, read-only public face), so the
+//! sharded converge loop polls at O(new bytes).
+//!
+//! *Writes* are single-writer per segment: each opener appends only to
+//! its own segment, guarded by an advisory lock file
+//! (`<segment>.lock`, containing the holder pid).  A stale lock — its
+//! pid no longer alive — is reclaimed with a warning; a live holder is a
+//! hard error, so two processes can never interleave writes within one
+//! segment.  Distinct shards write distinct segments, which is what
+//! makes a sharded sweep safe without any cross-process byte-level
+//! locking.
+//!
+//! *Lifecycle*: [`stats`] summarizes a cache directory (per-segment
+//! entry/corruption/byte counts, duplicate keys across segments,
+//! per-manifest totals) by streaming the key scanner — no record is
+//! materialized; [`gc()`] prunes by age (`ts`) and/or manifest, evicts
+//! oldest-first down to a byte budget (`--max-bytes`), and compacts all
+//! segments into a single key-sorted `runs.jsonl`, taking every segment
+//! lock first so it never races a live writer, and bumping the
+//! directory's compaction *generation* so incremental readers rescan.
+//! An *unsharded* open with `resume` auto-compacts (best-effort) once a
+//! directory accretes more than
+//! [`AUTO_COMPACT_SEGMENT_THRESHOLD`] segments, so long-lived sharded
+//! caches don't degrade every open into an N-file merge (shard children
+//! never compact — they open one directory concurrently and must not
+//! steal each other's locks).
+//!
+//! # Crash safety
+//!
+//! A process killed mid-append leaves a truncated (possibly non-UTF-8)
+//! final line.  Scanning is byte-oriented and lossy: corrupt lines are
+//! *skipped with a warning*, never propagated, so a `--resume` after a
+//! crash re-runs at most the torn job.  A torn line that has not yet
+//! been newline-terminated is never consumed by the incremental tailer
+//! — a sibling caught mid-`write` is simply picked up one refresh
+//! later, once its newline lands.
+
+mod gc;
+mod index;
+mod segment;
+
+pub use self::gc::{
+    gc, parse_bytes, parse_duration, GcOptions, GcReport, AUTO_COMPACT_SEGMENT_THRESHOLD,
+};
+pub use self::index::{stats, CacheStats, CacheWatcher, SegmentStats};
+pub use self::segment::list_segments;
+
+pub(crate) use self::segment::{entry_line, now_ts, parse_full_entry};
+
+use std::collections::{BTreeMap, HashMap};
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::{Corpus, CorpusConfig};
+use crate::train::{RunConfig, RunRecord};
+use crate::util::hash::fnv1a64;
+use crate::util::Json;
+
+use self::index::CacheIndex;
+use self::segment::{segment_name, tail_is_torn, SegmentLock};
+
+/// Canonical form of the corpus generator config (sorted keys).  Also
+/// the `corpus` field of a worker wire-protocol job frame (see
+/// `crate::engine::backend::wire`), so key hashing and the wire agree
+/// on what a corpus *is*.
+pub(crate) fn corpus_json(c: &CorpusConfig) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("vocab".to_string(), Json::Num(c.vocab as f64));
+    m.insert("n_tokens".to_string(), Json::Num(c.n_tokens as f64));
+    m.insert("seed".to_string(), Json::Num(c.seed as f64));
+    m.insert("zipf_s".to_string(), Json::Num(c.zipf_s));
+    m.insert("k_succ".to_string(), Json::Num(c.k_succ as f64));
+    m.insert("smoothing".to_string(), Json::Num(c.smoothing));
+    m.insert("valid_frac".to_string(), Json::Num(c.valid_frac));
+    Json::Obj(m)
+}
+
+/// The content address of one run, as a 16-hex-digit string.
+pub fn run_key(manifest: &str, corpus: &Corpus, cfg: &RunConfig) -> String {
+    run_key_from_dumps(
+        manifest,
+        &corpus_json(&corpus.config).dump(),
+        &cfg.canonical_json().dump(),
+    )
+}
+
+/// [`run_key`] over pre-serialized canonical forms — the memoized path
+/// ([`crate::engine::EngineJob`] computes each dump once and reuses it
+/// here and on the worker wire).
+pub(crate) fn run_key_from_dumps(manifest: &str, corpus_dump: &str, config_dump: &str) -> String {
+    let payload = format!("{manifest}\n{corpus_dump}\n{config_dump}");
+    format!("{:016x}", fnv1a64(payload.as_bytes()))
+}
+
+// ------------------------------------------------------------- sharding
+
+/// One slice of a sharded sweep: this process owns every run key whose
+/// hash lands in residue class `index` mod `count`.
+///
+/// Ownership is a pure function of the content address, so N processes
+/// given the same job list and the same `count` partition it into
+/// disjoint, deterministic slices without any coordination — the slices
+/// are hash-balanced, not contiguous.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    pub index: usize,
+    pub count: usize,
+}
+
+impl Shard {
+    /// Parse the CLI form `i/n` (0-based, `i < n`).
+    pub fn parse(s: &str) -> Result<Shard> {
+        let (i, n) = s
+            .split_once('/')
+            .with_context(|| format!("bad shard spec {s:?} (expected i/n, e.g. 0/4)"))?;
+        let index: usize = i.trim().parse().with_context(|| format!("bad shard index {i:?}"))?;
+        let count: usize = n.trim().parse().with_context(|| format!("bad shard count {n:?}"))?;
+        if count == 0 {
+            bail!("shard count must be >= 1");
+        }
+        if index >= count {
+            bail!("shard index {index} out of range for count {count} (0-based)");
+        }
+        Ok(Shard { index, count })
+    }
+
+    /// Does this shard own the run with content address `key`?
+    pub fn owns(&self, key: &str) -> bool {
+        self.index_of(key) == self.index
+    }
+
+    /// Which shard (0..count) owns `key`.
+    pub fn index_of(&self, key: &str) -> usize {
+        // run keys are 16-hex FNV digests; fall back to re-hashing for
+        // anything else so arbitrary strings still partition stably
+        let h = u64::from_str_radix(key, 16).unwrap_or_else(|_| fnv1a64(key.as_bytes()));
+        (mix64(h) % self.count as u64) as usize
+    }
+}
+
+/// splitmix64 finalizer.  FNV-1a's multiply only carries differences
+/// *upward*, so related payloads cluster in the digest's low bits —
+/// taking `h % count` directly can park an entire sweep in one shard
+/// (observed: 8/8 same-parity keys for an eta-only grid).  Mixing
+/// high bits back down first makes the partition track the whole
+/// digest.  Partition assignment only — never part of the on-disk key.
+fn mix64(mut h: u64) -> u64 {
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94d0_49bb_1331_11eb);
+    h ^= h >> 31;
+    h
+}
+
+impl std::fmt::Display for Shard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.index, self.count)
+    }
+}
+
+// ----------------------------------------------------------- RunCache
+
+/// The engine's run cache: a lazy key index over segmented JSONL
+/// persistence, with on-demand (memoized) record loading.
+///
+/// `records` holds every record this cache has *materialized*: results
+/// `put` this session plus disk entries touched by [`RunCache::get`].
+/// The full key set lives in the byte-offset `index` — records for the
+/// untouched tail of a 10⁵-entry history are never parsed, so open and
+/// refresh cost scales with keys / new bytes, not with total curve
+/// data.  (Mirroring the eager reader it replaced, records once
+/// materialized are kept until the cache is dropped; a gc running in
+/// another process can remove keys from *future* opens, not from a live
+/// cache's memo.)
+pub struct RunCache {
+    /// Memoized / locally-recorded records (a subset of the index keys
+    /// for persistent caches; the whole cache for in-memory ones).
+    records: HashMap<String, RunRecord>,
+    /// Lazy key index over the cache directory; `None` for in-memory.
+    index: Option<CacheIndex>,
+    file: Option<File>,
+    path: Option<PathBuf>,
+    /// Held for the cache's lifetime; releases (deletes) on drop.
+    _lock: Option<SegmentLock>,
+}
+
+impl RunCache {
+    /// A process-local cache (still deduplicates within a sweep and
+    /// across an engine's lifetime; nothing is written to disk).
+    pub fn in_memory() -> RunCache {
+        RunCache { records: HashMap::new(), index: None, file: None, path: None, _lock: None }
+    }
+
+    /// Open the persistent, unsharded cache at `dir/runs.jsonl`
+    /// (equivalent to [`RunCache::open_sharded`] with no shard).
+    pub fn open(dir: &Path, resume: bool) -> Result<RunCache> {
+        Self::open_sharded(dir, None, resume)
+    }
+
+    /// Open the persistent cache in `dir`, appending to this opener's
+    /// segment (`runs.jsonl`, or `runs.<k>.jsonl` for shard `k`).
+    ///
+    /// The segment is locked against concurrent writers for the cache's
+    /// lifetime.  With `resume`, pre-existing keys from **all**
+    /// segments are indexed (corrupt lines are skipped with a warning —
+    /// a truncated tail from a killed process must not poison the
+    /// sweep; records load lazily on first [`RunCache::get`]), and —
+    /// for *unsharded* openers only, since shard children open one
+    /// directory concurrently — a directory that has accreted more than
+    /// [`AUTO_COMPACT_SEGMENT_THRESHOLD`] segments is first compacted
+    /// into one (best-effort: skipped with a note if any segment has a
+    /// live writer).  Without `resume`, this opener's own segment is
+    /// truncated (a fresh recording); other shards' segments are left
+    /// alone, since their writers may be live — use `repro cache gc` to
+    /// clear a directory wholesale.
+    pub fn open_sharded(dir: &Path, shard: Option<Shard>, resume: bool) -> Result<RunCache> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating cache dir {}", dir.display()))?;
+        if resume && shard.is_none() {
+            // auto-compaction: a long-lived sharded cache dir otherwise
+            // turns every open into an N-file merge.  Runs before this
+            // opener takes its own segment lock (gc wants them all).
+            // Unsharded opens only: N shard children resume-open one dir
+            // *concurrently*, and a child's gc would grab every sibling's
+            // segment lock and fail their opens mid-drive — the final
+            // unsharded --resume pass (or the next single-process open)
+            // is the natural compaction point instead.
+            let n_segments = list_segments(dir)?.len();
+            if n_segments > AUTO_COMPACT_SEGMENT_THRESHOLD {
+                match gc(dir, &GcOptions::default()) {
+                    Ok(rep) => eprintln!(
+                        "run-cache: auto-compacted {} segments into runs.jsonl \
+                         ({} entries, {} duplicate lines dropped)",
+                        rep.segments_before, rep.kept, rep.deduped
+                    ),
+                    Err(e) => eprintln!(
+                        "run-cache: auto-compaction of {n_segments} segments skipped \
+                         (live writer?): {e:#}"
+                    ),
+                }
+            }
+        }
+        let path = dir.join(segment_name(shard));
+        let lock = SegmentLock::acquire(&path)?;
+        let mut file = if resume {
+            OpenOptions::new().create(true).append(true).open(&path)
+        } else {
+            File::create(&path)
+        }
+        .with_context(|| format!("opening run cache {} for append", path.display()))?;
+        if resume && tail_is_torn(&path) {
+            // a killed writer left a line without its newline: start the
+            // next append on a fresh line so the new record isn't
+            // concatenated onto (and lost with) the torn one.  Healing
+            // runs *before* the index scan, so the scan consumes the
+            // (now terminated) torn line as one corrupt line and lands
+            // its tail offset exactly at the append position.
+            file.write_all(b"\n").context("healing torn run-cache tail")?;
+        }
+        let mut index = CacheIndex::new(dir);
+        if resume {
+            // initial full key scan (sorted segment order, later lines
+            // win — the same merge the eager reader performed)
+            index.refresh();
+        } else {
+            // a fresh recording: nothing pre-existing is visible, but
+            // the (just truncated) own segment is tracked so local
+            // appends index at the right offsets; a later
+            // refresh_from_disk still merges sibling segments in full
+            index.track_segment(&path);
+        }
+        Ok(RunCache {
+            records: HashMap::new(),
+            index: Some(index),
+            file: Some(file),
+            path: Some(path),
+            _lock: Some(lock),
+        })
+    }
+
+    /// Number of addressable records (index keys for persistent caches).
+    pub fn len(&self) -> usize {
+        match &self.index {
+            Some(i) => i.len(),
+            None => self.records.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    /// Look up a record by content address.  For persistent caches this
+    /// is the lazy path: the first hit parses the record from its
+    /// indexed byte span and memoizes it; later hits are map lookups.
+    /// (`&mut self` because of that memoization — the engine keeps its
+    /// cache behind a mutex anyway.)
+    pub fn get(&mut self, key: &str) -> Option<&RunRecord> {
+        if !self.records.contains_key(key) {
+            let rec = self.index.as_mut()?.load(key)?;
+            self.records.insert(key.to_string(), rec);
+        }
+        self.records.get(key)
+    }
+
+    /// Is `key` addressable (without loading its record)?
+    pub fn contains(&self, key: &str) -> bool {
+        self.records.contains_key(key)
+            || self.index.as_ref().is_some_and(|i| i.contains(key))
+    }
+
+    /// The manifest a cached run was recorded under — answered from the
+    /// index alone, no record parse (`None` for in-memory caches and
+    /// unknown keys).
+    pub fn manifest_of(&self, key: &str) -> Option<&str> {
+        self.index.as_ref()?.manifest_of(key)
+    }
+
+    /// Unix-seconds completion time of a cached run (0 for
+    /// pre-lifecycle lines; `None` for in-memory caches and unknown
+    /// keys).  An index read — no record parse.
+    pub fn recorded_ts(&self, key: &str) -> Option<u64> {
+        self.index.as_ref()?.recorded_ts(key)
+    }
+
+    /// Merge in any entries *other* writers appended to this cache
+    /// directory since open — a sharded drain polls this between rounds
+    /// to pick up sibling shards' results.  Incremental: only bytes
+    /// appended since the last call are read (this opener's own appends
+    /// are indexed at write time and never re-read).  Returns the
+    /// number of newly visible records.  No-op (0) for in-memory
+    /// caches.
+    pub fn refresh_from_disk(&mut self) -> usize {
+        match &mut self.index {
+            Some(i) => i.refresh(),
+            None => 0,
+        }
+    }
+
+    /// Record a completed run (idempotent per key) and, if persistent,
+    /// append + flush its JSONL line to this opener's segment.
+    pub fn put(&mut self, key: &str, manifest: &str, record: &RunRecord) -> Result<()> {
+        if self.contains(key) {
+            return Ok(());
+        }
+        self.records.insert(key.to_string(), record.clone());
+        if let (Some(f), Some(index), Some(path)) =
+            (self.file.as_mut(), self.index.as_mut(), self.path.as_deref())
+        {
+            let ts = now_ts();
+            let line = entry_line(key, manifest, ts, record);
+            let appended = writeln!(f, "{line}")
+                .context("appending run-cache line")
+                .and_then(|()| f.flush().context("flushing run cache"));
+            match appended {
+                Ok(()) => index.note_local_append(path, key, manifest, ts, line.len()),
+                Err(e) => {
+                    // a partial write may sit on disk: terminate it
+                    // (best-effort — a stray blank line is harmless,
+                    // an unterminated fragment would swallow the next
+                    // successful append into one corrupt line) and
+                    // re-align the tail with reality so later offsets
+                    // stay truthful.  The record itself stays served
+                    // from memory.
+                    let _ = f.write_all(b"\n").and_then(|()| f.flush());
+                    index.resync_local(path);
+                    return Err(e);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::io::Write as _;
+    use std::time::Duration;
+
+    use super::segment::is_segment_name;
+    use super::*;
+
+    fn rec(label: &str, loss: f64) -> RunRecord {
+        RunRecord {
+            label: label.to_string(),
+            train_curve: vec![(1, loss)],
+            valid_curve: vec![],
+            final_valid_loss: loss,
+            rms_curves: BTreeMap::new(),
+            final_rms: vec![],
+            diverged: false,
+            wall_seconds: 0.0,
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("umup-cache-unit-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn key_depends_on_manifest_and_corpus() {
+        let cfg = RunConfig::quick(
+            "x",
+            crate::parametrization::Parametrization::new(crate::parametrization::Scheme::Umup),
+            crate::parametrization::HpSet::default(),
+            8,
+        );
+        let corpus = |n_tokens: usize| Corpus {
+            config: CorpusConfig { vocab: 64, n_tokens, ..Default::default() },
+            tokens: vec![],
+            n_train: 0,
+        };
+        let (small, big) = (corpus(1000), corpus(2000));
+        assert_eq!(run_key("m1", &small, &cfg), run_key("m1", &small, &cfg));
+        assert_ne!(run_key("m1", &small, &cfg), run_key("m2", &small, &cfg));
+        // a quick-mode corpus must never satisfy a full-corpus run
+        assert_ne!(run_key("m1", &small, &cfg), run_key("m1", &big, &cfg));
+    }
+
+    #[test]
+    fn shard_parse_and_ownership_partition() {
+        let s = Shard::parse("1/4").unwrap();
+        assert_eq!((s.index, s.count), (1, 4));
+        assert!(Shard::parse("4/4").is_err());
+        assert!(Shard::parse("0/0").is_err());
+        assert!(Shard::parse("x/4").is_err());
+        assert!(Shard::parse("3").is_err());
+        // every key is owned by exactly one shard, deterministically
+        for key in ["00000000000000ff", "cbf29ce484222325", "not-hex-at-all"] {
+            let owners: Vec<usize> = (0..4)
+                .filter(|&i| Shard { index: i, count: 4 }.owns(key))
+                .collect();
+            assert_eq!(owners.len(), 1, "{key}: {owners:?}");
+            assert_eq!(owners[0], Shard { index: 0, count: 4 }.index_of(key));
+        }
+        // count=1 owns everything
+        assert!(Shard { index: 0, count: 1 }.owns("cbf29ce484222325"));
+    }
+
+    #[test]
+    fn segment_names_are_recognized() {
+        assert!(is_segment_name("runs.jsonl"));
+        assert!(is_segment_name("runs.0.jsonl"));
+        assert!(is_segment_name("runs.12.jsonl"));
+        assert!(!is_segment_name("runs.jsonl.lock"));
+        assert!(!is_segment_name("runs.0.jsonl.lock"));
+        assert!(!is_segment_name("runs.x.jsonl"));
+        assert!(!is_segment_name("runs..jsonl"));
+        assert!(!is_segment_name("other.jsonl"));
+        assert!(!is_segment_name("runs.jsonl.tmp"));
+        assert!(!is_segment_name(".generation"));
+    }
+
+    #[test]
+    fn sharded_segments_merge_on_resume() {
+        let dir = tmp_dir("merge");
+        {
+            let mut c0 =
+                RunCache::open_sharded(&dir, Some(Shard { index: 0, count: 2 }), true).unwrap();
+            c0.put("aaaa", "m1", &rec("a", 1.0)).unwrap();
+        }
+        {
+            let mut c1 =
+                RunCache::open_sharded(&dir, Some(Shard { index: 1, count: 2 }), true).unwrap();
+            c1.put("bbbb", "m2", &rec("b", 2.0)).unwrap();
+        }
+        let mut merged = RunCache::open(&dir, true).unwrap();
+        assert_eq!(merged.len(), 2);
+        assert_eq!(merged.get("aaaa").unwrap().final_valid_loss, 1.0);
+        assert_eq!(merged.get("bbbb").unwrap().final_valid_loss, 2.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn live_lock_blocks_second_writer_and_stale_lock_is_reclaimed() {
+        let dir = tmp_dir("lock");
+        let cache = RunCache::open(&dir, true).unwrap();
+        let err = RunCache::open(&dir, true).unwrap_err().to_string();
+        assert!(err.contains("locked by live process"), "{err}");
+        // a different segment is fine while the first is held
+        let other =
+            RunCache::open_sharded(&dir, Some(Shard { index: 0, count: 2 }), true).unwrap();
+        drop(other);
+        drop(cache);
+        // stale lock: dead pid -> reclaimed silently (warning only)
+        std::fs::write(dir.join("runs.jsonl.lock"), "4294967294\n").unwrap();
+        let cache = RunCache::open(&dir, true).unwrap();
+        drop(cache);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_and_non_utf8_tails_are_skipped_on_resume() {
+        let dir = tmp_dir("torn");
+        {
+            let mut c = RunCache::open(&dir, false).unwrap();
+            c.put("aaaa", "m", &rec("a", 1.5)).unwrap();
+        }
+        // simulate a crash mid-append: truncated JSON then raw bytes
+        {
+            let mut f = OpenOptions::new()
+                .append(true)
+                .open(dir.join("runs.jsonl"))
+                .unwrap();
+            f.write_all(b"{\"key\":\"bbbb\",\"manifest\":\"m\",\"rec").unwrap();
+            f.write_all(&[0xff, 0xfe, 0x80]).unwrap();
+        }
+        let mut c = RunCache::open(&dir, true).unwrap();
+        assert_eq!(c.len(), 1, "torn tail must be skipped, not fatal");
+        assert!(c.get("aaaa").is_some());
+        // the torn tail is healed: a post-resume append must not be
+        // concatenated onto (and lost with) the garbage line
+        c.put("cccc", "m", &rec("c", 2.5)).unwrap();
+        drop(c);
+        let mut c = RunCache::open(&dir, true).unwrap();
+        assert_eq!(c.len(), 2);
+        assert!(c.get("cccc").is_some(), "append after torn tail must survive");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_prunes_by_manifest_and_age_and_compacts() {
+        let dir = tmp_dir("gc");
+        // (timestamps are the real clock here: mutating the process-wide
+        // UMUP_CACHE_TS env would race sibling unit tests' appends.  The
+        // deterministic-ts path is covered per-child-process by
+        // tests/engine_concurrency.rs.)
+        {
+            let mut c0 =
+                RunCache::open_sharded(&dir, Some(Shard { index: 0, count: 2 }), true).unwrap();
+            c0.put("aaaa", "m1", &rec("a", 1.0)).unwrap();
+            let mut c1 =
+                RunCache::open_sharded(&dir, Some(Shard { index: 1, count: 2 }), true).unwrap();
+            c1.put("bbbb", "m2", &rec("b", 2.0)).unwrap();
+            c1.put("cccc", "m2", &rec("c", 3.0)).unwrap();
+        }
+
+        let st = stats(&dir).unwrap();
+        assert_eq!(st.segments.len(), 2);
+        assert_eq!(st.unique_keys, 3);
+        assert_eq!(st.duplicate_keys, 0);
+        assert_eq!(st.per_manifest["m1"], 1);
+        assert_eq!(st.per_manifest["m2"], 2);
+        assert!(st.oldest_ts.is_some() && st.newest_ts >= st.oldest_ts);
+
+        // dry-run changes nothing
+        let dry = gc(
+            &dir,
+            &GcOptions { manifest: Some("m2".into()), dry_run: true, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!((dry.kept, dry.pruned), (1, 2));
+        assert_eq!(stats(&dir).unwrap().unique_keys, 3);
+
+        // prune one manifest; survivors land compacted in runs.jsonl
+        let rep =
+            gc(&dir, &GcOptions { manifest: Some("m2".into()), ..Default::default() }).unwrap();
+        assert_eq!((rep.kept, rep.pruned), (1, 2));
+        let st = stats(&dir).unwrap();
+        assert_eq!(st.unique_keys, 1);
+        assert_eq!(st.segments.len(), 1);
+        assert_eq!(st.segments[0].name, "runs.jsonl");
+        let mut merged = RunCache::open(&dir, true).unwrap();
+        assert_eq!(merged.len(), 1);
+        assert!(merged.get("aaaa").is_some());
+        drop(merged);
+
+        // age-based: every entry's ts <= now, so --older-than 0s prunes all
+        let rep = gc(
+            &dir,
+            &GcOptions { older_than: Some(Duration::from_secs(0)), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(rep.kept, 0);
+        assert_eq!(rep.pruned, 1);
+        let st = stats(&dir).unwrap();
+        assert_eq!(st.unique_keys, 0);
+        assert!(st.segments.is_empty(), "emptied cache has no segment files");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_refuses_while_a_writer_is_live() {
+        let dir = tmp_dir("gc-live");
+        let mut c = RunCache::open(&dir, true).unwrap();
+        c.put("aaaa", "m", &rec("a", 1.0)).unwrap();
+        let err = gc(&dir, &GcOptions::default()).unwrap_err().to_string();
+        assert!(err.contains("locked by live process"), "{err}");
+        drop(c);
+        assert_eq!(gc(&dir, &GcOptions::default()).unwrap().kept, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_max_bytes_evicts_oldest_first() {
+        let dir = tmp_dir("gc-bytes");
+        // three entries with strictly increasing ts (distinct keys);
+        // UMUP_CACHE_TS can't be used here (process-wide env races
+        // sibling tests), so write the lines directly
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut lines = String::new();
+        for (i, key) in ["aaaa", "bbbb", "cccc"].iter().enumerate() {
+            lines.push_str(&entry_line(key, "m", 100 + i as u64, &rec(key, i as f64)));
+            lines.push('\n');
+        }
+        std::fs::write(dir.join("runs.jsonl"), &lines).unwrap();
+
+        // budget that fits exactly the two newest lines
+        let line_len = |key: &str, i: u64| {
+            entry_line(key, "m", 100 + i, &rec(key, i as f64)).len() as u64 + 1
+        };
+        let budget = line_len("bbbb", 1) + line_len("cccc", 2);
+        // dry run reports the projection without touching the file
+        let dry = gc(
+            &dir,
+            &GcOptions { max_bytes: Some(budget), dry_run: true, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!((dry.kept, dry.evicted, dry.pruned), (2, 1, 0));
+        assert!(dry.bytes_after <= budget);
+        assert_eq!(stats(&dir).unwrap().unique_keys, 3);
+
+        let rep =
+            gc(&dir, &GcOptions { max_bytes: Some(budget), ..Default::default() }).unwrap();
+        assert_eq!((rep.kept, rep.evicted, rep.pruned), (2, 1, 0));
+        assert!(rep.bytes_after <= budget, "{} > {budget}", rep.bytes_after);
+        let mut merged = RunCache::open(&dir, true).unwrap();
+        assert!(merged.get("aaaa").is_none(), "oldest entry must be evicted");
+        assert!(merged.get("bbbb").is_some() && merged.get("cccc").is_some());
+        drop(merged);
+
+        // a generous budget evicts nothing
+        let rep = gc(
+            &dir,
+            &GcOptions { max_bytes: Some(u64::MAX), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!((rep.kept, rep.evicted), (2, 0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_open_auto_compacts_past_the_segment_threshold() {
+        let dir = tmp_dir("auto-compact");
+        let n = AUTO_COMPACT_SEGMENT_THRESHOLD + 2;
+        for i in 0..n {
+            // resume: false — auto-compaction is a resume-open behavior,
+            // so seeding the segments here must not trigger it early
+            let mut c =
+                RunCache::open_sharded(&dir, Some(Shard { index: i, count: n }), false).unwrap();
+            c.put(&format!("{i:016x}"), "m", &rec("r", i as f64)).unwrap();
+        }
+        assert_eq!(list_segments(&dir).unwrap().len(), n);
+        // resume-open triggers compaction: all entries survive, but the
+        // shard segments collapse into runs.jsonl (+ the opener's own)
+        let c = RunCache::open(&dir, true).unwrap();
+        assert_eq!(c.len(), n, "auto-compaction must not lose entries");
+        drop(c);
+        let segs = list_segments(&dir).unwrap();
+        assert_eq!(segs.len(), 1, "segments must be compacted: {segs:?}");
+        assert!(segs[0].ends_with("runs.jsonl"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn byte_count_parsing() {
+        assert_eq!(parse_bytes("0").unwrap(), 0);
+        assert_eq!(parse_bytes("65536").unwrap(), 65536);
+        assert_eq!(parse_bytes("512k").unwrap(), 512 * 1024);
+        assert_eq!(parse_bytes("10m").unwrap(), 10 * 1024 * 1024);
+        assert_eq!(parse_bytes("1g").unwrap(), 1024 * 1024 * 1024);
+        assert_eq!(parse_bytes("2KiB").unwrap(), 2048);
+        assert_eq!(parse_bytes("1.5k").unwrap(), 1536);
+        assert!(parse_bytes("abc").is_err());
+        assert!(parse_bytes("5 parsecs").is_err());
+    }
+
+    #[test]
+    fn duration_parsing() {
+        assert_eq!(parse_duration("0s").unwrap(), Duration::from_secs(0));
+        assert_eq!(parse_duration("90").unwrap(), Duration::from_secs(90));
+        assert_eq!(parse_duration("5m").unwrap(), Duration::from_secs(300));
+        assert_eq!(parse_duration("2h").unwrap(), Duration::from_secs(7200));
+        assert_eq!(parse_duration("30d").unwrap(), Duration::from_secs(2_592_000));
+        assert_eq!(parse_duration("1w").unwrap(), Duration::from_secs(604_800));
+        assert_eq!(parse_duration("1.5h").unwrap(), Duration::from_secs(5400));
+        assert!(parse_duration("abc").is_err());
+        assert!(parse_duration("5 fortnights").is_err());
+        // u64-overflow seconds must be an error, not a panic
+        assert!(parse_duration("10000000000000000d").is_err());
+    }
+
+    // ------------------------------------------- lazy-index behaviors
+
+    /// A record with enough structure to catch span/offset bugs.
+    fn rich_rec(label: &str, i: u64) -> RunRecord {
+        let loss = 3.0 - (i as f64) * 0.125;
+        RunRecord {
+            label: label.to_string(),
+            train_curve: (1..=i + 1).map(|t| (t, loss + 1.0 / t as f64)).collect(),
+            valid_curve: vec![(i + 1, loss)],
+            final_valid_loss: if i % 7 == 3 { f64::INFINITY } else { loss },
+            rms_curves: BTreeMap::from([(
+                format!("w.site{}", i % 3),
+                vec![(1u64, 0.5f64), (i + 1, 1.0)],
+            )]),
+            final_rms: vec![(format!("w.site{}", i % 3), 1.0)],
+            diverged: i % 7 == 3,
+            wall_seconds: 0.25 * i as f64,
+        }
+    }
+
+    /// The old eager reader, reconstructed as the reference: full-parse
+    /// every line of every segment (sorted order, later lines win).
+    fn eager_entries(dir: &Path) -> HashMap<String, (String, u64, RunRecord)> {
+        let mut out = HashMap::new();
+        for seg in list_segments(dir).unwrap() {
+            segment::for_each_line(&seg, |line| {
+                if line.trim().is_empty() {
+                    return;
+                }
+                if let Ok(e) = parse_full_entry(line) {
+                    out.insert(e.key, (e.manifest, e.ts, e.record));
+                }
+            })
+            .unwrap();
+        }
+        out
+    }
+
+    /// Property: the index-backed lazy path resolves exactly the keys,
+    /// and exactly the records, the eager full-parse path did — across
+    /// multiple segments, cross-segment duplicate keys, corrupt lines,
+    /// unicode, non-finite losses, and blank lines.
+    #[test]
+    fn lazy_reads_are_equivalent_to_eager_full_parse() {
+        use crate::util::prop::{check, Config};
+        check(
+            "lazy cache == eager cache",
+            Config { cases: 24, seed: 0x1a5e_cafe },
+            |g| {
+                let dir = tmp_dir(&format!("prop-{}", g.case));
+                std::fs::create_dir_all(&dir).unwrap();
+                let n_segments = g.usize_in(1, 3);
+                // a small key pool forces cross-segment duplicates
+                let key_pool: Vec<String> =
+                    (0..6).map(|k| format!("{:016x}", 0xabc0 + k)).collect();
+                for s in 0..n_segments {
+                    let mut body = String::new();
+                    for e in 0..g.usize_in(0, 10) {
+                        match g.rng.below(10) {
+                            // 0-6: a valid entry (varied shape/unicode)
+                            0..=6 => {
+                                let key = &key_pool[g.rng.below(key_pool.len())];
+                                let manifest = ["w32", "w64-µ", "w128"][g.rng.below(3)];
+                                let label = format!("s{s}e{e}-\"q\"-ü");
+                                let line = entry_line(
+                                    key,
+                                    manifest,
+                                    g.rng.below(1000) as u64,
+                                    &rich_rec(&label, g.rng.below(9) as u64),
+                                );
+                                body.push_str(&line);
+                                body.push('\n');
+                            }
+                            // 7: a blank line (skipped by both paths)
+                            7 => body.push('\n'),
+                            // 8: structural garbage
+                            8 => body.push_str("** not json **\n"),
+                            // 9: a truncated entry (always invalid: the
+                            // closing brace is lost) with a stray tail
+                            _ => {
+                                let line = entry_line(
+                                    &key_pool[g.rng.below(key_pool.len())],
+                                    "w32",
+                                    1,
+                                    &rich_rec("torn", 2),
+                                );
+                                let mut cut = 1 + g.rng.below(line.len() - 1);
+                                while !line.is_char_boundary(cut) {
+                                    cut -= 1;
+                                }
+                                body.push_str(&line[..cut]);
+                                body.push('\u{fffd}');
+                                body.push('\n');
+                            }
+                        }
+                    }
+                    let name =
+                        if s == 0 { "runs.jsonl".into() } else { format!("runs.{s}.jsonl") };
+                    std::fs::write(dir.join(name), &body).unwrap();
+                }
+
+                let eager = eager_entries(&dir);
+                let mut lazy = RunCache::open(&dir, true).unwrap();
+                assert_eq!(lazy.len(), eager.len(), "key sets must match");
+                for (key, (_, _, record)) in &eager {
+                    assert!(lazy.contains(key));
+                    let got = lazy.get(key).unwrap_or_else(|| panic!("missing {key}"));
+                    assert_eq!(got, record, "record for {key} must match eager parse");
+                    // memoized second read agrees
+                    assert_eq!(lazy.get(key).unwrap(), record);
+                }
+                assert!(lazy.get("0000000000000000").is_none());
+                // the streamed stats agree on the merged key set
+                assert_eq!(stats(&dir).unwrap().unique_keys, eager.len());
+                drop(lazy);
+                let _ = std::fs::remove_dir_all(&dir);
+            },
+        );
+    }
+
+    /// Regression: a sibling writer caught mid-append (torn, unterminated
+    /// tail) must not be consumed by the incremental tailer — and the
+    /// completed line must surface on the *next* refresh.
+    #[test]
+    fn torn_tail_while_tailing_is_deferred_not_lost() {
+        let dir = tmp_dir("tail-torn");
+        let mut reader = RunCache::open(&dir, true).unwrap();
+        assert_eq!(reader.len(), 0);
+
+        let sibling = dir.join("runs.0.jsonl");
+        let line_a = entry_line("aaaa", "m", 10, &rec("a", 1.0));
+        let line_b = entry_line("bbbb", "m", 11, &rec("b", 2.0));
+        let (b_head, b_tail) = line_b.split_at(line_b.len() / 2);
+
+        // one complete line + half of the next, no newline
+        std::fs::write(&sibling, format!("{line_a}\n{b_head}")).unwrap();
+        assert_eq!(reader.refresh_from_disk(), 1, "complete line is visible");
+        assert_eq!(reader.get("aaaa").unwrap().final_valid_loss, 1.0);
+        assert!(reader.get("bbbb").is_none(), "torn line must not be indexed");
+        // polling again while the tail is still torn consumes nothing
+        assert_eq!(reader.refresh_from_disk(), 0);
+
+        // the writer finishes the line
+        {
+            let mut f = OpenOptions::new().append(true).open(&sibling).unwrap();
+            writeln!(f, "{b_tail}").unwrap();
+        }
+        assert_eq!(reader.refresh_from_disk(), 1, "completed line surfaces");
+        assert_eq!(reader.get("bbbb").unwrap().final_valid_loss, 2.0);
+
+        // a tail that completes into garbage is skipped, and later
+        // appends still index at the right offsets
+        {
+            let mut f = OpenOptions::new().append(true).open(&sibling).unwrap();
+            write!(f, "{{\"key\":\"cc").unwrap();
+        }
+        assert_eq!(reader.refresh_from_disk(), 0);
+        {
+            let mut f = OpenOptions::new().append(true).open(&sibling).unwrap();
+            let line_d = entry_line("dddd", "m", 12, &rec("d", 4.0));
+            writeln!(f, "\u{fffd}garbage\n{line_d}").unwrap();
+        }
+        assert_eq!(reader.refresh_from_disk(), 1, "only the valid line lands");
+        assert_eq!(reader.get("dddd").unwrap().final_valid_loss, 4.0);
+        drop(reader);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Refresh cost model: a no-op refresh consumes nothing and new
+    /// appends are visible exactly once (the incremental contract the
+    /// benches measure).
+    #[test]
+    fn refresh_counts_only_new_entries() {
+        let dir = tmp_dir("refresh-delta");
+        let mut reader = RunCache::open(&dir, true).unwrap();
+        let mut writer =
+            RunCache::open_sharded(&dir, Some(Shard { index: 0, count: 2 }), true).unwrap();
+        assert_eq!(reader.refresh_from_disk(), 0);
+        writer.put("aaaa", "m", &rec("a", 1.0)).unwrap();
+        writer.put("bbbb", "m", &rec("b", 2.0)).unwrap();
+        assert_eq!(reader.refresh_from_disk(), 2);
+        assert_eq!(reader.refresh_from_disk(), 0, "no-op refresh sees nothing");
+        writer.put("cccc", "m", &rec("c", 3.0)).unwrap();
+        assert_eq!(reader.refresh_from_disk(), 1);
+        // own appends are indexed at write time, not re-read: a reader
+        // refresh after its own put is still a no-op
+        reader.put("dddd", "m", &rec("d", 4.0)).unwrap();
+        assert_eq!(reader.refresh_from_disk(), 0);
+        assert_eq!(reader.len(), 4);
+        // index-only metadata reads — no record parse behind these
+        assert_eq!(reader.manifest_of("aaaa"), Some("m"));
+        assert_eq!(reader.manifest_of("dddd"), Some("m"));
+        assert!(reader.recorded_ts("dddd").is_some());
+        assert_eq!(reader.manifest_of("not-a-key"), None);
+        drop((reader, writer));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The compaction-generation contract, seen from a lock-free
+    /// watcher: gc rewrites the directory under it, and the next poll
+    /// rescans instead of trusting dead offsets.
+    #[test]
+    fn watcher_survives_compaction_via_generation_rescan() {
+        let dir = tmp_dir("watcher-gen");
+        {
+            let mut c0 =
+                RunCache::open_sharded(&dir, Some(Shard { index: 0, count: 2 }), true).unwrap();
+            c0.put("aaaa", "m1", &rec("a", 1.0)).unwrap();
+            let mut c1 =
+                RunCache::open_sharded(&dir, Some(Shard { index: 1, count: 2 }), true).unwrap();
+            c1.put("bbbb", "m2", &rec("b", 2.0)).unwrap();
+            c1.put("cccc", "m2", &rec("c", 3.0)).unwrap();
+        }
+        let mut w = CacheWatcher::new(&dir);
+        assert_eq!(w.poll(), 3);
+        assert_eq!((w.unique_keys(), w.segments()), (3, 2));
+        assert_eq!(w.poll(), 0);
+
+        // compaction: same keys, different files/offsets
+        gc(&dir, &GcOptions::default()).unwrap();
+        w.poll();
+        assert_eq!((w.unique_keys(), w.segments()), (3, 1));
+
+        // pruning: keys disappear — visible only because of the rescan
+        gc(&dir, &GcOptions { manifest: Some("m2".into()), ..Default::default() }).unwrap();
+        w.poll();
+        assert_eq!(w.unique_keys(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Graceful degradation: a line whose record is valid JSON of the
+    /// wrong shape indexes (the scanner cannot tell) but resolves as a
+    /// miss at hit time and is dropped from the index.
+    #[test]
+    fn malformed_record_shape_degrades_to_a_miss_at_hit_time() {
+        let dir = tmp_dir("bad-shape");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("runs.jsonl"),
+            "{\"key\":\"aaaa\",\"manifest\":\"m\",\"record\":{\"bogus\":1},\"ts\":1}\n",
+        )
+        .unwrap();
+        let mut c = RunCache::open(&dir, true).unwrap();
+        assert_eq!(c.len(), 1, "scanner indexes the structurally valid line");
+        assert!(c.get("aaaa").is_none(), "hit-time parse rejects the shape");
+        assert_eq!(c.len(), 0, "the dud entry is dropped");
+        drop(c);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,279 @@
+//! Segment-level plumbing for the run cache: file naming, advisory
+//! writer locks, the JSONL entry codec, byte-oriented (lossy) line
+//! reading, and the compaction *generation* marker.
+//!
+//! A cache directory holds one or more JSONL segments (`runs.jsonl`,
+//! `runs.<k>.jsonl`) plus two kinds of sidecar files that are *not*
+//! segments: `<segment>.lock` (advisory writer locks, holder pid) and
+//! [`GENERATION_FILE`] (a counter that [`super::gc`] bumps after every
+//! compacting rewrite, so incremental readers know their remembered
+//! byte offsets are stale — see [`super::index`]).
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::train::RunRecord;
+use crate::util::Json;
+
+use super::Shard;
+
+// ------------------------------------------------------------- segments
+
+/// The segment file this opener appends to.
+pub(crate) fn segment_name(shard: Option<Shard>) -> String {
+    match shard {
+        Some(s) => format!("runs.{}.jsonl", s.index),
+        None => "runs.jsonl".to_string(),
+    }
+}
+
+/// Is `name` a cache segment file (`runs.jsonl` or `runs.<k>.jsonl`)?
+pub(crate) fn is_segment_name(name: &str) -> bool {
+    if name == "runs.jsonl" {
+        return true;
+    }
+    name.strip_prefix("runs.")
+        .and_then(|rest| rest.strip_suffix(".jsonl"))
+        .is_some_and(|mid| !mid.is_empty() && mid.bytes().all(|b| b.is_ascii_digit()))
+}
+
+/// Every segment in `dir`, sorted by file name (a missing directory is
+/// an empty cache).
+pub fn list_segments(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == ErrorKind::NotFound => return Ok(out),
+        Err(e) => {
+            return Err(e).with_context(|| format!("reading cache dir {}", dir.display()))
+        }
+    };
+    for entry in entries {
+        let path = entry?.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        if path.is_file() && is_segment_name(name) {
+            out.push(path);
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+// ----------------------------------------------------------- generation
+
+/// The compaction-generation marker file.  Not a segment
+/// ([`is_segment_name`] rejects it), so it never participates in merges.
+pub(crate) const GENERATION_FILE: &str = ".generation";
+
+/// Current compaction generation of `dir` (0 for a never-compacted or
+/// missing directory; unreadable markers count as 0 too, which at worst
+/// costs a reader one spurious full rescan).
+pub(crate) fn read_generation(dir: &Path) -> u64 {
+    std::fs::read_to_string(dir.join(GENERATION_FILE))
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(0)
+}
+
+/// Bump the compaction generation (atomically, via temp file + rename).
+/// Called by [`super::gc`] after any rewrite that invalidates readers'
+/// remembered byte offsets; incremental readers that observe a changed
+/// generation fall back to one full rescan.
+pub(crate) fn bump_generation(dir: &Path) -> Result<()> {
+    let next = read_generation(dir).wrapping_add(1);
+    let tmp = dir.join(format!("{GENERATION_FILE}.tmp"));
+    std::fs::write(&tmp, format!("{next}\n"))
+        .with_context(|| format!("writing generation marker {}", tmp.display()))?;
+    std::fs::rename(&tmp, dir.join(GENERATION_FILE))
+        .context("installing generation marker")?;
+    Ok(())
+}
+
+// ---------------------------------------------------------- lock files
+
+fn lock_path(segment: &Path) -> PathBuf {
+    let mut name = segment.file_name().unwrap_or_default().to_os_string();
+    name.push(".lock");
+    segment.with_file_name(name)
+}
+
+fn pid_is_alive(pid: u32) -> bool {
+    if pid == std::process::id() {
+        return true;
+    }
+    if cfg!(target_os = "linux") {
+        Path::new(&format!("/proc/{pid}")).exists()
+    } else {
+        // no portable liveness probe without libc: assume alive and make
+        // the operator remove the lock file by hand
+        true
+    }
+}
+
+/// An advisory per-segment writer lock: a `<segment>.lock` file created
+/// atomically (`create_new`) and holding the owner pid.  Stale locks
+/// (dead pid) are reclaimed with a warning; live holders are an error.
+pub(crate) struct SegmentLock {
+    path: PathBuf,
+}
+
+impl SegmentLock {
+    pub(crate) fn acquire(segment: &Path) -> Result<SegmentLock> {
+        let path = lock_path(segment);
+        for _ in 0..4 {
+            match OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    let _ = writeln!(f, "{}", std::process::id());
+                    return Ok(SegmentLock { path });
+                }
+                Err(e) if e.kind() == ErrorKind::AlreadyExists => {
+                    let holder = std::fs::read_to_string(&path)
+                        .ok()
+                        .and_then(|s| s.trim().parse::<u32>().ok());
+                    match holder {
+                        Some(pid) if pid_is_alive(pid) => bail!(
+                            "cache segment {} is locked by live process {pid} \
+                             (another writer is draining this shard; pick a \
+                             different --shard index or wait, then retry)",
+                            segment.display()
+                        ),
+                        Some(pid) => {
+                            // positively dead: reclaim and retry; if a
+                            // racing process re-creates the lock first,
+                            // the next round sees its live pid and errors
+                            eprintln!(
+                                "run-cache: reclaiming stale lock {} (holder {pid} is gone)",
+                                path.display()
+                            );
+                            let _ = std::fs::remove_file(&path);
+                        }
+                        None => {
+                            // a racing writer may have created the file
+                            // but not flushed its pid line yet — never
+                            // steal on an unreadable holder, just give
+                            // it a beat and look again
+                            std::thread::sleep(std::time::Duration::from_millis(20));
+                        }
+                    }
+                }
+                Err(e) => {
+                    return Err(e)
+                        .with_context(|| format!("creating lock file {}", path.display()));
+                }
+            }
+        }
+        bail!(
+            "could not acquire lock for segment {} after retries (if its writer is \
+             gone, delete {} by hand)",
+            segment.display(),
+            lock_path(segment).display()
+        )
+    }
+}
+
+impl Drop for SegmentLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+// ------------------------------------------------------------- entries
+
+/// Completion timestamp for new cache lines: unix seconds, overridable
+/// via `UMUP_CACHE_TS` (the deterministic test harness pins it so whole
+/// segments become byte-for-byte reproducible).
+pub(crate) fn now_ts() -> u64 {
+    if let Ok(v) = std::env::var("UMUP_CACHE_TS") {
+        if let Ok(ts) = v.trim().parse::<u64>() {
+            return ts;
+        }
+    }
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// Serialize one cache line (the canonical, sorted-key form; also the
+/// compaction output, so merged caches round-trip byte-identically —
+/// and the worker wire protocol's success-reply codec, so the wire
+/// format is the cache format).
+pub(crate) fn entry_line(key: &str, manifest: &str, ts: u64, record: &RunRecord) -> String {
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("key".to_string(), Json::Str(key.to_string()));
+    obj.insert("manifest".to_string(), Json::Str(manifest.to_string()));
+    obj.insert("record".to_string(), record.to_json());
+    obj.insert("ts".to_string(), Json::Num(ts as f64));
+    Json::Obj(obj).dump()
+}
+
+/// One fully parsed cache line.  `ts` is 0 for pre-lifecycle lines
+/// (treated as arbitrarily old by age-based GC).
+pub(crate) struct Entry {
+    pub(crate) key: String,
+    pub(crate) manifest: String,
+    pub(crate) ts: u64,
+    pub(crate) record: RunRecord,
+}
+
+/// The eager (record-materializing) line parse — the reference codec
+/// that hit-time loads, GC, and the wire protocol share.  The hot scan
+/// path uses [`super::index::scan_line`] instead, which extracts the
+/// same `key`/`manifest`/`ts` without building the record tree; the
+/// two must agree on what constitutes a well-formed line (pinned by the
+/// lazy-vs-eager property test in the module tests).
+pub(crate) fn parse_full_entry(line: &str) -> Result<Entry> {
+    let j = Json::parse(line)?;
+    let key = j.get("key")?.as_str()?.to_string();
+    let manifest = j.get("manifest")?.as_str()?.to_string();
+    let ts = match j.get("ts") {
+        Ok(v) => v.as_f64()? as u64,
+        Err(_) => 0,
+    };
+    let record = RunRecord::from_json(j.get("record")?)?;
+    Ok(Entry { key, manifest, ts, record })
+}
+
+/// Does `path` end mid-line (non-empty, no trailing newline)?  The
+/// signature a writer was killed mid-append.
+pub(crate) fn tail_is_torn(path: &Path) -> bool {
+    let Ok(mut f) = File::open(path) else { return false };
+    let Ok(len) = f.metadata().map(|m| m.len()) else { return false };
+    if len == 0 || f.seek(SeekFrom::End(-1)).is_err() {
+        return false;
+    }
+    let mut last = [0u8; 1];
+    f.read_exact(&mut last).is_ok() && last[0] != b'\n'
+}
+
+/// Byte-oriented, lossy line iteration: a torn final line from a killed
+/// writer (possibly invalid UTF-8) must never abort a resume.  I/O
+/// errors mid-file stop the scan with a warning instead of propagating.
+pub(crate) fn for_each_line(path: &Path, mut f: impl FnMut(&str)) -> Result<()> {
+    let file = match File::open(path) {
+        Ok(file) => file,
+        Err(e) if e.kind() == ErrorKind::NotFound => return Ok(()),
+        Err(e) => return Err(e).with_context(|| format!("opening {}", path.display())),
+    };
+    let mut reader = BufReader::new(file);
+    let mut buf = Vec::new();
+    loop {
+        buf.clear();
+        match reader.read_until(b'\n', &mut buf) {
+            Ok(0) => return Ok(()),
+            Ok(_) => {
+                let line = String::from_utf8_lossy(&buf);
+                f(line.trim_end_matches(['\n', '\r']));
+            }
+            Err(e) => {
+                eprintln!("run-cache: stopping scan of {}: {e}", path.display());
+                return Ok(());
+            }
+        }
+    }
+}

@@ -12,6 +12,13 @@
 //! merged progress by watching the shared cache directory's segments
 //! grow.  The CLI front end is `repro drive --shards n`.
 //!
+//! Progress is observed through a [`CacheWatcher`] — the run cache's
+//! incremental, lock-free tail reader — so each poll costs bytes
+//! *appended since the last poll*, not a full re-read of every segment:
+//! at a 500 ms poll interval over a 10⁵-entry cache the difference is
+//! the drive loop being free versus the drive loop being the second
+//! hottest thing on the machine.
+//!
 //! The driver is deliberately execution-agnostic: it never talks to the
 //! engine, only to child processes and the cache dir, so it builds (and
 //! is integration-tested) without the XLA runtime — the test harness
@@ -23,7 +30,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use super::cache::{stats, Shard};
+use super::cache::{CacheWatcher, Shard};
 
 /// Driver options.
 #[derive(Debug, Clone)]
@@ -104,12 +111,16 @@ where
             done: false,
         })
         .collect();
+    // incremental progress reader over the shared cache dir (no locks;
+    // children appending concurrently surface at worst one poll late)
+    let mut watcher = CacheWatcher::new(&cfg.cache_dir);
     // every error path — budget exhaustion, a failed (re)launch, a
     // poll error — tears the surviving children down before returning,
     // so a failed drive never leaves orphans holding segment locks
-    match run_to_completion(cfg, &mut slots, &mut make_cmd) {
+    match run_to_completion(cfg, &mut slots, &mut watcher, &mut make_cmd) {
         Ok(restarts) => {
-            let cache_entries = stats(&cfg.cache_dir).map(|s| s.unique_keys).unwrap_or(0);
+            watcher.poll();
+            let cache_entries = watcher.unique_keys();
             Ok(DriveReport {
                 shard_outcomes: slots
                     .iter()
@@ -134,7 +145,12 @@ where
 /// Launch and babysit every slot; returns the total restart count once
 /// all children have exited successfully.  Errors leave `slots` as-is —
 /// the caller owns teardown.
-fn run_to_completion<F>(cfg: &DriveConfig, slots: &mut [Slot], make_cmd: &mut F) -> Result<usize>
+fn run_to_completion<F>(
+    cfg: &DriveConfig,
+    slots: &mut [Slot],
+    watcher: &mut CacheWatcher,
+    make_cmd: &mut F,
+) -> Result<usize>
 where
     F: FnMut(Shard) -> Command,
 {
@@ -199,21 +215,20 @@ where
             return Ok(restarts);
         }
 
-        // merged progress: count unique keys across all segments
-        // (read-only, lock-free; concurrent appends at worst show up a
-        // poll late)
+        // merged progress: tail only the bytes children appended since
+        // the last poll (read-only, lock-free; concurrent appends at
+        // worst show up a poll late)
         if cfg.progress {
-            if let Ok(st) = stats(&cfg.cache_dir) {
-                if st.unique_keys != last_entries {
-                    last_entries = st.unique_keys;
-                    let live = slots.iter().filter(|s| !s.done).count();
-                    eprintln!(
-                        "drive: {} runs cached across {} segments ({live} shard{} live)",
-                        st.unique_keys,
-                        st.segments.len(),
-                        if live == 1 { "" } else { "s" }
-                    );
-                }
+            watcher.poll();
+            if watcher.unique_keys() != last_entries {
+                last_entries = watcher.unique_keys();
+                let live = slots.iter().filter(|s| !s.done).count();
+                eprintln!(
+                    "drive: {} runs cached across {} segments ({live} shard{} live)",
+                    watcher.unique_keys(),
+                    watcher.segments(),
+                    if live == 1 { "" } else { "s" }
+                );
             }
         }
         std::thread::sleep(cfg.poll_interval);

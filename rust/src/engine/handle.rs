@@ -9,6 +9,11 @@
 //!
 //! Lifecycle notes:
 //!
+//! * Immediate cache-hit outcomes are *lazy* hits: submit resolves them
+//!   against the run cache's key index, parsing (and memoizing) each
+//!   hit record from its byte span on first touch — a submission over a
+//!   10⁵-entry cache pays for the records it hits, not the history it
+//!   doesn't.
 //! * Results are persisted to the run cache by the *worker*, before the
 //!   outcome is delivered — dropping a handle abandons the stream, not
 //!   the work, and everything executed is still resumable from disk.

@@ -1,6 +1,6 @@
 //! Job and outcome types for the engine.
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use anyhow::{anyhow, Result};
 
@@ -14,6 +14,19 @@ use crate::train::{RunConfig, RunRecord};
 /// — the queue is multi-manifest by construction, so cross-width
 /// transfer sweeps are drained by one worker pool instead of being
 /// serialized per shape.
+///
+/// Construct via [`EngineJob::new`]: the job carries a lazily-computed,
+/// clone-shared memo of its canonical identity (the sorted-key config
+/// JSON and the FNV content address derived from it), so the canonical
+/// form is serialized **once** per job — `submit` hashes it for the
+/// run-cache key and the process backend splices the same bytes into
+/// its wire frame, instead of each rebuilding the tree.
+///
+/// **Invariant:** `manifest`/`corpus`/`config` must not be mutated once
+/// [`EngineJob::key`] has been observed — the memo (shared by clones)
+/// would go stale and the job would execute under the wrong content
+/// address.  Build the config fully, then construct the job; debug
+/// builds assert the memo still matches on every access.
 #[derive(Clone)]
 pub struct EngineJob {
     pub manifest: Arc<Manifest>,
@@ -21,13 +34,63 @@ pub struct EngineJob {
     pub config: RunConfig,
     /// Arbitrary tag carried through to the result (e.g. HP values).
     pub tag: Vec<(String, f64)>,
+    /// Memoized canonical identity; private so every construction path
+    /// goes through [`EngineJob::new`] and clones share the memo.
+    canon: OnceLock<Arc<JobCanon>>,
+}
+
+/// The expensive-to-compute parts of a job's identity, computed at most
+/// once per job (shared across clones via `Arc`).
+struct JobCanon {
+    /// `config.canonical_json().dump()` — the label-free sorted-key
+    /// serialization that is hashed into the run key and shipped as the
+    /// wire frame's `config` member.
+    config_json: String,
+    /// The 16-hex-digit content address ([`crate::engine::run_key`]).
+    key: String,
 }
 
 impl EngineJob {
+    pub fn new(
+        manifest: Arc<Manifest>,
+        corpus: Arc<Corpus>,
+        config: RunConfig,
+        tag: Vec<(String, f64)>,
+    ) -> EngineJob {
+        EngineJob { manifest, corpus, config, tag, canon: OnceLock::new() }
+    }
+
+    fn canon(&self) -> &JobCanon {
+        let canon = self.canon.get_or_init(|| {
+            let config_json = self.config.canonical_json().dump();
+            let key = crate::engine::cache::run_key_from_dumps(
+                &self.manifest.name,
+                &crate::engine::cache::corpus_json(&self.corpus.config).dump(),
+                &config_json,
+            );
+            Arc::new(JobCanon { config_json, key })
+        });
+        debug_assert_eq!(
+            canon.config_json,
+            self.config.canonical_json().dump(),
+            "EngineJob config mutated after its identity was memoized (label {:?})",
+            self.config.label
+        );
+        canon
+    }
+
     /// This job's content address — the run-cache key and the identity
-    /// carried on the worker wire protocol.
+    /// carried on the worker wire protocol.  Computed once per job
+    /// (clones share the memo).
     pub fn key(&self) -> String {
-        crate::engine::run_key(&self.manifest.name, &self.corpus, &self.config)
+        self.canon().key.clone()
+    }
+
+    /// The canonical (label-free, sorted-key) config serialization this
+    /// job's key was hashed from — reused verbatim by the process
+    /// backend's wire frame.  Computed once per job.
+    pub fn canonical_config_json(&self) -> &str {
+        &self.canon().config_json
     }
 }
 

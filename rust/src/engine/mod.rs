@@ -103,6 +103,38 @@
 //! * **Per-job outcome reporting**: a failing job never kills a batch;
 //!   workers persist results before reporting them, so dropping a
 //!   handle abandons notifications, never completed work.
+//!
+//! # Performance notes
+//!
+//! The engine is sized for sweeps of 10⁵–10⁶ cached runs (u-µP's whole
+//! economic argument is *many cheap proxy runs*), so the cache paths
+//! scale with **new** work, not total history:
+//!
+//! * **Lazy record index.**  Opening a cache scans segments for *keys
+//!   only*, building `key → (segment, byte offset, length, ts,
+//!   manifest)`; no [`crate::train::RunRecord`] (full train/valid/RMS
+//!   curves) is materialized until a submission actually hits that key,
+//!   and then exactly once (memoized).  Resident memory is O(keys +
+//!   records touched).  The tradeoff versus the old eager reader: the
+//!   first hit on a key pays one seek + one line parse, and a
+//!   structurally-valid line whose record body is malformed is
+//!   discovered at hit time (degrading to a miss) rather than at open.
+//! * **Incremental refresh.**  [`Engine::refresh_cache`] — the sharded
+//!   `exp` converge loop's poll — remembers a per-segment tail offset
+//!   and reads only bytes appended since the last call: O(new bytes),
+//!   not O(total cache).  The shard driver's progress monitor
+//!   ([`CacheWatcher`]) polls the same way, lock-free.
+//! * **Compaction generation.**  Remembered offsets are only valid
+//!   while segments are append-only; `repro cache gc` (and
+//!   auto-compaction) bumps a generation marker under the segment
+//!   locks, and an incremental reader that observes a changed
+//!   generation — or a vanished/shrunken segment — falls back to one
+//!   full rescan, then resumes tailing.  See [`cache`] for the full
+//!   contract.
+//! * **Memoized job identity.**  An [`EngineJob`]'s canonical config
+//!   JSON and content address are computed once per job (shared across
+//!   clones), so submission hashing and the process-backend wire frame
+//!   don't re-serialize the same config.
 
 pub mod backend;
 pub mod cache;
@@ -118,8 +150,8 @@ pub use crate::util::hash::fnv1a64;
 pub use backend::XlaBackend;
 pub use backend::{det_record, Backend, Capabilities, Executor, MockBackend, ProcessBackend};
 pub use cache::{
-    gc, list_segments, parse_bytes, parse_duration, run_key, stats, CacheStats, GcOptions,
-    GcReport, RunCache, SegmentStats, Shard,
+    gc, list_segments, parse_bytes, parse_duration, run_key, stats, CacheStats, CacheWatcher,
+    GcOptions, GcReport, RunCache, SegmentStats, Shard,
 };
 pub use handle::{JobHandle, SubmitOptions, SweepHandle};
 pub use job::{EngineJob, EngineReport, JobOutcome, SweepJob, SweepResult};
@@ -352,7 +384,9 @@ impl Engine {
         let mut cache_hits = 0usize;
         let mut skipped = 0usize;
         {
-            let cache = lock(&self.shared.cache);
+            // mut: a cache hit may lazily parse (and memoize) the
+            // record from its indexed byte span — see `cache`
+            let mut cache = lock(&self.shared.cache);
             let mut primary_of: HashMap<&str, usize> = HashMap::new();
             for (i, job) in jobs.iter().enumerate() {
                 if let Some(rec) = cache.get(&keys[i]) {
@@ -460,11 +494,13 @@ impl Engine {
     ) -> Result<Vec<SweepResult>> {
         let engine_jobs = jobs
             .iter()
-            .map(|j| EngineJob {
-                manifest: Arc::clone(manifest),
-                corpus: Arc::clone(corpus),
-                config: j.config.clone(),
-                tag: j.tag.clone(),
+            .map(|j| {
+                EngineJob::new(
+                    Arc::clone(manifest),
+                    Arc::clone(corpus),
+                    j.config.clone(),
+                    j.tag.clone(),
+                )
             })
             .collect();
         self.run(engine_jobs).into_sweep_results()
@@ -477,12 +513,12 @@ impl Engine {
         corpus: &Arc<Corpus>,
         config: RunConfig,
     ) -> Result<SweepResult> {
-        self.submit_one(EngineJob {
-            manifest: Arc::clone(manifest),
-            corpus: Arc::clone(corpus),
+        self.submit_one(EngineJob::new(
+            Arc::clone(manifest),
+            Arc::clone(corpus),
             config,
-            tag: vec![],
-        })
+            vec![],
+        ))
         .result()
     }
 

@@ -255,12 +255,8 @@ fn train(args: &Args) -> Result<()> {
     println!("training {} on {} for {steps} steps (lr {lr})", cfg.label, man.name);
     // non-blocking submission: the handle resolves a cache hit
     // instantly and otherwise streams the outcome when the run ends
-    let handle = engine.submit_one(EngineJob {
-        manifest: Arc::clone(&man),
-        corpus: Arc::clone(&corpus),
-        config: cfg,
-        tag: vec![],
-    });
+    let handle =
+        engine.submit_one(EngineJob::new(Arc::clone(&man), Arc::clone(&corpus), cfg, vec![]));
     let rec = handle.result()?.record;
     for &(t, l) in &rec.train_curve {
         println!("step {t:6}  train loss {l:.4}");

@@ -43,12 +43,7 @@ pub fn pair_grid(
             cfg.hp.set(transfer.0, tv);
             cfg.schedule.peak_lr = cfg.hp.eta;
             cfg.label = format!("{}-{}{}x{}{}", proto.label, fixed.0, i, transfer.0, j);
-            jobs.push(EngineJob {
-                manifest: Arc::clone(manifest),
-                corpus: Arc::clone(corpus),
-                config: cfg,
-                tag: vec![],
-            });
+            jobs.push(EngineJob::new(Arc::clone(manifest), Arc::clone(corpus), cfg, vec![]));
         }
     }
     // the grid fills cell by cell as outcomes stream in (each job's

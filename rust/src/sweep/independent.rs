@@ -32,12 +32,7 @@ fn phase_sweep(
 ) -> Result<Vec<SweepResult>> {
     let engine_jobs: Vec<EngineJob> = jobs
         .into_iter()
-        .map(|j| EngineJob {
-            manifest: Arc::clone(manifest),
-            corpus: Arc::clone(corpus),
-            config: j.config,
-            tag: j.tag,
-        })
+        .map(|j| EngineJob::new(Arc::clone(manifest), Arc::clone(corpus), j.config, j.tag))
         .collect();
     engine.submit(engine_jobs).drain_strict(|o, done, total| {
         if let (Ok(rec), false) = (&o.outcome, o.cached) {

@@ -51,12 +51,7 @@ pub fn random_search(
         cfg.hp = hp;
         cfg.schedule.peak_lr = hp.eta;
         cfg.label = format!("{}-rs{:03}", proto.label, i);
-        jobs.push(EngineJob {
-            manifest: Arc::clone(manifest),
-            corpus: Arc::clone(corpus),
-            config: cfg,
-            tag,
-        });
+        jobs.push(EngineJob::new(Arc::clone(manifest), Arc::clone(corpus), cfg, tag));
     }
     // stream: the incumbent best is reported the moment a run beats it,
     // not after the whole sweep lands

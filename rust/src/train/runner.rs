@@ -84,12 +84,16 @@ impl Runner {
 
         // §Perf: the telemetry tail is only fetched at the logging
         // cadence (divergence is checked there too) — between cadence
-        // points the state chains on-device with no host sync.
+        // points the state chains on-device with no host sync.  One
+        // token buffer serves every step and the validation pass: at
+        // production step counts a fresh batch*(seq+1) Vec per step is
+        // pure allocator churn.
+        let mut tokens: Vec<i32> = Vec::with_capacity(man.spec.batch * (man.spec.seq + 1));
         let cadence = cfg.log_every.max(1);
         for t in 1..=cfg.schedule.total_steps {
             let lr = cfg.schedule.lr_at(t);
             let hyp = cfg.adam.hyp(lr, t);
-            let tokens = train.sample();
+            train.sample_into(&mut tokens);
             let at_cadence =
                 t % cadence == 0 || t == cfg.schedule.total_steps || t == 1;
             let loss = if at_cadence {
@@ -128,7 +132,7 @@ impl Runner {
             let mut acc = 0.0;
             let n = cfg.valid_batches.max(1);
             for _ in 0..n {
-                let tokens = valid.next_sequential();
+                valid.next_sequential_into(&mut tokens);
                 acc += self.session.eval(&ts, &tokens)?.loss as f64;
             }
             let v = acc / n as f64;
@@ -169,8 +173,10 @@ impl Runner {
         let mut sampler =
             BatchSampler::new(corpus.valid_slice(), man.spec.batch, man.spec.seq, 42);
         let mut acc = 0.0;
+        let mut tokens: Vec<i32> = Vec::with_capacity(man.spec.batch * (man.spec.seq + 1));
         for _ in 0..n_batches.max(1) {
-            acc += self.session.eval(ts, &sampler.next_sequential())?.loss as f64;
+            sampler.next_sequential_into(&mut tokens);
+            acc += self.session.eval(ts, &tokens)?.loss as f64;
         }
         Ok(acc / n_batches.max(1) as f64)
     }

@@ -17,6 +17,13 @@ pub enum Json {
     Str(String),
     Arr(Vec<Json>),
     Obj(BTreeMap<String, Json>),
+    /// Pre-serialized JSON, spliced verbatim into `dump` output.  Never
+    /// produced by [`Json::parse`]; exists so hot paths can reuse a
+    /// canonical serialization they already computed (e.g. the engine's
+    /// per-job canonical config, hashed for the run key and embedded in
+    /// the worker wire frame) instead of rebuilding the value tree.
+    /// The caller owns validity — the writer does not re-check it.
+    Raw(String),
 }
 
 impl Json {
@@ -100,6 +107,7 @@ impl Json {
                 }
             }
             Json::Str(s) => write_escaped(s, out),
+            Json::Raw(s) => out.push_str(s),
             Json::Arr(v) => {
                 out.push('[');
                 for (i, x) in v.iter().enumerate() {
@@ -338,5 +346,17 @@ mod tests {
     fn nested_deep() {
         let v = Json::parse("[[[[[[1]]]]]]").unwrap();
         assert!(matches!(v, Json::Arr(_)));
+    }
+
+    #[test]
+    fn raw_splices_verbatim() {
+        let mut m = BTreeMap::new();
+        m.insert("pre".to_string(), Json::Raw("{\"a\":[1,2.5]}".to_string()));
+        m.insert("s".to_string(), Json::Str("x".to_string()));
+        let dumped = Json::Obj(m).dump();
+        assert_eq!(dumped, "{\"pre\":{\"a\":[1,2.5]},\"s\":\"x\"}");
+        // the splice round-trips through the parser as real structure
+        let back = Json::parse(&dumped).unwrap();
+        assert_eq!(back.get("pre").unwrap().get("a").unwrap().as_arr().unwrap().len(), 2);
     }
 }

@@ -73,11 +73,13 @@ pub fn shared_job_list() -> Vec<EngineJob> {
         .flat_map(|name| {
             let man = dummy_manifest(name);
             let corpus = Arc::clone(&corpus);
-            (0..8).map(move |i| EngineJob {
-                manifest: Arc::clone(&man),
-                corpus: Arc::clone(&corpus),
-                config: cfg(&format!("{name}-lr{i}"), 0.125 * (i + 1) as f64, 8),
-                tag: vec![],
+            (0..8).map(move |i| {
+                EngineJob::new(
+                    Arc::clone(&man),
+                    Arc::clone(&corpus),
+                    cfg(&format!("{name}-lr{i}"), 0.125 * (i + 1) as f64, 8),
+                    vec![],
+                )
             })
         })
         .collect()

@@ -108,8 +108,9 @@ fn run_cache_roundtrips_and_resumes_from_disk() {
         cache.put(&key, "m", &fake_record("x", 2.5)).unwrap();
         assert_eq!(cache.len(), 1);
     }
-    // resume loads the persisted record faithfully
-    let cache = RunCache::open(&dir, true).unwrap();
+    // resume loads the persisted record faithfully (lazily: the key is
+    // indexed at open, the record parses on this first get)
+    let mut cache = RunCache::open(&dir, true).unwrap();
     let rec = cache.get(&key).expect("resumed entry");
     assert_eq!(rec.final_valid_loss, 2.5);
     assert_eq!(rec.train_curve, vec![(1, 3.5), (2, 2.5)]);
@@ -199,21 +200,18 @@ fn failing_job_is_isolated_and_the_rest_complete_concurrently() {
     let man = dummy_manifest("m");
     let corpus = dummy_corpus();
     let mut jobs: Vec<EngineJob> = (0..7)
-        .map(|i| EngineJob {
-            manifest: Arc::clone(&man),
-            corpus: dummy_corpus(),
-            config: cfg(&format!("ok-{i}"), 0.25 * (i + 1) as f64, 8),
-            tag: vec![],
+        .map(|i| {
+            EngineJob::new(
+                Arc::clone(&man),
+                dummy_corpus(),
+                cfg(&format!("ok-{i}"), 0.25 * (i + 1) as f64, 8),
+                vec![],
+            )
         })
         .collect();
     jobs.insert(
         3,
-        EngineJob {
-            manifest: Arc::clone(&man),
-            corpus: Arc::clone(&corpus),
-            config: cfg("fail-me", 9.0, 8),
-            tag: vec![],
-        },
+        EngineJob::new(Arc::clone(&man), Arc::clone(&corpus), cfg("fail-me", 9.0, 8), vec![]),
     );
     let report = engine.run(jobs);
     assert_eq!(report.outcomes.len(), 8);
@@ -255,11 +253,13 @@ fn panicking_job_does_not_kill_the_worker() {
     ];
     let report = engine.run(
         jobs.iter()
-            .map(|j| EngineJob {
-                manifest: Arc::clone(&man),
-                corpus: Arc::clone(&corpus),
-                config: j.config.clone(),
-                tag: j.tag.clone(),
+            .map(|j| {
+                EngineJob::new(
+                    Arc::clone(&man),
+                    Arc::clone(&corpus),
+                    j.config.clone(),
+                    j.tag.clone(),
+                )
             })
             .collect(),
     );
@@ -289,11 +289,8 @@ fn handle_streams_outcomes_as_they_complete() {
     let corpus = dummy_corpus();
     let jobs: Vec<EngineJob> = [("a", 0.25), ("a-dup", 0.25), ("b", 0.5)]
         .iter()
-        .map(|&(label, eta)| EngineJob {
-            manifest: Arc::clone(&man),
-            corpus: Arc::clone(&corpus),
-            config: cfg(label, eta, 8),
-            tag: vec![],
+        .map(|&(label, eta)| {
+            EngineJob::new(Arc::clone(&man), Arc::clone(&corpus), cfg(label, eta, 8), vec![])
         })
         .collect();
     let mut handle = engine.submit(jobs);
@@ -346,11 +343,13 @@ fn affinity_scheduler_beats_fifo_for_interleaved_manifests() {
     let (m1, m2) = (dummy_manifest("m1"), dummy_manifest("m2"));
     // strictly interleaved: m1, m2, m1, m2, ... with distinct etas
     let jobs: Vec<EngineJob> = (0..24)
-        .map(|i| EngineJob {
-            manifest: Arc::clone(if i % 2 == 0 { &m1 } else { &m2 }),
-            corpus: Arc::clone(&corpus),
-            config: cfg(&format!("j{i}"), 0.0625 * (i + 1) as f64, 8),
-            tag: vec![],
+        .map(|i| {
+            EngineJob::new(
+                Arc::clone(if i % 2 == 0 { &m1 } else { &m2 }),
+                Arc::clone(&corpus),
+                cfg(&format!("j{i}"), 0.0625 * (i + 1) as f64, 8),
+                vec![],
+            )
         })
         .collect();
     let report = engine.run(jobs);
@@ -403,11 +402,13 @@ fn no_affinity_capability_disables_warm_tracking() {
     let corpus = dummy_corpus();
     let (m1, m2) = (dummy_manifest("m1"), dummy_manifest("m2"));
     let jobs: Vec<EngineJob> = (0..16)
-        .map(|i| EngineJob {
-            manifest: Arc::clone(if i % 2 == 0 { &m1 } else { &m2 }),
-            corpus: Arc::clone(&corpus),
-            config: cfg(&format!("na{i}"), 0.0625 * (i + 1) as f64, 8),
-            tag: vec![],
+        .map(|i| {
+            EngineJob::new(
+                Arc::clone(if i % 2 == 0 { &m1 } else { &m2 }),
+                Arc::clone(&corpus),
+                cfg(&format!("na{i}"), 0.0625 * (i + 1) as f64, 8),
+                vec![],
+            )
         })
         .collect();
     let report = engine.run(jobs);
@@ -432,11 +433,13 @@ fn cancelled_handle_skips_pending_jobs_and_cache_stays_consistent() {
     let corpus = dummy_corpus();
     let jobs = |manifest: &Arc<umup::runtime::Manifest>| -> Vec<EngineJob> {
         (0..8)
-            .map(|i| EngineJob {
-                manifest: Arc::clone(manifest),
-                corpus: dummy_corpus(),
-                config: cfg(&format!("c{i}"), 0.125 * (i + 1) as f64, 8),
-                tag: vec![],
+            .map(|i| {
+                EngineJob::new(
+                    Arc::clone(manifest),
+                    dummy_corpus(),
+                    cfg(&format!("c{i}"), 0.125 * (i + 1) as f64, 8),
+                    vec![],
+                )
             })
             .collect()
     };
@@ -534,11 +537,8 @@ fn higher_priority_submission_overtakes_queued_jobs() {
     .unwrap();
     let man = dummy_manifest("m");
     let corpus = dummy_corpus();
-    let mk = |label: &str, eta: f64| EngineJob {
-        manifest: Arc::clone(&man),
-        corpus: Arc::clone(&corpus),
-        config: cfg(label, eta, 8),
-        tag: vec![],
+    let mk = |label: &str, eta: f64| {
+        EngineJob::new(Arc::clone(&man), Arc::clone(&corpus), cfg(label, eta, 8), vec![])
     };
     // low-priority batch first; the worker blocks inside gate-a0 until
     // the high-priority batch is queued, making the race deterministic
@@ -582,11 +582,13 @@ fn multi_manifest_batches_drain_through_one_queue() {
             // distinct etas per manifest so nothing dedupes within one
             // shape; across shapes eta repeats to prove the manifest
             // name keeps the addresses apart
-            (0..2).map(move |i| EngineJob {
-                manifest: Arc::clone(&man),
-                corpus: Arc::clone(&corpus),
-                config: cfg(&format!("{name}-{i}"), 0.5 * (i + 1) as f64, 8),
-                tag: vec![],
+            (0..2).map(move |i| {
+                EngineJob::new(
+                    Arc::clone(&man),
+                    Arc::clone(&corpus),
+                    cfg(&format!("{name}-{i}"), 0.5 * (i + 1) as f64, 8),
+                    vec![],
+                )
             })
         })
         .collect();

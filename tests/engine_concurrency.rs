@@ -247,7 +247,7 @@ fn four_shard_threads_partition_without_duplicate_execution() {
 
     // disjointness: 24 unique jobs -> exactly 24 executions total
     assert_eq!(counter.load(Ordering::SeqCst), n_jobs, "a job ran in two shards");
-    let merged = RunCache::open(&dir, true).unwrap();
+    let mut merged = RunCache::open(&dir, true).unwrap();
     assert_eq!(merged.len(), n_jobs);
     for key in &keys {
         assert!(merged.get(key).is_some(), "missing run {key}");
@@ -451,7 +451,7 @@ fn resume_over_torn_segment_reruns_only_the_lost_job() {
     drop(engine);
 
     // and the re-run record landed back in the cache on disk
-    let merged = RunCache::open(&dir, true).unwrap();
+    let mut merged = RunCache::open(&dir, true).unwrap();
     assert!(merged.get(&torn_key).is_some(), "torn job must be re-recorded");
     assert_eq!(merged.len(), n_jobs);
     drop(merged);
