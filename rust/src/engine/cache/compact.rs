@@ -1,0 +1,536 @@
+//! Size-tiered background merges: opportunistically fold *similar-sized*
+//! adjacent segments into one, without ever blocking a live writer.
+//!
+//! Where [`super::gc`] is the heavyweight whole-directory rewrite (runs
+//! under every segment lock, applies retention filters, re-serializes
+//! canonically), a tier merge is the cheap incremental sibling:
+//!
+//! - it only touches one *contiguous* group of segments whose sizes sit
+//!   in the same tier (every member ≤ `tier_ratio` × the group's
+//!   smallest, floored at `min_bytes` so tiny shard files always
+//!   coalesce);
+//! - it takes locks with [`SegmentLock::try_acquire`] — a group with a
+//!   live writer in it is simply skipped this round, so background
+//!   compaction never stalls an appending shard;
+//! - winning lines are copied *verbatim* (raw bytes, no record parse or
+//!   re-serialization) — last write per key wins, where "last" is the
+//!   segment-sorted scan order that every reader already merges by.
+//!   A line whose `record` is structurally wrong but scannable is
+//!   therefore carried along unchanged (gc, which re-serializes, is the
+//!   pass that sheds those);
+//! - the merged output replaces the group's *highest-sorting* member, so
+//!   its precedence slot relative to segments outside the group is
+//!   unchanged, and the other members are deleted.
+//!
+//! Memory is bounded exactly like gc's: line metadata spills through
+//! [`super::spill`] in fixed-size sorted runs and merges back in
+//! streaming order, so a merge of arbitrarily large segments holds
+//! O(chunk) entries in memory.  Each successful merge writes a fresh
+//! key-presence sidecar (see [`super::filter`]) for the output segment
+//! and bumps the directory generation so incremental readers rescan.
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::hash::fnv1a64;
+
+use super::filter::{remove_sidecar, SidecarWriter, PREFIX_HASH_SPAN};
+use super::index::scan_line;
+use super::segment::{bump_generation, list_segments, read_generation, scan_lines_strict, SegmentLock};
+use super::spill::{KeyedLine, SpillWriter, DEFAULT_SPILL_CHUNK};
+
+/// Tuning knobs for [`Compactor`].  The defaults keep merges strictly
+/// "like with like": a 100 MiB compacted base is never rewritten just
+/// because a 2 KiB shard segment appeared next to it.
+#[derive(Debug, Clone)]
+pub struct CompactorConfig {
+    /// A group is mergeable when every member's size is at most this
+    /// multiple of the group's smallest member (after the `min_bytes`
+    /// floor).
+    pub tier_ratio: f64,
+    /// Never merge fewer segments than this (a 1-segment "merge" is a
+    /// pointless rewrite).
+    pub min_group: usize,
+    /// Cap on group width, bounding single-step I/O.
+    pub max_group: usize,
+    /// Sizes below this count as `min_bytes` for the ratio test, so
+    /// many tiny segments (the common post-sweep shard litter) always
+    /// share a tier.
+    pub min_bytes: u64,
+}
+
+impl Default for CompactorConfig {
+    fn default() -> CompactorConfig {
+        CompactorConfig {
+            tier_ratio: 4.0,
+            min_group: 2,
+            max_group: 8,
+            min_bytes: 1 << 20,
+        }
+    }
+}
+
+/// What one successful [`Compactor::step`] did.
+#[derive(Debug, Clone)]
+pub struct TierMergeReport {
+    /// File names of the merged segments, in precedence order.
+    pub inputs: Vec<String>,
+    /// File name the merged output was installed over (the group's
+    /// highest-sorting member).
+    pub output: String,
+    /// Unique keys in the output.
+    pub entries: usize,
+    /// Cross-segment duplicate lines dropped (older writes of a key).
+    pub deduped: usize,
+    /// Unparseable lines dropped.
+    pub corrupt_dropped: usize,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+/// Pure planning: which contiguous index ranges of the (sorted) segment
+/// listing form mergeable tier groups, cheapest total first.  `sizes`
+/// is in listing order; candidates may overlap — the caller takes the
+/// first one it can lock and re-plans next step.
+fn plan_groups(sizes: &[u64], cfg: &CompactorConfig) -> Vec<Range<usize>> {
+    let mut out: Vec<(u64, Range<usize>)> = Vec::new();
+    let widest = cfg.max_group.max(cfg.min_group);
+    for start in 0..sizes.len() {
+        let (mut lo, mut hi, mut total) = (u64::MAX, 0u64, 0u64);
+        for end in start + 1..=sizes.len().min(start + widest) {
+            let s = sizes[end - 1];
+            lo = lo.min(s);
+            hi = hi.max(s);
+            total += s;
+            if end - start < cfg.min_group {
+                continue;
+            }
+            if hi as f64 <= cfg.tier_ratio * lo.max(cfg.min_bytes) as f64 {
+                out.push((total, start..end));
+            }
+        }
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.start.cmp(&b.1.start)));
+    out.into_iter().map(|(_, r)| r).collect()
+}
+
+/// The background tier-merge driver for one cache directory.  `step`
+/// does at most one group merge; `run` steps until no group is
+/// mergeable.  Safe to run beside live writers (their segments are
+/// lock-protected and simply skipped) and beside readers (the
+/// generation bump triggers their rescan).
+pub struct Compactor {
+    dir: PathBuf,
+    cfg: CompactorConfig,
+}
+
+impl Compactor {
+    pub fn new(dir: &Path) -> Compactor {
+        Compactor::with_config(dir, CompactorConfig::default())
+    }
+
+    pub fn with_config(dir: &Path, cfg: CompactorConfig) -> Compactor {
+        Compactor { dir: dir.to_path_buf(), cfg }
+    }
+
+    /// Merge the cheapest lockable tier group, if any.  `Ok(None)` means
+    /// there was nothing to do *right now* (no group, or every candidate
+    /// has a live writer) — the idle-loop caller just tries again later.
+    pub fn step(&self) -> Result<Option<TierMergeReport>> {
+        let segments = list_segments(&self.dir)?;
+        if segments.len() < self.cfg.min_group {
+            return Ok(None);
+        }
+        let sizes: Vec<u64> = segments
+            .iter()
+            .map(|p| std::fs::metadata(p).map(|m| m.len()).unwrap_or(0))
+            .collect();
+        'candidates: for range in plan_groups(&sizes, &self.cfg) {
+            let group = &segments[range.clone()];
+            let mut locks = Vec::with_capacity(group.len());
+            for path in group {
+                match SegmentLock::try_acquire(path)? {
+                    Some(lock) => locks.push(lock),
+                    // a live writer owns this member: drop whatever we
+                    // grabbed and try the next candidate group
+                    None => continue 'candidates,
+                }
+            }
+            let report = self.merge_group(group)?;
+            drop(locks);
+            return Ok(Some(report));
+        }
+        Ok(None)
+    }
+
+    /// Step until no mergeable group remains, returning every report.
+    /// Converges because each merge strictly reduces the segment count.
+    pub fn run(&self) -> Result<Vec<TierMergeReport>> {
+        let mut reports = Vec::new();
+        while let Some(report) = self.step()? {
+            reports.push(report);
+        }
+        Ok(reports)
+    }
+
+    /// Merge one locked group.  All reads happen (and must succeed)
+    /// before any file is modified — an unreadable member aborts the
+    /// merge with every segment intact, mirroring gc's no-data-loss
+    /// contract.
+    fn merge_group(&self, group: &[PathBuf]) -> Result<TierMergeReport> {
+        let mut report = TierMergeReport {
+            inputs: group.iter().map(|p| name_of(p)).collect(),
+            output: name_of(group.last().expect("plan_groups yields non-empty groups")),
+            entries: 0,
+            deduped: 0,
+            corrupt_dropped: 0,
+            bytes_in: group
+                .iter()
+                .map(|p| std::fs::metadata(p).map(|m| m.len()).unwrap_or(0))
+                .sum(),
+            bytes_out: 0,
+        };
+
+        // ---- scan: spill (key, seq) line metadata, bounded memory
+        let mut manifests: Vec<String> = Vec::new();
+        let mut manifest_ids: HashMap<String, u32> = HashMap::new();
+        let mut spill: SpillWriter<KeyedLine> =
+            SpillWriter::new(&self.dir, "tier", DEFAULT_SPILL_CHUNK)?;
+        let mut seq = 0u64;
+        for (seg_idx, path) in group.iter().enumerate() {
+            scan_lines_strict(path, |offset, raw| {
+                let Ok(text) = std::str::from_utf8(raw) else {
+                    report.corrupt_dropped += 1;
+                    return Ok(());
+                };
+                let line = text.trim_end_matches('\r');
+                if line.trim().is_empty() {
+                    return Ok(());
+                }
+                match scan_line(line) {
+                    Ok(meta) => {
+                        let manifest = match manifest_ids.get(&meta.manifest) {
+                            Some(&id) => id,
+                            None => {
+                                let id = manifests.len() as u32;
+                                manifests.push(meta.manifest.clone());
+                                manifest_ids.insert(meta.manifest, id);
+                                id
+                            }
+                        };
+                        spill.push(KeyedLine {
+                            key: meta.key,
+                            seq,
+                            seg: seg_idx as u32,
+                            offset,
+                            len: raw.len() as u32,
+                            ts: meta.ts,
+                            manifest,
+                        })?;
+                        seq += 1;
+                    }
+                    Err(_) => report.corrupt_dropped += 1,
+                }
+                Ok(())
+            })
+            .with_context(|| {
+                format!(
+                    "tier merge: reading segment {} (aborted; no file was modified)",
+                    path.display()
+                )
+            })?;
+        }
+        let runs = spill.finish()?;
+
+        // ---- count winners (sizes the sidecar's bloom filter)
+        let mut merge = runs.merge()?;
+        let mut winners = 0usize;
+        let mut cur = merge.next()?;
+        while let Some(first) = cur.take() {
+            let mut winner = first;
+            loop {
+                match merge.next()? {
+                    Some(next) if next.key == winner.key => {
+                        report.deduped += 1;
+                        winner = next;
+                    }
+                    other => {
+                        cur = other;
+                        break;
+                    }
+                }
+            }
+            winners += 1;
+        }
+
+        // ---- write: raw-copy each winning line once, sidecar alongside
+        let output = group.last().expect("non-empty group");
+        let mut written = 0usize;
+        let mut out_off = 0u64;
+        let tmp = {
+            let mut name = output.file_name().unwrap_or_default().to_os_string();
+            name.push(".tier.tmp");
+            output.with_file_name(name)
+        };
+        if winners > 0 {
+            let mut out = BufWriter::new(
+                File::create(&tmp)
+                    .with_context(|| format!("tier merge: creating {}", tmp.display()))?,
+            );
+            let mut sidecar = match SidecarWriter::create(output, &manifests, winners) {
+                Ok(sw) => Some(sw),
+                Err(e) => {
+                    eprintln!("run-cache: tier merge proceeding without a sidecar: {e:#}");
+                    None
+                }
+            };
+            let mut prefix: Vec<u8> = Vec::new();
+            let mut merge = runs.merge()?;
+            let mut cur = merge.next()?;
+            while let Some(first) = cur.take() {
+                let mut winner = first;
+                loop {
+                    match merge.next()? {
+                        Some(next) if next.key == winner.key => winner = next,
+                        other => {
+                            cur = other;
+                            break;
+                        }
+                    }
+                }
+                let raw =
+                    read_span(&group[winner.seg as usize], winner.offset, winner.len as usize)
+                        .with_context(|| {
+                            format!(
+                                "tier merge: re-reading a planned winner from {} \
+                                 (aborted; no segment was modified)",
+                                group[winner.seg as usize].display()
+                            )
+                        })?;
+                out.write_all(&raw).context("tier merge: writing merged segment")?;
+                out.write_all(b"\n").context("tier merge: writing merged segment")?;
+                if (prefix.len() as u64) < PREFIX_HASH_SPAN {
+                    let take = (PREFIX_HASH_SPAN as usize - prefix.len()).min(raw.len());
+                    prefix.extend_from_slice(&raw[..take]);
+                    if (prefix.len() as u64) < PREFIX_HASH_SPAN {
+                        prefix.push(b'\n');
+                    }
+                }
+                if let Some(mut sw) = sidecar.take() {
+                    match sw.push(&winner.key, out_off, winner.len, winner.ts, winner.manifest) {
+                        Ok(()) => sidecar = Some(sw),
+                        Err(e) => {
+                            eprintln!("run-cache: tier merge abandoning the sidecar: {e:#}")
+                        }
+                    }
+                }
+                out_off += winner.len as u64 + 1;
+                written += 1;
+            }
+            out.flush().context("tier merge: flushing merged segment")?;
+            let _ = out.get_ref().sync_all();
+            drop(out);
+
+            // ---- commit: install output, drop merged-away members
+            let next_generation = read_generation(&self.dir).wrapping_add(1);
+            std::fs::rename(&tmp, output)
+                .with_context(|| format!("tier merge: installing {}", output.display()))?;
+            for member in &group[..group.len() - 1] {
+                remove_sidecar(member);
+                if let Err(e) = std::fs::remove_file(member) {
+                    // harmless leftover: the installed output outranks it,
+                    // so its (duplicate) keys stay shadowed; next step
+                    // retries the delete via another merge
+                    eprintln!(
+                        "run-cache: tier merge could not remove {}: {e}",
+                        member.display()
+                    );
+                }
+            }
+            match sidecar {
+                Some(sw) => {
+                    if let Err(e) = sw.finish(out_off, next_generation, fnv1a64(&prefix)) {
+                        eprintln!("run-cache: tier merge sidecar write failed: {e:#}");
+                        remove_sidecar(output);
+                    }
+                }
+                None => remove_sidecar(output),
+            }
+            report.bytes_out = std::fs::metadata(output).map(|m| m.len()).unwrap_or(0);
+        } else {
+            // every line in the group was blank or corrupt: drop the
+            // group entirely rather than install an empty segment
+            for member in group {
+                remove_sidecar(member);
+                if let Err(e) = std::fs::remove_file(member) {
+                    eprintln!(
+                        "run-cache: tier merge could not remove {}: {e}",
+                        member.display()
+                    );
+                }
+            }
+        }
+        report.entries = written;
+        if let Err(e) = bump_generation(&self.dir) {
+            eprintln!("run-cache: tier merge could not bump the generation marker: {e:#}");
+        }
+        Ok(report)
+    }
+}
+
+fn name_of(p: &Path) -> String {
+    p.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default()
+}
+
+fn read_span(path: &Path, offset: u64, len: usize) -> Result<Vec<u8>> {
+    let mut f = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    f.seek(SeekFrom::Start(offset)).context("seeking winner")?;
+    let mut buf = vec![0u8; len];
+    f.read_exact(&mut buf).with_context(|| format!("reading {}", path.display()))?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::filter::Sidecar;
+    use super::super::segment::entry_line;
+    use super::super::CacheWatcher;
+    use super::*;
+    use crate::train::RunRecord;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("umup-tier-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn rec(label: &str) -> RunRecord {
+        RunRecord {
+            label: label.to_string(),
+            train_curve: vec![(1, 2.0)],
+            valid_curve: vec![(1, 2.5)],
+            final_valid_loss: 2.5,
+            rms_curves: std::collections::BTreeMap::new(),
+            final_rms: vec![("embedding".to_string(), 1.0)],
+            diverged: false,
+            wall_seconds: 0.5,
+        }
+    }
+
+    fn key(i: u64) -> String {
+        format!("{i:016x}")
+    }
+
+    fn write_seg(dir: &Path, name: &str, entries: &[(u64, &str, u64)]) -> Vec<String> {
+        let mut lines = Vec::new();
+        for &(k, manifest, ts) in entries {
+            lines.push(entry_line(&key(k), manifest, ts, &rec(&format!("run-{k}"))));
+        }
+        let body: String = lines.iter().map(|l| format!("{l}\n")).collect();
+        std::fs::write(dir.join(name), body).unwrap();
+        lines
+    }
+
+    #[test]
+    fn plan_groups_keeps_tiers_apart_and_prefers_cheap_merges() {
+        let cfg = CompactorConfig {
+            tier_ratio: 4.0,
+            min_group: 2,
+            max_group: 3,
+            min_bytes: 1,
+        };
+        let groups = plan_groups(&[100, 120, 4000, 100_000], &cfg);
+        // the two small segments are the only tier-compatible window:
+        // 4000 > 4×120 and 100_000 > 4×4000 exclude everything else
+        assert_eq!(groups, vec![0..2]);
+
+        // the min_bytes floor puts tiny segments in one shared tier
+        let floored = CompactorConfig { min_bytes: 10_000, ..cfg.clone() };
+        let groups = plan_groups(&[100, 120, 4000], &floored);
+        assert_eq!(groups.first(), Some(&(0..2)), "cheapest merge first");
+        assert!(groups.contains(&(0..3)), "the full window shares the floored tier");
+
+        // too few segments: nothing to plan
+        assert!(plan_groups(&[500], &cfg).is_empty());
+    }
+
+    #[test]
+    fn tiered_merge_converges_preserving_raw_bytes_and_precedence() {
+        let dir = tmp_dir("converge");
+        let s0 = write_seg(&dir, "runs.0.jsonl", &[(0xa, "m0", 100), (0xb, "m0", 101)]);
+        let s1 = write_seg(&dir, "runs.1.jsonl", &[(0xb, "m1", 200), (0xc, "m0", 102)]);
+        let s2 = write_seg(&dir, "runs.2.jsonl", &[(0xd, "m1", 103)]);
+
+        let compactor = Compactor::new(&dir);
+        let reports = compactor.run().unwrap();
+        // cheapest group first: the (runs.1, runs.2) pair is the
+        // smallest total, then the result folds up with runs.0
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].inputs, vec!["runs.1.jsonl", "runs.2.jsonl"]);
+        assert_eq!(reports[0].output, "runs.2.jsonl");
+        assert_eq!((reports[0].entries, reports[0].deduped), (3, 0));
+        assert_eq!(reports[1].inputs, vec!["runs.0.jsonl", "runs.2.jsonl"]);
+        assert_eq!(reports[1].output, "runs.2.jsonl");
+        // runs.0's older write of key 0xb loses to the runs.1 version
+        assert_eq!((reports[1].entries, reports[1].deduped), (4, 1));
+        assert_eq!(reports.iter().map(|r| r.corrupt_dropped).sum::<usize>(), 0);
+        assert!(reports[1].bytes_out < reports[1].bytes_in);
+
+        // only the output segment remains, holding each key's raw
+        // winning line verbatim, key-sorted — 0xb's runs.1 version wins
+        let out = dir.join("runs.2.jsonl");
+        assert_eq!(list_segments(&dir).unwrap(), vec![out.clone()]);
+        let expected: String =
+            [&s0[0], &s1[0], &s1[1], &s2[0]].iter().map(|l| format!("{l}\n")).collect();
+        assert_eq!(std::fs::read_to_string(&out).unwrap(), expected);
+
+        // the generation moved and the sidecar is adoptable: a fresh
+        // watcher counts keys without scanning the segment
+        assert!(read_generation(&dir) > 0);
+        let sc = Sidecar::open(&out).unwrap().expect("merge must leave a sidecar");
+        assert!(sc.validate(&out));
+        assert_eq!(sc.n_entries(), 4);
+        let mut w = CacheWatcher::new(&dir);
+        assert_eq!(w.poll(), 4);
+        assert_eq!(w.filter_stats().segments_skipped, 1);
+
+        // idempotent: a single segment is never re-merged
+        assert!(compactor.step().unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn live_writer_lock_skips_the_group_without_blocking() {
+        let dir = tmp_dir("locked");
+        write_seg(&dir, "runs.0.jsonl", &[(1, "m0", 100)]);
+        write_seg(&dir, "runs.1.jsonl", &[(2, "m0", 101)]);
+        let held = SegmentLock::acquire(&dir.join("runs.1.jsonl")).unwrap();
+
+        let compactor = Compactor::new(&dir);
+        assert!(compactor.step().unwrap().is_none(), "locked member excludes its group");
+        assert_eq!(list_segments(&dir).unwrap().len(), 2, "nothing was touched");
+
+        drop(held);
+        let report = compactor.step().unwrap().expect("unlocked group now merges");
+        assert_eq!(report.entries, 2);
+        assert_eq!(list_segments(&dir).unwrap().len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn all_corrupt_group_is_dropped_not_installed_empty() {
+        let dir = tmp_dir("corrupt");
+        std::fs::write(dir.join("runs.0.jsonl"), "{ not json\n").unwrap();
+        std::fs::write(dir.join("runs.1.jsonl"), "also not json\n").unwrap();
+        let report = Compactor::new(&dir).step().unwrap().expect("the group was planned");
+        assert_eq!((report.entries, report.corrupt_dropped), (0, 2));
+        assert!(list_segments(&dir).unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,597 @@
+//! Per-segment key-presence sidecars (`<segment>.idx`): a bloom filter
+//! plus sorted fence pointers over a segment's per-key winners, written
+//! by compaction so miss-heavy opens and [`super::CacheWatcher`] polls
+//! can answer "not in this segment" without scanning it.
+//!
+//! # On-disk format (all integers little-endian)
+//!
+//! ```text
+//! magic            8B   "UMUPSCX1"
+//! manifest table   u32 count, then per name: u32 len + utf-8 bytes
+//! entries          per entry (key-sorted):
+//!                    u16 key len + key bytes
+//!                    u64 offset   (line start within the segment)
+//!                    u32 len      (line length, no trailing newline)
+//!                    u64 ts
+//!                    u32 manifest (index into the manifest table)
+//! fences           every 64th entry: u16 key len + key bytes +
+//!                    u64 rel      (entry's byte offset within `entries`)
+//! bloom            u64 × bloom_words
+//! trailer (88B)    u64 n_entries, entries_off, entries_len, n_fences,
+//!                    fences_off, bloom_off, bloom_words, covered_bytes,
+//!                    generation, prefix_hash; magic 8B "UMUPSCXT"
+//! ```
+//!
+//! [`Sidecar::open`] reads the trailer, manifest table, fences, and
+//! bloom — never the entries section, whose size is O(keys).  A point
+//! [`Sidecar::lookup`] re-opens the file and scans at most one fence gap
+//! (≤ 64 entries, ~one page).
+//!
+//! # Validity
+//!
+//! A sidecar describes the first `covered_bytes` of its segment at
+//! write time.  [`Sidecar::validate`] checks *structurally* — the
+//! segment must still be at least `covered_bytes` long and the first
+//! `min(4096, covered_bytes)` bytes must hash to `prefix_hash` — so
+//! appends after the covered prefix keep the sidecar valid (newer
+//! same-key appends are resolved by the reader: in-map entries outrank
+//! the sidecar at equal segment rank).  The stored `generation` is
+//! diagnostic only: tiered merges bump the *directory* generation
+//! without touching other segments, so generation equality must not
+//! gate validity.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::hash::fnv1a64;
+
+use super::segment::sidecar_path;
+
+const MAGIC_HEAD: &[u8; 8] = b"UMUPSCX1";
+const MAGIC_TAIL: &[u8; 8] = b"UMUPSCXT";
+const TRAILER_LEN: u64 = 88;
+/// One fence pointer per this many entries: a point lookup scans at
+/// most one gap (64 entries ≈ 4 KiB of entry records — about a page).
+const FENCE_EVERY: u64 = 64;
+/// Bytes of segment prefix folded into `prefix_hash` by the validity
+/// check.
+pub(crate) const PREFIX_HASH_SPAN: u64 = 4096;
+const BLOOM_HASHES: u64 = 6;
+const BLOOM_BITS_PER_KEY: u64 = 10;
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+fn bloom_probes(key: &str) -> (u64, u64) {
+    let h1 = fnv1a64(key.as_bytes());
+    (h1, splitmix64(h1) | 1)
+}
+
+/// Hash of the first `min(PREFIX_HASH_SPAN, covered)` bytes of a
+/// segment — the anchor [`Sidecar::validate`] compares against.
+pub(crate) fn segment_prefix_hash(path: &Path, covered: u64) -> Result<u64> {
+    let mut f = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut buf = vec![0u8; PREFIX_HASH_SPAN.min(covered) as usize];
+    f.read_exact(&mut buf)
+        .with_context(|| format!("reading prefix of {}", path.display()))?;
+    Ok(fnv1a64(&buf))
+}
+
+/// Delete a segment's sidecar (idempotent) — called when the segment is
+/// removed, truncated, or rewritten outside compaction.
+pub(crate) fn remove_sidecar(segment: &Path) {
+    let _ = std::fs::remove_file(sidecar_path(segment));
+}
+
+// --------------------------------------------------------------- writer
+
+/// Streams a sidecar to `<segment>.idx.tmp`, renamed into place by
+/// [`SidecarWriter::finish`]; dropping an unfinished writer removes the
+/// temp file.  Keys must be pushed in sorted order (compaction output
+/// order) — enforced, since fences and lookups depend on it.
+pub(crate) struct SidecarWriter {
+    tmp: PathBuf,
+    dst: PathBuf,
+    w: BufWriter<File>,
+    bloom: Vec<u64>,
+    fences: Vec<(String, u64)>,
+    manifest_table_len: u64,
+    n_entries: u64,
+    entries_written: u64,
+    last_key: String,
+    finished: bool,
+}
+
+impl SidecarWriter {
+    /// `expected_keys` sizes the bloom filter (~10 bits/key, k=6 —
+    /// ≈1% false positives at the design point); overshooting is
+    /// harmless, undershooting just raises the FP rate.
+    pub(crate) fn create(
+        segment: &Path,
+        manifests: &[String],
+        expected_keys: usize,
+    ) -> Result<SidecarWriter> {
+        let dst = sidecar_path(segment);
+        let mut tmp_name = dst.file_name().unwrap_or_default().to_os_string();
+        tmp_name.push(".tmp");
+        let tmp = dst.with_file_name(tmp_name);
+        let mut w = BufWriter::new(
+            File::create(&tmp).with_context(|| format!("creating sidecar {}", tmp.display()))?,
+        );
+        w.write_all(MAGIC_HEAD).context("writing sidecar magic")?;
+        let mut table_len = 4u64;
+        w.write_all(&(manifests.len() as u32).to_le_bytes())?;
+        for m in manifests {
+            w.write_all(&(m.len() as u32).to_le_bytes())?;
+            w.write_all(m.as_bytes())?;
+            table_len += 4 + m.len() as u64;
+        }
+        let bits = (expected_keys as u64 * BLOOM_BITS_PER_KEY).max(64).div_ceil(64) * 64;
+        Ok(SidecarWriter {
+            tmp,
+            dst,
+            w,
+            bloom: vec![0u64; (bits / 64) as usize],
+            fences: Vec::new(),
+            manifest_table_len: table_len,
+            n_entries: 0,
+            entries_written: 0,
+            last_key: String::new(),
+            finished: false,
+        })
+    }
+
+    pub(crate) fn push(
+        &mut self,
+        key: &str,
+        offset: u64,
+        len: u32,
+        ts: u64,
+        manifest: u32,
+    ) -> Result<()> {
+        if key.len() > u16::MAX as usize {
+            bail!("sidecar key too long ({} bytes)", key.len());
+        }
+        if self.n_entries > 0 && key <= self.last_key.as_str() {
+            bail!("sidecar keys pushed out of order ({key:?} after {:?})", self.last_key);
+        }
+        if self.n_entries % FENCE_EVERY == 0 {
+            self.fences.push((key.to_string(), self.entries_written));
+        }
+        self.w.write_all(&(key.len() as u16).to_le_bytes())?;
+        self.w.write_all(key.as_bytes())?;
+        self.w.write_all(&offset.to_le_bytes())?;
+        self.w.write_all(&len.to_le_bytes())?;
+        self.w.write_all(&ts.to_le_bytes())?;
+        self.w.write_all(&manifest.to_le_bytes())?;
+        let (h1, h2) = bloom_probes(key);
+        let bits = self.bloom.len() as u64 * 64;
+        for i in 0..BLOOM_HASHES {
+            let bit = h1.wrapping_add(i.wrapping_mul(h2)) % bits;
+            self.bloom[(bit / 64) as usize] |= 1u64 << (bit % 64);
+        }
+        self.n_entries += 1;
+        self.entries_written += 2 + key.len() as u64 + 8 + 4 + 8 + 4;
+        self.last_key.clear();
+        self.last_key.push_str(key);
+        Ok(())
+    }
+
+    /// Seal: write fences, bloom, and the trailer, then rename the
+    /// sidecar into place.  `covered_bytes` is the segment length the
+    /// entries describe; `prefix_hash` anchors [`Sidecar::validate`].
+    pub(crate) fn finish(
+        mut self,
+        covered_bytes: u64,
+        generation: u64,
+        prefix_hash: u64,
+    ) -> Result<()> {
+        let entries_off = 8 + self.manifest_table_len;
+        let fences_off = entries_off + self.entries_written;
+        let mut fences_len = 0u64;
+        for (key, rel) in &self.fences {
+            self.w.write_all(&(key.len() as u16).to_le_bytes())?;
+            self.w.write_all(key.as_bytes())?;
+            self.w.write_all(&rel.to_le_bytes())?;
+            fences_len += 2 + key.len() as u64 + 8;
+        }
+        let bloom_off = fences_off + fences_len;
+        for word in &self.bloom {
+            self.w.write_all(&word.to_le_bytes())?;
+        }
+        for v in [
+            self.n_entries,
+            entries_off,
+            self.entries_written,
+            self.fences.len() as u64,
+            fences_off,
+            bloom_off,
+            self.bloom.len() as u64,
+            covered_bytes,
+            generation,
+            prefix_hash,
+        ] {
+            self.w.write_all(&v.to_le_bytes())?;
+        }
+        self.w.write_all(MAGIC_TAIL)?;
+        self.w.flush().context("flushing sidecar")?;
+        self.w.get_ref().sync_all().context("syncing sidecar")?;
+        std::fs::rename(&self.tmp, &self.dst)
+            .with_context(|| format!("installing sidecar {}", self.dst.display()))?;
+        self.finished = true;
+        Ok(())
+    }
+}
+
+impl Drop for SidecarWriter {
+    fn drop(&mut self) {
+        if !self.finished {
+            let _ = std::fs::remove_file(&self.tmp);
+        }
+    }
+}
+
+// --------------------------------------------------------------- reader
+
+fn get_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b).context("truncated sidecar")?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn get_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).context("truncated sidecar")?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn get_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b).context("truncated sidecar")?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn get_str(r: &mut impl Read, len: usize) -> Result<String> {
+    let mut b = vec![0u8; len];
+    r.read_exact(&mut b).context("truncated sidecar")?;
+    String::from_utf8(b).context("non-utf8 sidecar string")
+}
+
+/// An opened sidecar: trailer + manifest table + fences + bloom resident
+/// (O(keys / 64)), entries left on disk.
+pub(crate) struct Sidecar {
+    path: PathBuf,
+    n_entries: u64,
+    entries_off: u64,
+    entries_len: u64,
+    covered_bytes: u64,
+    generation: u64,
+    prefix_hash: u64,
+    manifests: Vec<String>,
+    fences: Vec<(String, u64)>,
+    bloom: Vec<u64>,
+}
+
+impl Sidecar {
+    /// Open `<segment>.idx`.  `Ok(None)` when no sidecar exists; a
+    /// malformed one is an error (callers treat it as absent and
+    /// usually delete it).
+    pub(crate) fn open(segment: &Path) -> Result<Option<Sidecar>> {
+        let path = sidecar_path(segment);
+        let mut f = match File::open(&path) {
+            Ok(f) => f,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e).with_context(|| format!("opening {}", path.display())),
+        };
+        let file_len = f.metadata().context("sidecar metadata")?.len();
+        if file_len < 8 + TRAILER_LEN {
+            bail!("sidecar {} too short ({file_len} bytes)", path.display());
+        }
+        f.seek(SeekFrom::End(-(TRAILER_LEN as i64))).context("seeking sidecar trailer")?;
+        let mut trailer = [0u8; TRAILER_LEN as usize];
+        f.read_exact(&mut trailer).context("reading sidecar trailer")?;
+        if &trailer[80..88] != MAGIC_TAIL {
+            bail!("sidecar {} has a bad trailer magic", path.display());
+        }
+        let word = |i: usize| u64::from_le_bytes(trailer[i * 8..i * 8 + 8].try_into().unwrap());
+        let (n_entries, entries_off, entries_len) = (word(0), word(1), word(2));
+        let (n_fences, fences_off, bloom_off, bloom_words) = (word(3), word(4), word(5), word(6));
+        let (covered_bytes, generation, prefix_hash) = (word(7), word(8), word(9));
+        let trailer_off = file_len - TRAILER_LEN;
+        if entries_off + entries_len != fences_off
+            || fences_off > bloom_off
+            || bloom_off + bloom_words * 8 != trailer_off
+            || bloom_words == 0
+        {
+            bail!("sidecar {} has inconsistent section offsets", path.display());
+        }
+        f.seek(SeekFrom::Start(0)).context("seeking sidecar head")?;
+        let mut r = BufReader::new(f);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic).context("reading sidecar magic")?;
+        if &magic != MAGIC_HEAD {
+            bail!("sidecar {} has a bad header magic", path.display());
+        }
+        let n_manifests = get_u32(&mut r)?;
+        if n_manifests as u64 > entries_off {
+            bail!("sidecar {} manifest table overruns", path.display());
+        }
+        let mut manifests = Vec::with_capacity(n_manifests as usize);
+        for _ in 0..n_manifests {
+            let len = get_u32(&mut r)? as usize;
+            manifests.push(get_str(&mut r, len)?);
+        }
+        let mut r = r.into_inner();
+        r.seek(SeekFrom::Start(fences_off)).context("seeking sidecar fences")?;
+        let mut r = BufReader::new(r);
+        if n_fences > n_entries {
+            bail!("sidecar {} has more fences than entries", path.display());
+        }
+        let mut fences = Vec::with_capacity(n_fences as usize);
+        for _ in 0..n_fences {
+            let klen = get_u16(&mut r)? as usize;
+            let key = get_str(&mut r, klen)?;
+            fences.push((key, get_u64(&mut r)?));
+        }
+        let mut r = r.into_inner();
+        r.seek(SeekFrom::Start(bloom_off)).context("seeking sidecar bloom")?;
+        let mut r = BufReader::new(r);
+        let mut bloom = Vec::with_capacity(bloom_words as usize);
+        for _ in 0..bloom_words {
+            bloom.push(get_u64(&mut r)?);
+        }
+        Ok(Some(Sidecar {
+            path,
+            n_entries,
+            entries_off,
+            entries_len,
+            covered_bytes,
+            generation,
+            prefix_hash,
+            manifests,
+            fences,
+            bloom,
+        }))
+    }
+
+    pub(crate) fn n_entries(&self) -> u64 {
+        self.n_entries
+    }
+
+    pub(crate) fn covered_bytes(&self) -> u64 {
+        self.covered_bytes
+    }
+
+    #[allow(dead_code)] // diagnostic field, surfaced by `cache stats`-style tooling
+    pub(crate) fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    pub(crate) fn manifest(&self, id: u32) -> Option<&str> {
+        self.manifests.get(id as usize).map(String::as_str)
+    }
+
+    /// Structural validity against the segment as it is *now*: the
+    /// covered prefix must still exist and hash to what it hashed at
+    /// write time.  Appends beyond the prefix keep a sidecar valid;
+    /// truncation or rewrite-in-place invalidates it.
+    pub(crate) fn validate(&self, segment: &Path) -> bool {
+        let Ok(meta) = std::fs::metadata(segment) else { return false };
+        if meta.len() < self.covered_bytes {
+            return false;
+        }
+        matches!(segment_prefix_hash(segment, self.covered_bytes), Ok(h) if h == self.prefix_hash)
+    }
+
+    /// Bloom membership: `false` means definitely absent from the
+    /// covered prefix; `true` means "probably present" (~1% FP at the
+    /// design load).
+    pub(crate) fn might_contain(&self, key: &str) -> bool {
+        let (h1, h2) = bloom_probes(key);
+        let bits = self.bloom.len() as u64 * 64;
+        (0..BLOOM_HASHES).all(|i| {
+            let bit = h1.wrapping_add(i.wrapping_mul(h2)) % bits;
+            self.bloom[(bit / 64) as usize] & (1u64 << (bit % 64)) != 0
+        })
+    }
+
+    /// Exact point lookup: bloom, then one fence gap of entries
+    /// (≤ [`FENCE_EVERY`]) read straight off disk.  Returns
+    /// `(offset, len, ts, manifest-id)` for the key's winner within the
+    /// covered prefix.  I/O or format trouble degrades to a miss with a
+    /// warning — the caller falls back to scanning the segment.
+    pub(crate) fn lookup(&self, key: &str) -> Option<(u64, u32, u64, u32)> {
+        if !self.might_contain(key) {
+            return None;
+        }
+        match self.lookup_inner(key) {
+            Ok(hit) => hit,
+            Err(e) => {
+                eprintln!("run-cache: sidecar probe failed on {}: {e:#}", self.path.display());
+                None
+            }
+        }
+    }
+
+    fn lookup_inner(&self, key: &str) -> Result<Option<(u64, u32, u64, u32)>> {
+        let idx = self.fences.partition_point(|(k, _)| k.as_str() <= key);
+        if idx == 0 {
+            return Ok(None); // key sorts before the first entry
+        }
+        let start = self.fences[idx - 1].1;
+        let end = self.fences.get(idx).map_or(self.entries_len, |(_, rel)| *rel);
+        let mut f =
+            File::open(&self.path).with_context(|| format!("opening {}", self.path.display()))?;
+        f.seek(SeekFrom::Start(self.entries_off + start)).context("seeking sidecar entries")?;
+        let mut r = BufReader::new(f.take(end - start));
+        let mut consumed = 0;
+        while consumed < end - start {
+            let klen = get_u16(&mut r)? as usize;
+            let ekey = get_str(&mut r, klen)?;
+            let offset = get_u64(&mut r)?;
+            let len = get_u32(&mut r)?;
+            let ts = get_u64(&mut r)?;
+            let manifest = get_u32(&mut r)?;
+            match ekey.as_str().cmp(key) {
+                std::cmp::Ordering::Equal => return Ok(Some((offset, len, ts, manifest))),
+                std::cmp::Ordering::Greater => return Ok(None), // sorted: passed it
+                std::cmp::Ordering::Less => {}
+            }
+            consumed += 2 + klen as u64 + 8 + 4 + 8 + 4;
+        }
+        Ok(None)
+    }
+
+    /// Stream every entry (sorted order) — used when the index adopts a
+    /// sidecar and needs to reconcile its key set against entries it
+    /// already holds.
+    pub(crate) fn for_each_entry(
+        &self,
+        mut f: impl FnMut(&str, u64, u32, u64, u32),
+    ) -> Result<()> {
+        let file =
+            File::open(&self.path).with_context(|| format!("opening {}", self.path.display()))?;
+        let mut file = file;
+        file.seek(SeekFrom::Start(self.entries_off)).context("seeking sidecar entries")?;
+        let mut r = BufReader::new(file.take(self.entries_len));
+        for _ in 0..self.n_entries {
+            let klen = get_u16(&mut r)? as usize;
+            let key = get_str(&mut r, klen)?;
+            let offset = get_u64(&mut r)?;
+            let len = get_u32(&mut r)?;
+            let ts = get_u64(&mut r)?;
+            let manifest = get_u32(&mut r)?;
+            f(&key, offset, len, ts, manifest);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("umup-sidecar-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn key(i: u64) -> String {
+        format!("{i:016x}")
+    }
+
+    #[test]
+    fn roundtrip_across_multiple_fence_gaps() {
+        let dir = tmp_dir("roundtrip");
+        let seg = dir.join("runs.jsonl");
+        std::fs::write(&seg, b"line one\nline two\n").unwrap();
+        let manifests = vec!["m.json".to_string(), "other.json".to_string()];
+        let mut w = SidecarWriter::create(&seg, &manifests, 300).unwrap();
+        for i in 0..300u64 {
+            // only even keys present, so odd keys probe real absences
+            w.push(&key(2 * i), i * 10, 100 + i as u32, 5000 + i, (i % 2) as u32).unwrap();
+        }
+        let hash = segment_prefix_hash(&seg, 18).unwrap();
+        w.finish(18, 7, hash).unwrap();
+
+        let sc = Sidecar::open(&seg).unwrap().expect("sidecar should exist");
+        assert_eq!(sc.n_entries(), 300);
+        assert_eq!(sc.covered_bytes(), 18);
+        assert_eq!(sc.generation(), 7);
+        assert_eq!(sc.manifest(1), Some("other.json"));
+        assert!(sc.validate(&seg));
+        for i in [0u64, 1, 63, 64, 65, 150, 298, 299] {
+            let (off, len, ts, m) = sc.lookup(&key(2 * i)).expect("present key");
+            assert_eq!((off, len, ts, m), (i * 10, 100 + i as u32, 5000 + i, (i % 2) as u32));
+        }
+        for i in [0u64, 64, 150, 299] {
+            assert!(sc.lookup(&key(2 * i + 1)).is_none(), "odd key {i} must miss");
+        }
+        // below the first entry and above the last
+        assert!(sc.lookup("0000000000000000").is_none() || key(0) == "0000000000000000");
+        assert!(sc.lookup("ffffffffffffffff").is_none());
+        let mut streamed = 0;
+        sc.for_each_entry(|k, off, _, _, _| {
+            assert_eq!(k, key(streamed * 2));
+            assert_eq!(off, streamed * 10);
+            streamed += 1;
+        })
+        .unwrap();
+        assert_eq!(streamed, 300);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bloom_rejects_most_absent_keys() {
+        let dir = tmp_dir("fpr");
+        let seg = dir.join("runs.jsonl");
+        std::fs::write(&seg, b"x\n").unwrap();
+        let mut w = SidecarWriter::create(&seg, &[], 10_000).unwrap();
+        for i in 0..10_000u64 {
+            w.push(&key(i), 0, 1, 0, 0).unwrap();
+        }
+        w.finish(2, 0, segment_prefix_hash(&seg, 2).unwrap()).unwrap();
+        let sc = Sidecar::open(&seg).unwrap().unwrap();
+        // all present keys pass
+        assert!((0..10_000u64).all(|i| sc.might_contain(&key(i))));
+        // absent keys: ~1% FP design point; require ≥90% rejected
+        let rejected = (10_000..20_000u64).filter(|i| !sc.might_contain(&key(*i))).count();
+        assert!(rejected >= 9_000, "bloom rejected only {rejected}/10000 absent keys");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn validation_tracks_the_segment_prefix() {
+        let dir = tmp_dir("validate");
+        let seg = dir.join("runs.jsonl");
+        let body = b"abcdefghij\n".to_vec();
+        std::fs::write(&seg, &body).unwrap();
+        let mut w = SidecarWriter::create(&seg, &[], 4).unwrap();
+        w.push("k1", 0, 10, 1, 0).unwrap();
+        let covered = body.len() as u64;
+        w.finish(covered, 1, segment_prefix_hash(&seg, covered).unwrap()).unwrap();
+        let sc = Sidecar::open(&seg).unwrap().unwrap();
+        assert!(sc.validate(&seg));
+
+        // appending keeps it valid (prefix untouched)
+        let mut appended = body.clone();
+        appended.extend_from_slice(b"more\n");
+        std::fs::write(&seg, &appended).unwrap();
+        assert!(sc.validate(&seg));
+
+        // rewriting the prefix invalidates
+        std::fs::write(&seg, b"XXcdefghij\nmore\n").unwrap();
+        assert!(!sc.validate(&seg));
+
+        // truncation below covered_bytes invalidates
+        std::fs::write(&seg, b"abc").unwrap();
+        assert!(!sc.validate(&seg));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn out_of_order_push_is_rejected_and_tmp_cleaned_up() {
+        let dir = tmp_dir("order");
+        let seg = dir.join("runs.jsonl");
+        std::fs::write(&seg, b"x\n").unwrap();
+        {
+            let mut w = SidecarWriter::create(&seg, &[], 4).unwrap();
+            w.push("bb", 0, 1, 0, 0).unwrap();
+            assert!(w.push("aa", 0, 1, 0, 0).is_err());
+            // dropped unfinished
+        }
+        assert!(!sidecar_path(&seg).exists());
+        assert!(!dir.join("runs.jsonl.idx.tmp").exists());
+        assert!(Sidecar::open(&seg).unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

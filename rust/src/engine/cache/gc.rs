@@ -1,27 +1,61 @@
 //! Run-cache lifecycle: pruning, size-targeted eviction, and
-//! compaction — the only code that *rewrites* segments.
+//! compaction — the only code here that *rewrites* every segment.
 //!
-//! GC is deliberately the eager, O(total-bytes) path: it must
-//! re-serialize every surviving line anyway, so it materializes records
-//! through the reference codec.  What it owes the lazy readers
-//! ([`super::index`]) is the **generation contract**: any non-dry-run
-//! rewrite bumps the directory's generation marker (under every
-//! segment's writer lock), so incremental readers discover that their
-//! remembered byte offsets died with the old files and fall back to one
-//! full rescan.
+//! Compaction is a bounded-memory streaming pipeline, not an eager
+//! merge: at 10⁶ entries the cache outgrows RAM long before it outgrows
+//! disk, so no phase may hold more than O(chunk) entries resident.
+//!
+//! 1. **Scan** — every segment is read strictly
+//!    ([`super::segment::scan_lines_strict`]): each line is validated by
+//!    the non-materializing key scanner ([`super::index::scan_line`])
+//!    and spilled as a [`KeyedLine`] — key, scan sequence number, and
+//!    the (segment, offset, length) needed to re-read it — in sorted
+//!    fixed-size runs ([`super::spill`]).  A segment that cannot be
+//!    read **aborts the whole gc** before any file is touched: a lossy
+//!    scan followed by a rewrite would silently destroy the entries it
+//!    never saw.
+//! 2. **Plan** — a k-way merge replays the runs in (key, seq) order;
+//!    the last item of each key group is the newest write and wins.
+//!    The `older_than` / `manifest` filters apply to winners here, and
+//!    when `max_bytes` is set the surviving (ts, key, len) triples are
+//!    spilled again and age-merged to find the eviction cutoff — all
+//!    without serializing a single record.  `dry_run` stops here, so
+//!    its projection is exact and costs zero writes.
+//! 3. **Write** — the key runs are replayed once more; each surviving
+//!    winner is re-read from its segment, parsed through the reference
+//!    codec, and serialized exactly once into `runs.jsonl.tmp`
+//!    (key-sorted, so the output feeds a [`super::filter::SidecarWriter`]
+//!    as it streams).  Rename + delete the merged segments + bump the
+//!    generation marker, all under every segment's writer lock.
+//!
+//! What compaction owes the lazy readers ([`super::index`]) is the
+//! **generation contract**: any non-dry-run rewrite bumps the
+//! directory's generation marker (under every segment's writer lock),
+//! so incremental readers discover that their remembered byte offsets
+//! died with the old files and fall back to one full rescan.
+//!
+//! One deliberate divergence from the old eager path: a line whose
+//! `record` is valid JSON of the wrong *shape* passes the plan (the key
+//! scanner doesn't build records) and is dropped at write time with
+//! `corrupt_dropped`, so a `dry_run` projection can overcount such
+//! lines.  They only exist in hand-edited caches.
 
-use std::collections::BTreeMap;
 use std::fs::File;
-use std::io::Write;
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use crate::util::hash::fnv1a64;
+
+use super::filter::{remove_sidecar, SidecarWriter, PREFIX_HASH_SPAN};
+use super::index::scan_line;
 use super::segment::{
-    bump_generation, entry_line, for_each_line, list_segments, now_ts, parse_full_entry, Entry,
-    SegmentLock,
+    bump_generation, entry_line, list_segments, now_ts, parse_full_entry, read_generation,
+    scan_lines_strict, SegmentLock,
 };
+use super::spill::{AgeKey, KeyedLine, SpillWriter, DEFAULT_SPILL_CHUNK};
 
 /// Opening a cache dir with `resume` auto-compacts it first when it
 /// holds more than this many segments (see [`super::RunCache::open_sharded`]).
@@ -43,12 +77,17 @@ pub struct GcOptions {
     pub max_bytes: Option<u64>,
     /// Report what would happen without touching any file.
     pub dry_run: bool,
+    /// Entries held in memory per spill run — the bounded-memory knob.
+    /// Peak resident usage is O(this), independent of cache size.
+    /// `None` uses [`super::spill::DEFAULT_SPILL_CHUNK`]; tiny values
+    /// are only useful to tests.
+    pub chunk_entries: Option<usize>,
 }
 
 /// What [`gc`] did (or, under `dry_run`, would do).
 #[derive(Debug, Clone, Default)]
 pub struct GcReport {
-    /// Parseable lines seen across all segments.
+    /// Structurally valid lines seen across all segments.
     pub scanned: usize,
     pub kept: usize,
     /// Entries dropped by the age / manifest filters.
@@ -63,15 +102,29 @@ pub struct GcReport {
     pub bytes_after: u64,
 }
 
-/// Prune and compact a cache directory.
+fn read_span(path: &Path, offset: u64, len: usize) -> Result<Vec<u8>> {
+    let mut f = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    f.seek(SeekFrom::Start(offset))
+        .with_context(|| format!("seeking {} in {}", offset, path.display()))?;
+    let mut buf = vec![0u8; len];
+    f.read_exact(&mut buf)
+        .with_context(|| format!("reading {len} bytes at {offset} of {}", path.display()))?;
+    Ok(buf)
+}
+
+/// Prune and compact a cache directory with O(chunk) resident memory.
 ///
 /// Takes every segment's writer lock first (erroring if any segment has
-/// a live writer), merges all segments (last write per key wins),
-/// applies the [`GcOptions`] filters, and — unless `dry_run` — rewrites
-/// the survivors as a single key-sorted `runs.jsonl` (via a temp file +
-/// rename), deletes the shard segments, and bumps the directory's
-/// compaction generation so incremental readers rescan.  An emptied
-/// cache ends up with no segment files at all.
+/// a live writer), streams all segments through the spill/merge pipeline
+/// (last write per key wins), applies the [`GcOptions`] filters, and —
+/// unless `dry_run` — rewrites the survivors as a single key-sorted
+/// `runs.jsonl` (via a temp file + rename) with a fresh key-presence
+/// sidecar, deletes the shard segments and their stale sidecars, and
+/// bumps the directory's compaction generation so incremental readers
+/// rescan.  An emptied cache ends up with no segment files at all.
+///
+/// All reads happen before any mutation: an unreadable segment aborts
+/// the gc with every file intact.
 pub fn gc(dir: &Path, opts: &GcOptions) -> Result<GcReport> {
     let segments = list_segments(dir)?;
     let mut report = GcReport { segments_before: segments.len(), ..GcReport::default() };
@@ -90,106 +143,241 @@ pub fn gc(dir: &Path, opts: &GcOptions) -> Result<GcReport> {
                 .with_context(|| format!("gc: locking segment {}", seg.display()))?,
         );
     }
+    let chunk = opts.chunk_entries.unwrap_or(DEFAULT_SPILL_CHUNK);
 
-    // merge: insertion order = sorted segment order, so later segments
-    // win for duplicated keys (mirrors the resume reader)
-    let mut merged: BTreeMap<String, Entry> = BTreeMap::new();
-    for seg in &segments {
+    // ---- phase 1: strict scan, spill (key, seq) sorted runs
+    let mut manifests: Vec<String> = Vec::new();
+    let mut manifest_ids: std::collections::HashMap<String, u32> = std::collections::HashMap::new();
+    let mut spill: SpillWriter<KeyedLine> = SpillWriter::new(dir, "keys", chunk)?;
+    let mut seq = 0u64;
+    for (seg_idx, seg) in segments.iter().enumerate() {
         report.bytes_before += std::fs::metadata(seg).map(|m| m.len()).unwrap_or(0);
-        let res = for_each_line(seg, |line| {
-            if line.trim().is_empty() {
-                return;
+        scan_lines_strict(seg, |offset, raw| {
+            let Ok(text) = std::str::from_utf8(raw) else {
+                report.corrupt_dropped += 1;
+                return Ok(());
+            };
+            if text.trim().is_empty() {
+                return Ok(());
             }
-            match parse_full_entry(line) {
-                Ok(e) => {
+            match scan_line(text.trim_end_matches('\r')) {
+                Ok(meta) => {
                     report.scanned += 1;
-                    if merged.insert(e.key.clone(), e).is_some() {
-                        report.deduped += 1;
-                    }
+                    let manifest = match manifest_ids.get(&meta.manifest) {
+                        Some(&id) => id,
+                        None => {
+                            let id = manifests.len() as u32;
+                            manifests.push(meta.manifest.clone());
+                            manifest_ids.insert(meta.manifest, id);
+                            id
+                        }
+                    };
+                    spill.push(KeyedLine {
+                        key: meta.key,
+                        seq,
+                        seg: seg_idx as u32,
+                        offset,
+                        len: raw.len() as u32,
+                        ts: meta.ts,
+                        manifest,
+                    })?;
+                    seq += 1;
                 }
                 Err(_) => report.corrupt_dropped += 1,
             }
-        });
-        if let Err(e) = res {
-            eprintln!("run-cache: gc could not read {}: {e:#}", seg.display());
-        }
-    }
-
-    // filter
-    let cutoff = opts.older_than.map(|d| now_ts().saturating_sub(d.as_secs()));
-    let mut kept: Vec<&Entry> = merged
-        .values()
-        .filter(|e| {
-            if let Some(m) = &opts.manifest {
-                if &e.manifest == m {
-                    return false;
-                }
-            }
-            if let Some(cut) = cutoff {
-                if e.ts <= cut {
-                    return false;
-                }
-            }
-            true
+            Ok(())
         })
-        .collect();
-    report.pruned = merged.len() - kept.len();
+        .with_context(|| {
+            format!("gc: reading segment {} (aborted; no file was modified)", seg.display())
+        })?;
+    }
+    let runs = spill.finish()?;
 
-    // size budget: evict oldest-ts entries (key tiebreak, so repeated
-    // gc over the same data is deterministic) until the projected
-    // compacted file fits
-    let mut projected: u64 = kept
-        .iter()
-        .map(|e| entry_line(&e.key, &e.manifest, e.ts, &e.record).len() as u64 + 1)
-        .sum();
-    if let Some(budget) = opts.max_bytes {
-        if projected > budget {
-            let mut by_age: Vec<&Entry> = kept.clone();
-            by_age.sort_by(|a, b| a.ts.cmp(&b.ts).then_with(|| a.key.cmp(&b.key)));
-            let mut evict: std::collections::HashSet<&str> = std::collections::HashSet::new();
-            for e in by_age {
-                if projected <= budget {
-                    break;
+    // ---- phase 2: merge winners, filter, plan the size budget
+    let cutoff = opts.older_than.map(|d| now_ts().saturating_sub(d.as_secs()));
+    // a filter naming a manifest no line uses prunes nothing
+    let manifest_filter: Option<u32> =
+        opts.manifest.as_ref().and_then(|m| manifest_ids.get(m).copied());
+    let survives = |item: &KeyedLine| {
+        if manifest_filter.is_some_and(|mid| item.manifest == mid) {
+            return false;
+        }
+        !cutoff.is_some_and(|cut| item.ts <= cut)
+    };
+
+    let mut age: Option<SpillWriter<AgeKey>> = match opts.max_bytes {
+        Some(_) => Some(SpillWriter::new(dir, "age", chunk)?),
+        None => None,
+    };
+    let mut survivors = 0u64;
+    let mut projected = 0u64;
+    {
+        let mut merge = runs.merge()?;
+        let mut cur = merge.next()?;
+        while let Some(first) = cur.take() {
+            let mut winner = first;
+            loop {
+                match merge.next()? {
+                    Some(next) if next.key == winner.key => {
+                        report.deduped += 1;
+                        winner = next;
+                    }
+                    other => {
+                        cur = other;
+                        break;
+                    }
                 }
-                projected -= entry_line(&e.key, &e.manifest, e.ts, &e.record).len() as u64 + 1;
-                evict.insert(e.key.as_str());
             }
-            report.evicted = evict.len();
-            kept.retain(|e| !evict.contains(e.key.as_str()));
+            if !survives(&winner) {
+                report.pruned += 1;
+                continue;
+            }
+            survivors += 1;
+            projected += winner.len as u64 + 1;
+            if let Some(w) = &mut age {
+                w.push(AgeKey { ts: winner.ts, key: winner.key, len: winner.len })?;
+            }
         }
     }
-    report.kept = kept.len();
+
+    let mut evicted = 0u64;
+    let mut evict_cutoff: Option<(u64, String)> = None;
+    let age_runs = match age {
+        Some(w) => Some(w.finish()?),
+        None => None,
+    };
+    if let (Some(budget), Some(age_runs)) = (opts.max_bytes, &age_runs) {
+        if projected > budget {
+            let mut m = age_runs.merge()?;
+            while projected > budget {
+                let Some(a) = m.next()? else { break };
+                projected -= a.len as u64 + 1;
+                evicted += 1;
+                evict_cutoff = Some((a.ts, a.key));
+            }
+        }
+    }
+    report.evicted = evicted as usize;
+    report.kept = (survivors - evicted) as usize;
 
     if opts.dry_run {
         report.bytes_after = projected;
         return Ok(report);
     }
 
-    // rewrite: survivors into runs.jsonl (atomically), then drop the
-    // shard segments
-    if kept.is_empty() {
-        for seg in &segments {
-            std::fs::remove_file(seg)
-                .with_context(|| format!("gc: removing segment {}", seg.display()))?;
-        }
-    } else {
+    // ---- phase 3: replay the merge, serialize each survivor once
+    let mut written = 0usize;
+    if report.kept > 0 {
         let tmp = dir.join("runs.jsonl.tmp");
-        {
-            let mut f = File::create(&tmp)
-                .with_context(|| format!("gc: creating {}", tmp.display()))?;
-            for e in &kept {
-                writeln!(f, "{}", entry_line(&e.key, &e.manifest, e.ts, &e.record))
-                    .context("gc: writing compacted entry")?;
+        let next_generation = read_generation(dir).wrapping_add(1);
+        let mut out = BufWriter::new(
+            File::create(&tmp).with_context(|| format!("gc: creating {}", tmp.display()))?,
+        );
+        let mut sidecar = match SidecarWriter::create(&compacted, &manifests, report.kept) {
+            Ok(s) => Some(s),
+            Err(e) => {
+                eprintln!("run-cache: gc could not start the sidecar: {e:#}");
+                None
             }
-            f.flush().context("gc: flushing compacted cache")?;
+        };
+        let mut out_off = 0u64;
+        let mut prefix: Vec<u8> = Vec::with_capacity(PREFIX_HASH_SPAN as usize);
+        let mut merge = runs.merge()?;
+        let mut cur = merge.next()?;
+        while let Some(first) = cur.take() {
+            let mut winner = first;
+            loop {
+                match merge.next()? {
+                    Some(next) if next.key == winner.key => winner = next,
+                    other => {
+                        cur = other;
+                        break;
+                    }
+                }
+            }
+            if !survives(&winner) {
+                continue;
+            }
+            if let Some((cts, ckey)) = &evict_cutoff {
+                if (winner.ts, winner.key.as_str()) <= (*cts, ckey.as_str()) {
+                    continue;
+                }
+            }
+            let raw =
+                read_span(&segments[winner.seg as usize], winner.offset, winner.len as usize)
+                    .context("gc: re-reading a planned winner")?;
+            // the scan validated this span under the same locks, so
+            // utf-8 trouble here means the disk changed under us
+            let text = std::str::from_utf8(&raw).context("gc: winner line is no longer utf-8")?;
+            match parse_full_entry(text.trim_end_matches('\r')) {
+                Ok(e) => {
+                    let line = entry_line(&e.key, &e.manifest, e.ts, &e.record);
+                    out.write_all(line.as_bytes()).context("gc: writing compacted entry")?;
+                    out.write_all(b"\n").context("gc: writing compacted entry")?;
+                    if prefix.len() < PREFIX_HASH_SPAN as usize {
+                        let room = PREFIX_HASH_SPAN as usize - prefix.len();
+                        let n = room.min(line.len());
+                        prefix.extend_from_slice(&line.as_bytes()[..n]);
+                        if prefix.len() < PREFIX_HASH_SPAN as usize {
+                            prefix.push(b'\n');
+                        }
+                    }
+                    if let Some(mut sw) = sidecar.take() {
+                        match sw.push(&e.key, out_off, line.len() as u32, e.ts, winner.manifest) {
+                            Ok(()) => sidecar = Some(sw),
+                            Err(err) => {
+                                // dropping the unfinished writer removes
+                                // its temp file; the cache stays correct,
+                                // just unfiltered
+                                eprintln!("run-cache: gc abandoning the sidecar: {err:#}");
+                            }
+                        }
+                    }
+                    out_off += line.len() as u64 + 1;
+                    written += 1;
+                }
+                Err(err) => {
+                    report.corrupt_dropped += 1;
+                    eprintln!(
+                        "run-cache: gc dropping key {} (its record does not parse: {err:#})",
+                        winner.key
+                    );
+                }
+            }
         }
-        std::fs::rename(&tmp, &compacted)
-            .with_context(|| format!("gc: installing {}", compacted.display()))?;
-        for seg in segments.iter().filter(|s| **s != compacted) {
+        out.flush().context("gc: flushing compacted cache")?;
+        let _ = out.get_ref().sync_all();
+        drop(out);
+        report.kept = written;
+        if written == 0 {
+            let _ = std::fs::remove_file(&tmp);
+        } else {
+            std::fs::rename(&tmp, &compacted)
+                .with_context(|| format!("gc: installing {}", compacted.display()))?;
+            for seg in segments.iter().filter(|s| **s != compacted) {
+                remove_sidecar(seg);
+                std::fs::remove_file(seg)
+                    .with_context(|| format!("gc: removing segment {}", seg.display()))?;
+            }
+            match sidecar {
+                Some(sw) => {
+                    if let Err(e) = sw.finish(out_off, next_generation, fnv1a64(&prefix)) {
+                        eprintln!("run-cache: gc could not install the sidecar: {e:#}");
+                        remove_sidecar(&compacted);
+                    }
+                }
+                // never leave a stale sidecar describing the old bytes
+                None => remove_sidecar(&compacted),
+            }
+            report.bytes_after = std::fs::metadata(&compacted).map(|m| m.len()).unwrap_or(0);
+        }
+    }
+    if report.kept == 0 && written == 0 {
+        for seg in &segments {
+            remove_sidecar(seg);
             std::fs::remove_file(seg)
                 .with_context(|| format!("gc: removing segment {}", seg.display()))?;
         }
-        report.bytes_after = std::fs::metadata(&compacted).map(|m| m.len()).unwrap_or(0);
     }
     // the old byte offsets died with the old files: tell incremental
     // readers before the locks drop (best-effort — a reader that misses
@@ -248,4 +436,294 @@ pub fn parse_bytes(s: &str) -> Result<u64> {
         bail!("byte count {s:?} out of range");
     }
     Ok(v as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::filter::Sidecar;
+    use super::super::segment::{for_each_line, Entry};
+    use super::*;
+    use crate::train::RunRecord;
+    use crate::util::prop::{check, Config};
+    use std::collections::BTreeMap;
+    use std::path::PathBuf;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("umup-gc-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn rec(label: &str, loss: f64) -> RunRecord {
+        RunRecord {
+            label: label.to_string(),
+            train_curve: vec![(1, loss + 0.5), (2, loss)],
+            valid_curve: vec![(2, loss)],
+            final_valid_loss: loss,
+            rms_curves: BTreeMap::new(),
+            final_rms: vec![("w.out".to_string(), 1.0)],
+            diverged: false,
+            wall_seconds: 0.25,
+        }
+    }
+
+    /// Everything the old (pre-streaming) gc would have produced: the
+    /// exact `runs.jsonl` bytes plus every report counter.  Replicated
+    /// here so the streaming pipeline is pinned byte-for-byte against
+    /// the eager algorithm it replaced.
+    struct EagerOutcome {
+        bytes: String,
+        scanned: usize,
+        kept: usize,
+        pruned: usize,
+        evicted: usize,
+        deduped: usize,
+        corrupt_dropped: usize,
+        bytes_before: u64,
+        projected: u64,
+    }
+
+    fn eager_reference(dir: &Path, opts: &GcOptions) -> EagerOutcome {
+        let segments = list_segments(dir).unwrap();
+        let (mut scanned, mut deduped, mut corrupt) = (0usize, 0usize, 0usize);
+        let mut bytes_before = 0u64;
+        let mut merged: BTreeMap<String, Entry> = BTreeMap::new();
+        for seg in &segments {
+            bytes_before += std::fs::metadata(seg).map(|m| m.len()).unwrap_or(0);
+            for_each_line(seg, |line| {
+                if line.trim().is_empty() {
+                    return;
+                }
+                match parse_full_entry(line) {
+                    Ok(e) => {
+                        scanned += 1;
+                        if merged.insert(e.key.clone(), e).is_some() {
+                            deduped += 1;
+                        }
+                    }
+                    Err(_) => corrupt += 1,
+                }
+            })
+            .unwrap();
+        }
+        let cutoff = opts.older_than.map(|d| now_ts().saturating_sub(d.as_secs()));
+        let mut kept: Vec<&Entry> = merged
+            .values()
+            .filter(|e| {
+                if let Some(m) = &opts.manifest {
+                    if &e.manifest == m {
+                        return false;
+                    }
+                }
+                if let Some(cut) = cutoff {
+                    if e.ts <= cut {
+                        return false;
+                    }
+                }
+                true
+            })
+            .collect();
+        let pruned = merged.len() - kept.len();
+        let mut projected: u64 = kept
+            .iter()
+            .map(|e| entry_line(&e.key, &e.manifest, e.ts, &e.record).len() as u64 + 1)
+            .sum();
+        let mut evicted = 0usize;
+        if let Some(budget) = opts.max_bytes {
+            if projected > budget {
+                let mut by_age: Vec<&Entry> = kept.clone();
+                by_age.sort_by(|a, b| a.ts.cmp(&b.ts).then_with(|| a.key.cmp(&b.key)));
+                let mut evict: std::collections::HashSet<&str> = std::collections::HashSet::new();
+                for e in by_age {
+                    if projected <= budget {
+                        break;
+                    }
+                    projected -= entry_line(&e.key, &e.manifest, e.ts, &e.record).len() as u64 + 1;
+                    evict.insert(e.key.as_str());
+                }
+                evicted = evict.len();
+                kept.retain(|e| !evict.contains(e.key.as_str()));
+            }
+        }
+        let mut bytes = String::new();
+        for e in &kept {
+            bytes.push_str(&entry_line(&e.key, &e.manifest, e.ts, &e.record));
+            bytes.push('\n');
+        }
+        EagerOutcome {
+            bytes,
+            scanned,
+            kept: kept.len(),
+            pruned,
+            evicted,
+            deduped,
+            corrupt_dropped: corrupt,
+            bytes_before,
+            projected,
+        }
+    }
+
+    #[test]
+    fn streaming_gc_matches_the_eager_reference() {
+        check("gc byte equivalence", Config { cases: 20, seed: 0x6c_5eed }, |g| {
+            let dir = tmp_dir(&format!("equiv-{}", g.case));
+            let seg_names = ["runs.jsonl", "runs.0.jsonl", "runs.1.jsonl", "runs.2.jsonl"];
+            let n_segs = g.usize_in(1, 4);
+            for name in seg_names.iter().take(n_segs) {
+                let mut content = String::new();
+                for _ in 0..g.usize_in(0, 12) {
+                    match g.usize_in(0, 9) {
+                        0 => content.push('\n'),
+                        1 => content.push_str("{ not json\n"),
+                        _ => {
+                            let key = format!("{:016x}", 0xabc0 + g.usize_in(0, 7));
+                            let m = if g.usize_in(0, 1) == 0 { "m0" } else { "m1" };
+                            let ts = 100 + g.usize_in(0, 20) as u64;
+                            let r = rec(&format!("case{}", g.case), 2.0 + ts as f64 / 64.0);
+                            content.push_str(&entry_line(&key, m, ts, &r));
+                            content.push('\n');
+                        }
+                    }
+                }
+                if g.usize_in(0, 4) == 0 {
+                    // torn tail: a killed writer's fragment, no newline
+                    content.push_str("{\"key\":\"torn");
+                }
+                std::fs::write(dir.join(name), &content).unwrap();
+            }
+            let total: u64 = list_segments(&dir)
+                .unwrap()
+                .iter()
+                .map(|s| std::fs::metadata(s).map(|m| m.len()).unwrap_or(0))
+                .sum();
+            let mut opts =
+                GcOptions { chunk_entries: Some(g.usize_in(1, 5)), ..GcOptions::default() };
+            if g.usize_in(0, 3) == 0 {
+                opts.manifest = Some("m0".to_string());
+            }
+            if g.usize_in(0, 4) == 0 {
+                // ZERO is the only deterministic age filter (prune-all:
+                // every test ts is far below "now" regardless of clock)
+                opts.older_than = Some(Duration::ZERO);
+            }
+            if g.usize_in(0, 2) == 0 {
+                opts.max_bytes = Some(g.usize_in(0, total as usize) as u64);
+            }
+            let expected = eager_reference(&dir, &opts);
+
+            let before: Vec<(PathBuf, u64)> = list_segments(&dir)
+                .unwrap()
+                .into_iter()
+                .map(|s| {
+                    let len = std::fs::metadata(&s).map(|m| m.len()).unwrap_or(0);
+                    (s, len)
+                })
+                .collect();
+            let dry = gc(&dir, &GcOptions { dry_run: true, ..opts.clone() }).unwrap();
+            assert_eq!(
+                (dry.scanned, dry.kept, dry.pruned, dry.evicted, dry.deduped, dry.corrupt_dropped),
+                (
+                    expected.scanned,
+                    expected.kept,
+                    expected.pruned,
+                    expected.evicted,
+                    expected.deduped,
+                    expected.corrupt_dropped
+                ),
+                "dry-run report diverged (case {})",
+                g.case
+            );
+            assert_eq!(dry.bytes_after, expected.projected);
+            let after: Vec<(PathBuf, u64)> = list_segments(&dir)
+                .unwrap()
+                .into_iter()
+                .map(|s| {
+                    let len = std::fs::metadata(&s).map(|m| m.len()).unwrap_or(0);
+                    (s, len)
+                })
+                .collect();
+            assert_eq!(before, after, "dry run must not touch any file");
+
+            let real = gc(&dir, &opts).unwrap();
+            assert_eq!(
+                (
+                    real.scanned,
+                    real.kept,
+                    real.pruned,
+                    real.evicted,
+                    real.deduped,
+                    real.corrupt_dropped
+                ),
+                (
+                    expected.scanned,
+                    expected.kept,
+                    expected.pruned,
+                    expected.evicted,
+                    expected.deduped,
+                    expected.corrupt_dropped
+                ),
+                "real-run report diverged (case {})",
+                g.case
+            );
+            assert_eq!(real.bytes_before, expected.bytes_before);
+            if expected.kept == 0 {
+                assert!(list_segments(&dir).unwrap().is_empty());
+            } else {
+                let compacted = dir.join("runs.jsonl");
+                let got = std::fs::read_to_string(&compacted).unwrap();
+                assert_eq!(got, expected.bytes, "compacted bytes diverged (case {})", g.case);
+                assert_eq!(list_segments(&dir).unwrap(), vec![compacted.clone()]);
+                assert_eq!(real.bytes_after, expected.bytes.len() as u64);
+                let sc = Sidecar::open(&compacted).unwrap().expect("gc must leave a sidecar");
+                assert!(sc.validate(&compacted));
+                assert_eq!(sc.n_entries() as usize, expected.kept);
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+        });
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn unreadable_segment_aborts_gc_without_touching_files() {
+        let dir = tmp_dir("abort");
+        let line = entry_line("00000000000000aa", "m", 100, &rec("keep", 2.0));
+        std::fs::write(dir.join("runs.jsonl"), format!("{line}\n")).unwrap();
+        // stat says regular file; reading it returns EIO (offset 0 of
+        // our own address space is unmapped) — a portable-enough stand-in
+        // for a segment on failing media
+        std::os::unix::fs::symlink("/proc/self/mem", dir.join("runs.0.jsonl")).unwrap();
+        assert!(gc(&dir, &GcOptions::default()).is_err(), "gc must abort, not drop entries");
+        assert_eq!(
+            std::fs::read_to_string(dir.join("runs.jsonl")).unwrap(),
+            format!("{line}\n"),
+            "the readable segment must be untouched"
+        );
+        assert!(dir.join("runs.0.jsonl").exists(), "the unreadable segment must survive");
+        assert!(!dir.join("runs.jsonl.tmp").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wrong_shape_winner_is_dropped_at_write_time() {
+        let dir = tmp_dir("shape");
+        let key = "00000000000000ab";
+        let good = entry_line(key, "m", 100, &rec("good", 2.0));
+        std::fs::write(dir.join("runs.0.jsonl"), format!("{good}\n")).unwrap();
+        // runs.jsonl sorts after runs.0.jsonl, so this structurally
+        // valid (but not-a-RunRecord) line wins the merge
+        std::fs::write(
+            dir.join("runs.jsonl"),
+            format!("{{\"key\":\"{key}\",\"manifest\":\"m\",\"record\":{{\"not\":\"a record\"}}}}\n"),
+        )
+        .unwrap();
+        let dry = gc(&dir, &GcOptions { dry_run: true, ..GcOptions::default() }).unwrap();
+        // the plan (key scanner) counts it as a keeper...
+        assert_eq!((dry.scanned, dry.deduped, dry.kept, dry.corrupt_dropped), (2, 1, 1, 0));
+        let real = gc(&dir, &GcOptions::default()).unwrap();
+        // ...the write pass pushes it through the full parser and drops it
+        assert_eq!((real.scanned, real.deduped, real.kept, real.corrupt_dropped), (2, 1, 0, 1));
+        assert!(list_segments(&dir).unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }

@@ -43,7 +43,26 @@
 //! an open cache — the rescan path exists for lock-free readers
 //! ([`CacheWatcher`]) and for caches observing a directory another
 //! process compacted between their polls.
+//!
+//! # Sidecar adoption and segment precedence
+//!
+//! Compaction leaves a key-presence sidecar (`<segment>.idx`, see
+//! [`super::filter`]) next to each segment it writes.  When `refresh`
+//! meets a segment it has never read a byte of, it tries to *adopt* a
+//! valid sidecar instead of scanning: the segment's covered prefix is
+//! marked consumed, its keys are counted without entering the map, and
+//! point lookups are answered from the sidecar's bloom filter + fence
+//! pointers.  A miss-heavy open therefore skips whole segments.
+//!
+//! Mixing in-map entries with sidecar-resident ones needs an explicit
+//! precedence: each tracked segment carries its *rank* (its position in
+//! the sorted segment listing — the same order gc merges in, later
+//! names win).  A lookup prefers the highest-rank source; at equal rank
+//! the map wins, because in-map entries for a sidecar'd segment can
+//! only come from bytes appended *after* the covered prefix, which are
+//! newer by append-only construction.
 
+use std::cell::Cell;
 use std::collections::HashMap;
 use std::fs::File;
 use std::io::{BufRead, Read, Seek, SeekFrom};
@@ -53,6 +72,7 @@ use anyhow::{bail, Result};
 
 use crate::train::RunRecord;
 
+use super::filter::Sidecar;
 use super::segment::{for_each_line, list_segments, parse_full_entry, read_generation};
 
 // ------------------------------------------------------------- scanner
@@ -303,10 +323,68 @@ pub(crate) struct Loc {
 /// Per-segment tail state.
 struct SegTail {
     path: PathBuf,
-    /// Bytes consumed so far; always a line boundary.
+    /// Bytes consumed so far; always a line boundary (or a sidecar's
+    /// covered prefix, which gc ends on a line boundary).
     read_to: u64,
     /// Complete lines consumed (for warning line numbers).
     lines: usize,
+    /// Position in the sorted segment listing — the merge-precedence
+    /// order (higher rank wins a key collision).  Reassigned on every
+    /// refresh.
+    rank: u32,
+    /// An adopted key-presence sidecar covering `[0, read_to)` at
+    /// adoption time; lookups for keys not in the map consult it.
+    sidecar: Option<Sidecar>,
+}
+
+/// How much work the key-presence sidecars saved — a snapshot of the
+/// index's internal counters (see [`CacheWatcher::filter_stats`]).
+#[derive(Debug, Clone, Default)]
+pub struct FilterStats {
+    /// Whole-segment scans avoided by adopting a sidecar on refresh.
+    pub segments_skipped: u64,
+    /// Point probes a bloom filter answered "definitely absent".
+    pub bloom_rejects: u64,
+    /// Point probes that read a sidecar's fence-indexed entry block.
+    pub fence_probes: u64,
+    /// Lookups resolved from sidecar metadata (no segment scan).
+    pub sidecar_hits: u64,
+}
+
+/// Interior-mutable counters: lookups take `&self`.
+#[derive(Default)]
+struct FilterCounters {
+    segments_skipped: Cell<u64>,
+    bloom_rejects: Cell<u64>,
+    fence_probes: Cell<u64>,
+    sidecar_hits: Cell<u64>,
+}
+
+impl FilterCounters {
+    fn bump(cell: &Cell<u64>) {
+        cell.set(cell.get() + 1);
+    }
+
+    fn snapshot(&self) -> FilterStats {
+        FilterStats {
+            segments_skipped: self.segments_skipped.get(),
+            bloom_rejects: self.bloom_rejects.get(),
+            fence_probes: self.fence_probes.get(),
+            sidecar_hits: self.sidecar_hits.get(),
+        }
+    }
+}
+
+/// A sidecar lookup result, with the rank that decides precedence.
+struct SidecarHit {
+    rank: u32,
+    seg: usize,
+    offset: u64,
+    len: u32,
+    ts: u64,
+    /// Id into the *sidecar's own* manifest table, not the index's
+    /// intern table.
+    manifest: u32,
 }
 
 /// The lazy key index over one cache directory.  See the module docs
@@ -319,6 +397,11 @@ pub(crate) struct CacheIndex {
     manifests: Vec<String>,
     manifest_ids: HashMap<String, u32>,
     generation: u64,
+    /// Keys visible only through adopted sidecars — exactly
+    /// `|∪ sidecar keys \ map keys|`; [`CacheIndex::len`] adds this to
+    /// the map size so adopted segments count without being scanned.
+    sidecar_only: usize,
+    filtering: FilterCounters,
 }
 
 impl CacheIndex {
@@ -334,19 +417,69 @@ impl CacheIndex {
             manifests: Vec::new(),
             manifest_ids: HashMap::new(),
             generation: read_generation(dir),
+            sidecar_only: 0,
+            filtering: FilterCounters::default(),
         }
     }
 
     pub(crate) fn len(&self) -> usize {
-        self.keys.len()
+        self.keys.len() + self.sidecar_only
     }
 
     pub(crate) fn contains(&self, key: &str) -> bool {
-        self.keys.contains_key(key)
+        if self.keys.contains_key(key) {
+            return true;
+        }
+        if self.sidecar_probe(key, None, true).is_some() {
+            FilterCounters::bump(&self.filtering.sidecar_hits);
+            return true;
+        }
+        false
     }
 
     pub(crate) fn n_segments(&self) -> usize {
         self.segs.len()
+    }
+
+    pub(crate) fn filter_stats(&self) -> FilterStats {
+        self.filtering.snapshot()
+    }
+
+    /// Probe every adopted sidecar — optionally only those strictly
+    /// outranking `min_rank_exclusive` (the rank of an in-map entry
+    /// that would otherwise win) — and return the highest-rank hit.
+    /// `count` routes the probe through the public stats counters;
+    /// internal bookkeeping probes pass `false` so the counters only
+    /// reflect lookup traffic.
+    fn sidecar_probe(
+        &self,
+        key: &str,
+        min_rank_exclusive: Option<u32>,
+        count: bool,
+    ) -> Option<SidecarHit> {
+        let mut best: Option<SidecarHit> = None;
+        for (i, seg) in self.segs.iter().enumerate() {
+            let Some(sc) = &seg.sidecar else { continue };
+            if min_rank_exclusive.is_some_and(|r| seg.rank <= r) {
+                continue;
+            }
+            if best.as_ref().is_some_and(|b| b.rank > seg.rank) {
+                continue;
+            }
+            if !sc.might_contain(key) {
+                if count {
+                    FilterCounters::bump(&self.filtering.bloom_rejects);
+                }
+                continue;
+            }
+            if count {
+                FilterCounters::bump(&self.filtering.fence_probes);
+            }
+            if let Some((offset, len, ts, manifest)) = sc.lookup(key) {
+                best = Some(SidecarHit { rank: seg.rank, seg: i, offset, len, ts, manifest });
+            }
+        }
+        best
     }
 
     fn intern(&mut self, manifest: &str) -> u32 {
@@ -359,17 +492,27 @@ impl CacheIndex {
         id
     }
 
-    /// The manifest a key was recorded under — an index read, no
-    /// record parse.
+    /// The manifest a key was recorded under — an index (or sidecar)
+    /// read, no record parse.
     pub(crate) fn manifest_of(&self, key: &str) -> Option<&str> {
-        self.keys
-            .get(key)
-            .map(|l| self.manifests[l.manifest as usize].as_str())
+        let map_loc = self.keys.get(key);
+        let min_rank = map_loc.map(|l| self.segs[l.seg as usize].rank);
+        if let Some(hit) = self.sidecar_probe(key, min_rank, true) {
+            FilterCounters::bump(&self.filtering.sidecar_hits);
+            return self.segs[hit.seg].sidecar.as_ref().and_then(|sc| sc.manifest(hit.manifest));
+        }
+        map_loc.map(|l| self.manifests[l.manifest as usize].as_str())
     }
 
     /// The `ts` a key was recorded with (0 for pre-lifecycle lines).
     pub(crate) fn recorded_ts(&self, key: &str) -> Option<u64> {
-        self.keys.get(key).map(|l| l.ts)
+        let map_loc = self.keys.get(key);
+        let min_rank = map_loc.map(|l| self.segs[l.seg as usize].rank);
+        if let Some(hit) = self.sidecar_probe(key, min_rank, true) {
+            FilterCounters::bump(&self.filtering.sidecar_hits);
+            return Some(hit.ts);
+        }
+        map_loc.map(|l| l.ts)
     }
 
     /// Segment id for `path`, registering it (tail at 0) if new.
@@ -378,9 +521,91 @@ impl CacheIndex {
             return id;
         }
         let id = self.segs.len() as u32;
-        self.segs.push(SegTail { path: path.to_path_buf(), read_to: 0, lines: 0 });
+        self.segs.push(SegTail {
+            path: path.to_path_buf(),
+            read_to: 0,
+            lines: 0,
+            rank: id,
+            sidecar: None,
+        });
         self.by_path.insert(path.to_path_buf(), id);
         id
+    }
+
+    /// Insert a scanned key, honoring segment precedence: an existing
+    /// entry from a *higher*-rank segment wins over the incoming one
+    /// (equal rank means same segment, where later lines — larger
+    /// offsets — legitimately overwrite).  Keeps `sidecar_only` exact:
+    /// a key entering the map that some sidecar already counted moves
+    /// from the sidecar-only set to the map.
+    fn insert_key(&mut self, key: String, loc: Loc) {
+        if let Some(old) = self.keys.get(&key) {
+            if self.segs[old.seg as usize].rank > self.segs[loc.seg as usize].rank {
+                return;
+            }
+            self.keys.insert(key, loc);
+            return;
+        }
+        if self.sidecar_only > 0 && self.sidecar_probe(&key, None, false).is_some() {
+            self.sidecar_only -= 1;
+        }
+        self.keys.insert(key, loc);
+    }
+
+    /// Drop a key from the map (a failed hit-time load), keeping
+    /// `sidecar_only` exact — the key may remain visible via a sidecar.
+    fn drop_key(&mut self, key: &str) {
+        if self.keys.remove(key).is_some() && self.sidecar_probe(key, None, false).is_some() {
+            self.sidecar_only += 1;
+        }
+    }
+
+    /// Adopt a valid sidecar for a segment no byte of which has been
+    /// read: mark its covered prefix consumed and count its keys
+    /// without scanning.  Counting is O(1) when the index is otherwise
+    /// empty (the common cold-open-after-compaction case); otherwise
+    /// the sidecar's entries stream once to count keys nothing else
+    /// already covers.
+    fn maybe_adopt_sidecar(&mut self, id: usize) {
+        if self.segs[id].read_to != 0 || self.segs[id].lines != 0 || self.segs[id].sidecar.is_some()
+        {
+            return;
+        }
+        let path = self.segs[id].path.clone();
+        let sc = match Sidecar::open(&path) {
+            Ok(Some(sc)) => sc,
+            Ok(None) => return,
+            Err(e) => {
+                eprintln!(
+                    "run-cache: ignoring malformed sidecar for {}: {e:#}",
+                    path.display()
+                );
+                return;
+            }
+        };
+        if !sc.validate(&path) {
+            return;
+        }
+        let any_adopted = self.segs.iter().any(|s| s.sidecar.is_some());
+        let fresh = if self.keys.is_empty() && !any_adopted {
+            sc.n_entries() as usize
+        } else {
+            let mut fresh = 0usize;
+            let counted = sc.for_each_entry(|key, _, _, _, _| {
+                if !self.keys.contains_key(key) && self.sidecar_probe(key, None, false).is_none() {
+                    fresh += 1;
+                }
+            });
+            if counted.is_err() {
+                // unreadable entries: fall back to scanning the segment
+                return;
+            }
+            fresh
+        };
+        FilterCounters::bump(&self.filtering.segments_skipped);
+        self.sidecar_only += fresh;
+        self.segs[id].read_to = sc.covered_bytes();
+        self.segs[id].sidecar = Some(sc);
     }
 
     /// Register `path` without scanning it — a writer's own segment,
@@ -393,9 +618,11 @@ impl CacheIndex {
     /// Merge in whatever changed on disk since the last call, tailing
     /// only appended bytes (one full rescan instead when the compaction
     /// generation moved, a segment vanished, or a segment shrank).
+    /// Segments never read before may be *adopted* via their sidecar
+    /// instead of scanned — see [`CacheIndex::maybe_adopt_sidecar`].
     /// Returns the number of newly visible keys.
     pub(crate) fn refresh(&mut self) -> usize {
-        let before = self.keys.len();
+        let before = self.len();
         let listed = match list_segments(&self.dir) {
             Ok(l) => l,
             Err(e) => {
@@ -423,14 +650,19 @@ impl CacheIndex {
             self.keys.clear();
             self.segs.clear();
             self.by_path.clear();
+            self.sidecar_only = 0;
         }
-        for path in &listed {
-            let id = self.seg_id(path);
-            self.tail_segment(id as usize);
+        for (rank, path) in listed.iter().enumerate() {
+            let id = self.seg_id(path) as usize;
+            // ranks track the *current* sorted listing: a new segment
+            // appearing early in sort order shifts everyone after it
+            self.segs[id].rank = rank as u32;
+            self.maybe_adopt_sidecar(id);
+            self.tail_segment(id);
         }
         // saturating: a rescan after a *pruning* gc legitimately shrinks
         // the key set, and "newly visible" is then zero, not underflow
-        self.keys.len().saturating_sub(before)
+        self.len().saturating_sub(before)
     }
 
     /// Read and index `[read_to, len)` of one segment, consuming only
@@ -492,7 +724,7 @@ impl CacheIndex {
                         ts: meta.ts,
                         manifest,
                     };
-                    self.keys.insert(meta.key, loc);
+                    self.insert_key(meta.key, loc);
                 }
                 Err(e) => {
                     eprintln!(
@@ -520,7 +752,7 @@ impl CacheIndex {
         let id = self.seg_id(path);
         let offset = self.segs[id as usize].read_to;
         let manifest = self.intern(manifest);
-        self.keys.insert(
+        self.insert_key(
             key.to_string(),
             Loc { seg: id, offset, len: line_len as u32, ts, manifest },
         );
@@ -538,14 +770,40 @@ impl CacheIndex {
     }
 
     /// Parse the record for `key` from disk (the hit path; the caller
-    /// memoizes).  A record that no longer parses — hand-edited file,
+    /// memoizes).  The winner may live behind an adopted sidecar rather
+    /// than the in-memory map — whichever has the higher segment rank
+    /// answers.  A record that no longer parses — hand-edited file,
     /// offset drift — is dropped from the index with a warning and
     /// reported as a miss, mirroring the eager reader's corrupt-line
     /// tolerance.
     pub(crate) fn load(&mut self, key: &str) -> Option<RunRecord> {
-        let loc = *self.keys.get(key)?;
-        let path = &self.segs[loc.seg as usize].path;
-        let parsed = read_span(path, loc.offset, loc.len as usize).and_then(|raw| {
+        let map_loc = self.keys.get(key).copied();
+        let min_rank = map_loc.map(|l| self.segs[l.seg as usize].rank);
+        if let Some(hit) = self.sidecar_probe(key, min_rank, true) {
+            FilterCounters::bump(&self.filtering.sidecar_hits);
+            let path = self.segs[hit.seg].path.clone();
+            let parsed = read_span(&path, hit.offset, hit.len as usize).and_then(|raw| {
+                let text = String::from_utf8_lossy(&raw);
+                parse_full_entry(text.trim_end_matches(['\n', '\r']))
+            });
+            match parsed {
+                Ok(e) if e.key == key => return Some(e.record),
+                Ok(e) => eprintln!(
+                    "run-cache: sidecar entry for {key} resolved to {} in {} (stale \
+                     sidecar?); falling back to the scanned index",
+                    e.key,
+                    path.display()
+                ),
+                Err(err) => eprintln!(
+                    "run-cache: could not load {key} via sidecar from {}: {err:#}; \
+                     falling back to the scanned index",
+                    path.display()
+                ),
+            }
+        }
+        let loc = map_loc?;
+        let path = self.segs[loc.seg as usize].path.clone();
+        let parsed = read_span(&path, loc.offset, loc.len as usize).and_then(|raw| {
             let text = String::from_utf8_lossy(&raw);
             parse_full_entry(text.trim_end_matches(['\n', '\r']))
         });
@@ -558,7 +816,7 @@ impl CacheIndex {
                     e.key,
                     path.display()
                 );
-                self.keys.remove(key);
+                self.drop_key(key);
                 None
             }
             Err(err) => {
@@ -566,7 +824,7 @@ impl CacheIndex {
                     "run-cache: could not load {key} from {}: {err:#}; dropping it",
                     path.display()
                 );
-                self.keys.remove(key);
+                self.drop_key(key);
                 None
             }
         }
@@ -613,6 +871,13 @@ impl CacheWatcher {
     /// Segments currently tracked (after the last poll).
     pub fn segments(&self) -> usize {
         self.idx.n_segments()
+    }
+
+    /// Counters for how much work the per-segment sidecar filters have
+    /// saved this watcher (segments adopted without a scan, bloom
+    /// rejects, fence probes, sidecar-served lookups).
+    pub fn filter_stats(&self) -> FilterStats {
+        self.idx.filter_stats()
     }
 }
 

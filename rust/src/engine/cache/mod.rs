@@ -62,12 +62,50 @@
 //! segments into a single key-sorted `runs.jsonl`, taking every segment
 //! lock first so it never races a live writer, and bumping the
 //! directory's compaction *generation* so incremental readers rescan.
-//! An *unsharded* open with `resume` auto-compacts (best-effort) once a
-//! directory accretes more than
-//! [`AUTO_COMPACT_SEGMENT_THRESHOLD`] segments, so long-lived sharded
-//! caches don't degrade every open into an N-file merge (shard children
-//! never compact — they open one directory concurrently and must not
-//! steal each other's locks).
+//! The whole rewrite is *streaming*: line metadata spills to sorted
+//! temp runs and k-way merges back, so gc of a 10⁶-entry cache holds
+//! O(chunk) entries in memory, never O(cache).  An *unsharded* open
+//! with `resume` auto-compacts (best-effort) once a directory accretes
+//! more than [`AUTO_COMPACT_SEGMENT_THRESHOLD`] segments, so long-lived
+//! sharded caches don't degrade every open into an N-file merge (shard
+//! children never compact — they open one directory concurrently and
+//! must not steal each other's locks).
+//!
+//! # Tiered merges, key-presence filters, and the generation contract
+//!
+//! Between full gc passes, a [`Compactor`] (driven from the engine's
+//! idle path, or `repro cache compact`) opportunistically folds
+//! *similar-sized adjacent* segments into one with raw byte copies —
+//! size-tiered compaction.  It locks only the group it merges, via
+//! non-blocking `try_acquire`, so a live shard writer is never stalled:
+//! its segment's group is simply skipped this round.
+//!
+//! Every compacted segment (gc output or tier-merge output) gets a
+//! `<segment>.idx` *sidecar*: a bloom filter + fence-pointed, key-sorted
+//! entry table over the segment's per-key winners (format in the
+//! `filter` submodule docs).  Readers use sidecars two ways: a fresh
+//! index **adopts** a valid sidecar instead of scanning the segment
+//! (cold opens after compaction cost O(sidecar trailer), not O(bytes)),
+//! and point lookups for absent keys stop at the bloom filter — the
+//! miss-heavy sweep-resume path never touches the segment.
+//! [`FilterStats`] (via [`CacheWatcher::filter_stats`] /
+//! [`RunCache::filter_stats`]) counts the work saved.
+//!
+//! The coherence rules:
+//!
+//! * a sidecar covers a *byte prefix* of its segment and stays valid
+//!   under appends (validity = the covered prefix still exists and its
+//!   first 4 KiB hash unchanged); truncation or in-place rewrite
+//!   invalidates it structurally — the stored generation is diagnostic
+//!   only, since a tier merge bumps the directory generation without
+//!   touching *other* segments' sidecars;
+//! * precedence is by segment sort order (rank), exactly the merge
+//!   order scans use; at equal rank an in-map (scanned/appended) entry
+//!   outranks the sidecar, because appends land beyond the covered
+//!   prefix and are therefore newer;
+//! * any rewrite bumps the directory `.generation`, and incremental
+//!   readers that observe a changed generation fall back to one full
+//!   rescan (re-adopting sidecars where valid).
 //!
 //! # Crash safety
 //!
@@ -77,16 +115,22 @@
 //! crash re-runs at most the torn job.  A torn line that has not yet
 //! been newline-terminated is never consumed by the incremental tailer
 //! — a sibling caught mid-`write` is simply picked up one refresh
-//! later, once its newline lands.
+//! later, once its newline lands.  Compaction (gc and tier merges) is
+//! temp-file + rename, aborts wholesale on any read error before
+//! touching a file, and cleans its spill runs on drop.
 
+mod compact;
+mod filter;
 mod gc;
 mod index;
 mod segment;
+mod spill;
 
+pub use self::compact::{Compactor, CompactorConfig, TierMergeReport};
 pub use self::gc::{
     gc, parse_bytes, parse_duration, GcOptions, GcReport, AUTO_COMPACT_SEGMENT_THRESHOLD,
 };
-pub use self::index::{stats, CacheStats, CacheWatcher, SegmentStats};
+pub use self::index::{stats, CacheStats, CacheWatcher, FilterStats, SegmentStats};
 pub use self::segment::list_segments;
 
 pub(crate) use self::segment::{entry_line, now_ts, parse_full_entry};
@@ -293,6 +337,10 @@ impl RunCache {
         let mut file = if resume {
             OpenOptions::new().create(true).append(true).open(&path)
         } else {
+            // truncating invalidates any sidecar built over the old
+            // content; delete it rather than leave readers a filter
+            // that fails (or worse, passes) its prefix check by chance
+            filter::remove_sidecar(&path);
             File::create(&path)
         }
         .with_context(|| format!("opening run cache {} for append", path.display()))?;
@@ -340,6 +388,18 @@ impl RunCache {
 
     pub fn path(&self) -> Option<&Path> {
         self.path.as_deref()
+    }
+
+    /// The cache directory (`None` for in-memory caches) — what a
+    /// [`Compactor`] or [`gc()`] wants handed to it.
+    pub fn dir(&self) -> Option<&Path> {
+        self.path.as_deref().and_then(Path::parent)
+    }
+
+    /// How much work the key-presence sidecar filters have saved this
+    /// cache (zeroes for in-memory caches and filterless directories).
+    pub fn filter_stats(&self) -> FilterStats {
+        self.index.as_ref().map(|i| i.filter_stats()).unwrap_or_default()
     }
 
     /// Look up a record by content address.  For persistent caches this
@@ -972,6 +1032,104 @@ mod tests {
         gc(&dir, &GcOptions { manifest: Some("m2".into()), ..Default::default() }).unwrap();
         w.poll();
         assert_eq!(w.unique_keys(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The sidecar fast path is an *accelerator*, not the truth: every
+    /// lookup kind must resolve identically with the filter adopted and
+    /// with it deleted — including shadowing in both directions (an
+    /// append to the compacted segment beats its own sidecar; a
+    /// lower-sorting shard's duplicate loses to the sidecar).
+    #[test]
+    fn sidecar_adoption_matches_a_full_scan_with_shadowing_both_ways() {
+        let dir = tmp_dir("sidecar-equiv");
+        {
+            let mut c = RunCache::open(&dir, true).unwrap();
+            for i in 0..20u64 {
+                c.put(&format!("{i:016x}"), "m1", &rich_rec("seed", i % 9)).unwrap();
+            }
+        }
+        gc(&dir, &GcOptions::default()).unwrap();
+
+        // equal-rank shadowing: appends to the compacted segment land
+        // beyond the sidecar's covered prefix and must beat it
+        let key5 = format!("{:016x}", 5u64);
+        let key7 = format!("{:016x}", 7u64);
+        let override5 = entry_line(&key5, "m2", 999, &rich_rec("override", 1));
+        let fresh = entry_line("00000000000000aa", "m2", 1000, &rich_rec("fresh", 2));
+        {
+            let mut f =
+                OpenOptions::new().append(true).open(dir.join("runs.jsonl")).unwrap();
+            writeln!(f, "{override5}").unwrap();
+            writeln!(f, "{fresh}").unwrap();
+        }
+        // cross-rank shadowing: a lower-sorting shard segment's
+        // duplicate of key 7 must lose to the compacted segment
+        let loser7 = entry_line(&key7, "m3", 777, &rich_rec("loser", 3));
+        let shard_new = entry_line("00000000000000bb", "m3", 778, &rich_rec("shard", 4));
+        std::fs::write(dir.join("runs.0.jsonl"), format!("{loser7}\n{shard_new}\n")).unwrap();
+
+        let expected = eager_entries(&dir);
+        assert_eq!(expected.len(), 22);
+        let verify = |c: &mut RunCache| {
+            assert_eq!(c.len(), expected.len());
+            for (key, (manifest, ts, record)) in &expected {
+                assert!(c.contains(key));
+                assert_eq!(c.manifest_of(key), Some(manifest.as_str()), "manifest for {key}");
+                assert_eq!(c.recorded_ts(key), Some(*ts), "ts for {key}");
+                assert_eq!(c.get(key).unwrap(), record, "record for {key}");
+            }
+            assert!(!c.contains("00000000000000cc"));
+        };
+
+        {
+            let mut c = RunCache::open(&dir, true).unwrap();
+            assert_eq!(
+                c.filter_stats().segments_skipped,
+                1,
+                "the compacted segment must be adopted, not scanned"
+            );
+            verify(&mut c);
+            assert_eq!(c.manifest_of(&key5), Some("m2"), "append outranks the sidecar");
+            assert_eq!(c.manifest_of(&key7), Some("m1"), "sidecar outranks the lower shard");
+        }
+        std::fs::remove_file(dir.join("runs.jsonl.idx")).unwrap();
+        {
+            let mut c = RunCache::open(&dir, true).unwrap();
+            assert_eq!(c.filter_stats().segments_skipped, 0, "no sidecar, pure scan");
+            verify(&mut c);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The miss-heavy path the filters exist for: after a compaction, a
+    /// cold open adopts the sidecar (no segment scan) and absent-key
+    /// probes die at the bloom filter instead of touching the segment.
+    #[test]
+    fn miss_heavy_lookups_stop_at_the_bloom_filter() {
+        let dir = tmp_dir("miss-heavy");
+        {
+            let mut c = RunCache::open(&dir, true).unwrap();
+            for i in 0..50u64 {
+                c.put(&format!("{i:016x}"), "m", &rec("r", i as f64)).unwrap();
+            }
+        }
+        gc(&dir, &GcOptions::default()).unwrap();
+
+        let c = RunCache::open(&dir, true).unwrap();
+        assert_eq!(c.len(), 50, "adoption must count keys without a scan");
+        assert_eq!(c.filter_stats().segments_skipped, 1);
+        for i in 0..50u64 {
+            assert!(c.contains(&format!("{i:016x}")));
+        }
+        for i in 0..1000u64 {
+            assert!(!c.contains(&format!("{:016x}", 0xdead_0000u64 + i)));
+        }
+        let st = c.filter_stats();
+        assert_eq!(st.sidecar_hits, 50, "present keys resolve via the sidecar: {st:?}");
+        assert!(st.bloom_rejects >= 900, "bloom must answer most misses: {st:?}");
+        assert!(st.fence_probes <= 150, "few misses may reach a fence scan: {st:?}");
+        drop(c);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -94,6 +94,17 @@ pub(crate) fn bump_generation(dir: &Path) -> Result<()> {
     Ok(())
 }
 
+// ------------------------------------------------------------ sidecars
+
+/// The key-presence sidecar (`<segment>.idx`) for a segment — see
+/// [`super::filter`] for the on-disk format.  Not a segment
+/// ([`is_segment_name`] rejects it), so it never participates in merges.
+pub(crate) fn sidecar_path(segment: &Path) -> PathBuf {
+    let mut name = segment.file_name().unwrap_or_default().to_os_string();
+    name.push(".idx");
+    segment.with_file_name(name)
+}
+
 // ---------------------------------------------------------- lock files
 
 fn lock_path(segment: &Path) -> PathBuf {
@@ -174,6 +185,43 @@ impl SegmentLock {
             lock_path(segment).display()
         )
     }
+
+    /// Non-blocking acquire for opportunistic work (background tiered
+    /// merges): a live holder is `Ok(None)`, not an error, and an
+    /// unreadable holder pid is treated as live rather than waited on.
+    /// Stale (dead-pid) locks are still reclaimed.
+    pub(crate) fn try_acquire(segment: &Path) -> Result<Option<SegmentLock>> {
+        let path = lock_path(segment);
+        for _ in 0..2 {
+            match OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    let _ = writeln!(f, "{}", std::process::id());
+                    return Ok(Some(SegmentLock { path }));
+                }
+                Err(e) if e.kind() == ErrorKind::AlreadyExists => {
+                    let holder = std::fs::read_to_string(&path)
+                        .ok()
+                        .and_then(|s| s.trim().parse::<u32>().ok());
+                    match holder {
+                        Some(pid) if !pid_is_alive(pid) => {
+                            eprintln!(
+                                "run-cache: reclaiming stale lock {} (holder {pid} is gone)",
+                                path.display()
+                            );
+                            let _ = std::fs::remove_file(&path);
+                            // retry the create_new round
+                        }
+                        _ => return Ok(None),
+                    }
+                }
+                Err(e) => {
+                    return Err(e)
+                        .with_context(|| format!("creating lock file {}", path.display()));
+                }
+            }
+        }
+        Ok(None)
+    }
 }
 
 impl Drop for SegmentLock {
@@ -249,6 +297,40 @@ pub(crate) fn tail_is_torn(path: &Path) -> bool {
     }
     let mut last = [0u8; 1];
     f.read_exact(&mut last).is_ok() && last[0] != b'\n'
+}
+
+/// Strict byte-oriented line iteration for *rewriters*: yields every
+/// line (including a final unterminated one) as raw bytes with its
+/// starting byte offset, and — unlike [`for_each_line`] — propagates
+/// every I/O error.  Compaction must see either the whole segment or a
+/// hard error; a silently truncated scan would let the rewrite destroy
+/// the entries it never saw.  The callback's own error aborts the scan
+/// too.  Line bytes include no trailing `\n`; a trailing `\r` (if any)
+/// is *kept* so offset + len arithmetic stays exact.
+pub(crate) fn scan_lines_strict(
+    path: &Path,
+    mut f: impl FnMut(u64, &[u8]) -> Result<()>,
+) -> Result<()> {
+    let file = match File::open(path) {
+        Ok(file) => file,
+        Err(e) if e.kind() == ErrorKind::NotFound => return Ok(()),
+        Err(e) => return Err(e).with_context(|| format!("opening {}", path.display())),
+    };
+    let mut reader = BufReader::new(file);
+    let mut buf = Vec::new();
+    let mut offset: u64 = 0;
+    loop {
+        buf.clear();
+        let n = reader
+            .read_until(b'\n', &mut buf)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if n == 0 {
+            return Ok(());
+        }
+        let line = if buf.last() == Some(&b'\n') { &buf[..buf.len() - 1] } else { &buf[..] };
+        f(offset, line)?;
+        offset += n as u64;
+    }
 }
 
 /// Byte-oriented, lossy line iteration: a torn final line from a killed

@@ -19,6 +19,13 @@
 //! the drive loop being free versus the drive loop being the second
 //! hottest thing on the machine.
 //!
+//! The same idle path can optionally run background tiered merges
+//! ([`DriveConfig::background_compaction`]): every few seconds the
+//! driver offers the [`Compactor`] one step, folding similar-sized
+//! finished segments so a long sweep ends with a handful of large
+//! segments instead of one per restart.  Merge locks are non-blocking,
+//! so a live child never waits on the parent.
+//!
 //! The driver is deliberately execution-agnostic: it never talks to the
 //! engine, only to child processes and the cache dir, so it builds (and
 //! is integration-tested) without the XLA runtime — the test harness
@@ -30,7 +37,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use super::cache::{CacheWatcher, Shard};
+use super::cache::{CacheWatcher, Compactor, Shard};
+
+/// How often the drive loop attempts a background tier-merge step when
+/// [`DriveConfig::background_compaction`] is on.
+const COMPACT_EVERY: Duration = Duration::from_secs(5);
 
 /// Driver options.
 #[derive(Debug, Clone)]
@@ -47,6 +58,14 @@ pub struct DriveConfig {
     pub poll_interval: Duration,
     /// Print merged progress lines to stderr as results accumulate.
     pub progress: bool,
+    /// Step a size-tiered [`Compactor`] against the cache dir from the
+    /// drive loop's idle path (every [`COMPACT_EVERY`]), folding
+    /// similar-sized finished segments while the sweep still runs.
+    /// Merges take only non-blocking locks, so a live child's segment
+    /// is never touched.  Off by default: merging rewrites segment
+    /// files mid-drive, and callers that assert on byte-identical
+    /// drive output (the deterministic test harness) must opt in.
+    pub background_compaction: bool,
 }
 
 impl Default for DriveConfig {
@@ -57,6 +76,7 @@ impl Default for DriveConfig {
             max_restarts_per_shard: 2,
             poll_interval: Duration::from_millis(500),
             progress: true,
+            background_compaction: false,
         }
     }
 }
@@ -167,6 +187,7 @@ where
 
     let mut restarts = 0usize;
     let mut last_entries = usize::MAX;
+    let mut last_compact = Instant::now();
     loop {
         let mut all_done = true;
         for slot in slots.iter_mut() {
@@ -229,6 +250,24 @@ where
                     watcher.segments(),
                     if live == 1 { "" } else { "s" }
                 );
+            }
+        }
+        // idle-path tiered merges: fold finished segments while the
+        // sweep runs.  try-locked per group, so a live child's segment
+        // is never touched; errors are logged, never fatal to the drive
+        if cfg.background_compaction && last_compact.elapsed() >= COMPACT_EVERY {
+            last_compact = Instant::now();
+            match Compactor::new(&cfg.cache_dir).step() {
+                Ok(Some(r)) if cfg.progress => eprintln!(
+                    "drive: tier-merged {} segments into {} ({} entries, {} duplicate \
+                     lines dropped)",
+                    r.inputs.len(),
+                    r.output,
+                    r.entries,
+                    r.deduped
+                ),
+                Ok(_) => {}
+                Err(e) => eprintln!("drive: background compaction step skipped: {e:#}"),
             }
         }
         std::thread::sleep(cfg.poll_interval);

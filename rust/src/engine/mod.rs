@@ -131,6 +131,18 @@
 //!   generation — or a vanished/shrunken segment — falls back to one
 //!   full rescan, then resumes tailing.  See [`cache`] for the full
 //!   contract.
+//! * **Bounded-memory compaction.**  The gc rewrite streams: line
+//!   metadata spills to sorted temp runs and k-way merges back, each
+//!   surviving line serialized exactly once, so compacting a 10⁶-entry
+//!   cache holds O(spill chunk) entries resident, never O(cache).
+//! * **Background tiered merges & key-presence filters.**  Between
+//!   full gc passes, a [`Compactor`] (stepped from the drive loop's
+//!   idle path when enabled, or `repro cache compact`) folds
+//!   similar-sized adjacent segments with non-blocking locks — live
+//!   writers are never stalled.  Compacted segments carry a
+//!   bloom + fence-pointer sidecar (`<segment>.idx`), so a cold open
+//!   adopts the segment without scanning it and miss-heavy lookups
+//!   stop at the filter; [`FilterStats`] counts the saved work.
 //! * **Memoized job identity.**  An [`EngineJob`]'s canonical config
 //!   JSON and content address are computed once per job (shared across
 //!   clones), so submission hashing and the process-backend wire frame
@@ -151,7 +163,8 @@ pub use backend::XlaBackend;
 pub use backend::{det_record, Backend, Capabilities, Executor, MockBackend, ProcessBackend};
 pub use cache::{
     gc, list_segments, parse_bytes, parse_duration, run_key, stats, CacheStats, CacheWatcher,
-    GcOptions, GcReport, RunCache, SegmentStats, Shard,
+    Compactor, CompactorConfig, FilterStats, GcOptions, GcReport, RunCache, SegmentStats, Shard,
+    TierMergeReport,
 };
 pub use handle::{JobHandle, SubmitOptions, SweepHandle};
 pub use job::{EngineJob, EngineReport, JobOutcome, SweepJob, SweepResult};
@@ -572,5 +585,21 @@ impl Engine {
     /// records — the sharded drain's progress signal.
     pub fn refresh_cache(&self) -> usize {
         lock(&self.shared.cache).refresh_from_disk()
+    }
+
+    /// Run at most one background tier-merge step against this engine's
+    /// cache directory (`Ok(None)` for in-memory caches and when no
+    /// group is mergeable).  The cache mutex is held only long enough
+    /// to read the directory path — the merge itself runs beside the
+    /// workers, and this engine's own segment is protected by its
+    /// writer lock (the compactor skips any group containing it).  The
+    /// next [`Engine::refresh_cache`] picks a rewrite up through the
+    /// generation contract.
+    pub fn compact_step(&self) -> Result<Option<TierMergeReport>> {
+        let dir = lock(&self.shared.cache).dir().map(|d| d.to_path_buf());
+        match dir {
+            Some(dir) => Compactor::new(&dir).step(),
+            None => Ok(None),
+        }
     }
 }

@@ -8,7 +8,8 @@
 //!   drive --shards n [exp opts] spawn/monitor/restart n shard processes
 //!   worker [--mock]             serve engine jobs over stdin/stdout
 //!                               (the child side of --backend process)
-//!   cache <stats|gc> [opts]     run-cache lifecycle (segments, GC)
+//!   cache <stats|gc|compact>    run-cache lifecycle (segments, GC,
+//!                               background-style tiered merges)
 //!   report                      collate results/ into EXPERIMENTS-style md
 //!
 //! Execution backends: `train`/`exp`/`drive` take
@@ -33,7 +34,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use umup::data::{Corpus, CorpusConfig};
-use umup::engine::{gc, parse_bytes, parse_duration, stats, GcOptions, Shard};
+use umup::engine::{gc, parse_bytes, parse_duration, stats, Compactor, GcOptions, Shard};
 use umup::parametrization::{Abc, HpSet, Parametrization, Scheme};
 use umup::runtime::Registry;
 
@@ -111,13 +112,17 @@ fn main() -> Result<()> {
                  \x20 exp     <id|all|list> [--quick] [--workers N] [--shard i/n] [--quiet]\n\
                  \x20                                                     reproduce figures/tables\n\
                  \x20 drive   <id|all> --shards N [--quick] [--workers N] [--out DIR]\n\
-                 \x20                             spawn, monitor and restart the N shard\n\
-                 \x20                             processes of `exp --shard` (one shared cache)\n\
+                 \x20                 [--bg-compact] spawn, monitor and restart the N shard\n\
+                 \x20                             processes of `exp --shard` (one shared cache;\n\
+                 \x20                             --bg-compact tier-merges idle segments)\n\
                  \x20 worker  [--mock] [--artifacts DIR] [--sessions N]   serve engine jobs on\n\
                  \x20                             stdin/stdout (spawned by --backend process)\n\
                  \x20 cache   stats [--cache-dir DIR]                     segment/key statistics\n\
                  \x20 cache   gc    [--cache-dir DIR] [--older-than 30d] [--manifest NAME]\n\
-                 \x20               [--max-bytes 512m] [--dry-run]        prune + compact segments\n\
+                 \x20               [--max-bytes 512m] [--chunk-entries N] [--dry-run]\n\
+                 \x20                                                     prune + compact segments\n\
+                 \x20 cache   compact [--cache-dir DIR] [--max-steps N]   fold similar-sized\n\
+                 \x20                             segments (size-tiered, non-blocking locks)\n\
                  \x20 report  [--out results]                             collate summaries\n\
                  \x20 corpus  [--vocab 256]                               corpus statistics\n\n\
                  execution backends:\n\
@@ -146,7 +151,14 @@ fn main() -> Result<()> {
                  \x20 Lifecycle: `cache stats` summarizes segments/keys/manifests;\n\
                  \x20 `cache gc` prunes by age (--older-than, via each line's ts field) and/or\n\
                  \x20 --manifest, drops corrupt lines and cross-segment duplicates, and\n\
-                 \x20 compacts everything into a single key-sorted runs.jsonl.\n"
+                 \x20 compacts everything into a single key-sorted runs.jsonl.  gc streams:\n\
+                 \x20 memory is bounded by --chunk-entries (sorted spill runs + k-way merge),\n\
+                 \x20 not by cache size.  `cache compact` instead folds groups of\n\
+                 \x20 similar-sized segments in place (size-tiered merges under non-blocking\n\
+                 \x20 locks — safe while a sweep is running; `drive --bg-compact` does the\n\
+                 \x20 same from its idle loop).  Both rebuild each output segment's\n\
+                 \x20 <segment>.idx key-presence sidecar, which later opens and watchers use\n\
+                 \x20 to skip scanning segments for keys they cannot contain.\n"
             );
             Ok(())
         }
@@ -413,6 +425,7 @@ fn drive_cmd(args: &Args) -> Result<()> {
         shards,
         cache_dir: cache_dir.clone(),
         max_restarts_per_shard: args.get("max-restarts", "2").parse()?,
+        background_compaction: args.has("bg-compact"),
         ..DriveConfig::default()
     };
     println!(
@@ -665,8 +678,8 @@ fn drive_cmd(_args: &Args) -> Result<()> {
     )
 }
 
-/// Run-cache lifecycle: `repro cache <stats|gc>` (works without XLA —
-/// cache segments are plain JSONL).
+/// Run-cache lifecycle: `repro cache <stats|gc|compact>` (works without
+/// XLA — cache segments are plain JSONL).
 fn cache_cmd(args: &Args) -> Result<()> {
     let sub = args.positional.get(1).map(String::as_str).unwrap_or("stats");
     let dir = PathBuf::from(args.get("cache-dir", "results/run-cache"));
@@ -713,6 +726,10 @@ fn cache_cmd(args: &Args) -> Result<()> {
                     None => None,
                 },
                 dry_run: args.has("dry-run"),
+                chunk_entries: match args.flags.get("chunk-entries") {
+                    Some(s) => Some(s.parse().context("bad --chunk-entries")?),
+                    None => None,
+                },
             };
             let rep = gc(&dir, &opts)?;
             let verb = if opts.dry_run { "would keep" } else { "kept" };
@@ -733,7 +750,45 @@ fn cache_cmd(args: &Args) -> Result<()> {
             );
             Ok(())
         }
-        other => bail!("unknown cache subcommand {other:?} (expected stats or gc)"),
+        "compact" => {
+            let compactor = Compactor::new(&dir);
+            let max_steps: usize =
+                args.get("max-steps", "0").parse().context("bad --max-steps")?;
+            let mut merges = 0usize;
+            loop {
+                if max_steps != 0 && merges >= max_steps {
+                    break;
+                }
+                match compactor.step()? {
+                    Some(r) => {
+                        merges += 1;
+                        println!(
+                            "compact: merged {} segments into {} ({} entries, {} duplicate \
+                             lines + {} corrupt dropped, {} -> {} bytes)",
+                            r.inputs.len(),
+                            r.output,
+                            r.entries,
+                            r.deduped,
+                            r.corrupt_dropped,
+                            r.bytes_in,
+                            r.bytes_out
+                        );
+                    }
+                    None => break,
+                }
+            }
+            if merges == 0 {
+                println!(
+                    "compact {}: nothing to merge (no group of similar-sized segments \
+                     was free to lock)",
+                    dir.display()
+                );
+            } else {
+                println!("compact {}: {merges} tier merge(s) done", dir.display());
+            }
+            Ok(())
+        }
+        other => bail!("unknown cache subcommand {other:?} (expected stats, gc, or compact)"),
     }
 }
 

@@ -4,9 +4,22 @@
 //! which warms up, samples wall-clock iterations until a time budget, and
 //! prints mean / p50 / p95 plus throughput, machine-readable as CSV on
 //! request (used to fill EXPERIMENTS.md §Perf).
+//!
+//! Beyond one-shot timing there is a *recorded trajectory*: a bench can
+//! distill its runs into named [`Metric`]s and [`record_run`] them into a
+//! committed JSON file (one appended entry per recording, so the file is
+//! the performance history of the repo, one point per PR).  The same
+//! metrics can be gated in CI with [`check_regression`], which compares
+//! the gated subset against the file's most recent entry and fails on a
+//! direction-aware drop beyond a tolerance — without recording anything.
 
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::{Duration, Instant};
 
+use anyhow::{bail, Context, Result};
+
+use super::json::Json;
 use super::stats;
 
 pub struct Bencher {
@@ -116,6 +129,184 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// One distilled bench number for the recorded trajectory.
+///
+/// `gated` metrics participate in [`check_regression`]; ungated ones are
+/// recorded for the history but never fail CI (absolute wall-clock
+/// numbers vary too much across runner hardware to gate on — gate
+/// *ratios* computed within a single run instead).
+#[derive(Debug, Clone)]
+pub struct Metric {
+    pub name: String,
+    pub value: f64,
+    pub unit: String,
+    pub higher_is_better: bool,
+    pub gated: bool,
+}
+
+impl Metric {
+    /// A metric where larger is better (throughput, speedup ratios).
+    pub fn higher(name: &str, value: f64, unit: &str) -> Metric {
+        Metric {
+            name: name.to_string(),
+            value,
+            unit: unit.to_string(),
+            higher_is_better: true,
+            gated: false,
+        }
+    }
+
+    /// A metric where smaller is better (latency, bytes, memory).
+    pub fn lower(name: &str, value: f64, unit: &str) -> Metric {
+        Metric { higher_is_better: false, ..Metric::higher(name, value, unit) }
+    }
+
+    /// Mark this metric as CI-gated (checked by [`check_regression`]).
+    pub fn gated(mut self) -> Metric {
+        self.gated = true;
+        self
+    }
+}
+
+fn metric_json(m: &Metric) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("value".to_string(), Json::Num(m.value));
+    o.insert("unit".to_string(), Json::Str(m.unit.clone()));
+    o.insert("higher_is_better".to_string(), Json::Bool(m.higher_is_better));
+    o.insert("gated".to_string(), Json::Bool(m.gated));
+    Json::Obj(o)
+}
+
+/// `entries[i].metrics[name].value`, if present and well-formed.
+fn metric_value(entry: &Json, name: &str) -> Option<f64> {
+    entry.get("metrics").ok()?.get(name).ok()?.get("value").ok()?.as_f64().ok()
+}
+
+/// Load `path`'s entry list, verifying the file records `bench_name`.
+/// A missing file is an empty history, not an error.
+fn load_entries(path: &Path, bench_name: &str) -> Result<Vec<Json>> {
+    let s = match std::fs::read_to_string(path) {
+        Ok(s) => s,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => {
+            return Err(e)
+                .with_context(|| format!("reading bench trajectory {}", path.display()))
+        }
+    };
+    let doc = Json::parse(&s)
+        .with_context(|| format!("parsing bench trajectory {}", path.display()))?;
+    let recorded = doc.get("bench")?.as_str()?.to_string();
+    if recorded != bench_name {
+        bail!("{} records bench {recorded:?}, not {bench_name:?}", path.display());
+    }
+    Ok(doc.get("entries")?.as_arr()?.to_vec())
+}
+
+/// Append one entry (label + unix timestamp + all `metrics`) to the
+/// trajectory file at `path`, creating it if absent, and print each
+/// metric's delta against the previous entry.  The file is rewritten
+/// whole — entries are small (a handful of numbers per PR), so the
+/// history stays trivially diffable in review.
+pub fn record_run(path: &Path, bench_name: &str, label: &str, metrics: &[Metric]) -> Result<()> {
+    let mut entries = load_entries(path, bench_name)?;
+    let prev = entries.last().cloned();
+    for m in metrics {
+        match prev.as_ref().and_then(|p| metric_value(p, &m.name)) {
+            Some(old) if old != 0.0 => {
+                let pct = (m.value - old) / old * 100.0;
+                println!(
+                    "record {:36} {:>14.3} {:8} ({pct:+.1}% vs previous entry)",
+                    m.name, m.value, m.unit
+                );
+            }
+            _ => println!(
+                "record {:36} {:>14.3} {:8} (no previous value)",
+                m.name, m.value, m.unit
+            ),
+        }
+    }
+    let ts = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut ms = BTreeMap::new();
+    for m in metrics {
+        ms.insert(m.name.clone(), metric_json(m));
+    }
+    let mut entry = BTreeMap::new();
+    entry.insert("label".to_string(), Json::Str(label.to_string()));
+    entry.insert("ts".to_string(), Json::Num(ts as f64));
+    entry.insert("metrics".to_string(), Json::Obj(ms));
+    entries.push(Json::Obj(entry));
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str(bench_name.to_string()));
+    doc.insert("entries".to_string(), Json::Arr(entries));
+    let body = Json::Obj(doc).dump();
+    std::fs::write(path, body + "\n")
+        .with_context(|| format!("writing bench trajectory {}", path.display()))?;
+    println!("recorded {} metrics as {label:?} in {}", metrics.len(), path.display());
+    Ok(())
+}
+
+/// Compare the *gated* subset of `metrics` against the most recent entry
+/// in the trajectory file; fail on a direction-aware regression beyond
+/// `tolerance` (0.30 = 30%).  A missing file, an empty history, or a
+/// gated metric the baseline has never recorded are notes, not failures
+/// — a fresh repo must be able to pass CI before its first recording.
+/// Records nothing.
+pub fn check_regression(
+    path: &Path,
+    bench_name: &str,
+    metrics: &[Metric],
+    tolerance: f64,
+) -> Result<()> {
+    let entries = load_entries(path, bench_name)?;
+    let Some(base) = entries.last() else {
+        println!(
+            "check: no baseline entries in {} — nothing to gate against",
+            path.display()
+        );
+        return Ok(());
+    };
+    let mut failures = Vec::new();
+    for m in metrics.iter().filter(|m| m.gated) {
+        let Some(old) = metric_value(base, &m.name) else {
+            println!("check  {:36} (no baseline value for this metric — skipped)", m.name);
+            continue;
+        };
+        let regressed = if m.higher_is_better {
+            m.value < old * (1.0 - tolerance)
+        } else {
+            m.value > old * (1.0 + tolerance)
+        };
+        let pct = if old != 0.0 { (m.value - old) / old * 100.0 } else { 0.0 };
+        if regressed {
+            println!(
+                "check  {:36} {:>14.3} {:8} REGRESSED vs baseline {:.3} ({pct:+.1}%)",
+                m.name, m.value, m.unit, old
+            );
+            failures.push(format!(
+                "{}: {:.3} vs baseline {:.3} {} ({pct:+.1}%, tolerance {:.0}%)",
+                m.name,
+                m.value,
+                old,
+                m.unit,
+                tolerance * 100.0
+            ));
+        } else {
+            println!(
+                "check  {:36} {:>14.3} {:8} ok vs baseline {:.3} ({pct:+.1}%)",
+                m.name, m.value, m.unit, old
+            );
+        }
+    }
+    if !failures.is_empty() {
+        bail!("bench regression vs {}: {}", path.display(), failures.join("; "));
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,5 +332,59 @@ mod tests {
     fn formats_ns() {
         assert_eq!(fmt_ns(12.0), "12 ns");
         assert_eq!(fmt_ns(1.5e6), "1.50 ms");
+    }
+
+    #[test]
+    fn trajectory_records_appends_and_gates_direction_aware() {
+        let dir = std::env::temp_dir()
+            .join(format!("umup-bench-traj-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let _ = std::fs::remove_file(&path);
+
+        // missing file: checking is a no-op, recording creates it
+        check_regression(&path, "t", &[Metric::higher("speedup", 2.0, "x").gated()], 0.3)
+            .unwrap();
+        record_run(
+            &path,
+            "t",
+            "first",
+            &[
+                Metric::higher("speedup", 2.0, "x").gated(),
+                Metric::lower("open_ns", 1000.0, "ns"),
+            ],
+        )
+        .unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("bench").unwrap().as_str().unwrap(), "t");
+        assert_eq!(doc.get("entries").unwrap().as_arr().unwrap().len(), 1);
+
+        // within tolerance passes; beyond tolerance fails in the right
+        // direction only (lower speedup = regression, higher = fine)
+        check_regression(&path, "t", &[Metric::higher("speedup", 1.5, "x").gated()], 0.3)
+            .unwrap();
+        check_regression(&path, "t", &[Metric::higher("speedup", 9.0, "x").gated()], 0.3)
+            .unwrap();
+        assert!(check_regression(
+            &path,
+            "t",
+            &[Metric::higher("speedup", 1.0, "x").gated()],
+            0.3
+        )
+        .is_err());
+        // ungated metrics never fail, whatever they do
+        check_regression(&path, "t", &[Metric::lower("open_ns", 1e9, "ns")], 0.3).unwrap();
+        // a gated metric absent from the baseline is skipped, not failed
+        check_regression(&path, "t", &[Metric::higher("new_one", 1.0, "x").gated()], 0.3)
+            .unwrap();
+
+        // appending keeps history and the bench-name guard holds
+        record_run(&path, "t", "second", &[Metric::higher("speedup", 2.2, "x").gated()])
+            .unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("entries").unwrap().as_arr().unwrap().len(), 2);
+        assert!(load_entries(&path, "other-bench").is_err());
+
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

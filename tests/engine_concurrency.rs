@@ -34,7 +34,8 @@ use common::{
     sorted_segment_lines,
 };
 use umup::engine::{
-    gc, run_key, stats, Engine, EngineConfig, EngineJob, GcOptions, RunCache, Shard,
+    gc, run_key, stats, Compactor, Engine, EngineConfig, EngineJob, GcOptions, RunCache,
+    Shard,
 };
 
 // ---------------------------------------------------------- fixtures
@@ -454,6 +455,86 @@ fn resume_over_torn_segment_reruns_only_the_lost_job() {
     let mut merged = RunCache::open(&dir, true).unwrap();
     assert!(merged.get(&torn_key).is_some(), "torn job must be re-recorded");
     assert_eq!(merged.len(), n_jobs);
+    drop(merged);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Background tiered merges under a live concurrent writer (public-API
+/// view of the compaction contract): while a sharded writer holds its
+/// segment lock and keeps appending, [`Compactor::step`] folds the
+/// *finished* segments — never the writer's, never by waiting on its
+/// lock — and once the writer is gone the remaining segments converge
+/// to one, with every record from both sides still addressable.
+#[test]
+fn tiered_merges_fold_finished_segments_around_a_live_writer() {
+    fn tier_rec(label: &str) -> umup::train::RunRecord {
+        umup::train::RunRecord {
+            label: label.to_string(),
+            train_curve: vec![(8, 2.5), (16, 2.0)],
+            valid_curve: vec![(16, 2.1)],
+            final_valid_loss: 2.1,
+            rms_curves: std::collections::BTreeMap::new(),
+            final_rms: vec![],
+            diverged: false,
+            wall_seconds: 0.1,
+        }
+    }
+    fn tier_key(i: u64) -> String {
+        format!("{i:016x}")
+    }
+
+    let dir = tmp_dir("tier-merge");
+    // three finished similar-sized segments (their writers are gone)
+    let mut expected: Vec<String> = Vec::new();
+    for s in 1..=3usize {
+        let mut c =
+            RunCache::open_sharded(&dir, Some(Shard { index: s, count: 4 }), true).unwrap();
+        for i in 0..8u64 {
+            let k = tier_key(((s as u64) << 8) | i);
+            c.put(&k, "tier", &tier_rec(&format!("seg{s}-{i}"))).unwrap();
+            expected.push(k);
+        }
+    }
+
+    // a live writer on runs.0.jsonl, lock held across every step below
+    let mut writer =
+        RunCache::open_sharded(&dir, Some(Shard { index: 0, count: 4 }), true).unwrap();
+    let mut next = 0x9000u64;
+    let mut live_put = |w: &mut RunCache, expected: &mut Vec<String>| {
+        let k = tier_key(next);
+        next += 1;
+        w.put(&k, "tier", &tier_rec("live")).unwrap();
+        expected.push(k);
+    };
+    live_put(&mut writer, &mut expected);
+
+    let compactor = Compactor::new(&dir);
+    let mut reports = Vec::new();
+    // steps interleaved with appends: each merge must skip the locked
+    // segment (returning instead of blocking) and fold only finished ones
+    while let Some(r) = compactor.step().unwrap() {
+        assert!(
+            !r.inputs.iter().any(|n| n == "runs.0.jsonl"),
+            "merged the live writer's segment: {:?}",
+            r.inputs
+        );
+        live_put(&mut writer, &mut expected);
+        reports.push(r);
+    }
+    assert!(!reports.is_empty(), "finished segments must merge around the live lock");
+    live_put(&mut writer, &mut expected);
+    drop(writer); // lock released; the writer's segment is now finished too
+
+    while compactor.step().unwrap().is_some() {}
+    let segs = umup::engine::list_segments(&dir).unwrap();
+    assert_eq!(segs.len(), 1, "all segments converge once the writer is gone: {segs:?}");
+
+    // nothing lost on either side of the concurrency
+    let mut merged = RunCache::open(&dir, true).unwrap();
+    assert_eq!(merged.len(), expected.len());
+    for k in &expected {
+        assert!(merged.get(k).is_some(), "missing record {k} after tier merges");
+    }
     drop(merged);
     let _ = std::fs::remove_dir_all(&dir);
 }
