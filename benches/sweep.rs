@@ -1,22 +1,71 @@
 //! Bench — Fig 1(a) machinery: engine scaling, the warm-vs-cold engine
-//! contrast (compile amortization + run-cache wins), and the cost of the
+//! contrast (compile amortization + run-cache wins), the cost of the
 //! search bookkeeping itself (sampling, subset simulation, transfer
-//! error) relative to the runs it schedules.
+//! error) relative to the runs it schedules, and the IPC overhead of
+//! the out-of-process backends (pipe vs loopback socket vs in-process).
+//!
+//! Flags (after `--`):
+//!   --record <path>   append this run's metrics to the trajectory file
+//!                     (BENCH_sweep.json at the repo root)
+//!   --check <path>    gate the ratio metrics against the file's most
+//!                     recent entry
+//!   --label <name>    entry label for --record (default "dev")
 
-use std::path::Path;
-use std::process::Command;
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
 use std::sync::Arc;
 use std::time::Instant;
 
 use umup::data::{Corpus, CorpusConfig};
-use umup::engine::{Backend, Engine, EngineConfig, EngineJob, MockBackend, ProcessBackend};
+use umup::engine::{
+    Backend, Engine, EngineConfig, EngineJob, MockBackend, NetworkBackend, ProcessBackend,
+};
 use umup::parametrization::{HpSet, Parametrization, Scheme};
 use umup::runtime::Manifest;
 use umup::sweep::{transfer_error, PairGrid, SweepJob};
 use umup::train::{RunConfig, Schedule};
-use umup::util::bench::{black_box, Bencher};
+use umup::util::bench::{black_box, check_regression, record_run, Bencher, Metric};
+
+/// One `repro worker --mock --listen 127.0.0.1:0` child; returns it
+/// with the `listening <addr>` announcement read back off its stdout.
+fn spawn_listen_worker(exe: &str) -> anyhow::Result<(Child, String)> {
+    let mut child = Command::new(exe)
+        .arg("worker")
+        .arg("--mock")
+        .arg("--listen")
+        .arg("127.0.0.1:0")
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()?;
+    let stdout = child.stdout.take().expect("worker stdout is piped");
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line)?;
+    let addr = line
+        .strip_prefix("listening ")
+        .ok_or_else(|| anyhow::anyhow!("unexpected worker announcement {line:?}"))?
+        .trim()
+        .to_string();
+    Ok((child, addr))
+}
 
 fn main() -> anyhow::Result<()> {
+    let mut record: Option<PathBuf> = None;
+    let mut check: Option<PathBuf> = None;
+    let mut label = "dev".to_string();
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--record" => record = Some(PathBuf::from(it.next().expect("--record needs a path"))),
+            "--check" => check = Some(PathBuf::from(it.next().expect("--check needs a path"))),
+            "--label" => label = it.next().expect("--label needs a name"),
+            // cargo's own bench-harness flags; harmless to ignore
+            "--bench" => {}
+            other => eprintln!("sweep bench: ignoring unknown arg {other:?}"),
+        }
+    }
+
     let b = Bencher::default();
     // pure bookkeeping costs
     let grid = PairGrid {
@@ -141,11 +190,12 @@ fn main() -> anyhow::Result<()> {
     );
     let _ = std::fs::remove_dir_all(&cache_dir);
 
-    // IPC overhead of the process backend, isolated from training cost:
-    // the same no-op sweep on the in-process deterministic mock vs 4
-    // `repro worker --mock` children.  The per-job delta is pure
-    // spawn + wire/framing + codec cost, tracked so the backend layer
-    // shows up in the perf trajectory.
+    // IPC overhead of the out-of-process backends, isolated from
+    // training cost: the same no-op sweep on the in-process
+    // deterministic mock vs 4 `repro worker --mock` children (pipes) vs
+    // 4 `repro worker --mock --listen` endpoints (loopback TCP).  The
+    // per-job deltas are pure spawn/dial + wire/framing + codec cost,
+    // tracked so the backend layer shows up in the perf trajectory.
     let n_ipc_jobs = 64usize;
     let ipc_jobs = || -> Vec<EngineJob> {
         (0..n_ipc_jobs)
@@ -166,18 +216,33 @@ fn main() -> anyhow::Result<()> {
             .collect()
     };
     let worker_exe = env!("CARGO_BIN_EXE_repro").to_string();
-    let backends: Vec<(&str, Arc<dyn Backend>)> = vec![
-        ("in-process mock", Arc::new(MockBackend::deterministic())),
+    let mut fleet = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..4 {
+        let (child, addr) = spawn_listen_worker(&worker_exe)?;
+        fleet.push(child);
+        addrs.push(addr);
+    }
+    let pipe_exe = worker_exe.clone();
+    let backends: Vec<(&str, &str, Arc<dyn Backend>)> = vec![
+        ("in-process mock", "inprocess", Arc::new(MockBackend::deterministic())),
         (
             "process mock (4 children)",
+            "process",
             Arc::new(ProcessBackend::new(move |_worker| {
-                let mut cmd = Command::new(&worker_exe);
+                let mut cmd = Command::new(&pipe_exe);
                 cmd.arg("worker").arg("--mock");
                 cmd
             })),
         ),
+        (
+            "network mock (4 listeners)",
+            "network",
+            Arc::new(NetworkBackend::new(&addrs.join(","))?),
+        ),
     ];
-    for (name, backend) in backends {
+    let mut per_job_ms = std::collections::BTreeMap::new();
+    for (name, key, backend) in backends {
         let engine =
             Engine::with_backend(EngineConfig { workers: 4, ..EngineConfig::default() }, backend)?;
         let t0 = Instant::now();
@@ -200,6 +265,41 @@ fn main() -> anyhow::Result<()> {
             first * 1e3
         );
         assert_eq!(n, n_ipc_jobs);
+        per_job_ms.insert(key, dt * 1e3 / n_ipc_jobs as f64);
+    }
+    for mut child in fleet {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+
+    // the trajectory: absolute per-job costs for the history, plus one
+    // gated within-run ratio (absolute wall-clock varies across runner
+    // hardware; the pipe-vs-in-process multiple is what the backend
+    // layer actually owns)
+    let inproc = per_job_ms["inprocess"];
+    let metrics = vec![
+        Metric::lower("inprocess_per_job_ms", inproc, "ms"),
+        Metric::lower("process_per_job_ms", per_job_ms["process"], "ms"),
+        Metric::lower("network_per_job_ms", per_job_ms["network"], "ms"),
+        Metric::lower(
+            "process_vs_inprocess_per_job_ratio",
+            per_job_ms["process"] / inproc.max(1e-9),
+            "x",
+        )
+        .gated(),
+        Metric::lower(
+            "network_vs_inprocess_per_job_ratio",
+            per_job_ms["network"] / inproc.max(1e-9),
+            "x",
+        ),
+    ];
+    // wider tolerance than the cache gate: these are ~ms-scale no-op
+    // sweeps, so scheduler jitter moves the ratio more than real work
+    if let Some(path) = &check {
+        check_regression(path, "sweep", &metrics, 0.50)?;
+    }
+    if let Some(path) = &record {
+        record_run(path, "sweep", &label, &metrics)?;
     }
     Ok(())
 }

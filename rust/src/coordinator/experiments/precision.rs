@@ -192,16 +192,28 @@ pub fn fig19(ctx: &ExpContext) -> Result<String> {
         cfg.rms_sites = sites.clone();
         let res = single(ctx, &man, &corpus, cfg)?;
         for (site, curve) in &res.record.rms_curves {
+            // a curve can be empty when the run diverges before its
+            // first RMS sample: emit a labelled skip row, don't panic
+            let (Some(first), Some(last)) = (curve.first(), curve.last()) else {
+                rows.push(vec![
+                    scheme.name().into(),
+                    site.clone(),
+                    "(no samples)".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+                continue;
+            };
             let mut s = Series::new(format!("{} {}", scheme.name(), site));
             for &(t, r) in curve {
                 s.push(t as f64, r.max(1e-12).log2());
             }
-            let growth = curve.last().unwrap().1 / curve.first().unwrap().1.max(1e-12);
+            let growth = last.1 / first.1.max(1e-12);
             rows.push(vec![
                 scheme.name().into(),
                 site.clone(),
-                format!("{:.3e}", curve.first().unwrap().1),
-                format!("{:.3e}", curve.last().unwrap().1),
+                format!("{:.3e}", first.1),
+                format!("{:.3e}", last.1),
                 format!("{growth:.2}x"),
             ]);
             all_series.push(s);

@@ -157,8 +157,12 @@ pub fn fig13(ctx: &ExpContext) -> Result<String> {
         }
         // stream the multiplier line; outcomes fill in as they finish
         let line = hp_line(ctx, &man, &corpus, jobs)?;
-        let (opt, loss) = best_point(&line);
-        rows.push(vec![gname.to_string(), format!("{opt}"), format!("{loss:.4}")]);
+        match best_point(&line) {
+            Some((opt, loss)) => {
+                rows.push(vec![gname.to_string(), format!("{opt}"), format!("{loss:.4}")]);
+            }
+            None => rows.push(vec![gname.to_string(), "(all diverged)".into(), "-".into()]),
+        }
         series.push(to_series(gname.to_string(), &line));
     }
     report.figure(&dir, "per_tensor_lr", &series, true)?;

@@ -39,19 +39,38 @@ pub fn fig2(ctx: &ExpContext) -> Result<String> {
             } else {
                 lr_line(ctx, &man, &ctx.corpus(vocab), &p, &lr_grid(Scheme::Mup, false))?
             };
-            let (opt_lr, opt_loss) = best_point(&line);
-            opts.push((w, opt_lr));
             series.push(to_series(format!("w{w}"), &line));
-            rows.push(vec![
-                flavor.name().into(),
-                w.to_string(),
-                format!("{:.2}", opt_lr.log2()),
-                format!("{opt_loss:.4}"),
-            ]);
+            match best_point(&line) {
+                Some((opt_lr, opt_loss)) => {
+                    opts.push((w, opt_lr));
+                    rows.push(vec![
+                        flavor.name().into(),
+                        w.to_string(),
+                        format!("{:.2}", opt_lr.log2()),
+                        format!("{opt_loss:.4}"),
+                    ]);
+                }
+                // every point diverged/cancelled: report it, don't panic
+                None => rows.push(vec![
+                    flavor.name().into(),
+                    w.to_string(),
+                    "(all diverged)".into(),
+                    "-".into(),
+                ]),
+            }
         }
         report.figure(&dir, &format!("lr_sweep_{}", flavor.name()), &series, true)?;
-        let drift = (opts.last().unwrap().1 / opts[0].1).log2().abs();
-        report.kv(&format!("{} optimum drift |log2|", flavor.name()), format!("{drift:.2}"));
+        match (opts.first(), opts.last()) {
+            (Some(&(_, first_lr)), Some(&(_, last_lr))) => {
+                let drift = (last_lr / first_lr).log2().abs();
+                report
+                    .kv(&format!("{} optimum drift |log2|", flavor.name()), format!("{drift:.2}"));
+            }
+            _ => report.kv(
+                &format!("{} optimum drift |log2|", flavor.name()),
+                "n/a (no width produced a finite optimum)".to_string(),
+            ),
+        }
     }
     report.table(&["setup", "width", "log2 opt LR", "best loss"], &rows);
     report.para(

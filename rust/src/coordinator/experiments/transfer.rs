@@ -26,28 +26,41 @@ pub fn fig1b(ctx: &ExpContext) -> Result<String> {
             let corpus = ctx.corpus(man.spec.vocab);
             let p = proto(ctx, scheme, 256);
             let line = lr_line(ctx, &man, &corpus, &p, &lr_grid(scheme, false))?;
-            let (opt_lr, opt_loss) = best_point(&line);
-            opt_by_width.push((w, opt_lr, opt_loss));
             series.push(to_series(format!("{} w{}", scheme.name(), w), &line));
-            rows.push(vec![
-                scheme.name().into(),
-                w.to_string(),
-                format!("{:.4}", opt_lr.log2()),
-                format!("{opt_loss:.4}"),
-            ]);
+            match best_point(&line) {
+                Some((opt_lr, opt_loss)) => {
+                    opt_by_width.push((w, opt_lr, opt_loss));
+                    rows.push(vec![
+                        scheme.name().into(),
+                        w.to_string(),
+                        format!("{:.4}", opt_lr.log2()),
+                        format!("{opt_loss:.4}"),
+                    ]);
+                }
+                // every point diverged/cancelled: report it, don't panic
+                None => rows.push(vec![
+                    scheme.name().into(),
+                    w.to_string(),
+                    "(all diverged)".into(),
+                    "-".into(),
+                ]),
+            }
         }
         report.figure(&dir, &format!("lr_vs_loss_{}", scheme.name()), &series, true)?;
         // transfer quality: log2 drift of the optimum from proxy to target
-        let drift = (opt_by_width.last().unwrap().1 / opt_by_width[0].1).log2().abs();
-        report.kv(
-            &format!(
-                "{} optimum drift (|log2|, w{}→w{})",
-                scheme.name(),
-                widths[0],
-                widths[widths.len() - 1]
-            ),
-            format!("{drift:.2}"),
+        let drift_label = format!(
+            "{} optimum drift (|log2|, w{}→w{})",
+            scheme.name(),
+            widths[0],
+            widths[widths.len() - 1]
         );
+        match (opt_by_width.first(), opt_by_width.last()) {
+            (Some(&(_, first_lr, _)), Some(&(_, last_lr, _))) => {
+                let drift = (last_lr / first_lr).log2().abs();
+                report.kv(&drift_label, format!("{drift:.2}"));
+            }
+            _ => report.kv(&drift_label, "n/a (no width produced a finite optimum)".to_string()),
+        }
     }
     report.table(&["scheme", "width", "log2 opt LR", "best loss"], &rows);
     report.para(
@@ -77,14 +90,23 @@ pub fn fig3(ctx: &ExpContext) -> Result<String> {
             let mut p = proto(ctx, Scheme::Umup, 256);
             p.parametrization.emb_lr_rule = rule;
             let line = lr_line(ctx, &man, &corpus, &p, &lr_grid(Scheme::Umup, false))?;
-            let (opt_lr, opt_loss) = best_point(&line);
-            s.push(w as f64, opt_loss);
-            rows.push(vec![
-                label.into(),
-                w.to_string(),
-                format!("{:.2}", opt_lr.log2()),
-                format!("{opt_loss:.4}"),
-            ]);
+            match best_point(&line) {
+                Some((opt_lr, opt_loss)) => {
+                    s.push(w as f64, opt_loss);
+                    rows.push(vec![
+                        label.into(),
+                        w.to_string(),
+                        format!("{:.2}", opt_lr.log2()),
+                        format!("{opt_loss:.4}"),
+                    ]);
+                }
+                None => rows.push(vec![
+                    label.into(),
+                    w.to_string(),
+                    "(all diverged)".into(),
+                    "-".into(),
+                ]),
+            }
         }
         series.push(s);
     }

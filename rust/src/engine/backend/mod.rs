@@ -46,18 +46,25 @@
 //! * [`ProcessBackend`] — the out-of-process path: each worker slot
 //!   owns a spawned `repro worker` child speaking the [`wire`]
 //!   protocol over stdin/stdout, with bounded restart-on-crash.
+//! * [`NetworkBackend`] — the cluster path: each worker slot dials a
+//!   long-lived `repro worker --listen` endpoint (TCP or Unix socket)
+//!   from a round-robin list, speaking the same [`wire`] frames with
+//!   bounded reconnect-on-failure.  [`Endpoint`] / [`Listener`] are the
+//!   shared dial/accept halves, reused by the `repro serve` control
+//!   plane ([`crate::engine::serve`]).
 //!
-//! A future network/cluster backend is one more impl of this trait —
-//! nothing in the engine core changes.
+//! The engine core never learns which of these it is running on.
 
 pub mod wire;
 
 mod mock;
+mod net;
 mod process;
 #[cfg(feature = "xla")]
 mod xla;
 
 pub use mock::{det_record, MockBackend};
+pub use net::{Endpoint, Listener, NetworkBackend};
 pub use process::ProcessBackend;
 #[cfg(feature = "xla")]
 pub use xla::XlaBackend;

@@ -1,0 +1,510 @@
+//! The network backend: each engine worker slot dials a long-lived
+//! worker endpoint (`repro worker --listen`) over TCP or a Unix domain
+//! socket, speaking the exact [`super::wire`] protocol the process
+//! backend speaks over pipes — the frames are byte-identical, only the
+//! transport changes.
+//!
+//! # Topology
+//!
+//! A [`NetworkBackend`] holds an ordered endpoint list (`--workers
+//! host:port,unix:/path,...`).  Worker slot `k` starts at endpoint
+//! `k % n` — with `workers == n` this is a 1:1 slot↔endpoint mapping —
+//! and every subsequent connection attempt advances round-robin, so a
+//! dead endpoint fails over to the next one instead of pinning its slot
+//! to a corpse.
+//!
+//! # Supervision / reconnect semantics
+//!
+//! Reconnects mirror [`super::ProcessBackend`]'s child restarts under
+//! the same bounded budget ([`NetworkBackend::with_max_restarts`]): the
+//! first connection is free, each later one consumes budget, and a
+//! transport failure mid-job re-dispatches the in-flight job exactly
+//! once on a fresh connection.  Remote workers outlive any one engine,
+//! so there is no child to reap — teardown is just dropping the socket.
+
+use std::fmt;
+use std::io::{BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::train::RunRecord;
+
+use super::super::job::EngineJob;
+use super::wire;
+use super::{Backend, Capabilities, Executor};
+
+// ------------------------------------------------------------ endpoint
+
+/// One dialable worker address: `host:port` TCP or `unix:/path`.
+#[derive(Clone, Debug)]
+pub enum Endpoint {
+    /// A TCP address (`127.0.0.1:7070`, `build-box:7070`).
+    Tcp(String),
+    /// A Unix domain socket path (`unix:/run/umup/worker.sock`).
+    #[cfg(unix)]
+    Unix(PathBuf),
+}
+
+impl Endpoint {
+    /// Parse one endpoint: a `unix:` prefix selects a Unix socket path,
+    /// anything with a colon is a TCP `host:port`.
+    pub fn parse(s: &str) -> Result<Endpoint> {
+        let s = s.trim();
+        if let Some(path) = s.strip_prefix("unix:") {
+            #[cfg(unix)]
+            {
+                if path.is_empty() {
+                    bail!("unix endpoint has an empty path");
+                }
+                return Ok(Endpoint::Unix(PathBuf::from(path)));
+            }
+            #[cfg(not(unix))]
+            {
+                let _ = path;
+                bail!("unix endpoints are not supported on this platform");
+            }
+        }
+        if !s.contains(':') || s.is_empty() {
+            bail!("endpoint {s:?} is neither unix:<path> nor host:port");
+        }
+        Ok(Endpoint::Tcp(s.to_string()))
+    }
+
+    /// Dial the endpoint; returns independent read/write halves.
+    pub fn connect(&self) -> Result<(Box<dyn Read + Send>, Box<dyn Write + Send>)> {
+        match self {
+            Endpoint::Tcp(addr) => {
+                let stream = TcpStream::connect(addr)
+                    .with_context(|| format!("connecting to tcp endpoint {addr}"))?;
+                // frames are small and latency-bound; don't batch them
+                let _ = stream.set_nodelay(true);
+                let reader = stream.try_clone().context("cloning tcp stream")?;
+                Ok((Box::new(reader), Box::new(stream)))
+            }
+            #[cfg(unix)]
+            Endpoint::Unix(path) => {
+                let stream = UnixStream::connect(path)
+                    .with_context(|| format!("connecting to unix endpoint {}", path.display()))?;
+                let reader = stream.try_clone().context("cloning unix stream")?;
+                Ok((Box::new(reader), Box::new(stream)))
+            }
+        }
+    }
+}
+
+impl fmt::Display for Endpoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Endpoint::Tcp(addr) => write!(f, "{addr}"),
+            #[cfg(unix)]
+            Endpoint::Unix(path) => write!(f, "unix:{}", path.display()),
+        }
+    }
+}
+
+// ------------------------------------------------------------ listener
+
+/// The accepting side of an [`Endpoint`]: used by `repro worker
+/// --listen` and the `repro serve` control socket.
+pub enum Listener {
+    /// A bound TCP listener.
+    Tcp(TcpListener),
+    /// A bound Unix socket listener (the path is unlinked on drop).
+    #[cfg(unix)]
+    Unix(UnixListener, PathBuf),
+}
+
+impl Listener {
+    /// Bind the endpoint.  TCP port 0 binds an ephemeral port (read the
+    /// real one back via [`Listener::local_desc`]); a stale Unix socket
+    /// file from a dead process is removed first.
+    pub fn bind(ep: &Endpoint) -> Result<Listener> {
+        match ep {
+            Endpoint::Tcp(addr) => {
+                let l = TcpListener::bind(addr)
+                    .with_context(|| format!("binding tcp listener on {addr}"))?;
+                Ok(Listener::Tcp(l))
+            }
+            #[cfg(unix)]
+            Endpoint::Unix(path) => {
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path)
+                    .with_context(|| format!("binding unix listener on {}", path.display()))?;
+                Ok(Listener::Unix(l, path.clone()))
+            }
+        }
+    }
+
+    /// The bound address as a dialable endpoint string (resolves an
+    /// ephemeral TCP port to the real one).
+    pub fn local_desc(&self) -> String {
+        match self {
+            Listener::Tcp(l) => match l.local_addr() {
+                Ok(a) => a.to_string(),
+                Err(_) => "tcp:?".to_string(),
+            },
+            #[cfg(unix)]
+            Listener::Unix(_, path) => format!("unix:{}", path.display()),
+        }
+    }
+
+    /// Block for one connection; returns read/write halves plus a peer
+    /// description for log lines.
+    pub fn accept(&self) -> Result<(Box<dyn Read + Send>, Box<dyn Write + Send>, String)> {
+        match self {
+            Listener::Tcp(l) => {
+                let (stream, peer) = l.accept().context("accepting tcp connection")?;
+                let _ = stream.set_nodelay(true);
+                let reader = stream.try_clone().context("cloning accepted tcp stream")?;
+                Ok((Box::new(reader), Box::new(stream), peer.to_string()))
+            }
+            #[cfg(unix)]
+            Listener::Unix(l, _) => {
+                let (stream, _) = l.accept().context("accepting unix connection")?;
+                let reader = stream.try_clone().context("cloning accepted unix stream")?;
+                Ok((Box::new(reader), Box::new(stream), "unix-peer".to_string()))
+            }
+        }
+    }
+}
+
+#[cfg(unix)]
+impl Drop for Listener {
+    fn drop(&mut self) {
+        if let Listener::Unix(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+// ------------------------------------------------------------- backend
+
+struct NetInner {
+    endpoints: Vec<Endpoint>,
+    max_restarts_per_worker: usize,
+    restarts: AtomicUsize,
+}
+
+/// A [`Backend`] that dials every job out to remote worker endpoints.
+pub struct NetworkBackend {
+    inner: Arc<NetInner>,
+}
+
+impl NetworkBackend {
+    /// Parse a comma-separated endpoint list (`host:port,unix:/path`).
+    pub fn new(workers: &str) -> Result<NetworkBackend> {
+        let endpoints = workers
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(Endpoint::parse)
+            .collect::<Result<Vec<_>>>()?;
+        if endpoints.is_empty() {
+            bail!("network backend needs at least one worker endpoint");
+        }
+        Ok(NetworkBackend::from_endpoints(endpoints))
+    }
+
+    /// Build from already-parsed endpoints.
+    pub fn from_endpoints(endpoints: Vec<Endpoint>) -> NetworkBackend {
+        NetworkBackend {
+            inner: Arc::new(NetInner {
+                endpoints,
+                max_restarts_per_worker: 2,
+                restarts: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    /// Set the per-slot reconnect budget (default 2), mirroring
+    /// [`super::ProcessBackend::with_max_restarts`].  Builder-style;
+    /// must be called before the backend is handed to an engine.
+    pub fn with_max_restarts(mut self, max_restarts_per_worker: usize) -> NetworkBackend {
+        Arc::get_mut(&mut self.inner)
+            .expect("with_max_restarts must be called before the backend is shared")
+            .max_restarts_per_worker = max_restarts_per_worker;
+        self
+    }
+
+    /// Total reconnects across all worker slots so far.
+    pub fn restarts(&self) -> usize {
+        self.inner.restarts.load(Ordering::SeqCst)
+    }
+
+    /// How many endpoints this backend round-robins over.
+    pub fn n_endpoints(&self) -> usize {
+        self.inner.endpoints.len()
+    }
+}
+
+impl Backend for NetworkBackend {
+    fn name(&self) -> &str {
+        "network"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        // remote workers keep their own per-manifest session pools, so
+        // manifest-affine dispatch still pays; crashes stay remote
+        Capabilities { session_affinity: true, out_of_process: true }
+    }
+
+    /// Fail fast on a bad fleet: dial *every* endpoint once and demand
+    /// a valid worker hello from each.  Runs once, at engine
+    /// construction, so a typo'd address or a serve socket in the
+    /// worker list errors there instead of mid-sweep.
+    fn health(&self) -> Result<()> {
+        for ep in &self.inner.endpoints {
+            let (reader, _writer) = ep
+                .connect()
+                .with_context(|| format!("worker endpoint {ep} health probe failed"))?;
+            let mut reader = BufReader::new(reader);
+            wire::read_frame(&mut reader)
+                .and_then(|f| {
+                    f.ok_or_else(|| anyhow!("endpoint hung up before its hello frame"))
+                })
+                .and_then(|line| wire::check_hello(&line))
+                .with_context(|| format!("worker endpoint {ep} health probe failed"))?;
+        }
+        Ok(())
+    }
+
+    fn spawn_executor(&self, worker_id: usize) -> Box<dyn Executor> {
+        Box::new(NetExecutor {
+            inner: Arc::clone(&self.inner),
+            worker: worker_id,
+            // slot k starts at endpoint k % n: 1:1 when slots == endpoints
+            cursor: worker_id,
+            conn: None,
+            connected_once: false,
+            restarts_left: self.inner.max_restarts_per_worker,
+        })
+    }
+}
+
+// ------------------------------------------------------------ executor
+
+/// A live connection to one remote worker.
+struct NetConn {
+    reader: BufReader<Box<dyn Read + Send>>,
+    writer: Box<dyn Write + Send>,
+    peer: String,
+}
+
+struct NetExecutor {
+    inner: Arc<NetInner>,
+    worker: usize,
+    /// Next endpoint index to try (advances on every attempt, so a
+    /// reconnect after a failure moves on instead of redialing the
+    /// same dead address).
+    cursor: usize,
+    conn: Option<NetConn>,
+    /// The first connection is free; later ones consume budget.
+    connected_once: bool,
+    restarts_left: usize,
+}
+
+/// How one send/receive exchange with the remote worker ended.
+enum Exchange {
+    Record(RunRecord),
+    JobErr(String),
+    Transport(anyhow::Error),
+}
+
+impl NetExecutor {
+    /// Dial the next endpoint(s) round-robin: up to one full lap over
+    /// the list, validating the worker hello on each attempt.
+    fn connect_next(&mut self) -> Result<NetConn> {
+        let n = self.inner.endpoints.len();
+        let mut last_err = None;
+        for _ in 0..n {
+            let ep = self.inner.endpoints[self.cursor % n].clone();
+            self.cursor = self.cursor.wrapping_add(1);
+            let attempt = ep.connect().and_then(|(reader, writer)| {
+                let mut reader = BufReader::new(reader);
+                wire::read_frame(&mut reader)
+                    .and_then(|f| {
+                        f.ok_or_else(|| anyhow!("endpoint hung up before its hello frame"))
+                    })
+                    .and_then(|line| wire::check_hello(&line))?;
+                Ok(NetConn { reader, writer, peer: ep.to_string() })
+            });
+            match attempt {
+                Ok(conn) => return Ok(conn),
+                Err(e) => {
+                    last_err =
+                        Some(e.context(format!("dialing worker endpoint {ep}")));
+                }
+            }
+        }
+        Err(last_err.expect("endpoint list is never empty"))
+    }
+
+    /// The connection for this slot, dialing (budget-gated) if needed.
+    fn ensure_conn(&mut self) -> Result<&mut NetConn> {
+        if self.conn.is_none() {
+            if self.connected_once {
+                if self.restarts_left == 0 {
+                    bail!(
+                        "worker {}: restart budget exhausted ({} reconnects used)",
+                        self.worker,
+                        self.inner.max_restarts_per_worker
+                    );
+                }
+                self.restarts_left -= 1;
+                self.inner.restarts.fetch_add(1, Ordering::SeqCst);
+                eprintln!(
+                    "engine: reconnecting worker {} ({} reconnects left)",
+                    self.worker, self.restarts_left
+                );
+            }
+            let conn = self.connect_next()?;
+            self.connected_once = true;
+            self.conn = Some(conn);
+        }
+        Ok(self.conn.as_mut().expect("just ensured"))
+    }
+
+    /// One full job exchange: send the job frame, read the reply frame.
+    fn exchange(&mut self, job: &EngineJob, key: &str) -> Exchange {
+        let frame = wire::encode_job(key, job);
+        let conn = match self.ensure_conn() {
+            Ok(c) => c,
+            Err(e) => return Exchange::Transport(e),
+        };
+        if let Err(e) = wire::write_frame(&mut conn.writer, &frame) {
+            let peer = conn.peer.clone();
+            return Exchange::Transport(e.context(format!("sending job to worker {peer}")));
+        }
+        let reply = wire::read_frame(&mut conn.reader)
+            .and_then(|f| f.ok_or_else(|| anyhow!("worker {} hung up mid-job", conn.peer)));
+        let line = match reply {
+            Ok(line) => line,
+            Err(e) => return Exchange::Transport(e.context("reading worker reply")),
+        };
+        match wire::decode_reply(&line) {
+            Ok(wire::WireReply::Record { key: reply_key, record }) => {
+                if reply_key != key {
+                    return Exchange::Transport(anyhow!(
+                        "worker replied for key {reply_key} while {key} was in flight \
+                         (protocol desync)"
+                    ));
+                }
+                Exchange::Record(record)
+            }
+            Ok(wire::WireReply::Error { error, .. }) => Exchange::JobErr(error),
+            Err(e) => Exchange::Transport(e),
+        }
+    }
+
+    fn teardown_conn(&mut self) {
+        // remote workers outlive the engine; dropping the socket is the
+        // whole teardown (the worker's per-connection loop sees EOF)
+        self.conn = None;
+    }
+}
+
+impl Executor for NetExecutor {
+    fn run(&mut self, job: &EngineJob, key: &str) -> Result<RunRecord> {
+        match self.exchange(job, key) {
+            Exchange::Record(r) => Ok(r),
+            Exchange::JobErr(e) => Err(anyhow!("{e}")),
+            Exchange::Transport(first) => {
+                // the connection is unusable: drop it, then re-dispatch
+                // the in-flight job exactly once on a fresh connection —
+                // but only announce a re-dispatch that can actually
+                // happen (mirrors ProcessExecutor::run)
+                self.teardown_conn();
+                if self.connected_once && self.restarts_left == 0 {
+                    return Err(anyhow!(
+                        "worker {} connection lost mid-job on {} ({first:#}); restart \
+                         budget exhausted ({} reconnects used), not re-dispatching",
+                        self.worker,
+                        job.config.label,
+                        self.inner.max_restarts_per_worker
+                    ));
+                }
+                eprintln!(
+                    "engine: worker {} connection lost mid-job ({first:#}); \
+                     re-dispatching once",
+                    self.worker
+                );
+                match self.exchange(job, key) {
+                    Exchange::Record(r) => Ok(r),
+                    Exchange::JobErr(e) => Err(anyhow!("{e}")),
+                    Exchange::Transport(second) => {
+                        self.teardown_conn();
+                        Err(anyhow!(
+                            "worker {} failed twice on job {} (first: {first:#}; after \
+                             re-dispatch: {second:#})",
+                            self.worker,
+                            job.config.label
+                        ))
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoints_parse_tcp_and_unix_and_reject_garbage() {
+        match Endpoint::parse("127.0.0.1:7070").unwrap() {
+            Endpoint::Tcp(a) => assert_eq!(a, "127.0.0.1:7070"),
+            #[cfg(unix)]
+            other => panic!("parsed as {other:?}"),
+        }
+        #[cfg(unix)]
+        match Endpoint::parse("unix:/tmp/w.sock").unwrap() {
+            Endpoint::Unix(p) => assert_eq!(p, PathBuf::from("/tmp/w.sock")),
+            other => panic!("parsed as {other:?}"),
+        }
+        assert!(Endpoint::parse("no-port-here").is_err());
+        assert!(Endpoint::parse("").is_err());
+        #[cfg(unix)]
+        assert!(Endpoint::parse("unix:").is_err());
+    }
+
+    #[test]
+    fn backend_parses_endpoint_lists_and_rejects_empty() {
+        let b = NetworkBackend::new("127.0.0.1:1,127.0.0.1:2, 127.0.0.1:3").unwrap();
+        assert_eq!(b.n_endpoints(), 3);
+        assert_eq!(b.name(), "network");
+        assert!(b.capabilities().out_of_process);
+        assert!(NetworkBackend::new("").is_err());
+        assert!(NetworkBackend::new(" , ,").is_err());
+    }
+
+    #[test]
+    fn listener_binds_ephemeral_port_and_reports_dialable_addr() {
+        let l = Listener::bind(&Endpoint::Tcp("127.0.0.1:0".to_string())).unwrap();
+        let desc = l.local_desc();
+        assert!(desc.starts_with("127.0.0.1:"), "got {desc}");
+        assert_ne!(desc, "127.0.0.1:0", "ephemeral port must resolve");
+        // the reported address is dialable
+        let ep = Endpoint::parse(&desc).unwrap();
+        let dial = std::thread::spawn(move || ep.connect().map(|_| ()));
+        let (_r, _w, _peer) = l.accept().unwrap();
+        dial.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn health_rejects_unreachable_endpoints() {
+        // bind then drop: the port is (almost certainly) dead
+        let dead = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let b = NetworkBackend::new(&dead).unwrap();
+        let err = b.health().unwrap_err().to_string();
+        assert!(err.contains("health probe failed"), "got: {err}");
+    }
+}

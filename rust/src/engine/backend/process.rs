@@ -154,27 +154,45 @@ impl Backend for ProcessBackend {
         // hello then exits on EOF, so the probe never hangs on a child
         // that is merely waiting for jobs
         drop(child.stdin.take());
+        // drain stderr *concurrently* with the hello wait: a chatty
+        // child (verbose native init, debug logging) that writes more
+        // than the pipe buffer before its hello would otherwise block
+        // on a full pipe while we block on its stdout — deadlock.  Keep
+        // a bounded tail so a failed probe still names the real cause
+        // (e.g. a bad --artifacts path failing the registry open).
+        let stderr = child.stderr.take().expect("probe stderr is piped");
+        let drain = std::thread::spawn(move || {
+            let mut tail: VecDeque<String> = VecDeque::new();
+            for line in BufReader::new(stderr).lines() {
+                let Ok(line) = line else { break };
+                if tail.len() >= STDERR_TAIL_LINES {
+                    tail.pop_front();
+                }
+                tail.push_back(line);
+            }
+            tail
+        });
         let stdout = child.stdout.take().expect("probe stdout is piped");
         let mut reader = BufReader::new(stdout);
         let hello = wire::read_frame(&mut reader)
             .and_then(|f| f.ok_or_else(|| anyhow!("worker exited before its hello frame")))
             .and_then(|line| wire::check_hello(&line));
-        // on failure, collect the (now-dead) child's stderr so the
-        // probe error names the real cause — e.g. a bad --artifacts
-        // path failing the registry open before the hello frame
-        let mut stderr_tail = String::new();
         if hello.is_err() {
             let _ = child.kill();
-            if let Some(se) = child.stderr.take() {
-                use std::io::Read as _;
-                let _ = se.take(16 * 1024).read_to_string(&mut stderr_tail);
-            }
         }
         let _ = child.wait();
+        // the child is dead, so the drain hits EOF and the join is
+        // prompt; its tail feeds the error message
+        let tail = drain.join().unwrap_or_default();
         hello
-            .map_err(|e| match stderr_tail.trim() {
-                "" => e,
-                tail => e.context(format!("probe child stderr:\n{tail}")),
+            .map_err(|e| {
+                let tail: Vec<&str> =
+                    tail.iter().map(|l| l.trim()).filter(|l| !l.is_empty()).collect();
+                if tail.is_empty() {
+                    e
+                } else {
+                    e.context(format!("probe child stderr (tail):\n{}", tail.join("\n")))
+                }
             })
             .context("worker health probe failed (wrong binary or broken worker command?)")
     }
@@ -356,8 +374,23 @@ impl Executor for ProcessExecutor {
             Exchange::JobErr(e) => Err(anyhow!("{e}")),
             Exchange::Transport(first) => {
                 // the child is unusable: tear it down, then re-dispatch
-                // the in-flight job exactly once on a fresh child
+                // the in-flight job exactly once on a fresh child —
+                // but only announce a re-dispatch that can actually
+                // happen: with the restart budget exhausted there is no
+                // fresh child to spawn, so report the *first* failure's
+                // context (plus the budget note) instead of logging a
+                // phantom retry and burning a spawn attempt.
                 self.teardown_conn();
+                if self.spawned_once && self.restarts_left == 0 {
+                    return Err(anyhow!(
+                        "worker {} child lost mid-job on {} ({first:#}); restart budget \
+                         exhausted ({} restarts used), not re-dispatching{}",
+                        self.worker,
+                        job.config.label,
+                        self.inner.max_restarts_per_worker,
+                        self.stderr_context()
+                    ));
+                }
                 eprintln!(
                     "engine: worker {} child lost mid-job ({first:#}); re-dispatching once",
                     self.worker

@@ -92,26 +92,57 @@ pub fn read_frame(r: &mut impl BufRead) -> Result<Option<String>> {
 
 // -------------------------------------------------------------- hello
 
-/// The child's startup frame.
-pub fn hello_line() -> String {
+fn peer_hello_line(who: &str) -> String {
     let mut m = BTreeMap::new();
-    m.insert("hello".to_string(), Json::Str("umup-worker".to_string()));
+    m.insert("hello".to_string(), Json::Str(who.to_string()));
     m.insert("proto".to_string(), Json::Num(PROTO_VERSION as f64));
     Json::Obj(m).dump()
 }
 
-/// Validate a hello frame (wrong binary / wrong protocol fail fast).
-pub fn check_hello(line: &str) -> Result<()> {
-    let j = Json::parse(line).context("parsing worker hello frame")?;
+fn check_peer_hello(line: &str, expect: &str) -> Result<()> {
+    let j = Json::parse(line).context("parsing peer hello frame")?;
     let who = j.get("hello")?.as_str()?;
-    if who != "umup-worker" {
-        bail!("peer identifies as {who:?}, not an umup worker");
+    if who != expect {
+        // the two sockets a fleet exposes are easy to cross-wire; name
+        // the fix instead of just the mismatch
+        if who == "umup-serve" && expect == "umup-worker" {
+            bail!(
+                "peer is a `repro serve` control socket, not a worker — point \
+                 worker endpoints at `repro worker --listen` and `repro ctl` at \
+                 the serve socket"
+            );
+        }
+        bail!("peer identifies as {who:?}, not {expect:?}");
     }
     let proto = j.get("proto")?.as_f64()? as u64;
     if proto != PROTO_VERSION {
-        bail!("worker speaks wire protocol {proto}, this engine speaks {PROTO_VERSION}");
+        bail!("peer speaks wire protocol {proto}, this build speaks {PROTO_VERSION}");
     }
     Ok(())
+}
+
+/// The worker child's startup frame.
+pub fn hello_line() -> String {
+    peer_hello_line("umup-worker")
+}
+
+/// Validate a worker hello frame (wrong binary / wrong protocol fail
+/// fast).
+pub fn check_hello(line: &str) -> Result<()> {
+    check_peer_hello(line, "umup-worker")
+}
+
+/// The `repro serve` daemon's startup frame — deliberately distinct
+/// from the worker hello, so an engine mistakenly pointed at a control
+/// socket fails its handshake instead of feeding jobs to the
+/// coordinator (and vice versa).
+pub fn serve_hello_line() -> String {
+    peer_hello_line("umup-serve")
+}
+
+/// Validate a serve hello frame.
+pub fn check_serve_hello(line: &str) -> Result<()> {
+    check_peer_hello(line, "umup-serve")
 }
 
 // ---------------------------------------------------------------- jobs
@@ -202,6 +233,82 @@ pub fn decode_reply(line: &str) -> Result<WireReply> {
     Ok(WireReply::Record { key: entry.key, record: entry.record })
 }
 
+// ----------------------------------------------------------------- rpc
+//
+// Control-plane frames for the `repro serve` daemon: the same
+// `<len>\n<payload>\n` framing as the worker protocol, carrying
+// id-tagged request/reply envelopes instead of job/record lines.  A
+// client connects, reads the daemon's [`serve_hello_line`], then sends
+// any number of requests on one connection; every reply echoes the id
+// of the request it answers, so a client may pipeline.
+
+/// One decoded control-plane request.
+pub struct RpcRequest {
+    /// Client-chosen tag; the reply echoes it.
+    pub id: u64,
+    /// What to do: `submit`, `status`, `cancel`, `cache-stats`,
+    /// `shutdown` (the serve loop rejects anything else with an error
+    /// reply, never a dropped connection).
+    pub verb: String,
+    /// Verb-specific arguments (`Json::Null` when absent).
+    pub params: Json,
+}
+
+/// Encode a request frame payload.
+pub fn rpc_request_line(id: u64, verb: &str, params: &Json) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("id".to_string(), Json::Num(id as f64));
+    m.insert("params".to_string(), params.clone());
+    m.insert("verb".to_string(), Json::Str(verb.to_string()));
+    Json::Obj(m).dump()
+}
+
+/// Decode a request frame payload.
+pub fn decode_rpc_request(line: &str) -> Result<RpcRequest> {
+    let j = Json::parse(line).context("parsing rpc request frame")?;
+    let id = j.get("id")?.as_f64()? as u64;
+    let verb = j.get("verb")?.as_str()?.to_string();
+    let params = match j.get("params") {
+        Ok(p) => p.clone(),
+        Err(_) => Json::Null,
+    };
+    Ok(RpcRequest { id, verb, params })
+}
+
+/// One decoded control-plane reply.
+pub enum RpcReply {
+    /// The request succeeded; `result` is verb-specific.
+    Ok { id: u64, result: Json },
+    /// The request failed (the connection itself stays usable).
+    Err { id: u64, error: String },
+}
+
+/// Encode a success reply frame payload.
+pub fn rpc_ok_line(id: u64, result: &Json) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("id".to_string(), Json::Num(id as f64));
+    m.insert("result".to_string(), result.clone());
+    Json::Obj(m).dump()
+}
+
+/// Encode a failure reply frame payload.
+pub fn rpc_err_line(id: u64, error: &str) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("error".to_string(), Json::Str(error.to_string()));
+    m.insert("id".to_string(), Json::Num(id as f64));
+    Json::Obj(m).dump()
+}
+
+/// Decode a reply frame payload.
+pub fn decode_rpc_reply(line: &str) -> Result<RpcReply> {
+    let j = Json::parse(line).context("parsing rpc reply frame")?;
+    let id = j.get("id")?.as_f64()? as u64;
+    if let Ok(e) = j.get("error") {
+        return Ok(RpcReply::Err { id, error: e.as_str()?.to_string() });
+    }
+    Ok(RpcReply::Ok { id, result: j.get("result")?.clone() })
+}
+
 // --------------------------------------------------------------- serve
 
 /// A worker process's main loop: write the hello frame, then answer job
@@ -288,6 +395,52 @@ mod tests {
         assert!(check_hello("{\"hello\":\"someone-else\",\"proto\":1}").is_err());
         assert!(check_hello("{\"hello\":\"umup-worker\",\"proto\":999}").is_err());
         assert!(check_hello("usage: repro <command>").is_err());
+    }
+
+    #[test]
+    fn serve_hello_is_distinct_and_cross_wiring_names_the_fix() {
+        check_serve_hello(&serve_hello_line()).unwrap();
+        // engine dialed the control socket: error explains the fix
+        let err = check_hello(&serve_hello_line()).unwrap_err().to_string();
+        assert!(err.contains("control socket"), "unhelpful error: {err}");
+        // ctl dialed a worker socket: plain identity mismatch
+        assert!(check_serve_hello(&hello_line()).is_err());
+        assert!(check_serve_hello("{\"hello\":\"umup-serve\",\"proto\":999}").is_err());
+    }
+
+    #[test]
+    fn rpc_frames_round_trip_and_tag_ids() {
+        // request with params
+        let mut params = std::collections::BTreeMap::new();
+        params.insert("sweep".to_string(), Json::Num(3.0));
+        let params = Json::Obj(params);
+        let req = decode_rpc_request(&rpc_request_line(42, "status", &params)).unwrap();
+        assert_eq!(req.id, 42);
+        assert_eq!(req.verb, "status");
+        assert_eq!(req.params.get("sweep").unwrap().as_usize().unwrap(), 3);
+        // request without params decodes to Null, not an error
+        let req = decode_rpc_request("{\"id\":7,\"verb\":\"cache-stats\"}").unwrap();
+        assert_eq!(req.id, 7);
+        assert_eq!(req.params, Json::Null);
+        // ok reply
+        match decode_rpc_reply(&rpc_ok_line(42, &Json::Num(24.0))).unwrap() {
+            RpcReply::Ok { id, result } => {
+                assert_eq!(id, 42);
+                assert_eq!(result.as_usize().unwrap(), 24);
+            }
+            RpcReply::Err { .. } => panic!("ok reply decoded as error"),
+        }
+        // error reply (connection-level: stays decodable, id preserved)
+        match decode_rpc_reply(&rpc_err_line(42, "no such sweep")).unwrap() {
+            RpcReply::Err { id, error } => {
+                assert_eq!(id, 42);
+                assert!(error.contains("no such sweep"));
+            }
+            RpcReply::Ok { .. } => panic!("error reply decoded as ok"),
+        }
+        // garbage is an error, not a panic
+        assert!(decode_rpc_request("not json").is_err());
+        assert!(decode_rpc_reply("{\"id\":1}").is_err());
     }
 
     #[test]

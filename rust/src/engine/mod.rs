@@ -78,6 +78,30 @@
 //!   the in-flight job re-dispatched once, then reported as a normal
 //!   per-job `Err` outcome.  Child stderr is teed into the parent's
 //!   log with a `[worker k]` prefix.
+//! * [`NetworkBackend`] (CLI: `--backend network --workers
+//!   host:port,...`): the same wire frames over sockets.  Each worker
+//!   slot dials a long-lived `repro worker --listen` endpoint (TCP or
+//!   `unix:/path`) from a round-robin list; connection loss is
+//!   supervised exactly like a child crash — bounded reconnect budget,
+//!   one re-dispatch of the in-flight job, failover to the next
+//!   endpoint on redial.
+//!
+//! # Network topology
+//!
+//! The socket layer has two distinct planes, both framed by
+//! [`backend::wire`]:
+//!
+//! * the **data plane** — engine ⇄ worker job traffic: `repro worker
+//!   --listen <ep>` accepts any number of engines, serving each
+//!   connection on its own thread; [`NetworkBackend`] is the dialing
+//!   side.  The worker hello (`umup-worker`) authenticates it.
+//! * the **control plane** — client ⇄ coordinator RPC: `repro serve`
+//!   (the [`serve`] module) owns an engine and exposes
+//!   `submit`/`status`/`cancel`/`cache-stats`/`shutdown` verbs over
+//!   id-tagged RPC frames; `repro ctl <verb>` is the thin client.  The
+//!   serve hello (`umup-serve`) is deliberately distinct, so
+//!   cross-wiring the two socket kinds fails the handshake with an
+//!   error that names the fix.
 //!
 //! Contract points that hold for *every* backend: outcomes are
 //! persisted to the run cache by the engine worker **before** they are
@@ -86,8 +110,7 @@
 //! errors and panics are per-job, never fatal to the engine; and the
 //! scheduler queries [`Backend::capabilities`] once — a backend
 //! without per-manifest warm state opts out of affinity tracking and
-//! gets plain priority+FIFO dispatch.  A future network/cluster
-//! backend is one more trait impl; no engine core changes.
+//! gets plain priority+FIFO dispatch.
 //!
 //! # Everything underneath (unchanged contracts)
 //!
@@ -156,11 +179,15 @@ mod job;
 mod lru;
 mod pool;
 mod sched;
+pub mod serve;
 
 pub use crate::util::hash::fnv1a64;
 #[cfg(feature = "xla")]
 pub use backend::XlaBackend;
-pub use backend::{det_record, Backend, Capabilities, Executor, MockBackend, ProcessBackend};
+pub use backend::{
+    det_record, Backend, Capabilities, Endpoint, Executor, Listener, MockBackend, NetworkBackend,
+    ProcessBackend,
+};
 pub use cache::{
     gc, list_segments, parse_bytes, parse_duration, run_key, stats, CacheStats, CacheWatcher,
     Compactor, CompactorConfig, FilterStats, GcOptions, GcReport, RunCache, SegmentStats, Shard,

@@ -1,0 +1,563 @@
+//! The `repro serve` control plane: a long-lived daemon that owns one
+//! [`Engine`] and exposes it over a JSONL RPC socket.
+//!
+//! # Protocol
+//!
+//! Clients dial the endpoint ([`Endpoint`] syntax: `host:port` or
+//! `unix:/path`), read the daemon's `umup-serve` hello frame (see
+//! [`wire::serve_hello_line`] — deliberately distinct from the worker
+//! hello so cross-wired sockets fail their handshake), then exchange
+//! id-tagged request/reply frames ([`wire::rpc_request_line`] /
+//! [`wire::decode_rpc_reply`]).  Verbs:
+//!
+//! * `submit {jobs: [..]}` — job objects in the worker wire-frame
+//!   encoding ([`wire::encode_job`]); replies `{sweep, total}` with a
+//!   fresh sweep id.
+//! * `status {sweep?}` — one sweep's counters, or every live sweep
+//!   plus `cache_records` when `sweep` is omitted.
+//! * `cancel {sweep}` — unqueue the sweep's pending jobs; in-flight
+//!   jobs finish and are cached, so a cancelled sweep never leaves the
+//!   cache inconsistent.
+//! * `cache-stats` — refresh and report the run cache (records, and
+//!   when the engine persists to disk, watcher-side unique keys and
+//!   segment count).
+//! * `shutdown` — cancel and drain every sweep, reply, then exit the
+//!   daemon.
+//!
+//! Unknown verbs and bad params come back as tagged error replies; the
+//! connection stays usable.  Each accepted client gets its own thread,
+//! so a slow client never blocks another.
+//!
+//! # Threading
+//!
+//! In `xla` builds the [`Engine`] is `!Sync` (it keeps caller-thread
+//! session state), so the daemon funnels every verb through one
+//! *engine-owner thread* that constructs the engine itself, receives
+//! commands over a channel, and pumps live [`SweepHandle`]s between
+//! commands (outcomes drain and counters advance even while no client
+//! is connected).  Client threads only parse frames and wait on their
+//! reply channel — no engine state crosses threads.
+
+use std::collections::{BTreeMap, HashMap};
+use std::io::{BufRead, BufReader, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::data::{Corpus, CorpusConfig};
+use crate::runtime::{Manifest, Registry, Spec};
+use crate::util::Json;
+
+use super::backend::{wire, Backend, Endpoint, Listener};
+use super::cache::{corpus_json, CacheWatcher};
+use super::{Engine, EngineConfig, EngineJob, SweepHandle};
+
+/// Construction options for [`serve`].
+pub struct ServeOptions {
+    /// Where to listen: `host:port` (port 0 binds ephemeral) or
+    /// `unix:/path`.
+    pub endpoint: String,
+    /// The engine the daemon owns (workers, cache dir, resume, …).
+    pub engine: EngineConfig,
+    /// Artifact registry root; manifests named by submitted jobs are
+    /// resolved here first.
+    pub artifacts: PathBuf,
+    /// Generate real corpus tokens (and require real manifests) for
+    /// submitted jobs — needed for in-process execution.  Out-of-process
+    /// backends leave this off: workers regenerate corpora and load
+    /// manifests by name on their side, so the daemon only needs the
+    /// content addresses.
+    pub materialize_corpora: bool,
+}
+
+/// Run the daemon until a `shutdown` verb arrives.  `on_ready` fires
+/// once with the bound endpoint (the real port when binding `:0`)
+/// after the engine has passed its health probe.
+pub fn serve(
+    opts: ServeOptions,
+    backend: Arc<dyn Backend>,
+    on_ready: impl FnOnce(&str),
+) -> Result<()> {
+    let ep = Endpoint::parse(&opts.endpoint)?;
+    let listener = Listener::bind(&ep)?;
+    let desc = listener.local_desc();
+    let stop = Arc::new(AtomicBool::new(false));
+    let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
+    let (boot_tx, boot_rx) = mpsc::channel::<Result<(), String>>();
+    let engine_thread = {
+        let cfg = opts.engine.clone();
+        let artifacts = opts.artifacts.clone();
+        let materialize = opts.materialize_corpora;
+        let stop = Arc::clone(&stop);
+        let dial_back = desc.clone();
+        std::thread::spawn(move || {
+            engine_owner_loop(cfg, backend, artifacts, materialize, cmd_rx, boot_tx, stop, dial_back)
+        })
+    };
+    match boot_rx.recv() {
+        Ok(Ok(())) => {}
+        Ok(Err(e)) => {
+            let _ = engine_thread.join();
+            bail!("serve: engine failed to start: {e}");
+        }
+        Err(_) => {
+            let _ = engine_thread.join();
+            bail!("serve: engine thread died during startup");
+        }
+    }
+    on_ready(&desc);
+    loop {
+        let accepted = listener.accept();
+        if stop.load(Ordering::SeqCst) {
+            // the shutdown path self-dials to unblock this accept; the
+            // connection (if any) is dropped unserved
+            break;
+        }
+        match accepted {
+            Ok((r, w, _peer)) => {
+                let tx = cmd_tx.clone();
+                std::thread::spawn(move || {
+                    if let Err(e) = client_loop(BufReader::new(r), w, tx) {
+                        eprintln!("serve: client connection error: {e:#}");
+                    }
+                });
+            }
+            Err(e) => eprintln!("serve: accept failed: {e:#}"),
+        }
+    }
+    drop(cmd_tx);
+    engine_thread.join().map_err(|_| anyhow!("serve: engine thread panicked"))?;
+    Ok(())
+}
+
+// ------------------------------------------------------------ commands
+
+enum Cmd {
+    Submit { jobs: Vec<wire::WireJob>, reply: mpsc::Sender<Result<Json, String>> },
+    Status { sweep: Option<u64>, reply: mpsc::Sender<Result<Json, String>> },
+    Cancel { sweep: u64, reply: mpsc::Sender<Result<Json, String>> },
+    CacheStats { reply: mpsc::Sender<Result<Json, String>> },
+    Shutdown { reply: mpsc::Sender<Result<Json, String>> },
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn num(x: usize) -> Json {
+    Json::Num(x as f64)
+}
+
+// --------------------------------------------------- client connection
+
+/// One accepted client: hello, then request/reply frames until EOF.
+fn client_loop(
+    mut input: impl BufRead,
+    mut output: impl Write,
+    tx: mpsc::Sender<Cmd>,
+) -> Result<()> {
+    wire::write_frame(&mut output, &wire::serve_hello_line())?;
+    while let Some(line) = wire::read_frame(&mut input)? {
+        let req = match wire::decode_rpc_request(&line) {
+            Ok(r) => r,
+            Err(e) => {
+                // a malformed frame means the stream can't be trusted:
+                // answer (id 0 — the real one is unknowable) and hang up
+                let _ = wire::write_frame(&mut output, &wire::rpc_err_line(0, &format!("{e:#}")));
+                break;
+            }
+        };
+        let frame = match dispatch(&tx, &req) {
+            Ok(result) => wire::rpc_ok_line(req.id, &result),
+            Err(e) => wire::rpc_err_line(req.id, &e),
+        };
+        wire::write_frame(&mut output, &frame)?;
+    }
+    Ok(())
+}
+
+/// Parse one request into a [`Cmd`], round-trip it through the engine
+/// owner, and return the verb's result.
+fn dispatch(tx: &mpsc::Sender<Cmd>, req: &wire::RpcRequest) -> Result<Json, String> {
+    let (reply_tx, reply_rx) = mpsc::channel();
+    let cmd = match req.verb.as_str() {
+        "submit" => {
+            let arr = req
+                .params
+                .get("jobs")
+                .and_then(|j| Ok(j.as_arr()?.to_vec()))
+                .map_err(|e| format!("submit params: {e:#}"))?;
+            let mut jobs = Vec::with_capacity(arr.len());
+            for el in &arr {
+                jobs.push(
+                    wire::decode_job(&el.dump()).map_err(|e| format!("submit job: {e:#}"))?,
+                );
+            }
+            Cmd::Submit { jobs, reply: reply_tx }
+        }
+        "status" => {
+            let sweep = match req.params.get("sweep") {
+                Ok(s) => {
+                    Some(s.as_usize().map_err(|e| format!("status params: {e:#}"))? as u64)
+                }
+                Err(_) => None,
+            };
+            Cmd::Status { sweep, reply: reply_tx }
+        }
+        "cancel" => {
+            let sweep = req
+                .params
+                .get("sweep")
+                .and_then(|s| s.as_usize())
+                .map_err(|e| format!("cancel params: {e:#}"))? as u64;
+            Cmd::Cancel { sweep, reply: reply_tx }
+        }
+        "cache-stats" => Cmd::CacheStats { reply: reply_tx },
+        "shutdown" => Cmd::Shutdown { reply: reply_tx },
+        other => {
+            return Err(format!(
+                "unknown verb {other:?} (expected submit/status/cancel/cache-stats/shutdown)"
+            ))
+        }
+    };
+    tx.send(cmd).map_err(|_| "server is shutting down".to_string())?;
+    reply_rx.recv().map_err(|_| "server dropped the request".to_string())?
+}
+
+// ----------------------------------------------------- engine owner
+
+#[allow(clippy::too_many_arguments)]
+fn engine_owner_loop(
+    cfg: EngineConfig,
+    backend: Arc<dyn Backend>,
+    artifacts: PathBuf,
+    materialize: bool,
+    cmd_rx: mpsc::Receiver<Cmd>,
+    boot_tx: mpsc::Sender<Result<(), String>>,
+    stop: Arc<AtomicBool>,
+    dial_back: String,
+) {
+    let cache_dir = cfg.cache_dir.clone();
+    let engine = match Engine::with_backend(cfg, backend) {
+        Ok(e) => {
+            let _ = boot_tx.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = boot_tx.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+    let registry = Registry::open(&artifacts).ok();
+    let mut synthetic: HashMap<String, Arc<Manifest>> = HashMap::new();
+    let mut corpora: HashMap<String, Arc<Corpus>> = HashMap::new();
+    let mut sweeps: BTreeMap<u64, SweepHandle> = BTreeMap::new();
+    let mut watcher = cache_dir.as_deref().map(CacheWatcher::new);
+    let mut next_sweep: u64 = 1;
+    loop {
+        match cmd_rx.recv_timeout(Duration::from_millis(10)) {
+            Ok(Cmd::Submit { jobs, reply }) => {
+                let r = do_submit(
+                    &engine,
+                    registry.as_ref(),
+                    &mut synthetic,
+                    &mut corpora,
+                    materialize,
+                    jobs,
+                    &mut sweeps,
+                    &mut next_sweep,
+                );
+                let _ = reply.send(r);
+            }
+            Ok(Cmd::Status { sweep, reply }) => {
+                let _ = reply.send(do_status(&engine, &sweeps, sweep));
+            }
+            Ok(Cmd::Cancel { sweep, reply }) => {
+                let r = match sweeps.get_mut(&sweep) {
+                    Some(h) => {
+                        h.cancel();
+                        Ok(obj(vec![("cancelled", Json::Bool(true)), ("sweep", num(sweep as usize))]))
+                    }
+                    None => Err(format!("no such sweep {sweep}")),
+                };
+                let _ = reply.send(r);
+            }
+            Ok(Cmd::CacheStats { reply }) => {
+                engine.refresh_cache();
+                let mut pairs = vec![("records", num(engine.cache_len()))];
+                if let Some(w) = watcher.as_mut() {
+                    w.poll();
+                    pairs.push(("segments", num(w.segments())));
+                    pairs.push(("unique_keys", num(w.unique_keys())));
+                }
+                let _ = reply.send(Ok(obj(pairs)));
+            }
+            Ok(Cmd::Shutdown { reply }) => {
+                // cancel everything queued, then drain fully: in-flight
+                // jobs complete and are cached before the daemon exits
+                for h in sweeps.values_mut() {
+                    h.cancel();
+                }
+                for h in sweeps.values_mut() {
+                    while h.recv().is_some() {}
+                }
+                let _ = reply.send(Ok(obj(vec![
+                    ("shutdown", Json::Bool(true)),
+                    ("sweeps_drained", num(sweeps.len())),
+                ])));
+                stop.store(true, Ordering::SeqCst);
+                // unblock the accept loop so serve() can return
+                if let Ok(ep) = Endpoint::parse(&dial_back) {
+                    let _ = ep.connect();
+                }
+                break;
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+        // pump live sweeps between commands: outcomes drain (the worker
+        // already cached them) and the per-sweep counters stay current
+        for h in sweeps.values_mut() {
+            while h.try_recv().is_some() {}
+        }
+    }
+    // dropping the engine joins its workers
+    drop(engine);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn do_submit(
+    engine: &Engine,
+    registry: Option<&Registry>,
+    synthetic: &mut HashMap<String, Arc<Manifest>>,
+    corpora: &mut HashMap<String, Arc<Corpus>>,
+    materialize: bool,
+    jobs: Vec<wire::WireJob>,
+    sweeps: &mut BTreeMap<u64, SweepHandle>,
+    next_sweep: &mut u64,
+) -> Result<Json, String> {
+    let mut engine_jobs = Vec::with_capacity(jobs.len());
+    for wj in jobs {
+        let man = resolve_manifest(registry, synthetic, materialize, &wj.manifest)?;
+        let corpus = resolve_corpus(corpora, materialize, wj.corpus);
+        let job = EngineJob::new(man, corpus, wj.config, Vec::new());
+        // the run key is recomputed server-side; a mismatch means the
+        // client and daemon disagree on the job's identity (reject the
+        // whole submit rather than cache under a surprising address)
+        if job.key() != wj.key {
+            return Err(format!(
+                "job key mismatch for {:?}: client sent {}, daemon computed {}",
+                job.config.label,
+                wj.key,
+                job.key()
+            ));
+        }
+        engine_jobs.push(job);
+    }
+    let total = engine_jobs.len();
+    let handle = engine.submit(engine_jobs);
+    let id = *next_sweep;
+    *next_sweep += 1;
+    sweeps.insert(id, handle);
+    Ok(obj(vec![("sweep", num(id as usize)), ("total", num(total))]))
+}
+
+fn resolve_manifest(
+    registry: Option<&Registry>,
+    synthetic: &mut HashMap<String, Arc<Manifest>>,
+    materialize: bool,
+    name: &str,
+) -> Result<Arc<Manifest>, String> {
+    if let Some(reg) = registry {
+        if let Ok(m) = reg.manifest(name) {
+            return Ok(m);
+        }
+    }
+    if materialize {
+        return Err(format!(
+            "manifest {name:?} not found in the artifact registry (in-process execution \
+             needs real artifacts; out-of-process workers resolve manifests themselves)"
+        ));
+    }
+    Ok(Arc::clone(
+        synthetic.entry(name.to_string()).or_insert_with(|| Arc::new(synthetic_manifest(name))),
+    ))
+}
+
+/// A shell manifest for out-of-process execution: only the *name* feeds
+/// the run key ([`crate::engine::run_key`] hashes manifest name, corpus
+/// config and canonical run config), and workers load the real artifact
+/// by name on their side — so a placeholder keeps every content address
+/// intact without requiring artifacts on the daemon host.
+fn synthetic_manifest(name: &str) -> Manifest {
+    Manifest {
+        name: name.to_string(),
+        dir: PathBuf::from("."),
+        spec: Spec {
+            width: 32,
+            depth: 2,
+            batch: 4,
+            seq: 16,
+            vocab: 64,
+            head_dim: 16,
+            trainable_norms: false,
+        },
+        tensors: vec![],
+        n_params: 0,
+        state_ext_len: 1,
+        loss_offset: 0,
+        rms_offset: 1,
+        scale_sites: BTreeMap::new(),
+        n_scale_sites: 0,
+        quant_sites: BTreeMap::new(),
+        n_quant_sites: 0,
+        rms_sites: vec![],
+    }
+}
+
+fn resolve_corpus(
+    corpora: &mut HashMap<String, Arc<Corpus>>,
+    materialize: bool,
+    config: CorpusConfig,
+) -> Arc<Corpus> {
+    let key = corpus_json(&config).dump();
+    Arc::clone(corpora.entry(key).or_insert_with(|| {
+        Arc::new(if materialize {
+            Corpus::generate(config)
+        } else {
+            // out-of-process workers regenerate tokens from the config;
+            // the daemon only hashes it into run keys
+            Corpus { config, tokens: Vec::new(), n_train: 0 }
+        })
+    }))
+}
+
+fn sweep_json(id: u64, h: &SweepHandle) -> Json {
+    obj(vec![
+        ("cache_hits", num(h.cache_hits)),
+        ("cancelled", num(h.cancelled)),
+        ("deduped", num(h.deduped)),
+        ("done", Json::Bool(h.is_done())),
+        ("emitted", num(h.emitted())),
+        ("executed", num(h.executed)),
+        ("failed", num(h.failed)),
+        ("skipped", num(h.skipped)),
+        ("sweep", num(id as usize)),
+        ("total", num(h.len())),
+    ])
+}
+
+fn do_status(
+    engine: &Engine,
+    sweeps: &BTreeMap<u64, SweepHandle>,
+    sweep: Option<u64>,
+) -> Result<Json, String> {
+    match sweep {
+        Some(id) => match sweeps.get(&id) {
+            Some(h) => Ok(sweep_json(id, h)),
+            None => Err(format!("no such sweep {id}")),
+        },
+        None => {
+            let arr: Vec<Json> = sweeps.iter().map(|(id, h)| sweep_json(*id, h)).collect();
+            Ok(obj(vec![
+                ("cache_records", num(engine.cache_len())),
+                ("sweeps", Json::Arr(arr)),
+            ]))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::MockBackend;
+
+    /// End-to-end over loopback with no subprocess: hello handshake,
+    /// submit/status/unknown-verb/shutdown round trips, ids echoed.
+    #[test]
+    fn serve_round_trips_rpc_over_loopback() {
+        let opts = ServeOptions {
+            endpoint: "127.0.0.1:0".to_string(),
+            engine: EngineConfig { workers: 1, ..EngineConfig::default() },
+            artifacts: PathBuf::from("definitely-missing-artifacts"),
+            materialize_corpora: false,
+        };
+        let backend = Arc::new(MockBackend::deterministic());
+        let (desc_tx, desc_rx) = mpsc::channel();
+        let daemon = std::thread::spawn(move || {
+            serve(opts, backend, move |d| {
+                let _ = desc_tx.send(d.to_string());
+            })
+        });
+        let desc = desc_rx.recv().expect("serve never became ready");
+        let ep = Endpoint::parse(&desc).unwrap();
+        let (r, mut w) = ep.connect().unwrap();
+        let mut r = BufReader::new(r);
+        let hello = wire::read_frame(&mut r).unwrap().expect("serve hello");
+        wire::check_serve_hello(&hello).unwrap();
+
+        fn ask(
+            r: &mut impl BufRead,
+            w: &mut impl Write,
+            id: u64,
+            verb: &str,
+            params: &Json,
+        ) -> wire::RpcReply {
+            wire::write_frame(w, &wire::rpc_request_line(id, verb, params)).unwrap();
+            let line = wire::read_frame(r).unwrap().expect("reply frame");
+            wire::decode_rpc_reply(&line).unwrap()
+        }
+
+        // empty submit: a sweep that is immediately done
+        let params = Json::parse("{\"jobs\":[]}").unwrap();
+        match ask(&mut r, &mut w, 11, "submit", &params) {
+            wire::RpcReply::Ok { id, result } => {
+                assert_eq!(id, 11);
+                assert_eq!(result.get("sweep").unwrap().as_usize().unwrap(), 1);
+                assert_eq!(result.get("total").unwrap().as_usize().unwrap(), 0);
+            }
+            wire::RpcReply::Err { error, .. } => panic!("submit failed: {error}"),
+        }
+        // status for that sweep
+        let params = Json::parse("{\"sweep\":1}").unwrap();
+        match ask(&mut r, &mut w, 12, "status", &params) {
+            wire::RpcReply::Ok { id, result } => {
+                assert_eq!(id, 12);
+                assert!(result.get("done").unwrap().as_bool().unwrap());
+            }
+            wire::RpcReply::Err { error, .. } => panic!("status failed: {error}"),
+        }
+        // unknown sweep and unknown verb: tagged errors, connection lives
+        match ask(&mut r, &mut w, 13, "cancel", &Json::parse("{\"sweep\":99}").unwrap()) {
+            wire::RpcReply::Err { id, error } => {
+                assert_eq!(id, 13);
+                assert!(error.contains("no such sweep"), "got: {error}");
+            }
+            wire::RpcReply::Ok { .. } => panic!("cancel of unknown sweep succeeded"),
+        }
+        match ask(&mut r, &mut w, 14, "frobnicate", &Json::Null) {
+            wire::RpcReply::Err { id, error } => {
+                assert_eq!(id, 14);
+                assert!(error.contains("unknown verb"), "got: {error}");
+            }
+            wire::RpcReply::Ok { .. } => panic!("unknown verb succeeded"),
+        }
+        // cache-stats on the in-memory cache
+        match ask(&mut r, &mut w, 15, "cache-stats", &Json::Null) {
+            wire::RpcReply::Ok { id, result } => {
+                assert_eq!(id, 15);
+                assert_eq!(result.get("records").unwrap().as_usize().unwrap(), 0);
+            }
+            wire::RpcReply::Err { error, .. } => panic!("cache-stats failed: {error}"),
+        }
+        // shutdown: ok reply, then the daemon thread exits cleanly
+        match ask(&mut r, &mut w, 16, "shutdown", &Json::Null) {
+            wire::RpcReply::Ok { id, .. } => assert_eq!(id, 16),
+            wire::RpcReply::Err { error, .. } => panic!("shutdown failed: {error}"),
+        }
+        daemon.join().expect("daemon thread panicked").expect("serve returned an error");
+    }
+}

@@ -8,17 +8,26 @@
 //!   drive --shards n [exp opts] spawn/monitor/restart n shard processes
 //!   worker [--mock]             serve engine jobs over stdin/stdout
 //!                               (the child side of --backend process)
+//!   worker --listen <ep>        serve engine jobs on a TCP/Unix socket
+//!                               (the dialed side of --backend network)
+//!   serve  [--addr ep]          long-lived coordinator daemon: owns an
+//!                               engine, exposes submit/status/cancel/
+//!                               cache-stats/shutdown over a JSONL RPC
+//!                               socket
+//!   ctl    <verb> --addr ep     one RPC against a live `repro serve`
 //!   cache <stats|gc|compact>    run-cache lifecycle (segments, GC,
 //!                               background-style tiered merges)
 //!   report                      collate results/ into EXPERIMENTS-style md
 //!
 //! Execution backends: `train`/`exp`/`drive` take
-//! `--backend in-process|process|mock`.  `in-process` (default) runs
-//! jobs on this process's pooled XLA sessions; `process` spawns one
-//! `repro worker` child per engine worker slot and ships jobs over a
-//! length-prefixed JSONL pipe protocol (crash-supervised, bounded
-//! restarts); `mock` is the deterministic no-op executor used by tests
-//! and benches.
+//! `--backend in-process|process|network|mock`.  `in-process` (default)
+//! runs jobs on this process's pooled XLA sessions; `process` spawns
+//! one `repro worker` child per engine worker slot and ships jobs over
+//! a length-prefixed JSONL pipe protocol (crash-supervised, bounded
+//! restarts); `network` dials the same frames to long-lived
+//! `repro worker --listen` endpoints (`--workers host:port,...`,
+//! round-robin failover, bounded reconnects); `mock` is the
+//! deterministic no-op executor used by tests and benches.
 //!
 //! Dependency-light by design (offline env): argument parsing is the
 //! in-tree `Args` helper below.
@@ -71,8 +80,8 @@ impl Args {
         self.flags.contains_key(key)
     }
 
-    /// The engine's run-cache flags, shared by `train` and `exp`.
-    #[cfg_attr(not(feature = "xla"), allow(dead_code))]
+    /// The engine's run-cache flags, shared by `train`, `exp` and
+    /// `serve`.
     fn cache_opts(&self) -> (Option<PathBuf>, bool) {
         (self.flags.get("cache-dir").map(PathBuf::from), self.has("resume"))
     }
@@ -97,6 +106,8 @@ fn main() -> Result<()> {
         "exp" => exp(&args),
         "drive" => drive_cmd(&args),
         "worker" => worker_cmd(&args),
+        "serve" => serve_cmd(&args),
+        "ctl" => ctl_cmd(&args),
         "cache" => cache_cmd(&args),
         "report" => report(&args),
         "corpus" => corpus_info(&args),
@@ -117,6 +128,17 @@ fn main() -> Result<()> {
                  \x20                             --bg-compact tier-merges idle segments)\n\
                  \x20 worker  [--mock] [--artifacts DIR] [--sessions N]   serve engine jobs on\n\
                  \x20                             stdin/stdout (spawned by --backend process)\n\
+                 \x20 worker  --listen HOST:PORT|unix:/path [--mock]      serve engine jobs on a\n\
+                 \x20                             socket, one thread per connected engine\n\
+                 \x20                             (the dialed side of --backend network)\n\
+                 \x20 serve   [--addr HOST:PORT|unix:/path] [--workers N|EP,EP,...]\n\
+                 \x20         [--backend network|process|mock|in-process] [--cache-dir DIR]\n\
+                 \x20         [--resume]  long-lived coordinator daemon: owns one engine and\n\
+                 \x20                             answers submit/status/cancel/cache-stats/\n\
+                 \x20                             shutdown RPCs (prints `serving ADDR` when up)\n\
+                 \x20 ctl     <submit|status|cancel|cache-stats|shutdown> --addr ADDR\n\
+                 \x20         [--jobs FILE] [--sweep N]  one RPC against a live serve daemon;\n\
+                 \x20                             prints the JSON result on stdout\n\
                  \x20 cache   stats [--cache-dir DIR]                     segment/key statistics\n\
                  \x20 cache   gc    [--cache-dir DIR] [--older-than 30d] [--manifest NAME]\n\
                  \x20               [--max-bytes 512m] [--chunk-entries N] [--dry-run]\n\
@@ -134,6 +156,20 @@ fn main() -> Result<()> {
                  \x20 bounded per-worker budget (--max-restarts, default 2), the in-flight\n\
                  \x20 job is re-dispatched once, and child stderr is teed here with a\n\
                  \x20 [worker k] prefix.  mock is the deterministic test executor.\n\n\
+                 network topology:\n\
+                 \x20 --backend network ships the same wire frames over sockets: start\n\
+                 \x20 long-lived workers with `repro worker --listen HOST:PORT` (or\n\
+                 \x20 unix:/path), then point an engine at them with\n\
+                 \x20 --workers HOST:PORT,HOST:PORT,... — worker slot k starts at endpoint\n\
+                 \x20 k mod n and every reconnect advances round-robin, so a dead endpoint\n\
+                 \x20 fails over instead of pinning its slot.  Reconnects share the process\n\
+                 \x20 backend's bounded --max-restarts budget.  For a persistent\n\
+                 \x20 coordinator, `repro serve` owns the engine and exposes an RPC socket\n\
+                 \x20 (hello `umup-serve`, deliberately distinct from the worker hello, so\n\
+                 \x20 cross-wired sockets fail their handshake); `repro ctl <verb> --addr A`\n\
+                 \x20 is the client: submit --jobs FILE (wire-job JSONL), status [--sweep N],\n\
+                 \x20 cancel --sweep N (queued jobs unqueue; in-flight jobs finish and are\n\
+                 \x20 cached), cache-stats, shutdown (drains sweeps, then exits).\n\n\
                  cache layout & lifecycle:\n\
                  \x20 train/exp take [--cache-dir DIR] [--resume].  --cache-dir records each\n\
                  \x20 completed run as one JSONL line, content-addressed by (manifest, corpus,\n\
@@ -293,7 +329,14 @@ fn exp(args: &Args) -> Result<()> {
         println!("{}", list_experiments());
         return Ok(());
     }
-    let workers: usize = args.get("workers", "4").parse()?;
+    let workers_flag = args.get("workers", "4");
+    // --workers may also be a network endpoint list (host:port,...)
+    // under --backend network; then one engine slot per endpoint
+    let workers: usize = if workers_flag.contains(':') {
+        workers_flag.split(',').filter(|s| !s.trim().is_empty()).count()
+    } else {
+        workers_flag.parse().context("bad --workers")?
+    };
     let out = args.get("out", "results");
     let shard = args.shard()?;
     let (mut cache_dir, mut resume) = args.cache_opts();
@@ -478,7 +521,7 @@ fn make_backend(
 ) -> Result<Option<std::sync::Arc<dyn umup::engine::Backend>>> {
     use std::sync::Arc;
 
-    use umup::engine::{MockBackend, ProcessBackend};
+    use umup::engine::{MockBackend, NetworkBackend, ProcessBackend};
 
     Ok(match args.get("backend", "in-process").as_str() {
         "in-process" => None,
@@ -493,8 +536,22 @@ fn make_backend(
                     .with_max_restarts(max_restarts),
             ))
         }
+        "network" => {
+            let max_restarts: usize =
+                args.get("max-restarts", "2").parse().context("bad --max-restarts")?;
+            let endpoints = args.get("workers", "");
+            if !endpoints.contains(':') {
+                bail!(
+                    "--backend network needs --workers host:port[,host:port,...] (or \
+                     unix:/path) — the endpoint list doubles as the engine worker count"
+                );
+            }
+            Some(Arc::new(NetworkBackend::new(&endpoints)?.with_max_restarts(max_restarts)))
+        }
         "mock" => Some(Arc::new(MockBackend::deterministic())),
-        other => bail!("unknown --backend {other:?} (expected in-process, process or mock)"),
+        other => {
+            bail!("unknown --backend {other:?} (expected in-process, process, network or mock)")
+        }
     })
 }
 
@@ -526,10 +583,69 @@ fn print_engine_stats(engine: &umup::engine::Engine) {
 /// the XLA executor for the canonical deterministic mock (works in
 /// no-XLA builds; used by the backend test suite and benches).
 fn worker_cmd(args: &Args) -> Result<()> {
+    if let Some(listen) = args.flags.get("listen") {
+        return worker_listen(args, &listen.clone());
+    }
     if args.has("mock") {
         return worker_mock_serve();
     }
     worker_xla_serve(args)
+}
+
+/// `repro worker --listen <endpoint>`: accept any number of engines on
+/// a TCP/Unix socket, serving each connection's wire-protocol stream on
+/// its own thread — the dialed side of `--backend network`.  The bound
+/// endpoint (real port when listening on `:0`) is announced as one
+/// `listening <addr>` line on stdout, so spawners can read it back.
+fn worker_listen(args: &Args, listen: &str) -> Result<()> {
+    use std::io::{BufReader, Write as _};
+
+    use umup::engine::{Endpoint, Listener};
+
+    let mock = args.has("mock");
+    if !mock && !cfg!(feature = "xla") {
+        bail!(
+            "`repro worker --listen` without --mock needs the XLA runtime; rebuild \
+             without --no-default-features (or pass --mock)"
+        );
+    }
+    let ep = Endpoint::parse(listen).context("bad --listen endpoint")?;
+    let listener = Listener::bind(&ep)?;
+    println!("listening {}", listener.local_desc());
+    std::io::stdout().flush()?;
+    loop {
+        let (r, w, peer) = match listener.accept() {
+            Ok(x) => x,
+            Err(e) => {
+                eprintln!("worker: accept failed: {e:#}");
+                continue;
+            }
+        };
+        eprintln!("worker: engine connected ({peer})");
+        if mock {
+            std::thread::spawn(move || {
+                if let Err(e) = mock_serve_loop(BufReader::new(r), w) {
+                    eprintln!("worker: connection ended with error: {e:#}");
+                }
+            });
+        } else {
+            #[cfg(feature = "xla")]
+            {
+                let artifacts = args.get("artifacts", "artifacts");
+                let cap: usize = args.get("sessions", "8").parse().context("bad --sessions")?;
+                std::thread::spawn(move || {
+                    if let Err(e) = worker_xla_serve_on(&artifacts, cap, BufReader::new(r), w) {
+                        eprintln!("worker: connection ended with error: {e:#}");
+                    }
+                });
+            }
+            #[cfg(not(feature = "xla"))]
+            {
+                let _ = (r, w);
+                unreachable!("non-mock --listen was rejected above without the xla feature");
+            }
+        }
+    }
 }
 
 /// The deterministic mock worker loop, with env-armed failure injection
@@ -540,9 +656,40 @@ fn worker_cmd(args: &Args) -> Result<()> {
 /// fails; everyone else — including this child's own restart — serves
 /// normally).  Without `UMUP_MOCK_FAIL_ONCE` the mode fires on every
 /// job, which is how restart-budget exhaustion is exercised.
+///
+/// Two more knobs serve the robustness suites:
+/// `UMUP_MOCK_STDERR_SPAM=<bytes>` floods stderr *before* the hello
+/// frame (stdio mode only — regression fuel for the health probe's
+/// concurrent stderr drain), and `UMUP_MOCK_SLEEP_MS=<ms>` sleeps per
+/// job so cancellation races have something to catch.
 fn worker_mock_serve() -> Result<()> {
     use std::io::Write as _;
 
+    if let Ok(n) = std::env::var("UMUP_MOCK_STDERR_SPAM") {
+        // write the requested byte count as 64-byte newline-terminated
+        // lines; past the OS pipe buffer (~64KiB) this blocks unless
+        // the parent drains stderr while waiting for the hello
+        let mut left: usize = n.parse().context("bad UMUP_MOCK_STDERR_SPAM")?;
+        let stderr = std::io::stderr();
+        let mut err = stderr.lock();
+        let line = [b'x'; 63];
+        while left > 0 {
+            err.write_all(&line)?;
+            err.write_all(b"\n")?;
+            left = left.saturating_sub(64);
+        }
+        err.flush()?;
+    }
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    mock_serve_loop(stdin.lock(), stdout.lock())
+}
+
+/// One mock wire-protocol stream: hello, then deterministic replies
+/// (with the env-armed failure injection above) until EOF.  Generic
+/// over the transport so stdio workers and `--listen` socket
+/// connections share it.
+fn mock_serve_loop(mut input: impl std::io::BufRead, mut output: impl std::io::Write) -> Result<()> {
     use umup::engine::backend::wire;
     use umup::engine::det_record;
 
@@ -557,11 +704,11 @@ fn worker_mock_serve() -> Result<()> {
             Err(_) => true,
         }
     };
+    let sleep_ms: u64 = std::env::var("UMUP_MOCK_SLEEP_MS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
 
-    let stdin = std::io::stdin();
-    let stdout = std::io::stdout();
-    let mut input = stdin.lock();
-    let mut output = stdout.lock();
     wire::write_frame(&mut output, &wire::hello_line())?;
     while let Some(line) = wire::read_frame(&mut input)? {
         let job = wire::decode_job(&line)?;
@@ -601,6 +748,9 @@ fn worker_mock_serve() -> Result<()> {
                 }
             }
         }
+        if sleep_ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(sleep_ms));
+        }
         let rec = det_record(&job.config);
         wire::write_frame(&mut output, &wire::ok_reply_line(&job.key, &job.manifest, &rec))?;
     }
@@ -611,6 +761,23 @@ fn worker_mock_serve() -> Result<()> {
 /// own artifact registry / corpus cache / LRU session pool and train.
 #[cfg(feature = "xla")]
 fn worker_xla_serve(args: &Args) -> Result<()> {
+    let artifacts = args.get("artifacts", "artifacts");
+    let cap: usize = args.get("sessions", "8").parse().context("bad --sessions")?;
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    worker_xla_serve_on(&artifacts, cap, stdin.lock(), stdout.lock())
+}
+
+/// One real-worker wire-protocol stream over any transport (stdio for
+/// `--backend process` children, a socket connection for `--listen`):
+/// each stream keeps its own LRU session pool and corpus cache.
+#[cfg(feature = "xla")]
+fn worker_xla_serve_on(
+    artifacts: &str,
+    cap: usize,
+    input: impl std::io::BufRead,
+    output: impl std::io::Write,
+) -> Result<()> {
     use std::collections::HashMap;
     use std::sync::Arc;
 
@@ -622,15 +789,12 @@ fn worker_xla_serve(args: &Args) -> Result<()> {
     // open the registry *before* the hello frame: a bad --artifacts
     // path kills the handshake (and therefore the parent's health
     // probe) instead of the first job
-    let reg = Registry::open(Path::new(&args.get("artifacts", "artifacts")))?;
-    let cap: usize = args.get("sessions", "8").parse().context("bad --sessions")?;
+    let reg = Registry::open(Path::new(artifacts))?;
     let mut sessions: LruPool<Runner> = LruPool::new(cap);
     // corpora are deterministic functions of their generator config;
     // cache them per config like the parent's ExpContext does
     let mut corpora: HashMap<String, Arc<Corpus>> = HashMap::new();
-    let stdin = std::io::stdin();
-    let stdout = std::io::stdout();
-    wire::serve(stdin.lock(), stdout.lock(), |job| {
+    wire::serve(input, output, |job| {
         let man = reg.manifest(&job.manifest)?;
         let corpus = Arc::clone(
             corpora
@@ -653,6 +817,157 @@ fn worker_xla_serve(_args: &Args) -> Result<()> {
         "`repro worker` without --mock needs the XLA runtime; rebuild without \
          --no-default-features (or pass --mock for the deterministic test executor)"
     )
+}
+
+/// `repro serve`: the long-lived coordinator daemon — owns one engine
+/// (over any backend) and answers submit/status/cancel/cache-stats/
+/// shutdown RPCs on a JSONL socket (`repro ctl` is the client; the
+/// protocol lives in `umup::engine::serve`).
+fn serve_cmd(args: &Args) -> Result<()> {
+    use std::io::Write as _;
+    use std::sync::Arc;
+
+    use umup::engine::{serve, Backend, EngineConfig, MockBackend, NetworkBackend, ProcessBackend};
+
+    let addr = args.get("addr", "127.0.0.1:0");
+    let workers_flag = args.get("workers", "4");
+    // an endpoint list implies the network backend; a bare count
+    // defaults to mock (serve works in no-XLA builds)
+    let endpoint_list = workers_flag.contains(':');
+    let backend_flag = args.get("backend", if endpoint_list { "network" } else { "mock" });
+    let max_restarts: usize =
+        args.get("max-restarts", "2").parse().context("bad --max-restarts")?;
+    let artifacts = args.get("artifacts", "artifacts");
+    let sessions = EngineConfig::default().max_sessions_per_worker;
+    let (workers, backend): (usize, Arc<dyn Backend>) = match backend_flag.as_str() {
+        "network" => {
+            if !endpoint_list {
+                bail!(
+                    "--backend network needs --workers host:port[,host:port,...] (or \
+                     unix:/path)"
+                );
+            }
+            let b = NetworkBackend::new(&workers_flag)?.with_max_restarts(max_restarts);
+            (b.n_endpoints(), Arc::new(b))
+        }
+        "mock" => {
+            (workers_flag.parse().context("bad --workers")?, Arc::new(MockBackend::deterministic()))
+        }
+        "process" => (
+            workers_flag.parse().context("bad --workers")?,
+            Arc::new(
+                ProcessBackend::repro_worker(&artifacts, args.has("mock"), sessions)?
+                    .with_max_restarts(max_restarts),
+            ),
+        ),
+        "in-process" => {
+            (workers_flag.parse().context("bad --workers")?, in_process_backend(sessions)?)
+        }
+        other => bail!(
+            "unknown --backend {other:?} (expected network, process, mock or in-process)"
+        ),
+    };
+    let (cache_dir, resume) = args.cache_opts();
+    let opts = serve::ServeOptions {
+        endpoint: addr,
+        engine: EngineConfig { workers, cache_dir, resume, ..EngineConfig::default() },
+        artifacts: PathBuf::from(&artifacts),
+        // only in-process execution reads tokens/manifests on this
+        // host; every out-of-process backend resolves them worker-side
+        materialize_corpora: backend_flag == "in-process",
+    };
+    println!("serve: backend {} with {workers} engine workers", backend.name());
+    serve::serve(opts, backend, |desc| {
+        println!("serving {desc}");
+        let _ = std::io::stdout().flush();
+    })
+}
+
+#[cfg(feature = "xla")]
+fn in_process_backend(sessions: usize) -> Result<std::sync::Arc<dyn umup::engine::Backend>> {
+    Ok(std::sync::Arc::new(umup::engine::XlaBackend::new(sessions)))
+}
+
+#[cfg(not(feature = "xla"))]
+fn in_process_backend(_sessions: usize) -> Result<std::sync::Arc<dyn umup::engine::Backend>> {
+    bail!(
+        "`serve --backend in-process` needs the XLA runtime; rebuild without \
+         --no-default-features (or serve an out-of-process backend)"
+    )
+}
+
+/// `repro ctl <verb>`: one RPC against a live `repro serve` daemon.
+/// Prints the verb's JSON result on stdout; server-side errors become
+/// a non-zero exit.
+fn ctl_cmd(args: &Args) -> Result<()> {
+    use std::io::BufReader;
+
+    use umup::engine::backend::wire;
+    use umup::engine::Endpoint;
+    use umup::util::Json;
+
+    const USAGE: &str = "usage: repro ctl <submit|status|cancel|cache-stats|shutdown> \
+                         --addr HOST:PORT|unix:/path [--jobs FILE] [--sweep N]";
+    let verb = args.positional.get(1).map(String::as_str).unwrap_or("");
+    let params = match verb {
+        "submit" => {
+            let path = args
+                .flags
+                .get("jobs")
+                .context("ctl submit needs --jobs FILE (one wire job frame per line)")?;
+            let text =
+                std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            let mut jobs = Vec::new();
+            for line in text.lines().filter(|l| !l.trim().is_empty()) {
+                jobs.push(Json::parse(line).context("parsing --jobs line")?);
+            }
+            let mut m = BTreeMap::new();
+            m.insert("jobs".to_string(), Json::Arr(jobs));
+            Json::Obj(m)
+        }
+        "status" => match args.flags.get("sweep") {
+            Some(s) => {
+                let mut m = BTreeMap::new();
+                m.insert(
+                    "sweep".to_string(),
+                    Json::Num(s.parse::<u64>().context("bad --sweep")? as f64),
+                );
+                Json::Obj(m)
+            }
+            None => Json::Obj(BTreeMap::new()),
+        },
+        "cancel" => {
+            let s: u64 = args.get("sweep", "").parse().context("ctl cancel needs --sweep N")?;
+            let mut m = BTreeMap::new();
+            m.insert("sweep".to_string(), Json::Num(s as f64));
+            Json::Obj(m)
+        }
+        "cache-stats" | "shutdown" => Json::Obj(BTreeMap::new()),
+        other => bail!("unknown ctl verb {other:?}\n{USAGE}"),
+    };
+    let addr = match args.flags.get("addr") {
+        Some(a) => a.clone(),
+        None => bail!("ctl needs --addr (the serve daemon's endpoint)\n{USAGE}"),
+    };
+    let ep = Endpoint::parse(&addr).context("bad --addr")?;
+    let (r, mut w) = ep.connect()?;
+    let mut r = BufReader::new(r);
+    let hello =
+        wire::read_frame(&mut r)?.context("server hung up before its hello frame")?;
+    // a worker socket here fails with the cross-wiring hint from wire.rs
+    wire::check_serve_hello(&hello)?;
+    wire::write_frame(&mut w, &wire::rpc_request_line(1, verb, &params))?;
+    let line = wire::read_frame(&mut r)?.context("server hung up before replying")?;
+    match wire::decode_rpc_reply(&line)? {
+        wire::RpcReply::Ok { id, result } => {
+            if id != 1 {
+                bail!("server replied to request {id}, expected 1 (protocol desync)");
+            }
+            println!("{}", result.dump());
+            Ok(())
+        }
+        wire::RpcReply::Err { error, .. } => bail!("server error: {error}"),
+    }
 }
 
 #[cfg(not(feature = "xla"))]

@@ -294,6 +294,33 @@ fn restart_budget_exhaustion_reports_normal_err_outcomes() {
     assert_eq!(backend.restarts(), 1, "budget 1 allows exactly one restart");
 }
 
+/// Regression: the health probe (and the executor handshake) drain the
+/// child's stderr *concurrently* with the hello wait.  A chatty worker
+/// that writes far more than the OS pipe buffer (~64 KiB) before its
+/// hello frame would deadlock a sequential probe — the child blocked on
+/// its full stderr pipe, the parent blocked on a silent stdout.
+#[test]
+fn health_probe_survives_chatty_worker_stderr() {
+    pin_cache_ts();
+    let exe = repro_exe();
+    let backend = Arc::new(ProcessBackend::new(move |_worker| {
+        let mut cmd = Command::new(&exe);
+        cmd.arg("worker").arg("--mock");
+        // ~3x the pipe buffer, flushed before the hello frame
+        cmd.env("UMUP_MOCK_STDERR_SPAM", "200000");
+        cmd
+    }));
+    let engine = Engine::with_backend(
+        EngineConfig { workers: 1, ..EngineConfig::default() },
+        Arc::clone(&backend) as Arc<dyn umup::engine::Backend>,
+    )
+    .expect("a chatty-but-healthy worker must pass the health probe");
+    let report = engine.run(shared_job_list().into_iter().take(3).collect());
+    assert_eq!(report.completed, 3);
+    assert_eq!(report.failed, 0);
+    assert_eq!(backend.restarts(), 0, "stderr spam must not be mistaken for a crash");
+}
+
 /// The health probe runs at engine construction and rejects a worker
 /// command that does not speak the protocol — no jobs are ever sent to
 /// a wrong binary.

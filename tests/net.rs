@@ -1,0 +1,351 @@
+//! Integration suite for the network execution layer: the
+//! `NetworkBackend` + `repro worker --listen` data plane and the
+//! `repro serve` / `repro ctl` control plane.
+//!
+//! No XLA needed: the fleet is `repro worker --mock --listen` (the
+//! repro binary itself, located via `CARGO_BIN_EXE_repro`), whose
+//! executor is the same canonical deterministic mock
+//! (`umup::engine::det_record`) the in-process `MockBackend` uses — so
+//! the byte-identity assertion is a real statement about the wire/cache
+//! codec over TCP, not luck.  `UMUP_CACHE_TS` is pinned in this process
+//! (the engine side writes all cache lines); failure injection and
+//! per-job latency in the workers are armed through the
+//! `UMUP_MOCK_FAIL` / `UMUP_MOCK_FAIL_ONCE` / `UMUP_MOCK_SLEEP_MS` env
+//! knobs documented in `main.rs`.
+
+mod common;
+
+use std::collections::BTreeSet;
+use std::io::{BufRead, BufReader, Cursor};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::AtomicUsize;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use common::{det_mock_engine, key_of_line, shared_job_list, sorted_segment_lines};
+use umup::engine::backend::wire;
+use umup::engine::{Engine, EngineConfig, NetworkBackend};
+use umup::util::{Json, Rng};
+
+fn repro_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_repro"))
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("umup-net-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Pin the cache timestamp so segment lines are byte-reproducible.
+/// Process-wide, but every test in this binary pins the same value, so
+/// parallel test threads cannot disagree.
+fn pin_cache_ts() {
+    std::env::set_var("UMUP_CACHE_TS", "1700000000");
+}
+
+/// Spawn one `repro worker --mock --listen 127.0.0.1:0` and read its
+/// `listening <addr>` announcement back; the ephemeral port makes the
+/// fleet collision-free across parallel test runs.
+fn spawn_listen_worker(envs: &[(&str, &str)]) -> (Child, String) {
+    let mut cmd = Command::new(repro_exe());
+    cmd.arg("worker").arg("--mock").arg("--listen").arg("127.0.0.1:0");
+    cmd.stdin(Stdio::null()).stdout(Stdio::piped()).stderr(Stdio::null());
+    for (k, v) in envs {
+        cmd.env(k, v);
+    }
+    let mut child = cmd.spawn().expect("spawning listen worker");
+    let stdout = child.stdout.take().expect("worker stdout is piped");
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line).expect("reading the listen announcement");
+    let addr = line
+        .strip_prefix("listening ")
+        .unwrap_or_else(|| panic!("unexpected worker announcement {line:?}"))
+        .trim()
+        .to_string();
+    (child, addr)
+}
+
+fn kill_fleet(fleet: Vec<Child>) {
+    for mut child in fleet {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+}
+
+// ---------------------------------------------------- wire adversaries
+
+/// The frame reader against adversarial streams: torn frames at every
+/// byte offset, garbage prefixes, newline-free streams that press the
+/// bounded (64-byte) prefix read, and oversized lengths.  Every case
+/// must return promptly with an error (or clean EOF exactly at a frame
+/// boundary) — never a bogus frame, never a hang, never a panic.
+#[test]
+fn read_frame_rejects_adversarial_streams_without_hanging() {
+    // a valid frame cut at every byte offset: only the zero-byte cut is
+    // a clean EOF; every partial cut is an error
+    let mut full = Vec::new();
+    wire::write_frame(&mut full, "{\"key\":\"00aabbccddeeff11\",\"payload\":\"xyz\"}").unwrap();
+    for cut in 0..full.len() {
+        let mut r = Cursor::new(full[..cut].to_vec());
+        match wire::read_frame(&mut r) {
+            Ok(None) => assert_eq!(cut, 0, "clean EOF is only legal at a frame boundary"),
+            Ok(Some(p)) => panic!("stream torn at byte {cut} decoded as a frame {p:?}"),
+            Err(_) => assert!(cut > 0, "the empty stream must be a clean EOF, not an error"),
+        }
+    }
+    // ... and the untorn stream is one frame then a clean EOF
+    let mut r = Cursor::new(full);
+    assert!(wire::read_frame(&mut r).unwrap().is_some());
+    assert!(wire::read_frame(&mut r).unwrap().is_none());
+
+    // deterministic garbage: a non-digit lead byte followed by random
+    // bytes (possibly invalid UTF-8) must fail the prefix parse — the
+    // reader may not skip, resync, or buffer unboundedly
+    let leads = b"{}*#!xzq";
+    let mut rng = Rng::new(2024);
+    for case in 0..200 {
+        let n = 1 + (rng.f64() * 96.0) as usize;
+        let mut bytes: Vec<u8> = (0..n).map(|_| (rng.f64() * 256.0) as u8).collect();
+        bytes[0] = leads[(rng.f64() * leads.len() as f64) as usize % leads.len()];
+        let mut r = Cursor::new(bytes);
+        assert!(wire::read_frame(&mut r).is_err(), "garbage case {case} did not error");
+    }
+
+    // a newline-free digit stream: the bounded prefix read must give up
+    // at 64 bytes (64 ones overflow usize) instead of buffering forever
+    let mut r = Cursor::new(vec![b'1'; 100]);
+    assert!(wire::read_frame(&mut r).is_err(), "newline-free digits must fail the prefix read");
+    // 64 zeros *do* parse (length 0), so framing must fail instead:
+    // the 65th byte is not the newline terminator a 0-length frame needs
+    let mut r = Cursor::new(vec![b'0'; 100]);
+    assert!(wire::read_frame(&mut r).is_err(), "a zero-run must fail the terminator check");
+
+    // a syntactically valid length over the frame cap is rejected
+    // before any payload allocation
+    let mut r = Cursor::new(format!("{}\nx", 65 << 20).into_bytes());
+    let err = wire::read_frame(&mut r).unwrap_err();
+    assert!(format!("{err:#}").contains("cap"), "oversized length must name the cap: {err:#}");
+}
+
+// ------------------------------------------------------- data plane
+
+/// The acceptance test: a 4-endpoint `NetworkBackend` drain of the
+/// shared sweep over loopback TCP — with one worker process killed
+/// mid-job — produces a run cache byte-identical to the in-process run,
+/// with the killed job re-dispatched to a surviving endpoint (not
+/// failed) and the reconnect accounted.
+#[test]
+fn network_drain_with_worker_kill_is_byte_identical_to_in_process() {
+    pin_cache_ts();
+    let in_dir = tmp_dir("inproc");
+    let net_dir = tmp_dir("drain");
+    let marker = tmp_dir("kill-marker").with_extension("once");
+    let _ = std::fs::remove_file(&marker);
+    let n_jobs = shared_job_list().len();
+
+    // reference: in-process deterministic mock
+    let counter = Arc::new(AtomicUsize::new(0));
+    let engine = det_mock_engine(
+        EngineConfig {
+            workers: 2,
+            cache_dir: Some(in_dir.clone()),
+            resume: true,
+            ..EngineConfig::default()
+        },
+        Arc::clone(&counter),
+    );
+    let report = engine.run(shared_job_list());
+    assert_eq!(report.completed, n_jobs);
+    drop(engine);
+
+    // the fleet: 4 listeners, every one armed to die before its first
+    // reply, with a shared marker so exactly one actually does
+    let marker_s = marker.to_str().unwrap().to_string();
+    let mut fleet = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..4 {
+        let (child, addr) = spawn_listen_worker(&[
+            ("UMUP_MOCK_FAIL", "crash-before-reply"),
+            ("UMUP_MOCK_FAIL_ONCE", &marker_s),
+        ]);
+        fleet.push(child);
+        addrs.push(addr);
+    }
+    let backend =
+        Arc::new(NetworkBackend::new(&addrs.join(",")).unwrap().with_max_restarts(2));
+    let engine = Engine::with_backend(
+        EngineConfig {
+            workers: 4,
+            cache_dir: Some(net_dir.clone()),
+            resume: true,
+            ..EngineConfig::default()
+        },
+        Arc::clone(&backend) as Arc<dyn umup::engine::Backend>,
+    )
+    .unwrap();
+    let report = engine.run(shared_job_list());
+    assert_eq!(report.completed, n_jobs, "the killed worker's job must be re-dispatched");
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.executed, n_jobs);
+    drop(engine);
+
+    assert!(marker.exists(), "the worker-kill injection never fired");
+    assert!(backend.restarts() >= 1, "the lost connection must be accounted as a reconnect");
+
+    let reference = sorted_segment_lines(&in_dir);
+    let netted = sorted_segment_lines(&net_dir);
+    assert_eq!(reference.len(), n_jobs);
+    assert_eq!(
+        netted, reference,
+        "network-backend cache must be byte-identical to the in-process one"
+    );
+
+    kill_fleet(fleet);
+    let _ = std::fs::remove_file(&marker);
+    let _ = std::fs::remove_dir_all(&in_dir);
+    let _ = std::fs::remove_dir_all(&net_dir);
+}
+
+// ---------------------------------------------------- control plane
+
+/// One `repro ctl` invocation; asserts success and parses the verb's
+/// JSON result off stdout.
+fn ctl_json(addr: &str, verb: &str, extra: &[&str]) -> Json {
+    let out = Command::new(repro_exe())
+        .arg("ctl")
+        .arg(verb)
+        .args(extra)
+        .arg("--addr")
+        .arg(addr)
+        .output()
+        .expect("running repro ctl");
+    assert!(
+        out.status.success(),
+        "ctl {verb} failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    Json::parse(String::from_utf8_lossy(&out.stdout).trim()).expect("ctl output is JSON")
+}
+
+fn as_count(j: &Json, key: &str) -> usize {
+    j.get(key).unwrap().as_usize().unwrap()
+}
+
+/// The acceptance test for the control plane: a live `repro serve`
+/// daemon over a slow 2-worker fleet answers `repro ctl`
+/// submit/status/cancel/cache-stats/shutdown round trips — cancel
+/// unqueues pending jobs while in-flight ones complete and are cached,
+/// and shutdown drains then exits the daemon cleanly.
+#[test]
+fn serve_and_ctl_round_trip_against_a_live_fleet() {
+    pin_cache_ts();
+    let cache = tmp_dir("serve-cache");
+    // slow workers so `cancel` catches a mostly-unstarted sweep
+    let mut fleet = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..2 {
+        let (child, addr) = spawn_listen_worker(&[("UMUP_MOCK_SLEEP_MS", "400")]);
+        fleet.push(child);
+        addrs.push(addr);
+    }
+    let mut daemon = Command::new(repro_exe())
+        .arg("serve")
+        .arg("--addr")
+        .arg("127.0.0.1:0")
+        .arg("--workers")
+        .arg(addrs.join(","))
+        .arg("--cache-dir")
+        .arg(&cache)
+        .arg("--resume")
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning repro serve");
+    let stdout = daemon.stdout.take().expect("serve stdout is piped");
+    let mut reader = BufReader::new(stdout);
+    let addr = loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).expect("reading serve stdout");
+        assert_ne!(n, 0, "serve exited before announcing its endpoint");
+        if let Some(a) = line.strip_prefix("serving ") {
+            break a.trim().to_string();
+        }
+    };
+
+    // the jobs file: worker wire-frame encoding, keys computed
+    // client-side (the daemon recomputes and must agree)
+    let jobs = shared_job_list();
+    let n_jobs = jobs.len();
+    let jobs_path = tmp_dir("serve-jobs").with_extension("jsonl");
+    let mut text = String::new();
+    for job in &jobs {
+        text.push_str(&wire::encode_job(&job.key(), job));
+        text.push('\n');
+    }
+    std::fs::write(&jobs_path, text).unwrap();
+
+    let r = ctl_json(&addr, "submit", &["--jobs", jobs_path.to_str().unwrap()]);
+    let sweep = as_count(&r, "sweep").to_string();
+    assert_eq!(as_count(&r, "total"), n_jobs);
+
+    // cancel while most of the sweep is still queued
+    let r = ctl_json(&addr, "cancel", &["--sweep", &sweep]);
+    assert!(r.get("cancelled").unwrap().as_bool().unwrap());
+
+    // poll status until the sweep settles (in-flight jobs finish)
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let status = loop {
+        let s = ctl_json(&addr, "status", &["--sweep", &sweep]);
+        if s.get("done").unwrap().as_bool().unwrap() {
+            break s;
+        }
+        assert!(Instant::now() < deadline, "cancelled sweep never settled: {}", s.dump());
+        std::thread::sleep(Duration::from_millis(100));
+    };
+    let executed = as_count(&status, "executed");
+    let cancelled = as_count(&status, "cancelled");
+    assert!(cancelled > 0, "cancel must unqueue pending jobs: {}", status.dump());
+    assert_eq!(as_count(&status, "failed"), 0, "status: {}", status.dump());
+    // `failed` is a subset of `executed`, so with zero failures these
+    // four partition the sweep
+    assert_eq!(
+        executed
+            + cancelled
+            + as_count(&status, "cache_hits")
+            + as_count(&status, "deduped")
+            + as_count(&status, "skipped"),
+        n_jobs,
+        "every job must be accounted for: {}",
+        status.dump()
+    );
+
+    // in-flight jobs were cached; cancelled ones were not
+    let stats = ctl_json(&addr, "cache-stats", &[]);
+    assert_eq!(as_count(&stats, "records"), executed, "stats: {}", stats.dump());
+
+    // status without --sweep lists every live sweep
+    let all = ctl_json(&addr, "status", &[]);
+    assert_eq!(all.get("sweeps").unwrap().as_arr().unwrap().len(), 1);
+
+    // shutdown: ok reply, then a clean daemon exit
+    let r = ctl_json(&addr, "shutdown", &[]);
+    assert!(r.get("shutdown").unwrap().as_bool().unwrap());
+    let exit = daemon.wait().expect("waiting for serve");
+    assert!(exit.success(), "serve must exit cleanly after shutdown");
+
+    // the persisted cache holds exactly the executed jobs, every key a
+    // submitted one
+    let lines = sorted_segment_lines(&cache);
+    assert_eq!(lines.len(), executed);
+    let expected: BTreeSet<String> = jobs.iter().map(|j| j.key()).collect();
+    for line in &lines {
+        assert!(expected.contains(&key_of_line(line)), "cache line for an unsubmitted key");
+    }
+
+    kill_fleet(fleet);
+    let _ = std::fs::remove_file(&jobs_path);
+    let _ = std::fs::remove_dir_all(&cache);
+}
