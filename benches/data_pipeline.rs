@@ -1,33 +1,74 @@
 //! Bench: data substrate off the hot loop — corpus generation and batch
-//! sampling must be negligible next to a train step.
+//! sampling must be negligible next to a train step — with a recorded
+//! trajectory.
+//!
+//! Only within-run *ratios* are gated (the zero-alloc `_into` samplers
+//! vs their allocating counterparts) — absolute wall-clock numbers vary
+//! too much across runner hardware to compare between machines.
+//!
+//! Flags (after `cargo bench --bench data_pipeline --`):
+//!   --quick           smaller corpus + tighter budgets (CI mode)
+//!   --record <path>   append this run's metrics to the trajectory file
+//!   --check <path>    gate the ratio metrics against the file's most
+//!                     recent entry (>30% regression fails)
+//!   --label <name>    entry label for --record (default "dev")
+
+use std::path::PathBuf;
+use std::time::Duration;
 
 use umup::data::{BatchSampler, Corpus, CorpusConfig};
-use umup::util::bench::{black_box, Bencher};
+use umup::util::bench::{black_box, check_regression, record_run, Bencher, Metric};
 
 fn main() {
+    let mut quick = false;
+    let mut record: Option<PathBuf> = None;
+    let mut check: Option<PathBuf> = None;
+    let mut label = "dev".to_string();
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--quick" => quick = true,
+            "--record" => record = Some(PathBuf::from(it.next().expect("--record needs a path"))),
+            "--check" => check = Some(PathBuf::from(it.next().expect("--check needs a path"))),
+            "--label" => label = it.next().expect("--label needs a name"),
+            // cargo's own bench-harness flags; harmless to ignore
+            "--bench" => {}
+            other => eprintln!("data_pipeline bench: ignoring unknown arg {other:?}"),
+        }
+    }
+
     let mut b = Bencher::default();
-    b.budget = std::time::Duration::from_millis(1200);
-    b.run_with_work("corpus generate 200k tokens", Some(200_000.0), &mut || {
+    b.budget = Duration::from_millis(if quick { 400 } else { 1200 });
+    let gen = b.run_with_work("corpus generate 200k tokens", Some(200_000.0), &mut || {
         black_box(Corpus::generate(CorpusConfig {
             n_tokens: 200_000,
             ..Default::default()
         }));
     });
-    let corpus = Corpus::generate(CorpusConfig::default());
+    let corpus = Corpus::generate(if quick {
+        CorpusConfig { n_tokens: 200_000, ..Default::default() }
+    } else {
+        CorpusConfig::default()
+    });
     let mut sampler = BatchSampler::new(corpus.train_slice(), 16, 64, 1);
-    b.run_with_work("batch sample 16x65", Some((16 * 65) as f64), &mut || {
+    let sample = b.run_with_work("batch sample 16x65", Some((16 * 65) as f64), &mut || {
         black_box(sampler.sample());
     });
-    b.run_with_work("batch sequential 16x65", Some((16 * 65) as f64), &mut || {
-        black_box(sampler.next_sequential());
-    });
-    // the zero-alloc path the train loop actually runs
+    let sequential =
+        b.run_with_work("batch sequential 16x65", Some((16 * 65) as f64), &mut || {
+            black_box(sampler.next_sequential());
+        });
+    // the zero-alloc paths the train loop actually runs
     let mut buf: Vec<i32> = Vec::new();
-    b.run_with_work("batch sample_into 16x65 (reused buf)", Some((16 * 65) as f64), &mut || {
-        sampler.sample_into(&mut buf);
-        black_box(buf.len());
-    });
-    b.run_with_work(
+    let sample_into = b.run_with_work(
+        "batch sample_into 16x65 (reused buf)",
+        Some((16 * 65) as f64),
+        &mut || {
+            sampler.sample_into(&mut buf);
+            black_box(buf.len());
+        },
+    );
+    let sequential_into = b.run_with_work(
         "batch sequential_into 16x65 (reused buf)",
         Some((16 * 65) as f64),
         &mut || {
@@ -35,7 +76,32 @@ fn main() {
             black_box(buf.len());
         },
     );
-    b.run("bigram entropy 2M tokens", || {
+    b.run("bigram entropy", || {
         black_box(corpus.bigram_entropy());
     });
+
+    let sample_into_speedup = sample.mean_ns / sample_into.mean_ns.max(1.0);
+    let sequential_into_speedup = sequential.mean_ns / sequential_into.mean_ns.max(1.0);
+    println!(
+        "  -> zero-alloc sampling is {sample_into_speedup:.2}x (random) / \
+         {sequential_into_speedup:.2}x (sequential) the allocating path"
+    );
+    let metrics = vec![
+        Metric::higher("sample_into_speedup", sample_into_speedup, "x").gated(),
+        Metric::higher("sequential_into_speedup", sequential_into_speedup, "x").gated(),
+        Metric::higher("corpus_tokens_per_s", 200_000.0 * 1e9 / gen.mean_ns.max(1.0), "1/s"),
+        Metric::higher(
+            "sample_tokens_per_s",
+            (16 * 65) as f64 * 1e9 / sample_into.mean_ns.max(1.0),
+            "1/s",
+        ),
+    ];
+    if let Some(path) = &check {
+        check_regression(path, "data_pipeline", &metrics, 0.30)
+            .expect("bench regression gate");
+    }
+    if let Some(path) = &record {
+        record_run(path, "data_pipeline", &label, &metrics)
+            .expect("recording bench trajectory");
+    }
 }

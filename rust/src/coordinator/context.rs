@@ -8,7 +8,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use crate::data::{Corpus, CorpusConfig};
-use crate::engine::{Backend, Engine, EngineConfig, Shard};
+use crate::engine::{Backend, Engine, EngineConfig, EventBus, Shard};
 use crate::runtime::Registry;
 
 pub struct ExpContext {
@@ -46,12 +46,14 @@ impl ExpContext {
         resume: bool,
         shard: Option<Shard>,
     ) -> Result<Self> {
-        Self::with_backend(artifacts, out_dir, quick, workers, cache_dir, resume, shard, None)
+        Self::with_backend(artifacts, out_dir, quick, workers, cache_dir, resume, shard, None, None)
     }
 
     /// Like [`ExpContext::with_cache`] over an explicit execution
     /// backend (`--backend process|mock`); `None` uses the default
-    /// in-process XLA backend.
+    /// in-process XLA backend.  `events` is the engine's telemetry
+    /// publisher (`--progress` / the TUI); `None` keeps the engine's
+    /// bus inert.
     #[allow(clippy::too_many_arguments)] // mirrors the CLI surface 1:1
     pub fn with_backend(
         artifacts: &str,
@@ -62,6 +64,7 @@ impl ExpContext {
         resume: bool,
         shard: Option<Shard>,
         backend: Option<Arc<dyn Backend>>,
+        events: Option<EventBus>,
     ) -> Result<Self> {
         let registry = Arc::new(Registry::open(Path::new(artifacts))?);
         let engine_cfg = EngineConfig {
@@ -69,6 +72,7 @@ impl ExpContext {
             cache_dir,
             resume,
             shard,
+            events,
             ..EngineConfig::default()
         };
         let engine = match backend {

@@ -118,6 +118,14 @@ pub trait Backend: Send + Sync {
     /// thread, so the returned executor may own `!Send` state.
     fn spawn_executor(&self, worker_id: usize) -> Box<dyn Executor>;
 
+    /// Receive the engine's telemetry publisher, once, at engine
+    /// construction (before any worker starts).  Backends supervising
+    /// out-of-process resources publish their lifecycle onto it
+    /// (`worker_restarted` / `worker_budget_exhausted` with teed stderr
+    /// excerpts); the default keeps in-process backends event-free.
+    /// Publishing must follow the bus contract: never block.
+    fn attach_events(&self, _bus: &crate::engine::events::EventBus) {}
+
     /// Fleet-level teardown hook, run once after all workers have
     /// exited and dropped their executors (default: no-op).
     fn shutdown(&self) {}

@@ -29,13 +29,15 @@ use std::net::{TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::train::RunRecord;
 
+use super::super::events::{Event, EventBus};
 use super::super::job::EngineJob;
+use super::super::lock;
 use super::wire;
 use super::{Backend, Capabilities, Executor};
 
@@ -189,6 +191,18 @@ struct NetInner {
     endpoints: Vec<Endpoint>,
     max_restarts_per_worker: usize,
     restarts: AtomicUsize,
+    /// Telemetry publisher, attached by the engine at construction
+    /// ([`Backend::attach_events`]).  Interior-mutable because the
+    /// backend is already shared (`Arc<dyn Backend>`) by then.
+    events: Mutex<Option<EventBus>>,
+}
+
+impl NetInner {
+    fn publish(&self, event: Event) {
+        if let Some(bus) = lock(&self.events).as_ref() {
+            bus.publish(event);
+        }
+    }
 }
 
 /// A [`Backend`] that dials every job out to remote worker endpoints.
@@ -217,6 +231,7 @@ impl NetworkBackend {
                 endpoints,
                 max_restarts_per_worker: 2,
                 restarts: AtomicUsize::new(0),
+                events: Mutex::new(None),
             }),
         }
     }
@@ -271,6 +286,10 @@ impl Backend for NetworkBackend {
                 .with_context(|| format!("worker endpoint {ep} health probe failed"))?;
         }
         Ok(())
+    }
+
+    fn attach_events(&self, bus: &EventBus) {
+        *lock(&self.inner.events) = Some(bus.clone());
     }
 
     fn spawn_executor(&self, worker_id: usize) -> Box<dyn Executor> {
@@ -349,6 +368,11 @@ impl NetExecutor {
         if self.conn.is_none() {
             if self.connected_once {
                 if self.restarts_left == 0 {
+                    self.inner.publish(Event::WorkerBudgetExhausted {
+                        worker: self.worker,
+                        // remote stderr stays remote; no excerpt to tee
+                        stderr: String::new(),
+                    });
                     bail!(
                         "worker {}: restart budget exhausted ({} reconnects used)",
                         self.worker,
@@ -361,6 +385,11 @@ impl NetExecutor {
                     "engine: reconnecting worker {} ({} reconnects left)",
                     self.worker, self.restarts_left
                 );
+                self.inner.publish(Event::WorkerRestarted {
+                    worker: self.worker,
+                    restarts_left: self.restarts_left,
+                    stderr: String::new(),
+                });
             }
             let conn = self.connect_next()?;
             self.connected_once = true;
@@ -420,6 +449,10 @@ impl Executor for NetExecutor {
                 // happen (mirrors ProcessExecutor::run)
                 self.teardown_conn();
                 if self.connected_once && self.restarts_left == 0 {
+                    self.inner.publish(Event::WorkerBudgetExhausted {
+                        worker: self.worker,
+                        stderr: String::new(),
+                    });
                     return Err(anyhow!(
                         "worker {} connection lost mid-job on {} ({first:#}); restart \
                          budget exhausted ({} reconnects used), not re-dispatching",

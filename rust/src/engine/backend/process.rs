@@ -48,6 +48,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::train::RunRecord;
 
+use super::super::events::{Event, EventBus};
 use super::super::job::EngineJob;
 use super::super::lock;
 use super::wire;
@@ -64,6 +65,18 @@ struct Inner {
     make_cmd: Box<dyn Fn(usize) -> Command + Send + Sync>,
     max_restarts_per_worker: usize,
     restarts: AtomicUsize,
+    /// Telemetry publisher, attached by the engine at construction
+    /// ([`Backend::attach_events`]).  Interior-mutable because the
+    /// backend is already shared (`Arc<dyn Backend>`) by then.
+    events: Mutex<Option<EventBus>>,
+}
+
+impl Inner {
+    fn publish(&self, event: Event) {
+        if let Some(bus) = lock(&self.events).as_ref() {
+            bus.publish(event);
+        }
+    }
 }
 
 /// A [`Backend`] that runs every job in a pool of spawned worker
@@ -87,6 +100,7 @@ impl ProcessBackend {
                 make_cmd: Box::new(make_cmd),
                 max_restarts_per_worker: 2,
                 restarts: AtomicUsize::new(0),
+                events: Mutex::new(None),
             }),
         }
     }
@@ -140,6 +154,10 @@ impl Backend for ProcessBackend {
         // children keep their own per-manifest session pools, so
         // manifest-affine dispatch still pays; crashes stay isolated
         Capabilities { session_affinity: true, out_of_process: true }
+    }
+
+    fn attach_events(&self, bus: &EventBus) {
+        *lock(&self.inner.events) = Some(bus.clone());
     }
 
     /// Fail fast on a broken worker command: spawn one probe child,
@@ -289,6 +307,10 @@ impl ProcessExecutor {
         if self.conn.is_none() {
             if self.spawned_once {
                 if self.restarts_left == 0 {
+                    self.inner.publish(Event::WorkerBudgetExhausted {
+                        worker: self.worker,
+                        stderr: self.stderr_excerpt(),
+                    });
                     bail!(
                         "worker {}: restart budget exhausted ({} restarts used){}",
                         self.worker,
@@ -302,6 +324,11 @@ impl ProcessExecutor {
                     "engine: restarting worker {} child ({} restarts left)",
                     self.worker, self.restarts_left
                 );
+                self.inner.publish(Event::WorkerRestarted {
+                    worker: self.worker,
+                    restarts_left: self.restarts_left,
+                    stderr: self.stderr_excerpt(),
+                });
             }
             let conn = self.spawn_child()?;
             self.spawned_once = true;
@@ -346,6 +373,11 @@ impl ProcessExecutor {
         }
     }
 
+    /// The raw retained stderr tail (for event payloads).
+    fn stderr_excerpt(&self) -> String {
+        lock(&self.stderr_tail).iter().cloned().collect::<Vec<_>>().join("\n")
+    }
+
     /// Render the retained stderr tail for an error message.
     fn stderr_context(&self) -> String {
         let tail = lock(&self.stderr_tail);
@@ -382,6 +414,10 @@ impl Executor for ProcessExecutor {
                 // phantom retry and burning a spawn attempt.
                 self.teardown_conn();
                 if self.spawned_once && self.restarts_left == 0 {
+                    self.inner.publish(Event::WorkerBudgetExhausted {
+                        worker: self.worker,
+                        stderr: self.stderr_excerpt(),
+                    });
                     return Err(anyhow!(
                         "worker {} child lost mid-job on {} ({first:#}); restart budget \
                          exhausted ({} restarts used), not re-dispatching{}",

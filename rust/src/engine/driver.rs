@@ -31,13 +31,15 @@
 //! is integration-tested) without the XLA runtime — the test harness
 //! drives mock-executor children through exactly this code path.
 
-use std::path::PathBuf;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use super::cache::{CacheWatcher, Compactor, Shard};
+use super::events::{Event, EventBus};
 
 /// How often the drive loop attempts a background tier-merge step when
 /// [`DriveConfig::background_compaction`] is on.
@@ -66,6 +68,19 @@ pub struct DriveConfig {
     /// files mid-drive, and callers that assert on byte-identical
     /// drive output (the deterministic test harness) must opt in.
     pub background_compaction: bool,
+    /// Telemetry bus for the drive's own lifecycle events
+    /// (`shard_spawned` / `shard_exit` / `shard_restarted` /
+    /// `snapshot`).  `None` (the default) keeps the drive loop
+    /// event-free and its stderr output byte-identical to a bus-less
+    /// build — events are purely additive.
+    pub events: Option<EventBus>,
+    /// JSONL event files written by the shard children (each child runs
+    /// with `--progress jsonl:<file>`).  The driver tails every file
+    /// incrementally from its poll loop and forwards each complete line
+    /// verbatim ([`Event::ChildLine`]) onto [`DriveConfig::events`], so
+    /// one merged stream carries parent and child telemetry.  Ignored
+    /// when `events` is `None`.
+    pub child_event_files: Vec<PathBuf>,
 }
 
 impl Default for DriveConfig {
@@ -77,6 +92,8 @@ impl Default for DriveConfig {
             poll_interval: Duration::from_millis(500),
             progress: true,
             background_compaction: false,
+            events: None,
+            child_event_files: Vec::new(),
         }
     }
 }
@@ -107,6 +124,47 @@ struct Slot {
     child: Option<Child>,
     attempts: usize,
     done: bool,
+}
+
+/// Incremental tail over one child's JSONL event file: each poll reads
+/// only the bytes appended since the last one and yields *complete*
+/// lines (a torn line mid-append is held back until its newline
+/// arrives).  The file may not exist yet — children create their own
+/// streams — so open failures just mean "nothing new".
+struct FileTail {
+    path: PathBuf,
+    offset: u64,
+    partial: String,
+}
+
+impl FileTail {
+    fn new(path: &Path) -> FileTail {
+        FileTail { path: path.to_path_buf(), offset: 0, partial: String::new() }
+    }
+
+    fn poll(&mut self) -> Vec<String> {
+        let Ok(mut f) = std::fs::File::open(&self.path) else {
+            return Vec::new();
+        };
+        if f.seek(SeekFrom::Start(self.offset)).is_err() {
+            return Vec::new();
+        }
+        let mut buf = String::new();
+        let Ok(n) = f.read_to_string(&mut buf) else {
+            return Vec::new();
+        };
+        self.offset += n as u64;
+        self.partial.push_str(&buf);
+        let mut lines = Vec::new();
+        while let Some(nl) = self.partial.find('\n') {
+            let line: String = self.partial.drain(..=nl).collect();
+            let line = line.trim_end();
+            if !line.is_empty() {
+                lines.push(line.to_string());
+            }
+        }
+        lines
+    }
 }
 
 /// Spawn `cfg.shards` children via `make_cmd(shard)` and babysit them to
@@ -174,8 +232,13 @@ fn run_to_completion<F>(
 where
     F: FnMut(Shard) -> Command,
 {
+    let t0 = Instant::now();
+    let bus = cfg.events.clone().unwrap_or_default();
+    let mut tails: Vec<FileTail> =
+        cfg.child_event_files.iter().map(|p| FileTail::new(p)).collect();
     for slot in slots.iter_mut() {
         launch(slot, make_cmd)?;
+        bus.publish(Event::ShardSpawned { shard: slot.shard.index, attempt: slot.attempts });
     }
     if cfg.progress {
         eprintln!(
@@ -204,12 +267,22 @@ where
                 Some(st) if st.success() => {
                     slot.done = true;
                     slot.child = None;
+                    bus.publish(Event::ShardExit {
+                        shard: slot.shard.index,
+                        ok: true,
+                        detail: st.to_string(),
+                    });
                     if cfg.progress {
                         eprintln!("drive: shard {} finished", slot.shard);
                     }
                 }
                 Some(st) => {
                     slot.child = None;
+                    bus.publish(Event::ShardExit {
+                        shard: slot.shard.index,
+                        ok: false,
+                        detail: st.to_string(),
+                    });
                     if slot.attempts > cfg.max_restarts_per_shard {
                         bail!(
                             "drive: shard {} failed ({st}) after {} attempts \
@@ -228,28 +301,74 @@ where
                         slot.attempts + 1,
                         cfg.max_restarts_per_shard + 1
                     );
+                    bus.publish(Event::ShardRestarted {
+                        shard: slot.shard.index,
+                        attempt: slot.attempts + 1,
+                        max_attempts: cfg.max_restarts_per_shard + 1,
+                    });
                     launch(slot, make_cmd)?;
+                    bus.publish(Event::ShardSpawned {
+                        shard: slot.shard.index,
+                        attempt: slot.attempts,
+                    });
                 }
             }
         }
         if all_done {
+            // final drain: pick up any event lines the children flushed
+            // in their last instants before exiting
+            if bus.is_active() {
+                for tail in tails.iter_mut() {
+                    for line in tail.poll() {
+                        bus.publish(Event::ChildLine { line });
+                    }
+                }
+            }
             return Ok(restarts);
         }
 
+        // forward the children's own event streams: tail each JSONL
+        // file for newly completed lines and re-publish them verbatim
+        // (the children stamped their own shard-tagged envelopes)
+        if bus.is_active() {
+            for tail in tails.iter_mut() {
+                for line in tail.poll() {
+                    bus.publish(Event::ChildLine { line });
+                }
+            }
+        }
         // merged progress: tail only the bytes children appended since
         // the last poll (read-only, lock-free; concurrent appends at
         // worst show up a poll late)
-        if cfg.progress {
+        if cfg.progress || bus.is_active() {
             watcher.poll();
             if watcher.unique_keys() != last_entries {
                 last_entries = watcher.unique_keys();
                 let live = slots.iter().filter(|s| !s.done).count();
-                eprintln!(
-                    "drive: {} runs cached across {} segments ({live} shard{} live)",
-                    watcher.unique_keys(),
-                    watcher.segments(),
-                    if live == 1 { "" } else { "s" }
-                );
+                if cfg.progress {
+                    eprintln!(
+                        "drive: {} runs cached across {} segments ({live} shard{} live)",
+                        watcher.unique_keys(),
+                        watcher.segments(),
+                        if live == 1 { "" } else { "s" }
+                    );
+                }
+                let secs = t0.elapsed().as_secs_f64();
+                bus.publish(Event::Snapshot {
+                    done: watcher.unique_keys(),
+                    total: None,
+                    cached_keys: watcher.unique_keys(),
+                    segments: watcher.segments(),
+                    throughput: if secs > 0.0 {
+                        watcher.unique_keys() as f64 / secs
+                    } else {
+                        0.0
+                    },
+                    eta_s: None,
+                    pool_hits: 0,
+                    pool_steals: 0,
+                    dropped: bus.dropped(),
+                });
             }
         }
         // idle-path tiered merges: fold finished segments while the

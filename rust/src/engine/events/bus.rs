@@ -1,0 +1,214 @@
+//! The bounded, never-blocking event bus.
+//!
+//! Publishers (engine, scheduler, driver, backends) hold cheap
+//! [`EventBus`] clones; consumers call [`EventBus::subscribe`] for a
+//! bounded [`EventStream`].  The contract that matters sits on the
+//! publish side:
+//!
+//! * **Zero-cost when nobody listens.**  A bus that has never been
+//!   subscribed to returns from [`EventBus::publish`] after one relaxed
+//!   atomic load — the engine hot path pays nothing for telemetry it
+//!   is not emitting.
+//! * **Never blocks.**  With subscribers attached, publish takes a
+//!   `try_read` on the subscriber list (a writer mid-`subscribe`
+//!   counts the event as dropped rather than waiting) and a `try_send`
+//!   per stream; a full stream drops the event into the
+//!   [`EventBus::dropped`] counter instead of stalling a worker.  Slow
+//!   consumers lose events, loudly and countably — they never slow the
+//!   sweep down.
+//! * **Monotone per-source sequencing.**  Every published envelope is
+//!   stamped with an increasing `seq` (and wall-clock `ts`), so a
+//!   consumer can detect gaps from drops.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{mpsc, Arc, RwLock};
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
+
+use super::{Envelope, Event, EVENTS_VERSION};
+
+struct Sub {
+    tx: SyncSender<Arc<Envelope>>,
+    /// Flipped (under the read lock — it's atomic) when a send reports
+    /// the receiver gone; pruned on the next `subscribe`.
+    dead: AtomicBool,
+}
+
+struct BusInner {
+    subs: RwLock<Vec<Sub>>,
+    seq: AtomicU64,
+    dropped: AtomicU64,
+    /// False until the first `subscribe`: the publish fast path.  Never
+    /// reset — after every stream disconnects, publish still stamps a
+    /// sequence number and skips the dead subscribers, which is cheap
+    /// and keeps `seq` gap-free for any future subscriber.
+    active: AtomicBool,
+}
+
+/// Handle for publishing [`Event`]s; clone freely (all clones share one
+/// bus).  See the module docs for the non-blocking contract.
+#[derive(Clone)]
+pub struct EventBus {
+    inner: Arc<BusInner>,
+    /// Stamped into every envelope's `shard` field (sharded sources).
+    source: Option<usize>,
+}
+
+impl Default for EventBus {
+    fn default() -> EventBus {
+        EventBus {
+            inner: Arc::new(BusInner {
+                subs: RwLock::new(Vec::new()),
+                seq: AtomicU64::new(0),
+                dropped: AtomicU64::new(0),
+                active: AtomicBool::new(false),
+            }),
+            source: None,
+        }
+    }
+}
+
+impl std::fmt::Debug for EventBus {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EventBus")
+            .field("seq", &self.inner.seq.load(Ordering::Relaxed))
+            .field("dropped", &self.inner.dropped.load(Ordering::Relaxed))
+            .field("source", &self.source)
+            .finish()
+    }
+}
+
+fn now_ms() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_millis() as u64).unwrap_or(0)
+}
+
+impl EventBus {
+    pub fn new() -> EventBus {
+        EventBus::default()
+    }
+
+    /// A clone of this bus whose envelopes carry `"shard": index` — how
+    /// a sharded child process tags its stream before the driver
+    /// interleaves it with siblings'.
+    pub fn with_source(&self, shard: usize) -> EventBus {
+        EventBus { inner: Arc::clone(&self.inner), source: Some(shard) }
+    }
+
+    /// Stamp and fan out one event.  Never blocks: see the module docs
+    /// for what happens to slow or vanished subscribers.
+    pub fn publish(&self, event: Event) {
+        if !self.inner.active.load(Ordering::Relaxed) {
+            return;
+        }
+        let seq = self.inner.seq.fetch_add(1, Ordering::Relaxed);
+        let env = Arc::new(Envelope {
+            v: EVENTS_VERSION,
+            seq,
+            ts_ms: now_ms(),
+            shard: self.source,
+            event,
+        });
+        match self.inner.subs.try_read() {
+            Ok(subs) => {
+                for sub in subs.iter() {
+                    if sub.dead.load(Ordering::Relaxed) {
+                        continue;
+                    }
+                    match sub.tx.try_send(Arc::clone(&env)) {
+                        Ok(()) => {}
+                        Err(TrySendError::Full(_)) => {
+                            self.inner.dropped.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(TrySendError::Disconnected(_)) => {
+                            sub.dead.store(true, Ordering::Relaxed);
+                        }
+                    }
+                }
+            }
+            // a subscriber is being attached right now; losing this one
+            // event (counted) beats making a worker wait on the lock
+            Err(_) => {
+                self.inner.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Attach a bounded subscriber (`capacity` buffered envelopes, min
+    /// 1).  Events published while the buffer is full are dropped and
+    /// counted, not delivered late — size the capacity for the
+    /// consumer's latency, not the sweep's length.
+    pub fn subscribe(&self, capacity: usize) -> EventStream {
+        let (tx, rx) = mpsc::sync_channel(capacity.max(1));
+        let mut subs = self.inner.subs.write().unwrap_or_else(|p| p.into_inner());
+        subs.retain(|s| !s.dead.load(Ordering::Relaxed));
+        subs.push(Sub { tx, dead: AtomicBool::new(false) });
+        self.inner.active.store(true, Ordering::Relaxed);
+        EventStream { rx }
+    }
+
+    /// Events dropped so far (full or mid-subscribe streams) — the
+    /// `events_dropped` metric, also carried by snapshot events.
+    pub fn dropped(&self) -> u64 {
+        self.inner.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Envelopes stamped so far (next `seq` to be assigned).
+    pub fn published(&self) -> u64 {
+        self.inner.seq.load(Ordering::Relaxed)
+    }
+
+    /// Has anyone ever subscribed?  Publishers may use this to skip
+    /// building expensive event payloads.
+    pub fn is_active(&self) -> bool {
+        self.inner.active.load(Ordering::Relaxed)
+    }
+}
+
+/// A subscriber's receiving end: an iterator/receiver of stamped
+/// envelopes.  Ends (`None`) when every [`EventBus`] clone has been
+/// dropped and the buffer is drained.
+pub struct EventStream {
+    rx: Receiver<Arc<Envelope>>,
+}
+
+impl EventStream {
+    /// Next envelope, blocking; `None` once the bus is gone and the
+    /// buffer is empty.
+    pub fn recv(&self) -> Option<Arc<Envelope>> {
+        self.rx.recv().ok()
+    }
+
+    /// Non-blocking variant: `None` when nothing is buffered *or* the
+    /// stream has ended.
+    pub fn try_recv(&self) -> Option<Arc<Envelope>> {
+        self.rx.try_recv().ok()
+    }
+
+    /// Bounded-wait variant, distinguishing "nothing yet" from "the
+    /// bus is gone" — what a polling frontend needs for its tick loop.
+    pub fn recv_timeout(&self, timeout: Duration) -> Tick {
+        match self.rx.recv_timeout(timeout) {
+            Ok(env) => Tick::Event(env),
+            Err(RecvTimeoutError::Timeout) => Tick::Timeout,
+            Err(RecvTimeoutError::Disconnected) => Tick::Ended,
+        }
+    }
+}
+
+/// Outcome of one bounded wait ([`EventStream::recv_timeout`]).
+pub enum Tick {
+    /// An envelope arrived.
+    Event(Arc<Envelope>),
+    /// Nothing arrived within the timeout; the stream is still live.
+    Timeout,
+    /// Every bus clone is gone and the buffer is drained.
+    Ended,
+}
+
+impl Iterator for EventStream {
+    type Item = Arc<Envelope>;
+
+    fn next(&mut self) -> Option<Arc<Envelope>> {
+        self.recv()
+    }
+}

@@ -1,0 +1,492 @@
+//! `repro-events` — the engine's typed telemetry subsystem.
+//!
+//! Everything the engine used to *print* (drive progress lines, worker
+//! restart notices, cache refresh tallies) is modelled here as a typed,
+//! versioned [`Event`], published through a bounded, never-blocking
+//! [`EventBus`], and serialized as one JSON object per line (JSONL) by
+//! the [`Envelope`] codec.  Frontends — the `--progress jsonl` stream,
+//! the feature-gated `tui` dashboard, the `serve` RPC's `events` verb
+//! — are thin consumers of the same stream; human-readable output is
+//! just another subscriber, never a special case inside the engine.
+//!
+//! # Wire format
+//!
+//! Each event is one line:
+//!
+//! ```json
+//! {"seq":3,"shard":1,"ts":1700000000000,"type":"job_done","v":1,...}
+//! ```
+//!
+//! * `v` — schema version ([`EVENTS_VERSION`]).  Bumped only for
+//!   breaking changes; additions of fields or event types do **not**
+//!   bump it.
+//! * `seq` — per-bus monotone sequence number (per *source* process; a
+//!   driver interleaving child streams re-emits their lines verbatim,
+//!   so (shard, seq) is unique, bare seq is not).
+//! * `ts` — wall-clock milliseconds since the Unix epoch.
+//! * `shard` — present only on events from a sharded source
+//!   ([`EventBus::with_source`]).
+//! * `type` + flattened per-variant fields — see [`Event`].
+//!
+//! # Versioning policy (additive-only)
+//!
+//! The schema evolves by *addition*: new event types and new fields may
+//! appear at any version; existing fields are never renamed, retyped,
+//! or removed without a `v` bump.  [`Envelope::parse`] therefore
+//! ignores unknown fields and maps unknown `type`s to
+//! [`Event::Unknown`] instead of erroring — an old reader tails a new
+//! stream losslessly for the events it knows.  The golden-file test in
+//! `tests/events.rs` pins the serialized form of every variant.
+//!
+//! # Outcome partition
+//!
+//! Every job in a sweep produces exactly one terminal [`Event::JobDone`]
+//! whose `status` is one of `executed` / `hit` / `dup` / `skip` /
+//! `cancelled` ([`JobStatus`]) — failures are `status:"executed"` with
+//! `ok:false`, not a sixth status — so for any completed sweep the
+//! per-status counts exactly partition [`Event::SweepStarted`]'s
+//! `total`, mirroring [`crate::engine::EngineReport`].
+
+mod bus;
+#[cfg(feature = "tui")]
+pub mod tui;
+
+pub use bus::{EventBus, EventStream, Tick};
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::util::Json;
+
+/// Schema version stamped into every envelope's `v` field.  Additive
+/// changes (new event types, new fields) do not bump it; see the
+/// module docs for the evolution contract.
+pub const EVENTS_VERSION: u64 = 1;
+
+/// Terminal disposition of one job within a sweep — the `status` field
+/// of [`Event::JobDone`].  Exactly one of these is emitted per
+/// submitted job, so the counts partition the sweep total.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum JobStatus {
+    /// Ran on a worker (successfully or not — see `JobDone::ok`).
+    Executed,
+    /// Satisfied by the run cache at submit time.
+    Hit,
+    /// Resolved from an identical job earlier in the same submission.
+    Dup,
+    /// Declined because its content address belongs to another shard.
+    Skip,
+    /// Cancelled while still queued; never executed.
+    Cancelled,
+}
+
+impl JobStatus {
+    /// The serialized form (the `status` field value).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobStatus::Executed => "executed",
+            JobStatus::Hit => "hit",
+            JobStatus::Dup => "dup",
+            JobStatus::Skip => "skip",
+            JobStatus::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<JobStatus> {
+        Ok(match s {
+            "executed" => JobStatus::Executed,
+            "hit" => JobStatus::Hit,
+            "dup" => JobStatus::Dup,
+            "skip" => JobStatus::Skip,
+            "cancelled" => JobStatus::Cancelled,
+            other => anyhow::bail!("unknown job status {other:?}"),
+        })
+    }
+}
+
+/// Per-sweep outcome counters carried by [`Event::SweepFinished`] —
+/// the event-stream mirror of [`crate::engine::EngineReport`]'s
+/// counters.  `executed + hits + dups + skips + cancelled == total`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SweepCounters {
+    pub total: usize,
+    pub executed: usize,
+    pub hits: usize,
+    pub dups: usize,
+    pub skips: usize,
+    pub cancelled: usize,
+    /// Executed jobs (or their dups) whose outcome was an error.
+    /// Overlaps `executed`/`dups`; not part of the partition.
+    pub failed: usize,
+}
+
+impl SweepCounters {
+    fn to_json(self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("cancelled".to_string(), num(self.cancelled));
+        m.insert("dups".to_string(), num(self.dups));
+        m.insert("executed".to_string(), num(self.executed));
+        m.insert("failed".to_string(), num(self.failed));
+        m.insert("hits".to_string(), num(self.hits));
+        m.insert("skips".to_string(), num(self.skips));
+        m.insert("total".to_string(), num(self.total));
+        Json::Obj(m)
+    }
+
+    fn from_json(j: &Json) -> Result<SweepCounters> {
+        Ok(SweepCounters {
+            total: j.get("total")?.as_usize()?,
+            executed: j.get("executed")?.as_usize()?,
+            hits: j.get("hits")?.as_usize()?,
+            dups: j.get("dups")?.as_usize()?,
+            skips: j.get("skips")?.as_usize()?,
+            cancelled: j.get("cancelled")?.as_usize()?,
+            failed: j.get("failed")?.as_usize()?,
+        })
+    }
+}
+
+/// One telemetry event.  Serialized names are pinned by the golden
+/// test in `tests/events.rs`; evolution is additive-only (see the
+/// module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A submission entered the engine (`total` jobs).
+    SweepStarted { sweep: u64, total: usize },
+    /// Every job of the submission has a terminal outcome.
+    SweepFinished { sweep: u64, counters: SweepCounters, duration_ms: u64 },
+    /// A job was accepted into a sweep (emitted for every job,
+    /// including those resolved immediately).
+    JobQueued { sweep: u64, idx: usize, key: String, manifest: String, label: String },
+    /// A job reached its terminal outcome.  `ok` mirrors the
+    /// `Ok`/`Err` of the [`crate::engine::JobOutcome`]; `duration_ms`
+    /// and `worker` are present only for `status:"executed"`.
+    JobDone {
+        sweep: u64,
+        idx: usize,
+        key: String,
+        manifest: String,
+        label: String,
+        status: JobStatus,
+        ok: bool,
+        error: Option<String>,
+        duration_ms: Option<u64>,
+        worker: Option<usize>,
+    },
+    /// An engine worker thread came up (and built its executor).
+    WorkerSpawned { worker: usize },
+    /// An out-of-process worker crashed/disconnected and its slot is
+    /// restarting; `stderr` is the teed last-stderr excerpt.
+    WorkerRestarted { worker: usize, restarts_left: usize, stderr: String },
+    /// A worker slot exhausted its restart budget and is giving up.
+    WorkerBudgetExhausted { worker: usize, stderr: String },
+    /// An incremental cache refresh surfaced sibling-shard records.
+    CacheRefresh { new_keys: usize, total_keys: usize },
+    /// A background tier-merge folded segments.
+    CacheCompaction { inputs: usize, output: String, entries: usize, deduped: usize },
+    /// The shard driver launched a shard process (`attempt` starts
+    /// at 1; restarts re-announce with higher attempts).
+    ShardSpawned { shard: usize, attempt: usize },
+    /// A shard process exited (`ok` = zero exit status).
+    ShardExit { shard: usize, ok: bool, detail: String },
+    /// The driver is relaunching a crashed shard.
+    ShardRestarted { shard: usize, attempt: usize, max_attempts: usize },
+    /// Periodic progress: merged cache view + throughput + ETA.
+    Snapshot {
+        done: usize,
+        total: Option<usize>,
+        cached_keys: usize,
+        segments: usize,
+        throughput: f64,
+        eta_s: Option<f64>,
+        pool_hits: usize,
+        pool_steals: usize,
+        dropped: u64,
+    },
+    /// A verbatim line forwarded from a child process's own event
+    /// stream.  Encodes as the inner line itself (no double wrapping):
+    /// the child already stamped its own envelope, including its
+    /// `shard` tag.
+    ChildLine { line: String },
+    /// Parse-side only: an event type this reader does not know.  The
+    /// envelope header (`v`/`seq`/`ts`/`shard`) is still available —
+    /// additive evolution never breaks a tailing consumer.
+    Unknown { kind: String },
+}
+
+impl Event {
+    /// The serialized `type` field value.
+    pub fn kind(&self) -> &str {
+        match self {
+            Event::SweepStarted { .. } => "sweep_started",
+            Event::SweepFinished { .. } => "sweep_finished",
+            Event::JobQueued { .. } => "job_queued",
+            Event::JobDone { .. } => "job_done",
+            Event::WorkerSpawned { .. } => "worker_spawned",
+            Event::WorkerRestarted { .. } => "worker_restarted",
+            Event::WorkerBudgetExhausted { .. } => "worker_budget_exhausted",
+            Event::CacheRefresh { .. } => "cache_refresh",
+            Event::CacheCompaction { .. } => "cache_compaction",
+            Event::ShardSpawned { .. } => "shard_spawned",
+            Event::ShardExit { .. } => "shard_exit",
+            Event::ShardRestarted { .. } => "shard_restarted",
+            Event::Snapshot { .. } => "snapshot",
+            Event::ChildLine { .. } => "child_line",
+            Event::Unknown { kind } => kind,
+        }
+    }
+}
+
+/// A stamped event: what [`EventBus::publish`] produces and what one
+/// JSONL line encodes.  The codec is pure — given the same envelope it
+/// always produces the same line — so golden tests pin exact strings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Envelope {
+    /// Schema version ([`EVENTS_VERSION`]).
+    pub v: u64,
+    /// Per-source monotone sequence number.
+    pub seq: u64,
+    /// Wall-clock milliseconds since the Unix epoch.
+    pub ts_ms: u64,
+    /// Source shard index, when the publishing bus was tagged.
+    pub shard: Option<usize>,
+    pub event: Event,
+}
+
+fn num(x: usize) -> Json {
+    Json::Num(x as f64)
+}
+
+fn num64(x: u64) -> Json {
+    Json::Num(x as f64)
+}
+
+fn st(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
+
+impl Envelope {
+    /// Serialize as one JSONL line (no trailing newline).
+    /// [`Event::ChildLine`] is the one pass-through: its inner line —
+    /// already a complete envelope stamped by the child — is returned
+    /// verbatim.
+    pub fn line(&self) -> String {
+        if let Event::ChildLine { line } = &self.event {
+            return line.clone();
+        }
+        let mut m = BTreeMap::new();
+        m.insert("v".to_string(), num64(self.v));
+        m.insert("seq".to_string(), num64(self.seq));
+        m.insert("ts".to_string(), num64(self.ts_ms));
+        if let Some(s) = self.shard {
+            m.insert("shard".to_string(), num(s));
+        }
+        m.insert("type".to_string(), st(self.event.kind()));
+        match &self.event {
+            Event::SweepStarted { sweep, total } => {
+                m.insert("sweep".to_string(), num64(*sweep));
+                m.insert("total".to_string(), num(*total));
+            }
+            Event::SweepFinished { sweep, counters, duration_ms } => {
+                m.insert("sweep".to_string(), num64(*sweep));
+                m.insert("counters".to_string(), counters.to_json());
+                m.insert("duration_ms".to_string(), num64(*duration_ms));
+            }
+            Event::JobQueued { sweep, idx, key, manifest, label } => {
+                m.insert("sweep".to_string(), num64(*sweep));
+                m.insert("idx".to_string(), num(*idx));
+                m.insert("key".to_string(), st(key));
+                m.insert("manifest".to_string(), st(manifest));
+                m.insert("label".to_string(), st(label));
+            }
+            Event::JobDone {
+                sweep,
+                idx,
+                key,
+                manifest,
+                label,
+                status,
+                ok,
+                error,
+                duration_ms,
+                worker,
+            } => {
+                m.insert("sweep".to_string(), num64(*sweep));
+                m.insert("idx".to_string(), num(*idx));
+                m.insert("key".to_string(), st(key));
+                m.insert("manifest".to_string(), st(manifest));
+                m.insert("label".to_string(), st(label));
+                m.insert("status".to_string(), st(status.as_str()));
+                m.insert("ok".to_string(), Json::Bool(*ok));
+                if let Some(e) = error {
+                    m.insert("error".to_string(), st(e));
+                }
+                if let Some(d) = duration_ms {
+                    m.insert("duration_ms".to_string(), num64(*d));
+                }
+                if let Some(w) = worker {
+                    m.insert("worker".to_string(), num(*w));
+                }
+            }
+            Event::WorkerSpawned { worker } => {
+                m.insert("worker".to_string(), num(*worker));
+            }
+            Event::WorkerRestarted { worker, restarts_left, stderr } => {
+                m.insert("worker".to_string(), num(*worker));
+                m.insert("restarts_left".to_string(), num(*restarts_left));
+                m.insert("stderr".to_string(), st(stderr));
+            }
+            Event::WorkerBudgetExhausted { worker, stderr } => {
+                m.insert("worker".to_string(), num(*worker));
+                m.insert("stderr".to_string(), st(stderr));
+            }
+            Event::CacheRefresh { new_keys, total_keys } => {
+                m.insert("new_keys".to_string(), num(*new_keys));
+                m.insert("total_keys".to_string(), num(*total_keys));
+            }
+            Event::CacheCompaction { inputs, output, entries, deduped } => {
+                m.insert("inputs".to_string(), num(*inputs));
+                m.insert("output".to_string(), st(output));
+                m.insert("entries".to_string(), num(*entries));
+                m.insert("deduped".to_string(), num(*deduped));
+            }
+            Event::ShardSpawned { shard, attempt } => {
+                m.insert("shard".to_string(), num(*shard));
+                m.insert("attempt".to_string(), num(*attempt));
+            }
+            Event::ShardExit { shard, ok, detail } => {
+                m.insert("shard".to_string(), num(*shard));
+                m.insert("ok".to_string(), Json::Bool(*ok));
+                m.insert("detail".to_string(), st(detail));
+            }
+            Event::ShardRestarted { shard, attempt, max_attempts } => {
+                m.insert("shard".to_string(), num(*shard));
+                m.insert("attempt".to_string(), num(*attempt));
+                m.insert("max_attempts".to_string(), num(*max_attempts));
+            }
+            Event::Snapshot {
+                done,
+                total,
+                cached_keys,
+                segments,
+                throughput,
+                eta_s,
+                pool_hits,
+                pool_steals,
+                dropped,
+            } => {
+                m.insert("done".to_string(), num(*done));
+                if let Some(t) = total {
+                    m.insert("total".to_string(), num(*t));
+                }
+                m.insert("cached_keys".to_string(), num(*cached_keys));
+                m.insert("segments".to_string(), num(*segments));
+                m.insert("throughput".to_string(), Json::Num(*throughput));
+                if let Some(e) = eta_s {
+                    m.insert("eta_s".to_string(), Json::Num(*e));
+                }
+                m.insert("pool_hits".to_string(), num(*pool_hits));
+                m.insert("pool_steals".to_string(), num(*pool_steals));
+                m.insert("dropped".to_string(), num64(*dropped));
+            }
+            Event::ChildLine { .. } => unreachable!("pass-through handled above"),
+            Event::Unknown { .. } => {}
+        }
+        Json::Obj(m).dump()
+    }
+
+    /// Parse one JSONL line back into an envelope.  Unknown fields are
+    /// ignored and unknown `type`s become [`Event::Unknown`] — the
+    /// additive-evolution contract.  Fails only on malformed JSON or a
+    /// known type missing one of its pinned fields.
+    pub fn parse(line: &str) -> Result<Envelope> {
+        let j = Json::parse(line).context("event line is not valid JSON")?;
+        let v = j.get("v")?.as_f64()? as u64;
+        let seq = j.get("seq")?.as_f64()? as u64;
+        let ts_ms = j.get("ts")?.as_f64()? as u64;
+        let shard = j.get("shard").ok().and_then(|x| x.as_usize().ok());
+        let kind = j.get("type")?.as_str()?.to_string();
+        let event = match kind.as_str() {
+            "sweep_started" => Event::SweepStarted {
+                sweep: j.get("sweep")?.as_f64()? as u64,
+                total: j.get("total")?.as_usize()?,
+            },
+            "sweep_finished" => Event::SweepFinished {
+                sweep: j.get("sweep")?.as_f64()? as u64,
+                counters: SweepCounters::from_json(j.get("counters")?)?,
+                duration_ms: j.get("duration_ms")?.as_f64()? as u64,
+            },
+            "job_queued" => Event::JobQueued {
+                sweep: j.get("sweep")?.as_f64()? as u64,
+                idx: j.get("idx")?.as_usize()?,
+                key: j.get("key")?.as_str()?.to_string(),
+                manifest: j.get("manifest")?.as_str()?.to_string(),
+                label: j.get("label")?.as_str()?.to_string(),
+            },
+            "job_done" => Event::JobDone {
+                sweep: j.get("sweep")?.as_f64()? as u64,
+                idx: j.get("idx")?.as_usize()?,
+                key: j.get("key")?.as_str()?.to_string(),
+                manifest: j.get("manifest")?.as_str()?.to_string(),
+                label: j.get("label")?.as_str()?.to_string(),
+                status: JobStatus::parse(j.get("status")?.as_str()?)?,
+                ok: j.get("ok")?.as_bool()?,
+                error: j.get("error").ok().and_then(|x| x.as_str().ok()).map(String::from),
+                duration_ms: j
+                    .get("duration_ms")
+                    .ok()
+                    .and_then(|x| x.as_f64().ok())
+                    .map(|d| d as u64),
+                worker: j.get("worker").ok().and_then(|x| x.as_usize().ok()),
+            },
+            "worker_spawned" => Event::WorkerSpawned { worker: j.get("worker")?.as_usize()? },
+            "worker_restarted" => Event::WorkerRestarted {
+                worker: j.get("worker")?.as_usize()?,
+                restarts_left: j.get("restarts_left")?.as_usize()?,
+                stderr: j.get("stderr")?.as_str()?.to_string(),
+            },
+            "worker_budget_exhausted" => Event::WorkerBudgetExhausted {
+                worker: j.get("worker")?.as_usize()?,
+                stderr: j.get("stderr")?.as_str()?.to_string(),
+            },
+            "cache_refresh" => Event::CacheRefresh {
+                new_keys: j.get("new_keys")?.as_usize()?,
+                total_keys: j.get("total_keys")?.as_usize()?,
+            },
+            "cache_compaction" => Event::CacheCompaction {
+                inputs: j.get("inputs")?.as_usize()?,
+                output: j.get("output")?.as_str()?.to_string(),
+                entries: j.get("entries")?.as_usize()?,
+                deduped: j.get("deduped")?.as_usize()?,
+            },
+            "shard_spawned" => Event::ShardSpawned {
+                shard: j.get("shard")?.as_usize()?,
+                attempt: j.get("attempt")?.as_usize()?,
+            },
+            "shard_exit" => Event::ShardExit {
+                shard: j.get("shard")?.as_usize()?,
+                ok: j.get("ok")?.as_bool()?,
+                detail: j.get("detail")?.as_str()?.to_string(),
+            },
+            "shard_restarted" => Event::ShardRestarted {
+                shard: j.get("shard")?.as_usize()?,
+                attempt: j.get("attempt")?.as_usize()?,
+                max_attempts: j.get("max_attempts")?.as_usize()?,
+            },
+            "snapshot" => Event::Snapshot {
+                done: j.get("done")?.as_usize()?,
+                total: j.get("total").ok().and_then(|x| x.as_usize().ok()),
+                cached_keys: j.get("cached_keys")?.as_usize()?,
+                segments: j.get("segments")?.as_usize()?,
+                throughput: j.get("throughput")?.as_f64()?,
+                eta_s: j.get("eta_s").ok().and_then(|x| x.as_f64().ok()),
+                pool_hits: j.get("pool_hits")?.as_usize()?,
+                pool_steals: j.get("pool_steals")?.as_usize()?,
+                dropped: j.get("dropped")?.as_f64()? as u64,
+            },
+            _ => Event::Unknown { kind },
+        };
+        Ok(Envelope { v, seq, ts_ms, shard, event })
+    }
+}

@@ -29,6 +29,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use super::events::{Event, JobStatus, SweepCounters};
 use super::job::{EngineReport, JobOutcome, SweepResult};
 use super::sched::{Reply, Scheduler, SubmissionCtl};
 use super::{lock, EngineJob, Shared};
@@ -52,6 +53,10 @@ pub struct SweepHandle {
     pub(crate) sched: Arc<Scheduler>,
     pub(crate) ctl: Arc<SubmissionCtl>,
     pub(crate) rx: Receiver<Reply>,
+    /// Sweep id in the engine's event stream.
+    pub(crate) sweep: u64,
+    /// Submission instant, for the `sweep_finished` duration.
+    pub(crate) t0: std::time::Instant,
     /// All jobs, in submission order.
     pub(crate) jobs: Vec<EngineJob>,
     /// Resolved outcomes by submission index (filled as replies arrive).
@@ -64,6 +69,10 @@ pub struct SweepHandle {
     pub(crate) dispatched: Vec<usize>,
     /// Replies still owed by the pool.
     pub(crate) outstanding: usize,
+    /// Outcomes with a terminal resolution (drives `sweep_finished`).
+    pub(crate) resolved: usize,
+    /// `sweep_finished` already published.
+    pub(crate) finished: bool,
     pub(crate) emitted: usize,
     // per-submission counters for the final report
     pub(crate) cache_hits: usize,
@@ -199,13 +208,61 @@ impl SweepHandle {
                         Err(e)
                     }
                 };
+                // the worker already published this job's `executed`
+                // event (with duration and worker id)
                 self.resolve(idx, outcome, false, false);
             }
             Reply::Cancelled { idx } => {
                 self.cancelled += 1;
-                self.resolve(idx, Err("cancelled before execution".to_string()), false, true);
+                let err = "cancelled before execution".to_string();
+                self.publish_done(idx, JobStatus::Cancelled, false, Some(err.clone()));
+                self.resolve(idx, Err(err), false, true);
             }
         }
+        self.maybe_finish();
+    }
+
+    /// One terminal `job_done` event for job `idx` (resolved on this
+    /// handle's side — workers publish their own `executed` events).
+    fn publish_done(&self, idx: usize, status: JobStatus, ok: bool, error: Option<String>) {
+        if !self.shared.events.is_active() {
+            return;
+        }
+        let job = &self.jobs[idx];
+        self.shared.events.publish(Event::JobDone {
+            sweep: self.sweep,
+            idx,
+            key: job.key(),
+            manifest: job.manifest.name.clone(),
+            label: job.config.label.clone(),
+            status,
+            ok,
+            error,
+            duration_ms: None,
+            worker: None,
+        });
+    }
+
+    /// Publish `sweep_finished` exactly once, when every job has a
+    /// terminal outcome (whether or not anyone has drained them yet).
+    pub(crate) fn maybe_finish(&mut self) {
+        if self.finished || self.resolved != self.jobs.len() {
+            return;
+        }
+        self.finished = true;
+        self.shared.events.publish(Event::SweepFinished {
+            sweep: self.sweep,
+            counters: SweepCounters {
+                total: self.jobs.len(),
+                executed: self.executed,
+                hits: self.cache_hits,
+                dups: self.deduped,
+                skips: self.skipped,
+                cancelled: self.cancelled,
+                failed: self.failed,
+            },
+            duration_ms: self.t0.elapsed().as_millis() as u64,
+        });
     }
 
     /// Record `idx`'s outcome, then derive its followers' outcomes.
@@ -225,6 +282,7 @@ impl SweepHandle {
             cancelled,
         });
         self.ready.push_back(idx);
+        self.resolved += 1;
         for f in std::mem::take(&mut self.followers_of[idx]) {
             let fo = match &outcome {
                 Ok(rec) => {
@@ -247,6 +305,12 @@ impl SweepHandle {
                     Err(e.clone())
                 }
             };
+            let (status, ok, err) = match (&fo, cancelled) {
+                (_, true) => (JobStatus::Cancelled, false, fo.as_ref().err().cloned()),
+                (Ok(_), _) => (JobStatus::Dup, true, None),
+                (Err(e), _) => (JobStatus::Dup, false, Some(e.clone())),
+            };
+            self.publish_done(f, status, ok, err);
             self.outcomes[f] = Some(JobOutcome {
                 idx: f,
                 job: self.jobs[f].clone(),
@@ -256,6 +320,7 @@ impl SweepHandle {
                 cancelled,
             });
             self.ready.push_back(f);
+            self.resolved += 1;
         }
     }
 
@@ -266,15 +331,13 @@ impl SweepHandle {
         for idx in self.dispatched.clone() {
             if self.outcomes[idx].is_none() {
                 self.failed += 1;
-                self.resolve(
-                    idx,
-                    Err("engine worker died before finishing this job".to_string()),
-                    false,
-                    false,
-                );
+                let err = "engine worker died before finishing this job".to_string();
+                self.publish_done(idx, JobStatus::Executed, false, Some(err.clone()));
+                self.resolve(idx, Err(err), false, false);
             }
         }
         self.outstanding = 0;
+        self.maybe_finish();
     }
 }
 

@@ -112,6 +112,41 @@
 //! without per-manifest warm state opts out of affinity tracking and
 //! gets plain priority+FIFO dispatch.
 //!
+//! # Observability
+//!
+//! Everything the engine used to *print* is modelled in the [`events`]
+//! module as a typed, versioned [`Event`] stream — the human-readable
+//! progress lines are now just one consumer among several:
+//!
+//! * **Taxonomy.**  Sweep lifecycle (`sweep_started` /
+//!   `sweep_finished` with the full counter partition), per-job
+//!   terminal outcomes (`job_queued` / `job_done` with key, manifest,
+//!   duration, and a `status` of `executed`/`hit`/`dup`/`skip`/
+//!   `cancelled` — exactly one per job, so the counts partition the
+//!   sweep total), worker lifecycle (`worker_spawned` /
+//!   `worker_restarted` / `worker_budget_exhausted` with teed stderr
+//!   excerpts), cache activity (`cache_refresh` / `cache_compaction`),
+//!   shard-driver lifecycle (`shard_spawned` / `shard_exit` /
+//!   `shard_restarted`), and periodic throughput/ETA `snapshot`s.
+//! * **Non-blocking bus.**  Publishers go through an [`EventBus`]
+//!   handle ([`EngineConfig::events`]); with no subscriber a publish is
+//!   one relaxed atomic load, and with subscribers it is `try_send`
+//!   onto bounded channels — a slow consumer loses events into the
+//!   counted [`EventBus::dropped`] metric, and never stalls a worker.
+//! * **Versioning.**  Envelopes carry `v` ([`events::EVENTS_VERSION`])
+//!   and evolve additively: new fields and event types appear without
+//!   a bump, and [`Envelope::parse`] ignores unknown fields / maps
+//!   unknown types to [`Event::Unknown`], so old readers tail new
+//!   streams.  Breaking changes (rename/retype/remove) require a `v`
+//!   bump; the golden test in `tests/events.rs` pins every variant's
+//!   serialized form.
+//!
+//! Consumers: `--progress jsonl[:PATH]` on `train`/`exp`/`drive`
+//! mirrors the stream to stdout or a file; `repro drive --tui`
+//! (feature `tui`, `events::tui`) renders a live dashboard; and the
+//! [`serve`] control plane re-serves the bus over the wire via the
+//! `events` RPC verb (`repro ctl watch`).
+//!
 //! # Everything underneath (unchanged contracts)
 //!
 //! * **Per-worker session pools with LRU eviction** ([`LruPool`]):
@@ -174,6 +209,7 @@
 pub mod backend;
 pub mod cache;
 pub mod driver;
+pub mod events;
 mod handle;
 mod job;
 mod lru;
@@ -193,6 +229,7 @@ pub use cache::{
     Compactor, CompactorConfig, FilterStats, GcOptions, GcReport, RunCache, SegmentStats, Shard,
     TierMergeReport,
 };
+pub use events::{Envelope, Event, EventBus, EventStream, JobStatus, SweepCounters};
 pub use handle::{JobHandle, SubmitOptions, SweepHandle};
 pub use job::{EngineJob, EngineReport, JobOutcome, SweepJob, SweepResult};
 pub use lru::LruPool;
@@ -258,6 +295,11 @@ pub struct EngineConfig {
     /// scheduler mirrors the same capacity when deciding which
     /// manifests are warm for a worker.
     pub max_sessions_per_worker: usize,
+    /// Publish telemetry onto this [`EventBus`] (see [`events`] and the
+    /// module-level *Observability* section).  `None` gives the engine
+    /// a private bus with no subscribers — publishes cost one atomic
+    /// load, so telemetry is free until someone listens.
+    pub events: Option<EventBus>,
 }
 
 impl Default for EngineConfig {
@@ -268,6 +310,7 @@ impl Default for EngineConfig {
             resume: false,
             shard: None,
             max_sessions_per_worker: 8,
+            events: None,
         }
     }
 }
@@ -300,6 +343,10 @@ pub(crate) struct Shared {
     pub(crate) cache: Mutex<RunCache>,
     pub(crate) stats: Mutex<EngineStats>,
     pub(crate) shard: Option<Shard>,
+    /// Telemetry fan-out (never blocks; see [`events`]).
+    pub(crate) events: EventBus,
+    /// Sweep-id allocator for this engine's event stream.
+    pub(crate) sweeps: std::sync::atomic::AtomicU64,
 }
 
 /// The unified run engine.  See the module docs for the architecture.
@@ -347,10 +394,16 @@ impl Engine {
             Some(dir) => RunCache::open_sharded(dir, cfg.shard, cfg.resume)?,
             None => RunCache::in_memory(),
         };
+        let events = cfg.events.clone().unwrap_or_default();
+        // hand the backend a publisher so out-of-process supervisors
+        // (restart / budget-exhaustion) report onto the same stream
+        backend.attach_events(&events);
         let shared = Arc::new(Shared {
             cache: Mutex::new(cache),
             stats: Mutex::new(EngineStats::default()),
             shard: cfg.shard,
+            events,
+            sweeps: std::sync::atomic::AtomicU64::new(0),
         });
         let sched = Arc::new(Scheduler::new(
             cfg.workers,
@@ -415,6 +468,20 @@ impl Engine {
         let keys: Vec<String> = jobs.iter().map(|j| j.key()).collect();
         let (tx, rx) = mpsc::channel();
         let ctl = self.sched.new_submission();
+        let sweep = self.shared.sweeps.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let bus = &self.shared.events;
+        bus.publish(Event::SweepStarted { sweep, total: n });
+        if bus.is_active() {
+            for (i, job) in jobs.iter().enumerate() {
+                bus.publish(Event::JobQueued {
+                    sweep,
+                    idx: i,
+                    key: keys[i].clone(),
+                    manifest: job.manifest.name.clone(),
+                    label: job.config.label.clone(),
+                });
+            }
+        }
 
         let mut outcomes: Vec<Option<JobOutcome>> = Vec::with_capacity(n);
         outcomes.resize_with(n, || None);
@@ -442,6 +509,20 @@ impl Engine {
                     });
                     ready.push_back(i);
                     cache_hits += 1;
+                    if bus.is_active() {
+                        bus.publish(Event::JobDone {
+                            sweep,
+                            idx: i,
+                            key: keys[i].clone(),
+                            manifest: job.manifest.name.clone(),
+                            label: job.config.label.clone(),
+                            status: JobStatus::Hit,
+                            ok: true,
+                            error: None,
+                            duration_ms: None,
+                            worker: None,
+                        });
+                    }
                 } else if !self.owns(&keys[i]) {
                     let shard = self.shared.shard.expect("owns() is false only when sharded");
                     outcomes[i] = Some(JobOutcome {
@@ -461,6 +542,23 @@ impl Engine {
                     });
                     ready.push_back(i);
                     skipped += 1;
+                    if bus.is_active() {
+                        let err = outcomes[i]
+                            .as_ref()
+                            .and_then(|o| o.outcome.as_ref().err().cloned());
+                        bus.publish(Event::JobDone {
+                            sweep,
+                            idx: i,
+                            key: keys[i].clone(),
+                            manifest: job.manifest.name.clone(),
+                            label: job.config.label.clone(),
+                            status: JobStatus::Skip,
+                            ok: false,
+                            error: err,
+                            duration_ms: None,
+                            worker: None,
+                        });
+                    }
                 } else if let Some(&p) = primary_of.get(keys[i].as_str()) {
                     followers_of[p].push(i);
                 } else {
@@ -480,6 +578,7 @@ impl Engine {
             .map(|&i| {
                 sched::Task::new(
                     opts.priority,
+                    sweep,
                     i,
                     keys[i].clone(),
                     jobs[i].clone(),
@@ -491,17 +590,22 @@ impl Engine {
         let outstanding = tasks.len();
         self.sched.enqueue(tasks);
 
-        SweepHandle {
+        let resolved = cache_hits + skipped;
+        let mut handle = SweepHandle {
             shared: Arc::clone(&self.shared),
             sched: Arc::clone(&self.sched),
             ctl,
             rx,
+            sweep,
+            t0: std::time::Instant::now(),
             jobs,
             outcomes,
             ready,
             followers_of,
             dispatched: to_run,
             outstanding,
+            resolved,
+            finished: false,
             emitted: 0,
             cache_hits,
             deduped: 0,
@@ -509,7 +613,10 @@ impl Engine {
             executed: 0,
             failed: 0,
             cancelled: 0,
-        }
+        };
+        // a sweep satisfied entirely at submit time finishes here
+        handle.maybe_finish();
+        handle
     }
 
     /// Submit one job non-blockingly (cache-aware like any other).
@@ -601,6 +708,13 @@ impl Engine {
         s
     }
 
+    /// The engine's telemetry bus — subscribe for the typed event
+    /// stream ([`events`]); clones publish onto the same bus.  This is
+    /// the bus passed as [`EngineConfig::events`], or a private one.
+    pub fn events(&self) -> &EventBus {
+        &self.shared.events
+    }
+
     /// Number of records currently addressable in the run cache.
     pub fn cache_len(&self) -> usize {
         lock(&self.shared.cache).len()
@@ -611,7 +725,14 @@ impl Engine {
     /// for in-memory caches).  Returns the number of newly visible
     /// records — the sharded drain's progress signal.
     pub fn refresh_cache(&self) -> usize {
-        lock(&self.shared.cache).refresh_from_disk()
+        let mut cache = lock(&self.shared.cache);
+        let new_keys = cache.refresh_from_disk();
+        let total_keys = cache.len();
+        drop(cache);
+        if new_keys > 0 {
+            self.shared.events.publish(Event::CacheRefresh { new_keys, total_keys });
+        }
+        new_keys
     }
 
     /// Run at most one background tier-merge step against this engine's
@@ -624,9 +745,18 @@ impl Engine {
     /// generation contract.
     pub fn compact_step(&self) -> Result<Option<TierMergeReport>> {
         let dir = lock(&self.shared.cache).dir().map(|d| d.to_path_buf());
-        match dir {
-            Some(dir) => Compactor::new(&dir).step(),
-            None => Ok(None),
+        let report = match dir {
+            Some(dir) => Compactor::new(&dir).step()?,
+            None => None,
+        };
+        if let Some(rep) = &report {
+            self.shared.events.publish(Event::CacheCompaction {
+                inputs: rep.inputs.len(),
+                output: rep.output.clone(),
+                entries: rep.entries,
+                deduped: rep.deduped,
+            });
         }
+        Ok(report)
     }
 }

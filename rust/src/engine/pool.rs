@@ -33,6 +33,7 @@ use anyhow::Result;
 use crate::train::RunRecord;
 
 use super::backend::{Backend, Executor as _};
+use super::events::{Event, JobStatus};
 use super::job::EngineJob;
 use super::sched::{Reply, Scheduler};
 use super::{lock, Shared};
@@ -70,7 +71,9 @@ impl WorkerPool {
 
 fn worker_loop(w: usize, sched: &Scheduler, shared: &Shared, backend: &dyn Backend) {
     let mut exec = backend.spawn_executor(w);
+    shared.events.publish(Event::WorkerSpawned { worker: w });
     while let Some(task) = sched.next_for(w) {
+        let t0 = std::time::Instant::now();
         // AssertUnwindSafe: worst case a panic leaves the executor's
         // session pool with a half-inserted entry, which is rebuilt on
         // the next miss — strictly better than losing the worker.
@@ -97,6 +100,22 @@ fn worker_loop(w: usize, sched: &Scheduler, shared: &Shared, backend: &dyn Backe
             if result.is_err() {
                 stats.failed += 1;
             }
+        }
+        // publish before replying: a consumer woken by the outcome may
+        // rely on the event already being on the bus
+        if shared.events.is_active() {
+            shared.events.publish(Event::JobDone {
+                sweep: task.sweep,
+                idx: task.idx,
+                key: task.key.clone(),
+                manifest: task.job.manifest.name.clone(),
+                label: task.job.config.label.clone(),
+                status: JobStatus::Executed,
+                ok: result.is_ok(),
+                error: result.as_ref().err().cloned(),
+                duration_ms: Some(t0.elapsed().as_millis() as u64),
+                worker: Some(w),
+            });
         }
         let _ = task.reply.send(Reply::Done { idx: task.idx, result });
     }

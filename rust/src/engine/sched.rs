@@ -73,6 +73,9 @@ pub(crate) struct Task {
     /// warmness), assigned at enqueue time.
     seq: u64,
     pub(crate) priority: i32,
+    /// Sweep id of the owning submission in the engine's event stream
+    /// (stamped into the worker's `job_done` event).
+    pub(crate) sweep: u64,
     /// Index of this job within its submission (outcome addressing).
     pub(crate) idx: usize,
     /// Content address, precomputed at submit time (the worker persists
@@ -86,6 +89,7 @@ pub(crate) struct Task {
 impl Task {
     pub(crate) fn new(
         priority: i32,
+        sweep: u64,
         idx: usize,
         key: String,
         job: EngineJob,
@@ -93,7 +97,7 @@ impl Task {
         ctl: Arc<SubmissionCtl>,
     ) -> Task {
         // seq is assigned under the scheduler lock at enqueue time
-        Task { seq: 0, priority, idx, key, job, reply, ctl }
+        Task { seq: 0, priority, sweep, idx, key, job, reply, ctl }
     }
 }
 

@@ -21,6 +21,11 @@
 //! * `cache-stats` — refresh and report the run cache (records, and
 //!   when the engine persists to disk, watcher-side unique keys and
 //!   segment count).
+//! * `events` — subscribe to the engine's telemetry bus
+//!   ([`crate::engine::events`]): the connection switches to *stream
+//!   mode* and every event envelope is re-served as an ok-reply frame
+//!   tagged with the subscribing request's id, until the client hangs
+//!   up or the daemon exits.  `repro ctl watch` is the tailing client.
 //! * `shutdown` — cancel and drain every sweep, reply, then exit the
 //!   daemon.
 //!
@@ -37,6 +42,13 @@
 //! commands (outcomes drain and counters advance even while no client
 //! is connected).  Client threads only parse frames and wait on their
 //! reply channel — no engine state crosses threads.
+//!
+//! The owner loop's command wait uses an [`IdleBackoff`]: each quiet
+//! round doubles the poll timeout from [`IDLE_BACKOFF_FLOOR`] up to
+//! [`IDLE_BACKOFF_CAP`], and any activity — a command, a pumped sweep
+//! outcome — snaps it back to the floor.  A busy daemon keeps the old
+//! 10 ms-class responsiveness; an idle one stops spinning its core at
+//! 100 Hz.
 
 use std::collections::{BTreeMap, HashMap};
 use std::io::{BufRead, BufReader, Write};
@@ -53,7 +65,57 @@ use crate::util::Json;
 
 use super::backend::{wire, Backend, Endpoint, Listener};
 use super::cache::{corpus_json, CacheWatcher};
-use super::{Engine, EngineConfig, EngineJob, SweepHandle};
+use super::{Engine, EngineConfig, EngineJob, EventStream, SweepHandle};
+
+/// Floor of the engine-owner loop's idle poll timeout (and the wait it
+/// snaps back to on any activity).
+pub const IDLE_BACKOFF_FLOOR: Duration = Duration::from_millis(1);
+
+/// Ceiling of the idle poll timeout: the longest a quiet daemon sleeps
+/// between looking for commands (and, equivalently, the worst-case
+/// extra latency the first command after a long lull can see).
+pub const IDLE_BACKOFF_CAP: Duration = Duration::from_millis(250);
+
+/// Exponential idle backoff for a poll loop: every quiet round doubles
+/// the next wait ([`IDLE_BACKOFF_FLOOR`] → [`IDLE_BACKOFF_CAP`]), and
+/// [`IdleBackoff::on_activity`] snaps back to the floor.  Replaces the
+/// old fixed 10 ms `recv_timeout` spin, which burned a core at 100 Hz
+/// on a daemon with nothing to do.
+#[derive(Debug)]
+pub struct IdleBackoff {
+    current: Duration,
+}
+
+impl IdleBackoff {
+    /// Start at the floor.
+    pub fn new() -> IdleBackoff {
+        IdleBackoff { current: IDLE_BACKOFF_FLOOR }
+    }
+
+    /// The wait for the next idle poll.  Each call doubles the one
+    /// after it, up to [`IDLE_BACKOFF_CAP`]; never below the floor.
+    pub fn next_wait(&mut self) -> Duration {
+        let wait = self.current;
+        self.current = (self.current * 2).min(IDLE_BACKOFF_CAP);
+        wait
+    }
+
+    /// Something happened: snap the next wait back to the floor.
+    pub fn on_activity(&mut self) {
+        self.current = IDLE_BACKOFF_FLOOR;
+    }
+
+    /// The wait the next [`IdleBackoff::next_wait`] call would return.
+    pub fn current(&self) -> Duration {
+        self.current
+    }
+}
+
+impl Default for IdleBackoff {
+    fn default() -> Self {
+        IdleBackoff::new()
+    }
+}
 
 /// Construction options for [`serve`].
 pub struct ServeOptions {
@@ -140,6 +202,10 @@ enum Cmd {
     Status { sweep: Option<u64>, reply: mpsc::Sender<Result<Json, String>> },
     Cancel { sweep: u64, reply: mpsc::Sender<Result<Json, String>> },
     CacheStats { reply: mpsc::Sender<Result<Json, String>> },
+    /// Subscribe to the engine's event bus; the reply carries the
+    /// consuming end, which the client thread then drains onto its
+    /// socket.
+    Subscribe { reply: mpsc::Sender<EventStream> },
     Shutdown { reply: mpsc::Sender<Result<Json, String>> },
 }
 
@@ -170,6 +236,31 @@ fn client_loop(
                 break;
             }
         };
+        // `events` flips the connection into stream mode: frames flow
+        // one way (bus → client) until one side hangs up, so it cannot
+        // go through the one-reply dispatch round trip below
+        if req.verb == "events" {
+            let (sub_tx, sub_rx) = mpsc::channel();
+            if tx.send(Cmd::Subscribe { reply: sub_tx }).is_err() {
+                let frame = wire::rpc_err_line(req.id, "server is shutting down");
+                let _ = wire::write_frame(&mut output, &frame);
+                break;
+            }
+            let Ok(stream) = sub_rx.recv() else {
+                let frame = wire::rpc_err_line(req.id, "server dropped the request");
+                let _ = wire::write_frame(&mut output, &frame);
+                break;
+            };
+            // each envelope rides the existing id-tagged reply wire:
+            // the serialized line is spliced raw, never re-encoded
+            while let Some(env) = stream.recv() {
+                let frame = wire::rpc_ok_line(req.id, &Json::Raw(env.line()));
+                if wire::write_frame(&mut output, &frame).is_err() {
+                    break;
+                }
+            }
+            break;
+        }
         let frame = match dispatch(&tx, &req) {
             Ok(result) => wire::rpc_ok_line(req.id, &result),
             Err(e) => wire::rpc_err_line(req.id, &e),
@@ -219,7 +310,8 @@ fn dispatch(tx: &mpsc::Sender<Cmd>, req: &wire::RpcRequest) -> Result<Json, Stri
         "shutdown" => Cmd::Shutdown { reply: reply_tx },
         other => {
             return Err(format!(
-                "unknown verb {other:?} (expected submit/status/cancel/cache-stats/shutdown)"
+                "unknown verb {other:?} (expected \
+                 submit/status/cancel/cache-stats/events/shutdown)"
             ))
         }
     };
@@ -257,9 +349,20 @@ fn engine_owner_loop(
     let mut sweeps: BTreeMap<u64, SweepHandle> = BTreeMap::new();
     let mut watcher = cache_dir.as_deref().map(CacheWatcher::new);
     let mut next_sweep: u64 = 1;
+    let mut backoff = IdleBackoff::new();
     loop {
-        match cmd_rx.recv_timeout(Duration::from_millis(10)) {
-            Ok(Cmd::Submit { jobs, reply }) => {
+        // quiet rounds back the poll timeout off exponentially; any
+        // command (below) or pumped outcome (loop tail) resets it
+        let cmd = match cmd_rx.recv_timeout(backoff.next_wait()) {
+            Ok(cmd) => {
+                backoff.on_activity();
+                Some(cmd)
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        };
+        match cmd {
+            Some(Cmd::Submit { jobs, reply }) => {
                 let r = do_submit(
                     &engine,
                     registry.as_ref(),
@@ -272,10 +375,10 @@ fn engine_owner_loop(
                 );
                 let _ = reply.send(r);
             }
-            Ok(Cmd::Status { sweep, reply }) => {
+            Some(Cmd::Status { sweep, reply }) => {
                 let _ = reply.send(do_status(&engine, &sweeps, sweep));
             }
-            Ok(Cmd::Cancel { sweep, reply }) => {
+            Some(Cmd::Cancel { sweep, reply }) => {
                 let r = match sweeps.get_mut(&sweep) {
                     Some(h) => {
                         h.cancel();
@@ -285,7 +388,7 @@ fn engine_owner_loop(
                 };
                 let _ = reply.send(r);
             }
-            Ok(Cmd::CacheStats { reply }) => {
+            Some(Cmd::CacheStats { reply }) => {
                 engine.refresh_cache();
                 let mut pairs = vec![("records", num(engine.cache_len()))];
                 if let Some(w) = watcher.as_mut() {
@@ -295,7 +398,13 @@ fn engine_owner_loop(
                 }
                 let _ = reply.send(Ok(obj(pairs)));
             }
-            Ok(Cmd::Shutdown { reply }) => {
+            Some(Cmd::Subscribe { reply }) => {
+                // capacity bounds a stalled watcher's damage: once its
+                // buffer fills, its events drop (counted on the bus)
+                // instead of backing up into publishers
+                let _ = reply.send(engine.events().subscribe(1024));
+            }
+            Some(Cmd::Shutdown { reply }) => {
                 // cancel everything queued, then drain fully: in-flight
                 // jobs complete and are cached before the daemon exits
                 for h in sweeps.values_mut() {
@@ -315,13 +424,18 @@ fn engine_owner_loop(
                 }
                 break;
             }
-            Err(mpsc::RecvTimeoutError::Timeout) => {}
-            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            None => {}
         }
         // pump live sweeps between commands: outcomes drain (the worker
         // already cached them) and the per-sweep counters stay current
+        let mut pumped = false;
         for h in sweeps.values_mut() {
-            while h.try_recv().is_some() {}
+            while h.try_recv().is_some() {
+                pumped = true;
+            }
+        }
+        if pumped {
+            backoff.on_activity();
         }
     }
     // dropping the engine joins its workers
@@ -474,6 +588,51 @@ fn do_status(
 mod tests {
     use super::*;
     use crate::engine::MockBackend;
+
+    #[test]
+    fn idle_backoff_doubles_to_cap_and_snaps_back_on_activity() {
+        let mut b = IdleBackoff::new();
+        assert_eq!(b.next_wait(), IDLE_BACKOFF_FLOOR);
+        let mut prev = IDLE_BACKOFF_FLOOR;
+        for _ in 0..16 {
+            let w = b.next_wait();
+            assert!(w >= prev, "idle waits must be monotone");
+            assert!(w <= IDLE_BACKOFF_CAP, "idle waits must respect the cap");
+            prev = w;
+        }
+        assert_eq!(b.current(), IDLE_BACKOFF_CAP, "long lulls settle at the cap");
+        b.on_activity();
+        assert_eq!(b.next_wait(), IDLE_BACKOFF_FLOOR, "activity snaps to the floor");
+    }
+
+    /// The owner loop's wait primitive — an empty command channel
+    /// polled under [`IdleBackoff`] — must actually *block* for at
+    /// least the backoff floor on every quiet round.  This pins out
+    /// the old fixed-10 ms spin's failure mode (a zero-length or
+    /// busy-wait poll burning a core on an idle daemon).
+    #[test]
+    fn quiet_owner_loop_sleeps_at_least_the_backoff_floor() {
+        let (_tx, rx) = mpsc::channel::<Cmd>();
+        let mut backoff = IdleBackoff::new();
+        let t0 = std::time::Instant::now();
+        let mut waited = Duration::ZERO;
+        for _ in 0..4 {
+            let wait = backoff.next_wait();
+            assert!(wait >= IDLE_BACKOFF_FLOOR);
+            match rx.recv_timeout(wait) {
+                Err(mpsc::RecvTimeoutError::Timeout) => waited += wait,
+                Ok(_) => panic!("quiet channel yielded a command"),
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    panic!("sender is still alive; channel cannot disconnect")
+                }
+            }
+        }
+        assert!(
+            t0.elapsed() >= waited,
+            "4 quiet rounds must sleep >= {waited:?} total, measured {:?}",
+            t0.elapsed()
+        );
+    }
 
     /// End-to-end over loopback with no subprocess: hello handshake,
     /// submit/status/unknown-verb/shutdown round trips, ids echoed.

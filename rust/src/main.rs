@@ -12,9 +12,11 @@
 //!                               (the dialed side of --backend network)
 //!   serve  [--addr ep]          long-lived coordinator daemon: owns an
 //!                               engine, exposes submit/status/cancel/
-//!                               cache-stats/shutdown over a JSONL RPC
-//!                               socket
+//!                               cache-stats/events/shutdown over a
+//!                               JSONL RPC socket
 //!   ctl    <verb> --addr ep     one RPC against a live `repro serve`
+//!                               (`ctl watch` tails the daemon's event
+//!                               stream)
 //!   cache <stats|gc|compact>    run-cache lifecycle (segments, GC,
 //!                               background-style tiered merges)
 //!   report                      collate results/ into EXPERIMENTS-style md
@@ -126,6 +128,13 @@ fn main() -> Result<()> {
                  \x20                 [--bg-compact] spawn, monitor and restart the N shard\n\
                  \x20                             processes of `exp --shard` (one shared cache;\n\
                  \x20                             --bg-compact tier-merges idle segments)\n\
+                 \x20                 [--progress jsonl[:PATH]] stream typed telemetry events\n\
+                 \x20                             as JSON lines (stderr, or append to PATH) —\n\
+                 \x20                             also accepted by train/exp; drive merges its\n\
+                 \x20                             children's shard-tagged streams into its own\n\
+                 \x20                 [--tui]     live sweep dashboard (shard bars, cache/pool\n\
+                 \x20                             panels, recent failures; needs a build with\n\
+                 \x20                             --features tui)\n\
                  \x20 worker  [--mock] [--artifacts DIR] [--sessions N]   serve engine jobs on\n\
                  \x20                             stdin/stdout (spawned by --backend process)\n\
                  \x20 worker  --listen HOST:PORT|unix:/path [--mock]      serve engine jobs on a\n\
@@ -135,10 +144,13 @@ fn main() -> Result<()> {
                  \x20         [--backend network|process|mock|in-process] [--cache-dir DIR]\n\
                  \x20         [--resume]  long-lived coordinator daemon: owns one engine and\n\
                  \x20                             answers submit/status/cancel/cache-stats/\n\
-                 \x20                             shutdown RPCs (prints `serving ADDR` when up)\n\
-                 \x20 ctl     <submit|status|cancel|cache-stats|shutdown> --addr ADDR\n\
+                 \x20                             events/shutdown RPCs (prints `serving ADDR`\n\
+                 \x20                             when up)\n\
+                 \x20 ctl     <submit|status|cancel|cache-stats|watch|shutdown> --addr ADDR\n\
                  \x20         [--jobs FILE] [--sweep N]  one RPC against a live serve daemon;\n\
-                 \x20                             prints the JSON result on stdout\n\
+                 \x20                             prints the JSON result on stdout (`watch`\n\
+                 \x20                             tails the daemon's event stream as JSONL\n\
+                 \x20                             until the daemon exits)\n\
                  \x20 cache   stats [--cache-dir DIR]                     segment/key statistics\n\
                  \x20 cache   gc    [--cache-dir DIR] [--older-than 30d] [--manifest NAME]\n\
                  \x20               [--max-bytes 512m] [--chunk-entries N] [--dry-run]\n\
@@ -286,7 +298,14 @@ fn train(args: &Args) -> Result<()> {
         ..Default::default()
     }));
     let (cache_dir, resume) = args.cache_opts();
-    let engine_cfg = EngineConfig { workers: 1, cache_dir, resume, ..EngineConfig::default() };
+    let tap = progress_tap(args, None)?;
+    let engine_cfg = EngineConfig {
+        workers: 1,
+        cache_dir,
+        resume,
+        events: tap.as_ref().map(|(bus, _)| bus.clone()),
+        ..EngineConfig::default()
+    };
     let engine = match make_backend(args, &args.get("artifacts", "artifacts"))? {
         Some(backend) => Engine::with_backend(engine_cfg, backend)?,
         None => Engine::new(engine_cfg)?,
@@ -316,6 +335,13 @@ fn train(args: &Args) -> Result<()> {
     );
     if !args.has("quiet") {
         print_engine_stats(&engine);
+    }
+    // the engine's bus clone must go before the writer can see
+    // end-of-stream
+    drop(engine);
+    if let Some((bus, writer)) = tap {
+        drop(bus);
+        let _ = writer.join();
     }
     Ok(())
 }
@@ -365,6 +391,10 @@ fn exp(args: &Args) -> Result<()> {
             println!("backend: {} ({} engine workers)", b.name(), workers);
         }
     }
+    // drive children arrive here as `exp --shard i/n --progress
+    // jsonl:FILE`; tagging the bus with the shard index keeps the
+    // driver's merged stream attributable per shard
+    let tap = progress_tap(args, shard.map(|s| s.index))?;
     let ctx = ExpContext::with_backend(
         &artifacts,
         &out,
@@ -374,6 +404,7 @@ fn exp(args: &Args) -> Result<()> {
         resume,
         shard,
         backend,
+        tap.as_ref().map(|(bus, _)| bus.clone()),
     )?;
     // A sharded drain executes only this process's slice; when the
     // experiment next needs a foreign run, retry after merging in what
@@ -437,6 +468,13 @@ fn exp(args: &Args) -> Result<()> {
     if !args.has("quiet") {
         print_engine_stats(&ctx.engine);
     }
+    // the engine's bus clone (inside ctx) must go before the writer
+    // can see end-of-stream
+    drop(ctx);
+    if let Some((bus, writer)) = tap {
+        drop(bus);
+        let _ = writer.join();
+    }
     Ok(())
 }
 
@@ -464,11 +502,57 @@ fn drive_cmd(args: &Args) -> Result<()> {
     let artifacts = args.get("artifacts", "artifacts");
     let quick = args.has("quick");
 
+    // one bus feeds every consumer: the --progress JSONL writer, the
+    // --tui dashboard, and the driver's own lifecycle events
+    let tui_wanted = args.has("tui");
+    #[cfg(not(feature = "tui"))]
+    if tui_wanted {
+        bail!(
+            "`repro drive --tui` needs the dashboard compiled in; rebuild with \
+             --features tui"
+        );
+    }
+    let tap = progress_tap(args, None)?;
+    let (bus, writer) = match tap {
+        Some((bus, writer)) => (Some(bus), Some(writer)),
+        None if tui_wanted => (Some(umup::engine::EventBus::new()), None),
+        None => (None, None),
+    };
+    #[cfg(feature = "tui")]
+    let tui_thread = match (tui_wanted, &bus) {
+        (true, Some(bus)) => {
+            let stream = bus.subscribe(4096);
+            Some(std::thread::spawn(move || {
+                let mut out = std::io::stdout();
+                if let Err(e) = umup::engine::events::tui::run(stream, &mut out) {
+                    eprintln!("drive: tui exited with error: {e:#}");
+                }
+            }))
+        }
+        _ => None,
+    };
+    // children stream their own shard-tagged events into per-shard
+    // JSONL files under the cache dir; the driver tails and merges them
+    let child_event_files: Vec<PathBuf> = if bus.is_some() {
+        std::fs::create_dir_all(&cache_dir)
+            .with_context(|| format!("creating {}", cache_dir.display()))?;
+        (0..shards).map(|i| cache_dir.join(format!("events.{i}.jsonl"))).collect()
+    } else {
+        Vec::new()
+    };
+    for f in &child_event_files {
+        // children open in append mode (restarts continue the stream);
+        // stale streams from an earlier drive must not leak in
+        let _ = std::fs::remove_file(f);
+    }
+
     let cfg = DriveConfig {
         shards,
         cache_dir: cache_dir.clone(),
         max_restarts_per_shard: args.get("max-restarts", "2").parse()?,
         background_compaction: args.has("bg-compact"),
+        events: bus.clone(),
+        child_event_files: child_event_files.clone(),
         ..DriveConfig::default()
     };
     println!(
@@ -500,6 +584,10 @@ fn drive_cmd(args: &Args) -> Result<()> {
         if let Some(b) = args.flags.get("backend") {
             cmd.arg("--backend").arg(b);
         }
+        if !child_event_files.is_empty() {
+            cmd.arg("--progress")
+                .arg(format!("jsonl:{}", child_event_files[shard.index].display()));
+        }
         cmd
     })?;
     println!(
@@ -509,6 +597,17 @@ fn drive_cmd(args: &Args) -> Result<()> {
         report.restarts,
         report.cache_entries
     );
+    // the driver config's bus clone must go before the consumers can
+    // see end-of-stream
+    drop(cfg);
+    drop(bus);
+    if let Some(w) = writer {
+        let _ = w.join();
+    }
+    #[cfg(feature = "tui")]
+    if let Some(t) = tui_thread {
+        let _ = t.join();
+    }
     Ok(())
 }
 
@@ -574,6 +673,52 @@ fn print_engine_stats(engine: &umup::engine::Engine) {
         s.pool_hits,
         s.pool_steals
     );
+}
+
+/// The `--progress jsonl[:PATH]` tap shared by `train`/`exp`/`drive`:
+/// build an event bus (envelopes tagged with `shard` when this process
+/// is one drive child) and spawn a writer thread draining every event
+/// to the JSONL sink — stderr for bare `jsonl`, an append-mode file
+/// for `jsonl:PATH`.  Returns `None` when the flag is absent.  The
+/// writer exits when the last bus clone (engine, driver config, the
+/// returned one) is dropped; join it after dropping them.
+#[cfg(feature = "xla")]
+fn progress_tap(
+    args: &Args,
+    shard: Option<usize>,
+) -> Result<Option<(umup::engine::EventBus, std::thread::JoinHandle<()>)>> {
+    use std::io::Write as _;
+
+    let Some(spec) = args.flags.get("progress") else {
+        return Ok(None);
+    };
+    let mut sink: Box<dyn std::io::Write + Send> = match spec.as_str() {
+        "jsonl" => Box::new(std::io::stderr()),
+        s => match s.strip_prefix("jsonl:") {
+            Some(path) => Box::new(
+                std::fs::OpenOptions::new()
+                    .create(true)
+                    .append(true)
+                    .open(path)
+                    .with_context(|| format!("opening --progress file {path}"))?,
+            ),
+            None => bail!("bad --progress {s:?} (expected jsonl or jsonl:PATH)"),
+        },
+    };
+    let bus = match shard {
+        Some(i) => umup::engine::EventBus::new().with_source(i),
+        None => umup::engine::EventBus::new(),
+    };
+    let stream = bus.subscribe(4096);
+    let writer = std::thread::spawn(move || {
+        for env in stream {
+            if writeln!(sink, "{}", env.line()).is_err() {
+                break;
+            }
+        }
+        let _ = sink.flush();
+    });
+    Ok(Some((bus, writer)))
 }
 
 /// `repro worker`: serve the engine's wire protocol on stdin/stdout —
@@ -821,8 +966,8 @@ fn worker_xla_serve(_args: &Args) -> Result<()> {
 
 /// `repro serve`: the long-lived coordinator daemon — owns one engine
 /// (over any backend) and answers submit/status/cancel/cache-stats/
-/// shutdown RPCs on a JSONL socket (`repro ctl` is the client; the
-/// protocol lives in `umup::engine::serve`).
+/// events/shutdown RPCs on a JSONL socket (`repro ctl` is the client;
+/// the protocol lives in `umup::engine::serve`).
 fn serve_cmd(args: &Args) -> Result<()> {
     use std::io::Write as _;
     use std::sync::Arc;
@@ -898,7 +1043,9 @@ fn in_process_backend(_sessions: usize) -> Result<std::sync::Arc<dyn umup::engin
 
 /// `repro ctl <verb>`: one RPC against a live `repro serve` daemon.
 /// Prints the verb's JSON result on stdout; server-side errors become
-/// a non-zero exit.
+/// a non-zero exit.  `ctl watch` is the exception: it subscribes to
+/// the daemon's `events` stream and prints one JSONL envelope per
+/// event until the daemon exits.
 fn ctl_cmd(args: &Args) -> Result<()> {
     use std::io::BufReader;
 
@@ -906,7 +1053,7 @@ fn ctl_cmd(args: &Args) -> Result<()> {
     use umup::engine::Endpoint;
     use umup::util::Json;
 
-    const USAGE: &str = "usage: repro ctl <submit|status|cancel|cache-stats|shutdown> \
+    const USAGE: &str = "usage: repro ctl <submit|status|cancel|cache-stats|watch|shutdown> \
                          --addr HOST:PORT|unix:/path [--jobs FILE] [--sweep N]";
     let verb = args.positional.get(1).map(String::as_str).unwrap_or("");
     let params = match verb {
@@ -942,7 +1089,7 @@ fn ctl_cmd(args: &Args) -> Result<()> {
             m.insert("sweep".to_string(), Json::Num(s as f64));
             Json::Obj(m)
         }
-        "cache-stats" | "shutdown" => Json::Obj(BTreeMap::new()),
+        "cache-stats" | "shutdown" | "watch" => Json::Obj(BTreeMap::new()),
         other => bail!("unknown ctl verb {other:?}\n{USAGE}"),
     };
     let addr = match args.flags.get("addr") {
@@ -956,6 +1103,19 @@ fn ctl_cmd(args: &Args) -> Result<()> {
         wire::read_frame(&mut r)?.context("server hung up before its hello frame")?;
     // a worker socket here fails with the cross-wiring hint from wire.rs
     wire::check_serve_hello(&hello)?;
+    // `watch` is the tailing client of the daemon's `events` stream
+    // verb: print each event envelope as it arrives, until the daemon
+    // exits (EOF) or the stream errors
+    if verb == "watch" {
+        wire::write_frame(&mut w, &wire::rpc_request_line(1, "events", &params))?;
+        while let Some(line) = wire::read_frame(&mut r)? {
+            match wire::decode_rpc_reply(&line)? {
+                wire::RpcReply::Ok { result, .. } => println!("{}", result.dump()),
+                wire::RpcReply::Err { error, .. } => bail!("server error: {error}"),
+            }
+        }
+        return Ok(());
+    }
     wire::write_frame(&mut w, &wire::rpc_request_line(1, verb, &params))?;
     let line = wire::read_frame(&mut r)?.context("server hung up before replying")?;
     match wire::decode_rpc_reply(&line)? {

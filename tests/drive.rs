@@ -141,6 +141,7 @@ fn driven_four_shards_with_one_crash_match_single_process() {
         max_restarts_per_shard: 2,
         poll_interval: Duration::from_millis(25),
         progress: false,
+        ..DriveConfig::default()
     };
     let report = drive(&cfg, |shard| {
         let mut cmd = child_cmd(&exe, &sharded, Some(shard));
@@ -196,6 +197,7 @@ fn drive_fails_once_restart_budget_is_exhausted() {
         max_restarts_per_shard: 1,
         poll_interval: Duration::from_millis(10),
         progress: false,
+        ..DriveConfig::default()
     };
     let err = drive(&cfg, |shard| {
         let mut cmd = Command::new(&exe);
