@@ -1,20 +1,144 @@
-//! Bench: software numeric-format codec throughput (the Rust half of the
-//! paper's Appendix K claim that static-scale quantization is cheap).
+//! Bench: the two codec hot paths.
+//!
+//! 1. Software numeric formats (the Rust half of the paper's Appendix K
+//!    claim that static-scale quantization is cheap): quantize-slice
+//!    throughput per format, RMS stats, scalar latency.
+//! 2. The worker wire codec (`engine::backend::wire`): the allocating
+//!    encoders vs their `_into` twins that the pipelined dispatch path
+//!    reuses caller scratch through — plus a hard steady-state check,
+//!    via a counting global allocator, that one full
+//!    encode→frame→flush→read→reply cycle performs **zero** heap
+//!    allocation once the scratch buffers are warm.
+//!
+//! Flags (after `--`):
+//!   --quick           smaller element counts + shorter budgets (the CI
+//!                     gate mode; the zero-alloc check always runs)
+//!   --record <path>   append this run's metrics to BENCH_codec.json
+//!   --check <path>    gate the gated metrics against the latest entry
+//!   --label <name>    entry label for --record (default "dev")
+//!
+//! First baseline on a toolchain-equipped machine:
+//!   cargo bench --bench codec --no-default-features -- --record BENCH_codec.json --label <pr>
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use umup::data::{Corpus, CorpusConfig};
+use umup::engine::backend::wire;
+use umup::engine::{det_record, EngineJob};
 use umup::formats::{TensorStats, BF16, E4M3, E5M2, FP16};
-use umup::util::bench::{black_box, Bencher};
+use umup::parametrization::{HpSet, Parametrization, Scheme};
+use umup::runtime::{Manifest, Spec};
+use umup::train::RunConfig;
+use umup::util::bench::{black_box, check_regression, record_run, Bencher, Metric};
 use umup::util::Rng;
 
-fn main() {
+/// Counts every heap allocation (alloc / alloc_zeroed / realloc) on top
+/// of the system allocator, so the zero-alloc claim on the `_into`
+/// codec chain is asserted, not eyeballed.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// The same no-XLA fixture shape as `tests/common`: a manifest is its
+/// metadata, a corpus is its generator config — all the codec touches.
+fn bench_job() -> EngineJob {
+    let man = Arc::new(Manifest {
+        name: "w32_codec_bench".to_string(),
+        dir: PathBuf::from("."),
+        spec: Spec {
+            width: 32,
+            depth: 2,
+            batch: 4,
+            seq: 16,
+            vocab: 64,
+            head_dim: 16,
+            trainable_norms: false,
+        },
+        tensors: vec![],
+        n_params: 0,
+        state_ext_len: 1,
+        loss_offset: 0,
+        rms_offset: 1,
+        scale_sites: std::collections::BTreeMap::new(),
+        n_scale_sites: 0,
+        quant_sites: std::collections::BTreeMap::new(),
+        n_quant_sites: 0,
+        rms_sites: vec![],
+    });
+    let corpus = Arc::new(Corpus {
+        config: CorpusConfig { vocab: 64, n_tokens: 120_000, seed: 7, ..Default::default() },
+        tokens: vec![],
+        n_train: 0,
+    });
+    let cfg = RunConfig::quick(
+        "codec-bench",
+        Parametrization::new(Scheme::Umup),
+        HpSet::with_eta(0.25),
+        16,
+    );
+    EngineJob::new(man, corpus, cfg, vec![])
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut quick = false;
+    let mut record: Option<PathBuf> = None;
+    let mut check: Option<PathBuf> = None;
+    let mut label = "dev".to_string();
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--quick" => quick = true,
+            "--record" => record = Some(PathBuf::from(it.next().expect("--record needs a path"))),
+            "--check" => check = Some(PathBuf::from(it.next().expect("--check needs a path"))),
+            "--label" => label = it.next().expect("--label needs a name"),
+            // cargo's own bench-harness flags; harmless to ignore
+            "--bench" => {}
+            other => eprintln!("codec bench: ignoring unknown arg {other:?}"),
+        }
+    }
+
     let mut b = Bencher::default();
-    b.budget = std::time::Duration::from_millis(1200);
+    b.budget = std::time::Duration::from_millis(if quick { 250 } else { 1200 });
+    if quick {
+        b.warmup = std::time::Duration::from_millis(50);
+    }
+
+    // ---- numeric formats -------------------------------------------
     let mut rng = Rng::new(1);
-    let n = 1 << 20;
+    let n = if quick { 1 << 16 } else { 1 << 20 };
     let xs: Vec<f32> = (0..n).map(|_| (rng.normal() * 3.0) as f32).collect();
-    println!("codec throughput over {n} f32 elements\n");
+    println!("format codec throughput over {n} f32 elements\n");
+    let mut e4m3_per_s = f64::NAN;
     for fmt in [E4M3, E5M2, FP16, BF16] {
         let mut buf = xs.clone();
-        b.run_with_work(
+        let r = b.run_with_work(
             &format!("quantize_slice {}", fmt.name),
             Some(n as f64),
             &mut || {
@@ -22,6 +146,9 @@ fn main() {
                 black_box(fmt.quantize_slice(&mut buf));
             },
         );
+        if fmt.name == E4M3.name {
+            e4m3_per_s = r.throughput().unwrap_or(f64::NAN);
+        }
     }
     b.run_with_work("TensorStats::of (RMS)", Some(n as f64), &mut || {
         black_box(TensorStats::of(&xs));
@@ -29,7 +156,124 @@ fn main() {
     // scalar quantize latency (used in hot per-site paths)
     b.run("quantize scalar e4m3 x1k", || {
         for i in 0..1000 {
-            black_box(E4M3.quantize(xs[i]));
+            black_box(E4M3.quantize(xs[i % n]));
         }
     });
+
+    // ---- wire codec: allocating vs `_into` twins -------------------
+    println!("\nwire codec (job frame {{encode,frame,read}} + reply lines)\n");
+    let job = bench_job();
+    let key = job.key();
+    let reply_record = det_record(&job.config);
+
+    let enc = b.run("encode_job (fresh String)", || {
+        black_box(wire::encode_job(&key, &job));
+    });
+    let mut payload = String::new();
+    let enc_into = b.run("encode_job_into (reused scratch)", || {
+        payload.clear();
+        wire::encode_job_into(&key, &job, &mut payload);
+        black_box(payload.len());
+    });
+
+    // one framed ok-reply, read back over and over (a `&[u8]` is a
+    // BufRead, so re-slicing it each iteration costs nothing)
+    let mut reply_frame = Vec::new();
+    wire::write_frame(&mut reply_frame, &wire::ok_reply_line(&key, &job.manifest.name, &reply_record))?;
+    let rd = b.run("read_frame (fresh String)", || {
+        let mut r: &[u8] = &reply_frame;
+        black_box(wire::read_frame(&mut r).unwrap().unwrap().len());
+    });
+    let mut scratch: Vec<u8> = Vec::new();
+    let rd_into = b.run("read_frame_into (reused scratch)", || {
+        let mut r: &[u8] = &reply_frame;
+        black_box(wire::read_frame_into(&mut r, &mut scratch).unwrap().unwrap().len());
+    });
+
+    let ok = b.run("ok_reply_line (fresh String)", || {
+        black_box(wire::ok_reply_line(&key, &job.manifest.name, &reply_record).len());
+    });
+    let mut reply_buf = String::new();
+    let ok_into = b.run("ok_reply_line_into (reused scratch)", || {
+        reply_buf.clear();
+        wire::ok_reply_line_into(&key, &job.manifest.name, &reply_record, &mut reply_buf);
+        black_box(reply_buf.len());
+    });
+
+    // ---- the zero-alloc steady-state assertion ---------------------
+    //
+    // One full pipelined-dispatch cycle: encode the job payload, frame
+    // it into the batch buffer, ship the batch (into a sink — the
+    // transport write itself is the OS's business), read a reply frame
+    // back through the scratch buffer, and encode both reply shapes.
+    // After warmup (buffers at steady-state capacity) the whole cycle
+    // must not touch the heap.  `now_ts()` re-reads UMUP_CACHE_TS per
+    // call and the *hit* path materializes a String, so the variable is
+    // cleared first — the engine's production hot path runs unpinned.
+    std::env::remove_var("UMUP_CACHE_TS");
+    let mut batch = String::new();
+    let mut sink = std::io::sink();
+    let mut cycle = || -> anyhow::Result<()> {
+        payload.clear();
+        wire::encode_job_into(&key, &job, &mut payload);
+        batch.clear();
+        wire::frame_into(&payload, &mut batch);
+        wire::flush_frames(&mut sink, &batch)?;
+        let mut r: &[u8] = &reply_frame;
+        let line = wire::read_frame_into(&mut r, &mut scratch)?.expect("prebuilt frame");
+        black_box(line.len());
+        reply_buf.clear();
+        wire::ok_reply_line_into(&key, &job.manifest.name, &reply_record, &mut reply_buf);
+        black_box(reply_buf.len());
+        reply_buf.clear();
+        wire::err_reply_line_into(&key, "injected job failure", &mut reply_buf);
+        black_box(reply_buf.len());
+        Ok(())
+    };
+    for _ in 0..100 {
+        cycle()?;
+    }
+    let counted = if quick { 2_000u64 } else { 10_000u64 };
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..counted {
+        cycle()?;
+    }
+    let delta = ALLOCS.load(Ordering::Relaxed) - before;
+    let allocs_per_frame = delta as f64 / counted as f64;
+    println!(
+        "\nzero-alloc check: {delta} heap allocations across {counted} warm \
+         encode→frame→flush→read→reply cycles ({allocs_per_frame:.4}/cycle)"
+    );
+    assert_eq!(
+        delta, 0,
+        "the `_into` codec chain allocated {delta} times in {counted} warm cycles — \
+         the zero-realloc hot-path contract is broken"
+    );
+
+    // ---- trajectory -------------------------------------------------
+    // Absolute ns for history; the gates are the within-run `_into`
+    // speedup ratios (hardware-independent) and the alloc count (an
+    // exact contract: once 0 is recorded, any allocation regresses).
+    let metrics = vec![
+        Metric::higher("quantize_e4m3_elem_per_s", e4m3_per_s, "el/s"),
+        Metric::lower("encode_job_ns", enc.mean_ns, "ns"),
+        Metric::lower("encode_job_into_ns", enc_into.mean_ns, "ns"),
+        Metric::lower("read_frame_ns", rd.mean_ns, "ns"),
+        Metric::lower("read_frame_into_ns", rd_into.mean_ns, "ns"),
+        Metric::lower("ok_reply_ns", ok.mean_ns, "ns"),
+        Metric::lower("ok_reply_into_ns", ok_into.mean_ns, "ns"),
+        Metric::higher("encode_into_speedup", enc.mean_ns / enc_into.mean_ns.max(1e-9), "x")
+            .gated(),
+        Metric::higher("read_into_speedup", rd.mean_ns / rd_into.mean_ns.max(1e-9), "x").gated(),
+        Metric::lower("wire_into_allocs_per_frame", allocs_per_frame, "allocs").gated(),
+    ];
+    // µs-scale codec loops jitter more than the cache bench's ms-scale
+    // scans; gate with the same wide tolerance as the sweep ratios
+    if let Some(path) = &check {
+        check_regression(path, "codec", &metrics, 0.50)?;
+    }
+    if let Some(path) = &record {
+        record_run(path, "codec", &label, &metrics)?;
+    }
+    Ok(())
 }

@@ -4,30 +4,65 @@
 //! telemetry-tail fetch) and its non-compute floor (tail fetch alone), to
 //! verify the coordinator is not the bottleneck (DESIGN.md §9 L3 target:
 //! dispatch <5% of step compute at width 256).
+//!
+//! Flags (after `--`):
+//!   --quick           w32 manifest only, shorter budget
+//!   --record <path>   append this run's metrics to BENCH_step_dispatch.json
+//!   --check <path>    gate the tail-overhead ratio against the latest entry
+//!   --label <name>    entry label for --record (default "dev")
+//!
+//! Needs the XLA runtime plus the `artifacts/` manifests (so the gate is
+//! not in no-XLA CI).  First baseline on an XLA-equipped machine:
+//!   cargo bench --bench step_dispatch -- --record BENCH_step_dispatch.json --label <pr>
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use umup::engine::{Engine, EngineConfig};
 use umup::parametrization::{HpSet, Parametrization, Precision, RuntimeVectors, Scheme};
 use umup::runtime::Manifest;
 use umup::train::AdamConfig;
-use umup::util::bench::Bencher;
+use umup::util::bench::{check_regression, record_run, Bencher, Metric};
 use umup::util::Rng;
 
 fn main() -> anyhow::Result<()> {
+    let mut quick = false;
+    let mut record: Option<PathBuf> = None;
+    let mut check: Option<PathBuf> = None;
+    let mut label = "dev".to_string();
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--quick" => quick = true,
+            "--record" => record = Some(PathBuf::from(it.next().expect("--record needs a path"))),
+            "--check" => check = Some(PathBuf::from(it.next().expect("--check needs a path"))),
+            "--label" => label = it.next().expect("--label needs a name"),
+            // cargo's own bench-harness flags; harmless to ignore
+            "--bench" => {}
+            other => eprintln!("step_dispatch bench: ignoring unknown arg {other:?}"),
+        }
+    }
+
     let mut bench = Bencher::default();
-    bench.budget = std::time::Duration::from_millis(1200);
+    bench.budget = std::time::Duration::from_millis(if quick { 400 } else { 1200 });
     bench.min_samples = 5;
     let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let engine = Engine::new(EngineConfig { workers: 1, ..EngineConfig::default() })?;
     let only = std::env::var("UMUP_BENCH_ONLY").ok();
+    // the trajectory anchors on the smallest manifest: dispatch overhead
+    // is most visible where compute is cheapest
+    let mut step_w32_fp32 = None;
+    let mut chain_w32_fp32 = None;
+    let mut step_w32_fp8 = None;
     // w256 is opt-in (UMUP_BENCH_ONLY=w256): ~2s/step on a 1-core testbed
     for name in ["w32_d4_b16_t64_v256", "w64_d4_b16_t64_v256", "w128_d4_b16_t64_v256"] {
         if let Some(o) = &only {
             if !name.starts_with(o.as_str()) {
                 continue;
             }
+        }
+        if quick && !name.starts_with("w32") {
+            continue;
         }
         let man = Arc::new(Manifest::load(&root.join(name))?);
         let session = engine.session(&man)?;
@@ -46,20 +81,29 @@ fn main() -> anyhow::Result<()> {
                 .collect();
             let hyp = AdamConfig::default().hyp(0.25, 1);
             let tokens_per_step = (man.spec.batch * man.spec.seq) as f64;
-            bench.run_with_work(
+            let step = bench.run_with_work(
                 &format!("step+tail {} {}", name, precision.name()),
                 Some(tokens_per_step),
                 &mut || {
                     session.step(&mut ts, &tokens, &hyp).unwrap();
                 },
             );
-            bench.run_with_work(
+            let chain = bench.run_with_work(
                 &format!("step chain-only {} {}", name, precision.name()),
                 Some(tokens_per_step),
                 &mut || {
                     session.step_chain(&mut ts, &tokens, &hyp).unwrap();
                 },
             );
+            if name.starts_with("w32") {
+                match precision {
+                    Precision::Fp32 => {
+                        step_w32_fp32 = Some(step.mean_ns);
+                        chain_w32_fp32 = Some(chain.mean_ns);
+                    }
+                    _ => step_w32_fp8 = Some(step.mean_ns),
+                }
+            }
         }
         // eval pass for comparison (fwd only)
         let vecs = RuntimeVectors::build(
@@ -76,6 +120,29 @@ fn main() -> anyhow::Result<()> {
         bench.run(&format!("eval {name}"), || {
             session.eval(&ts, &tokens).unwrap();
         });
+    }
+
+    // trajectory: absolute step costs for history, plus the gated
+    // within-run tail-overhead ratio (step+tail over chain-only — the
+    // dispatch + telemetry-fetch multiple the coordinator owns)
+    let mut metrics = Vec::new();
+    if let (Some(step), Some(chain)) = (step_w32_fp32, chain_w32_fp32) {
+        metrics.push(Metric::lower("step_w32_fp32_ns", step, "ns"));
+        metrics.push(Metric::lower("chain_w32_fp32_ns", chain, "ns"));
+        metrics
+            .push(Metric::lower("tail_overhead_w32_fp32_ratio", step / chain.max(1e-9), "x").gated());
+    }
+    if let Some(step) = step_w32_fp8 {
+        metrics.push(Metric::lower("step_w32_fp8_ns", step, "ns"));
+    }
+    if metrics.is_empty() && (check.is_some() || record.is_some()) {
+        println!("note: w32 manifest was filtered out — nothing to record or gate");
+    }
+    if let Some(path) = &check {
+        check_regression(path, "step_dispatch", &metrics, 0.50)?;
+    }
+    if let Some(path) = &record {
+        record_run(path, "step_dispatch", &label, &metrics)?;
     }
     Ok(())
 }

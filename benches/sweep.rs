@@ -2,17 +2,33 @@
 //! contrast (compile amortization + run-cache wins), the cost of the
 //! search bookkeeping itself (sampling, subset simulation, transfer
 //! error) relative to the runs it schedules, and the IPC overhead of
-//! the out-of-process backends (pipe vs loopback socket vs in-process).
+//! the out-of-process backends — pipe vs loopback socket vs in-process,
+//! lockstep vs windowed (pipelined) network dispatch.
+//!
+//! The IPC section runs on mock fixtures and `--mock` workers, so it
+//! needs neither XLA nor compiled artifacts: it is the part that runs
+//! under `--no-default-features` (and in the CI quick gate).  The
+//! XLA-backed sections (engine scaling, warm-vs-cold) need the runtime
+//! plus `artifacts/w32_d2_b4_t16_v64`, and are skipped under `--quick`.
 //!
 //! Flags (after `--`):
-//!   --record <path>   append this run's metrics to the trajectory file
-//!                     (BENCH_sweep.json at the repo root)
-//!   --check <path>    gate the ratio metrics against the file's most
-//!                     recent entry
-//!   --label <name>    entry label for --record (default "dev")
+//!   --quick             IPC + bookkeeping only (the CI gate mode)
+//!   --pipeline-depth N  in-flight window for the pipelined network
+//!                       measurement (default 4; 1 collapses it onto
+//!                       the lockstep path)
+//!   --record <path>     append this run's metrics to BENCH_sweep.json
+//!   --check <path>      gate the ratio metrics against the latest entry
+//!   --label <name>      entry label for --record (default "dev")
+//!
+//! First baseline on a toolchain-equipped machine (record the lockstep
+//! world and the pipelined world as two labeled entries):
+//!   git stash / checkout the pre-pipelining rev, then
+//!     cargo bench --bench sweep -- --record BENCH_sweep.json --label pre-pipelining
+//!   back on this rev:
+//!     cargo bench --bench sweep -- --record BENCH_sweep.json --label pipelined
 
 use std::io::{BufRead, BufReader};
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
 use std::sync::Arc;
 use std::time::Instant;
@@ -22,9 +38,9 @@ use umup::engine::{
     Backend, Engine, EngineConfig, EngineJob, MockBackend, NetworkBackend, ProcessBackend,
 };
 use umup::parametrization::{HpSet, Parametrization, Scheme};
-use umup::runtime::Manifest;
-use umup::sweep::{transfer_error, PairGrid, SweepJob};
-use umup::train::{RunConfig, Schedule};
+use umup::runtime::{Manifest, Spec};
+use umup::sweep::{transfer_error, PairGrid};
+use umup::train::RunConfig;
 use umup::util::bench::{black_box, check_regression, record_run, Bencher, Metric};
 
 /// One `repro worker --mock --listen 127.0.0.1:0` child; returns it
@@ -50,43 +66,51 @@ fn spawn_listen_worker(exe: &str) -> anyhow::Result<(Child, String)> {
     Ok((child, addr))
 }
 
-fn main() -> anyhow::Result<()> {
-    let mut record: Option<PathBuf> = None;
-    let mut check: Option<PathBuf> = None;
-    let mut label = "dev".to_string();
-    let mut it = std::env::args().skip(1);
-    while let Some(a) = it.next() {
-        match a.as_str() {
-            "--record" => record = Some(PathBuf::from(it.next().expect("--record needs a path"))),
-            "--check" => check = Some(PathBuf::from(it.next().expect("--check needs a path"))),
-            "--label" => label = it.next().expect("--label needs a name"),
-            // cargo's own bench-harness flags; harmless to ignore
-            "--bench" => {}
-            other => eprintln!("sweep bench: ignoring unknown arg {other:?}"),
-        }
-    }
+/// The IPC section's manifest: metadata only (same shape as the
+/// `tests/common` fixtures) — the mock workers never touch tensors, so
+/// no compiled artifact is needed and the section runs without XLA.
+fn dummy_manifest() -> Arc<Manifest> {
+    Arc::new(Manifest {
+        name: "w32_sweep_bench".to_string(),
+        dir: PathBuf::from("."),
+        spec: Spec {
+            width: 32,
+            depth: 2,
+            batch: 4,
+            seq: 16,
+            vocab: 64,
+            head_dim: 16,
+            trainable_norms: false,
+        },
+        tensors: vec![],
+        n_params: 0,
+        state_ext_len: 1,
+        loss_offset: 0,
+        rms_offset: 1,
+        scale_sites: std::collections::BTreeMap::new(),
+        n_scale_sites: 0,
+        quant_sites: std::collections::BTreeMap::new(),
+        n_quant_sites: 0,
+        rms_sites: vec![],
+    })
+}
 
-    let b = Bencher::default();
-    // pure bookkeeping costs
-    let grid = PairGrid {
-        fixed_name: "a".into(),
-        transfer_name: "b".into(),
-        fixed_vals: (0..9).map(|i| i as f64).collect(),
-        transfer_vals: (0..9).map(|i| i as f64).collect(),
-        loss: (0..9).map(|i| (0..9).map(|j| ((i * j) as f64).sin() + 2.0).collect()).collect(),
-    };
-    b.run("transfer_error 9x9", || {
-        black_box(transfer_error(&grid));
-    });
-    let fake: Vec<f64> = (0..300).map(|i| 2.0 + (i as f64 * 0.77).sin()).collect();
-    b.run("simulate_run_counts 300 runs", || {
-        // reuse transfer grid losses as stand-in results is not possible
-        // without SweepResult; measure the subset sampler via stats path
-        black_box(umup::util::stats::percentile(&fake, 10.0));
-    });
+fn dummy_corpus() -> Arc<Corpus> {
+    Arc::new(Corpus {
+        config: CorpusConfig { vocab: 64, n_tokens: 0, ..Default::default() },
+        tokens: vec![],
+        n_train: 0,
+    })
+}
 
-    // real tiny runs for the engine benchmarks
-    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+/// Engine scaling + warm-vs-cold: real tiny runs through compiled
+/// sessions.  Needs the XLA runtime and `artifacts/w32_d2_b4_t16_v64`.
+#[cfg(feature = "xla")]
+fn xla_sections() -> anyhow::Result<()> {
+    use umup::sweep::SweepJob;
+    use umup::train::Schedule;
+
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let man = Arc::new(Manifest::load(&root.join("w32_d2_b4_t16_v64"))?);
     let corpus = Arc::new(Corpus::generate(CorpusConfig {
         vocab: man.spec.vocab,
@@ -189,13 +213,74 @@ fn main() -> anyhow::Result<()> {
         cold / resume.max(1e-9),
     );
     let _ = std::fs::remove_dir_all(&cache_dir);
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut quick = false;
+    let mut depth = 4usize;
+    let mut record: Option<PathBuf> = None;
+    let mut check: Option<PathBuf> = None;
+    let mut label = "dev".to_string();
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--quick" => quick = true,
+            "--pipeline-depth" => {
+                depth = it
+                    .next()
+                    .expect("--pipeline-depth needs a value")
+                    .parse()
+                    .expect("bad --pipeline-depth");
+            }
+            "--record" => record = Some(PathBuf::from(it.next().expect("--record needs a path"))),
+            "--check" => check = Some(PathBuf::from(it.next().expect("--check needs a path"))),
+            "--label" => label = it.next().expect("--label needs a name"),
+            // cargo's own bench-harness flags; harmless to ignore
+            "--bench" => {}
+            other => eprintln!("sweep bench: ignoring unknown arg {other:?}"),
+        }
+    }
+
+    let b = Bencher::default();
+    // pure bookkeeping costs
+    let grid = PairGrid {
+        fixed_name: "a".into(),
+        transfer_name: "b".into(),
+        fixed_vals: (0..9).map(|i| i as f64).collect(),
+        transfer_vals: (0..9).map(|i| i as f64).collect(),
+        loss: (0..9).map(|i| (0..9).map(|j| ((i * j) as f64).sin() + 2.0).collect()).collect(),
+    };
+    b.run("transfer_error 9x9", || {
+        black_box(transfer_error(&grid));
+    });
+    let fake: Vec<f64> = (0..300).map(|i| 2.0 + (i as f64 * 0.77).sin()).collect();
+    b.run("simulate_run_counts 300 runs", || {
+        // reuse transfer grid losses as stand-in results is not possible
+        // without SweepResult; measure the subset sampler via stats path
+        black_box(umup::util::stats::percentile(&fake, 10.0));
+    });
+
+    if quick {
+        println!("--quick: skipping XLA engine-scaling + warm-vs-cold sections");
+    } else {
+        #[cfg(feature = "xla")]
+        xla_sections()?;
+        #[cfg(not(feature = "xla"))]
+        println!("no-XLA build: skipping engine-scaling + warm-vs-cold sections");
+    }
 
     // IPC overhead of the out-of-process backends, isolated from
     // training cost: the same no-op sweep on the in-process
     // deterministic mock vs 4 `repro worker --mock` children (pipes) vs
-    // 4 `repro worker --mock --listen` endpoints (loopback TCP).  The
-    // per-job deltas are pure spawn/dial + wire/framing + codec cost,
-    // tracked so the backend layer shows up in the perf trajectory.
+    // 4 `repro worker --mock --listen` endpoints (loopback TCP), the
+    // latter both in lockstep (depth 1) and windowed (--pipeline-depth)
+    // dispatch.  The per-job deltas are pure spawn/dial + wire/framing +
+    // codec cost — and the lockstep-vs-pipelined delta is the round-trip
+    // stall the in-flight window exists to hide — tracked so the backend
+    // layer shows up in the perf trajectory.
+    let man = dummy_manifest();
+    let corpus = dummy_corpus();
     let n_ipc_jobs = 64usize;
     let ipc_jobs = || -> Vec<EngineJob> {
         (0..n_ipc_jobs)
@@ -224,10 +309,10 @@ fn main() -> anyhow::Result<()> {
         addrs.push(addr);
     }
     let pipe_exe = worker_exe.clone();
-    let backends: Vec<(&str, &str, Arc<dyn Backend>)> = vec![
-        ("in-process mock", "inprocess", Arc::new(MockBackend::deterministic())),
+    let backends: Vec<(String, &str, Arc<dyn Backend>)> = vec![
+        ("in-process mock".to_string(), "inprocess", Arc::new(MockBackend::deterministic())),
         (
-            "process mock (4 children)",
+            "process mock (4 children)".to_string(),
             "process",
             Arc::new(ProcessBackend::new(move |_worker| {
                 let mut cmd = Command::new(&pipe_exe);
@@ -236,9 +321,14 @@ fn main() -> anyhow::Result<()> {
             })),
         ),
         (
-            "network mock (4 listeners)",
-            "network",
-            Arc::new(NetworkBackend::new(&addrs.join(","))?),
+            "network mock (4 listeners, lockstep)".to_string(),
+            "network_d1",
+            Arc::new(NetworkBackend::new(&addrs.join(","))?.with_pipeline_depth(1)),
+        ),
+        (
+            format!("network mock (4 listeners, window {depth})"),
+            "network_pipelined",
+            Arc::new(NetworkBackend::new(&addrs.join(","))?.with_pipeline_depth(depth)),
         ),
     ];
     let mut per_job_ms = std::collections::BTreeMap::new();
@@ -272,15 +362,18 @@ fn main() -> anyhow::Result<()> {
         let _ = child.wait();
     }
 
-    // the trajectory: absolute per-job costs for the history, plus one
-    // gated within-run ratio (absolute wall-clock varies across runner
-    // hardware; the pipe-vs-in-process multiple is what the backend
-    // layer actually owns)
+    // the trajectory: absolute per-job costs for the history, plus
+    // gated within-run ratios (absolute wall-clock varies across runner
+    // hardware; the multiples are what the backend layer actually owns).
+    // `network_pipelined_vs_lockstep_per_job_ratio` is the pipelining
+    // win itself: windowed dispatch over the same sockets, same jobs —
+    // below 1.0 means the in-flight window beats lockstep.
     let inproc = per_job_ms["inprocess"];
     let metrics = vec![
         Metric::lower("inprocess_per_job_ms", inproc, "ms"),
         Metric::lower("process_per_job_ms", per_job_ms["process"], "ms"),
-        Metric::lower("network_per_job_ms", per_job_ms["network"], "ms"),
+        Metric::lower("network_d1_per_job_ms", per_job_ms["network_d1"], "ms"),
+        Metric::lower("network_pipelined_per_job_ms", per_job_ms["network_pipelined"], "ms"),
         Metric::lower(
             "process_vs_inprocess_per_job_ratio",
             per_job_ms["process"] / inproc.max(1e-9),
@@ -289,9 +382,15 @@ fn main() -> anyhow::Result<()> {
         .gated(),
         Metric::lower(
             "network_vs_inprocess_per_job_ratio",
-            per_job_ms["network"] / inproc.max(1e-9),
+            per_job_ms["network_d1"] / inproc.max(1e-9),
             "x",
         ),
+        Metric::lower(
+            "network_pipelined_vs_lockstep_per_job_ratio",
+            per_job_ms["network_pipelined"] / per_job_ms["network_d1"].max(1e-9),
+            "x",
+        )
+        .gated(),
     ];
     // wider tolerance than the cache gate: these are ~ms-scale no-op
     // sweeps, so scheduler jitter moves the ratio more than real work

@@ -136,6 +136,35 @@ pub trait Backend: Send + Sync {
 pub trait Executor {
     /// Execute `job` (whose content address is `key`) to completion.
     fn run(&mut self, job: &EngineJob, key: &str) -> Result<RunRecord>;
+
+    /// How many jobs this executor wants in flight at once — the
+    /// worker loop pulls batches of up to this size from the scheduler
+    /// and hands them to [`Executor::run_batch`].  `1` (the default)
+    /// is strict lockstep: pull one, run one, report one.  Pipelining
+    /// executors (see [`ProcessBackend::with_pipeline_depth`] /
+    /// [`NetworkBackend::with_pipeline_depth`]) raise it to overlap
+    /// frame encoding, the wire, and the peer's execution.
+    fn pipeline_depth(&self) -> usize {
+        1
+    }
+
+    /// Execute a batch of jobs, reporting each completion through
+    /// `done(index_into_jobs, result)` — **exactly once per job, in any
+    /// order**.  The engine persists and publishes each outcome from
+    /// inside the callback, so results stream as the executor produces
+    /// them rather than when the whole batch lands.  The default runs
+    /// the batch sequentially through [`Executor::run`], which is the
+    /// depth-1 semantics; only executors with a real in-flight window
+    /// override this.
+    fn run_batch(
+        &mut self,
+        jobs: &[(&EngineJob, &str)],
+        done: &mut dyn FnMut(usize, Result<RunRecord>),
+    ) {
+        for (i, (job, key)) in jobs.iter().enumerate() {
+            done(i, self.run(job, key));
+        }
+    }
 }
 
 /// [`Executor`] over a plain closure — the adapter behind

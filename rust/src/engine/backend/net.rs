@@ -21,6 +21,27 @@
 //! transport failure mid-job re-dispatches the in-flight job exactly
 //! once on a fresh connection.  Remote workers outlive any one engine,
 //! so there is no child to reap — teardown is just dropping the socket.
+//!
+//! # Pipelined dispatch
+//!
+//! The network transport is where pipelining pays most: every lockstep
+//! job charges a full network round-trip of dead air.  This backend
+//! therefore defaults to a window of [`DEFAULT_PIPELINE_DEPTH`] jobs in
+//! flight per connection ([`NetworkBackend::with_pipeline_depth`]; `1`
+//! restores strict lockstep) — the window is encoded into one reused
+//! buffer and shipped as a single write+flush, replies stream back in
+//! completion order and are matched to their slot by key, and a
+//! connection death with a non-empty window re-dispatches **all
+//! unacknowledged jobs exactly once** on the next (budget-gated)
+//! endpoint, exactly like the process backend's windowed recovery.  A
+//! reply keyed to nothing in the window is a protocol desync: a
+//! transport failure, never a mis-filed record.
+//!
+//! Remote workers have no stderr to tee, so transport-failure outcomes
+//! instead carry the *last error text the worker reported on the wire*
+//! (including the `"?"`-keyed last-words frame `repro worker --listen`
+//! emits when its serve loop dies) — network failures stay as
+//! diagnosable as process-backend ones.
 
 use std::fmt;
 use std::io::{BufReader, Read, Write};
@@ -187,9 +208,15 @@ impl Drop for Listener {
 
 // ------------------------------------------------------------- backend
 
+/// Default in-flight window per connection: deep enough to hide a
+/// LAN round-trip behind execution, comfortably inside the worker's
+/// read-ahead queue ([`wire::WORKER_READAHEAD`]).
+pub const DEFAULT_PIPELINE_DEPTH: usize = 4;
+
 struct NetInner {
     endpoints: Vec<Endpoint>,
     max_restarts_per_worker: usize,
+    pipeline_depth: usize,
     restarts: AtomicUsize,
     /// Telemetry publisher, attached by the engine at construction
     /// ([`Backend::attach_events`]).  Interior-mutable because the
@@ -230,6 +257,7 @@ impl NetworkBackend {
             inner: Arc::new(NetInner {
                 endpoints,
                 max_restarts_per_worker: 2,
+                pipeline_depth: DEFAULT_PIPELINE_DEPTH,
                 restarts: AtomicUsize::new(0),
                 events: Mutex::new(None),
             }),
@@ -243,6 +271,21 @@ impl NetworkBackend {
         Arc::get_mut(&mut self.inner)
             .expect("with_max_restarts must be called before the backend is shared")
             .max_restarts_per_worker = max_restarts_per_worker;
+        self
+    }
+
+    /// Set the in-flight window per connection (default
+    /// [`DEFAULT_PIPELINE_DEPTH`]): up to `depth` encoded job frames
+    /// outstanding per remote worker, replies matched back by key in
+    /// completion order.  `1` restores strict lockstep — required when
+    /// a byte-determinism suite pins exact reconnect counts, since a
+    /// windowed connection death re-dispatches the whole
+    /// unacknowledged window on one reconnect.  Builder-style; must be
+    /// called before the backend is handed to an engine.
+    pub fn with_pipeline_depth(mut self, depth: usize) -> NetworkBackend {
+        Arc::get_mut(&mut self.inner)
+            .expect("with_pipeline_depth must be called before the backend is shared")
+            .pipeline_depth = depth.max(1);
         self
     }
 
@@ -301,6 +344,10 @@ impl Backend for NetworkBackend {
             conn: None,
             connected_once: false,
             restarts_left: self.inner.max_restarts_per_worker,
+            last_remote_error: String::new(),
+            frame_buf: String::new(),
+            batch_buf: String::new(),
+            reply_buf: Vec::new(),
         })
     }
 }
@@ -325,6 +372,18 @@ struct NetExecutor {
     /// The first connection is free; later ones consume budget.
     connected_once: bool,
     restarts_left: usize,
+    /// Most recent error text a remote worker sent this slot on the
+    /// wire (an error reply frame, including the `"?"`-keyed last-words
+    /// frame a dying `--listen` worker emits).  Threaded into
+    /// restart/budget events and budget-exhaustion messages — the
+    /// network stand-in for the process backend's stderr tail.
+    last_remote_error: String,
+    /// Reused codec scratch (one encoded job frame / one window of
+    /// framed jobs / one reply payload): the steady-state dispatch path
+    /// allocates nothing per job.
+    frame_buf: String,
+    batch_buf: String,
+    reply_buf: Vec<u8>,
 }
 
 /// How one send/receive exchange with the remote worker ended.
@@ -370,13 +429,15 @@ impl NetExecutor {
                 if self.restarts_left == 0 {
                     self.inner.publish(Event::WorkerBudgetExhausted {
                         worker: self.worker,
-                        // remote stderr stays remote; no excerpt to tee
-                        stderr: String::new(),
+                        // remote stderr stays remote; the worker's last
+                        // on-wire error text stands in for the tail
+                        stderr: self.last_remote_error.clone(),
                     });
                     bail!(
-                        "worker {}: restart budget exhausted ({} reconnects used)",
+                        "worker {}: restart budget exhausted ({} reconnects used){}",
                         self.worker,
-                        self.inner.max_restarts_per_worker
+                        self.inner.max_restarts_per_worker,
+                        self.remote_context()
                     );
                 }
                 self.restarts_left -= 1;
@@ -388,7 +449,7 @@ impl NetExecutor {
                 self.inner.publish(Event::WorkerRestarted {
                     worker: self.worker,
                     restarts_left: self.restarts_left,
-                    stderr: String::new(),
+                    stderr: self.last_remote_error.clone(),
                 });
             }
             let conn = self.connect_next()?;
@@ -399,34 +460,57 @@ impl NetExecutor {
     }
 
     /// One full job exchange: send the job frame, read the reply frame.
+    /// Codec work goes through the executor's reused scratch buffers
+    /// (`_into` variants) — no per-job allocation at steady state.
     fn exchange(&mut self, job: &EngineJob, key: &str) -> Exchange {
-        let frame = wire::encode_job(key, job);
-        let conn = match self.ensure_conn() {
-            Ok(c) => c,
-            Err(e) => return Exchange::Transport(e),
-        };
-        if let Err(e) = wire::write_frame(&mut conn.writer, &frame) {
-            let peer = conn.peer.clone();
-            return Exchange::Transport(e.context(format!("sending job to worker {peer}")));
-        }
-        let reply = wire::read_frame(&mut conn.reader)
-            .and_then(|f| f.ok_or_else(|| anyhow!("worker {} hung up mid-job", conn.peer)));
-        let line = match reply {
-            Ok(line) => line,
-            Err(e) => return Exchange::Transport(e.context("reading worker reply")),
-        };
-        match wire::decode_reply(&line) {
-            Ok(wire::WireReply::Record { key: reply_key, record }) => {
-                if reply_key != key {
-                    return Exchange::Transport(anyhow!(
-                        "worker replied for key {reply_key} while {key} was in flight \
-                         (protocol desync)"
-                    ));
-                }
-                Exchange::Record(record)
+        let mut frame = std::mem::take(&mut self.frame_buf);
+        let mut scratch = std::mem::take(&mut self.reply_buf);
+        frame.clear();
+        wire::encode_job_into(key, job, &mut frame);
+        let out = (|| {
+            let conn = match self.ensure_conn() {
+                Ok(c) => c,
+                Err(e) => return Exchange::Transport(e),
+            };
+            if let Err(e) = wire::write_frame(&mut conn.writer, &frame) {
+                let peer = conn.peer.clone();
+                return Exchange::Transport(e.context(format!("sending job to worker {peer}")));
             }
-            Ok(wire::WireReply::Error { error, .. }) => Exchange::JobErr(error),
-            Err(e) => Exchange::Transport(e),
+            let reply = wire::read_frame_into(&mut conn.reader, &mut scratch)
+                .and_then(|f| f.ok_or_else(|| anyhow!("worker {} hung up mid-job", conn.peer)));
+            let line = match reply {
+                Ok(line) => line,
+                Err(e) => return Exchange::Transport(e.context("reading worker reply")),
+            };
+            match wire::decode_reply(line) {
+                Ok(wire::WireReply::Record { key: reply_key, record }) => {
+                    if reply_key != key {
+                        return Exchange::Transport(anyhow!(
+                            "worker replied for key {reply_key} while {key} was in flight \
+                             (protocol desync)"
+                        ));
+                    }
+                    Exchange::Record(record)
+                }
+                Ok(wire::WireReply::Error { error, .. }) => Exchange::JobErr(error),
+                Err(e) => Exchange::Transport(e),
+            }
+        })();
+        self.frame_buf = frame;
+        self.reply_buf = scratch;
+        if let Exchange::JobErr(e) = &out {
+            self.last_remote_error = e.clone();
+        }
+        out
+    }
+
+    /// Render the worker's last on-wire error text for a message —
+    /// the network analogue of `ProcessExecutor::stderr_context`.
+    fn remote_context(&self) -> String {
+        if self.last_remote_error.is_empty() {
+            String::new()
+        } else {
+            format!("; last error from the remote worker: {}", self.last_remote_error)
         }
     }
 
@@ -435,9 +519,177 @@ impl NetExecutor {
         // whole teardown (the worker's per-connection loop sees EOF)
         self.conn = None;
     }
+
+    /// One windowed dispatch attempt — the network mirror of
+    /// `ProcessExecutor::pump_window`: ship every still-pending job as
+    /// one frame burst, then consume replies in completion order,
+    /// matching each to its window slot by key.  An error reply keyed
+    /// to nothing in the window (the dying worker's `"?"` last-words
+    /// frame) is captured into `last_remote` and surfaced as the
+    /// transport error's text.
+    fn pump_window(
+        &mut self,
+        jobs: &[(&EngineJob, &str)],
+        pending: &mut Vec<usize>,
+        batch: &str,
+        scratch: &mut Vec<u8>,
+        last_remote: &mut String,
+        done: &mut dyn FnMut(usize, Result<RunRecord>),
+    ) -> Result<()> {
+        let conn = self.ensure_conn()?;
+        wire::flush_frames(&mut conn.writer, batch)
+            .with_context(|| format!("sending job window to worker {}", conn.peer))?;
+        while !pending.is_empty() {
+            let line = wire::read_frame_into(&mut conn.reader, scratch)
+                .context("reading worker reply")?
+                .ok_or_else(|| {
+                    anyhow!(
+                        "worker {} hung up with {} jobs unacknowledged",
+                        conn.peer,
+                        pending.len()
+                    )
+                })?;
+            let (key, outcome) = match wire::decode_reply(line)? {
+                wire::WireReply::Record { key, record } => (key, Ok(record)),
+                wire::WireReply::Error { key, error } => {
+                    last_remote.clear();
+                    last_remote.push_str(&error);
+                    (key, Err(anyhow!("{error}")))
+                }
+            };
+            let slot = pending.iter().position(|&i| jobs[i].1 == key);
+            match (slot, outcome) {
+                (Some(slot), outcome) => {
+                    let idx = pending.remove(slot);
+                    done(idx, outcome);
+                }
+                (None, Err(remote)) => {
+                    // the worker's serve loop died and named its reason
+                    // before dropping the connection
+                    bail!(
+                        "worker {} reported a stream-level failure with {} jobs \
+                         unacknowledged: {remote:#}",
+                        conn.peer,
+                        pending.len()
+                    );
+                }
+                (None, Ok(_)) => bail!(
+                    "worker {} replied for key {key} which is not in the in-flight window \
+                     (protocol desync or duplicate reply)",
+                    conn.peer
+                ),
+            }
+        }
+        Ok(())
+    }
+
+    /// The windowed dispatch loop — mirrors
+    /// `ProcessExecutor::run_window`: one re-dispatch of all
+    /// unacknowledged jobs on a fresh (budget-gated) connection, then
+    /// per-job `Err`s.
+    fn run_window(
+        &mut self,
+        jobs: &[(&EngineJob, &str)],
+        done: &mut dyn FnMut(usize, Result<RunRecord>),
+    ) {
+        let mut pending: Vec<usize> = (0..jobs.len()).collect();
+        let mut first_err: Option<anyhow::Error> = None;
+        loop {
+            let mut batch = std::mem::take(&mut self.batch_buf);
+            let mut frame = std::mem::take(&mut self.frame_buf);
+            let mut scratch = std::mem::take(&mut self.reply_buf);
+            let mut last_remote = String::new();
+            batch.clear();
+            for &i in &pending {
+                frame.clear();
+                wire::encode_job_into(jobs[i].1, jobs[i].0, &mut frame);
+                wire::frame_into(&frame, &mut batch);
+            }
+            let attempt =
+                self.pump_window(jobs, &mut pending, &batch, &mut scratch, &mut last_remote, done);
+            self.batch_buf = batch;
+            self.frame_buf = frame;
+            self.reply_buf = scratch;
+            if !last_remote.is_empty() {
+                self.last_remote_error = last_remote;
+            }
+            let err = match attempt {
+                Ok(()) => return,
+                Err(e) => e,
+            };
+            self.teardown_conn();
+            match first_err.take() {
+                None if self.connected_once && self.restarts_left == 0 => {
+                    self.inner.publish(Event::WorkerBudgetExhausted {
+                        worker: self.worker,
+                        stderr: self.last_remote_error.clone(),
+                    });
+                    for &i in &pending {
+                        done(
+                            i,
+                            Err(anyhow!(
+                                "worker {} connection lost mid-window on {} ({err:#}); \
+                                 restart budget exhausted ({} reconnects used), not \
+                                 re-dispatching{}",
+                                self.worker,
+                                jobs[i].0.config.label,
+                                self.inner.max_restarts_per_worker,
+                                self.remote_context()
+                            )),
+                        );
+                    }
+                    return;
+                }
+                None => {
+                    eprintln!(
+                        "engine: worker {} connection lost with {} jobs unacknowledged \
+                         ({err:#}); re-dispatching the window once",
+                        self.worker,
+                        pending.len()
+                    );
+                    first_err = Some(err);
+                }
+                Some(first) => {
+                    for &i in &pending {
+                        done(
+                            i,
+                            Err(anyhow!(
+                                "worker {} failed twice on job {} (first: {first:#}; after \
+                                 re-dispatch: {err:#}){}",
+                                self.worker,
+                                jobs[i].0.config.label,
+                                self.remote_context()
+                            )),
+                        );
+                    }
+                    return;
+                }
+            }
+        }
+    }
 }
 
 impl Executor for NetExecutor {
+    fn pipeline_depth(&self) -> usize {
+        self.inner.pipeline_depth
+    }
+
+    /// Windowed dispatch (see the module docs): ship the whole batch as
+    /// one frame burst, stream completions back by key.  A single-job
+    /// batch routes through [`Executor::run`] so depth-1 behavior —
+    /// including exact reconnect accounting — is untouched.
+    fn run_batch(
+        &mut self,
+        jobs: &[(&EngineJob, &str)],
+        done: &mut dyn FnMut(usize, Result<RunRecord>),
+    ) {
+        match jobs {
+            [] => {}
+            [(job, key)] => done(0, self.run(job, key)),
+            _ => self.run_window(jobs, done),
+        }
+    }
+
     fn run(&mut self, job: &EngineJob, key: &str) -> Result<RunRecord> {
         match self.exchange(job, key) {
             Exchange::Record(r) => Ok(r),
@@ -451,14 +703,15 @@ impl Executor for NetExecutor {
                 if self.connected_once && self.restarts_left == 0 {
                     self.inner.publish(Event::WorkerBudgetExhausted {
                         worker: self.worker,
-                        stderr: String::new(),
+                        stderr: self.last_remote_error.clone(),
                     });
                     return Err(anyhow!(
                         "worker {} connection lost mid-job on {} ({first:#}); restart \
-                         budget exhausted ({} reconnects used), not re-dispatching",
+                         budget exhausted ({} reconnects used), not re-dispatching{}",
                         self.worker,
                         job.config.label,
-                        self.inner.max_restarts_per_worker
+                        self.inner.max_restarts_per_worker,
+                        self.remote_context()
                     ));
                 }
                 eprintln!(
@@ -473,9 +726,10 @@ impl Executor for NetExecutor {
                         self.teardown_conn();
                         Err(anyhow!(
                             "worker {} failed twice on job {} (first: {first:#}; after \
-                             re-dispatch: {second:#})",
+                             re-dispatch: {second:#}){}",
                             self.worker,
-                            job.config.label
+                            job.config.label,
+                            self.remote_context()
                         ))
                     }
                 }

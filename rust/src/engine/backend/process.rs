@@ -31,6 +31,26 @@
 //! A *job* failure (the child replies with an error frame) is not a
 //! crash: it costs no restart and the same child keeps serving.
 //!
+//! # Pipelined dispatch
+//!
+//! With [`ProcessBackend::with_pipeline_depth`] > 1 the executor keeps
+//! a *window* of up to `depth` encoded job frames outstanding on the
+//! child's stdin at once: the whole window is encoded into one reused
+//! scratch buffer (`wire::encode_job_into` + `wire::frame_into`, zero
+//! allocation at steady state) and shipped with a single write+flush,
+//! then replies are consumed *in completion order* and matched back to
+//! their window slot by key.  A reply keyed to nothing in the window
+//! (unknown, or a duplicate of an already-acknowledged job) is a
+//! protocol desync — a transport failure, never a mis-filed record.
+//! Recovery composes with the restart semantics above: a transport
+//! failure with a non-empty window re-dispatches **all unacknowledged
+//! jobs exactly once** on the freshly spawned child (acknowledged jobs
+//! are done — their results were already streamed out); a second
+//! failure reports every still-unacknowledged job as a normal per-job
+//! `Err`.  The default depth is **1** (strict lockstep, byte-for-byte
+//! the pre-pipelining dispatch), which also keeps restart accounting
+//! exactly one-job-deep — required by the byte-determinism suites.
+//!
 //! Child stderr is never lost: a drain thread tees every line to the
 //! parent's stderr with a `[worker k]` prefix and keeps a bounded tail,
 //! which is appended to transport-failure outcomes so "the child died"
@@ -64,6 +84,7 @@ const SHUTDOWN_GRACE: Duration = Duration::from_millis(500);
 struct Inner {
     make_cmd: Box<dyn Fn(usize) -> Command + Send + Sync>,
     max_restarts_per_worker: usize,
+    pipeline_depth: usize,
     restarts: AtomicUsize,
     /// Telemetry publisher, attached by the engine at construction
     /// ([`Backend::attach_events`]).  Interior-mutable because the
@@ -99,6 +120,7 @@ impl ProcessBackend {
             inner: Arc::new(Inner {
                 make_cmd: Box::new(make_cmd),
                 max_restarts_per_worker: 2,
+                pipeline_depth: 1,
                 restarts: AtomicUsize::new(0),
                 events: Mutex::new(None),
             }),
@@ -136,6 +158,21 @@ impl ProcessBackend {
         Arc::get_mut(&mut self.inner)
             .expect("with_max_restarts must be called before the backend is shared")
             .max_restarts_per_worker = max_restarts_per_worker;
+        self
+    }
+
+    /// Set the in-flight window per child (default 1 = strict
+    /// lockstep): up to `depth` encoded job frames outstanding on one
+    /// child's stdin, replies matched back by key in completion order.
+    /// Values above 1 trade the per-job round-trip stall for window
+    /// throughput; keep 1 when byte-determinism suites pin exact
+    /// restart counts (a windowed crash re-dispatches the *whole*
+    /// unacknowledged window on one restart).  Builder-style; must be
+    /// called before the backend is handed to an engine.
+    pub fn with_pipeline_depth(mut self, depth: usize) -> ProcessBackend {
+        Arc::get_mut(&mut self.inner)
+            .expect("with_pipeline_depth must be called before the backend is shared")
+            .pipeline_depth = depth.max(1);
         self
     }
 
@@ -223,6 +260,9 @@ impl Backend for ProcessBackend {
             spawned_once: false,
             restarts_left: self.inner.max_restarts_per_worker,
             stderr_tail: Arc::new(Mutex::new(VecDeque::new())),
+            frame_buf: String::new(),
+            batch_buf: String::new(),
+            reply_buf: Vec::new(),
         })
     }
 }
@@ -247,6 +287,12 @@ struct ProcessExecutor {
     /// Last [`STDERR_TAIL_LINES`] stderr lines across this slot's
     /// children (appended to transport-failure outcomes).
     stderr_tail: Arc<Mutex<VecDeque<String>>>,
+    /// Reused codec scratch (one encoded job frame / one window of
+    /// framed jobs / one reply payload): the steady-state dispatch path
+    /// allocates nothing per job.
+    frame_buf: String,
+    batch_buf: String,
+    reply_buf: Vec<u8>,
 }
 
 /// How one send/receive exchange with the child ended.
@@ -338,39 +384,49 @@ impl ProcessExecutor {
     }
 
     /// One full job exchange: send the job frame, read the reply frame.
+    /// Codec work goes through the executor's reused scratch buffers
+    /// (`_into` variants) — no per-job allocation at steady state.
     fn exchange(&mut self, job: &EngineJob, key: &str) -> Exchange {
-        let frame = wire::encode_job(key, job);
-        let conn = match self.ensure_conn() {
-            Ok(c) => c,
-            Err(e) => return Exchange::Transport(e),
-        };
-        let send = conn
-            .stdin
-            .as_mut()
-            .ok_or_else(|| anyhow!("worker stdin already closed"))
-            .and_then(|stdin| wire::write_frame(stdin, &frame));
-        if let Err(e) = send {
-            return Exchange::Transport(e.context("sending job to worker child"));
-        }
-        let reply = wire::read_frame(&mut conn.stdout)
-            .and_then(|f| f.ok_or_else(|| anyhow!("worker child hung up mid-job")));
-        let line = match reply {
-            Ok(line) => line,
-            Err(e) => return Exchange::Transport(e.context("reading worker reply")),
-        };
-        match wire::decode_reply(&line) {
-            Ok(wire::WireReply::Record { key: reply_key, record }) => {
-                if reply_key != key {
-                    return Exchange::Transport(anyhow!(
-                        "worker replied for key {reply_key} while {key} was in flight \
-                         (protocol desync)"
-                    ));
-                }
-                Exchange::Record(record)
+        let mut frame = std::mem::take(&mut self.frame_buf);
+        let mut scratch = std::mem::take(&mut self.reply_buf);
+        frame.clear();
+        wire::encode_job_into(key, job, &mut frame);
+        let out = (|| {
+            let conn = match self.ensure_conn() {
+                Ok(c) => c,
+                Err(e) => return Exchange::Transport(e),
+            };
+            let send = conn
+                .stdin
+                .as_mut()
+                .ok_or_else(|| anyhow!("worker stdin already closed"))
+                .and_then(|stdin| wire::write_frame(stdin, &frame));
+            if let Err(e) = send {
+                return Exchange::Transport(e.context("sending job to worker child"));
             }
-            Ok(wire::WireReply::Error { error, .. }) => Exchange::JobErr(error),
-            Err(e) => Exchange::Transport(e),
-        }
+            let reply = wire::read_frame_into(&mut conn.stdout, &mut scratch)
+                .and_then(|f| f.ok_or_else(|| anyhow!("worker child hung up mid-job")));
+            let line = match reply {
+                Ok(line) => line,
+                Err(e) => return Exchange::Transport(e.context("reading worker reply")),
+            };
+            match wire::decode_reply(line) {
+                Ok(wire::WireReply::Record { key: reply_key, record }) => {
+                    if reply_key != key {
+                        return Exchange::Transport(anyhow!(
+                            "worker replied for key {reply_key} while {key} was in flight \
+                             (protocol desync)"
+                        ));
+                    }
+                    Exchange::Record(record)
+                }
+                Ok(wire::WireReply::Error { error, .. }) => Exchange::JobErr(error),
+                Err(e) => Exchange::Transport(e),
+            }
+        })();
+        self.frame_buf = frame;
+        self.reply_buf = scratch;
+        out
     }
 
     /// The raw retained stderr tail (for event payloads).
@@ -397,9 +453,74 @@ impl ProcessExecutor {
             teardown(&mut conn);
         }
     }
+
+    /// One windowed dispatch attempt: ship every still-pending job as a
+    /// single frame batch, then read replies (completion order),
+    /// matching each back to its window slot by key.  Acknowledged jobs
+    /// are reported through `done` and removed from `pending` as their
+    /// replies land, so on a transport `Err` the caller re-dispatches
+    /// exactly the unacknowledged remainder.  `batch` must hold the
+    /// frames of `pending` (in order) — encoded by the caller so the
+    /// scratch buffers don't fight the `self` borrow.
+    fn pump_window(
+        &mut self,
+        jobs: &[(&EngineJob, &str)],
+        pending: &mut Vec<usize>,
+        batch: &str,
+        scratch: &mut Vec<u8>,
+        done: &mut dyn FnMut(usize, Result<RunRecord>),
+    ) -> Result<()> {
+        let conn = self.ensure_conn()?;
+        conn.stdin
+            .as_mut()
+            .ok_or_else(|| anyhow!("worker stdin already closed"))
+            .and_then(|stdin| wire::flush_frames(stdin, batch))
+            .context("sending job window to worker child")?;
+        while !pending.is_empty() {
+            let line = wire::read_frame_into(&mut conn.stdout, scratch)
+                .context("reading worker reply")?
+                .ok_or_else(|| {
+                    anyhow!("worker child hung up with {} jobs unacknowledged", pending.len())
+                })?;
+            let (key, outcome) = match wire::decode_reply(line)? {
+                wire::WireReply::Record { key, record } => (key, Ok(record)),
+                wire::WireReply::Error { key, error } => (key, Err(anyhow!("{error}"))),
+            };
+            let slot = pending.iter().position(|&i| jobs[i].1 == key).ok_or_else(|| {
+                anyhow!(
+                    "worker replied for key {key} which is not in the in-flight window \
+                     (protocol desync or duplicate reply)"
+                )
+            })?;
+            let idx = pending.remove(slot);
+            done(idx, outcome);
+        }
+        Ok(())
+    }
 }
 
 impl Executor for ProcessExecutor {
+    fn pipeline_depth(&self) -> usize {
+        self.inner.pipeline_depth
+    }
+
+    /// Windowed dispatch (see the module docs): ship the whole batch as
+    /// one frame burst, stream completions back by key.  A single-job
+    /// batch routes through [`Executor::run`] so depth-1 behavior —
+    /// including the exact restart accounting the byte-determinism
+    /// suites pin — is untouched.
+    fn run_batch(
+        &mut self,
+        jobs: &[(&EngineJob, &str)],
+        done: &mut dyn FnMut(usize, Result<RunRecord>),
+    ) {
+        match jobs {
+            [] => {}
+            [(job, key)] => done(0, self.run(job, key)),
+            _ => self.run_window(jobs, done),
+        }
+    }
+
     fn run(&mut self, job: &EngineJob, key: &str) -> Result<RunRecord> {
         match self.exchange(job, key) {
             Exchange::Record(r) => Ok(r),
@@ -444,6 +565,94 @@ impl Executor for ProcessExecutor {
                             self.stderr_context()
                         ))
                     }
+                }
+            }
+        }
+    }
+}
+
+impl ProcessExecutor {
+    /// The windowed dispatch loop shared conceptually with the network
+    /// executor: attempt the window, and on a transport failure tear
+    /// the child down and re-dispatch **all unacknowledged jobs exactly
+    /// once** on a fresh (budget-gated) child; a second transport
+    /// failure — or an already-exhausted budget — reports every
+    /// still-unacknowledged job as a per-job `Err`.
+    fn run_window(
+        &mut self,
+        jobs: &[(&EngineJob, &str)],
+        done: &mut dyn FnMut(usize, Result<RunRecord>),
+    ) {
+        let mut pending: Vec<usize> = (0..jobs.len()).collect();
+        let mut first_err: Option<anyhow::Error> = None;
+        loop {
+            // encode the pending window before touching the connection
+            // (the scratch buffers can't be borrowed across ensure_conn)
+            let mut batch = std::mem::take(&mut self.batch_buf);
+            let mut frame = std::mem::take(&mut self.frame_buf);
+            let mut scratch = std::mem::take(&mut self.reply_buf);
+            batch.clear();
+            for &i in &pending {
+                frame.clear();
+                wire::encode_job_into(jobs[i].1, jobs[i].0, &mut frame);
+                wire::frame_into(&frame, &mut batch);
+            }
+            let attempt = self.pump_window(jobs, &mut pending, &batch, &mut scratch, done);
+            self.batch_buf = batch;
+            self.frame_buf = frame;
+            self.reply_buf = scratch;
+            let err = match attempt {
+                Ok(()) => return,
+                Err(e) => e,
+            };
+            self.teardown_conn();
+            match first_err.take() {
+                None if self.spawned_once && self.restarts_left == 0 => {
+                    // no fresh child to re-dispatch on: report the first
+                    // failure's context plus the budget note, like the
+                    // lockstep path
+                    self.inner.publish(Event::WorkerBudgetExhausted {
+                        worker: self.worker,
+                        stderr: self.stderr_excerpt(),
+                    });
+                    for &i in &pending {
+                        done(
+                            i,
+                            Err(anyhow!(
+                                "worker {} child lost mid-window on {} ({err:#}); restart \
+                                 budget exhausted ({} restarts used), not re-dispatching{}",
+                                self.worker,
+                                jobs[i].0.config.label,
+                                self.inner.max_restarts_per_worker,
+                                self.stderr_context()
+                            )),
+                        );
+                    }
+                    return;
+                }
+                None => {
+                    eprintln!(
+                        "engine: worker {} child lost with {} jobs unacknowledged ({err:#}); \
+                         re-dispatching the window once",
+                        self.worker,
+                        pending.len()
+                    );
+                    first_err = Some(err);
+                }
+                Some(first) => {
+                    for &i in &pending {
+                        done(
+                            i,
+                            Err(anyhow!(
+                                "worker {} child failed twice on job {} (first: {first:#}; \
+                                 after re-dispatch: {err:#}){}",
+                                self.worker,
+                                jobs[i].0.config.label,
+                                self.stderr_context()
+                            )),
+                        );
+                    }
+                    return;
                 }
             }
         }

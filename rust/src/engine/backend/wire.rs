@@ -30,15 +30,18 @@
 //! child that cannot parse a frame exits nonzero rather than guess.
 
 use std::collections::BTreeMap;
+use std::fmt::Write as _;
 use std::io::{BufRead, Read, Write};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::data::CorpusConfig;
-use crate::engine::cache::{corpus_json, entry_line, now_ts, parse_full_entry};
+use crate::engine::cache::{
+    corpus_json, corpus_json_into, entry_line, entry_line_into, now_ts, parse_full_entry,
+};
 use crate::engine::job::EngineJob;
 use crate::train::{RunConfig, RunRecord};
-use crate::util::Json;
+use crate::util::{write_json_str, Json};
 
 /// Protocol revision; bumped on any frame-shape change.  The hello
 /// frame carries it so a parent never feeds jobs to a worker from a
@@ -54,6 +57,65 @@ const MAX_FRAME_BYTES: usize = 64 << 20;
 pub fn write_frame(w: &mut impl Write, payload: &str) -> Result<()> {
     write!(w, "{}\n{payload}\n", payload.len()).context("writing wire frame")?;
     w.flush().context("flushing wire frame")
+}
+
+/// Append one framed payload (`<len>\n<payload>\n`) to a caller-owned
+/// buffer *without* touching the transport — the batching half of the
+/// pipelined hot path: encode a whole window into one scratch `String`,
+/// then ship it with a single `write_all` + `flush`
+/// ([`flush_frames`]) instead of one syscall pair per frame.
+pub fn frame_into(payload: &str, out: &mut String) {
+    let _ = write!(out, "{}\n{payload}\n", payload.len());
+}
+
+/// Ship a batch of frames accumulated by [`frame_into`]: one
+/// `write_all`, one `flush`.  The buffer is left intact (callers
+/// `clear()` it for reuse).
+pub fn flush_frames(w: &mut impl Write, batch: &str) -> Result<()> {
+    w.write_all(batch.as_bytes()).context("writing wire frame batch")?;
+    w.flush().context("flushing wire frame batch")
+}
+
+/// [`read_frame`] into a caller-owned scratch buffer: on the steady
+/// state (frames no larger than any previously seen) the hot loop
+/// performs **zero** heap allocation.  Returns the payload as a
+/// borrowed `&str` view of `scratch`; `Ok(None)` on clean EOF at a
+/// frame boundary.  Error semantics are identical to [`read_frame`]
+/// (pinned by the adversarial suite in `tests/net.rs`).
+pub fn read_frame_into<'a>(
+    r: &mut impl BufRead,
+    scratch: &'a mut Vec<u8>,
+) -> Result<Option<&'a str>> {
+    scratch.clear();
+    // bound the prefix read exactly like `read_frame`: a valid length
+    // line is ≤ 22 bytes, and newline-free garbage must fail here
+    let n = r
+        .by_ref()
+        .take(64)
+        .read_until(b'\n', scratch)
+        .context("reading frame length prefix")?;
+    if n == 0 {
+        return Ok(None);
+    }
+    let trimmed = std::str::from_utf8(scratch)
+        .map(str::trim)
+        .map_err(|_| anyhow!("bad frame length prefix (non-UTF-8 garbage on the stream?)"))?;
+    let len: usize = trimmed
+        .parse()
+        .with_context(|| format!("bad frame length prefix {trimmed:?} (garbage on the stream?)"))?;
+    if len > MAX_FRAME_BYTES {
+        bail!("frame length {len} exceeds the {MAX_FRAME_BYTES}-byte cap");
+    }
+    // payload + its trailing newline; resize reuses capacity
+    scratch.clear();
+    scratch.resize(len + 1, 0);
+    r.read_exact(scratch)
+        .with_context(|| format!("reading {len}-byte frame payload (torn frame?)"))?;
+    if scratch.pop() != Some(b'\n') {
+        bail!("frame payload is not newline-terminated (framing lost)");
+    }
+    let payload = std::str::from_utf8(scratch).context("frame payload is not UTF-8")?;
+    Ok(Some(payload))
 }
 
 /// Read one frame; `Ok(None)` on clean EOF at a frame boundary.  Any
@@ -162,18 +224,29 @@ pub struct WireJob {
 
 /// Encode a job frame payload for `job` (content address `key`).
 pub fn encode_job(key: &str, job: &EngineJob) -> String {
-    let mut m = BTreeMap::new();
-    // the canonical config was already serialized once for this job's
-    // run key — splice those bytes instead of rebuilding the tree
-    m.insert(
-        "config".to_string(),
-        Json::Raw(job.canonical_config_json().to_string()),
-    );
-    m.insert("corpus".to_string(), corpus_json(&job.corpus.config));
-    m.insert("key".to_string(), Json::Str(key.to_string()));
-    m.insert("label".to_string(), Json::Str(job.config.label.clone()));
-    m.insert("manifest".to_string(), Json::Str(job.manifest.name.clone()));
-    Json::Obj(m).dump()
+    let mut line = String::new();
+    encode_job_into(key, job, &mut line);
+    line
+}
+
+/// [`encode_job`] into a caller-owned buffer (appended, not cleared):
+/// the zero-realloc dispatch path.  Hand-writes the sorted-key object
+/// byte-for-byte (`config`, `corpus`, `key`, `label`, `manifest`); the
+/// canonical config was already serialized once for this job's run key,
+/// so those bytes are spliced verbatim instead of rebuilding the tree.
+/// Byte-equality with the tree writer is pinned by a unit test below.
+pub fn encode_job_into(key: &str, job: &EngineJob, out: &mut String) {
+    out.push_str("{\"config\":");
+    out.push_str(job.canonical_config_json());
+    out.push_str(",\"corpus\":");
+    corpus_json_into(&job.corpus.config, out);
+    out.push_str(",\"key\":");
+    write_json_str(key, out);
+    out.push_str(",\"label\":");
+    write_json_str(&job.config.label, out);
+    out.push_str(",\"manifest\":");
+    write_json_str(&job.manifest.name, out);
+    out.push('}');
 }
 
 /// Decode a job frame payload.
@@ -211,12 +284,27 @@ pub fn ok_reply_line(key: &str, manifest: &str, record: &RunRecord) -> String {
     entry_line(key, manifest, now_ts(), record)
 }
 
+/// [`ok_reply_line`] into a caller-owned buffer (appended): the
+/// worker's zero-realloc reply path.
+pub fn ok_reply_line_into(key: &str, manifest: &str, record: &RunRecord, out: &mut String) {
+    entry_line_into(key, manifest, now_ts(), record, out);
+}
+
 /// Encode a job-failure reply.
 pub fn err_reply_line(key: &str, error: &str) -> String {
-    let mut m = BTreeMap::new();
-    m.insert("error".to_string(), Json::Str(error.to_string()));
-    m.insert("key".to_string(), Json::Str(key.to_string()));
-    Json::Obj(m).dump()
+    let mut line = String::new();
+    err_reply_line_into(key, error, &mut line);
+    line
+}
+
+/// [`err_reply_line`] into a caller-owned buffer (appended).  Same
+/// sorted-key shape (`error`, `key`) as the tree writer it replaced.
+pub fn err_reply_line_into(key: &str, error: &str, out: &mut String) {
+    out.push_str("{\"error\":");
+    write_json_str(error, out);
+    out.push_str(",\"key\":");
+    write_json_str(key, out);
+    out.push('}');
 }
 
 /// Decode a reply frame payload.
@@ -311,11 +399,29 @@ pub fn decode_rpc_reply(line: &str) -> Result<RpcReply> {
 
 // --------------------------------------------------------------- serve
 
+/// How many decoded job frames a worker holds ahead of execution: deep
+/// enough to hide the parent's encode+send latency behind the current
+/// job's run, small enough that a dying worker strands at most a
+/// window's worth of re-dispatchable work (see the pipelined executors
+/// in `process.rs`/`net.rs`, which bound their in-flight window
+/// independently).
+pub const WORKER_READAHEAD: usize = 8;
+
 /// A worker process's main loop: write the hello frame, then answer job
 /// frames with reply frames until the parent hangs up (EOF).  `exec`
 /// failures become error replies (the loop continues); protocol
 /// failures — unparseable frames — return `Err`, and the process
 /// should exit nonzero so the parent's supervisor restarts it.
+///
+/// **Pipelining:** a scoped reader thread decodes incoming frames ahead
+/// of execution into a bounded queue ([`WORKER_READAHEAD`]), so frame
+/// parsing overlaps the current job's run and a pipelining parent can
+/// keep several frames in flight without the worker's socket buffer
+/// filling.  Replies are written in execution (= arrival) order; a
+/// windowed parent matches them by key, so completion-order streaming
+/// is safe end to end.  The reply loop reuses one scratch buffer
+/// through the `_into` codec — zero allocation per frame at steady
+/// state.
 ///
 /// The XLA `repro worker` serves through this function.  The `--mock`
 /// worker hand-rolls the same frame sequence in `main.rs` instead
@@ -323,22 +429,49 @@ pub fn decode_rpc_reply(line: &str) -> Result<RpcReply> {
 /// stream between decode and reply) — any change to the frame shapes
 /// here must be mirrored there, and the byte-identity suite in
 /// `tests/backend.rs` will catch a divergence.
-pub fn serve<R, W, F>(mut input: R, mut output: W, mut exec: F) -> Result<()>
+pub fn serve<R, W, F>(input: R, mut output: W, mut exec: F) -> Result<()>
 where
-    R: BufRead,
+    R: BufRead + Send,
     W: Write,
     F: FnMut(&WireJob) -> Result<RunRecord>,
 {
     write_frame(&mut output, &hello_line())?;
-    while let Some(line) = read_frame(&mut input)? {
-        let job = decode_job(&line)?;
-        let reply = match exec(&job) {
-            Ok(record) => ok_reply_line(&job.key, &job.manifest, &record),
-            Err(e) => err_reply_line(&job.key, &format!("{e:#}")),
-        };
-        write_frame(&mut output, &reply)?;
-    }
-    Ok(())
+    let (tx, rx) = std::sync::mpsc::sync_channel::<Result<WireJob>>(WORKER_READAHEAD);
+    std::thread::scope(|s| {
+        s.spawn(move || {
+            let mut input = input;
+            let mut scratch = Vec::new();
+            loop {
+                let job = match read_frame_into(&mut input, &mut scratch) {
+                    Ok(Some(line)) => decode_job(line),
+                    Ok(None) => break,
+                    Err(e) => {
+                        let _ = tx.send(Err(e));
+                        break;
+                    }
+                };
+                let stop = job.is_err();
+                if tx.send(job).is_err() || stop {
+                    break;
+                }
+            }
+        });
+        // `rx` must die with this closure: an early error return drops
+        // it here, unblocking a reader parked on a full queue before
+        // the scope joins the thread
+        let rx = rx;
+        let mut reply = String::new();
+        for job in rx.iter() {
+            let job = job?;
+            reply.clear();
+            match exec(&job) {
+                Ok(record) => ok_reply_line_into(&job.key, &job.manifest, &record, &mut reply),
+                Err(e) => err_reply_line_into(&job.key, &format!("{e:#}"), &mut reply),
+            }
+            write_frame(&mut output, &reply)?;
+        }
+        Ok(())
+    })
 }
 
 #[cfg(test)]
@@ -370,6 +503,58 @@ mod tests {
         let mut r = Cursor::new(buf);
         assert_eq!(read_frame(&mut r).unwrap().as_deref(), Some("one"));
         assert_eq!(read_frame(&mut r).unwrap().as_deref(), Some("two"));
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn read_frame_into_matches_read_frame_and_reuses_scratch() {
+        // round-trip, multiple frames through ONE scratch buffer
+        let mut buf = Vec::new();
+        write_frame(&mut buf, "a longer first frame payload").unwrap();
+        write_frame(&mut buf, "two").unwrap();
+        write_frame(&mut buf, "").unwrap();
+        let mut r = Cursor::new(buf);
+        let mut scratch = Vec::new();
+        assert_eq!(
+            read_frame_into(&mut r, &mut scratch).unwrap(),
+            Some("a longer first frame payload")
+        );
+        let cap = scratch.capacity();
+        assert_eq!(read_frame_into(&mut r, &mut scratch).unwrap(), Some("two"));
+        assert_eq!(read_frame_into(&mut r, &mut scratch).unwrap(), Some(""));
+        assert!(read_frame_into(&mut r, &mut scratch).unwrap().is_none());
+        // steady state: smaller frames never grew the scratch buffer
+        assert_eq!(scratch.capacity(), cap, "scratch reallocated on a smaller frame");
+        // identical adversarial semantics to `read_frame`
+        for bad in [
+            b"this is not a frame\n".to_vec(),
+            b"100\n{\"half\":".to_vec(),
+            b"2\nabX".to_vec(),
+            format!("{}\n", usize::MAX).into_bytes(),
+        ] {
+            let mut r = Cursor::new(bad);
+            assert!(read_frame_into(&mut r, &mut scratch).is_err());
+        }
+    }
+
+    #[test]
+    fn frame_into_batches_read_back_frame_by_frame() {
+        let mut batch = String::new();
+        frame_into("one", &mut batch);
+        frame_into("{\"a\":1}", &mut batch);
+        frame_into("päylöad", &mut batch);
+        let mut out = Vec::new();
+        flush_frames(&mut out, &batch).unwrap();
+        // byte-identical to three write_frame calls
+        let mut seq = Vec::new();
+        for p in ["one", "{\"a\":1}", "päylöad"] {
+            write_frame(&mut seq, p).unwrap();
+        }
+        assert_eq!(out, seq);
+        let mut r = Cursor::new(out);
+        assert_eq!(read_frame(&mut r).unwrap().as_deref(), Some("one"));
+        assert_eq!(read_frame(&mut r).unwrap().as_deref(), Some("{\"a\":1}"));
+        assert_eq!(read_frame(&mut r).unwrap().as_deref(), Some("päylöad"));
         assert!(read_frame(&mut r).unwrap().is_none());
     }
 
@@ -443,8 +628,7 @@ mod tests {
         assert!(decode_rpc_reply("{\"id\":1}").is_err());
     }
 
-    #[test]
-    fn job_frames_round_trip_config_corpus_and_label() {
+    fn test_job() -> EngineJob {
         let man = Arc::new(Manifest {
             name: "w32_test".to_string(),
             dir: std::path::PathBuf::from("."),
@@ -481,7 +665,12 @@ mod tests {
         );
         config.seed = 42;
         config.lr_tweaks = vec![("emb".to_string(), 4.0)];
-        let job = EngineJob::new(Arc::clone(&man), Arc::clone(&corpus), config, vec![]);
+        EngineJob::new(man, corpus, config, vec![])
+    }
+
+    #[test]
+    fn job_frames_round_trip_config_corpus_and_label() {
+        let job = test_job();
         let line = encode_job("00aabbccddeeff11", &job);
         let back = decode_job(&line).unwrap();
         assert_eq!(back.key, "00aabbccddeeff11");
@@ -491,6 +680,109 @@ mod tests {
         assert_eq!(back.config.label, "wire-label");
         // the decoded config is content-identical: same canonical form
         assert_eq!(back.config.canonical_json().dump(), job.config.canonical_json().dump());
+    }
+
+    /// The hand-rolled encoders must stay byte-identical to the tree
+    /// writers they replaced — the cache byte-determinism contract and
+    /// the run-key stability both ride on the frame bytes.
+    #[test]
+    fn into_encoders_match_tree_writers_byte_for_byte() {
+        let job = test_job();
+        let mut tree = BTreeMap::new();
+        tree.insert(
+            "config".to_string(),
+            Json::parse(job.canonical_config_json()).unwrap(),
+        );
+        tree.insert("corpus".to_string(), corpus_json(&job.corpus.config));
+        tree.insert("key".to_string(), Json::Str("00aabbccddeeff11".to_string()));
+        tree.insert("label".to_string(), Json::Str(job.config.label.clone()));
+        tree.insert("manifest".to_string(), Json::Str(job.manifest.name.clone()));
+        let mut hand = String::from("prefix-preserved:");
+        encode_job_into("00aabbccddeeff11", &job, &mut hand);
+        assert_eq!(hand, format!("prefix-preserved:{}", Json::Obj(tree).dump()));
+
+        let mut tree = BTreeMap::new();
+        tree.insert("error".to_string(), Json::Str("bo\"om\n \u{1}".to_string()));
+        tree.insert("key".to_string(), Json::Str("deadbeef".to_string()));
+        let mut hand = String::from("prefix-preserved:");
+        err_reply_line_into("deadbeef", "bo\"om\n \u{1}", &mut hand);
+        assert_eq!(hand, format!("prefix-preserved:{}", Json::Obj(tree).dump()));
+    }
+
+    fn det_record_for(key: &str) -> RunRecord {
+        RunRecord {
+            label: key.to_string(),
+            train_curve: vec![(1, 3.5)],
+            valid_curve: vec![(1, 3.25)],
+            final_valid_loss: 3.25,
+            rms_curves: std::collections::BTreeMap::new(),
+            final_rms: vec![],
+            diverged: false,
+            wall_seconds: 0.0,
+        }
+    }
+
+    /// The read-ahead serve loop answers every queued frame in arrival
+    /// order and terminates cleanly on EOF — pipelined parents rely on
+    /// one reply per job frame, no drops, no hangs.
+    #[test]
+    fn serve_reads_ahead_and_replies_to_every_frame_in_order() {
+        let job = test_job();
+        let mut input = Vec::new();
+        // queue more frames than WORKER_READAHEAD to exercise the
+        // bounded-channel backpressure path
+        let n = WORKER_READAHEAD + 3;
+        for i in 0..n {
+            write_frame(&mut input, &encode_job(&format!("key{i:02}"), &job)).unwrap();
+        }
+        let mut output = Vec::new();
+        let mut served = Vec::new();
+        serve(Cursor::new(input), &mut output, |j| {
+            served.push(j.key.clone());
+            if j.key == "key01" {
+                anyhow::bail!("injected job failure");
+            }
+            Ok(det_record_for(&j.key))
+        })
+        .unwrap();
+        assert_eq!(served, (0..n).map(|i| format!("key{i:02}")).collect::<Vec<_>>());
+        let mut r = Cursor::new(output);
+        check_hello(&read_frame(&mut r).unwrap().unwrap()).unwrap();
+        for i in 0..n {
+            let key = format!("key{i:02}");
+            match decode_reply(&read_frame(&mut r).unwrap().unwrap()).unwrap() {
+                WireReply::Record { key: k, record } => {
+                    assert_eq!(k, key);
+                    assert_eq!(record, det_record_for(&key));
+                }
+                WireReply::Error { key: k, error } => {
+                    assert_eq!(k, "key01", "unexpected error for {k}: {error}");
+                    assert!(error.contains("injected job failure"));
+                }
+            }
+        }
+        assert!(read_frame(&mut r).unwrap().is_none(), "extra frame after the replies");
+    }
+
+    /// A protocol failure mid-stream fails `serve` (the worker exits
+    /// nonzero) but every frame decoded before the corruption still got
+    /// its reply — a pipelined parent loses only the unacked window.
+    #[test]
+    fn serve_replies_to_good_frames_then_errors_on_garbage() {
+        let job = test_job();
+        let mut input = Vec::new();
+        write_frame(&mut input, &encode_job("goodkey", &job)).unwrap();
+        input.extend_from_slice(b"this is not a frame\n");
+        let mut output = Vec::new();
+        let err = serve(Cursor::new(input), &mut output, |j| Ok(det_record_for(&j.key)))
+            .expect_err("garbage on the stream must fail the serve loop");
+        assert!(format!("{err:#}").contains("bad frame length prefix"), "wrong error: {err:#}");
+        let mut r = Cursor::new(output);
+        check_hello(&read_frame(&mut r).unwrap().unwrap()).unwrap();
+        match decode_reply(&read_frame(&mut r).unwrap().unwrap()).unwrap() {
+            WireReply::Record { key, .. } => assert_eq!(key, "goodkey"),
+            WireReply::Error { error, .. } => panic!("good frame got an error reply: {error}"),
+        }
     }
 
     #[test]

@@ -133,7 +133,7 @@ pub use self::gc::{
 pub use self::index::{stats, CacheStats, CacheWatcher, FilterStats, SegmentStats};
 pub use self::segment::list_segments;
 
-pub(crate) use self::segment::{entry_line, now_ts, parse_full_entry};
+pub(crate) use self::segment::{entry_line, entry_line_into, now_ts, parse_full_entry};
 
 use std::collections::{BTreeMap, HashMap};
 use std::fs::{File, OpenOptions};
@@ -164,6 +164,28 @@ pub(crate) fn corpus_json(c: &CorpusConfig) -> Json {
     m.insert("smoothing".to_string(), Json::Num(c.smoothing));
     m.insert("valid_frac".to_string(), Json::Num(c.valid_frac));
     Json::Obj(m)
+}
+
+/// [`corpus_json`]`.dump()` into a caller-owned buffer (appended):
+/// the zero-realloc wire-frame path.  Hand-writes the same sorted-key
+/// object byte-for-byte (all fields numeric, alphabetical order).
+pub(crate) fn corpus_json_into(c: &CorpusConfig, out: &mut String) {
+    use crate::util::write_json_num as num;
+    out.push_str("{\"k_succ\":");
+    num(c.k_succ as f64, out);
+    out.push_str(",\"n_tokens\":");
+    num(c.n_tokens as f64, out);
+    out.push_str(",\"seed\":");
+    num(c.seed as f64, out);
+    out.push_str(",\"smoothing\":");
+    num(c.smoothing, out);
+    out.push_str(",\"valid_frac\":");
+    num(c.valid_frac, out);
+    out.push_str(",\"vocab\":");
+    num(c.vocab as f64, out);
+    out.push_str(",\"zipf_s\":");
+    num(c.zipf_s, out);
+    out.push('}');
 }
 
 /// The content address of one run, as a 16-hex-digit string.
@@ -510,6 +532,31 @@ mod tests {
             .join(format!("umup-cache-unit-{tag}-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&d);
         d
+    }
+
+    /// The hand-rolled entry codec must stay byte-identical to the
+    /// sorted-key tree form it replaced — the wire format *is* the
+    /// cache format, so a drifted writer would break cross-backend
+    /// byte-determinism, not just aesthetics.
+    #[test]
+    fn entry_line_matches_the_tree_writer_byte_for_byte() {
+        let record = rec("pä\"y\nl", 4.8125);
+        let line = entry_line("cbf29ce484222325", "w64_d4 \"q\"", 1_700_000_000, &record);
+        let mut obj = BTreeMap::new();
+        obj.insert("key".to_string(), Json::Str("cbf29ce484222325".to_string()));
+        obj.insert("manifest".to_string(), Json::Str("w64_d4 \"q\"".to_string()));
+        obj.insert("record".to_string(), record.to_json());
+        obj.insert("ts".to_string(), Json::Num(1_700_000_000u64 as f64));
+        assert_eq!(line, Json::Obj(obj).dump());
+        // and the _into variant appends without clearing
+        let mut buf = String::from("keep:");
+        entry_line_into("k", "m", 7, &record, &mut buf);
+        assert_eq!(buf, format!("keep:{}", entry_line("k", "m", 7, &record)));
+        // the corpus hand-writer obeys the same contract
+        let corpus = CorpusConfig { vocab: 64, n_tokens: 12345, seed: 9, ..Default::default() };
+        let mut buf = String::new();
+        corpus_json_into(&corpus, &mut buf);
+        assert_eq!(buf, corpus_json(&corpus).dump());
     }
 
     #[test]

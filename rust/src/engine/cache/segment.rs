@@ -252,12 +252,32 @@ pub(crate) fn now_ts() -> u64 {
 /// and the worker wire protocol's success-reply codec, so the wire
 /// format is the cache format).
 pub(crate) fn entry_line(key: &str, manifest: &str, ts: u64, record: &RunRecord) -> String {
-    let mut obj = std::collections::BTreeMap::new();
-    obj.insert("key".to_string(), Json::Str(key.to_string()));
-    obj.insert("manifest".to_string(), Json::Str(manifest.to_string()));
-    obj.insert("record".to_string(), record.to_json());
-    obj.insert("ts".to_string(), Json::Num(ts as f64));
-    Json::Obj(obj).dump()
+    let mut line = String::new();
+    entry_line_into(key, manifest, ts, record, &mut line);
+    line
+}
+
+/// [`entry_line`] into a caller-owned buffer (appended, not cleared):
+/// the zero-realloc codec path the pipelined worker reply loop reuses
+/// per frame.  Hand-writes the same sorted-key object byte-for-byte
+/// (`key`, `manifest`, `record`, `ts` — already alphabetical), with
+/// the record body via [`RunRecord::json_into`].
+pub(crate) fn entry_line_into(
+    key: &str,
+    manifest: &str,
+    ts: u64,
+    record: &RunRecord,
+    out: &mut String,
+) {
+    out.push_str("{\"key\":");
+    crate::util::write_json_str(key, out);
+    out.push_str(",\"manifest\":");
+    crate::util::write_json_str(manifest, out);
+    out.push_str(",\"record\":");
+    record.json_into(out);
+    out.push_str(",\"ts\":");
+    crate::util::write_json_num(ts as f64, out);
+    out.push('}');
 }
 
 /// One fully parsed cache line.  `ts` is 0 for pre-lifecycle lines

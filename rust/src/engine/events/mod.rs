@@ -175,7 +175,9 @@ pub enum Event {
         worker: Option<usize>,
     },
     /// An engine worker thread came up (and built its executor).
-    WorkerSpawned { worker: usize },
+    /// `window` is the executor's pipeline depth — how many jobs the
+    /// worker keeps in flight at once (1 = classic lockstep).
+    WorkerSpawned { worker: usize, window: usize },
     /// An out-of-process worker crashed/disconnected and its slot is
     /// restarting; `stderr` is the teed last-stderr excerpt.
     WorkerRestarted { worker: usize, restarts_left: usize, stderr: String },
@@ -329,8 +331,9 @@ impl Envelope {
                     m.insert("worker".to_string(), num(*w));
                 }
             }
-            Event::WorkerSpawned { worker } => {
+            Event::WorkerSpawned { worker, window } => {
                 m.insert("worker".to_string(), num(*worker));
+                m.insert("window".to_string(), num(*window));
             }
             Event::WorkerRestarted { worker, restarts_left, stderr } => {
                 m.insert("worker".to_string(), num(*worker));
@@ -440,7 +443,12 @@ impl Envelope {
                     .map(|d| d as u64),
                 worker: j.get("worker").ok().and_then(|x| x.as_usize().ok()),
             },
-            "worker_spawned" => Event::WorkerSpawned { worker: j.get("worker")?.as_usize()? },
+            "worker_spawned" => Event::WorkerSpawned {
+                worker: j.get("worker")?.as_usize()?,
+                // additive evolution: streams written before pipelining
+                // landed carry no window field; they were lockstep
+                window: j.get("window").ok().and_then(|x| x.as_usize().ok()).unwrap_or(1),
+            },
             "worker_restarted" => Event::WorkerRestarted {
                 worker: j.get("worker")?.as_usize()?,
                 restarts_left: j.get("restarts_left")?.as_usize()?,

@@ -205,6 +205,39 @@
 //!   JSON and content address are computed once per job (shared across
 //!   clones), so submission hashing and the process-backend wire frame
 //!   don't re-serialize the same config.
+//! * **Pipelined wire dispatch.**  Out-of-process executors keep a
+//!   configurable window of encoded jobs in flight per connection
+//!   (`--pipeline-depth N`; [`ProcessBackend::with_pipeline_depth`] /
+//!   [`NetworkBackend::with_pipeline_depth`]).  The worker loop pulls
+//!   up to `depth` jobs per scheduler claim — the first pull may steal
+//!   across manifests, top-ups are warm-affine only, so a window never
+//!   drags cold-manifest work onto a warm worker — encodes them into
+//!   one write+flush, and matches replies to requests by content key
+//!   in whatever order the peer finishes them.  Each completion is
+//!   persisted and reported as its reply lands (streaming, not
+//!   end-of-batch).  The remote `repro worker` overlaps too: frames
+//!   are read ahead into a bounded queue ([`backend::wire`]'s
+//!   `WORKER_READAHEAD`) so the next job parses while the current one
+//!   executes.  The codec hot path is zero-realloc: `encode_job_into`
+//!   / `read_frame_into` / `ok_reply_line_into` reuse caller scratch
+//!   buffers, so steady-state dispatch allocates nothing per frame.
+//!
+//!   *Recovery contract*: when a connection dies with a non-empty
+//!   window, **every unacknowledged job** in it is re-dispatched once
+//!   (together, to the restarted child / next endpoint) under the same
+//!   bounded `--max-restarts` budget as lockstep mode; a job that
+//!   fails again is reported `Err` per job, never retried a third
+//!   time.  Replies for keys outside the window are a protocol error
+//!   (the connection is torn down), so a duplicate or stray reply can
+//!   never mis-file a record into the cache.
+//!
+//!   *Determinism*: cache **contents** are depth-independent — the
+//!   record for a key is byte-identical whatever the window, because
+//!   the reply line *is* the cache line.  Per-connection dispatch
+//!   *order* (and hence segment line order and live event order) only
+//!   matches the classic lockstep path at depth 1; pin
+//!   `--pipeline-depth 1` when a workflow diffs raw segment files
+//!   instead of comparing keyed contents.
 
 pub mod backend;
 pub mod cache;

@@ -71,53 +71,95 @@ impl WorkerPool {
 
 fn worker_loop(w: usize, sched: &Scheduler, shared: &Shared, backend: &dyn Backend) {
     let mut exec = backend.spawn_executor(w);
-    shared.events.publish(Event::WorkerSpawned { worker: w });
-    while let Some(task) = sched.next_for(w) {
+    // how many jobs this worker keeps in flight: 1 = classic lockstep
+    // (pull one, run one, report one); pipelining executors raise it
+    // and the scheduler feeds whole warm-affine batches
+    let depth = exec.pipeline_depth().max(1);
+    shared.events.publish(Event::WorkerSpawned { worker: w, window: depth });
+    loop {
+        let tasks = sched.next_batch_for(w, depth);
+        if tasks.is_empty() {
+            return; // drained shutdown
+        }
         let t0 = std::time::Instant::now();
+        let jobs: Vec<(&EngineJob, &str)> =
+            tasks.iter().map(|t| (&t.job, t.key.as_str())).collect();
+        // RefCell: both the report callback and the panic-recovery
+        // sweep below need the completion flags
+        let completed = std::cell::RefCell::new(vec![false; tasks.len()]);
+        // each completion is persisted/published/replied from inside
+        // the callback, as the executor produces it — results stream
+        // out of a pipelined window in completion order, they don't
+        // wait for the whole batch to land
+        let mut report = |i: usize, result: Result<RunRecord>| {
+            let task = &tasks[i];
+            if std::mem::replace(&mut completed.borrow_mut()[i], true) {
+                // the executor contract says exactly-once; don't let a
+                // buggy backend double-report a job
+                eprintln!(
+                    "engine: worker {w} executor reported {} twice (dropping the second)",
+                    task.job.config.label
+                );
+                return;
+            }
+            let result = match result {
+                Ok(record) => {
+                    // persist before reporting, so a consumer that sees
+                    // the outcome may rely on the cache already holding
+                    // it
+                    if let Err(e) =
+                        lock(&shared.cache).put(&task.key, &task.job.manifest.name, &record)
+                    {
+                        eprintln!(
+                            "run-cache: failed to persist {}: {e:#}",
+                            task.job.config.label
+                        );
+                    }
+                    Ok(record)
+                }
+                Err(e) => Err(format!("{e:#}")),
+            };
+            {
+                let mut stats = lock(&shared.stats);
+                stats.executed += 1;
+                if result.is_err() {
+                    stats.failed += 1;
+                }
+            }
+            // publish before replying: a consumer woken by the outcome
+            // may rely on the event already being on the bus
+            if shared.events.is_active() {
+                shared.events.publish(Event::JobDone {
+                    sweep: task.sweep,
+                    idx: task.idx,
+                    key: task.key.clone(),
+                    manifest: task.job.manifest.name.clone(),
+                    label: task.job.config.label.clone(),
+                    status: JobStatus::Executed,
+                    ok: result.is_ok(),
+                    error: result.as_ref().err().cloned(),
+                    duration_ms: Some(t0.elapsed().as_millis() as u64),
+                    worker: Some(w),
+                });
+            }
+            let _ = task.reply.send(Reply::Done { idx: task.idx, result });
+        };
         // AssertUnwindSafe: worst case a panic leaves the executor's
         // session pool with a half-inserted entry, which is rebuilt on
         // the next miss — strictly better than losing the worker.
-        let result = match catch_unwind(AssertUnwindSafe(|| exec.run(&task.job, &task.key))) {
-            Ok(Ok(record)) => {
-                // persist before reporting, so a consumer that sees the
-                // outcome may rely on the cache already holding it
-                if let Err(e) =
-                    lock(&shared.cache).put(&task.key, &task.job.manifest.name, &record)
-                {
-                    eprintln!(
-                        "run-cache: failed to persist {}: {e:#}",
-                        task.job.config.label
-                    );
+        let ran = catch_unwind(AssertUnwindSafe(|| exec.run_batch(&jobs, &mut report)));
+        if let Err(payload) = ran {
+            // a panic mid-batch already reported some completions
+            // through the callback; every job still outstanding gets
+            // the panic as its per-job outcome
+            let msg = format!("job panicked: {}", panic_msg(payload.as_ref()));
+            for i in 0..tasks.len() {
+                let already = completed.borrow()[i];
+                if !already {
+                    report(i, Err(anyhow::anyhow!("{msg}")));
                 }
-                Ok(record)
-            }
-            Ok(Err(e)) => Err(format!("{e:#}")),
-            Err(payload) => Err(format!("job panicked: {}", panic_msg(payload.as_ref()))),
-        };
-        {
-            let mut stats = lock(&shared.stats);
-            stats.executed += 1;
-            if result.is_err() {
-                stats.failed += 1;
             }
         }
-        // publish before replying: a consumer woken by the outcome may
-        // rely on the event already being on the bus
-        if shared.events.is_active() {
-            shared.events.publish(Event::JobDone {
-                sweep: task.sweep,
-                idx: task.idx,
-                key: task.key.clone(),
-                manifest: task.job.manifest.name.clone(),
-                label: task.job.config.label.clone(),
-                status: JobStatus::Executed,
-                ok: result.is_ok(),
-                error: result.as_ref().err().cloned(),
-                duration_ms: Some(t0.elapsed().as_millis() as u64),
-                worker: Some(w),
-            });
-        }
-        let _ = task.reply.send(Reply::Done { idx: task.idx, result });
     }
 }
 

@@ -194,6 +194,45 @@ impl Scheduler {
         }
     }
 
+    /// Batched pop for a pipelining worker: block for the first task
+    /// exactly like [`Scheduler::next_for`] (priority first, warm
+    /// preferred, FIFO last — and this first pull may *steal* a cold
+    /// manifest), then top the batch up to `depth` with queued tasks
+    /// non-blockingly.  Top-up pulls are warm-affine **only**: a worker
+    /// steals singly, never a batch — grabbing `depth` cold-manifest
+    /// jobs at once would defeat the affinity design by thrashing a
+    /// sibling's warm session the moment two workers go idle together.
+    /// (Without `session_affinity` there is no warm state to protect,
+    /// so top-ups take plain priority+FIFO order.)  Returns an empty
+    /// vector only at drained shutdown.
+    ///
+    /// The deliberate cost: a lower-priority warm task can ride in a
+    /// batch ahead of a higher-priority cold one — bounded by `depth-1`
+    /// jobs per pull, the price of keeping a pipelined connection's
+    /// window full.
+    pub(crate) fn next_batch_for(&self, w: usize, depth: usize) -> Vec<Task> {
+        let Some(first) = self.next_for(w) else {
+            return Vec::new();
+        };
+        let mut batch = vec![first];
+        if depth <= 1 {
+            return batch;
+        }
+        let mut state = lock(&self.state);
+        while batch.len() < depth {
+            let Some(i) = pick_warm_only(&state, w) else {
+                break;
+            };
+            let task = state.queue.remove(i);
+            if state.affinity {
+                touch_warm(&mut state, w, &task.job.manifest.name);
+                state.hits += 1;
+            }
+            batch.push(task);
+        }
+        batch
+    }
+
     /// Cancel a submission: remove its queued tasks (replying
     /// [`Reply::Cancelled`] for each) and mark the control block so the
     /// owner can observe the state.  In-flight tasks are unaffected.
@@ -241,6 +280,27 @@ fn pick(state: &SchedState, w: usize) -> Option<usize> {
     best.map(|(i, _)| i)
 }
 
+/// Index of the best *warm* task for worker `w` — the batch top-up
+/// filter: under affinity only tasks whose manifest is already in the
+/// worker's warm mirror qualify (max by priority, then FIFO); without
+/// affinity every task qualifies and this is plain [`pick`].
+fn pick_warm_only(state: &SchedState, w: usize) -> Option<usize> {
+    if !state.affinity {
+        return pick(state, w);
+    }
+    let mut best: Option<(usize, (i32, std::cmp::Reverse<u64>))> = None;
+    for (i, t) in state.queue.iter().enumerate() {
+        if !state.warm[w].iter().any(|n| n == &t.job.manifest.name) {
+            continue;
+        }
+        let score = (t.priority, std::cmp::Reverse(t.seq));
+        if best.as_ref().is_none_or(|(_, s)| score > *s) {
+            best = Some((i, score));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
 /// Record a dispatch of `name` to worker `w` in the scheduler's mirror
 /// of that worker's session pool; returns whether it was already warm.
 fn touch_warm(state: &mut SchedState, w: usize, name: &str) -> bool {
@@ -254,5 +314,128 @@ fn touch_warm(state: &mut SchedState, w: usize, name: &str) -> bool {
         warm.insert(0, name.to_string());
         warm.truncate(cap);
         false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::data::{Corpus, CorpusConfig};
+    use crate::parametrization::{HpSet, Parametrization, Scheme};
+    use crate::runtime::{Manifest, Spec};
+    use crate::train::RunConfig;
+
+    fn job_on(manifest: &str) -> EngineJob {
+        let man = Arc::new(Manifest {
+            name: manifest.to_string(),
+            dir: std::path::PathBuf::from("."),
+            spec: Spec {
+                width: 32,
+                depth: 2,
+                batch: 4,
+                seq: 16,
+                vocab: 64,
+                head_dim: 16,
+                trainable_norms: false,
+            },
+            tensors: vec![],
+            n_params: 0,
+            state_ext_len: 1,
+            loss_offset: 0,
+            rms_offset: 1,
+            scale_sites: std::collections::BTreeMap::new(),
+            n_scale_sites: 0,
+            quant_sites: std::collections::BTreeMap::new(),
+            n_quant_sites: 0,
+            rms_sites: vec![],
+        });
+        let corpus = Arc::new(Corpus {
+            config: CorpusConfig { vocab: 64, n_tokens: 256, seed: 1, ..Default::default() },
+            tokens: vec![],
+            n_train: 0,
+        });
+        let config = RunConfig::quick(
+            manifest,
+            Parametrization::new(Scheme::Umup),
+            HpSet::with_eta(0.5),
+            4,
+        );
+        EngineJob::new(man, corpus, config, vec![])
+    }
+
+    fn enqueue_one(sched: &Scheduler, manifest: &str, priority: i32) {
+        let (tx, rx) = channel();
+        std::mem::forget(rx); // tests never reply; keep the sender alive
+        let ctl = sched.new_submission();
+        sched.enqueue(vec![Task::new(priority, 0, 0, "k".into(), job_on(manifest), tx, ctl)]);
+    }
+
+    fn manifests(batch: &[Task]) -> Vec<&str> {
+        batch.iter().map(|t| t.job.manifest.name.as_str()).collect()
+    }
+
+    /// Top-up pulls only take manifests already warm for the worker —
+    /// the first (blocking) pull steals, the batch never does.
+    #[test]
+    fn batch_topup_is_warm_affine_only() {
+        let sched = Scheduler::new(2, 2, true);
+        for m in ["a", "a", "a", "b", "b"] {
+            enqueue_one(&sched, m, 0);
+        }
+        let batch = sched.next_batch_for(0, 4);
+        assert_eq!(manifests(&batch), ["a", "a", "a"], "cold `b` must not ride the batch");
+        let batch = sched.next_batch_for(0, 4);
+        assert_eq!(manifests(&batch), ["b", "b"]);
+        let (hits, steals, _) = sched.counters();
+        assert_eq!((hits, steals), (3, 2), "one steal per manifest, top-ups are hits");
+    }
+
+    /// Without session affinity there is no warm state to protect:
+    /// top-ups take plain priority+FIFO order across manifests.
+    #[test]
+    fn batch_topup_without_affinity_is_priority_fifo() {
+        let sched = Scheduler::new(1, 2, false);
+        for m in ["a", "b", "a"] {
+            enqueue_one(&sched, m, 0);
+        }
+        assert_eq!(manifests(&sched.next_batch_for(0, 2)), ["a", "b"]);
+        assert_eq!(manifests(&sched.next_batch_for(0, 2)), ["a"]);
+        let (hits, steals, _) = sched.counters();
+        assert_eq!((hits, steals), (0, 0));
+    }
+
+    /// Depth 1 is exactly the single-pull path, and a drained shutdown
+    /// yields an empty batch (the worker's exit signal).
+    #[test]
+    fn batch_depth_one_and_shutdown_drain() {
+        let sched = Scheduler::new(1, 2, true);
+        enqueue_one(&sched, "a", 0);
+        enqueue_one(&sched, "a", 0);
+        assert_eq!(manifests(&sched.next_batch_for(0, 1)), ["a"]);
+        sched.shutdown();
+        // queued work still drains after shutdown...
+        assert_eq!(manifests(&sched.next_batch_for(0, 4)), ["a"]);
+        // ...then the empty batch says "exit"
+        assert!(sched.next_batch_for(0, 4).is_empty());
+    }
+
+    /// The first pull honors priority even when a warm lower-priority
+    /// task exists; top-ups then drain by priority within the warm set.
+    #[test]
+    fn batch_first_pull_takes_priority_over_warmth() {
+        let sched = Scheduler::new(1, 2, true);
+        // warm the worker on `a`
+        enqueue_one(&sched, "a", 0);
+        assert_eq!(manifests(&sched.next_batch_for(0, 1)), ["a"]);
+        enqueue_one(&sched, "a", 0);
+        enqueue_one(&sched, "b", 5);
+        let batch = sched.next_batch_for(0, 4);
+        // priority wins the blocking pull; after it, both manifests are
+        // warm and the top-up takes the remaining `a`
+        assert_eq!(manifests(&batch), ["b", "a"]);
+        assert_eq!(batch[0].priority, 5);
     }
 }

@@ -136,10 +136,14 @@ fn main() -> Result<()> {
                  \x20                             panels, recent failures; needs a build with\n\
                  \x20                             --features tui)\n\
                  \x20 worker  [--mock] [--artifacts DIR] [--sessions N]   serve engine jobs on\n\
-                 \x20                             stdin/stdout (spawned by --backend process)\n\
+                 \x20                             stdin/stdout (spawned by --backend process);\n\
+                 \x20                             reads ahead up to 8 frames so parsing overlaps\n\
+                 \x20                             execution whatever the engine's\n\
+                 \x20                             --pipeline-depth\n\
                  \x20 worker  --listen HOST:PORT|unix:/path [--mock]      serve engine jobs on a\n\
                  \x20                             socket, one thread per connected engine\n\
-                 \x20                             (the dialed side of --backend network)\n\
+                 \x20                             (the dialed side of --backend network);\n\
+                 \x20                             same read-ahead as stdio mode\n\
                  \x20 serve   [--addr HOST:PORT|unix:/path] [--workers N|EP,EP,...]\n\
                  \x20         [--backend network|process|mock|in-process] [--cache-dir DIR]\n\
                  \x20         [--resume]  long-lived coordinator daemon: owns one engine and\n\
@@ -167,7 +171,16 @@ fn main() -> Result<()> {
                  \x20 the run-cache line itself); crashed children are restarted with a\n\
                  \x20 bounded per-worker budget (--max-restarts, default 2), the in-flight\n\
                  \x20 job is re-dispatched once, and child stderr is teed here with a\n\
-                 \x20 [worker k] prefix.  mock is the deterministic test executor.\n\n\
+                 \x20 [worker k] prefix.  mock is the deterministic test executor.\n\
+                 \x20 train/exp/drive/serve also take [--pipeline-depth N]: each worker slot\n\
+                 \x20 keeps up to N encoded jobs in flight on its wire connection (replies\n\
+                 \x20 stream back in any order, matched by content key).  Default: 1 for\n\
+                 \x20 --backend process (lockstep), 4 for --backend network, where the\n\
+                 \x20 round-trip dominates.  On a connection death every unacknowledged job\n\
+                 \x20 in the window is re-dispatched once under the same --max-restarts\n\
+                 \x20 budget.  Depth 1 keeps per-connection dispatch order byte-identical\n\
+                 \x20 to the classic lockstep path; any depth leaves cache *contents*\n\
+                 \x20 identical, only segment line order may differ.\n\n\
                  network topology:\n\
                  \x20 --backend network ships the same wire frames over sockets: start\n\
                  \x20 long-lived workers with `repro worker --listen HOST:PORT` (or\n\
@@ -584,6 +597,9 @@ fn drive_cmd(args: &Args) -> Result<()> {
         if let Some(b) = args.flags.get("backend") {
             cmd.arg("--backend").arg(b);
         }
+        if let Some(d) = args.flags.get("pipeline-depth") {
+            cmd.arg("--pipeline-depth").arg(d);
+        }
         if !child_event_files.is_empty() {
             cmd.arg("--progress")
                 .arg(format!("jsonl:{}", child_event_files[shard.index].display()));
@@ -622,6 +638,14 @@ fn make_backend(
 
     use umup::engine::{MockBackend, NetworkBackend, ProcessBackend};
 
+    // `--pipeline-depth N`: how many encoded jobs each worker slot
+    // keeps in flight on its wire connection.  Unset keeps each
+    // backend's own default (process: 1 = lockstep; network: 4).
+    let pipeline_depth: Option<usize> = args
+        .flags
+        .get("pipeline-depth")
+        .map(|d| d.parse().context("bad --pipeline-depth"))
+        .transpose()?;
     Ok(match args.get("backend", "in-process").as_str() {
         "in-process" => None,
         "process" => {
@@ -630,10 +654,12 @@ fn make_backend(
             // forward the engine's session cap so each child's LruPool
             // matches the scheduler's warm-manifest mirror
             let sessions = umup::engine::EngineConfig::default().max_sessions_per_worker;
-            Some(Arc::new(
-                ProcessBackend::repro_worker(artifacts, false, sessions)?
-                    .with_max_restarts(max_restarts),
-            ))
+            let mut backend = ProcessBackend::repro_worker(artifacts, false, sessions)?
+                .with_max_restarts(max_restarts);
+            if let Some(d) = pipeline_depth {
+                backend = backend.with_pipeline_depth(d);
+            }
+            Some(Arc::new(backend))
         }
         "network" => {
             let max_restarts: usize =
@@ -645,7 +671,12 @@ fn make_backend(
                      unix:/path) — the endpoint list doubles as the engine worker count"
                 );
             }
-            Some(Arc::new(NetworkBackend::new(&endpoints)?.with_max_restarts(max_restarts)))
+            let mut backend =
+                NetworkBackend::new(&endpoints)?.with_max_restarts(max_restarts);
+            if let Some(d) = pipeline_depth {
+                backend = backend.with_pipeline_depth(d);
+            }
+            Some(Arc::new(backend))
         }
         "mock" => Some(Arc::new(MockBackend::deterministic())),
         other => {
@@ -767,10 +798,21 @@ fn worker_listen(args: &Args, listen: &str) -> Result<()> {
             }
         };
         eprintln!("worker: engine connected ({peer})");
+        // a serve-loop error means the stream is unusable for further
+        // jobs, but the write half usually still works: name the reason
+        // on the wire (best-effort, key "?") so the engine's transport
+        // error carries the worker's own diagnosis instead of a bare
+        // "connection lost"
+        fn report(w: &mut impl std::io::Write, e: &anyhow::Error) {
+            use umup::engine::backend::wire;
+            eprintln!("worker: connection ended with error: {e:#}");
+            let _ = wire::write_frame(w, &wire::err_reply_line("?", &format!("{e:#}")));
+        }
         if mock {
             std::thread::spawn(move || {
-                if let Err(e) = mock_serve_loop(BufReader::new(r), w) {
-                    eprintln!("worker: connection ended with error: {e:#}");
+                let mut w = w;
+                if let Err(e) = mock_serve_loop(BufReader::new(r), &mut w) {
+                    report(&mut w, &e);
                 }
             });
         } else {
@@ -779,8 +821,10 @@ fn worker_listen(args: &Args, listen: &str) -> Result<()> {
                 let artifacts = args.get("artifacts", "artifacts");
                 let cap: usize = args.get("sessions", "8").parse().context("bad --sessions")?;
                 std::thread::spawn(move || {
-                    if let Err(e) = worker_xla_serve_on(&artifacts, cap, BufReader::new(r), w) {
-                        eprintln!("worker: connection ended with error: {e:#}");
+                    let mut w = w;
+                    if let Err(e) = worker_xla_serve_on(&artifacts, cap, BufReader::new(r), &mut w)
+                    {
+                        report(&mut w, &e);
                     }
                 });
             }
@@ -825,16 +869,26 @@ fn worker_mock_serve() -> Result<()> {
         }
         err.flush()?;
     }
-    let stdin = std::io::stdin();
+    // a plain BufReader, not StdinLock: the serve loop's read-ahead
+    // thread needs to own a Send reader
     let stdout = std::io::stdout();
-    mock_serve_loop(stdin.lock(), stdout.lock())
+    mock_serve_loop(std::io::BufReader::new(std::io::stdin()), stdout.lock())
 }
 
 /// One mock wire-protocol stream: hello, then deterministic replies
 /// (with the env-armed failure injection above) until EOF.  Generic
 /// over the transport so stdio workers and `--listen` socket
 /// connections share it.
-fn mock_serve_loop(mut input: impl std::io::BufRead, mut output: impl std::io::Write) -> Result<()> {
+///
+/// Mirrors `wire::serve`'s read-ahead structure (a scoped reader
+/// thread feeding a bounded queue) so a pipelining parent gets the
+/// same overlap from mock workers as from real ones — but the failure
+/// injection stays at execution/reply time, exactly where the real
+/// executor would fail, never in the reader.
+fn mock_serve_loop(
+    input: impl std::io::BufRead + Send,
+    mut output: impl std::io::Write,
+) -> Result<()> {
     use umup::engine::backend::wire;
     use umup::engine::det_record;
 
@@ -855,51 +909,79 @@ fn mock_serve_loop(mut input: impl std::io::BufRead, mut output: impl std::io::W
         .unwrap_or(0);
 
     wire::write_frame(&mut output, &wire::hello_line())?;
-    while let Some(line) = wire::read_frame(&mut input)? {
-        let job = wire::decode_job(&line)?;
-        // claim_failure's marker-file side effect only runs while a
-        // mode is armed (the && short-circuits on None)
-        if let Some(mode) = fail_mode.as_deref() {
-            if claim_failure() {
-                match mode {
-                    "crash-before-reply" => {
-                        eprintln!(
-                            "worker-mock: injected crash before replying to {}",
-                            job.config.label
-                        );
-                        std::process::exit(17);
+    let (tx, rx) = std::sync::mpsc::sync_channel::<Result<wire::WireJob>>(wire::WORKER_READAHEAD);
+    std::thread::scope(|s| {
+        s.spawn(move || {
+            let mut input = input;
+            let mut scratch = Vec::new();
+            loop {
+                let job = match wire::read_frame_into(&mut input, &mut scratch) {
+                    Ok(Some(line)) => wire::decode_job(line),
+                    Ok(None) => break,
+                    Err(e) => {
+                        let _ = tx.send(Err(e));
+                        break;
                     }
-                    "crash-after-reply" => {
-                        let rec = det_record(&job.config);
-                        let reply = wire::ok_reply_line(&job.key, &job.manifest, &rec);
-                        wire::write_frame(&mut output, &reply)?;
-                        eprintln!("worker-mock: injected exit between jobs");
-                        std::process::exit(0);
-                    }
-                    "garbage" => {
-                        eprintln!("worker-mock: injected garbage on stdout");
-                        output.write_all(b"** this is not a frame **\n")?;
-                        output.flush()?;
-                        // never reply; the parent declares us dead
-                        continue;
-                    }
-                    "truncate" => {
-                        eprintln!("worker-mock: injected truncated frame");
-                        output.write_all(b"4096\n{\"to")?;
-                        output.flush()?;
-                        std::process::exit(0);
-                    }
-                    other => bail!("unknown UMUP_MOCK_FAIL mode {other:?}"),
+                };
+                let stop = job.is_err();
+                if tx.send(job).is_err() || stop {
+                    break;
                 }
             }
+        });
+        // `rx` dies with this closure, so an early error return
+        // unblocks a reader parked on a full queue before the scope
+        // joins it
+        let rx = rx;
+        let mut reply = String::new();
+        for job in rx.iter() {
+            let job = job?;
+            // claim_failure's marker-file side effect only runs while a
+            // mode is armed (the && short-circuits on None)
+            if let Some(mode) = fail_mode.as_deref() {
+                if claim_failure() {
+                    match mode {
+                        "crash-before-reply" => {
+                            eprintln!(
+                                "worker-mock: injected crash before replying to {}",
+                                job.config.label
+                            );
+                            std::process::exit(17);
+                        }
+                        "crash-after-reply" => {
+                            let rec = det_record(&job.config);
+                            let reply = wire::ok_reply_line(&job.key, &job.manifest, &rec);
+                            wire::write_frame(&mut output, &reply)?;
+                            eprintln!("worker-mock: injected exit between jobs");
+                            std::process::exit(0);
+                        }
+                        "garbage" => {
+                            eprintln!("worker-mock: injected garbage on stdout");
+                            output.write_all(b"** this is not a frame **\n")?;
+                            output.flush()?;
+                            // never reply; the parent declares us dead
+                            continue;
+                        }
+                        "truncate" => {
+                            eprintln!("worker-mock: injected truncated frame");
+                            output.write_all(b"4096\n{\"to")?;
+                            output.flush()?;
+                            std::process::exit(0);
+                        }
+                        other => bail!("unknown UMUP_MOCK_FAIL mode {other:?}"),
+                    }
+                }
+            }
+            if sleep_ms > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(sleep_ms));
+            }
+            let rec = det_record(&job.config);
+            reply.clear();
+            wire::ok_reply_line_into(&job.key, &job.manifest, &rec, &mut reply);
+            wire::write_frame(&mut output, &reply)?;
         }
-        if sleep_ms > 0 {
-            std::thread::sleep(std::time::Duration::from_millis(sleep_ms));
-        }
-        let rec = det_record(&job.config);
-        wire::write_frame(&mut output, &wire::ok_reply_line(&job.key, &job.manifest, &rec))?;
-    }
-    Ok(())
+        Ok(())
+    })
 }
 
 /// The real worker loop: resolve each wire job against this process's
@@ -908,9 +990,10 @@ fn mock_serve_loop(mut input: impl std::io::BufRead, mut output: impl std::io::W
 fn worker_xla_serve(args: &Args) -> Result<()> {
     let artifacts = args.get("artifacts", "artifacts");
     let cap: usize = args.get("sessions", "8").parse().context("bad --sessions")?;
-    let stdin = std::io::stdin();
+    // a plain BufReader, not StdinLock: the serve loop's read-ahead
+    // thread needs to own a Send reader
     let stdout = std::io::stdout();
-    worker_xla_serve_on(&artifacts, cap, stdin.lock(), stdout.lock())
+    worker_xla_serve_on(&artifacts, cap, std::io::BufReader::new(std::io::stdin()), stdout.lock())
 }
 
 /// One real-worker wire-protocol stream over any transport (stdio for
@@ -920,7 +1003,7 @@ fn worker_xla_serve(args: &Args) -> Result<()> {
 fn worker_xla_serve_on(
     artifacts: &str,
     cap: usize,
-    input: impl std::io::BufRead,
+    input: impl std::io::BufRead + Send,
     output: impl std::io::Write,
 ) -> Result<()> {
     use std::collections::HashMap;
@@ -982,6 +1065,13 @@ fn serve_cmd(args: &Args) -> Result<()> {
     let backend_flag = args.get("backend", if endpoint_list { "network" } else { "mock" });
     let max_restarts: usize =
         args.get("max-restarts", "2").parse().context("bad --max-restarts")?;
+    // unset keeps each backend's default in-flight window (process: 1
+    // = lockstep; network: 4)
+    let pipeline_depth: Option<usize> = args
+        .flags
+        .get("pipeline-depth")
+        .map(|d| d.parse().context("bad --pipeline-depth"))
+        .transpose()?;
     let artifacts = args.get("artifacts", "artifacts");
     let sessions = EngineConfig::default().max_sessions_per_worker;
     let (workers, backend): (usize, Arc<dyn Backend>) = match backend_flag.as_str() {
@@ -992,19 +1082,23 @@ fn serve_cmd(args: &Args) -> Result<()> {
                      unix:/path)"
                 );
             }
-            let b = NetworkBackend::new(&workers_flag)?.with_max_restarts(max_restarts);
+            let mut b = NetworkBackend::new(&workers_flag)?.with_max_restarts(max_restarts);
+            if let Some(d) = pipeline_depth {
+                b = b.with_pipeline_depth(d);
+            }
             (b.n_endpoints(), Arc::new(b))
         }
         "mock" => {
             (workers_flag.parse().context("bad --workers")?, Arc::new(MockBackend::deterministic()))
         }
-        "process" => (
-            workers_flag.parse().context("bad --workers")?,
-            Arc::new(
-                ProcessBackend::repro_worker(&artifacts, args.has("mock"), sessions)?
-                    .with_max_restarts(max_restarts),
-            ),
-        ),
+        "process" => {
+            let mut b = ProcessBackend::repro_worker(&artifacts, args.has("mock"), sessions)?
+                .with_max_restarts(max_restarts);
+            if let Some(d) = pipeline_depth {
+                b = b.with_pipeline_depth(d);
+            }
+            (workers_flag.parse().context("bad --workers")?, Arc::new(b))
+        }
         "in-process" => {
             (workers_flag.parse().context("bad --workers")?, in_process_backend(sessions)?)
         }

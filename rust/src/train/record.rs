@@ -5,7 +5,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{ensure, Result};
 
-use crate::util::Json;
+use crate::util::{write_json_num, write_json_str, Json};
 
 /// The outcome of one training run.
 ///
@@ -58,6 +58,63 @@ impl RunRecord {
             ),
         );
         Json::Obj(m)
+    }
+
+    /// Append this record's JSON object to `out`, byte-identical to
+    /// `self.to_json().dump()` but without building the value tree —
+    /// the allocation-free half of the wire codec's `_into` hot path.
+    /// Field order is the tree writer's `BTreeMap` (alphabetical)
+    /// order; the byte-equality contract is pinned by a unit test
+    /// below, so any field added to [`RunRecord::to_json`] must be
+    /// mirrored here.
+    pub fn json_into(&self, out: &mut String) {
+        fn curve_into(c: &[(u64, f64)], out: &mut String) {
+            out.push('[');
+            for (i, &(s, l)) in c.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push('[');
+                write_json_num(s as f64, out);
+                out.push(',');
+                write_json_num(l, out);
+                out.push(']');
+            }
+            out.push(']');
+        }
+        out.push_str("{\"diverged\":");
+        out.push_str(if self.diverged { "true" } else { "false" });
+        out.push_str(",\"final_rms\":[");
+        for (i, (site, v)) in self.final_rms.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push('[');
+            write_json_str(site, out);
+            out.push(',');
+            write_json_num(*v, out);
+            out.push(']');
+        }
+        out.push_str("],\"final_valid_loss\":");
+        write_json_num(self.final_valid_loss, out);
+        out.push_str(",\"label\":");
+        write_json_str(&self.label, out);
+        out.push_str(",\"rms_curves\":{");
+        for (i, (site, c)) in self.rms_curves.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            write_json_str(site, out);
+            out.push(':');
+            curve_into(c, out);
+        }
+        out.push_str("},\"train_curve\":");
+        curve_into(&self.train_curve, out);
+        out.push_str(",\"valid_curve\":");
+        curve_into(&self.valid_curve, out);
+        out.push_str(",\"wall_seconds\":");
+        write_json_num(self.wall_seconds, out);
+        out.push('}');
     }
 
     /// Parse a record serialized by [`RunRecord::to_json`] (the run
@@ -167,6 +224,42 @@ mod tests {
         assert_eq!(back.rms_curves["w.head"], vec![(1, 0.9), (8, 1.4)]);
         assert_eq!(back.final_rms, vec![("w.head".to_string(), 1.4)]);
         assert_eq!(back.wall_seconds, 0.25);
+    }
+
+    /// The hand-rolled writer must stay byte-identical to the tree
+    /// writer — the cache/wire byte-determinism contract rides on it.
+    #[test]
+    fn json_into_matches_to_json_dump_byte_for_byte() {
+        let mut rms = BTreeMap::new();
+        rms.insert("w.emb".to_string(), vec![(0u64, 1.0f64), (10, 1.125)]);
+        rms.insert("w.head\"q\u{1}".to_string(), vec![(8, f64::NAN)]);
+        let records = [
+            RunRecord {
+                label: "päy\nlöad \"x\"".into(),
+                train_curve: vec![(1, 5.0), (2, 4.5), (3, f64::INFINITY)],
+                valid_curve: vec![(2, 4.8125)],
+                final_valid_loss: 4.8125,
+                rms_curves: rms,
+                final_rms: vec![("w.emb".into(), 1.0), ("w.\\q".into(), f64::NAN)],
+                diverged: false,
+                wall_seconds: 1.5,
+            },
+            RunRecord {
+                label: String::new(),
+                train_curve: vec![],
+                valid_curve: vec![],
+                final_valid_loss: f64::INFINITY,
+                rms_curves: BTreeMap::new(),
+                final_rms: vec![],
+                diverged: true,
+                wall_seconds: 1e16 + 0.25,
+            },
+        ];
+        for r in &records {
+            let mut hand = String::from("prefix-preserved:");
+            r.json_into(&mut hand);
+            assert_eq!(hand, format!("prefix-preserved:{}", r.to_json().dump()));
+        }
     }
 
     #[test]

@@ -91,21 +91,20 @@ impl Json {
         s
     }
 
+    /// [`Json::dump`] into a caller-owned buffer (appended, not
+    /// cleared) — the zero-realloc path for hot loops that serialize
+    /// into one reused scratch `String`.  Byte-identical to `dump`.
+    pub fn dump_into(&self, out: &mut String) {
+        self.write(out);
+    }
+
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-            Json::Num(n) => {
-                if !n.is_finite() {
-                    // JSON has no inf/nan literal; readers map null back
-                    // to +inf (only divergence sentinels are non-finite)
-                    out.push_str("null");
-                } else if n.fract() == 0.0 && n.abs() < 1e15 {
-                    let _ = write!(out, "{}", *n as i64);
-                } else {
-                    let _ = write!(out, "{n}");
-                }
-            }
+            // JSON has no inf/nan literal; readers map null back to
+            // +inf (only divergence sentinels are non-finite)
+            Json::Num(n) => write_json_num(*n, out),
             Json::Str(s) => write_escaped(s, out),
             Json::Raw(s) => out.push_str(s),
             Json::Arr(v) => {
@@ -131,6 +130,28 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Append `s` as a JSON string literal (quotes + escapes), exactly as
+/// [`Json::dump`] would.  Public so hand-rolled writers (the wire
+/// codec's `_into` hot path) can stay byte-identical to the tree
+/// writer without building a [`Json::Str`].
+pub fn write_json_str(s: &str, out: &mut String) {
+    write_escaped(s, out);
+}
+
+/// Append `n` with [`Json::dump`]'s number formatting (non-finite →
+/// `null`, integral magnitudes below 1e15 as integers, shortest
+/// round-trip floats otherwise).  The numeric half of the
+/// byte-identical hand-rolled-writer contract.
+pub fn write_json_num(n: f64, out: &mut String) {
+    if !n.is_finite() {
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() < 1e15 {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        let _ = write!(out, "{n}");
     }
 }
 

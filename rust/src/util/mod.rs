@@ -10,5 +10,5 @@ pub mod prop;
 pub mod rng;
 pub mod stats;
 
-pub use json::Json;
+pub use json::{write_json_num, write_json_str, Json};
 pub use rng::Rng;

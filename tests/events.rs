@@ -147,8 +147,8 @@ fn golden_envelope_lines_are_pinned() {
             r#"{"idx":5,"key":"00cc","label":"w32-lr3","manifest":"w32","ok":true,"seq":5,"status":"hit","sweep":7,"ts":1700000000000,"type":"job_done","v":1}"#,
         ),
         (
-            env(6, None, Event::WorkerSpawned { worker: 2 }),
-            r#"{"seq":6,"ts":1700000000000,"type":"worker_spawned","v":1,"worker":2}"#,
+            env(6, None, Event::WorkerSpawned { worker: 2, window: 4 }),
+            r#"{"seq":6,"ts":1700000000000,"type":"worker_spawned","v":1,"window":4,"worker":2}"#,
         ),
         (
             env(
@@ -257,6 +257,12 @@ fn parse_tolerates_future_fields_and_types() {
     let parsed = Envelope::parse(known).expect("extra fields must be ignored");
     assert!(matches!(parsed.event, Event::JobQueued { sweep: 7, idx: 3, .. }));
 
+    // a pre-pipelining worker_spawned line (no `window` field) still
+    // parses: absent window means lockstep
+    let old = r#"{"seq":6,"ts":1700000000000,"type":"worker_spawned","v":1,"worker":2}"#;
+    let parsed = Envelope::parse(old).expect("pre-window streams must parse");
+    assert_eq!(parsed.event, Event::WorkerSpawned { worker: 2, window: 1 });
+
     // an unknown type decodes to Unknown, header preserved
     let future = r#"{"flux":0.5,"seq":41,"shard":2,"ts":1700000000000,"type":"warp_core_breach","v":1}"#;
     let parsed = Envelope::parse(future).expect("unknown types must not error");
@@ -274,7 +280,7 @@ fn parse_tolerates_future_fields_and_types() {
 fn bus_overflow_drops_are_counted_not_blocking() {
     let bus = EventBus::new();
     // inert until subscribed: publish is a no-op that stamps nothing
-    bus.publish(Event::WorkerSpawned { worker: 0 });
+    bus.publish(Event::WorkerSpawned { worker: 0, window: 1 });
     assert!(!bus.is_active());
     assert_eq!(bus.published(), 0);
     assert_eq!(bus.dropped(), 0);
@@ -282,7 +288,7 @@ fn bus_overflow_drops_are_counted_not_blocking() {
     let stream = bus.subscribe(2);
     assert!(bus.is_active());
     for w in 0..10 {
-        bus.publish(Event::WorkerSpawned { worker: w });
+        bus.publish(Event::WorkerSpawned { worker: w, window: 1 });
     }
     // capacity 2: the first two buffered, the other eight dropped and
     // counted — publish returned every time without blocking
@@ -294,11 +300,11 @@ fn bus_overflow_drops_are_counted_not_blocking() {
 
     // drained capacity accepts new events again; the seq gap exposes
     // the drops to the consumer
-    bus.publish(Event::WorkerSpawned { worker: 99 });
+    bus.publish(Event::WorkerSpawned { worker: 99, window: 1 });
     assert_eq!(bus.dropped(), 8);
     let next = stream.recv().expect("post-drain event");
     assert_eq!(next.seq, 10);
-    assert!(matches!(next.event, Event::WorkerSpawned { worker: 99 }));
+    assert!(matches!(next.event, Event::WorkerSpawned { worker: 99, .. }));
 
     // end-of-stream: once every bus clone is gone the stream ends
     drop(bus);

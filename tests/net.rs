@@ -131,16 +131,48 @@ fn read_frame_rejects_adversarial_streams_without_hanging() {
 
 // ------------------------------------------------------- data plane
 
-/// The acceptance test: a 4-endpoint `NetworkBackend` drain of the
-/// shared sweep over loopback TCP — with one worker process killed
-/// mid-job — produces a run cache byte-identical to the in-process run,
-/// with the killed job re-dispatched to a surviving endpoint (not
-/// failed) and the reconnect accounted.
+/// One 4-worker engine drain of the shared sweep against `addrs` at
+/// the given pipeline depth; returns the backend (for restart
+/// accounting) and the engine report.
+fn net_drain(
+    addrs: &[String],
+    depth: usize,
+    dir: &std::path::Path,
+) -> (Arc<NetworkBackend>, umup::engine::EngineReport) {
+    let backend = Arc::new(
+        NetworkBackend::new(&addrs.join(","))
+            .unwrap()
+            .with_max_restarts(2)
+            .with_pipeline_depth(depth),
+    );
+    let engine = Engine::with_backend(
+        EngineConfig {
+            workers: 4,
+            cache_dir: Some(dir.to_path_buf()),
+            resume: true,
+            ..EngineConfig::default()
+        },
+        Arc::clone(&backend) as Arc<dyn umup::engine::Backend>,
+    )
+    .unwrap();
+    let report = engine.run(shared_job_list());
+    drop(engine);
+    (backend, report)
+}
+
+/// The acceptance test: 4-endpoint `NetworkBackend` drains of the
+/// shared sweep over loopback TCP at `--pipeline-depth 1` (lockstep)
+/// and `--pipeline-depth 4` (windowed, with one worker process killed
+/// mid-window) produce run caches byte-identical to each other and to
+/// the in-process run — the killed worker's whole unacknowledged
+/// window is re-dispatched (exactly once each: the cache holds exactly
+/// one line per job), `failed == 0`, and the reconnect is accounted.
 #[test]
 fn network_drain_with_worker_kill_is_byte_identical_to_in_process() {
     pin_cache_ts();
     let in_dir = tmp_dir("inproc");
-    let net_dir = tmp_dir("drain");
+    let d1_dir = tmp_dir("drain-d1");
+    let d4_dir = tmp_dir("drain-d4");
     let marker = tmp_dir("kill-marker").with_extension("once");
     let _ = std::fs::remove_file(&marker);
     let n_jobs = shared_job_list().len();
@@ -160,8 +192,23 @@ fn network_drain_with_worker_kill_is_byte_identical_to_in_process() {
     assert_eq!(report.completed, n_jobs);
     drop(engine);
 
-    // the fleet: 4 listeners, every one armed to die before its first
-    // reply, with a shared marker so exactly one actually does
+    // depth 1: strict lockstep over a healthy 4-listener fleet
+    let mut fleet1 = Vec::new();
+    let mut addrs1 = Vec::new();
+    for _ in 0..4 {
+        let (child, addr) = spawn_listen_worker(&[]);
+        fleet1.push(child);
+        addrs1.push(addr);
+    }
+    let (backend, report) = net_drain(&addrs1, 1, &d1_dir);
+    assert_eq!(report.completed, n_jobs);
+    assert_eq!(report.failed, 0);
+    assert_eq!(backend.restarts(), 0, "a healthy lockstep drain must not reconnect");
+    kill_fleet(fleet1);
+
+    // depth 4: windowed dispatch, every listener armed to die before
+    // its first reply, with a shared marker so exactly one actually
+    // does — taking its whole in-flight window down with it
     let marker_s = marker.to_str().unwrap().to_string();
     let mut fleet = Vec::new();
     let mut addrs = Vec::new();
@@ -173,39 +220,241 @@ fn network_drain_with_worker_kill_is_byte_identical_to_in_process() {
         fleet.push(child);
         addrs.push(addr);
     }
-    let backend =
-        Arc::new(NetworkBackend::new(&addrs.join(",")).unwrap().with_max_restarts(2));
-    let engine = Engine::with_backend(
-        EngineConfig {
-            workers: 4,
-            cache_dir: Some(net_dir.clone()),
-            resume: true,
-            ..EngineConfig::default()
-        },
-        Arc::clone(&backend) as Arc<dyn umup::engine::Backend>,
-    )
-    .unwrap();
-    let report = engine.run(shared_job_list());
-    assert_eq!(report.completed, n_jobs, "the killed worker's job must be re-dispatched");
+    let (backend, report) = net_drain(&addrs, 4, &d4_dir);
+    assert_eq!(
+        report.completed, n_jobs,
+        "every job in the killed worker's window must be re-dispatched"
+    );
     assert_eq!(report.failed, 0);
     assert_eq!(report.executed, n_jobs);
-    drop(engine);
 
     assert!(marker.exists(), "the worker-kill injection never fired");
     assert!(backend.restarts() >= 1, "the lost connection must be accounted as a reconnect");
 
     let reference = sorted_segment_lines(&in_dir);
-    let netted = sorted_segment_lines(&net_dir);
+    let lockstep = sorted_segment_lines(&d1_dir);
+    let windowed = sorted_segment_lines(&d4_dir);
+    // exactly one cache line per job: a window job re-dispatched more
+    // than once (or double-reported) would show up as a duplicate
     assert_eq!(reference.len(), n_jobs);
     assert_eq!(
-        netted, reference,
-        "network-backend cache must be byte-identical to the in-process one"
+        lockstep, reference,
+        "depth-1 network cache must be byte-identical to the in-process one"
+    );
+    assert_eq!(
+        windowed, reference,
+        "depth-4 network cache must be byte-identical to the in-process one"
     );
 
     kill_fleet(fleet);
     let _ = std::fs::remove_file(&marker);
     let _ = std::fs::remove_dir_all(&in_dir);
-    let _ = std::fs::remove_dir_all(&net_dir);
+    let _ = std::fs::remove_dir_all(&d1_dir);
+    let _ = std::fs::remove_dir_all(&d4_dir);
+}
+
+// ------------------------------------------- windowed reply adversaries
+//
+// These drive a `NetworkBackend` executor directly (via
+// `Backend::spawn_executor` + `Executor::run_batch`) against a
+// hand-rolled listener speaking raw `wire::` frames, so each test
+// controls exactly how the "worker" misbehaves inside a reply window.
+// The contract under test: every job gets exactly one `done` call —
+// a correct completion or a per-job `Err` — never a hang, and a reply
+// keyed outside the window can never be filed as some job's record.
+
+/// Bind a loopback listener whose connections are served sequentially
+/// by `handler(conn_index, reader, writer)`; the hello frame is sent
+/// before the handler runs.  Returns the dialable address.  The
+/// accept thread is deliberately detached: it blocks in `accept`
+/// until the test process exits.
+fn adversarial_listener(
+    handler: impl Fn(
+            usize,
+            &mut BufReader<std::net::TcpStream>,
+            &mut std::net::TcpStream,
+        ) -> anyhow::Result<()>
+        + Send
+        + 'static,
+) -> String {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        for (i, stream) in listener.incoming().enumerate() {
+            let Ok(stream) = stream else { break };
+            let mut w = stream.try_clone().unwrap();
+            let mut r = BufReader::new(stream);
+            if wire::write_frame(&mut w, &wire::hello_line()).is_err() {
+                continue;
+            }
+            let _ = handler(i, &mut r, &mut w);
+        }
+    });
+    addr
+}
+
+/// Read one job frame off the stream (panicking on EOF/garbage — the
+/// engine side is the honest peer in these tests).
+fn read_job(r: &mut BufReader<std::net::TcpStream>) -> wire::WireJob {
+    let line = wire::read_frame(r).unwrap().expect("engine hung up mid-window");
+    wire::decode_job(&line).unwrap()
+}
+
+/// The canonical correct reply for a job frame: the deterministic mock
+/// record, encoded as the cache line (same bytes `repro worker --mock`
+/// would send).
+fn ok_reply_for(wj: &wire::WireJob) -> String {
+    wire::ok_reply_line(&wj.key, &wj.manifest, &umup::engine::det_record(&wj.config))
+}
+
+/// Drain the engine's remaining frames until it hangs up.  Misbehaving
+/// handlers end with this instead of closing early, so the socket
+/// never resets with unread data in flight (a reset could race the
+/// replies already sent and make the engine's view nondeterministic).
+fn drain_to_eof(r: &mut BufReader<std::net::TcpStream>) {
+    while let Ok(Some(_)) = wire::read_frame(r) {}
+}
+
+/// A 4-job window plus its per-job completion log: run `run_batch`
+/// over the first 4 shared jobs and record each `done` outcome,
+/// asserting the exactly-once contract as it streams.
+fn run_window_against(addr: &str, max_restarts: usize) -> Vec<anyhow::Result<umup::train::RunRecord>> {
+    use umup::engine::{Backend as _, Executor as _};
+    let backend = NetworkBackend::new(addr)
+        .unwrap()
+        .with_max_restarts(max_restarts)
+        .with_pipeline_depth(4);
+    let mut exec = backend.spawn_executor(0);
+    let jobs: Vec<_> = shared_job_list().into_iter().take(4).collect();
+    let keys: Vec<String> = jobs.iter().map(|j| j.key()).collect();
+    let refs: Vec<(&umup::engine::EngineJob, &str)> =
+        jobs.iter().zip(keys.iter()).map(|(j, k)| (j, k.as_str())).collect();
+    let mut results: Vec<Option<anyhow::Result<umup::train::RunRecord>>> =
+        (0..refs.len()).map(|_| None).collect();
+    exec.run_batch(&refs, &mut |i, r| {
+        assert!(results[i].is_none(), "job {i} reported twice");
+        results[i] = Some(r);
+    });
+    results
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| r.unwrap_or_else(|| panic!("job {i} never reported")))
+        .collect()
+}
+
+/// Expected cache-line bytes for shared job `i` (depth-independent:
+/// the reply line *is* the cache line).
+fn expected_line(i: usize) -> String {
+    let job = &shared_job_list()[i];
+    wire::ok_reply_line(
+        &job.key(),
+        &job.manifest.name,
+        &umup::engine::det_record(&job.config),
+    )
+}
+
+/// Reply reordering within a window is legal: the worker answers the
+/// whole 4-job window in reverse, and every job must still complete
+/// with *its own* record (matched by key, not arrival order), with no
+/// reconnect consumed.
+#[test]
+fn windowed_replies_out_of_order_complete_every_job_correctly() {
+    pin_cache_ts();
+    let addr = adversarial_listener(|_, r, w| {
+        let jobs: Vec<wire::WireJob> = (0..4).map(|_| read_job(r)).collect();
+        for wj in jobs.iter().rev() {
+            wire::write_frame(w, &ok_reply_for(wj))?;
+        }
+        drain_to_eof(r);
+        Ok(())
+    });
+    let results = run_window_against(&addr, 2);
+    for (i, result) in results.iter().enumerate() {
+        let rec = result.as_ref().unwrap_or_else(|e| panic!("job {i} failed: {e:#}"));
+        let job = &shared_job_list()[i];
+        assert_eq!(
+            wire::ok_reply_line(&job.key(), &job.manifest.name, rec),
+            expected_line(i),
+            "job {i} completed with some other job's record"
+        );
+    }
+}
+
+/// A reply keyed to nothing in the window is a protocol desync: the
+/// connection is torn down and the *whole* window re-dispatched once —
+/// the stray record is never filed as any job's completion.
+#[test]
+fn windowed_unknown_key_reply_is_redispatched_never_miscached() {
+    pin_cache_ts();
+    let addr = adversarial_listener(|conn, r, w| {
+        if conn == 0 {
+            // echo a record for a key the engine never submitted
+            let wj = read_job(r);
+            let stray = wire::ok_reply_line(
+                "00000000deadbeef",
+                &wj.manifest,
+                &umup::engine::det_record(&wj.config),
+            );
+            wire::write_frame(w, &stray)?;
+            drain_to_eof(r);
+        } else {
+            // the re-dispatch target behaves
+            while let Some(line) = wire::read_frame(r)? {
+                wire::write_frame(w, &ok_reply_for(&wire::decode_job(&line)?))?;
+            }
+        }
+        Ok(())
+    });
+    let results = run_window_against(&addr, 2);
+    for (i, result) in results.iter().enumerate() {
+        let rec = result.as_ref().unwrap_or_else(|e| panic!("job {i} failed: {e:#}"));
+        let job = &shared_job_list()[i];
+        assert_eq!(
+            wire::ok_reply_line(&job.key(), &job.manifest.name, rec),
+            expected_line(i),
+            "job {i} must complete with its own record after the re-dispatch"
+        );
+    }
+}
+
+/// A duplicate reply for an already-acknowledged key is the same
+/// desync, and a worker that desyncs on every connection exhausts the
+/// one re-dispatch: the jobs acknowledged before each desync keep
+/// their (single) completions, every job still unacknowledged after
+/// the re-dispatch gets a per-job `Err` — and nothing hangs.
+#[test]
+fn windowed_duplicate_key_reply_fails_residual_jobs_after_one_redispatch() {
+    pin_cache_ts();
+    let addr = adversarial_listener(|_, r, w| {
+        // every connection: answer the first job correctly, then
+        // answer it AGAIN (its key has left the window)
+        let wj = read_job(r);
+        let reply = ok_reply_for(&wj);
+        wire::write_frame(w, &reply)?;
+        wire::write_frame(w, &reply)?;
+        drain_to_eof(r);
+        Ok(())
+    });
+    let results = run_window_against(&addr, 1);
+    // window order is the jobs slice order: conn 0 acks job 0 then
+    // desyncs; the re-dispatch (conn 1) acks job 1 then desyncs; with
+    // the single re-dispatch spent, jobs 2 and 3 fail per-job
+    for (i, result) in results.iter().enumerate().take(2) {
+        let rec = result.as_ref().unwrap_or_else(|e| panic!("job {i} failed: {e:#}"));
+        let job = &shared_job_list()[i];
+        assert_eq!(
+            wire::ok_reply_line(&job.key(), &job.manifest.name, rec),
+            expected_line(i),
+            "job {i} must keep its pre-desync completion"
+        );
+    }
+    for (i, result) in results.iter().enumerate().skip(2) {
+        let err = result.as_ref().expect_err("unacknowledged jobs must fail per-job");
+        assert!(
+            format!("{err:#}").contains("failed twice"),
+            "job {i} error must name the exhausted re-dispatch: {err:#}"
+        );
+    }
 }
 
 // ---------------------------------------------------- control plane
