@@ -31,7 +31,7 @@ use std::io::{BufRead, BufReader};
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use umup::data::{Corpus, CorpusConfig};
 use umup::engine::{
@@ -330,6 +330,15 @@ fn main() -> anyhow::Result<()> {
             "network_pipelined",
             Arc::new(NetworkBackend::new(&addrs.join(","))?.with_pipeline_depth(depth)),
         ),
+        (
+            format!("network mock (4 listeners, window {depth}, 30s job deadline)"),
+            "network_deadline",
+            Arc::new(
+                NetworkBackend::new(&addrs.join(","))?
+                    .with_pipeline_depth(depth)
+                    .with_job_timeout(Some(Duration::from_secs(30))),
+            ),
+        ),
     ];
     let mut per_job_ms = std::collections::BTreeMap::new();
     for (name, key, backend) in backends {
@@ -388,6 +397,17 @@ fn main() -> anyhow::Result<()> {
         Metric::lower(
             "network_pipelined_vs_lockstep_per_job_ratio",
             per_job_ms["network_pipelined"] / per_job_ms["network_d1"].max(1e-9),
+            "x",
+        )
+        .gated(),
+        Metric::lower("network_deadline_per_job_ms", per_job_ms["network_deadline"], "ms"),
+        // the cost of arming --job-timeout: same sockets, same window,
+        // but every read sits behind a (never-firing) 30s deadline —
+        // gated so a deadline path that starts re-arming timers or
+        // copying per frame shows up as a regression here
+        Metric::lower(
+            "network_deadline_vs_unarmed_per_job_ratio",
+            per_job_ms["network_deadline"] / per_job_ms["network_pipelined"].max(1e-9),
             "x",
         )
         .gated(),

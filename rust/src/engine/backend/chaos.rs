@@ -1,0 +1,255 @@
+//! Deterministic fault injection for the network stack: a [`FaultPlan`]
+//! spec plus an in-tree chaos proxy (`repro chaos --listen A --upstream
+//! B --faults SPEC`) that sits between an engine and a real `repro
+//! worker --listen`, forwarding the wire protocol verbatim except for
+//! the exact faults the plan names.
+//!
+//! # Determinism
+//!
+//! Every fault is pinned to a *reply ordinal*: the proxy counts worker
+//! reply frames globally (across all proxied connections, 1-based) and
+//! each destructive fault fires **exactly once**, at exactly the
+//! ordinal its plan names — `drop-conn:5` kills the connection in place
+//! of the fifth reply, on every run.  Per-connection counters would
+//! re-fire the same fault after every engine reconnect and chew through
+//! the restart budget; a global one-shot counter makes each plan a
+//! single, recoverable wound.  The first upstream frame of each
+//! connection is the worker hello and is forwarded uncounted, so the
+//! handshake itself is never a fault target.
+//!
+//! `delay-ms` is the exception: it is not one-shot but a uniform added
+//! latency on every counted reply, for shaking out ordering assumptions
+//! without ever corrupting anything.
+//!
+//! The chaos suite (`tests/chaos.rs`) drives a real sweep through the
+//! proxy under every plan and asserts the drained cache is
+//! byte-identical to a clean in-process run — the whole point: no fault
+//! the plan can express may corrupt results, only delay them.
+
+use std::io::{BufReader, Read, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::net::{Endpoint, Listener};
+use super::wire;
+
+/// A parsed `--faults` / `UMUP_FAULTS` spec: which reply ordinal each
+/// fault fires at (see the module docs for the counting rules).  All
+/// fields `None` is a pure passthrough proxy.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// After forwarding reply `n`, hold the connection open but forward
+    /// nothing more — the hung-but-alive shape only `--job-timeout`
+    /// can recover from.
+    pub stall_after: Option<u64>,
+    /// Sleep this many milliseconds before forwarding *every* counted
+    /// reply (not one-shot).
+    pub delay_ms: Option<u64>,
+    /// In place of reply `n`, send its length prefix plus half its
+    /// payload, then close — a torn frame mid-payload.
+    pub tear_frame: Option<u64>,
+    /// Close the connection in place of reply `n` (the reply is lost).
+    pub drop_conn: Option<u64>,
+    /// In place of reply `n`, send a line that is not a frame at all,
+    /// then close — garbage on the stream.
+    pub garbage_reply: Option<u64>,
+}
+
+impl FaultPlan {
+    /// Parse a comma-separated `key:value` spec, e.g.
+    /// `stall-after:3,delay-ms:50`.  Unknown keys error naming the
+    /// known set; an empty spec is a passthrough plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (key, value) = part
+                .split_once(':')
+                .ok_or_else(|| anyhow!("fault {part:?} is not key:value"))?;
+            let value: u64 = value
+                .trim()
+                .parse()
+                .with_context(|| format!("fault {key:?} value {value:?} is not a number"))?;
+            match key.trim() {
+                "stall-after" => plan.stall_after = Some(value),
+                "delay-ms" => plan.delay_ms = Some(value),
+                "tear-frame" => plan.tear_frame = Some(value),
+                "drop-conn" => plan.drop_conn = Some(value),
+                "garbage-reply" => plan.garbage_reply = Some(value),
+                other => bail!(
+                    "unknown fault {other:?} (known: stall-after, delay-ms, tear-frame, \
+                     drop-conn, garbage-reply)"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// True when the plan injects nothing at all.
+    pub fn is_passthrough(&self) -> bool {
+        *self == FaultPlan::default()
+    }
+}
+
+/// Accept proxied connections forever, spawning one thread per client.
+/// Each connection dials `upstream` fresh; faults fire against the
+/// process-global reply counter, so a plan's one-shot faults stay
+/// one-shot across reconnects.  Returns only on an accept error.
+pub fn run_proxy(listener: Listener, upstream: Endpoint, plan: FaultPlan) -> Result<()> {
+    let counter = Arc::new(AtomicU64::new(0));
+    loop {
+        let (client_r, client_w, peer) = listener.accept()?;
+        let upstream = upstream.clone();
+        let plan = plan.clone();
+        let counter = Arc::clone(&counter);
+        thread::spawn(move || {
+            if let Err(e) = proxy_conn(client_r, client_w, &upstream, &plan, &counter) {
+                eprintln!("chaos: connection from {peer} ended: {e:#}");
+            }
+        });
+    }
+}
+
+/// Serve one proxied connection: a raw byte pump for the client→worker
+/// direction (job frames are never faulted — only replies are, so a
+/// faulted run can still be byte-compared against a clean one), and a
+/// frame-by-frame fault loop for worker→client replies.
+fn proxy_conn(
+    client_r: Box<dyn Read + Send>,
+    mut client_w: Box<dyn Write + Send>,
+    upstream: &Endpoint,
+    plan: &FaultPlan,
+    counter: &AtomicU64,
+) -> Result<()> {
+    let (up_r, mut up_w) = upstream
+        .connect()
+        .with_context(|| format!("chaos proxy dialing upstream {upstream}"))?;
+    thread::spawn(move || {
+        let mut client_r = client_r;
+        let _ = std::io::copy(&mut client_r, &mut up_w);
+    });
+    let mut up_r = BufReader::new(up_r);
+    // the first upstream frame is the worker hello: forwarded uncounted
+    let hello = wire::read_frame(&mut up_r)
+        .context("chaos proxy reading upstream hello")?
+        .ok_or_else(|| anyhow!("upstream hung up before its hello frame"))?;
+    wire::write_frame(&mut client_w, &hello).context("chaos proxy forwarding hello")?;
+    let mut scratch = Vec::new();
+    loop {
+        let payload = match wire::read_frame_into(&mut up_r, &mut scratch)
+            .context("chaos proxy reading upstream reply")?
+        {
+            Some(p) => p,
+            None => return Ok(()),
+        };
+        // 1-based global reply ordinal — the fault trigger
+        let n = counter.fetch_add(1, Ordering::SeqCst) + 1;
+        if let Some(ms) = plan.delay_ms {
+            thread::sleep(Duration::from_millis(ms));
+        }
+        if plan.garbage_reply == Some(n) {
+            eprintln!("chaos: sending garbage in place of reply {n}");
+            client_w.write_all(b"** chaos garbage **\n").context("writing garbage")?;
+            client_w.flush().context("flushing garbage")?;
+            return Ok(());
+        }
+        if plan.tear_frame == Some(n) {
+            eprintln!("chaos: tearing the frame of reply {n}");
+            let torn = payload.len() / 2;
+            writeln!(client_w, "{}", payload.len()).context("writing torn prefix")?;
+            client_w
+                .write_all(&payload.as_bytes()[..torn])
+                .context("writing torn payload")?;
+            client_w.flush().context("flushing torn frame")?;
+            return Ok(());
+        }
+        if plan.drop_conn == Some(n) {
+            eprintln!("chaos: dropping the connection in place of reply {n}");
+            return Ok(());
+        }
+        wire::write_frame(&mut client_w, payload)
+            .with_context(|| format!("chaos proxy forwarding reply {n}"))?;
+        if plan.stall_after == Some(n) {
+            eprintln!("chaos: stalling the connection after reply {n}");
+            loop {
+                thread::sleep(Duration::from_secs(3600));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_plans_parse_and_reject_unknown_keys() {
+        let plan = FaultPlan::parse("stall-after:3, delay-ms:50,tear-frame:2").unwrap();
+        assert_eq!(plan.stall_after, Some(3));
+        assert_eq!(plan.delay_ms, Some(50));
+        assert_eq!(plan.tear_frame, Some(2));
+        assert_eq!(plan.drop_conn, None);
+        assert!(!plan.is_passthrough());
+        assert!(FaultPlan::parse("").unwrap().is_passthrough());
+        assert!(FaultPlan::parse(" , ").unwrap().is_passthrough());
+        let err = FaultPlan::parse("explode:1").unwrap_err().to_string();
+        assert!(err.contains("unknown fault") && err.contains("drop-conn"), "got: {err}");
+        assert!(FaultPlan::parse("delay-ms").is_err());
+        assert!(FaultPlan::parse("delay-ms:soon").is_err());
+    }
+
+    #[test]
+    fn passthrough_proxy_forwards_hello_and_replies_verbatim() {
+        let up_listener = Listener::bind(&Endpoint::Tcp("127.0.0.1:0".to_string())).unwrap();
+        let up_addr = up_listener.local_desc();
+        let upstream = thread::spawn(move || {
+            let (_r, mut w, _peer) = up_listener.accept().unwrap();
+            wire::write_frame(&mut w, &wire::hello_line()).unwrap();
+            wire::write_frame(&mut w, "reply-one").unwrap();
+            wire::write_frame(&mut w, "reply-two").unwrap();
+        });
+        let proxy_listener = Listener::bind(&Endpoint::Tcp("127.0.0.1:0".to_string())).unwrap();
+        let proxy_addr = proxy_listener.local_desc();
+        let up_ep = Endpoint::parse(&up_addr).unwrap();
+        thread::spawn(move || {
+            let _ = run_proxy(proxy_listener, up_ep, FaultPlan::default());
+        });
+        let (r, _w) = Endpoint::parse(&proxy_addr).unwrap().connect().unwrap();
+        let mut r = BufReader::new(r);
+        assert_eq!(wire::read_frame(&mut r).unwrap().unwrap(), wire::hello_line());
+        assert_eq!(wire::read_frame(&mut r).unwrap().unwrap(), "reply-one");
+        assert_eq!(wire::read_frame(&mut r).unwrap().unwrap(), "reply-two");
+        upstream.join().unwrap();
+    }
+
+    #[test]
+    fn garbage_fault_fires_at_exactly_its_ordinal() {
+        let up_listener = Listener::bind(&Endpoint::Tcp("127.0.0.1:0".to_string())).unwrap();
+        let up_addr = up_listener.local_desc();
+        let upstream = thread::spawn(move || {
+            let (_r, mut w, _peer) = up_listener.accept().unwrap();
+            wire::write_frame(&mut w, &wire::hello_line()).unwrap();
+            wire::write_frame(&mut w, "reply-one").unwrap();
+            wire::write_frame(&mut w, "reply-two").unwrap();
+        });
+        let proxy_listener = Listener::bind(&Endpoint::Tcp("127.0.0.1:0".to_string())).unwrap();
+        let proxy_addr = proxy_listener.local_desc();
+        let up_ep = Endpoint::parse(&up_addr).unwrap();
+        thread::spawn(move || {
+            let plan = FaultPlan::parse("garbage-reply:2").unwrap();
+            let _ = run_proxy(proxy_listener, up_ep, plan);
+        });
+        let (r, _w) = Endpoint::parse(&proxy_addr).unwrap().connect().unwrap();
+        let mut r = BufReader::new(r);
+        assert_eq!(wire::read_frame(&mut r).unwrap().unwrap(), wire::hello_line());
+        // reply 1 passes untouched; reply 2 is garbage, which the frame
+        // reader rejects exactly like any other stream corruption
+        assert_eq!(wire::read_frame(&mut r).unwrap().unwrap(), "reply-one");
+        let err = wire::read_frame(&mut r).unwrap_err().to_string();
+        assert!(err.contains("length prefix"), "got: {err}");
+        upstream.join().unwrap();
+    }
+}

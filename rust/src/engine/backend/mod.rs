@@ -54,7 +54,12 @@
 //!   plane ([`crate::engine::serve`]).
 //!
 //! The engine core never learns which of these it is running on.
+//! The [`chaos`] module is the adversarial mirror of the network path:
+//! a deterministic fault-injecting proxy ([`FaultPlan`], `repro chaos`)
+//! that the chaos suite wedges between an engine and its workers to
+//! prove every recovery path yields byte-identical results.
 
+pub mod chaos;
 pub mod wire;
 
 mod mock;
@@ -63,6 +68,7 @@ mod process;
 #[cfg(feature = "xla")]
 mod xla;
 
+pub use chaos::FaultPlan;
 pub use mock::{det_record, MockBackend};
 pub use net::{Endpoint, Listener, NetworkBackend};
 pub use process::ProcessBackend;

@@ -42,15 +42,28 @@
 //! (including the `"?"`-keyed last-words frame `repro worker --listen`
 //! emits when its serve loop dies) — network failures stay as
 //! diagnosable as process-backend ones.
+//!
+//! # Deadlines
+//!
+//! [`NetworkBackend::with_job_timeout`] (`--job-timeout SECS`) arms
+//! per-operation socket deadlines on every connection: a connect,
+//! write, or reply read that stalls past the deadline fails with a
+//! timeout error, which the engine treats exactly like a connection
+//! death — [`Event::WorkerStalled`] fires, the socket is torn down, and
+//! the ordinary crash-recovery path (budget-gated reconnect, one
+//! re-dispatch of the unacknowledged window) takes over.  The default
+//! is unarmed: sockets stay fully blocking and the dispatch path is
+//! bit-for-bit identical to a build without deadlines.
 
 use std::fmt;
 use std::io::{BufReader, Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 #[cfg(unix)]
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -100,13 +113,44 @@ impl Endpoint {
     }
 
     /// Dial the endpoint; returns independent read/write halves.
+    /// Sockets are fully blocking — see [`Endpoint::connect_with_deadline`]
+    /// for the armed variant.
     pub fn connect(&self) -> Result<(Box<dyn Read + Send>, Box<dyn Write + Send>)> {
+        self.connect_with_deadline(None)
+    }
+
+    /// Dial the endpoint with an optional deadline: when `Some`, the
+    /// TCP connect itself and every subsequent read/write on either
+    /// half must complete within `timeout` or fail with a timeout
+    /// error (the engine treats that exactly like a connection death).
+    /// `None` leaves the socket fully blocking, byte-identical to
+    /// [`Endpoint::connect`].
+    pub fn connect_with_deadline(
+        &self,
+        timeout: Option<Duration>,
+    ) -> Result<(Box<dyn Read + Send>, Box<dyn Write + Send>)> {
         match self {
             Endpoint::Tcp(addr) => {
-                let stream = TcpStream::connect(addr)
-                    .with_context(|| format!("connecting to tcp endpoint {addr}"))?;
+                let stream = match timeout {
+                    Some(t) => {
+                        let sockaddr = addr
+                            .to_socket_addrs()
+                            .with_context(|| format!("resolving tcp endpoint {addr}"))?
+                            .next()
+                            .ok_or_else(|| {
+                                anyhow!("tcp endpoint {addr} resolved to no address")
+                            })?;
+                        TcpStream::connect_timeout(&sockaddr, t)
+                            .with_context(|| format!("connecting to tcp endpoint {addr}"))?
+                    }
+                    None => TcpStream::connect(addr)
+                        .with_context(|| format!("connecting to tcp endpoint {addr}"))?,
+                };
                 // frames are small and latency-bound; don't batch them
                 let _ = stream.set_nodelay(true);
+                // set before try_clone so both halves share the deadline
+                stream.set_read_timeout(timeout).context("setting read timeout")?;
+                stream.set_write_timeout(timeout).context("setting write timeout")?;
                 let reader = stream.try_clone().context("cloning tcp stream")?;
                 Ok((Box::new(reader), Box::new(stream)))
             }
@@ -114,6 +158,8 @@ impl Endpoint {
             Endpoint::Unix(path) => {
                 let stream = UnixStream::connect(path)
                     .with_context(|| format!("connecting to unix endpoint {}", path.display()))?;
+                stream.set_read_timeout(timeout).context("setting read timeout")?;
+                stream.set_write_timeout(timeout).context("setting write timeout")?;
                 let reader = stream.try_clone().context("cloning unix stream")?;
                 Ok((Box::new(reader), Box::new(stream)))
             }
@@ -146,7 +192,8 @@ pub enum Listener {
 impl Listener {
     /// Bind the endpoint.  TCP port 0 binds an ephemeral port (read the
     /// real one back via [`Listener::local_desc`]); a stale Unix socket
-    /// file from a dead process is removed first.
+    /// file from a dead process is probed and reclaimed, but a socket
+    /// with a live listener behind it is never stolen.
     pub fn bind(ep: &Endpoint) -> Result<Listener> {
         match ep {
             Endpoint::Tcp(addr) => {
@@ -156,7 +203,23 @@ impl Listener {
             }
             #[cfg(unix)]
             Endpoint::Unix(path) => {
-                let _ = std::fs::remove_file(path);
+                // a leftover socket file from a dead process would make
+                // bind fail with AddrInUse; reclaim it — but only after
+                // probing that nothing is accepting on it, so a live
+                // listener is never silently unlinked out from under
+                // its process
+                if path.exists() {
+                    if UnixStream::connect(path).is_ok() {
+                        bail!(
+                            "unix endpoint {} is already served by a live listener; \
+                             refusing to steal its socket",
+                            path.display()
+                        );
+                    }
+                    std::fs::remove_file(path).with_context(|| {
+                        format!("removing stale unix socket {}", path.display())
+                    })?;
+                }
                 let l = UnixListener::bind(path)
                     .with_context(|| format!("binding unix listener on {}", path.display()))?;
                 Ok(Listener::Unix(l, path.clone()))
@@ -217,6 +280,11 @@ struct NetInner {
     endpoints: Vec<Endpoint>,
     max_restarts_per_worker: usize,
     pipeline_depth: usize,
+    /// Per-operation socket deadline (`--job-timeout`); `None` keeps
+    /// every socket fully blocking.
+    job_timeout: Option<Duration>,
+    /// Shared-secret token presented to auth-advertising listeners.
+    token: Option<String>,
     restarts: AtomicUsize,
     /// Telemetry publisher, attached by the engine at construction
     /// ([`Backend::attach_events`]).  Interior-mutable because the
@@ -258,6 +326,8 @@ impl NetworkBackend {
                 endpoints,
                 max_restarts_per_worker: 2,
                 pipeline_depth: DEFAULT_PIPELINE_DEPTH,
+                job_timeout: None,
+                token: None,
                 restarts: AtomicUsize::new(0),
                 events: Mutex::new(None),
             }),
@@ -289,6 +359,35 @@ impl NetworkBackend {
         self
     }
 
+    /// Arm a per-operation job deadline (`--job-timeout SECS`): every
+    /// connect, write, and reply read on a worker connection must
+    /// complete within `timeout` or the connection is declared stalled
+    /// and torn down — [`Event::WorkerStalled`] fires, then the
+    /// ordinary crash-recovery path (reconnect under the restart
+    /// budget, one re-dispatch of the unacknowledged window) takes
+    /// over.  `None` (the default) leaves sockets fully blocking:
+    /// bit-for-bit identical to an unarmed build, which the
+    /// byte-determinism suites rely on.  Builder-style; must be called
+    /// before the backend is handed to an engine.
+    pub fn with_job_timeout(mut self, timeout: Option<Duration>) -> NetworkBackend {
+        Arc::get_mut(&mut self.inner)
+            .expect("with_job_timeout must be called before the backend is shared")
+            .job_timeout = timeout;
+        self
+    }
+
+    /// Present a shared-secret token (`--token` / `UMUP_TOKEN`) during
+    /// the hello handshake.  Listeners that do not advertise auth
+    /// ignore it; auth-advertising listeners reject the handshake
+    /// without a matching one.  Builder-style; must be called before
+    /// the backend is handed to an engine.
+    pub fn with_token(mut self, token: Option<String>) -> NetworkBackend {
+        Arc::get_mut(&mut self.inner)
+            .expect("with_token must be called before the backend is shared")
+            .token = token;
+        self
+    }
+
     /// Total reconnects across all worker slots so far.
     pub fn restarts(&self) -> usize {
         self.inner.restarts.load(Ordering::SeqCst)
@@ -312,21 +411,22 @@ impl Backend for NetworkBackend {
     }
 
     /// Fail fast on a bad fleet: dial *every* endpoint once and demand
-    /// a valid worker hello from each.  Runs once, at engine
-    /// construction, so a typo'd address or a serve socket in the
-    /// worker list errors there instead of mid-sweep.
+    /// a valid worker hello from each — including the auth step, so an
+    /// auth-advertising fleet with no local `--token` errors at engine
+    /// construction, not mid-sweep.  Likewise a typo'd address or a
+    /// serve socket in the worker list.
     fn health(&self) -> Result<()> {
         for ep in &self.inner.endpoints {
-            let (reader, _writer) = ep
-                .connect()
-                .with_context(|| format!("worker endpoint {ep} health probe failed"))?;
-            let mut reader = BufReader::new(reader);
-            wire::read_frame(&mut reader)
-                .and_then(|f| {
-                    f.ok_or_else(|| anyhow!("endpoint hung up before its hello frame"))
-                })
-                .and_then(|line| wire::check_hello(&line))
-                .with_context(|| format!("worker endpoint {ep} health probe failed"))?;
+            let probe = ep.connect_with_deadline(self.inner.job_timeout).and_then(
+                |(reader, mut writer)| {
+                    let mut reader = BufReader::new(reader);
+                    let line = wire::read_frame(&mut reader)?
+                        .ok_or_else(|| anyhow!("endpoint hung up before its hello frame"))?;
+                    wire::check_hello(&line)?;
+                    authenticate(&line, self.inner.token.as_deref(), &mut *writer)
+                },
+            );
+            probe.with_context(|| format!("worker endpoint {ep} health probe failed"))?;
         }
         Ok(())
     }
@@ -350,6 +450,25 @@ impl Backend for NetworkBackend {
             reply_buf: Vec::new(),
         })
     }
+}
+
+/// The dial-side auth step, run right after a validated hello: when
+/// the listener's hello advertises auth, send the shared-secret token
+/// frame (the listener checks it before serving anything).  An
+/// auth-advertising hello with no local token configured is a
+/// guaranteed rejection, so that case fails here, with the fix spelled
+/// out, instead of as an opaque mid-sweep connection death.
+fn authenticate(hello: &str, token: Option<&str>, writer: &mut dyn Write) -> Result<()> {
+    if !wire::hello_advertises_auth(hello) {
+        return Ok(());
+    }
+    let token = token.ok_or_else(|| {
+        anyhow!(
+            "endpoint requires a shared-secret token (its hello advertises auth) — \
+             pass --token or set UMUP_TOKEN to match the listener's"
+        )
+    })?;
+    wire::write_frame(writer, &wire::token_frame(token)).context("sending auth token frame")
 }
 
 // ------------------------------------------------------------ executor
@@ -402,15 +521,16 @@ impl NetExecutor {
         for _ in 0..n {
             let ep = self.inner.endpoints[self.cursor % n].clone();
             self.cursor = self.cursor.wrapping_add(1);
-            let attempt = ep.connect().and_then(|(reader, writer)| {
-                let mut reader = BufReader::new(reader);
-                wire::read_frame(&mut reader)
-                    .and_then(|f| {
-                        f.ok_or_else(|| anyhow!("endpoint hung up before its hello frame"))
-                    })
-                    .and_then(|line| wire::check_hello(&line))?;
-                Ok(NetConn { reader, writer, peer: ep.to_string() })
-            });
+            let attempt = ep.connect_with_deadline(self.inner.job_timeout).and_then(
+                |(reader, mut writer)| {
+                    let mut reader = BufReader::new(reader);
+                    let line = wire::read_frame(&mut reader)?
+                        .ok_or_else(|| anyhow!("endpoint hung up before its hello frame"))?;
+                    wire::check_hello(&line)?;
+                    authenticate(&line, self.inner.token.as_deref(), &mut *writer)?;
+                    Ok(NetConn { reader, writer, peer: ep.to_string() })
+                },
+            );
             match attempt {
                 Ok(conn) => return Ok(conn),
                 Err(e) => {
@@ -502,6 +622,39 @@ impl NetExecutor {
             self.last_remote_error = e.clone();
         }
         out
+    }
+
+    /// When an armed `--job-timeout` turns a stalled connection into a
+    /// read/write timeout, publish [`Event::WorkerStalled`] before the
+    /// normal connection-death recovery runs.  Detection is by io error
+    /// kind anywhere in the chain (`WouldBlock` for unix sockets,
+    /// `TimedOut` for TCP); with no deadline armed this is a no-op, so
+    /// unarmed runs stay bit-for-bit identical.
+    fn note_stall(&self, err: &anyhow::Error, pending: usize) {
+        let Some(timeout) = self.inner.job_timeout else { return };
+        let stalled = err.chain().any(|c| {
+            c.downcast_ref::<std::io::Error>().map_or(false, |io| {
+                matches!(
+                    io.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                )
+            })
+        });
+        if !stalled {
+            return;
+        }
+        eprintln!(
+            "engine: worker {} stalled past its {}ms job deadline with {} jobs \
+             unacknowledged; treating the connection as dead",
+            self.worker,
+            timeout.as_millis(),
+            pending
+        );
+        self.inner.publish(Event::WorkerStalled {
+            worker: self.worker,
+            timeout_ms: timeout.as_millis() as u64,
+            pending,
+        });
     }
 
     /// Render the worker's last on-wire error text for a message —
@@ -617,6 +770,7 @@ impl NetExecutor {
                 Ok(()) => return,
                 Err(e) => e,
             };
+            self.note_stall(&err, pending.len());
             self.teardown_conn();
             match first_err.take() {
                 None if self.connected_once && self.restarts_left == 0 => {
@@ -699,6 +853,7 @@ impl Executor for NetExecutor {
                 // the in-flight job exactly once on a fresh connection —
                 // but only announce a re-dispatch that can actually
                 // happen (mirrors ProcessExecutor::run)
+                self.note_stall(&first, 1);
                 self.teardown_conn();
                 if self.connected_once && self.restarts_left == 0 {
                     self.inner.publish(Event::WorkerBudgetExhausted {
@@ -723,6 +878,7 @@ impl Executor for NetExecutor {
                     Exchange::Record(r) => Ok(r),
                     Exchange::JobErr(e) => Err(anyhow!("{e}")),
                     Exchange::Transport(second) => {
+                        self.note_stall(&second, 1);
                         self.teardown_conn();
                         Err(anyhow!(
                             "worker {} failed twice on job {} (first: {first:#}; after \
@@ -781,6 +937,28 @@ mod tests {
         let dial = std::thread::spawn(move || ep.connect().map(|_| ()));
         let (_r, _w, _peer) = l.accept().unwrap();
         dial.join().unwrap().unwrap();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_bind_reclaims_dead_sockets_but_never_live_ones() {
+        let dir = std::env::temp_dir().join(format!("umup-stale-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.sock");
+        let ep = Endpoint::Unix(path.clone());
+        // a live listener behind the file: a second bind must refuse
+        let live = Listener::bind(&ep).unwrap();
+        let err = Listener::bind(&ep).unwrap_err().to_string();
+        assert!(err.contains("live listener"), "got: {err}");
+        drop(live); // our Drop unlinks the path
+        assert!(!path.exists(), "Listener drop must unlink its socket");
+        // a stale file from a dead process: raw std listeners never
+        // unlink on drop, which is exactly the crash leftover shape
+        drop(UnixListener::bind(&path).unwrap());
+        assert!(path.exists(), "raw UnixListener drop must leave the file");
+        let reclaimed = Listener::bind(&ep).unwrap();
+        drop(reclaimed);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

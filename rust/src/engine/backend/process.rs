@@ -55,11 +55,24 @@
 //! parent's stderr with a `[worker k]` prefix and keeps a bounded tail,
 //! which is appended to transport-failure outcomes so "the child died"
 //! errors carry the child's last words.
+//!
+//! # Deadlines
+//!
+//! Pipe reads cannot carry socket-style timeouts, so
+//! [`ProcessBackend::with_job_timeout`] (`--job-timeout SECS`) arms a
+//! [`Watchdog`] thread around every exchange instead: if the child has
+//! not replied by the deadline it is SIGKILLed by pid, the blocked read
+//! fails with EOF, [`Event::WorkerStalled`] fires, and the ordinary
+//! transport-failure recovery above (restart + one re-dispatch) takes
+//! over.  Windowed dispatch re-arms per reply, so a window of `n` jobs
+//! legitimately gets `n` single-job deadlines end to end.  The default
+//! is unarmed: no watchdog thread exists and the dispatch path is
+//! bit-for-bit identical to a build without deadlines.
 
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader};
 use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -67,6 +80,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::train::RunRecord;
+use crate::util::signal;
 
 use super::super::events::{Event, EventBus};
 use super::super::job::EngineJob;
@@ -81,10 +95,64 @@ const STDERR_TAIL_LINES: usize = 12;
 /// before killing it.
 const SHUTDOWN_GRACE: Duration = Duration::from_millis(500);
 
+/// Watchdog poll granularity: how promptly a disarm is noticed and the
+/// worst-case overshoot past the deadline.
+const WATCHDOG_TICK: Duration = Duration::from_millis(10);
+
+/// A one-shot deadline over one pipe exchange with a hung-but-alive
+/// child.  The thread sleeps toward the deadline and, unless
+/// [`Watchdog::disarm`]ed first, SIGKILLs the child by pid — the
+/// blocked pipe read then fails, and the normal transport-failure
+/// recovery (restart + one re-dispatch) takes over.  Kill-by-pid
+/// because `Child::kill` needs `&mut Child`, which the blocked reader
+/// holds.
+struct Watchdog {
+    cancel: Arc<AtomicBool>,
+    fired: Arc<AtomicBool>,
+    thread: JoinHandle<()>,
+}
+
+impl Watchdog {
+    /// Arm: unless disarmed first, `pid` is SIGKILLed after `timeout`.
+    fn arm(pid: u32, timeout: Duration) -> Watchdog {
+        let cancel = Arc::new(AtomicBool::new(false));
+        let fired = Arc::new(AtomicBool::new(false));
+        let (c, f) = (Arc::clone(&cancel), Arc::clone(&fired));
+        let thread = std::thread::spawn(move || {
+            let deadline = Instant::now() + timeout;
+            loop {
+                if c.load(Ordering::SeqCst) {
+                    return;
+                }
+                let left = deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    break;
+                }
+                std::thread::sleep(left.min(WATCHDOG_TICK));
+            }
+            if !c.load(Ordering::SeqCst) {
+                f.store(true, Ordering::SeqCst);
+                signal::send(pid, signal::SIGKILL);
+            }
+        });
+        Watchdog { cancel, fired, thread }
+    }
+
+    /// Disarm and reap the watchdog thread; true if it already fired
+    /// (the child blew the deadline and was killed).
+    fn disarm(self) -> bool {
+        self.cancel.store(true, Ordering::SeqCst);
+        let _ = self.thread.join();
+        self.fired.load(Ordering::SeqCst)
+    }
+}
+
 struct Inner {
     make_cmd: Box<dyn Fn(usize) -> Command + Send + Sync>,
     max_restarts_per_worker: usize,
     pipeline_depth: usize,
+    /// Per-exchange deadline (`--job-timeout`); `None` arms nothing.
+    job_timeout: Option<Duration>,
     restarts: AtomicUsize,
     /// Telemetry publisher, attached by the engine at construction
     /// ([`Backend::attach_events`]).  Interior-mutable because the
@@ -121,6 +189,7 @@ impl ProcessBackend {
                 make_cmd: Box::new(make_cmd),
                 max_restarts_per_worker: 2,
                 pipeline_depth: 1,
+                job_timeout: None,
                 restarts: AtomicUsize::new(0),
                 events: Mutex::new(None),
             }),
@@ -173,6 +242,22 @@ impl ProcessBackend {
         Arc::get_mut(&mut self.inner)
             .expect("with_pipeline_depth must be called before the backend is shared")
             .pipeline_depth = depth.max(1);
+        self
+    }
+
+    /// Arm a per-exchange job deadline (`--job-timeout SECS`): a child
+    /// that has not replied within `timeout` is declared stalled and
+    /// SIGKILLed by a [`Watchdog`] thread — [`Event::WorkerStalled`]
+    /// fires, then the ordinary crash recovery (respawn under the
+    /// restart budget, one re-dispatch of the unacknowledged window)
+    /// takes over.  `None` (the default) arms nothing: bit-for-bit
+    /// identical to an unarmed build, which the byte-determinism
+    /// suites rely on.  Builder-style; must be called before the
+    /// backend is handed to an engine.
+    pub fn with_job_timeout(mut self, timeout: Option<Duration>) -> ProcessBackend {
+        Arc::get_mut(&mut self.inner)
+            .expect("with_job_timeout must be called before the backend is shared")
+            .job_timeout = timeout;
         self
     }
 
@@ -391,21 +476,27 @@ impl ProcessExecutor {
         let mut scratch = std::mem::take(&mut self.reply_buf);
         frame.clear();
         wire::encode_job_into(key, job, &mut frame);
+        let timeout = self.inner.job_timeout;
+        let mut stalled = false;
         let out = (|| {
             let conn = match self.ensure_conn() {
                 Ok(c) => c,
                 Err(e) => return Exchange::Transport(e),
             };
+            // one armed deadline covers the whole write+read round trip
+            let dog = timeout.map(|t| Watchdog::arm(conn.child.id(), t));
             let send = conn
                 .stdin
                 .as_mut()
                 .ok_or_else(|| anyhow!("worker stdin already closed"))
                 .and_then(|stdin| wire::write_frame(stdin, &frame));
             if let Err(e) = send {
+                stalled = dog.map_or(false, Watchdog::disarm);
                 return Exchange::Transport(e.context("sending job to worker child"));
             }
             let reply = wire::read_frame_into(&mut conn.stdout, &mut scratch)
                 .and_then(|f| f.ok_or_else(|| anyhow!("worker child hung up mid-job")));
+            stalled = dog.map_or(false, Watchdog::disarm);
             let line = match reply {
                 Ok(line) => line,
                 Err(e) => return Exchange::Transport(e.context("reading worker reply")),
@@ -426,7 +517,28 @@ impl ProcessExecutor {
         })();
         self.frame_buf = frame;
         self.reply_buf = scratch;
+        if stalled {
+            self.note_stall(1);
+        }
         out
+    }
+
+    /// Publish [`Event::WorkerStalled`] after a watchdog kill, so
+    /// telemetry records a deadline stall rather than an anonymous
+    /// child crash.  The stall is always followed by the recovery
+    /// path's `worker_restarted` or `worker_budget_exhausted`.
+    fn note_stall(&self, pending: usize) {
+        let timeout_ms = self.inner.job_timeout.map_or(0, |t| t.as_millis() as u64);
+        eprintln!(
+            "engine: worker {} child stalled past its {}ms job deadline with {} jobs \
+             unacknowledged; killed",
+            self.worker, timeout_ms, pending
+        );
+        self.inner.publish(Event::WorkerStalled {
+            worker: self.worker,
+            timeout_ms,
+            pending,
+        });
     }
 
     /// The raw retained stderr tail (for event payloads).
@@ -461,27 +573,39 @@ impl ProcessExecutor {
     /// replies land, so on a transport `Err` the caller re-dispatches
     /// exactly the unacknowledged remainder.  `batch` must hold the
     /// frames of `pending` (in order) — encoded by the caller so the
-    /// scratch buffers don't fight the `self` borrow.
+    /// scratch buffers don't fight the `self` borrow.  `stalled` is set
+    /// when an armed job deadline killed the child mid-window.
     fn pump_window(
         &mut self,
         jobs: &[(&EngineJob, &str)],
         pending: &mut Vec<usize>,
         batch: &str,
         scratch: &mut Vec<u8>,
+        stalled: &mut bool,
         done: &mut dyn FnMut(usize, Result<RunRecord>),
     ) -> Result<()> {
+        let timeout = self.inner.job_timeout;
         let conn = self.ensure_conn()?;
-        conn.stdin
+        let pid = conn.child.id();
+        // a wedged child can also stall the flush by never draining its
+        // stdin pipe, so the write leg gets a deadline of its own
+        let dog = timeout.map(|t| Watchdog::arm(pid, t));
+        let sent = conn
+            .stdin
             .as_mut()
             .ok_or_else(|| anyhow!("worker stdin already closed"))
-            .and_then(|stdin| wire::flush_frames(stdin, batch))
-            .context("sending job window to worker child")?;
+            .and_then(|stdin| wire::flush_frames(stdin, batch));
+        *stalled |= dog.map_or(false, Watchdog::disarm);
+        sent.context("sending job window to worker child")?;
         while !pending.is_empty() {
-            let line = wire::read_frame_into(&mut conn.stdout, scratch)
-                .context("reading worker reply")?
-                .ok_or_else(|| {
-                    anyhow!("worker child hung up with {} jobs unacknowledged", pending.len())
-                })?;
+            // each reply re-arms: a window of n jobs legitimately takes
+            // n single-job times end to end
+            let dog = timeout.map(|t| Watchdog::arm(pid, t));
+            let read = wire::read_frame_into(&mut conn.stdout, scratch);
+            *stalled |= dog.map_or(false, Watchdog::disarm);
+            let line = read.context("reading worker reply")?.ok_or_else(|| {
+                anyhow!("worker child hung up with {} jobs unacknowledged", pending.len())
+            })?;
             let (key, outcome) = match wire::decode_reply(line)? {
                 wire::WireReply::Record { key, record } => (key, Ok(record)),
                 wire::WireReply::Error { key, error } => (key, Err(anyhow!("{error}"))),
@@ -597,10 +721,15 @@ impl ProcessExecutor {
                 wire::encode_job_into(jobs[i].1, jobs[i].0, &mut frame);
                 wire::frame_into(&frame, &mut batch);
             }
-            let attempt = self.pump_window(jobs, &mut pending, &batch, &mut scratch, done);
+            let mut stalled = false;
+            let attempt =
+                self.pump_window(jobs, &mut pending, &batch, &mut scratch, &mut stalled, done);
             self.batch_buf = batch;
             self.frame_buf = frame;
             self.reply_buf = scratch;
+            if stalled {
+                self.note_stall(pending.len());
+            }
             let err = match attempt {
                 Ok(()) => return,
                 Err(e) => e,

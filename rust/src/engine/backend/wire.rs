@@ -155,7 +155,19 @@ pub fn read_frame(r: &mut impl BufRead) -> Result<Option<String>> {
 // -------------------------------------------------------------- hello
 
 fn peer_hello_line(who: &str) -> String {
+    peer_hello_line_auth(who, false)
+}
+
+/// Hello with an optional shared-secret advertisement: a listener
+/// started with `--token`/`UMUP_TOKEN` adds `"auth":true` (additive —
+/// token-less peers still parse the hello, then fail with a pointed
+/// hint instead of a codec error), telling the dialer to send one
+/// [`token_frame`] before any other traffic.
+fn peer_hello_line_auth(who: &str, auth: bool) -> String {
     let mut m = BTreeMap::new();
+    if auth {
+        m.insert("auth".to_string(), Json::Bool(true));
+    }
     m.insert("hello".to_string(), Json::Str(who.to_string()));
     m.insert("proto".to_string(), Json::Num(PROTO_VERSION as f64));
     Json::Obj(m).dump()
@@ -205,6 +217,54 @@ pub fn serve_hello_line() -> String {
 /// Validate a serve hello frame.
 pub fn check_serve_hello(line: &str) -> Result<()> {
     check_peer_hello(line, "umup-serve")
+}
+
+/// The worker child's startup frame, advertising shared-secret auth
+/// when the listener was started with a token.
+pub fn hello_line_auth(auth: bool) -> String {
+    peer_hello_line_auth("umup-worker", auth)
+}
+
+/// The `repro serve` daemon's startup frame, with the auth
+/// advertisement.
+pub fn serve_hello_line_auth(auth: bool) -> String {
+    peer_hello_line_auth("umup-serve", auth)
+}
+
+/// Does this (already [`check_hello`]-validated) hello demand a token
+/// frame before any other traffic?
+pub fn hello_advertises_auth(line: &str) -> bool {
+    Json::parse(line)
+        .ok()
+        .and_then(|j| j.get("auth").ok().and_then(|a| a.as_bool().ok()))
+        .unwrap_or(false)
+}
+
+/// The dialer's answer to an auth-advertising hello: one
+/// `{"token":…}` frame, sent before any job or RPC frame.
+pub fn token_frame(token: &str) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("token".to_string(), Json::Str(token.to_string()));
+    Json::Obj(m).dump()
+}
+
+/// Listener-side validation of the dialer's token frame.  The error
+/// text never echoes either secret; it names the fix instead.
+pub fn check_token_frame(line: &str, expect: &str) -> Result<()> {
+    let j = Json::parse(line).context("parsing auth token frame")?;
+    let got = j.get("token").and_then(|t| t.as_str()).map_err(|_| {
+        anyhow!(
+            "peer sent no token frame after the auth-advertising hello — \
+             pass the listener's shared secret via --token or UMUP_TOKEN"
+        )
+    })?;
+    if got != expect {
+        bail!(
+            "shared-secret mismatch: the dialer's --token/UMUP_TOKEN does not \
+             match this listener's"
+        );
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------------- jobs
@@ -429,13 +489,40 @@ pub const WORKER_READAHEAD: usize = 8;
 /// stream between decode and reply) — any change to the frame shapes
 /// here must be mirrored there, and the byte-identity suite in
 /// `tests/backend.rs` will catch a divergence.
-pub fn serve<R, W, F>(input: R, mut output: W, mut exec: F) -> Result<()>
+pub fn serve<R, W, F>(input: R, output: W, exec: F) -> Result<()>
 where
     R: BufRead + Send,
     W: Write,
     F: FnMut(&WireJob) -> Result<RunRecord>,
 {
-    write_frame(&mut output, &hello_line())?;
+    serve_authed(input, output, None, exec)
+}
+
+/// [`serve`] plus the listener-side half of the shared-secret
+/// handshake: the hello advertises auth when `token` is set, and the
+/// dialer's [`token_frame`] is read and validated before any job frame
+/// is accepted.  A peer that hangs up instead of sending a token (a
+/// port probe, a drain self-dial) ends the loop quietly; a missing or
+/// mismatched token fails it, which `--listen` workers report back on
+/// the wire before closing the connection.
+pub fn serve_authed<R, W, F>(
+    mut input: R,
+    mut output: W,
+    token: Option<&str>,
+    mut exec: F,
+) -> Result<()>
+where
+    R: BufRead + Send,
+    W: Write,
+    F: FnMut(&WireJob) -> Result<RunRecord>,
+{
+    write_frame(&mut output, &hello_line_auth(token.is_some()))?;
+    if let Some(expect) = token {
+        match read_frame(&mut input)? {
+            Some(line) => check_token_frame(&line, expect)?,
+            None => return Ok(()),
+        }
+    }
     let (tx, rx) = std::sync::mpsc::sync_channel::<Result<WireJob>>(WORKER_READAHEAD);
     std::thread::scope(|s| {
         s.spawn(move || {
@@ -591,6 +678,66 @@ mod tests {
         // ctl dialed a worker socket: plain identity mismatch
         assert!(check_serve_hello(&hello_line()).is_err());
         assert!(check_serve_hello("{\"hello\":\"umup-serve\",\"proto\":999}").is_err());
+    }
+
+    #[test]
+    fn auth_advertisement_is_additive_and_token_frames_validate() {
+        // an auth-advertising hello still passes the identity check —
+        // the `auth` key is an additive field, not a new protocol
+        check_hello(&hello_line_auth(true)).unwrap();
+        check_serve_hello(&serve_hello_line_auth(true)).unwrap();
+        // advertisement round trip, and its absence on the open hellos
+        assert!(hello_advertises_auth(&hello_line_auth(true)));
+        assert!(hello_advertises_auth(&serve_hello_line_auth(true)));
+        assert!(!hello_advertises_auth(&hello_line()));
+        assert!(!hello_advertises_auth(&serve_hello_line()));
+        assert!(!hello_advertises_auth(&hello_line_auth(false)));
+        // token validation: match passes, mismatch and non-token frames
+        // fail with hints that never echo a secret
+        check_token_frame(&token_frame("s3cret"), "s3cret").unwrap();
+        let err = check_token_frame(&token_frame("wrong"), "s3cret").unwrap_err().to_string();
+        assert!(err.contains("mismatch"), "unhelpful error: {err}");
+        assert!(!err.contains("s3cret") && !err.contains("wrong"), "error echoes a secret: {err}");
+        let err = check_token_frame(&hello_line(), "s3cret").unwrap_err().to_string();
+        assert!(err.contains("UMUP_TOKEN"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn serve_authed_gates_jobs_behind_the_token_frame() {
+        let job = test_job();
+        // right token: the job gets its reply
+        let mut input = Vec::new();
+        write_frame(&mut input, &token_frame("s3cret")).unwrap();
+        write_frame(&mut input, &encode_job("authedkey", &job)).unwrap();
+        let mut output = Vec::new();
+        serve_authed(Cursor::new(input), &mut output, Some("s3cret"), |j| {
+            Ok(det_record_for(&j.key))
+        })
+        .unwrap();
+        let mut r = Cursor::new(output);
+        let hello = read_frame(&mut r).unwrap().unwrap();
+        check_hello(&hello).unwrap();
+        assert!(hello_advertises_auth(&hello));
+        match decode_reply(&read_frame(&mut r).unwrap().unwrap()).unwrap() {
+            WireReply::Record { key, .. } => assert_eq!(key, "authedkey"),
+            WireReply::Error { error, .. } => panic!("authed job failed: {error}"),
+        }
+        // wrong token: the loop fails before any job executes
+        let mut input = Vec::new();
+        write_frame(&mut input, &token_frame("wrong")).unwrap();
+        write_frame(&mut input, &encode_job("unreached", &job)).unwrap();
+        let mut output = Vec::new();
+        let err = serve_authed(Cursor::new(input), &mut output, Some("s3cret"), |_| {
+            panic!("job executed despite a bad token")
+        })
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("mismatch"), "got: {err:#}");
+        // EOF in place of the token frame (a probe) is a quiet exit
+        let mut output = Vec::new();
+        serve_authed(Cursor::new(Vec::new()), &mut output, Some("s3cret"), |_| {
+            panic!("job executed on a probe connection")
+        })
+        .unwrap();
     }
 
     #[test]

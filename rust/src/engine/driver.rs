@@ -34,6 +34,8 @@
 use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
@@ -81,6 +83,12 @@ pub struct DriveConfig {
     /// one merged stream carries parent and child telemetry.  Ignored
     /// when `events` is `None`.
     pub child_event_files: Vec<PathBuf>,
+    /// Graceful-drain flag (wired to [`crate::util::signal`] by `repro
+    /// drive`, or flipped directly in tests): when it goes true the
+    /// poll loop stops with an error naming the signal, and [`drive`]'s
+    /// normal error teardown kills the surviving children — their
+    /// already-persisted runs stay resumable in the cache dir.
+    pub stop: Option<Arc<AtomicBool>>,
 }
 
 impl Default for DriveConfig {
@@ -94,6 +102,7 @@ impl Default for DriveConfig {
             background_compaction: false,
             events: None,
             child_event_files: Vec::new(),
+            stop: None,
         }
     }
 }
@@ -252,6 +261,15 @@ where
     let mut last_entries = usize::MAX;
     let mut last_compact = Instant::now();
     loop {
+        // a drain signal stops the drive through the normal error path:
+        // drive() kills the surviving children, and every run they
+        // already persisted stays resumable
+        if cfg.stop.as_ref().map_or(false, |s| s.load(Ordering::SeqCst)) {
+            bail!(
+                "drive: stop requested by signal; partial results remain resumable in {}",
+                cfg.cache_dir.display()
+            );
+        }
         let mut all_done = true;
         for slot in slots.iter_mut() {
             if slot.done {

@@ -183,6 +183,13 @@ pub enum Event {
     WorkerRestarted { worker: usize, restarts_left: usize, stderr: String },
     /// A worker slot exhausted its restart budget and is giving up.
     WorkerBudgetExhausted { worker: usize, stderr: String },
+    /// An armed `--job-timeout` deadline expired with `pending` jobs
+    /// still unacknowledged on the worker's connection.  The stalled
+    /// connection is treated exactly like a connection death: it is
+    /// torn down and the crash-recovery path (re-dispatch once under
+    /// the restart budget) takes over, so a `worker_stalled` is always
+    /// followed by a `worker_restarted` or `worker_budget_exhausted`.
+    WorkerStalled { worker: usize, timeout_ms: u64, pending: usize },
     /// An incremental cache refresh surfaced sibling-shard records.
     CacheRefresh { new_keys: usize, total_keys: usize },
     /// A background tier-merge folded segments.
@@ -228,6 +235,7 @@ impl Event {
             Event::WorkerSpawned { .. } => "worker_spawned",
             Event::WorkerRestarted { .. } => "worker_restarted",
             Event::WorkerBudgetExhausted { .. } => "worker_budget_exhausted",
+            Event::WorkerStalled { .. } => "worker_stalled",
             Event::CacheRefresh { .. } => "cache_refresh",
             Event::CacheCompaction { .. } => "cache_compaction",
             Event::ShardSpawned { .. } => "shard_spawned",
@@ -344,6 +352,11 @@ impl Envelope {
                 m.insert("worker".to_string(), num(*worker));
                 m.insert("stderr".to_string(), st(stderr));
             }
+            Event::WorkerStalled { worker, timeout_ms, pending } => {
+                m.insert("worker".to_string(), num(*worker));
+                m.insert("timeout_ms".to_string(), num64(*timeout_ms));
+                m.insert("pending".to_string(), num(*pending));
+            }
             Event::CacheRefresh { new_keys, total_keys } => {
                 m.insert("new_keys".to_string(), num(*new_keys));
                 m.insert("total_keys".to_string(), num(*total_keys));
@@ -457,6 +470,11 @@ impl Envelope {
             "worker_budget_exhausted" => Event::WorkerBudgetExhausted {
                 worker: j.get("worker")?.as_usize()?,
                 stderr: j.get("stderr")?.as_str()?.to_string(),
+            },
+            "worker_stalled" => Event::WorkerStalled {
+                worker: j.get("worker")?.as_usize()?,
+                timeout_ms: j.get("timeout_ms")?.as_f64()? as u64,
+                pending: j.get("pending")?.as_usize()?,
             },
             "cache_refresh" => Event::CacheRefresh {
                 new_keys: j.get("new_keys")?.as_usize()?,

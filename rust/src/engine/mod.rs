@@ -238,6 +238,25 @@
 //!   matches the classic lockstep path at depth 1; pin
 //!   `--pipeline-depth 1` when a workflow diffs raw segment files
 //!   instead of comparing keyed contents.
+//!
+//! # Failure semantics
+//!
+//! How each failure class is detected, what recovery runs, and which
+//! events it publishes.  The invariant behind every row: a result is
+//! persisted to the cache *before* it is reported, a job is recorded at
+//! most once, and no recovery path may change result **bytes** — only
+//! timing (the chaos suite, `tests/chaos.rs`, pins this by driving real
+//! sweeps through the `repro chaos` fault proxy and byte-comparing the
+//! drained cache against a clean run).
+//!
+//! | Failure | Detected by | Recovery | Events |
+//! |---|---|---|---|
+//! | Worker crash / connection death | read or write error, or EOF mid-exchange | respawn child / redial next endpoint under the bounded `--max-restarts` budget; the unacknowledged window is re-dispatched **exactly once**; a second loss (or exhausted budget) reports each lost job as a per-job `Err` | `worker_restarted`, then `worker_budget_exhausted` if the budget runs dry |
+//! | Hung-but-alive peer | `--job-timeout SECS` only (off by default — unarmed runs are bit-for-bit identical): socket read/write deadlines on the network path, a SIGKILL watchdog over the child pid on the process path | the stalled connection is *treated as* a connection death; the crash row above takes over | `worker_stalled`, then the crash row's events |
+//! | Protocol desync | reply keyed outside the in-flight window, duplicate reply, garbage or torn frame | connection torn down, crash row takes over; the stray record is **never** filed into the cache | crash row's events |
+//! | Job failure (peer healthy) | error reply frame | no restart, no budget spent; reported as that job's `Err` outcome, worker keeps serving | `job_failed` |
+//! | Graceful drain (SIGTERM/SIGINT) | [`crate::util::signal`] flag, polled by the serve/worker/drive loops | stop accepting new work, cancel pending jobs, let in-flight jobs finish and persist, unlink unix sockets, exit [`crate::util::signal::EXIT_DRAINED`] | normal completion events for whatever finished |
+//! | Auth mismatch | listener's hello advertises auth; the token frame is checked before any job is served | the handshake fails with a hint naming `--token` / `UMUP_TOKEN`; no token configured on the listener = open, as before | none (the connection never serves) |
 
 pub mod backend;
 pub mod cache;
@@ -254,8 +273,8 @@ pub use crate::util::hash::fnv1a64;
 #[cfg(feature = "xla")]
 pub use backend::XlaBackend;
 pub use backend::{
-    det_record, Backend, Capabilities, Endpoint, Executor, Listener, MockBackend, NetworkBackend,
-    ProcessBackend,
+    det_record, Backend, Capabilities, Endpoint, Executor, FaultPlan, Listener, MockBackend,
+    NetworkBackend, ProcessBackend,
 };
 pub use cache::{
     gc, list_segments, parse_bytes, parse_duration, run_key, stats, CacheStats, CacheWatcher,

@@ -133,6 +133,16 @@ pub struct ServeOptions {
     /// manifests by name on their side, so the daemon only needs the
     /// content addresses.
     pub materialize_corpora: bool,
+    /// Shared-secret auth (`--token` / `UMUP_TOKEN`): when set, the
+    /// daemon's hello advertises auth and every client must send a
+    /// matching token frame before its first verb; a mismatch gets a
+    /// tagged error and a hang-up.  `None` keeps the socket open.
+    pub token: Option<String>,
+    /// Graceful-drain flag (wired to [`crate::util::signal`] by `repro
+    /// serve`, or flipped directly in tests): when it goes true the
+    /// daemon runs the `shutdown` verb's drain — cancel queued jobs,
+    /// let in-flight ones finish and persist — then [`serve`] returns.
+    pub drain: Option<Arc<AtomicBool>>,
 }
 
 /// Run the daemon until a `shutdown` verb arrives.  `on_ready` fires
@@ -147,6 +157,7 @@ pub fn serve(
     let listener = Listener::bind(&ep)?;
     let desc = listener.local_desc();
     let stop = Arc::new(AtomicBool::new(false));
+    let token = opts.token.clone();
     let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
     let (boot_tx, boot_rx) = mpsc::channel::<Result<(), String>>();
     let engine_thread = {
@@ -154,9 +165,20 @@ pub fn serve(
         let artifacts = opts.artifacts.clone();
         let materialize = opts.materialize_corpora;
         let stop = Arc::clone(&stop);
+        let drain = opts.drain.clone();
         let dial_back = desc.clone();
         std::thread::spawn(move || {
-            engine_owner_loop(cfg, backend, artifacts, materialize, cmd_rx, boot_tx, stop, dial_back)
+            engine_owner_loop(
+                cfg,
+                backend,
+                artifacts,
+                materialize,
+                cmd_rx,
+                boot_tx,
+                stop,
+                drain,
+                dial_back,
+            )
         })
     };
     match boot_rx.recv() {
@@ -181,8 +203,9 @@ pub fn serve(
         match accepted {
             Ok((r, w, _peer)) => {
                 let tx = cmd_tx.clone();
+                let token = token.clone();
                 std::thread::spawn(move || {
-                    if let Err(e) = client_loop(BufReader::new(r), w, tx) {
+                    if let Err(e) = client_loop(BufReader::new(r), w, tx, token) {
                         eprintln!("serve: client connection error: {e:#}");
                     }
                 });
@@ -219,13 +242,26 @@ fn num(x: usize) -> Json {
 
 // --------------------------------------------------- client connection
 
-/// One accepted client: hello, then request/reply frames until EOF.
+/// One accepted client: hello (advertising auth when a token is
+/// configured), the token gate, then request/reply frames until EOF.
 fn client_loop(
     mut input: impl BufRead,
     mut output: impl Write,
     tx: mpsc::Sender<Cmd>,
+    token: Option<String>,
 ) -> Result<()> {
-    wire::write_frame(&mut output, &wire::serve_hello_line())?;
+    wire::write_frame(&mut output, &wire::serve_hello_line_auth(token.is_some()))?;
+    if let Some(expect) = token.as_deref() {
+        // nothing is served before the token checks out; a mismatch
+        // gets a tagged error (id 0 — no request exists yet) + hang-up
+        let Some(line) = wire::read_frame(&mut input)? else {
+            return Ok(());
+        };
+        if let Err(e) = wire::check_token_frame(&line, expect) {
+            let _ = wire::write_frame(&mut output, &wire::rpc_err_line(0, &format!("{e:#}")));
+            return Ok(());
+        }
+    }
     while let Some(line) = wire::read_frame(&mut input)? {
         let req = match wire::decode_rpc_request(&line) {
             Ok(r) => r,
@@ -330,6 +366,7 @@ fn engine_owner_loop(
     cmd_rx: mpsc::Receiver<Cmd>,
     boot_tx: mpsc::Sender<Result<(), String>>,
     stop: Arc<AtomicBool>,
+    drain: Option<Arc<AtomicBool>>,
     dial_back: String,
 ) {
     let cache_dir = cfg.cache_dir.clone();
@@ -351,6 +388,26 @@ fn engine_owner_loop(
     let mut next_sweep: u64 = 1;
     let mut backoff = IdleBackoff::new();
     loop {
+        // a signal-initiated drain is the `shutdown` verb minus the
+        // reply: checked here (not in a monitor thread, which would
+        // hold a cmd sender and could deadlock the final join) — the
+        // recv_timeout below caps at IDLE_BACKOFF_CAP, bounding drain
+        // latency to one idle round
+        if drain.as_ref().map_or(false, |d| d.load(Ordering::SeqCst)) {
+            for h in sweeps.values_mut() {
+                h.cancel();
+            }
+            for h in sweeps.values_mut() {
+                while h.recv().is_some() {}
+            }
+            eprintln!("serve: drain signal received; {} sweeps drained", sweeps.len());
+            stop.store(true, Ordering::SeqCst);
+            // unblock the accept loop so serve() can return
+            if let Ok(ep) = Endpoint::parse(&dial_back) {
+                let _ = ep.connect();
+            }
+            break;
+        }
         // quiet rounds back the poll timeout off exponentially; any
         // command (below) or pumped outcome (loop tail) resets it
         let cmd = match cmd_rx.recv_timeout(backoff.next_wait()) {
@@ -643,6 +700,8 @@ mod tests {
             engine: EngineConfig { workers: 1, ..EngineConfig::default() },
             artifacts: PathBuf::from("definitely-missing-artifacts"),
             materialize_corpora: false,
+            token: None,
+            drain: None,
         };
         let backend = Arc::new(MockBackend::deterministic());
         let (desc_tx, desc_rx) = mpsc::channel();
@@ -716,6 +775,86 @@ mod tests {
         match ask(&mut r, &mut w, 16, "shutdown", &Json::Null) {
             wire::RpcReply::Ok { id, .. } => assert_eq!(id, 16),
             wire::RpcReply::Err { error, .. } => panic!("shutdown failed: {error}"),
+        }
+        daemon.join().expect("daemon thread panicked").expect("serve returned an error");
+    }
+
+    /// Flipping the drain flag (what the SIGTERM handler does) must
+    /// bring the daemon down cleanly with no client involved.
+    #[test]
+    fn drain_flag_stops_the_daemon_without_a_client() {
+        let drain = Arc::new(AtomicBool::new(false));
+        let opts = ServeOptions {
+            endpoint: "127.0.0.1:0".to_string(),
+            engine: EngineConfig { workers: 1, ..EngineConfig::default() },
+            artifacts: PathBuf::from("definitely-missing-artifacts"),
+            materialize_corpora: false,
+            token: None,
+            drain: Some(Arc::clone(&drain)),
+        };
+        let backend = Arc::new(MockBackend::deterministic());
+        let (desc_tx, desc_rx) = mpsc::channel();
+        let daemon = std::thread::spawn(move || {
+            serve(opts, backend, move |d| {
+                let _ = desc_tx.send(d.to_string());
+            })
+        });
+        let _desc = desc_rx.recv().expect("serve never became ready");
+        drain.store(true, Ordering::SeqCst);
+        daemon.join().expect("daemon thread panicked").expect("serve returned an error");
+    }
+
+    /// A token-configured daemon advertises auth in its hello, serves
+    /// a client that presents the matching token, and rejects a wrong
+    /// one with a tagged error naming the mismatch.
+    #[test]
+    fn token_auth_gates_the_serve_handshake() {
+        let opts = ServeOptions {
+            endpoint: "127.0.0.1:0".to_string(),
+            engine: EngineConfig { workers: 1, ..EngineConfig::default() },
+            artifacts: PathBuf::from("definitely-missing-artifacts"),
+            materialize_corpora: false,
+            token: Some("sesame".to_string()),
+            drain: None,
+        };
+        let backend = Arc::new(MockBackend::deterministic());
+        let (desc_tx, desc_rx) = mpsc::channel();
+        let daemon = std::thread::spawn(move || {
+            serve(opts, backend, move |d| {
+                let _ = desc_tx.send(d.to_string());
+            })
+        });
+        let desc = desc_rx.recv().expect("serve never became ready");
+        let ep = Endpoint::parse(&desc).unwrap();
+
+        // wrong token: a tagged error frame, then the daemon hangs up
+        let (r, mut w) = ep.connect().unwrap();
+        let mut r = BufReader::new(r);
+        let hello = wire::read_frame(&mut r).unwrap().expect("serve hello");
+        wire::check_serve_hello(&hello).unwrap();
+        assert!(wire::hello_advertises_auth(&hello), "token daemon must advertise auth");
+        wire::write_frame(&mut w, &wire::token_frame("wrong")).unwrap();
+        let line = wire::read_frame(&mut r).unwrap().expect("auth rejection frame");
+        match wire::decode_rpc_reply(&line).unwrap() {
+            wire::RpcReply::Err { error, .. } => {
+                assert!(error.contains("mismatch"), "got: {error}");
+                assert!(!error.contains("sesame"), "error must not echo the secret");
+            }
+            wire::RpcReply::Ok { .. } => panic!("wrong token was accepted"),
+        }
+        assert!(wire::read_frame(&mut r).unwrap().is_none(), "daemon must hang up");
+
+        // right token: verbs work, including shutdown
+        let (r, mut w) = ep.connect().unwrap();
+        let mut r = BufReader::new(r);
+        let hello = wire::read_frame(&mut r).unwrap().expect("serve hello");
+        wire::check_serve_hello(&hello).unwrap();
+        wire::write_frame(&mut w, &wire::token_frame("sesame")).unwrap();
+        wire::write_frame(&mut w, &wire::rpc_request_line(7, "shutdown", &Json::Null)).unwrap();
+        let line = wire::read_frame(&mut r).unwrap().expect("shutdown reply");
+        match wire::decode_rpc_reply(&line).unwrap() {
+            wire::RpcReply::Ok { id, .. } => assert_eq!(id, 7),
+            wire::RpcReply::Err { error, .. } => panic!("authed shutdown failed: {error}"),
         }
         daemon.join().expect("daemon thread panicked").expect("serve returned an error");
     }

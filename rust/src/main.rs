@@ -98,6 +98,26 @@ impl Args {
     }
 }
 
+/// The `--job-timeout SECS` deadline shared by `train`/`exp`/`drive`/
+/// `serve`.  `None` (flag absent, or 0) keeps every blocking wire
+/// read/write unbounded — the byte-deterministic default.
+fn job_timeout_flag(args: &Args) -> Result<Option<std::time::Duration>> {
+    match args.flags.get("job-timeout") {
+        Some(s) => {
+            let secs: u64 = s.parse().context("bad --job-timeout (whole seconds)")?;
+            Ok((secs > 0).then_some(std::time::Duration::from_secs(secs)))
+        }
+        None => Ok(None),
+    }
+}
+
+/// The shared-secret token from `--token` or `UMUP_TOKEN` (flag wins).
+/// One secret covers a whole fleet: listeners require it, dialers
+/// present it.
+fn token_flag(args: &Args) -> Option<String> {
+    args.flags.get("token").cloned().or_else(|| std::env::var("UMUP_TOKEN").ok())
+}
+
 fn main() -> Result<()> {
     let args = Args::parse();
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
@@ -110,6 +130,7 @@ fn main() -> Result<()> {
         "worker" => worker_cmd(&args),
         "serve" => serve_cmd(&args),
         "ctl" => ctl_cmd(&args),
+        "chaos" => chaos_cmd(&args),
         "cache" => cache_cmd(&args),
         "report" => report(&args),
         "corpus" => corpus_info(&args),
@@ -140,21 +161,35 @@ fn main() -> Result<()> {
                  \x20                             reads ahead up to 8 frames so parsing overlaps\n\
                  \x20                             execution whatever the engine's\n\
                  \x20                             --pipeline-depth\n\
-                 \x20 worker  --listen HOST:PORT|unix:/path [--mock]      serve engine jobs on a\n\
-                 \x20                             socket, one thread per connected engine\n\
-                 \x20                             (the dialed side of --backend network);\n\
-                 \x20                             same read-ahead as stdio mode\n\
+                 \x20 worker  --listen HOST:PORT|unix:/path [--mock] [--token SECRET]\n\
+                 \x20                             serve engine jobs on a socket, one thread\n\
+                 \x20                             per connected engine (the dialed side of\n\
+                 \x20                             --backend network); same read-ahead as\n\
+                 \x20                             stdio mode; SIGTERM drains (see below)\n\
                  \x20 serve   [--addr HOST:PORT|unix:/path] [--workers N|EP,EP,...]\n\
                  \x20         [--backend network|process|mock|in-process] [--cache-dir DIR]\n\
-                 \x20         [--resume]  long-lived coordinator daemon: owns one engine and\n\
+                 \x20         [--resume] [--token SECRET] [--job-timeout SECS]\n\
+                 \x20                     long-lived coordinator daemon: owns one engine and\n\
                  \x20                             answers submit/status/cancel/cache-stats/\n\
                  \x20                             events/shutdown RPCs (prints `serving ADDR`\n\
-                 \x20                             when up)\n\
+                 \x20                             when up); SIGTERM drains (see below)\n\
                  \x20 ctl     <submit|status|cancel|cache-stats|watch|shutdown> --addr ADDR\n\
-                 \x20         [--jobs FILE] [--sweep N]  one RPC against a live serve daemon;\n\
+                 \x20         [--jobs FILE] [--sweep N] [--timeout SECS] [--token SECRET]\n\
+                 \x20                             one RPC against a live serve daemon;\n\
                  \x20                             prints the JSON result on stdout (`watch`\n\
                  \x20                             tails the daemon's event stream as JSONL\n\
-                 \x20                             until the daemon exits)\n\
+                 \x20                             until the daemon exits).  --timeout\n\
+                 \x20                             (default 30) bounds the dial and every\n\
+                 \x20                             reply; expiry is a nonzero exit naming the\n\
+                 \x20                             fix (0 disables; watch is unbounded unless\n\
+                 \x20                             --timeout is passed explicitly)\n\
+                 \x20 chaos   --listen EP --upstream EP [--faults SPEC]   deterministic fault-\n\
+                 \x20                             injecting proxy for the worker wire\n\
+                 \x20                             protocol: forwards verbatim except the\n\
+                 \x20                             faults SPEC names by global reply ordinal\n\
+                 \x20                             (stall-after:N, delay-ms:N, tear-frame:N,\n\
+                 \x20                             drop-conn:N, garbage-reply:N — also read\n\
+                 \x20                             from UMUP_FAULTS; see tests/chaos.rs)\n\
                  \x20 cache   stats [--cache-dir DIR]                     segment/key statistics\n\
                  \x20 cache   gc    [--cache-dir DIR] [--older-than 30d] [--manifest NAME]\n\
                  \x20               [--max-bytes 512m] [--chunk-entries N] [--dry-run]\n\
@@ -181,6 +216,22 @@ fn main() -> Result<()> {
                  \x20 budget.  Depth 1 keeps per-connection dispatch order byte-identical\n\
                  \x20 to the classic lockstep path; any depth leaves cache *contents*\n\
                  \x20 identical, only segment line order may differ.\n\n\
+                 deadlines, drain & auth:\n\
+                 \x20 train/exp/drive/serve take [--job-timeout SECS]: every wire read/write\n\
+                 \x20 gets a deadline and each process child a kill-after watchdog, so a\n\
+                 \x20 hung-but-alive peer is treated exactly like a crashed one — connection\n\
+                 \x20 torn down, the unacked window re-dispatched once under the same\n\
+                 \x20 --max-restarts budget, a worker_stalled event published.  Default: off\n\
+                 \x20 (the unarmed path stays byte-identical to previous builds); drive\n\
+                 \x20 forwards the flag to its shard children.  --backend network, serve and\n\
+                 \x20 ctl take [--token SECRET] (or UMUP_TOKEN): a listener started with a\n\
+                 \x20 token advertises auth in its hello and requires the dialer's token\n\
+                 \x20 frame before any traffic (mismatch fails the handshake with a hint;\n\
+                 \x20 no token leaves the socket open as before).  SIGTERM/SIGINT drain\n\
+                 \x20 serve, worker --listen and drive gracefully: stop accepting work,\n\
+                 \x20 finish or cancel what is in flight (persist-before-report intact),\n\
+                 \x20 unlink unix sockets, exit 75 (EX_TEMPFAIL) so a supervisor can tell a\n\
+                 \x20 drain from a crash.\n\n\
                  network topology:\n\
                  \x20 --backend network ships the same wire frames over sockets: start\n\
                  \x20 long-lived workers with `repro worker --listen HOST:PORT` (or\n\
@@ -559,6 +610,22 @@ fn drive_cmd(args: &Args) -> Result<()> {
         let _ = std::fs::remove_file(f);
     }
 
+    // graceful drain: SIGTERM/SIGINT latch the process-wide flag; a
+    // bridge thread mirrors it into the driver's stop flag, which the
+    // supervision loop polls between rounds (tearing the shard children
+    // down; their persisted runs stay resumable)
+    umup::util::signal::install_drain_handler();
+    let stop_flag = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    {
+        let stop_flag = std::sync::Arc::clone(&stop_flag);
+        std::thread::spawn(move || {
+            while !umup::util::signal::drain_requested() {
+                std::thread::sleep(std::time::Duration::from_millis(100));
+            }
+            stop_flag.store(true, std::sync::atomic::Ordering::SeqCst);
+        });
+    }
+
     let cfg = DriveConfig {
         shards,
         cache_dir: cache_dir.clone(),
@@ -566,6 +633,7 @@ fn drive_cmd(args: &Args) -> Result<()> {
         background_compaction: args.has("bg-compact"),
         events: bus.clone(),
         child_event_files: child_event_files.clone(),
+        stop: Some(std::sync::Arc::clone(&stop_flag)),
         ..DriveConfig::default()
     };
     println!(
@@ -600,12 +668,30 @@ fn drive_cmd(args: &Args) -> Result<()> {
         if let Some(d) = args.flags.get("pipeline-depth") {
             cmd.arg("--pipeline-depth").arg(d);
         }
+        // the deadline and fleet secret apply per child engine
+        if let Some(t) = args.flags.get("job-timeout") {
+            cmd.arg("--job-timeout").arg(t);
+        }
+        if let Some(t) = args.flags.get("token") {
+            cmd.arg("--token").arg(t);
+        }
         if !child_event_files.is_empty() {
             cmd.arg("--progress")
                 .arg(format!("jsonl:{}", child_event_files[shard.index].display()));
         }
         cmd
-    })?;
+    });
+    let report = match report {
+        Ok(r) => r,
+        Err(e) if umup::util::signal::drain_requested() => {
+            eprintln!(
+                "drive: drained on signal ({e:#}); partial results are resumable in {}",
+                cache_dir.display()
+            );
+            std::process::exit(umup::util::signal::EXIT_DRAINED);
+        }
+        Err(e) => return Err(e),
+    };
     println!(
         "drive: all {shards} shards done in {:.1}s ({} restarts, {} runs cached); \
          reports are in {out}/",
@@ -646,6 +732,7 @@ fn make_backend(
         .get("pipeline-depth")
         .map(|d| d.parse().context("bad --pipeline-depth"))
         .transpose()?;
+    let job_timeout = job_timeout_flag(args)?;
     Ok(match args.get("backend", "in-process").as_str() {
         "in-process" => None,
         "process" => {
@@ -655,7 +742,8 @@ fn make_backend(
             // matches the scheduler's warm-manifest mirror
             let sessions = umup::engine::EngineConfig::default().max_sessions_per_worker;
             let mut backend = ProcessBackend::repro_worker(artifacts, false, sessions)?
-                .with_max_restarts(max_restarts);
+                .with_max_restarts(max_restarts)
+                .with_job_timeout(job_timeout);
             if let Some(d) = pipeline_depth {
                 backend = backend.with_pipeline_depth(d);
             }
@@ -671,8 +759,10 @@ fn make_backend(
                      unix:/path) — the endpoint list doubles as the engine worker count"
                 );
             }
-            let mut backend =
-                NetworkBackend::new(&endpoints)?.with_max_restarts(max_restarts);
+            let mut backend = NetworkBackend::new(&endpoints)?
+                .with_max_restarts(max_restarts)
+                .with_job_timeout(job_timeout)
+                .with_token(token_flag(args));
             if let Some(d) = pipeline_depth {
                 backend = backend.with_pipeline_depth(d);
             }
@@ -773,10 +863,19 @@ fn worker_cmd(args: &Args) -> Result<()> {
 /// its own thread — the dialed side of `--backend network`.  The bound
 /// endpoint (real port when listening on `:0`) is announced as one
 /// `listening <addr>` line on stdout, so spawners can read it back.
+///
+/// With `--token`/`UMUP_TOKEN` the hello advertises shared-secret auth
+/// and every connection must answer with a matching token frame before
+/// any job is served.  SIGTERM/SIGINT drain: stop accepting, give
+/// in-flight connections a bounded grace, unlink a unix socket, and
+/// exit with [`umup::util::signal::EXIT_DRAINED`].
 fn worker_listen(args: &Args, listen: &str) -> Result<()> {
     use std::io::{BufReader, Write as _};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
 
     use umup::engine::{Endpoint, Listener};
+    use umup::util::signal;
 
     let mock = args.has("mock");
     if !mock && !cfg!(feature = "xla") {
@@ -785,18 +884,47 @@ fn worker_listen(args: &Args, listen: &str) -> Result<()> {
              without --no-default-features (or pass --mock)"
         );
     }
+    let token = token_flag(args);
     let ep = Endpoint::parse(listen).context("bad --listen endpoint")?;
     let listener = Listener::bind(&ep)?;
+    // graceful drain: SIGTERM/SIGINT latch the flag, but the handler is
+    // installed with SA_RESTART semantics, so a blocking accept() never
+    // sees EINTR — a monitor thread self-dials the listener to pop it
+    // out of accept once the flag is up (the loop re-checks the flag
+    // before serving anything it accepted).  Installed before the
+    // announcement so a spawner may signal as soon as it reads it.
+    signal::install_drain_handler();
+    {
+        let desc = listener.local_desc();
+        std::thread::spawn(move || {
+            while !signal::drain_requested() {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+            if let Ok(ep) = Endpoint::parse(&desc) {
+                let _ = ep.connect();
+            }
+        });
+    }
     println!("listening {}", listener.local_desc());
     std::io::stdout().flush()?;
+    // serving threads are counted so a drain can wait (bounded — an
+    // idle engine may hold its connection open forever) for in-flight
+    // work to finish
+    let active = Arc::new(AtomicUsize::new(0));
     loop {
         let (r, w, peer) = match listener.accept() {
             Ok(x) => x,
             Err(e) => {
+                if signal::drain_requested() {
+                    break;
+                }
                 eprintln!("worker: accept failed: {e:#}");
                 continue;
             }
         };
+        if signal::drain_requested() {
+            break;
+        }
         eprintln!("worker: engine connected ({peer})");
         // a serve-loop error means the stream is unusable for further
         // jobs, but the write half usually still works: name the reason
@@ -809,23 +937,36 @@ fn worker_listen(args: &Args, listen: &str) -> Result<()> {
             let _ = wire::write_frame(w, &wire::err_reply_line("?", &format!("{e:#}")));
         }
         if mock {
+            let token = token.clone();
+            let active = Arc::clone(&active);
+            active.fetch_add(1, Ordering::SeqCst);
             std::thread::spawn(move || {
                 let mut w = w;
-                if let Err(e) = mock_serve_loop(BufReader::new(r), &mut w) {
+                if let Err(e) = mock_serve_loop(BufReader::new(r), &mut w, token.as_deref()) {
                     report(&mut w, &e);
                 }
+                active.fetch_sub(1, Ordering::SeqCst);
             });
         } else {
             #[cfg(feature = "xla")]
             {
                 let artifacts = args.get("artifacts", "artifacts");
                 let cap: usize = args.get("sessions", "8").parse().context("bad --sessions")?;
+                let token = token.clone();
+                let active = Arc::clone(&active);
+                active.fetch_add(1, Ordering::SeqCst);
                 std::thread::spawn(move || {
                     let mut w = w;
-                    if let Err(e) = worker_xla_serve_on(&artifacts, cap, BufReader::new(r), &mut w)
-                    {
+                    if let Err(e) = worker_xla_serve_on(
+                        &artifacts,
+                        cap,
+                        token.as_deref(),
+                        BufReader::new(r),
+                        &mut w,
+                    ) {
                         report(&mut w, &e);
                     }
+                    active.fetch_sub(1, Ordering::SeqCst);
                 });
             }
             #[cfg(not(feature = "xla"))]
@@ -835,11 +976,26 @@ fn worker_listen(args: &Args, listen: &str) -> Result<()> {
             }
         }
     }
+    // drain: already-accepted connections get a bounded grace to finish
+    // their in-flight windows (persist-before-report happens engine
+    // side), then the listener drop unlinks a unix socket and the
+    // distinct exit code tells supervisors this was a drain, not a
+    // crash
+    eprintln!("worker: drain signal received; no longer accepting connections");
+    let grace = std::time::Instant::now();
+    while active.load(Ordering::SeqCst) > 0
+        && grace.elapsed() < std::time::Duration::from_secs(5)
+    {
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+    drop(listener);
+    std::process::exit(signal::EXIT_DRAINED);
 }
 
 /// The deterministic mock worker loop, with env-armed failure injection
 /// for the robustness tests: `UMUP_MOCK_FAIL` picks a failure mode
-/// (`crash-before-reply`, `crash-after-reply`, `garbage`, `truncate`)
+/// (`crash-before-reply`, `crash-after-reply`, `garbage`, `truncate`,
+/// `hang` — alive but silent, recoverable only via `--job-timeout`)
 /// and `UMUP_MOCK_FAIL_ONCE=<path>` arms it exactly once across a whole
 /// worker fleet (first child to atomically create the marker file
 /// fails; everyone else — including this child's own restart — serves
@@ -872,7 +1028,7 @@ fn worker_mock_serve() -> Result<()> {
     // a plain BufReader, not StdinLock: the serve loop's read-ahead
     // thread needs to own a Send reader
     let stdout = std::io::stdout();
-    mock_serve_loop(std::io::BufReader::new(std::io::stdin()), stdout.lock())
+    mock_serve_loop(std::io::BufReader::new(std::io::stdin()), stdout.lock(), None)
 }
 
 /// One mock wire-protocol stream: hello, then deterministic replies
@@ -886,8 +1042,9 @@ fn worker_mock_serve() -> Result<()> {
 /// injection stays at execution/reply time, exactly where the real
 /// executor would fail, never in the reader.
 fn mock_serve_loop(
-    input: impl std::io::BufRead + Send,
+    mut input: impl std::io::BufRead + Send,
     mut output: impl std::io::Write,
+    token: Option<&str>,
 ) -> Result<()> {
     use umup::engine::backend::wire;
     use umup::engine::det_record;
@@ -908,7 +1065,15 @@ fn mock_serve_loop(
         .and_then(|s| s.parse().ok())
         .unwrap_or(0);
 
-    wire::write_frame(&mut output, &wire::hello_line())?;
+    wire::write_frame(&mut output, &wire::hello_line_auth(token.is_some()))?;
+    if let Some(expect) = token {
+        // the dialer's token frame precedes any job; a peer that hangs
+        // up instead (a port probe, a drain self-dial) is not an error
+        match wire::read_frame(&mut input)? {
+            Some(line) => wire::check_token_frame(&line, expect)?,
+            None => return Ok(()),
+        }
+    }
     let (tx, rx) = std::sync::mpsc::sync_channel::<Result<wire::WireJob>>(wire::WORKER_READAHEAD);
     std::thread::scope(|s| {
         s.spawn(move || {
@@ -968,6 +1133,17 @@ fn mock_serve_loop(
                             output.flush()?;
                             std::process::exit(0);
                         }
+                        "hang" => {
+                            eprintln!(
+                                "worker-mock: injected hang before replying to {}",
+                                job.config.label
+                            );
+                            // alive but silent — the hung-worker shape
+                            // only a --job-timeout deadline recovers
+                            loop {
+                                std::thread::sleep(std::time::Duration::from_secs(3600));
+                            }
+                        }
                         other => bail!("unknown UMUP_MOCK_FAIL mode {other:?}"),
                     }
                 }
@@ -993,7 +1169,13 @@ fn worker_xla_serve(args: &Args) -> Result<()> {
     // a plain BufReader, not StdinLock: the serve loop's read-ahead
     // thread needs to own a Send reader
     let stdout = std::io::stdout();
-    worker_xla_serve_on(&artifacts, cap, std::io::BufReader::new(std::io::stdin()), stdout.lock())
+    worker_xla_serve_on(
+        &artifacts,
+        cap,
+        None,
+        std::io::BufReader::new(std::io::stdin()),
+        stdout.lock(),
+    )
 }
 
 /// One real-worker wire-protocol stream over any transport (stdio for
@@ -1003,6 +1185,7 @@ fn worker_xla_serve(args: &Args) -> Result<()> {
 fn worker_xla_serve_on(
     artifacts: &str,
     cap: usize,
+    token: Option<&str>,
     input: impl std::io::BufRead + Send,
     output: impl std::io::Write,
 ) -> Result<()> {
@@ -1022,7 +1205,7 @@ fn worker_xla_serve_on(
     // corpora are deterministic functions of their generator config;
     // cache them per config like the parent's ExpContext does
     let mut corpora: HashMap<String, Arc<Corpus>> = HashMap::new();
-    wire::serve(input, output, |job| {
+    wire::serve_authed(input, output, token, |job| {
         let man = reg.manifest(&job.manifest)?;
         let corpus = Arc::clone(
             corpora
@@ -1072,6 +1255,10 @@ fn serve_cmd(args: &Args) -> Result<()> {
         .get("pipeline-depth")
         .map(|d| d.parse().context("bad --pipeline-depth"))
         .transpose()?;
+    let job_timeout = job_timeout_flag(args)?;
+    // one fleet secret: the daemon's own control socket requires it,
+    // and the network backend presents it to token-armed workers
+    let token = token_flag(args);
     let artifacts = args.get("artifacts", "artifacts");
     let sessions = EngineConfig::default().max_sessions_per_worker;
     let (workers, backend): (usize, Arc<dyn Backend>) = match backend_flag.as_str() {
@@ -1082,7 +1269,10 @@ fn serve_cmd(args: &Args) -> Result<()> {
                      unix:/path)"
                 );
             }
-            let mut b = NetworkBackend::new(&workers_flag)?.with_max_restarts(max_restarts);
+            let mut b = NetworkBackend::new(&workers_flag)?
+                .with_max_restarts(max_restarts)
+                .with_job_timeout(job_timeout)
+                .with_token(token.clone());
             if let Some(d) = pipeline_depth {
                 b = b.with_pipeline_depth(d);
             }
@@ -1093,7 +1283,8 @@ fn serve_cmd(args: &Args) -> Result<()> {
         }
         "process" => {
             let mut b = ProcessBackend::repro_worker(&artifacts, args.has("mock"), sessions)?
-                .with_max_restarts(max_restarts);
+                .with_max_restarts(max_restarts)
+                .with_job_timeout(job_timeout);
             if let Some(d) = pipeline_depth {
                 b = b.with_pipeline_depth(d);
             }
@@ -1107,6 +1298,21 @@ fn serve_cmd(args: &Args) -> Result<()> {
         ),
     };
     let (cache_dir, resume) = args.cache_opts();
+    // graceful drain: SIGTERM/SIGINT latch the process-wide flag; a
+    // bridge thread mirrors it into the engine owner loop's drain flag,
+    // which cancels and drains every sweep (persist-before-report
+    // intact), then stops the daemon
+    umup::util::signal::install_drain_handler();
+    let drain = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    {
+        let drain = Arc::clone(&drain);
+        std::thread::spawn(move || {
+            while !umup::util::signal::drain_requested() {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+            drain.store(true, std::sync::atomic::Ordering::SeqCst);
+        });
+    }
     let opts = serve::ServeOptions {
         endpoint: addr,
         engine: EngineConfig { workers, cache_dir, resume, ..EngineConfig::default() },
@@ -1114,12 +1320,21 @@ fn serve_cmd(args: &Args) -> Result<()> {
         // only in-process execution reads tokens/manifests on this
         // host; every out-of-process backend resolves them worker-side
         materialize_corpora: backend_flag == "in-process",
+        token,
+        drain: Some(Arc::clone(&drain)),
     };
     println!("serve: backend {} with {workers} engine workers", backend.name());
     serve::serve(opts, backend, |desc| {
         println!("serving {desc}");
         let _ = std::io::stdout().flush();
-    })
+    })?;
+    if umup::util::signal::drain_requested() {
+        // the unix socket (if any) was unlinked when the listener
+        // dropped inside serve(); the distinct code marks a drain
+        eprintln!("serve: drained on signal; exiting");
+        std::process::exit(umup::util::signal::EXIT_DRAINED);
+    }
+    Ok(())
 }
 
 #[cfg(feature = "xla")]
@@ -1148,7 +1363,8 @@ fn ctl_cmd(args: &Args) -> Result<()> {
     use umup::util::Json;
 
     const USAGE: &str = "usage: repro ctl <submit|status|cancel|cache-stats|watch|shutdown> \
-                         --addr HOST:PORT|unix:/path [--jobs FILE] [--sweep N]";
+                         --addr HOST:PORT|unix:/path [--jobs FILE] [--sweep N] \
+                         [--timeout SECS] [--token SECRET]";
     let verb = args.positional.get(1).map(String::as_str).unwrap_or("");
     let params = match verb {
         "submit" => {
@@ -1191,18 +1407,55 @@ fn ctl_cmd(args: &Args) -> Result<()> {
         None => bail!("ctl needs --addr (the serve daemon's endpoint)\n{USAGE}"),
     };
     let ep = Endpoint::parse(&addr).context("bad --addr")?;
-    let (r, mut w) = ep.connect()?;
+    // --timeout SECS (default 30) bounds the dial and every read: a
+    // wedged daemon becomes a pointed error instead of a hung ctl.
+    // `watch` tails an unbounded stream, so it only gets a deadline
+    // when one is passed explicitly; --timeout 0 disables the bound.
+    let timeout_secs: u64 = args.get("timeout", "30").parse().context("bad --timeout")?;
+    let timeout = if timeout_secs == 0 || (verb == "watch" && !args.has("timeout")) {
+        None
+    } else {
+        Some(std::time::Duration::from_secs(timeout_secs))
+    };
+    let deadline_hint = |e: anyhow::Error| {
+        let timed_out = e.chain().any(|c| {
+            c.downcast_ref::<std::io::Error>().map_or(false, |io| {
+                matches!(
+                    io.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                )
+            })
+        });
+        if timed_out {
+            e.context(format!(
+                "no reply from {addr} within {timeout_secs}s — the daemon may be wedged \
+                 or the address wrong; raise --timeout (0 disables the deadline)"
+            ))
+        } else {
+            e
+        }
+    };
+    let (r, mut w) = ep.connect_with_deadline(timeout).map_err(&deadline_hint)?;
     let mut r = BufReader::new(r);
-    let hello =
-        wire::read_frame(&mut r)?.context("server hung up before its hello frame")?;
+    let hello = wire::read_frame(&mut r)
+        .map_err(&deadline_hint)?
+        .context("server hung up before its hello frame")?;
     // a worker socket here fails with the cross-wiring hint from wire.rs
     wire::check_serve_hello(&hello)?;
+    // a token-armed daemon wants the shared secret before any RPC
+    if wire::hello_advertises_auth(&hello) {
+        let token = token_flag(args).context(
+            "this daemon requires a shared-secret token — pass --token or set \
+             UMUP_TOKEN to match the one `repro serve` was started with",
+        )?;
+        wire::write_frame(&mut w, &wire::token_frame(&token))?;
+    }
     // `watch` is the tailing client of the daemon's `events` stream
     // verb: print each event envelope as it arrives, until the daemon
     // exits (EOF) or the stream errors
     if verb == "watch" {
         wire::write_frame(&mut w, &wire::rpc_request_line(1, "events", &params))?;
-        while let Some(line) = wire::read_frame(&mut r)? {
+        while let Some(line) = wire::read_frame(&mut r).map_err(&deadline_hint)? {
             match wire::decode_rpc_reply(&line)? {
                 wire::RpcReply::Ok { result, .. } => println!("{}", result.dump()),
                 wire::RpcReply::Err { error, .. } => bail!("server error: {error}"),
@@ -1211,7 +1464,9 @@ fn ctl_cmd(args: &Args) -> Result<()> {
         return Ok(());
     }
     wire::write_frame(&mut w, &wire::rpc_request_line(1, verb, &params))?;
-    let line = wire::read_frame(&mut r)?.context("server hung up before replying")?;
+    let line = wire::read_frame(&mut r)
+        .map_err(&deadline_hint)?
+        .context("server hung up before replying")?;
     match wire::decode_rpc_reply(&line)? {
         wire::RpcReply::Ok { id, result } => {
             if id != 1 {
@@ -1222,6 +1477,41 @@ fn ctl_cmd(args: &Args) -> Result<()> {
         }
         wire::RpcReply::Err { error, .. } => bail!("server error: {error}"),
     }
+}
+
+/// `repro chaos --listen A --upstream B [--faults SPEC]`: the
+/// deterministic fault-injecting proxy (see
+/// `umup::engine::backend::chaos`).  Sits between an engine and a real
+/// `repro worker --listen`, forwarding the wire protocol verbatim
+/// except for the faults the plan names by global reply ordinal.  The
+/// bound endpoint is announced as one `listening <addr>` line on
+/// stdout — the same format as `worker --listen`, so harnesses reuse
+/// one spawn-and-read-back helper for both.
+fn chaos_cmd(args: &Args) -> Result<()> {
+    use std::io::Write as _;
+
+    use umup::engine::{Endpoint, FaultPlan, Listener};
+
+    let listen = args
+        .flags
+        .get("listen")
+        .context("chaos needs --listen HOST:PORT|unix:/path (the endpoint engines dial)")?;
+    let upstream = args.flags.get("upstream").context(
+        "chaos needs --upstream HOST:PORT|unix:/path (the real worker behind the proxy)",
+    )?;
+    let spec = match args.flags.get("faults") {
+        Some(s) => s.clone(),
+        None => std::env::var("UMUP_FAULTS").unwrap_or_default(),
+    };
+    let plan = FaultPlan::parse(&spec).context("bad --faults/UMUP_FAULTS")?;
+    if plan.is_passthrough() {
+        eprintln!("chaos: empty fault plan — acting as a pure passthrough proxy");
+    }
+    let upstream = Endpoint::parse(upstream).context("bad --upstream endpoint")?;
+    let listener = Listener::bind(&Endpoint::parse(listen).context("bad --listen endpoint")?)?;
+    println!("listening {}", listener.local_desc());
+    std::io::stdout().flush()?;
+    umup::engine::backend::chaos::run_proxy(listener, upstream, plan)
 }
 
 #[cfg(not(feature = "xla"))]

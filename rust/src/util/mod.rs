@@ -8,6 +8,7 @@ pub mod json;
 pub mod plot;
 pub mod prop;
 pub mod rng;
+pub mod signal;
 pub mod stats;
 
 pub use json::{write_json_num, write_json_str, Json};

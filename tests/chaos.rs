@@ -1,0 +1,482 @@
+//! Robustness suite for the distributed stack: the deterministic
+//! fault-injection proxy (`repro chaos`), deadline supervision
+//! (`--job-timeout`), graceful drain on SIGTERM, shared-secret token
+//! auth, and the `repro ctl` client deadline.
+//!
+//! The load-bearing assertion is byte-identity: whatever a `FaultPlan`
+//! does to the wire — garbage replies, torn frames, dropped
+//! connections, injected latency, silent stalls — the drained cache
+//! must equal the clean in-process run bit for bit, with the engine's
+//! counter partition intact and no job recorded twice.  Faults are
+//! ordinal-triggered (no clocks, no randomness), so every run of this
+//! suite exercises the exact same failure schedule.
+
+mod common;
+
+use std::collections::BTreeSet;
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::AtomicUsize;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use common::{det_mock_engine, key_of_line, shared_job_list, sorted_segment_lines};
+use umup::engine::{
+    Backend, Engine, EngineConfig, Event, EventBus, NetworkBackend, ProcessBackend,
+};
+use umup::util::Json;
+
+fn repro_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_repro"))
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("umup-chaos-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Pin the cache timestamp so segment lines are byte-reproducible.
+/// Spawned workers inherit the variable, so their reply lines carry the
+/// same pinned stamp as the in-process reference.
+fn pin_cache_ts() {
+    std::env::set_var("UMUP_CACHE_TS", "1700000000");
+}
+
+/// Spawn a repro subcommand that announces `listening <addr>` on stdout
+/// (worker --listen and the chaos proxy share the format) and read the
+/// address back.
+fn spawn_announced(mut cmd: Command, what: &str) -> (Child, String) {
+    cmd.stdin(Stdio::null()).stdout(Stdio::piped()).stderr(Stdio::null());
+    let mut child = cmd.spawn().unwrap_or_else(|e| panic!("spawning {what}: {e}"));
+    let stdout = child.stdout.take().expect("stdout is piped");
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line).expect("reading the listen announcement");
+    let addr = line
+        .strip_prefix("listening ")
+        .unwrap_or_else(|| panic!("unexpected {what} announcement {line:?}"))
+        .trim()
+        .to_string();
+    (child, addr)
+}
+
+fn spawn_listen_worker(envs: &[(&str, &str)]) -> (Child, String) {
+    let mut cmd = Command::new(repro_exe());
+    cmd.arg("worker").arg("--mock").arg("--listen").arg("127.0.0.1:0");
+    for (k, v) in envs {
+        cmd.env(k, v);
+    }
+    spawn_announced(cmd, "listen worker")
+}
+
+fn spawn_chaos_proxy(upstream: &str, faults: &str) -> (Child, String) {
+    let mut cmd = Command::new(repro_exe());
+    cmd.arg("chaos")
+        .arg("--listen")
+        .arg("127.0.0.1:0")
+        .arg("--upstream")
+        .arg(upstream)
+        .arg("--faults")
+        .arg(faults);
+    spawn_announced(cmd, "chaos proxy")
+}
+
+fn kill_fleet(fleet: Vec<Child>) {
+    for mut child in fleet {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+}
+
+/// The clean in-process run every chaotic run must match byte for byte.
+fn reference_lines(tag: &str) -> Vec<String> {
+    pin_cache_ts();
+    let dir = tmp_dir(tag);
+    let jobs = shared_job_list();
+    let n_jobs = jobs.len();
+    let engine = det_mock_engine(
+        EngineConfig {
+            workers: 2,
+            cache_dir: Some(dir.clone()),
+            resume: true,
+            ..EngineConfig::default()
+        },
+        Arc::new(AtomicUsize::new(0)),
+    );
+    let report = engine.run(jobs);
+    drop(engine);
+    assert_eq!(report.completed, n_jobs, "the clean reference run must complete");
+    let lines = sorted_segment_lines(&dir);
+    let _ = std::fs::remove_dir_all(&dir);
+    lines
+}
+
+fn fresh_engine(backend: Arc<dyn Backend>, dir: &Path) -> Engine {
+    Engine::with_backend(
+        EngineConfig {
+            workers: 4,
+            cache_dir: Some(dir.to_path_buf()),
+            resume: true,
+            ..EngineConfig::default()
+        },
+        backend,
+    )
+    .expect("backend health probe")
+}
+
+// ------------------------------------------------------- chaos matrix
+
+/// The acceptance test for the fault-injection layer: a 4-worker fleet
+/// with one worker behind the chaos proxy survives every `FaultPlan` in
+/// the matrix — the engine re-dispatches the wounded window within its
+/// restart budget and the drained cache is byte-identical to the clean
+/// in-process run.  Only the silent-stall plan needs `--job-timeout`
+/// armed; every other fault surfaces as an I/O error on its own.
+#[test]
+fn chaos_matrix_is_byte_identical_to_the_clean_run() {
+    pin_cache_ts();
+    let reference = reference_lines("matrix-ref");
+    let n_jobs = shared_job_list().len();
+    let plans: &[(&str, Option<Duration>)] = &[
+        ("garbage-reply:1", None),
+        ("tear-frame:2", None),
+        ("drop-conn:5", None),
+        ("delay-ms:25", None),
+        ("stall-after:3", Some(Duration::from_secs(2))),
+    ];
+    for (spec, job_timeout) in plans {
+        let dir = tmp_dir(&format!("matrix-{}", spec.replace([':', ','], "-")));
+        // one proxied worker plus three direct ones: a one-shot fault
+        // costs at most one reconnect, and round-robin failover moves
+        // the wounded engine slot onto a healthy direct endpoint
+        let mut fleet = Vec::new();
+        let (child, upstream) = spawn_listen_worker(&[]);
+        fleet.push(child);
+        let (proxy, proxy_addr) = spawn_chaos_proxy(&upstream, spec);
+        fleet.push(proxy);
+        let mut addrs = vec![proxy_addr];
+        for _ in 0..3 {
+            let (child, addr) = spawn_listen_worker(&[]);
+            fleet.push(child);
+            addrs.push(addr);
+        }
+        let backend = Arc::new(
+            NetworkBackend::new(&addrs.join(","))
+                .expect("backend construction")
+                .with_max_restarts(2)
+                .with_job_timeout(*job_timeout),
+        );
+        let engine = fresh_engine(backend, &dir);
+        let report = engine.run(shared_job_list());
+        drop(engine);
+        assert_eq!(report.failed, 0, "plan {spec}: no job may fail");
+        assert_eq!(report.completed, n_jobs, "plan {spec}: every job must complete");
+        assert_eq!(
+            report.executed + report.cache_hits + report.deduped + report.skipped + report.cancelled,
+            n_jobs,
+            "plan {spec}: counter partition broken (executed {} hits {} dups {} skips {} cancelled {})",
+            report.executed,
+            report.cache_hits,
+            report.deduped,
+            report.skipped,
+            report.cancelled
+        );
+        let lines = sorted_segment_lines(&dir);
+        assert_eq!(lines.len(), n_jobs, "plan {spec}: exactly one cache line per job");
+        let keys: BTreeSet<String> = lines.iter().map(|l| key_of_line(l)).collect();
+        assert_eq!(keys.len(), n_jobs, "plan {spec}: a job was recorded twice");
+        assert_eq!(
+            lines, reference,
+            "plan {spec}: the drained cache must be byte-identical to the clean run"
+        );
+        kill_fleet(fleet);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+// ------------------------------------------- hung-but-alive supervision
+
+/// A worker that accepts a job and never replies — alive, so no EOF or
+/// reset ever surfaces — is exactly what `--job-timeout` exists for:
+/// the read deadline fires, the connection is torn down, and the unacked
+/// window is re-dispatched to a healthy endpoint.
+#[test]
+fn hung_worker_under_a_job_deadline_recovers_on_the_network_backend() {
+    pin_cache_ts();
+    let reference = reference_lines("hang-net-ref");
+    let n_jobs = shared_job_list().len();
+    let dir = tmp_dir("hang-net");
+    let marker = tmp_dir("hang-net-marker").with_extension("once");
+    let _ = std::fs::remove_file(&marker);
+    let marker_s = marker.to_str().unwrap().to_string();
+    let mut fleet = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..4 {
+        let (child, addr) = spawn_listen_worker(&[
+            ("UMUP_MOCK_FAIL", "hang"),
+            ("UMUP_MOCK_FAIL_ONCE", &marker_s),
+        ]);
+        fleet.push(child);
+        addrs.push(addr);
+    }
+    let backend = Arc::new(
+        NetworkBackend::new(&addrs.join(","))
+            .expect("backend construction")
+            .with_max_restarts(2)
+            .with_job_timeout(Some(Duration::from_secs(1))),
+    );
+    let engine = fresh_engine(Arc::clone(&backend) as Arc<dyn Backend>, &dir);
+    let report = engine.run(shared_job_list());
+    drop(engine);
+    assert!(marker.exists(), "the hang injection never fired");
+    assert_eq!(report.failed, 0, "the hung window must be re-dispatched, not failed");
+    assert_eq!(report.completed, n_jobs);
+    assert!(backend.restarts() >= 1, "the stalled connection must be accounted as a restart");
+    let lines = sorted_segment_lines(&dir);
+    assert_eq!(lines, reference, "deadline recovery must not corrupt the cache");
+    kill_fleet(fleet);
+    let _ = std::fs::remove_file(&marker);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The same hang on the pipe backend: the watchdog SIGKILLs the wedged
+/// child when the deadline expires, the slot restarts within budget,
+/// and a `worker_stalled` event lands on the bus.
+#[test]
+fn hung_worker_under_a_job_deadline_recovers_on_the_process_backend() {
+    pin_cache_ts();
+    let reference = reference_lines("hang-proc-ref");
+    let n_jobs = shared_job_list().len();
+    let dir = tmp_dir("hang-proc");
+    let marker = tmp_dir("hang-proc-marker").with_extension("once");
+    let _ = std::fs::remove_file(&marker);
+    let marker_s = marker.to_str().unwrap().to_string();
+    let exe = repro_exe();
+    let backend = Arc::new(
+        ProcessBackend::new(move |_worker| {
+            let mut cmd = Command::new(&exe);
+            cmd.arg("worker").arg("--mock");
+            cmd.env("UMUP_MOCK_FAIL", "hang");
+            cmd.env("UMUP_MOCK_FAIL_ONCE", &marker_s);
+            cmd
+        })
+        .with_max_restarts(2)
+        .with_job_timeout(Some(Duration::from_secs(1))),
+    );
+    let bus = EventBus::new();
+    let stream = bus.subscribe(4096);
+    let engine = Engine::with_backend(
+        EngineConfig {
+            workers: 4,
+            cache_dir: Some(dir.clone()),
+            resume: true,
+            events: Some(bus.clone()),
+            ..EngineConfig::default()
+        },
+        Arc::clone(&backend) as Arc<dyn Backend>,
+    )
+    .expect("backend health probe");
+    let report = engine.run(shared_job_list());
+    drop(engine);
+    let restarts = backend.restarts();
+    drop(backend);
+    drop(bus);
+    assert!(marker.exists(), "the hang injection never fired");
+    assert_eq!(report.failed, 0, "the hung window must be re-dispatched, not failed");
+    assert_eq!(report.completed, n_jobs);
+    assert!(restarts >= 1, "the watchdog kill must be accounted as a restart");
+    let saw_stall = stream.into_iter().any(|env| matches!(env.event, Event::WorkerStalled { .. }));
+    assert!(saw_stall, "an expired deadline must publish a worker_stalled event");
+    let lines = sorted_segment_lines(&dir);
+    assert_eq!(lines, reference, "watchdog recovery must not corrupt the cache");
+    let _ = std::fs::remove_file(&marker);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------------ graceful drain
+
+/// SIGTERM to a unix-socket listen worker: the accept loop stops, the
+/// socket file is unlinked, and the process exits with the distinct
+/// drained code so supervisors can tell a drain from a crash.
+#[cfg(unix)]
+#[test]
+fn sigterm_drains_a_listen_worker_and_unlinks_its_socket() {
+    use umup::util::signal;
+    let dir = tmp_dir("drain-sock");
+    std::fs::create_dir_all(&dir).unwrap();
+    let sock = dir.join("worker.sock");
+    let mut cmd = Command::new(repro_exe());
+    cmd.arg("worker").arg("--mock").arg("--listen").arg(format!("unix:{}", sock.display()));
+    let (mut child, _addr) = spawn_announced(cmd, "unix listen worker");
+    assert!(sock.exists(), "the unix socket must exist while serving");
+    assert!(signal::send(child.id(), signal::SIGTERM), "sending SIGTERM");
+    let status = child.wait().expect("waiting for the drained worker");
+    assert_eq!(
+        status.code(),
+        Some(signal::EXIT_DRAINED),
+        "a drain must exit with the drained code, not die on the signal"
+    );
+    assert!(!sock.exists(), "the drained worker must unlink its unix socket");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// SIGTERM to a `repro serve` daemon: in-flight sweeps are cancelled,
+/// the owner loop drains, and the process exits with the drained code.
+#[cfg(unix)]
+#[test]
+fn sigterm_drains_a_serve_daemon() {
+    use umup::util::signal;
+    let mut cmd = Command::new(repro_exe());
+    cmd.arg("serve").arg("--addr").arg("127.0.0.1:0").arg("--workers").arg("2");
+    cmd.stdin(Stdio::null()).stdout(Stdio::piped()).stderr(Stdio::null());
+    let mut daemon = cmd.spawn().expect("spawning repro serve");
+    let stdout = daemon.stdout.take().expect("serve stdout is piped");
+    let mut reader = BufReader::new(stdout);
+    loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).expect("reading serve stdout");
+        assert_ne!(n, 0, "serve exited before announcing its endpoint");
+        if line.starts_with("serving ") {
+            break;
+        }
+    }
+    assert!(signal::send(daemon.id(), signal::SIGTERM), "sending SIGTERM");
+    let status = daemon.wait().expect("waiting for the drained daemon");
+    assert_eq!(
+        status.code(),
+        Some(signal::EXIT_DRAINED),
+        "a drain must exit with the drained code, not die on the signal"
+    );
+}
+
+// -------------------------------------------------------- token auth
+
+/// A token-armed worker rejects token-less dials at the health probe
+/// (fast, with the env-var hint) and serves a matching dial normally.
+#[test]
+fn token_auth_gates_the_worker_wire_handshake() {
+    pin_cache_ts();
+    let (child, addr) = spawn_listen_worker(&[("UMUP_TOKEN", "sesame")]);
+    let backend = NetworkBackend::new(&addr).expect("backend construction");
+    let err = Engine::with_backend(
+        EngineConfig { workers: 1, ..EngineConfig::default() },
+        Arc::new(backend) as Arc<dyn Backend>,
+    )
+    .err()
+    .expect("a token-less dial of a token-armed worker must fail its health probe");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("UMUP_TOKEN"), "the auth error must name the fix: {msg}");
+
+    let backend = NetworkBackend::new(&addr)
+        .expect("backend construction")
+        .with_token(Some("sesame".to_string()));
+    let engine = Engine::with_backend(
+        EngineConfig { workers: 1, ..EngineConfig::default() },
+        Arc::new(backend) as Arc<dyn Backend>,
+    )
+    .expect("a matching token must pass the handshake");
+    let jobs: Vec<_> = shared_job_list().into_iter().take(4).collect();
+    let report = engine.run(jobs);
+    assert_eq!(report.completed, 4);
+    assert_eq!(report.failed, 0);
+    drop(engine);
+    kill_fleet(vec![child]);
+}
+
+/// The same gate on the control plane: a token-armed daemon turns away
+/// token-less `ctl` dials before any RPC is sent, answers matching ones,
+/// and shuts down cleanly on a tokened `ctl shutdown`.
+#[test]
+fn ctl_token_round_trip_against_a_token_armed_daemon() {
+    let mut cmd = Command::new(repro_exe());
+    cmd.arg("serve")
+        .arg("--addr")
+        .arg("127.0.0.1:0")
+        .arg("--workers")
+        .arg("2")
+        .arg("--token")
+        .arg("sesame");
+    cmd.stdin(Stdio::null()).stdout(Stdio::piped()).stderr(Stdio::null());
+    let mut daemon = cmd.spawn().expect("spawning repro serve");
+    let stdout = daemon.stdout.take().expect("serve stdout is piped");
+    let mut reader = BufReader::new(stdout);
+    let addr = loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).expect("reading serve stdout");
+        assert_ne!(n, 0, "serve exited before announcing its endpoint");
+        if let Some(a) = line.strip_prefix("serving ") {
+            break a.trim().to_string();
+        }
+    };
+
+    let out = Command::new(repro_exe())
+        .arg("ctl")
+        .arg("status")
+        .arg("--addr")
+        .arg(&addr)
+        .output()
+        .expect("running repro ctl");
+    assert!(!out.status.success(), "a token-less ctl dial must fail against an armed daemon");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("UMUP_TOKEN"), "the auth error must name the fix: {stderr}");
+
+    let status = ctl_json(&addr, "status", &["--token", "sesame"]);
+    assert!(status.get("sweeps").is_ok(), "a tokened status must answer: {status:?}");
+    let reply = ctl_json(&addr, "shutdown", &["--token", "sesame"]);
+    assert!(reply.get("shutdown").unwrap().as_bool().unwrap());
+    let exit = daemon.wait().expect("waiting for the daemon");
+    assert!(exit.success(), "ctl shutdown must exit the daemon cleanly");
+}
+
+fn ctl_json(addr: &str, verb: &str, extra: &[&str]) -> Json {
+    let out = Command::new(repro_exe())
+        .arg("ctl")
+        .arg(verb)
+        .args(extra)
+        .arg("--addr")
+        .arg(addr)
+        .output()
+        .expect("running repro ctl");
+    assert!(
+        out.status.success(),
+        "ctl {verb} failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    Json::parse(String::from_utf8_lossy(&out.stdout).trim()).expect("ctl output is JSON")
+}
+
+// ------------------------------------------------------- ctl deadline
+
+/// A daemon that accepts the dial and then never speaks: the ctl client
+/// deadline must expire with a nonzero exit and an error that names the
+/// address, the elapsed budget, and the `--timeout` knob — not hang.
+#[test]
+fn ctl_timeout_expiry_is_a_pointed_error() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("binding the mute daemon");
+    let addr = listener.local_addr().unwrap().to_string();
+    // keep accepted sockets open so ctl sees a live, silent peer
+    let _hold = std::thread::spawn(move || {
+        let mut held = Vec::new();
+        while let Ok((sock, _)) = listener.accept() {
+            held.push(sock);
+        }
+    });
+    let started = Instant::now();
+    let out = Command::new(repro_exe())
+        .arg("ctl")
+        .arg("status")
+        .arg("--addr")
+        .arg(&addr)
+        .arg("--timeout")
+        .arg("1")
+        .output()
+        .expect("running repro ctl");
+    assert!(!out.status.success(), "a silent daemon must fail ctl, not hang it");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("within 1s") && stderr.contains("--timeout"),
+        "the deadline error must point at the knob: {stderr}"
+    );
+    assert!(started.elapsed() < Duration::from_secs(20), "ctl overshot its deadline");
+}

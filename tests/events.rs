@@ -217,6 +217,10 @@ fn golden_envelope_lines_are_pinned() {
             ),
             r#"{"cached_keys":12,"done":12,"dropped":0,"eta_s":4.75,"pool_hits":9,"pool_steals":1,"segments":4,"seq":14,"throughput":2.5,"total":24,"ts":1700000000000,"type":"snapshot","v":1}"#,
         ),
+        (
+            env(15, None, Event::WorkerStalled { worker: 2, timeout_ms: 5000, pending: 3 }),
+            r#"{"pending":3,"seq":15,"timeout_ms":5000,"ts":1700000000000,"type":"worker_stalled","v":1,"worker":2}"#,
+        ),
     ];
     for (envelope, golden) in &cases {
         assert_eq!(
